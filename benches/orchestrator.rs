@@ -1,0 +1,60 @@
+//! L3 hot-path micro-benchmarks: greedy layer assignment, phase
+//! planning, batching, and the safety-monitor decision path. These are
+//! the per-request coordinator costs that must stay off the critical
+//! path (paper τ_overhead).
+//!
+//!     cargo bench --bench orchestrator
+
+use qeil::bench::Bencher;
+use qeil::coordinator::allocation::ModelShape;
+use qeil::coordinator::batcher::Batcher;
+use qeil::coordinator::disaggregation::{decode_task, PhasePlan};
+use qeil::coordinator::orchestrator::Orchestrator;
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::experiments::runner::default_meta;
+use qeil::safety::thermal_guard::ThermalGuard;
+use qeil::workload::datasets::ModelFamily;
+
+fn main() {
+    let b = Bencher::default();
+    let fleet = Fleet::preset(FleetPreset::EdgeBox);
+    let shape = ModelShape::from_family(ModelFamily::Lfm2, &default_meta(ModelFamily::Lfm2));
+
+    let orch = Orchestrator::new(&fleet);
+    let r = b.run("greedy_layer_assignment(lfm2, edge-box)", || {
+        std::hint::black_box(orch.assign(&shape).unwrap());
+    });
+    println!("{}", r.report());
+
+    let r = b.run("phase_plan_disaggregated", || {
+        std::hint::black_box(PhasePlan::disaggregated(&shape, &fleet, 96, 4).unwrap());
+    });
+    println!("{}", r.report());
+
+    let batcher = Batcher::default();
+    let devices: Vec<_> = fleet.devices().iter().map(|d| d.id.clone()).collect();
+    let rates = [1.0, 0.4, 0.3, 0.2];
+    let r = b.run("weighted_batching(20 samples, 4 devices)", || {
+        std::hint::black_box(batcher.assign_weighted(20, &devices, &rates));
+    });
+    println!("{}", r.report());
+
+    let guard = ThermalGuard::default();
+    let spec = &fleet.devices()[3];
+    let r = b.run("thermal_guard_decision", || {
+        std::hint::black_box(guard.evaluate(spec, 82.0));
+    });
+    println!("{}", r.report());
+
+    let task = decode_task(&shape);
+    let r = b.run("roofline_task_seconds", || {
+        std::hint::black_box(task.seconds_on(spec, 1.0));
+    });
+    println!("{}", r.report());
+
+    let alloc = orch.assign(&shape).unwrap();
+    let r = b.run("allocation_energy_objective", || {
+        std::hint::black_box(orch.allocation_energy_j(&shape, &alloc));
+    });
+    println!("{}", r.report());
+}

@@ -1,0 +1,61 @@
+//! PJRT runtime benchmarks: real prefill/decode execution latency of the
+//! compiled artifacts (skipped when artifacts are absent). This is the
+//! calibration signal behind the device simulator and the §Perf L2/L3
+//! numbers in EXPERIMENTS.md.
+//!
+//!     make artifacts && cargo bench --bench runtime
+
+use qeil::bench::Bencher;
+use qeil::runtime::Engine;
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("skipping runtime bench: artifacts not built (run `make artifacts`)");
+        return;
+    }
+    let b = Bencher::quick();
+    let mut engine = Engine::new("artifacts").expect("engine");
+
+    for variant in ["gpt2", "qwen2"] {
+        if engine.load_variant(variant).is_err() {
+            eprintln!("skipping {variant}: artifact missing");
+            continue;
+        }
+        let meta = engine.meta(variant).unwrap().clone();
+        let prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+
+        let r = b.run(&format!("{variant}.prefill({} tokens)", meta.prefill_len), || {
+            std::hint::black_box(engine.prefill(variant, &prompt).unwrap());
+        });
+        println!("{}", r.report());
+
+        let out = engine.prefill(variant, &prompt).unwrap();
+        let (mut k, mut v) = (out.k_cache, out.v_cache);
+        let mut pos = meta.prefill_len as i32;
+        let r = b.run(&format!("{variant}.decode_step"), || {
+            let d = engine.decode(variant, 5, &k, &v, pos).unwrap();
+            k = d.k_cache;
+            v = d.v_cache;
+            pos = (pos + 1).min(meta.max_seq as i32 - 1);
+            std::hint::black_box(&k);
+        });
+        println!("{}", r.report());
+        println!("  -> decode tokens/sec (real PJRT, CPU): {:.0}", r.throughput_per_sec());
+
+        // §Perf: fused greedy chunk (8 tokens/call) vs per-token calls.
+        if engine.has_decode_chunk(variant) {
+            let out = engine.prefill(variant, &prompt).unwrap();
+            let (mut ck, mut cv) = (out.k_cache, out.v_cache);
+            let cpos = meta.prefill_len as i32;
+            let r = b.run(&format!("{variant}.decode_chunk(8 tokens, fused)"), || {
+                let (toks, k2, v2, _) =
+                    engine.decode_chunk(variant, 5, &ck, &cv, cpos).unwrap();
+                ck = k2;
+                cv = v2;
+                std::hint::black_box(toks);
+            });
+            println!("{}", r.report());
+            println!("  -> fused tokens/sec: {:.0}", 8.0 * r.throughput_per_sec());
+        }
+    }
+}

@@ -1,0 +1,33 @@
+//! End-to-end table regeneration benchmarks: one timed run per paper
+//! table/figure, printing the wall cost of each experiment (and,
+//! importantly, exercising every generator end to end under `cargo
+//! bench`). The tables themselves land in `results/bench/`.
+//!
+//!     cargo bench --bench tables
+
+use std::path::Path;
+use std::time::Instant;
+
+use qeil::experiments::{run_experiment, ALL_IDS};
+
+fn main() {
+    let out = Path::new("results/bench");
+    // Smaller query counts keep the full sweep under a few minutes while
+    // preserving every code path.
+    let queries = 300;
+    let seed = 0;
+    let mut total = 0.0;
+    for id in ALL_IDS {
+        let start = Instant::now();
+        match run_experiment(id, queries, seed) {
+            Ok(table) => {
+                let secs = start.elapsed().as_secs_f64();
+                total += secs;
+                let _ = table.save(out);
+                println!("{id:>8}: {secs:>8.2} s  ({} rows)", table.rows.len());
+            }
+            Err(e) => println!("{id:>8}: FAILED — {e}"),
+        }
+    }
+    println!("\ntotal: {total:.1} s for {} experiments; tables in {out:?}", ALL_IDS.len());
+}

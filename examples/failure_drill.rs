@@ -1,0 +1,84 @@
+//! Failure drill: inject device crashes and thermal stress into the
+//! simulated edge box and watch the safety monitor recover — the
+//! interactive companion to Tables 10–12.
+//!
+//!     cargo run --release --example failure_drill
+
+use anyhow::Result;
+
+use qeil::config::ExperimentConfig;
+use qeil::devices::failure::{FailureKind, FailurePlan, FailureScenario};
+use qeil::devices::spec::DeviceSpec;
+use qeil::devices::thermal::ThermalState;
+use qeil::experiments::runner::run_config_with;
+use qeil::safety::thermal_guard::ThermalGuard;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+
+fn main() -> Result<()> {
+    println!("═══ Drill 1: cascading device failures ═══");
+    let scenarios: Vec<(&str, Vec<(&str, FailureKind, f64)>)> = vec![
+        ("decode lead (NPU) dies mid-run", vec![("npu0", FailureKind::Crash, 0.5)]),
+        ("prefill lead (dGPU) hangs", vec![("gpu0", FailureKind::Hang, 0.5)]),
+        (
+            "rolling catastrophe: NPU, then both GPUs",
+            vec![
+                ("npu0", FailureKind::Crash, 0.3),
+                ("gpu0", FailureKind::Crash, 0.8),
+                ("igpu0", FailureKind::Crash, 1.2),
+            ],
+        ),
+    ];
+    let cfg = ExperimentConfig {
+        queries: 120,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    };
+    let base = run_config_with(&cfg, FailurePlan::none(), "artifacts")?;
+    println!("baseline: {:.0} tok/s, coverage {:.1}%\n", base.throughput_tps, base.pass_at_k_pct);
+    for (label, failures) in scenarios {
+        let plan = FailurePlan::new(
+            failures
+                .iter()
+                .map(|(d, k, t)| FailureScenario {
+                    device: (*d).into(),
+                    kind: *k,
+                    at_s: *t,
+                    recover_after_s: None,
+                })
+                .collect(),
+        );
+        let m = run_config_with(&cfg, plan, "artifacts")?;
+        println!(
+            "{label}\n  -> recovery {:.0} ms | throughput {:.0} tok/s ({:+.0}%) | coverage {:.1}% | queries lost: {}\n",
+            m.mean_recovery_ms,
+            m.throughput_tps,
+            (m.throughput_tps - base.throughput_tps) / base.throughput_tps * 100.0,
+            m.pass_at_k_pct,
+            m.queries_lost
+        );
+    }
+
+    println!("═══ Drill 2: thermal stress (guard on vs off) ═══");
+    let spec = DeviceSpec::nvidia_gpu();
+    let guard = ThermalGuard::default();
+    for protected in [false, true] {
+        let mut thermal = ThermalState::new(&spec);
+        let offered = spec.idle_w + (spec.tdp_w - spec.idle_w) * 0.95;
+        for _ in 0..(20.0 * 60.0 / 0.1) as usize {
+            let factor = if protected {
+                guard.evaluate(&spec, thermal.temp_c()).workload_factor
+            } else {
+                1.0
+            };
+            let effective = factor * thermal.hardware_throttle_factor();
+            let power = spec.idle_w + (offered - spec.idle_w) * effective.max(0.05);
+            thermal.step(&spec, power, 0.1);
+        }
+        println!(
+            "guard {}: peak {:.1} °C | hw throttle events {}",
+            if protected { "ON " } else { "OFF" },
+            thermal.peak_c(),
+            thermal.throttle_events()
+        );
+    }
+    Ok(())
+}

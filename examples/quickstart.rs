@@ -1,0 +1,37 @@
+//! Quickstart: load an AOT-compiled model variant through PJRT, run a
+//! prefill + a few decode steps, and print the tokens.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+
+use qeil::rng::Pcg;
+use qeil::runtime::session::Sampling;
+use qeil::runtime::{Engine, GenerationSession};
+
+fn main() -> Result<()> {
+    // 1. Load + compile the artifact (HLO text -> PJRT executable).
+    let mut engine = Engine::new("artifacts")?;
+    engine.load_variant("gpt2")?;
+    let meta = engine.meta("gpt2")?.clone();
+    println!(
+        "loaded gpt2: {} layers, d_model {}, vocab {} (scaled stand-in for the paper's {}-param family)",
+        meta.n_layers, meta.d_model, meta.vocab, meta.paper_params
+    );
+
+    // 2. Prefill a prompt.
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).map(|i| (i * 7) % meta.vocab as i32).collect();
+    let (mut session, logits) = GenerationSession::start(&engine, "gpt2", &prompt)?;
+    println!("prefill: {} positions in {:.2} ms", meta.prefill_len, session.prefill_seconds * 1e3);
+
+    // 3. Decode greedily.
+    let mut rng = Pcg::seeded(0);
+    let tokens = session.generate(logits, 16, Sampling::Greedy, &mut rng)?;
+    println!("greedy tokens: {tokens:?}");
+    println!(
+        "decode compute: {:.2} ms total ({:.3} ms/token)",
+        (session.compute_seconds - session.prefill_seconds) * 1e3,
+        (session.compute_seconds - session.prefill_seconds) * 1e3 / tokens.len() as f64
+    );
+    Ok(())
+}

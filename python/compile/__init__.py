@@ -1,0 +1,6 @@
+"""Build-time compile path: L2 JAX model + L1 Pallas kernels + AOT lowering.
+
+Nothing in this package is imported at runtime; ``make artifacts`` runs
+``python -m compile.aot`` once and the Rust coordinator consumes the
+resulting ``artifacts/*.hlo.txt`` via PJRT.
+"""

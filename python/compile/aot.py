@@ -1,0 +1,128 @@
+"""AOT lowering: JAX (L2 + L1 kernels) → HLO **text** artifacts for Rust.
+
+HLO text — not a serialized ``HloModuleProto`` — is the interchange
+format: jax ≥ 0.5 emits protos with 64-bit instruction ids that the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Outputs, per model variant:
+
+- ``artifacts/<name>.prefill.hlo.txt``
+- ``artifacts/<name>.decode.hlo.txt``
+
+plus ``artifacts/manifest.json`` describing every artifact's shapes and
+analytic cost model (FLOPs, bytes) that the Rust roofline simulator uses.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import VARIANTS, build_fns
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (return_tuple for rust side)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked-in weights must survive the text
+    # round-trip — the default printer elides them as `constant({...})`,
+    # which the parser on the Rust side cannot reconstruct.
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_variant(name: str):
+    """Lower prefill + decode (+ fused greedy chunk) for one variant."""
+    cfg = VARIANTS[name]
+    prefill_fn, decode_fn, decode_chunk_fn = build_fns(name, use_pallas=True)
+
+    tok_spec = jax.ShapeDtypeStruct((cfg.prefill_len,), jnp.int32)
+    prefill_lowered = jax.jit(prefill_fn).lower(tok_spec)
+
+    cache_shape = (cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim)
+    decode_args = (
+        jax.ShapeDtypeStruct((), jnp.int32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct(cache_shape, jnp.float32),
+        jax.ShapeDtypeStruct((), jnp.int32),
+    )
+    decode_lowered = jax.jit(decode_fn).lower(*decode_args)
+    chunk_lowered = jax.jit(decode_chunk_fn).lower(*decode_args)
+
+    meta = {
+        "name": name,
+        "vocab": cfg.vocab,
+        "d_model": cfg.d_model,
+        "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads,
+        "head_dim": cfg.head_dim,
+        "d_ff": cfg.d_ff,
+        "max_seq": cfg.max_seq,
+        "prefill_len": cfg.prefill_len,
+        "paper_params": cfg.paper_params,
+        "variant_params": cfg.param_count(),
+        "flops_prefill": cfg.flops_prefill(),
+        "flops_per_token_decode": cfg.flops_per_token_decode(),
+        "bytes_per_token_decode": 4 * cfg.param_count()
+        + 4 * 2 * cfg.n_layers * cfg.n_heads * cfg.max_seq * cfg.head_dim,
+        "cache_shape": list(cache_shape),
+        "prefill_artifact": f"{name}.prefill.hlo.txt",
+        "decode_artifact": f"{name}.decode.hlo.txt",
+        "decode_chunk_artifact": f"{name}.decode8.hlo.txt",
+        "decode_chunk": 8,
+    }
+    return (
+        to_hlo_text(prefill_lowered),
+        to_hlo_text(decode_lowered),
+        to_hlo_text(chunk_lowered),
+        meta,
+    )
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--out-dir", default="../artifacts")
+    parser.add_argument(
+        "--variants", nargs="*", default=list(VARIANTS), help="subset of model families"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    # Merge into an existing manifest so partial regeneration
+    # (--variants subset) preserves the other variants' entries.
+    manifest_path_existing = os.path.join(args.out_dir, "manifest.json")
+    if os.path.exists(manifest_path_existing):
+        with open(manifest_path_existing) as f:
+            manifest = json.load(f)
+    else:
+        manifest = {"format": "hlo-text", "variants": {}}
+    for name in args.variants:
+        prefill_txt, decode_txt, chunk_txt, meta = lower_variant(name)
+        for suffix, text in (
+            ("prefill", prefill_txt),
+            ("decode", decode_txt),
+            ("decode8", chunk_txt),
+        ):
+            path = os.path.join(args.out_dir, f"{name}.{suffix}.hlo.txt")
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        manifest["variants"][name] = meta
+
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""Layer-1 Pallas kernels (build-time only; lowered into the L2 HLO).
+
+All kernels run under ``interpret=True`` — the CPU PJRT plugin cannot
+execute Mosaic custom-calls, so the interpret path is both the
+correctness oracle target and what ships inside the AOT artifact.
+Real-TPU efficiency is estimated analytically in DESIGN.md §Perf.
+"""
+
+from .attention import flash_attention, decode_attention  # noqa: F401
+from .layernorm import layer_norm  # noqa: F401

@@ -1,0 +1,172 @@
+"""Tiled flash-attention Pallas kernels (TPU-idiom adaptation).
+
+The paper's hot spot is transformer attention on GPU-class edge silicon.
+Rather than porting a CUDA threadblock decomposition we express the
+HBM↔VMEM schedule with a BlockSpec grid over query tiles and an online
+softmax loop over KV tiles held in VMEM-sized blocks — the TPU-native
+shape of the same insight (see DESIGN.md §Hardware-Adaptation).
+
+Two entry points:
+
+- :func:`flash_attention` — causal self-attention over a full prefill
+  sequence. Grid over query blocks; inner ``fori_loop`` over KV blocks
+  with online-softmax accumulation in f32.
+- :func:`decode_attention` — a single query token attending to a padded
+  KV cache with a runtime length mask (position ``pos`` inclusive).
+
+Both are checked against the pure-jnp oracle in ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+# Finite stand-in for -inf so that a fully-masked tile cannot poison the
+# online-softmax running max (exp(-inf - -inf) = nan).
+_NEG_BIG = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, block_q, block_k, seq_len, scale):
+    """Causal flash attention for one (head, q-block) grid cell.
+
+    q_ref: [block_q, d] VMEM tile of queries (grid-indexed).
+    k_ref / v_ref: [seq_len, d] full key/value for the head; KV tiles are
+    sliced inside the loop (the HBM→VMEM schedule).
+    """
+    qi = pl.program_id(0)
+    q = q_ref[...].astype(jnp.float32) * scale
+    q_idx = qi * block_q + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+
+    m0 = jnp.full((block_q,), _NEG_BIG, dtype=jnp.float32)
+    l0 = jnp.zeros((block_q,), dtype=jnp.float32)
+    acc0 = jnp.zeros(q.shape, dtype=jnp.float32)
+
+    num_kv = seq_len // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [block_q, block_k]
+        k_idx = j * block_k + lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        s = jnp.where(k_idx <= q_idx, s, _NEG_BIG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+def _pick_block(seq_len: int, want: int) -> int:
+    """Largest divisor of seq_len that is <= want (keeps tiles uniform)."""
+    b = min(want, seq_len)
+    while seq_len % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, *, block_q: int = 16, block_k: int = 16):
+    """Causal multi-head attention. q, k, v: [H, S, D] -> [H, S, D]."""
+    num_heads, seq_len, head_dim = q.shape
+    scale = 1.0 / (head_dim ** 0.5)
+    bq = _pick_block(seq_len, block_q)
+    bk = _pick_block(seq_len, block_k)
+
+    kernel = functools.partial(
+        _flash_kernel, block_q=bq, block_k=bk, seq_len=seq_len, scale=scale
+    )
+
+    def one_head(qh, kh, vh):
+        return pl.pallas_call(
+            kernel,
+            grid=(seq_len // bq,),
+            in_specs=[
+                pl.BlockSpec((bq, head_dim), lambda i: (i, 0)),
+                pl.BlockSpec((seq_len, head_dim), lambda i: (0, 0)),
+                pl.BlockSpec((seq_len, head_dim), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((bq, head_dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((seq_len, head_dim), qh.dtype),
+            interpret=True,
+        )(qh, kh, vh)
+
+    return jax.vmap(one_head)(q, k, v)
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, *, block_k, max_seq, scale):
+    """Single-query attention against a padded KV cache.
+
+    len_ref: [1] int32 — number of valid cache positions (pos + 1).
+    q_ref: [1, d]; k_ref / v_ref: [max_seq, d].
+    """
+    q = q_ref[...].astype(jnp.float32) * scale  # [1, d]
+    valid = len_ref[0]
+
+    m0 = jnp.full((1,), _NEG_BIG, dtype=jnp.float32)
+    l0 = jnp.zeros((1,), dtype=jnp.float32)
+    acc0 = jnp.zeros(q.shape, dtype=jnp.float32)
+
+    num_kv = max_seq // block_k
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = pl.load(k_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(j * block_k, block_k), slice(None))).astype(jnp.float32)
+        s = q @ k.T  # [1, block_k]
+        k_idx = j * block_k + lax.broadcasted_iota(jnp.int32, (1, block_k), 1)
+        s = jnp.where(k_idx < valid, s, _NEG_BIG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    m, l, acc = lax.fori_loop(0, num_kv, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k",))
+def decode_attention(q, k_cache, v_cache, length, *, block_k: int = 16):
+    """Decode-step attention.
+
+    q: [H, 1, D] current-token query.
+    k_cache / v_cache: [H, Smax, D] padded cache (garbage beyond `length`).
+    length: scalar int32, number of valid positions (pos + 1).
+    Returns [H, 1, D].
+    """
+    num_heads, max_seq, head_dim = k_cache.shape
+    scale = 1.0 / (head_dim ** 0.5)
+    bk = _pick_block(max_seq, block_k)
+
+    kernel = functools.partial(
+        _decode_kernel, block_k=bk, max_seq=max_seq, scale=scale
+    )
+    length_arr = jnp.asarray(length, dtype=jnp.int32).reshape((1,))
+
+    def one_head(qh, kh, vh):
+        return pl.pallas_call(
+            kernel,
+            grid=(1,),
+            in_specs=[
+                pl.BlockSpec((1,), lambda i: (0,)),
+                pl.BlockSpec((1, head_dim), lambda i: (0, 0)),
+                pl.BlockSpec((max_seq, head_dim), lambda i: (0, 0)),
+                pl.BlockSpec((max_seq, head_dim), lambda i: (0, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, head_dim), lambda i: (0, 0)),
+            out_shape=jax.ShapeDtypeStruct((1, head_dim), qh.dtype),
+            interpret=True,
+        )(length_arr, qh, kh, vh)
+
+    return jax.vmap(one_head, in_axes=(0, 0, 0))(q, k_cache, v_cache)

@@ -1,0 +1,49 @@
+"""Row-wise LayerNorm as a Pallas kernel.
+
+A small second kernel exercising the same VMEM-tile idiom on a
+bandwidth-bound op: each grid cell normalizes a tile of rows held in
+VMEM, computing mean/variance in f32 regardless of the input dtype.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    mean = x.mean(axis=-1, keepdims=True)
+    var = ((x - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (x - mean) * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * g_ref[...] + b_ref[...]).astype(o_ref.dtype)
+
+
+def _pick_block(n: int, want: int) -> int:
+    b = min(want, n)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def layer_norm(x, gain, bias, *, eps: float = 1e-5, block_rows: int = 16):
+    """LayerNorm over the last axis. x: [S, D]; gain/bias: [D]."""
+    rows, dim = x.shape
+    br = _pick_block(rows, block_rows)
+    kernel = functools.partial(_ln_kernel, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // br,),
+        in_specs=[
+            pl.BlockSpec((br, dim), lambda i: (i, 0)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+            pl.BlockSpec((dim,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((br, dim), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x, gain, bias)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel — the correctness ground truth.
+
+These implementations favor clarity over speed; pytest asserts the Pallas
+kernels match them to tight tolerances across shape/dtype sweeps.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Reference multi-head attention. q, k, v: [H, S, D] -> [H, S, D]."""
+    num_heads, seq_len, head_dim = q.shape
+    scale = 1.0 / (head_dim ** 0.5)
+    s = jnp.einsum("hqd,hkd->hqk", q.astype(jnp.float32), k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((seq_len, seq_len), dtype=bool))
+        s = jnp.where(mask[None, :, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def decode_attention_ref(q, k_cache, v_cache, length):
+    """Reference single-query attention with a validity length mask.
+
+    q: [H, 1, D]; caches: [H, Smax, D]; length: scalar int32.
+    """
+    num_heads, max_seq, head_dim = k_cache.shape
+    scale = 1.0 / (head_dim ** 0.5)
+    s = jnp.einsum(
+        "hqd,hkd->hqk", q.astype(jnp.float32), k_cache.astype(jnp.float32)
+    ) * scale
+    k_idx = jnp.arange(max_seq)
+    s = jnp.where(k_idx[None, None, :] < length, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("hqk,hkd->hqd", p, v_cache.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def layer_norm_ref(x, gain, bias, *, eps: float = 1e-5):
+    """Reference LayerNorm over the last axis. x: [S, D]."""
+    xf = x.astype(jnp.float32)
+    mean = xf.mean(axis=-1, keepdims=True)
+    var = ((xf - mean) ** 2).mean(axis=-1, keepdims=True)
+    y = (xf - mean) * jax.lax.rsqrt(var + eps)
+    return (y * gain + bias).astype(x.dtype)

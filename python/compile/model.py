@@ -1,0 +1,250 @@
+"""Layer-2 JAX model: decoder-only transformer with prefill / decode split.
+
+This is the compute graph the paper serves. Each of the five paper model
+families (GPT-2 125M … LFM2 2.6B) maps to a scaled variant (DESIGN.md §2)
+with the same architectural shape; the full-size FLOP counts used by the
+scaling formalisms are carried in the manifest, while the artifact itself
+is real, runnable compute.
+
+Two entry points per variant, both lowered to HLO text by ``aot.py``:
+
+- ``prefill(tokens[int32, P]) -> (logits[P, V], k_cache, v_cache)`` —
+  compute-bound phase: causal flash attention over the whole prompt.
+- ``decode_step(token[int32], k_cache, v_cache, pos[int32]) ->
+  (logits[V], k_cache', v_cache')`` — memory-bound phase: one query
+  against the padded KV cache.
+
+Caches are ``[L, H, Smax, Dh]``; positions beyond the valid length hold
+garbage and are masked by the length-aware decode kernel. Weights are
+deterministic (seeded) and baked into the HLO as constants so the Rust
+runtime only feeds tokens and caches.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, decode_attention, layer_norm
+from .kernels import ref as kref
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Architecture of one model-family variant."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    d_ff: int
+    max_seq: int
+    prefill_len: int
+    paper_params: int  # parameter count of the paper's full-size family
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        """Actual parameter count of the scaled variant."""
+        d, v, f, l = self.d_model, self.vocab, self.d_ff, self.n_layers
+        embed = v * d + self.max_seq * d
+        per_layer = (
+            4 * d * d  # q, k, v, o projections
+            + 2 * d * f  # mlp in / out
+            + f + d  # mlp biases
+            + 4 * d  # two layernorms (gain + bias)
+        )
+        head = d * v + 2 * d  # final LN + LM head
+        return embed + l * per_layer + head
+
+    def flops_per_token_decode(self) -> int:
+        """Approximate FLOPs for one decode step (2 * params rule)."""
+        return 2 * self.param_count()
+
+    def flops_prefill(self) -> int:
+        """Approximate FLOPs for a full prefill of ``prefill_len`` tokens."""
+        return 2 * self.param_count() * self.prefill_len
+
+
+#: The five paper model families, scaled for CPU-PJRT execution.
+VARIANTS: Dict[str, ModelConfig] = {
+    cfg.name: cfg
+    for cfg in [
+        ModelConfig("gpt2", 512, 64, 4, 4, 256, 64, 32, 125_000_000, seed=1),
+        ModelConfig("granite", 512, 96, 5, 4, 384, 64, 32, 350_000_000, seed=2),
+        ModelConfig("qwen2", 512, 128, 6, 8, 512, 64, 32, 500_000_000, seed=3),
+        ModelConfig("llama32", 512, 160, 8, 8, 640, 64, 32, 1_000_000_000, seed=4),
+        ModelConfig("lfm2", 512, 192, 10, 8, 768, 64, 32, 2_600_000_000, seed=5),
+    ]
+}
+
+
+def init_params(cfg: ModelConfig) -> dict:
+    """Deterministic parameter pytree for a variant."""
+    key = jax.random.PRNGKey(cfg.seed)
+    keys = iter(jax.random.split(key, 8 + 8 * cfg.n_layers))
+    d, f, v = cfg.d_model, cfg.d_ff, cfg.vocab
+    scale = d ** -0.5
+
+    def normal(k, shape, s=scale):
+        return jax.random.normal(k, shape, jnp.float32) * s
+
+    params = {
+        "tok_embed": normal(next(keys), (v, d), 0.02),
+        "pos_embed": normal(next(keys), (cfg.max_seq, d), 0.02),
+        "ln_f_g": jnp.ones((d,), jnp.float32),
+        "ln_f_b": jnp.zeros((d,), jnp.float32),
+        "lm_head": normal(next(keys), (d, v)),
+        "layers": [],
+    }
+    for _ in range(cfg.n_layers):
+        params["layers"].append(
+            {
+                "ln1_g": jnp.ones((d,), jnp.float32),
+                "ln1_b": jnp.zeros((d,), jnp.float32),
+                "wq": normal(next(keys), (d, d)),
+                "wk": normal(next(keys), (d, d)),
+                "wv": normal(next(keys), (d, d)),
+                "wo": normal(next(keys), (d, d)),
+                "ln2_g": jnp.ones((d,), jnp.float32),
+                "ln2_b": jnp.zeros((d,), jnp.float32),
+                "w_in": normal(next(keys), (d, f)),
+                "b_in": jnp.zeros((f,), jnp.float32),
+                "w_out": normal(next(keys), (f, d), f ** -0.5),
+                "b_out": jnp.zeros((d,), jnp.float32),
+            }
+        )
+    return params
+
+
+def _split_heads(x, n_heads):
+    """[S, D] -> [H, S, Dh]."""
+    s, d = x.shape
+    return x.reshape(s, n_heads, d // n_heads).transpose(1, 0, 2)
+
+
+def _merge_heads(x):
+    """[H, S, Dh] -> [S, D]."""
+    h, s, dh = x.shape
+    return x.transpose(1, 0, 2).reshape(s, h * dh)
+
+
+def _ln(x, g, b, use_pallas):
+    if use_pallas:
+        return layer_norm(x, g, b)
+    return kref.layer_norm_ref(x, g, b)
+
+
+def prefill(params, cfg: ModelConfig, tokens, *, use_pallas: bool = True):
+    """Full-prompt forward pass.
+
+    tokens: int32[P] with P == cfg.prefill_len.
+    Returns (logits[P, V], k_cache[L, H, Smax, Dh], v_cache like k_cache).
+    """
+    p = cfg.prefill_len
+    x = params["tok_embed"][tokens] + params["pos_embed"][:p]
+    k_caches, v_caches = [], []
+    for layer in params["layers"]:
+        h = _ln(x, layer["ln1_g"], layer["ln1_b"], use_pallas)
+        q = _split_heads(h @ layer["wq"], cfg.n_heads)
+        k = _split_heads(h @ layer["wk"], cfg.n_heads)
+        v = _split_heads(h @ layer["wv"], cfg.n_heads)
+        if use_pallas:
+            attn = flash_attention(q, k, v)
+        else:
+            attn = kref.attention_ref(q, k, v)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = _ln(x, layer["ln2_g"], layer["ln2_b"], use_pallas)
+        x = x + jax.nn.gelu(h2 @ layer["w_in"] + layer["b_in"]) @ layer["w_out"] + layer["b_out"]
+        pad = cfg.max_seq - p
+        k_caches.append(jnp.pad(k, ((0, 0), (0, pad), (0, 0))))
+        v_caches.append(jnp.pad(v, ((0, 0), (0, pad), (0, 0))))
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"], use_pallas)
+    logits = x @ params["lm_head"]
+    return logits, jnp.stack(k_caches), jnp.stack(v_caches)
+
+
+def decode_step(params, cfg: ModelConfig, token, k_cache, v_cache, pos, *, use_pallas: bool = True):
+    """One autoregressive step.
+
+    token: int32 scalar; caches: [L, H, Smax, Dh]; pos: int32 scalar —
+    the index this token occupies (valid history is [0, pos]).
+    Returns (logits[V], k_cache', v_cache').
+    """
+    x = params["tok_embed"][token][None, :] + jax.lax.dynamic_slice_in_dim(
+        params["pos_embed"], pos, 1, axis=0
+    )
+    new_k, new_v = [], []
+    for i, layer in enumerate(params["layers"]):
+        h = _ln(x, layer["ln1_g"], layer["ln1_b"], use_pallas)
+        q = _split_heads(h @ layer["wq"], cfg.n_heads)  # [H, 1, Dh]
+        k = _split_heads(h @ layer["wk"], cfg.n_heads)
+        v = _split_heads(h @ layer["wv"], cfg.n_heads)
+        kc = jax.lax.dynamic_update_slice_in_dim(k_cache[i], k, pos, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(v_cache[i], v, pos, axis=1)
+        if use_pallas:
+            attn = decode_attention(q, kc, vc, pos + 1)
+        else:
+            attn = kref.decode_attention_ref(q, kc, vc, pos + 1)
+        x = x + _merge_heads(attn) @ layer["wo"]
+        h2 = _ln(x, layer["ln2_g"], layer["ln2_b"], use_pallas)
+        x = x + jax.nn.gelu(h2 @ layer["w_in"] + layer["b_in"]) @ layer["w_out"] + layer["b_out"]
+        new_k.append(kc)
+        new_v.append(vc)
+    x = _ln(x, params["ln_f_g"], params["ln_f_b"], use_pallas)
+    logits = (x @ params["lm_head"])[0]
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+DECODE_CHUNK = 8
+
+
+def decode_chunk(params, cfg: ModelConfig, token, k_cache, v_cache, pos, *, use_pallas: bool = True):
+    """Fused greedy decode: DECODE_CHUNK autoregressive steps in ONE
+    compiled graph (argmax sampling in-graph), amortizing the per-call
+    host<->PJRT round-trip — the L2 hot-path optimization recorded in
+    EXPERIMENTS.md §Perf.
+
+    Returns (tokens[int32, DECODE_CHUNK], k_cache', v_cache').
+    """
+
+    def step(carry, _):
+        tok, kc, vc, p = carry
+        logits, kc, vc = decode_step(params, cfg, tok, kc, vc, p, use_pallas=use_pallas)
+        nxt = jnp.argmax(logits).astype(jnp.int32)
+        return (nxt, kc, vc, p + 1), nxt
+
+    (_, k_out, v_out, _), toks = jax.lax.scan(
+        step, (token, k_cache, v_cache, pos), None, length=DECODE_CHUNK
+    )
+    return toks, k_out, v_out
+
+
+@functools.lru_cache(maxsize=None)
+def build_fns(name: str, use_pallas: bool = True):
+    """Closed-over (prefill_fn, decode_fn) for a variant, ready to jit/lower.
+
+    Weights are baked in as constants so the AOT artifact is
+    self-contained — Rust feeds only tokens / caches / position.
+    """
+    cfg = VARIANTS[name]
+    params = init_params(cfg)
+
+    def prefill_fn(tokens):
+        return prefill(params, cfg, tokens, use_pallas=use_pallas)
+
+    def decode_fn(token, k_cache, v_cache, pos):
+        return decode_step(params, cfg, token, k_cache, v_cache, pos, use_pallas=use_pallas)
+
+    def decode_chunk_fn(token, k_cache, v_cache, pos):
+        return decode_chunk(params, cfg, token, k_cache, v_cache, pos, use_pallas=use_pallas)
+
+    return prefill_fn, decode_fn, decode_chunk_fn

@@ -1,0 +1,7 @@
+"""Shared pytest fixtures for the compile-path test suite."""
+
+import os
+import sys
+
+# Make `compile` importable when pytest runs from python/.
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))

@@ -1,0 +1,90 @@
+"""AOT pipeline: lowering produces parseable HLO text with full constants,
+and the manifest carries a coherent cost model."""
+
+import json
+import os
+
+import pytest
+
+from compile import aot
+from compile.model import VARIANTS
+
+
+@pytest.fixture(scope="module")
+def gpt2_artifacts():
+    """Lower the smallest variant once for the whole module."""
+    prefill_txt, decode_txt, chunk_txt, meta = aot.lower_variant("gpt2")
+    return prefill_txt, decode_txt, chunk_txt, meta
+
+
+class TestLowering:
+    def test_prefill_hlo_is_text(self, gpt2_artifacts):
+        prefill_txt, _, _, _ = gpt2_artifacts
+        assert "HloModule" in prefill_txt
+        assert "ENTRY" in prefill_txt
+
+    def test_decode_hlo_signature(self, gpt2_artifacts):
+        _, decode_txt, _, _ = gpt2_artifacts
+        cfg = VARIANTS["gpt2"]
+        # decode entry: (token s32, k f32[L,H,S,Dh], v ..., pos s32)
+        shape = f"f32[{cfg.n_layers},{cfg.n_heads},{cfg.max_seq},{cfg.head_dim}]"
+        assert shape in decode_txt
+
+    def test_no_elided_constants(self, gpt2_artifacts):
+        """The weights are baked in; elided constants would break the
+        Rust-side text parser roundtrip."""
+        prefill_txt, decode_txt, chunk_txt, _ = gpt2_artifacts
+        assert "{...}" not in prefill_txt
+        assert "{...}" not in decode_txt
+        assert "{...}" not in chunk_txt
+
+    def test_no_mosaic_custom_calls(self, gpt2_artifacts):
+        """interpret=True must lower Pallas to plain HLO (a Mosaic
+        custom-call would be unexecutable on the CPU PJRT plugin)."""
+        prefill_txt, decode_txt, chunk_txt, _ = gpt2_artifacts
+        assert "mosaic" not in prefill_txt.lower()
+        assert "mosaic" not in decode_txt.lower()
+        assert "mosaic" not in chunk_txt.lower()
+
+
+class TestManifestMeta:
+    def test_meta_fields(self, gpt2_artifacts):
+        _, _, _, meta = gpt2_artifacts
+        cfg = VARIANTS["gpt2"]
+        assert meta["name"] == "gpt2"
+        assert meta["paper_params"] == cfg.paper_params
+        assert meta["variant_params"] == cfg.param_count()
+        assert meta["cache_shape"] == [cfg.n_layers, cfg.n_heads, cfg.max_seq, cfg.head_dim]
+
+    def test_cost_model_coherence(self, gpt2_artifacts):
+        _, _, _, meta = gpt2_artifacts
+        # Decode moves at least the full weight set per token -> the
+        # decode phase must be memory-bound (intensity < 2 FLOPs/byte).
+        intensity = meta["flops_per_token_decode"] / meta["bytes_per_token_decode"]
+        assert intensity < 2.0
+        # Prefill amortizes weights over the whole prompt.
+        assert meta["flops_prefill"] == meta["flops_per_token_decode"] * meta["prefill_len"]
+
+    def test_meta_is_json_serializable(self, gpt2_artifacts):
+        _, _, _, meta = gpt2_artifacts
+        text = json.dumps(meta)
+        assert json.loads(text) == meta
+
+
+class TestArtifactsOnDisk:
+    """If `make artifacts` has run, the manifest must match the files."""
+
+    ARTIFACTS = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+    @pytest.mark.skipif(
+        not os.path.exists(os.path.join(ARTIFACTS, "manifest.json")),
+        reason="artifacts not built",
+    )
+    def test_manifest_references_existing_files(self):
+        with open(os.path.join(self.ARTIFACTS, "manifest.json")) as f:
+            manifest = json.load(f)
+        assert manifest["format"] == "hlo-text"
+        for name, meta in manifest["variants"].items():
+            for key in ("prefill_artifact", "decode_artifact"):
+                path = os.path.join(self.ARTIFACTS, meta[key])
+                assert os.path.exists(path), f"{name}: missing {meta[key]}"

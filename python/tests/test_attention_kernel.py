@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas attention kernels vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer: hypothesis
+sweeps shapes/dtypes/block sizes and asserts allclose against ref.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, decode_attention
+from compile.kernels.ref import attention_ref, decode_attention_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(key, shape, jnp.float32).astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(rtol=2e-5, atol=2e-5)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("seq", [8, 16, 32, 64])
+    @pytest.mark.parametrize("heads,dim", [(1, 8), (4, 16), (8, 32)])
+    def test_matches_ref_f32(self, seq, heads, dim):
+        key = jax.random.PRNGKey(seq * 131 + heads)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (heads, seq, dim), jnp.float32) for i in range(3))
+        got = flash_attention(q, k, v)
+        want = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), **_tol(jnp.float32))
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        key = jax.random.PRNGKey(7)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (2, 32, 16), dtype) for i in range(3))
+        got = flash_attention(q, k, v)
+        want = attention_ref(q, k, v)
+        assert got.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(want, np.float32), **_tol(dtype)
+        )
+
+    @pytest.mark.parametrize("block_q,block_k", [(4, 4), (8, 16), (16, 8), (32, 32), (5, 7)])
+    def test_block_shape_invariance(self, block_q, block_k):
+        """Any block decomposition must give identical numerics."""
+        key = jax.random.PRNGKey(3)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (2, 32, 16), jnp.float32) for i in range(3))
+        base = attention_ref(q, k, v)
+        got = flash_attention(q, k, v, block_q=block_q, block_k=block_k)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(base), **_tol(jnp.float32))
+
+    def test_causality(self):
+        """Changing future tokens must not change earlier outputs."""
+        key = jax.random.PRNGKey(11)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (2, 16, 8), jnp.float32) for i in range(3))
+        out1 = flash_attention(q, k, v)
+        # Perturb the last key/value position only.
+        k2 = k.at[:, -1, :].add(100.0)
+        v2 = v.at[:, -1, :].add(-50.0)
+        out2 = flash_attention(q, k2, v2)
+        np.testing.assert_allclose(
+            np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), rtol=1e-6, atol=1e-6
+        )
+        assert not np.allclose(np.asarray(out1[:, -1]), np.asarray(out2[:, -1]))
+
+    def test_scale_invariance_of_softmax_shift(self):
+        """Adding a constant to all scores must not change the output
+        (online softmax must be shift-invariant)."""
+        key = jax.random.PRNGKey(13)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (1, 16, 8), jnp.float32) for i in range(3))
+        out1 = flash_attention(q, k, v)
+        # A large common offset stresses the running-max path.
+        out2 = flash_attention(q * 1.0, k, v)
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seq=st.sampled_from([8, 16, 24, 32, 48, 64]),
+        heads=st.sampled_from([1, 2, 4]),
+        dim=st.sampled_from([4, 8, 16]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, seq, heads, dim, seed):
+        key = jax.random.PRNGKey(seed)
+        q, k, v = (_rand(jax.random.fold_in(key, i), (heads, seq, dim), jnp.float32) for i in range(3))
+        got = flash_attention(q, k, v)
+        want = attention_ref(q, k, v)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("length", [1, 5, 16, 33, 64])
+    def test_matches_ref(self, length):
+        key = jax.random.PRNGKey(length)
+        q = _rand(jax.random.fold_in(key, 0), (4, 1, 16), jnp.float32)
+        kc = _rand(jax.random.fold_in(key, 1), (4, 64, 16), jnp.float32)
+        vc = _rand(jax.random.fold_in(key, 2), (4, 64, 16), jnp.float32)
+        got = decode_attention(q, kc, vc, jnp.int32(length))
+        want = decode_attention_ref(q, kc, vc, length)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-5, atol=2e-5)
+
+    def test_masked_tail_is_ignored(self):
+        """Garbage beyond `length` must not affect the output."""
+        key = jax.random.PRNGKey(4)
+        q = _rand(jax.random.fold_in(key, 0), (2, 1, 8), jnp.float32)
+        kc = _rand(jax.random.fold_in(key, 1), (2, 32, 8), jnp.float32)
+        vc = _rand(jax.random.fold_in(key, 2), (2, 32, 8), jnp.float32)
+        out1 = decode_attention(q, kc, vc, jnp.int32(10))
+        kc2 = kc.at[:, 10:, :].set(1e6)
+        vc2 = vc.at[:, 10:, :].set(-1e6)
+        out2 = decode_attention(q, kc2, vc2, jnp.int32(10))
+        np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-6, atol=1e-6)
+
+    def test_consistency_with_prefill_attention(self):
+        """Decode at position p must equal row p of full causal attention."""
+        key = jax.random.PRNGKey(9)
+        heads, seq, dim = 2, 16, 8
+        q_full = _rand(jax.random.fold_in(key, 0), (heads, seq, dim), jnp.float32)
+        k_full = _rand(jax.random.fold_in(key, 1), (heads, seq, dim), jnp.float32)
+        v_full = _rand(jax.random.fold_in(key, 2), (heads, seq, dim), jnp.float32)
+        full = attention_ref(q_full, k_full, v_full)
+        p = 11
+        got = decode_attention(
+            q_full[:, p : p + 1, :], k_full, v_full, jnp.int32(p + 1)
+        )
+        np.testing.assert_allclose(
+            np.asarray(got[:, 0]), np.asarray(full[:, p]), rtol=2e-5, atol=2e-5
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        length=st.integers(1, 64),
+        heads=st.sampled_from([1, 2, 4]),
+        seed=st.integers(0, 2**16),
+    )
+    def test_hypothesis_sweep(self, length, heads, seed):
+        key = jax.random.PRNGKey(seed)
+        q = _rand(jax.random.fold_in(key, 0), (heads, 1, 8), jnp.float32)
+        kc = _rand(jax.random.fold_in(key, 1), (heads, 64, 8), jnp.float32)
+        vc = _rand(jax.random.fold_in(key, 2), (heads, 64, 8), jnp.float32)
+        got = decode_attention(q, kc, vc, jnp.int32(length))
+        want = decode_attention_ref(q, kc, vc, length)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-5, atol=5e-5)

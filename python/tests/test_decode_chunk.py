@@ -1,0 +1,47 @@
+"""The fused greedy-decode chunk (§Perf) must be semantically identical
+to running DECODE_CHUNK sequential greedy steps."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.model import DECODE_CHUNK, VARIANTS, decode_chunk, decode_step, init_params, prefill
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = VARIANTS["gpt2"]
+
+
+def test_chunk_matches_sequential_greedy():
+    params = init_params(CFG)
+    tokens = jnp.arange(CFG.prefill_len, dtype=jnp.int32) % CFG.vocab
+    logits, kc, vc = prefill(params, CFG, tokens, use_pallas=False)
+    first = jnp.argmax(logits[-1]).astype(jnp.int32)
+
+    # Sequential reference.
+    seq_tokens = []
+    tok, k, v = first, kc, vc
+    for i in range(DECODE_CHUNK):
+        l, k, v = decode_step(
+            params, CFG, tok, k, v, jnp.int32(CFG.prefill_len + i), use_pallas=False
+        )
+        nxt = jnp.argmax(l).astype(jnp.int32)
+        seq_tokens.append(int(nxt))
+        tok = nxt
+
+    # Fused chunk.
+    chunk_toks, k2, v2 = decode_chunk(
+        params, CFG, first, kc, vc, jnp.int32(CFG.prefill_len), use_pallas=False
+    )
+    assert [int(t) for t in chunk_toks] == seq_tokens
+    np.testing.assert_allclose(np.asarray(k2), np.asarray(k), rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(v2), np.asarray(v), rtol=1e-6, atol=1e-6)
+
+
+def test_chunk_pallas_parity():
+    params = init_params(CFG)
+    tokens = (jnp.arange(CFG.prefill_len, dtype=jnp.int32) * 3) % CFG.vocab
+    _, kc, vc = prefill(params, CFG, tokens, use_pallas=True)
+    t_p, _, _ = decode_chunk(params, CFG, jnp.int32(5), kc, vc, jnp.int32(CFG.prefill_len), use_pallas=True)
+    t_r, _, _ = decode_chunk(params, CFG, jnp.int32(5), kc, vc, jnp.int32(CFG.prefill_len), use_pallas=False)
+    assert [int(a) for a in t_p] == [int(b) for b in t_r]

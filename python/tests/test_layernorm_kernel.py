@@ -1,0 +1,70 @@
+"""L1 correctness: Pallas layernorm kernel vs the pure-jnp oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import layer_norm
+from compile.kernels.ref import layer_norm_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.mark.parametrize("rows,dim", [(1, 8), (16, 64), (32, 96), (64, 192)])
+def test_matches_ref(rows, dim):
+    key = jax.random.PRNGKey(rows + dim)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (rows, dim), jnp.float32) * 3 + 1
+    g = jax.random.normal(jax.random.fold_in(key, 1), (dim,), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (dim,), jnp.float32)
+    got = layer_norm(x, g, b)
+    want = layer_norm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_output_statistics():
+    """With unit gain / zero bias the rows must be ~zero-mean, unit-var."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (32, 128), jnp.float32) * 5 + 2
+    out = np.asarray(layer_norm(x, jnp.ones(128), jnp.zeros(128)))
+    np.testing.assert_allclose(out.mean(axis=-1), 0.0, atol=1e-5)
+    np.testing.assert_allclose(out.std(axis=-1), 1.0, atol=1e-2)
+
+
+@pytest.mark.parametrize("block_rows", [1, 4, 16, 32, 5])
+def test_block_invariance(block_rows):
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (32, 64), jnp.float32)
+    g, b = jnp.ones(64), jnp.zeros(64)
+    got = layer_norm(x, g, b, block_rows=block_rows)
+    want = layer_norm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    rows=st.sampled_from([2, 8, 16, 31, 64]),
+    dim=st.sampled_from([8, 32, 64, 160]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_sweep(rows, dim, seed):
+    key = jax.random.PRNGKey(seed)
+    x = jax.random.normal(jax.random.fold_in(key, 0), (rows, dim), jnp.float32)
+    g = jax.random.normal(jax.random.fold_in(key, 1), (dim,), jnp.float32)
+    b = jax.random.normal(jax.random.fold_in(key, 2), (dim,), jnp.float32)
+    got = layer_norm(x, g, b)
+    want = layer_norm_ref(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_bfloat16():
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (16, 64), jnp.float32).astype(jnp.bfloat16)
+    g, b = jnp.ones(64, jnp.bfloat16), jnp.zeros(64, jnp.bfloat16)
+    got = layer_norm(x, g, b)
+    want = layer_norm_ref(x, g, b)
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(
+        np.asarray(got, np.float32), np.asarray(want, np.float32), rtol=2e-2, atol=2e-2
+    )

@@ -1,0 +1,84 @@
+//! Baseline configurations the paper compares against (Table 3's
+//! homogeneous rows and §5.5's cloud regime), expressed as simulation
+//! setups so every comparison runs through identical machinery.
+
+use crate::config::{ExecMode, OrchestratorFeatures};
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::sim::engine::SimOptions;
+
+/// A named baseline: fleet + options.
+#[derive(Debug, Clone)]
+pub struct Baseline {
+    pub name: &'static str,
+    pub fleet: FleetPreset,
+}
+
+impl Baseline {
+    pub fn homogeneous_gpu() -> Baseline {
+        Baseline { name: "Homogeneous GPU", fleet: FleetPreset::GpuOnly }
+    }
+
+    pub fn homogeneous_npu() -> Baseline {
+        Baseline { name: "Homogeneous NPU", fleet: FleetPreset::NpuOnly }
+    }
+
+    pub fn homogeneous_cpu() -> Baseline {
+        Baseline { name: "Homogeneous CPU", fleet: FleetPreset::CpuOnly }
+    }
+
+    /// Cloud regime for §5.5 (datacenter GPU, unconstrained power).
+    pub fn cloud() -> Baseline {
+        Baseline { name: "Cloud (datacenter GPU)", fleet: FleetPreset::Cloud }
+    }
+
+    /// Table 3's homogeneous panel.
+    pub fn table3_panel() -> Vec<Baseline> {
+        vec![Self::homogeneous_gpu(), Self::homogeneous_npu(), Self::homogeneous_cpu()]
+    }
+
+    pub fn build_fleet(&self) -> Fleet {
+        Fleet::preset(self.fleet)
+    }
+
+    /// Baseline simulation options: Standard mode, all QEIL features off
+    /// (safety stays on for the "with protection" comparisons only when
+    /// requested).
+    pub fn options(&self, seed: u64) -> SimOptions {
+        SimOptions {
+            mode: ExecMode::Standard,
+            features: OrchestratorFeatures::baseline(),
+            seed,
+            ..Default::default()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn panel_covers_three_homogeneous_kinds() {
+        let panel = Baseline::table3_panel();
+        assert_eq!(panel.len(), 3);
+        let fleets: Vec<_> = panel.iter().map(|b| b.fleet).collect();
+        assert!(fleets.contains(&FleetPreset::GpuOnly));
+        assert!(fleets.contains(&FleetPreset::NpuOnly));
+        assert!(fleets.contains(&FleetPreset::CpuOnly));
+    }
+
+    #[test]
+    fn baseline_options_disable_qeil_features() {
+        let opts = Baseline::homogeneous_gpu().options(1);
+        assert_eq!(opts.mode, ExecMode::Standard);
+        assert!(!opts.features.prefill_decode_split);
+        assert!(!opts.features.adaptive_sample_budget);
+    }
+
+    #[test]
+    fn cloud_fleet_is_single_datacenter_gpu() {
+        let fleet = Baseline::cloud().build_fleet();
+        assert_eq!(fleet.len(), 1);
+        assert!(fleet.devices()[0].tdp_w > 500.0);
+    }
+}

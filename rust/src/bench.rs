@@ -1,0 +1,148 @@
+//! Measurement harness used by `benches/*.rs` (the offline environment
+//! has no `criterion`; this provides the same discipline: warmup,
+//! repeated timed samples, and robust summary statistics).
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub p95: Duration,
+    pub std_dev: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Iterations per timed sample (auto-tuned so a sample is >= ~1ms).
+    pub iters_per_sample: u64,
+}
+
+impl BenchResult {
+    pub fn throughput_per_sec(&self) -> f64 {
+        if self.mean.as_secs_f64() == 0.0 {
+            return f64::INFINITY;
+        }
+        1.0 / self.mean.as_secs_f64()
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} mean {:>12?}  median {:>12?}  p95 {:>12?}  σ {:>10?}  ({} samples × {} iters)",
+            self.name, self.mean, self.median, self.p95, self.std_dev, self.samples,
+            self.iters_per_sample,
+        )
+    }
+}
+
+/// A configurable micro-benchmark runner.
+pub struct Bencher {
+    warmup: Duration,
+    samples: usize,
+    min_sample_time: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(200),
+            samples: 30,
+            min_sample_time: Duration::from_millis(2),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: Duration, samples: usize) -> Self {
+        Bencher { warmup, samples, ..Default::default() }
+    }
+
+    /// Quick preset for expensive end-to-end benches.
+    pub fn quick() -> Self {
+        Bencher {
+            warmup: Duration::from_millis(50),
+            samples: 10,
+            min_sample_time: Duration::from_millis(1),
+        }
+    }
+
+    /// Benchmark `f`, returning summary stats. `f` is called repeatedly;
+    /// use `std::hint::black_box` inside to defeat constant-folding.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> BenchResult {
+        // Warmup + auto-tune the iteration count per sample.
+        let warm_start = Instant::now();
+        let mut calls: u64 = 0;
+        while warm_start.elapsed() < self.warmup {
+            f();
+            calls += 1;
+        }
+        let per_call = warm_start.elapsed().as_secs_f64() / calls.max(1) as f64;
+        let iters = ((self.min_sample_time.as_secs_f64() / per_call.max(1e-9)).ceil() as u64).max(1);
+
+        let mut durs: Vec<Duration> = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let start = Instant::now();
+            for _ in 0..iters {
+                f();
+            }
+            durs.push(start.elapsed() / iters as u32);
+        }
+        durs.sort();
+
+        let mean_ns = durs.iter().map(|d| d.as_nanos()).sum::<u128>() / durs.len() as u128;
+        let mean = Duration::from_nanos(mean_ns as u64);
+        let median = durs[durs.len() / 2];
+        let p95 = durs[(durs.len() * 95 / 100).min(durs.len() - 1)];
+        let var = durs
+            .iter()
+            .map(|d| {
+                let delta = d.as_nanos() as f64 - mean_ns as f64;
+                delta * delta
+            })
+            .sum::<f64>()
+            / durs.len() as f64;
+        let std_dev = Duration::from_nanos(var.sqrt() as u64);
+
+        BenchResult {
+            name: name.to_string(),
+            samples: durs.len(),
+            mean,
+            median,
+            p95,
+            std_dev,
+            min: durs[0],
+            max: *durs.last().unwrap(),
+            iters_per_sample: iters,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_a_known_workload() {
+        let b = Bencher::new(Duration::from_millis(10), 5);
+        let r = b.run("spin", || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(std::hint::black_box(i));
+            }
+            std::hint::black_box(x);
+        });
+        assert!(r.mean > Duration::ZERO);
+        assert!(r.min <= r.median && r.median <= r.max);
+        assert_eq!(r.samples, 5);
+    }
+
+    #[test]
+    fn report_contains_name() {
+        let b = Bencher::new(Duration::from_millis(5), 3);
+        let r = b.run("my_bench", || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(r.report().contains("my_bench"));
+    }
+}

@@ -1,0 +1,123 @@
+//! Minimal command-line argument parsing (the offline environment has no
+//! `clap`). Supports subcommands, `--flag value`, `--flag=value`, and
+//! boolean `--flag` switches, with generated usage text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Parsed arguments: a subcommand path plus `--key value` options.
+#[derive(Debug, Default)]
+pub struct Args {
+    /// Positional words before any `--` option (e.g. `experiment t3`).
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Result<Args> {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(word) = iter.next() {
+            if let Some(name) = word.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    args.options.insert(k.to_string(), v.to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let value = iter.next().unwrap();
+                    args.options.insert(name.to_string(), value);
+                } else {
+                    args.flags.push(name.to_string());
+                }
+            } else {
+                args.positional.push(word);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// First positional word (the subcommand), if any.
+    pub fn command(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// String option with a default.
+    pub fn opt(&self, name: &str, default: &str) -> String {
+        self.options.get(name).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    /// Required string option.
+    pub fn required(&self, name: &str) -> Result<String> {
+        match self.options.get(name) {
+            Some(v) => Ok(v.clone()),
+            None => bail!("missing required option --{name}"),
+        }
+    }
+
+    /// Numeric option with a default.
+    pub fn num<T: std::str::FromStr>(&self, name: &str, default: T) -> Result<T> {
+        match self.options.get(name) {
+            Some(v) => v
+                .parse()
+                .map_err(|_| anyhow::anyhow!("invalid value {v:?} for --{name}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Boolean switch (present or absent).
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.options.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(words: &[&str]) -> Args {
+        Args::parse(words.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["experiment", "t3", "--out", "results", "--seed", "7"]);
+        assert_eq!(a.command(), Some("experiment"));
+        assert_eq!(a.positional[1], "t3");
+        assert_eq!(a.opt("out", "x"), "results");
+        assert_eq!(a.num::<u64>("seed", 0).unwrap(), 7);
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["serve", "--port=8080"]);
+        assert_eq!(a.num::<u16>("port", 0).unwrap(), 8080);
+    }
+
+    #[test]
+    fn boolean_flags() {
+        let a = parse(&["serve", "--verbose"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["x", "--a", "--b", "v"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.opt("b", ""), "v");
+    }
+
+    #[test]
+    fn defaults_and_errors() {
+        let a = parse(&["x"]);
+        assert_eq!(a.opt("missing", "d"), "d");
+        assert!(a.required("missing").is_err());
+        let b = parse(&["x", "--n", "abc"]);
+        assert!(b.num::<u32>("n", 1).is_err());
+    }
+}

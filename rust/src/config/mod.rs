@@ -1,0 +1,289 @@
+//! Configuration system: JSON-backed experiment / fleet / serve configs
+//! with validation and defaults.
+//!
+//! Configs are plain JSON (the offline toolchain has no TOML crate; see
+//! Cargo.toml). Every field has a default so `{}` is a valid config, and
+//! unknown fields are rejected to catch typos.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::json::Json;
+use crate::workload::datasets::{Dataset, ModelFamily};
+
+/// Execution paradigm (Table 16's two rows per model).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Throughput-optimized homogeneous execution (paper "Standard").
+    Standard,
+    /// QEIL heterogeneous energy-aware orchestration.
+    EnergyAware,
+}
+
+impl ExecMode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ExecMode::Standard => "standard",
+            ExecMode::EnergyAware => "energy-aware",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<ExecMode> {
+        Ok(match s {
+            "standard" => ExecMode::Standard,
+            "energy-aware" | "energy_aware" => ExecMode::EnergyAware,
+            other => bail!("unknown exec mode {other:?}"),
+        })
+    }
+}
+
+/// Feature toggles for the component-contribution ablation (Table 4).
+#[derive(Debug, Clone, Copy)]
+pub struct OrchestratorFeatures {
+    /// Rank devices by energy efficiency before assignment.
+    pub device_ranking: bool,
+    /// Route prefill and decode phases to different devices.
+    pub prefill_decode_split: bool,
+    /// Greedy per-layer assignment (vs whole-model placement).
+    pub greedy_layer_assignment: bool,
+    /// Adapt the sample budget to the energy/latency envelope.
+    pub adaptive_sample_budget: bool,
+    /// Thermal guard + fault tolerance + validation.
+    pub safety: bool,
+}
+
+impl OrchestratorFeatures {
+    /// Everything on (the full QEIL configuration).
+    pub fn full() -> Self {
+        OrchestratorFeatures {
+            device_ranking: true,
+            prefill_decode_split: true,
+            greedy_layer_assignment: true,
+            adaptive_sample_budget: true,
+            safety: true,
+        }
+    }
+
+    /// Everything off (the homogeneous baseline).
+    pub fn baseline() -> Self {
+        OrchestratorFeatures {
+            device_ranking: false,
+            prefill_decode_split: false,
+            greedy_layer_assignment: false,
+            adaptive_sample_budget: false,
+            safety: false,
+        }
+    }
+}
+
+/// One experiment run configuration.
+#[derive(Debug, Clone)]
+pub struct ExperimentConfig {
+    pub family: ModelFamily,
+    pub dataset: Dataset,
+    pub fleet: FleetPreset,
+    pub mode: ExecMode,
+    pub features: OrchestratorFeatures,
+    /// Sample budget per query (paper: S = 20).
+    pub samples: u32,
+    /// Number of evaluation queries.
+    pub queries: usize,
+    pub seed: u64,
+    /// Latency SLA per query (s); None = unconstrained.
+    pub latency_sla_s: Option<f64>,
+    /// Energy budget per query (J); None = unconstrained.
+    pub energy_budget_j: Option<f64>,
+    /// Pin all phases to one device id (homogeneous baselines on the
+    /// full edge box; other devices idle but powered).
+    pub pin_device: Option<String>,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            family: ModelFamily::Gpt2,
+            dataset: Dataset::WikiText103,
+            fleet: FleetPreset::EdgeBox,
+            mode: ExecMode::EnergyAware,
+            features: OrchestratorFeatures::full(),
+            samples: 20,
+            queries: 200,
+            seed: 0,
+            latency_sla_s: None,
+            energy_budget_j: None,
+            pin_device: None,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    /// Build the fleet for this config.
+    pub fn build_fleet(&self) -> Fleet {
+        Fleet::preset(self.fleet)
+    }
+
+    /// The paper's Standard baseline: homogeneous GPU serving measured on
+    /// the full edge box (the other devices are powered but idle).
+    pub fn standard(family: ModelFamily, dataset: Dataset) -> Self {
+        ExperimentConfig {
+            family,
+            dataset,
+            fleet: FleetPreset::EdgeBox,
+            mode: ExecMode::Standard,
+            features: OrchestratorFeatures::baseline(),
+            pin_device: Some("gpu0".to_string()),
+            ..Default::default()
+        }
+    }
+
+    /// The QEIL energy-aware configuration.
+    pub fn energy_aware(family: ModelFamily, dataset: Dataset) -> Self {
+        ExperimentConfig { family, dataset, ..Default::default() }
+    }
+
+    /// Parse from JSON text (all fields optional, unknown keys rejected).
+    pub fn from_json(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("parsing experiment config")?;
+        let obj = root.as_obj()?;
+        let mut cfg = ExperimentConfig::default();
+        for (key, value) in obj {
+            match key.as_str() {
+                "family" => cfg.family = ModelFamily::from_str(value.as_str()?)?,
+                "dataset" => cfg.dataset = Dataset::from_str(value.as_str()?)?,
+                "fleet" => cfg.fleet = FleetPreset::from_str(value.as_str()?)?,
+                "mode" => cfg.mode = ExecMode::from_str(value.as_str()?)?,
+                "samples" => cfg.samples = value.as_u64()? as u32,
+                "queries" => cfg.queries = value.as_usize()?,
+                "seed" => cfg.seed = value.as_u64()?,
+                "latency_sla_s" => cfg.latency_sla_s = Some(value.as_f64()?),
+                "pin_device" => cfg.pin_device = Some(value.as_str()?.to_string()),
+                "energy_budget_j" => cfg.energy_budget_j = Some(value.as_f64()?),
+                "features" => {
+                    let f = value.as_obj()?;
+                    for (fk, fv) in f {
+                        let b = fv.as_bool()?;
+                        match fk.as_str() {
+                            "device_ranking" => cfg.features.device_ranking = b,
+                            "prefill_decode_split" => cfg.features.prefill_decode_split = b,
+                            "greedy_layer_assignment" => {
+                                cfg.features.greedy_layer_assignment = b
+                            }
+                            "adaptive_sample_budget" => cfg.features.adaptive_sample_budget = b,
+                            "safety" => cfg.features.safety = b,
+                            other => bail!("unknown feature flag {other:?}"),
+                        }
+                    }
+                }
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading config {path:?}"))?;
+        Self::from_json(&text).with_context(|| format!("in config {path:?}"))
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.samples == 0 {
+            bail!("samples must be >= 1");
+        }
+        if self.queries == 0 {
+            bail!("queries must be >= 1");
+        }
+        if let Some(sla) = self.latency_sla_s {
+            if sla <= 0.0 {
+                bail!("latency_sla_s must be positive");
+            }
+        }
+        if let Some(e) = self.energy_budget_j {
+            if e <= 0.0 {
+                bail!("energy_budget_j must be positive");
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to JSON (for results provenance).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("family", Json::Str(self.family.variant().into())),
+            ("dataset", Json::Str(self.dataset.as_str().into())),
+            ("fleet", Json::Str(self.fleet.as_str().into())),
+            ("mode", Json::Str(self.mode.as_str().into())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("queries", Json::Num(self.queries as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_config_is_default() {
+        let cfg = ExperimentConfig::from_json("{}").unwrap();
+        assert_eq!(cfg.samples, 20);
+        assert_eq!(cfg.fleet, FleetPreset::EdgeBox);
+    }
+
+    #[test]
+    fn full_config_parses() {
+        let cfg = ExperimentConfig::from_json(
+            r#"{
+              "family": "llama32", "dataset": "gsm8k", "fleet": "gpu-only",
+              "mode": "standard", "samples": 10, "queries": 50, "seed": 3,
+              "latency_sla_s": 2.5, "energy_budget_j": 1000,
+              "features": {"safety": false, "device_ranking": true}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(cfg.family, ModelFamily::Llama32);
+        assert_eq!(cfg.mode, ExecMode::Standard);
+        assert!(!cfg.features.safety);
+        assert!(cfg.features.device_ranking);
+        assert_eq!(cfg.latency_sla_s, Some(2.5));
+    }
+
+    #[test]
+    fn unknown_keys_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"samplez": 3}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"features": {"warp": true}}"#).is_err());
+    }
+
+    #[test]
+    fn invalid_values_rejected() {
+        assert!(ExperimentConfig::from_json(r#"{"samples": 0}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"latency_sla_s": -1}"#).is_err());
+        assert!(ExperimentConfig::from_json(r#"{"family": "bert"}"#).is_err());
+    }
+
+    #[test]
+    fn presets_differ() {
+        let std = ExperimentConfig::standard(ModelFamily::Gpt2, Dataset::WikiText103);
+        let ea = ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103);
+        // Standard pins the dGPU on the full edge box (idle co-processors
+        // stay powered, as on real hardware).
+        assert_eq!(std.fleet, FleetPreset::EdgeBox);
+        assert_eq!(std.pin_device.as_deref(), Some("gpu0"));
+        assert_eq!(ea.fleet, FleetPreset::EdgeBox);
+        assert_eq!(ea.pin_device, None);
+        assert!(!std.features.prefill_decode_split);
+        assert!(ea.features.prefill_decode_split);
+    }
+
+    #[test]
+    fn json_roundtrip_provenance() {
+        let cfg = ExperimentConfig::default();
+        let j = cfg.to_json();
+        assert_eq!(j.str_field("family").unwrap(), "gpt2");
+        assert_eq!(j.u64_field("samples").unwrap(), 20);
+    }
+}

@@ -1,0 +1,255 @@
+//! Model shapes and hardware-layer allocations (the orchestrator's
+//! input and output types).
+
+use anyhow::{bail, Result};
+
+use crate::devices::fleet::Fleet;
+use crate::devices::spec::DeviceId;
+use crate::runtime::manifest::VariantMeta;
+use crate::workload::datasets::ModelFamily;
+
+/// Cost of one model stage for one token-step (decode granularity).
+#[derive(Debug, Clone, Copy)]
+pub struct LayerCost {
+    pub flops: f64,
+    pub bytes: f64,
+    pub mem_gb: f64,
+}
+
+impl LayerCost {
+    pub fn scaled(&self, factor: f64) -> LayerCost {
+        LayerCost { flops: self.flops * factor, bytes: self.bytes * factor, mem_gb: self.mem_gb }
+    }
+}
+
+/// Decomposed model (paper Eq. 9: embedding + decoder layers + LM head),
+/// at the *paper-declared* parameter scale so simulated magnitudes match
+/// the evaluation; the runtime artifact supplies calibration factors.
+#[derive(Debug, Clone)]
+pub struct ModelShape {
+    pub family: ModelFamily,
+    pub n_layers: usize,
+    /// Per decode-step cost of the embedding stage.
+    pub embedding: LayerCost,
+    /// Per decode-step cost of ONE decoder layer.
+    pub per_layer: LayerCost,
+    /// Per decode-step cost of the LM head.
+    pub lm_head: LayerCost,
+    /// Bytes of activations crossing a device boundary per token.
+    pub boundary_bytes: f64,
+}
+
+impl ModelShape {
+    /// Build from the paper-declared parameter count of a family, using
+    /// the artifact's layer structure as the shape template.
+    pub fn from_family(family: ModelFamily, meta: &VariantMeta) -> ModelShape {
+        let n = family.paper_params();
+        let l = meta.n_layers as f64;
+        // Parameter split: embeddings ~8%, head ~8%, layers share the rest
+        // (typical decoder-only split at these scales).
+        let embed_params = 0.08 * n;
+        let head_params = 0.08 * n;
+        let layer_params = (n - embed_params - head_params) / l;
+        // fp32 weights: 4 bytes/param; FLOPs: 2/param/token; decode reads
+        // every weight once per token.
+        let cost = |params: f64| LayerCost {
+            flops: 2.0 * params,
+            bytes: 4.0 * params,
+            mem_gb: 4.0 * params / 1e9,
+        };
+        // d_model at paper scale (approximate via sqrt of per-layer size).
+        let d_model = (layer_params / 12.0).sqrt();
+        ModelShape {
+            family,
+            n_layers: meta.n_layers,
+            embedding: cost(embed_params),
+            per_layer: cost(layer_params),
+            lm_head: cost(head_params),
+            boundary_bytes: 4.0 * d_model,
+        }
+    }
+
+    /// Total resident memory (GB).
+    pub fn total_mem_gb(&self) -> f64 {
+        self.embedding.mem_gb + self.per_layer.mem_gb * self.n_layers as f64 + self.lm_head.mem_gb
+    }
+
+    /// Total FLOPs per decode step.
+    pub fn decode_flops(&self) -> f64 {
+        self.embedding.flops + self.per_layer.flops * self.n_layers as f64 + self.lm_head.flops
+    }
+
+    /// Total bytes per decode step.
+    pub fn decode_bytes(&self) -> f64 {
+        self.embedding.bytes + self.per_layer.bytes * self.n_layers as f64 + self.lm_head.bytes
+    }
+}
+
+/// A hardware-layer mapping: the orchestrator's output (paper Fig. 1
+/// "optimal allocation plan").
+#[derive(Debug, Clone)]
+pub struct Allocation {
+    pub embedding: DeviceId,
+    /// Device of each decoder layer, in order.
+    pub layers: Vec<DeviceId>,
+    pub lm_head: DeviceId,
+}
+
+impl Allocation {
+    /// All devices on the critical path, deduplicated, in first-use order.
+    pub fn devices_used(&self) -> Vec<DeviceId> {
+        let mut out: Vec<DeviceId> = Vec::new();
+        let mut push = |d: &DeviceId| {
+            if !out.contains(d) {
+                out.push(d.clone());
+            }
+        };
+        push(&self.embedding);
+        for l in &self.layers {
+            push(l);
+        }
+        push(&self.lm_head);
+        out
+    }
+
+    /// Number of device-boundary crossings along the layer chain.
+    pub fn boundary_crossings(&self) -> usize {
+        let chain: Vec<&DeviceId> = std::iter::once(&self.embedding)
+            .chain(self.layers.iter())
+            .chain(std::iter::once(&self.lm_head))
+            .collect();
+        chain.windows(2).filter(|w| w[0] != w[1]).count()
+    }
+
+    /// Memory demanded from each device by this allocation (GB).
+    pub fn memory_demand(&self, shape: &ModelShape) -> Vec<(DeviceId, f64)> {
+        let mut demand: Vec<(DeviceId, f64)> = Vec::new();
+        let mut add = |d: &DeviceId, gb: f64| {
+            if let Some(entry) = demand.iter_mut().find(|(id, _)| id == d) {
+                entry.1 += gb;
+            } else {
+                demand.push((d.clone(), gb));
+            }
+        };
+        add(&self.embedding, shape.embedding.mem_gb);
+        for l in &self.layers {
+            add(l, shape.per_layer.mem_gb);
+        }
+        add(&self.lm_head, shape.lm_head.mem_gb);
+        demand
+    }
+
+    /// Check memory feasibility against a fleet (paper Eq. 12 memory
+    /// constraints).
+    pub fn check_memory(&self, shape: &ModelShape, fleet: &Fleet) -> Result<()> {
+        for (dev, gb) in self.memory_demand(shape) {
+            let Some(spec) = fleet.get(&dev) else {
+                bail!("allocation references unknown device {dev}");
+            };
+            if gb > spec.mem_gb {
+                bail!("device {dev} over memory: needs {gb:.1} GB, has {:.1} GB", spec.mem_gb);
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::{Fleet, FleetPreset};
+
+    fn meta() -> VariantMeta {
+        VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 17_195_008,
+            flops_per_token_decode: 537_344,
+            bytes_per_token_decode: 1_337_344,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        }
+    }
+
+    #[test]
+    fn shape_totals_consistent() {
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        // 125M params at fp32 = 0.5 GB.
+        assert!((shape.total_mem_gb() - 0.5).abs() < 0.01);
+        assert!((shape.decode_flops() - 2.5e8).abs() < 1e6);
+        assert!((shape.decode_bytes() - 5e8).abs() < 2e6);
+    }
+
+    #[test]
+    fn allocation_devices_and_crossings() {
+        let a = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["gpu0".into(), "gpu0".into(), "npu0".into(), "npu0".into()],
+            lm_head: "npu0".into(),
+        };
+        assert_eq!(a.devices_used().len(), 2);
+        // npu -> gpu -> (gpu) -> npu -> (npu) -> npu : 2 crossings
+        assert_eq!(a.boundary_crossings(), 2);
+    }
+
+    #[test]
+    fn single_device_allocation_has_no_crossings() {
+        let a = Allocation {
+            embedding: "cpu0".into(),
+            layers: vec!["cpu0".into(); 4],
+            lm_head: "cpu0".into(),
+        };
+        assert_eq!(a.boundary_crossings(), 0);
+        assert_eq!(a.devices_used(), vec![DeviceId::from("cpu0")]);
+    }
+
+    #[test]
+    fn memory_check_passes_on_edge_box() {
+        let shape = ModelShape::from_family(ModelFamily::Lfm2, &meta());
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let a = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["npu0".into(); 4],
+            lm_head: "npu0".into(),
+        };
+        // 2.6B fp32 = 10.4 GB, fits the 20 GB NPU.
+        a.check_memory(&shape, &fleet).unwrap();
+    }
+
+    #[test]
+    fn memory_check_fails_when_oversubscribed() {
+        let mut shape = ModelShape::from_family(ModelFamily::Lfm2, &meta());
+        shape.per_layer.mem_gb = 30.0; // absurd per-layer footprint
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let a = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["npu0".into(); 4],
+            lm_head: "npu0".into(),
+        };
+        assert!(a.check_memory(&shape, &fleet).is_err());
+    }
+
+    #[test]
+    fn unknown_device_rejected() {
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        let fleet = Fleet::preset(FleetPreset::CpuOnly);
+        let a = Allocation {
+            embedding: "gpu0".into(),
+            layers: vec!["gpu0".into(); 4],
+            lm_head: "gpu0".into(),
+        };
+        assert!(a.check_memory(&shape, &fleet).is_err());
+    }
+}

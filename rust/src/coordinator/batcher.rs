@@ -1,0 +1,181 @@
+//! Dynamic sample batcher: groups the per-query samples into per-device
+//! batches (round-robin over the decode fan-out set), preserving
+//! first-come order within a device.
+
+use crate::devices::spec::DeviceId;
+
+/// One batch of sample indices bound for a device.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub device: DeviceId,
+    /// Sample indices (0-based within the query).
+    pub samples: Vec<u32>,
+}
+
+/// Round-robin batcher with a per-batch size cap.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    pub max_batch: usize,
+}
+
+impl Default for Batcher {
+    fn default() -> Self {
+        Batcher { max_batch: 8 }
+    }
+}
+
+impl Batcher {
+    /// Distribute `n_samples` over `devices` (round-robin), splitting any
+    /// device's share into chunks of at most `max_batch`.
+    pub fn assign(&self, n_samples: u32, devices: &[DeviceId]) -> Vec<Batch> {
+        assert!(!devices.is_empty(), "batcher needs at least one device");
+        let mut per_device: Vec<Vec<u32>> = vec![Vec::new(); devices.len()];
+        for s in 0..n_samples {
+            per_device[(s as usize) % devices.len()].push(s);
+        }
+        let mut out = Vec::new();
+        for (di, samples) in per_device.into_iter().enumerate() {
+            for chunk in samples.chunks(self.max_batch.max(1)) {
+                out.push(Batch { device: devices[di].clone(), samples: chunk.to_vec() });
+            }
+        }
+        out
+    }
+}
+
+impl Batcher {
+    /// Distribute samples proportionally to per-device service rates
+    /// (1 / step seconds): faster devices take more samples, minimizing
+    /// the decode makespan. Every device in `devices` gets its share
+    /// rounded largest-remainder so all samples are assigned.
+    pub fn assign_weighted(
+        &self,
+        n_samples: u32,
+        devices: &[DeviceId],
+        rates: &[f64],
+    ) -> Vec<Batch> {
+        assert!(!devices.is_empty(), "batcher needs at least one device");
+        assert_eq!(devices.len(), rates.len());
+        let total_rate: f64 = rates.iter().sum();
+        if total_rate <= 0.0 {
+            return self.assign(n_samples, devices);
+        }
+        // Largest-remainder apportionment.
+        let shares: Vec<f64> =
+            rates.iter().map(|r| n_samples as f64 * r / total_rate).collect();
+        let mut counts: Vec<u32> = shares.iter().map(|s| s.floor() as u32).collect();
+        let mut remaining = n_samples - counts.iter().sum::<u32>();
+        let mut order: Vec<usize> = (0..devices.len()).collect();
+        order.sort_by(|&a, &b| {
+            (shares[b] - shares[b].floor()).total_cmp(&(shares[a] - shares[a].floor()))
+        });
+        for &i in order.iter().cycle().take(devices.len() * 4) {
+            if remaining == 0 {
+                break;
+            }
+            counts[i] += 1;
+            remaining -= 1;
+        }
+        // Assign contiguous sample index ranges per device.
+        let mut out = Vec::new();
+        let mut next = 0u32;
+        for (di, &count) in counts.iter().enumerate() {
+            let samples: Vec<u32> = (next..next + count).collect();
+            next += count;
+            for chunk in samples.chunks(self.max_batch.max(1)) {
+                out.push(Batch { device: devices[di].clone(), samples: chunk.to_vec() });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn devs(n: usize) -> Vec<DeviceId> {
+        (0..n).map(|i| DeviceId(format!("d{i}"))).collect()
+    }
+
+    #[test]
+    fn all_samples_assigned_exactly_once() {
+        let b = Batcher { max_batch: 4 };
+        let batches = b.assign(20, &devs(3));
+        let mut seen: Vec<u32> = batches.iter().flat_map(|b| b.samples.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn round_robin_balances_load() {
+        let b = Batcher { max_batch: 100 };
+        let batches = b.assign(21, &devs(3));
+        let mut per_dev = std::collections::BTreeMap::new();
+        for batch in &batches {
+            *per_dev.entry(batch.device.clone()).or_insert(0usize) += batch.samples.len();
+        }
+        let counts: Vec<usize> = per_dev.values().copied().collect();
+        assert_eq!(counts, vec![7, 7, 7]);
+    }
+
+    #[test]
+    fn batch_size_cap_respected() {
+        let b = Batcher { max_batch: 3 };
+        for batch in b.assign(20, &devs(2)) {
+            assert!(batch.samples.len() <= 3);
+        }
+    }
+
+    #[test]
+    fn order_preserved_within_device() {
+        let b = Batcher { max_batch: 64 };
+        for batch in b.assign(30, &devs(4)) {
+            let mut sorted = batch.samples.clone();
+            sorted.sort_unstable();
+            assert_eq!(batch.samples, sorted);
+        }
+    }
+
+    #[test]
+    fn zero_samples_yield_no_batches() {
+        let b = Batcher::default();
+        assert!(b.assign(0, &devs(2)).is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "at least one device")]
+    fn no_devices_panics() {
+        Batcher::default().assign(5, &[]);
+    }
+
+    #[test]
+    fn weighted_assignment_conserves_and_biases() {
+        let b = Batcher { max_batch: 100 };
+        let devices = devs(3);
+        // Device 0 is 4x faster than the others.
+        let batches = b.assign_weighted(24, &devices, &[4.0, 1.0, 1.0]);
+        let mut seen: Vec<u32> = batches.iter().flat_map(|x| x.samples.clone()).collect();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..24).collect::<Vec<_>>());
+        let count = |d: usize| -> usize {
+            batches
+                .iter()
+                .filter(|x| x.device == devices[d])
+                .map(|x| x.samples.len())
+                .sum()
+        };
+        assert_eq!(count(0), 16);
+        assert_eq!(count(1), 4);
+        assert_eq!(count(2), 4);
+    }
+
+    #[test]
+    fn weighted_with_zero_rates_falls_back() {
+        let b = Batcher { max_batch: 100 };
+        let devices = devs(2);
+        let batches = b.assign_weighted(10, &devices, &[0.0, 0.0]);
+        let total: usize = batches.iter().map(|x| x.samples.len()).sum();
+        assert_eq!(total, 10);
+    }
+}

@@ -1,0 +1,165 @@
+//! Prefill/decode disaggregation (paper Formalism 5 in action): route
+//! the compute-bound prefill to the fastest compute device and fan the
+//! memory-bound decode samples across the most energy-efficient devices.
+
+use crate::devices::fleet::Fleet;
+use crate::devices::roofline::{Phase, Task};
+use crate::devices::spec::DeviceId;
+
+use super::allocation::ModelShape;
+use super::ranking;
+
+/// Phase routing decision for one query.
+#[derive(Debug, Clone)]
+pub struct PhasePlan {
+    /// Device executing the prompt prefill.
+    pub prefill: DeviceId,
+    /// Devices the decode samples fan out over (round-robin), best first.
+    pub decode: Vec<DeviceId>,
+}
+
+impl PhasePlan {
+    /// Split-brain plan: compute-optimal prefill + energy-optimal decode
+    /// fan-out (the full QEIL behaviour).
+    pub fn disaggregated(
+        shape: &ModelShape,
+        fleet: &Fleet,
+        prompt_tokens: u32,
+        max_decode_devices: usize,
+    ) -> Option<PhasePlan> {
+        let prefill_task = prefill_task(shape, prompt_tokens);
+        let decode_task = decode_task(shape);
+
+        // Prefill: latency-optimal (it gates every sample).
+        let prefill = ranking::rank_by_task_latency(fleet, &prefill_task).first()?.id.clone();
+
+        // Decode: energy-ranked fan-out set. Keep devices whose energy is
+        // within 20× of the best so hopeless devices don't burn joules,
+        // but parallelism is still available.
+        let ranked = ranking::rank_by_task_energy(fleet, &decode_task);
+        let best = ranked.first()?;
+        let best_e =
+            crate::devices::power::PowerModel::new((*best).clone()).task_energy_j(&decode_task, 1.0);
+        let decode: Vec<DeviceId> = ranked
+            .iter()
+            .filter(|d| {
+                let e = crate::devices::power::PowerModel::new((**d).clone())
+                    .task_energy_j(&decode_task, 1.0);
+                e <= 20.0 * best_e
+            })
+            .take(max_decode_devices.max(1))
+            .map(|d| d.id.clone())
+            .collect();
+        Some(PhasePlan { prefill, decode })
+    }
+
+    /// Homogeneous plan: everything on one device (the baselines).
+    pub fn homogeneous(device: DeviceId) -> PhasePlan {
+        PhasePlan { prefill: device.clone(), decode: vec![device] }
+    }
+
+    /// Is this plan actually heterogeneous?
+    pub fn is_heterogeneous(&self) -> bool {
+        self.decode.iter().any(|d| d != &self.prefill) || self.decode.len() > 1
+    }
+}
+
+/// The prefill roofline task for a prompt.
+pub fn prefill_task(shape: &ModelShape, prompt_tokens: u32) -> Task {
+    Task {
+        phase: Phase::Prefill,
+        // Prefill computes every layer for every prompt token…
+        flops: shape.decode_flops() * prompt_tokens as f64,
+        // …but streams the weights once (what makes it compute-bound).
+        bytes: shape.decode_bytes(),
+        mem_gb: shape.total_mem_gb(),
+        launches: shape.n_layers as u64,
+    }
+}
+
+/// The roofline task of ONE decode step (eager stacks pay a launch per
+/// decoder layer; compiled NPU graphs pay one).
+pub fn decode_task(shape: &ModelShape) -> Task {
+    Task {
+        phase: Phase::Decode,
+        flops: shape.decode_flops(),
+        bytes: shape.decode_bytes(),
+        mem_gb: shape.total_mem_gb(),
+        launches: shape.n_layers as u64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::FleetPreset;
+    use crate::runtime::manifest::VariantMeta;
+    use crate::workload::datasets::ModelFamily;
+
+    fn shape() -> ModelShape {
+        let meta = VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 17_195_008,
+            flops_per_token_decode: 537_344,
+            bytes_per_token_decode: 1_337_344,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        };
+        ModelShape::from_family(ModelFamily::Gpt2, &meta)
+    }
+
+    #[test]
+    fn disaggregation_splits_phases_on_edge_box() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let plan = PhasePlan::disaggregated(&shape(), &fleet, 96, 3).unwrap();
+        assert!(plan.is_heterogeneous());
+        // Prefill on the compute-optimal dGPU; decode led by the NPU.
+        assert_eq!(plan.prefill, "gpu0".into());
+        assert_eq!(plan.decode[0], "npu0".into());
+    }
+
+    #[test]
+    fn phase_tasks_have_correct_boundedness() {
+        let s = shape();
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let gpu = fleet.get(&"gpu0".into()).unwrap();
+        assert!(!prefill_task(&s, 96).memory_bound_on(gpu) || prefill_task(&s, 96).intensity() > 10.0);
+        assert!(decode_task(&s).memory_bound_on(gpu));
+    }
+
+    #[test]
+    fn homogeneous_plan_is_single_device() {
+        let plan = PhasePlan::homogeneous("gpu0".into());
+        assert!(!plan.is_heterogeneous());
+        assert_eq!(plan.prefill, plan.decode[0]);
+    }
+
+    #[test]
+    fn decode_fanout_respects_cap() {
+        let fleet = Fleet::preset(FleetPreset::MultiVendor);
+        let plan = PhasePlan::disaggregated(&shape(), &fleet, 96, 2).unwrap();
+        assert!(plan.decode.len() <= 2);
+    }
+
+    #[test]
+    fn single_device_fleet_degenerates_gracefully() {
+        let fleet = Fleet::preset(FleetPreset::NpuOnly);
+        let plan = PhasePlan::disaggregated(&shape(), &fleet, 96, 4).unwrap();
+        assert_eq!(plan.prefill, "npu0".into());
+        assert_eq!(plan.decode, vec![DeviceId::from("npu0")]);
+        assert!(!plan.is_heterogeneous());
+    }
+}

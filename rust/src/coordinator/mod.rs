@@ -1,0 +1,21 @@
+//! The QEIL coordinator — the paper's L3 contribution.
+//!
+//! Pipeline (paper Fig. 1): device ranking → layer assignment (greedy,
+//! Eq. 12) → phase disaggregation (compute-bound prefill vs memory-bound
+//! decode, Formalism 5) → adaptive sample budgeting → constraint checks.
+//! The safety monitor ([`crate::safety`]) has override authority over all
+//! of it.
+
+pub mod allocation;
+pub mod batcher;
+pub mod disaggregation;
+pub mod exact;
+pub mod orchestrator;
+pub mod ranking;
+pub mod sample_budget;
+
+pub use allocation::{Allocation, LayerCost, ModelShape};
+pub use batcher::{Batch, Batcher};
+pub use disaggregation::PhasePlan;
+pub use orchestrator::{Orchestrator, PlanError};
+pub use sample_budget::SampleBudgeter;

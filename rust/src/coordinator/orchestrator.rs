@@ -1,0 +1,338 @@
+//! Greedy layer assignment (paper Eq. 12 + §3.7 justification).
+//!
+//! Strategy: embedding and LM head go to the most energy-efficient
+//! feasible device; decoder layers are assigned in order, each to the
+//! device minimizing *incremental* energy — per-layer decode energy plus
+//! an interconnect penalty when the layer's device differs from its
+//! predecessor's — subject to memory capacity and thermal headroom.
+//! `O(L·D)`, re-runnable in real time when safety state changes.
+
+use std::collections::BTreeMap;
+
+use crate::devices::fleet::Fleet;
+use crate::devices::power::PowerModel;
+use crate::devices::roofline::{Phase, Task};
+use crate::devices::spec::{DeviceId, DeviceSpec};
+
+use super::allocation::{Allocation, ModelShape};
+
+/// Planning failure modes.
+#[derive(Debug)]
+pub enum PlanError {
+    /// No device can hold a required stage.
+    NoFeasibleDevice { stage: &'static str },
+}
+
+impl std::fmt::Display for PlanError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PlanError::NoFeasibleDevice { stage } => {
+                write!(f, "no feasible device for stage {stage}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for PlanError {}
+
+/// The greedy layer-assignment engine.
+pub struct Orchestrator<'f> {
+    fleet: &'f Fleet,
+    /// Devices currently excluded (failed or thermally shed) — the safety
+    /// monitor's override channel.
+    excluded: Vec<DeviceId>,
+    /// Per-device available-memory override (GB), e.g. under memory
+    /// pressure; defaults to the spec capacity.
+    mem_override: BTreeMap<DeviceId, f64>,
+}
+
+impl<'f> Orchestrator<'f> {
+    pub fn new(fleet: &'f Fleet) -> Self {
+        Orchestrator { fleet, excluded: Vec::new(), mem_override: BTreeMap::new() }
+    }
+
+    /// Exclude a device from planning (safety override authority).
+    pub fn exclude(&mut self, id: &DeviceId) {
+        if !self.excluded.contains(id) {
+            self.excluded.push(id.clone());
+        }
+    }
+
+    pub fn readmit(&mut self, id: &DeviceId) {
+        self.excluded.retain(|d| d != id);
+    }
+
+    pub fn set_available_memory(&mut self, id: &DeviceId, gb: f64) {
+        self.mem_override.insert(id.clone(), gb);
+    }
+
+    fn usable(&self) -> Vec<&DeviceSpec> {
+        self.fleet.devices().iter().filter(|d| !self.excluded.contains(&d.id)).collect()
+    }
+
+    fn capacity(&self, d: &DeviceSpec) -> f64 {
+        self.mem_override.get(&d.id).copied().unwrap_or(d.mem_gb)
+    }
+
+    /// Assign every stage of `shape` to a device, minimizing total decode
+    /// energy under memory constraints (greedy, Eq. 12).
+    pub fn assign(&self, shape: &ModelShape) -> Result<Allocation, PlanError> {
+        let devices = self.usable();
+        if devices.is_empty() {
+            return Err(PlanError::NoFeasibleDevice { stage: "any" });
+        }
+        let mut used_gb: BTreeMap<DeviceId, f64> = BTreeMap::new();
+
+        // Stage costs as roofline tasks (decode granularity — decode
+        // dominates token count, hence energy).
+        let task_of = |flops: f64, bytes: f64, mem: f64| Task {
+            phase: Phase::Decode,
+            flops,
+            bytes,
+            mem_gb: mem,
+            launches: 1,
+        };
+
+        // 1) Embedding + LM head → cheapest feasible device.
+        let emb_task =
+            task_of(shape.embedding.flops, shape.embedding.bytes, shape.embedding.mem_gb);
+        let embedding = self
+            .cheapest_fitting(&devices, &used_gb, &emb_task, shape.embedding.mem_gb, None)
+            .ok_or(PlanError::NoFeasibleDevice { stage: "embedding" })?;
+        *used_gb.entry(embedding.clone()).or_insert(0.0) += shape.embedding.mem_gb;
+
+        // 2) Decoder layers in order, with boundary penalty.
+        let layer_task =
+            task_of(shape.per_layer.flops, shape.per_layer.bytes, shape.per_layer.mem_gb);
+        let mut layers = Vec::with_capacity(shape.n_layers);
+        let mut prev = embedding.clone();
+        for _ in 0..shape.n_layers {
+            let dev = self
+                .cheapest_fitting(
+                    &devices,
+                    &used_gb,
+                    &layer_task,
+                    shape.per_layer.mem_gb,
+                    Some((&prev, shape.boundary_bytes)),
+                )
+                .ok_or(PlanError::NoFeasibleDevice { stage: "decoder layer" })?;
+            *used_gb.entry(dev.clone()).or_insert(0.0) += shape.per_layer.mem_gb;
+            prev = dev.clone();
+            layers.push(dev);
+        }
+
+        // 3) LM head, boundary-aware.
+        let head_task = task_of(shape.lm_head.flops, shape.lm_head.bytes, shape.lm_head.mem_gb);
+        let lm_head = self
+            .cheapest_fitting(
+                &devices,
+                &used_gb,
+                &head_task,
+                shape.lm_head.mem_gb,
+                Some((&prev, shape.boundary_bytes)),
+            )
+            .ok_or(PlanError::NoFeasibleDevice { stage: "lm_head" })?;
+
+        Ok(Allocation { embedding, layers, lm_head })
+    }
+
+    /// Total decode-step energy of an allocation (the objective of
+    /// Eq. 12), including interconnect transfer energy at boundaries.
+    pub fn allocation_energy_j(&self, shape: &ModelShape, alloc: &Allocation) -> f64 {
+        let mut total = 0.0;
+        let stage_energy = |dev: &DeviceId, flops: f64, bytes: f64, mem: f64| -> f64 {
+            let spec = self.fleet.get(dev).expect("allocation device in fleet");
+            let task = Task { phase: Phase::Decode, flops, bytes, mem_gb: mem, launches: 1 };
+            PowerModel::new(spec.clone()).task_energy_j(&task, 1.0)
+        };
+        total += stage_energy(
+            &alloc.embedding,
+            shape.embedding.flops,
+            shape.embedding.bytes,
+            shape.embedding.mem_gb,
+        );
+        for dev in &alloc.layers {
+            total += stage_energy(dev, shape.per_layer.flops, shape.per_layer.bytes, shape.per_layer.mem_gb);
+        }
+        total += stage_energy(
+            &alloc.lm_head,
+            shape.lm_head.flops,
+            shape.lm_head.bytes,
+            shape.lm_head.mem_gb,
+        );
+        total += alloc.boundary_crossings() as f64 * self.transfer_energy_j(shape.boundary_bytes);
+        total
+    }
+
+    /// Energy to push activation bytes across the host link (5 pJ/bit ≈
+    /// 40 nJ/byte — PCIe-class SerDes figure).
+    pub fn transfer_energy_j(&self, bytes: f64) -> f64 {
+        bytes * 40e-9
+    }
+
+    fn cheapest_fitting(
+        &self,
+        devices: &[&DeviceSpec],
+        used_gb: &BTreeMap<DeviceId, f64>,
+        task: &Task,
+        need_gb: f64,
+        boundary: Option<(&DeviceId, f64)>,
+    ) -> Option<DeviceId> {
+        let mut best: Option<(f64, &DeviceSpec)> = None;
+        for d in devices {
+            let used = used_gb.get(&d.id).copied().unwrap_or(0.0);
+            if used + need_gb > self.capacity(d) {
+                continue;
+            }
+            let mut energy = PowerModel::new((*d).clone()).task_energy_j(task, 1.0);
+            if let Some((prev, bytes)) = boundary {
+                if prev != &d.id {
+                    energy += self.transfer_energy_j(bytes);
+                }
+            }
+            let better = match &best {
+                None => true,
+                Some((e, b)) => {
+                    energy < *e
+                        || (energy == *e
+                            && (d.priority, &d.id) < (b.priority, &b.id))
+                }
+            };
+            if better {
+                best = Some((energy, d));
+            }
+        }
+        best.map(|(_, d)| d.id.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::FleetPreset;
+    use crate::runtime::manifest::VariantMeta;
+    use crate::workload::datasets::ModelFamily;
+
+    fn meta(layers: usize) -> VariantMeta {
+        VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: layers,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 0,
+            flops_per_token_decode: 0,
+            bytes_per_token_decode: 1,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        }
+    }
+
+    fn shape(family: ModelFamily, layers: usize) -> ModelShape {
+        ModelShape::from_family(family, &meta(layers))
+    }
+
+    #[test]
+    fn assignment_fits_memory() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let alloc = orch.assign(&s).unwrap();
+        alloc.check_memory(&s, &fleet).unwrap();
+        assert_eq!(alloc.layers.len(), 10);
+    }
+
+    #[test]
+    fn small_model_lands_on_npu() {
+        // NPU is cheapest for memory-bound decode stages and has room.
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Gpt2, 4);
+        let alloc = orch.assign(&s).unwrap();
+        assert_eq!(alloc.embedding, "npu0".into());
+        assert!(alloc.layers.iter().all(|d| d == &DeviceId::from("npu0")));
+    }
+
+    #[test]
+    fn exclusion_reroutes() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut orch = Orchestrator::new(&fleet);
+        orch.exclude(&"npu0".into());
+        let s = shape(ModelFamily::Gpt2, 4);
+        let alloc = orch.assign(&s).unwrap();
+        assert!(alloc.devices_used().iter().all(|d| d != &DeviceId::from("npu0")));
+        orch.readmit(&"npu0".into());
+        let alloc2 = orch.assign(&s).unwrap();
+        assert!(alloc2.devices_used().contains(&"npu0".into()));
+    }
+
+    #[test]
+    fn all_excluded_is_planning_error() {
+        let fleet = Fleet::preset(FleetPreset::NpuOnly);
+        let mut orch = Orchestrator::new(&fleet);
+        orch.exclude(&"npu0".into());
+        assert!(orch.assign(&shape(ModelFamily::Gpt2, 4)).is_err());
+    }
+
+    #[test]
+    fn memory_pressure_spills_layers() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut orch = Orchestrator::new(&fleet);
+        // Squeeze the NPU so only ~half the LFM2 layers fit.
+        orch.set_available_memory(&"npu0".into(), 5.0);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let alloc = orch.assign(&s).unwrap();
+        let used = alloc.devices_used();
+        assert!(used.len() >= 2, "must spill to a second device, used {used:?}");
+        // And the NPU's assigned share must respect the override.
+        let demand = alloc.memory_demand(&s);
+        let npu_demand = demand
+            .iter()
+            .find(|(d, _)| d == &DeviceId::from("npu0"))
+            .map(|(_, gb)| *gb)
+            .unwrap_or(0.0);
+        assert!(npu_demand <= 5.0 + 1e-9, "npu demand {npu_demand}");
+    }
+
+    #[test]
+    fn energy_objective_counts_transfers() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Gpt2, 4);
+        let single = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["npu0".into(); 4],
+            lm_head: "npu0".into(),
+        };
+        let mut split_layers = vec!["npu0".into(); 4];
+        split_layers[2] = "igpu0".into();
+        let split = Allocation {
+            embedding: "npu0".into(),
+            layers: split_layers,
+            lm_head: "npu0".into(),
+        };
+        // Same stages, but the split plan pays transfer energy twice and
+        // runs one layer on a pricier device.
+        assert!(orch.allocation_energy_j(&s, &split) > orch.allocation_energy_j(&s, &single));
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let fleet = Fleet::preset(FleetPreset::MultiVendor);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Qwen2, 6);
+        let a = orch.assign(&s).unwrap();
+        let b = orch.assign(&s).unwrap();
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.embedding, b.embedding);
+    }
+}

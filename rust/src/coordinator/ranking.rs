@@ -1,0 +1,112 @@
+//! Phase-aware device ranking (optimization-engine preprocessing,
+//! paper Fig. 1 stage 1).
+//!
+//! Plain Eq. 11 (`FLOPs/J`) ranks devices for compute-bound work; for the
+//! memory-bound decode phase the figure of merit is bytes-per-joule. The
+//! disaggregation stage consumes both rankings.
+
+use crate::devices::fleet::Fleet;
+use crate::devices::roofline::Task;
+use crate::devices::power::PowerModel;
+use crate::devices::spec::{DeviceId, DeviceSpec};
+
+/// Rank devices by energy per execution of `task` (ascending — best
+/// first). Ties broken by priority, then id for determinism.
+pub fn rank_by_task_energy<'f>(fleet: &'f Fleet, task: &Task) -> Vec<&'f DeviceSpec> {
+    let mut scored: Vec<(&DeviceSpec, f64)> = fleet
+        .devices()
+        .iter()
+        .filter(|d| task.mem_gb <= d.mem_gb)
+        .map(|d| {
+            let e = PowerModel::new(d.clone()).task_energy_j(task, 1.0);
+            (d, e)
+        })
+        .collect();
+    scored.sort_by(|a, b| {
+        a.1.total_cmp(&b.1)
+            .then(a.0.priority.cmp(&b.0.priority))
+            .then(a.0.id.cmp(&b.0.id))
+    });
+    scored.into_iter().map(|(d, _)| d).collect()
+}
+
+/// Rank devices by *latency* for `task` (ascending).
+pub fn rank_by_task_latency<'f>(fleet: &'f Fleet, task: &Task) -> Vec<&'f DeviceSpec> {
+    let mut scored: Vec<(&DeviceSpec, f64)> = fleet
+        .devices()
+        .iter()
+        .filter(|d| task.mem_gb <= d.mem_gb)
+        .map(|d| (d, task.seconds_on(d, 1.0)))
+        .collect();
+    scored.sort_by(|a, b| {
+        a.1.total_cmp(&b.1)
+            .then(a.0.priority.cmp(&b.0.priority))
+            .then(a.0.id.cmp(&b.0.id))
+    });
+    scored.into_iter().map(|(d, _)| d).collect()
+}
+
+/// The best device id for a task under an energy objective, if any fits.
+pub fn best_for_energy(fleet: &Fleet, task: &Task) -> Option<DeviceId> {
+    rank_by_task_energy(fleet, task).first().map(|d| d.id.clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::FleetPreset;
+    use crate::devices::roofline::Phase;
+
+    fn decode_task() -> Task {
+        Task { phase: Phase::Decode, flops: 2.5e8, bytes: 5e8, mem_gb: 0.5, launches: 1 }
+    }
+
+    fn prefill_task() -> Task {
+        Task { phase: Phase::Prefill, flops: 1.28e11, bytes: 5e8, mem_gb: 0.5, launches: 1 }
+    }
+
+    #[test]
+    fn decode_energy_ranking_prefers_npu() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let ranked = rank_by_task_energy(&fleet, &decode_task());
+        assert_eq!(ranked[0].id, "npu0".into());
+    }
+
+    #[test]
+    fn prefill_latency_ranking_prefers_big_gpu() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let ranked = rank_by_task_latency(&fleet, &prefill_task());
+        assert_eq!(ranked[0].id, "gpu0".into());
+    }
+
+    #[test]
+    fn memory_filter_excludes_small_devices() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let huge = Task { phase: Phase::Decode, flops: 1e9, bytes: 1e9, mem_gb: 50.0, launches: 1 };
+        let ranked = rank_by_task_energy(&fleet, &huge);
+        assert!(ranked.iter().all(|d| d.mem_gb >= 50.0));
+        assert!(!ranked.is_empty());
+    }
+
+    #[test]
+    fn impossible_task_yields_empty_ranking() {
+        let fleet = Fleet::preset(FleetPreset::NpuOnly);
+        let huge = Task { phase: Phase::Decode, flops: 1e9, bytes: 1e9, mem_gb: 500.0, launches: 1 };
+        assert!(rank_by_task_energy(&fleet, &huge).is_empty());
+        assert!(best_for_energy(&fleet, &huge).is_none());
+    }
+
+    #[test]
+    fn ranking_is_deterministic() {
+        let fleet = Fleet::preset(FleetPreset::MultiVendor);
+        let a: Vec<_> = rank_by_task_energy(&fleet, &decode_task())
+            .iter()
+            .map(|d| d.id.clone())
+            .collect();
+        let b: Vec<_> = rank_by_task_energy(&fleet, &decode_task())
+            .iter()
+            .map(|d| d.id.clone())
+            .collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,132 @@
+//! Adaptive sample budgeting (Table 4's "+ Adaptive Sample Budget" row).
+//!
+//! Uses the coverage law (Formalism 1) to pick the smallest S reaching
+//! the coverage target, then clips it to the energy and latency
+//! envelopes using the energy law (Formalism 2) and the phase plan's
+//! per-sample cost estimates.
+
+use crate::scaling::formalisms::CoverageLaw;
+
+/// Per-sample cost estimates supplied by the planner.
+#[derive(Debug, Clone, Copy)]
+pub struct SampleCost {
+    /// Energy of one full sample (prefill amortized + decode), joules.
+    pub energy_j: f64,
+    /// Wall-clock seconds of one sample on the assigned devices when
+    /// running alone.
+    pub latency_s: f64,
+    /// Degree of device parallelism available for concurrent samples.
+    pub parallelism: u32,
+}
+
+/// The adaptive budgeter.
+#[derive(Debug, Clone)]
+pub struct SampleBudgeter {
+    pub law: CoverageLaw,
+    /// Coverage target (paper aims ≈0.70 at S=20).
+    pub coverage_target: f64,
+    /// Hard cap on samples per query.
+    pub max_samples: u32,
+}
+
+impl Default for SampleBudgeter {
+    fn default() -> Self {
+        SampleBudgeter {
+            law: CoverageLaw::default(),
+            coverage_target: 0.70,
+            max_samples: 20,
+        }
+    }
+}
+
+impl SampleBudgeter {
+    /// Choose the sample count for a query on a model with `n` paper
+    /// parameters producing `t` tokens, under optional energy / latency
+    /// envelopes.
+    pub fn budget(
+        &self,
+        n: f64,
+        t: f64,
+        cost: &SampleCost,
+        energy_budget_j: Option<f64>,
+        latency_sla_s: Option<f64>,
+    ) -> u32 {
+        // 1) Coverage-driven want.
+        let want = self
+            .law
+            .samples_for(n, t, self.coverage_target, self.max_samples)
+            .unwrap_or(self.max_samples);
+
+        // 2) Energy clip.
+        let energy_cap = energy_budget_j
+            .map(|budget| (budget / cost.energy_j.max(1e-12)).floor() as u32)
+            .unwrap_or(u32::MAX);
+
+        // 3) Latency clip: samples run `parallelism`-wide; serialized
+        // waves each cost `latency_s`.
+        let latency_cap = latency_sla_s
+            .map(|sla| {
+                let waves = (sla / cost.latency_s.max(1e-12)).floor() as u32;
+                waves.saturating_mul(cost.parallelism.max(1))
+            })
+            .unwrap_or(u32::MAX);
+
+        want.min(energy_cap).min(latency_cap).clamp(1, self.max_samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost() -> SampleCost {
+        SampleCost { energy_j: 50.0, latency_s: 0.2, parallelism: 4 }
+    }
+
+    #[test]
+    fn unconstrained_budget_chases_coverage() {
+        let b = SampleBudgeter::default();
+        let s = b.budget(125e6, 256.0, &cost(), None, None);
+        assert!((1..=20).contains(&s));
+        // Bigger models need fewer samples for the same target.
+        let s_big = b.budget(2.6e9, 256.0, &cost(), None, None);
+        assert!(s_big <= s, "s={s} s_big={s_big}");
+    }
+
+    #[test]
+    fn energy_budget_clips() {
+        let b = SampleBudgeter::default();
+        let unclipped = b.budget(125e6, 256.0, &cost(), None, None);
+        let clipped = b.budget(125e6, 256.0, &cost(), Some(150.0), None);
+        assert_eq!(clipped, 3.min(unclipped.max(1)).max(1));
+        assert!(clipped <= unclipped);
+    }
+
+    #[test]
+    fn latency_sla_clips_with_parallelism() {
+        let b = SampleBudgeter::default();
+        // 0.5 s SLA / 0.2 s per wave = 2 waves × 4-wide = 8 samples max.
+        let s = b.budget(125e6, 256.0, &cost(), None, Some(0.5));
+        assert!(s <= 8);
+    }
+
+    #[test]
+    fn never_below_one_or_above_max() {
+        let b = SampleBudgeter { max_samples: 20, ..Default::default() };
+        let starved = b.budget(125e6, 256.0, &cost(), Some(1.0), Some(0.001));
+        assert_eq!(starved, 1);
+        let generous =
+            b.budget(1e6, 16.0, &SampleCost { energy_j: 1e-6, latency_s: 1e-6, parallelism: 64 }, None, None);
+        assert!(generous <= 20);
+    }
+
+    #[test]
+    fn unreachable_target_saturates_at_max() {
+        let b = SampleBudgeter {
+            coverage_target: 0.999,
+            max_samples: 20,
+            ..Default::default()
+        };
+        assert_eq!(b.budget(125e6, 64.0, &cost(), None, None), 20);
+    }
+}

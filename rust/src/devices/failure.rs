@@ -1,0 +1,141 @@
+//! Failure injection (substrate for Table 11 fault-tolerance evaluation).
+//!
+//! Scenarios are injected into the simulation clock: at `at_s` a device
+//! crashes, hangs (stops responding but does not error), or develops an
+//! elevated kernel-error rate; optionally it recovers after a delay.
+
+use super::spec::DeviceId;
+
+/// What goes wrong.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FailureKind {
+    /// Device disappears instantly (driver crash). Detected by heartbeat.
+    Crash,
+    /// Device stops making progress. Detected by timeout (10× expected).
+    Hang,
+    /// Fraction of kernel launches fail. Detected by error-rate monitor.
+    ErrorRate(f64),
+}
+
+/// One scheduled failure.
+#[derive(Debug, Clone)]
+pub struct FailureScenario {
+    pub device: DeviceId,
+    pub kind: FailureKind,
+    /// Virtual time (s) at which the failure manifests.
+    pub at_s: f64,
+    /// If set, the device becomes recoverable after this many seconds
+    /// (driver reset succeeds).
+    pub recover_after_s: Option<f64>,
+}
+
+/// A set of scheduled failures, queried by the simulation clock.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    scenarios: Vec<FailureScenario>,
+}
+
+impl FailurePlan {
+    pub fn new(mut scenarios: Vec<FailureScenario>) -> Self {
+        scenarios.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FailurePlan { scenarios }
+    }
+
+    pub fn none() -> Self {
+        FailurePlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    pub fn scenarios(&self) -> &[FailureScenario] {
+        &self.scenarios
+    }
+
+    /// Scenarios that trigger in the window `(from_s, to_s]`.
+    pub fn triggered(&self, from_s: f64, to_s: f64) -> Vec<&FailureScenario> {
+        self.scenarios
+            .iter()
+            .filter(|s| s.at_s > from_s && s.at_s <= to_s)
+            .collect()
+    }
+
+    /// Is `device` failed at time `t` under this plan (ignoring
+    /// orchestrator-driven recovery, which the safety monitor owns)?
+    pub fn hard_failed_at(&self, device: &DeviceId, t: f64) -> bool {
+        self.scenarios.iter().any(|s| {
+            &s.device == device
+                && t >= s.at_s
+                && s.recover_after_s.map(|r| t < s.at_s + r).unwrap_or(true)
+                && matches!(s.kind, FailureKind::Crash | FailureKind::Hang)
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FailurePlan {
+        FailurePlan::new(vec![
+            FailureScenario {
+                device: "npu0".into(),
+                kind: FailureKind::Crash,
+                at_s: 10.0,
+                recover_after_s: Some(5.0),
+            },
+            FailureScenario {
+                device: "gpu0".into(),
+                kind: FailureKind::Hang,
+                at_s: 20.0,
+                recover_after_s: None,
+            },
+        ])
+    }
+
+    #[test]
+    fn triggered_window_is_half_open() {
+        let p = plan();
+        assert_eq!(p.triggered(0.0, 9.9).len(), 0);
+        assert_eq!(p.triggered(9.9, 10.0).len(), 1);
+        assert_eq!(p.triggered(10.0, 30.0).len(), 1); // only gpu0 at 20
+    }
+
+    #[test]
+    fn crash_with_recovery_window() {
+        let p = plan();
+        let npu: DeviceId = "npu0".into();
+        assert!(!p.hard_failed_at(&npu, 9.0));
+        assert!(p.hard_failed_at(&npu, 12.0));
+        assert!(!p.hard_failed_at(&npu, 15.1)); // recovered
+    }
+
+    #[test]
+    fn hang_without_recovery_is_permanent() {
+        let p = plan();
+        let gpu: DeviceId = "gpu0".into();
+        assert!(p.hard_failed_at(&gpu, 21.0));
+        assert!(p.hard_failed_at(&gpu, 10_000.0));
+    }
+
+    #[test]
+    fn error_rate_is_not_a_hard_failure() {
+        let p = FailurePlan::new(vec![FailureScenario {
+            device: "gpu0".into(),
+            kind: FailureKind::ErrorRate(0.05),
+            at_s: 0.0,
+            recover_after_s: None,
+        }]);
+        assert!(!p.hard_failed_at(&"gpu0".into(), 1.0));
+    }
+
+    #[test]
+    fn scenarios_sorted_by_time() {
+        let p = FailurePlan::new(vec![
+            FailureScenario { device: "a".into(), kind: FailureKind::Crash, at_s: 5.0, recover_after_s: None },
+            FailureScenario { device: "b".into(), kind: FailureKind::Crash, at_s: 1.0, recover_after_s: None },
+        ]);
+        assert_eq!(p.scenarios()[0].device, "b".into());
+    }
+}

@@ -1,0 +1,189 @@
+//! Device fleets: the paper's edge box plus the homogeneous/cloud
+//! configurations the ablations compare against.
+
+use anyhow::{bail, Result};
+
+use super::spec::{DeviceId, DeviceSpec};
+
+/// Named fleet presets used across the experiments.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FleetPreset {
+    /// The paper's platform: Intel CPU + Intel NPU + Intel iGPU + NVIDIA GPU.
+    EdgeBox,
+    /// Homogeneous baselines (Table 3).
+    CpuOnly,
+    GpuOnly,
+    NpuOnly,
+    IgpuOnly,
+    /// Datacenter regime for the edge-vs-cloud analysis (§5.5).
+    Cloud,
+    /// Multi-vendor stress preset (adds a Qualcomm NPU).
+    MultiVendor,
+}
+
+impl FleetPreset {
+    pub fn all() -> [FleetPreset; 7] {
+        [
+            FleetPreset::EdgeBox,
+            FleetPreset::CpuOnly,
+            FleetPreset::GpuOnly,
+            FleetPreset::NpuOnly,
+            FleetPreset::IgpuOnly,
+            FleetPreset::Cloud,
+            FleetPreset::MultiVendor,
+        ]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            FleetPreset::EdgeBox => "edge-box",
+            FleetPreset::CpuOnly => "cpu-only",
+            FleetPreset::GpuOnly => "gpu-only",
+            FleetPreset::NpuOnly => "npu-only",
+            FleetPreset::IgpuOnly => "igpu-only",
+            FleetPreset::Cloud => "cloud",
+            FleetPreset::MultiVendor => "multi-vendor",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<FleetPreset> {
+        Ok(match s {
+            "edge-box" => FleetPreset::EdgeBox,
+            "cpu-only" => FleetPreset::CpuOnly,
+            "gpu-only" => FleetPreset::GpuOnly,
+            "npu-only" => FleetPreset::NpuOnly,
+            "igpu-only" => FleetPreset::IgpuOnly,
+            "cloud" => FleetPreset::Cloud,
+            "multi-vendor" => FleetPreset::MultiVendor,
+            other => bail!("unknown fleet preset {other:?}"),
+        })
+    }
+}
+
+/// An ordered collection of devices.
+#[derive(Debug, Clone)]
+pub struct Fleet {
+    devices: Vec<DeviceSpec>,
+}
+
+impl Fleet {
+    pub fn new(devices: Vec<DeviceSpec>) -> Result<Self> {
+        if devices.is_empty() {
+            bail!("fleet must contain at least one device");
+        }
+        let mut ids: Vec<&str> = devices.iter().map(|d| d.id.0.as_str()).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        if ids.len() != devices.len() {
+            bail!("duplicate device ids in fleet");
+        }
+        Ok(Fleet { devices })
+    }
+
+    pub fn preset(preset: FleetPreset) -> Fleet {
+        let devices = match preset {
+            FleetPreset::EdgeBox => vec![
+                DeviceSpec::intel_cpu(),
+                DeviceSpec::intel_npu(),
+                DeviceSpec::intel_igpu(),
+                DeviceSpec::nvidia_gpu(),
+            ],
+            FleetPreset::CpuOnly => vec![DeviceSpec::intel_cpu()],
+            FleetPreset::GpuOnly => vec![DeviceSpec::nvidia_gpu()],
+            FleetPreset::NpuOnly => vec![DeviceSpec::intel_npu()],
+            FleetPreset::IgpuOnly => vec![DeviceSpec::intel_igpu()],
+            FleetPreset::Cloud => vec![DeviceSpec::cloud_gpu()],
+            FleetPreset::MultiVendor => vec![
+                DeviceSpec::intel_cpu(),
+                DeviceSpec::intel_npu(),
+                DeviceSpec::intel_igpu(),
+                DeviceSpec::nvidia_gpu(),
+                DeviceSpec::qualcomm_npu(),
+            ],
+        };
+        Fleet::new(devices).expect("presets are valid")
+    }
+
+    pub fn devices(&self) -> &[DeviceSpec] {
+        &self.devices
+    }
+
+    pub fn len(&self) -> usize {
+        self.devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.devices.is_empty()
+    }
+
+    pub fn get(&self, id: &DeviceId) -> Option<&DeviceSpec> {
+        self.devices.iter().find(|d| &d.id == id)
+    }
+
+    pub fn total_memory_gb(&self) -> f64 {
+        self.devices.iter().map(|d| d.mem_gb).sum()
+    }
+
+    pub fn total_tdp_w(&self) -> f64 {
+        self.devices.iter().map(|d| d.tdp_w).sum()
+    }
+
+    /// Devices sorted by energy efficiency (paper Eq. 11), ties broken by
+    /// priority: the preprocessing step of the optimization engine.
+    pub fn ranked_by_efficiency(&self) -> Vec<&DeviceSpec> {
+        let mut out: Vec<&DeviceSpec> = self.devices.iter().collect();
+        out.sort_by(|a, b| {
+            b.flops_per_joule()
+                .total_cmp(&a.flops_per_joule())
+                .then(a.priority.cmp(&b.priority))
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_box_is_multi_vendor() {
+        let f = Fleet::preset(FleetPreset::EdgeBox);
+        assert_eq!(f.len(), 4);
+        let vendors: std::collections::HashSet<_> =
+            f.devices().iter().map(|d| d.vendor).collect();
+        assert!(vendors.len() >= 2, "edge box must span vendors");
+    }
+
+    #[test]
+    fn empty_fleet_rejected() {
+        assert!(Fleet::new(vec![]).is_err());
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let r = Fleet::new(vec![DeviceSpec::intel_cpu(), DeviceSpec::intel_cpu()]);
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn ranking_puts_npu_first_on_edge_box() {
+        let f = Fleet::preset(FleetPreset::EdgeBox);
+        let ranked = f.ranked_by_efficiency();
+        assert_eq!(ranked[0].id, "npu0".into());
+    }
+
+    #[test]
+    fn preset_roundtrip_names() {
+        for p in FleetPreset::all() {
+            assert_eq!(FleetPreset::from_str(p.as_str()).unwrap(), p);
+        }
+        assert!(FleetPreset::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn lookup_by_id() {
+        let f = Fleet::preset(FleetPreset::EdgeBox);
+        assert!(f.get(&"npu0".into()).is_some());
+        assert!(f.get(&"nope".into()).is_none());
+    }
+}

@@ -1,0 +1,27 @@
+//! Heterogeneous device substrate.
+//!
+//! The paper evaluated on a bespoke edge box (Intel Core Ultra 9 285HX +
+//! Intel AI Boost NPU + Intel iGPU + NVIDIA RTX PRO 5000). None of that
+//! silicon is available here, so this module implements the substitution
+//! documented in DESIGN.md §S1: each device is a *roofline machine* with
+//! a utilization-dependent power model and an RC thermal model, calibrated
+//! against real PJRT executions of the same HLO artifacts on this host.
+//!
+//! The simulation preserves exactly the properties the paper's results
+//! depend on: relative device affinity (compute-bound prefill vs
+//! memory-bound decode), power-latency trade-offs, thermal throttling
+//! dynamics, and failure/recovery behaviour.
+
+pub mod failure;
+pub mod fleet;
+pub mod power;
+pub mod roofline;
+pub mod spec;
+pub mod thermal;
+
+pub use failure::{FailureKind, FailurePlan, FailureScenario};
+pub use fleet::{Fleet, FleetPreset};
+pub use power::PowerModel;
+pub use roofline::{Phase, Task};
+pub use spec::{DeviceId, DeviceKind, DeviceSpec, Vendor};
+pub use thermal::ThermalState;

@@ -1,0 +1,210 @@
+//! Roofline execution model (paper Formalism 5).
+//!
+//! A task with `flops` and `bytes` on a device with peak compute `C` and
+//! bandwidth `B` takes `max(flops/C, bytes/B)` plus a fixed launch
+//! overhead. The task is memory-bound iff its arithmetic intensity
+//! `I = flops/bytes` is below the device ridge `C/B`.
+
+use super::spec::DeviceSpec;
+
+/// Which inference phase a task belongs to (distinct hardware affinity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Phase {
+    /// Token + position embedding lookup (tiny, bandwidth-flavored).
+    Embedding,
+    /// Full-prompt attention + MLP: compute-bound, high intensity.
+    Prefill,
+    /// Autoregressive steps: memory-bound, intensity ≈ 1.
+    Decode,
+    /// Final projection to vocabulary logits.
+    LmHead,
+}
+
+impl Phase {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Phase::Embedding => "embedding",
+            Phase::Prefill => "prefill",
+            Phase::Decode => "decode",
+            Phase::LmHead => "lm_head",
+        }
+    }
+}
+
+/// One schedulable unit of compute.
+#[derive(Debug, Clone)]
+pub struct Task {
+    pub phase: Phase,
+    /// Floating-point operations.
+    pub flops: f64,
+    /// Bytes moved through the memory system.
+    pub bytes: f64,
+    /// Resident memory needed to run (GB) — weights + caches.
+    pub mem_gb: f64,
+    /// Number of kernel launches the task decomposes into (decode steps
+    /// pay the launch overhead per token).
+    pub launches: u64,
+}
+
+impl Task {
+    /// Bytes actually streamed on `spec`: decode reads weights in the
+    /// device's native precision (Formalism 2's f(Q) realized per device).
+    pub fn effective_bytes(&self, spec: &DeviceSpec) -> f64 {
+        if self.phase == Phase::Decode {
+            self.bytes * spec.decode_bytes_factor
+        } else {
+            self.bytes
+        }
+    }
+
+    /// Arithmetic intensity in FLOPs/byte (raw, device-independent).
+    pub fn intensity(&self) -> f64 {
+        if self.bytes == 0.0 {
+            return f64::INFINITY;
+        }
+        self.flops / self.bytes
+    }
+
+    /// Is this task memory-bound on `spec` (paper Eq. 7: I < C/B)?
+    pub fn memory_bound_on(&self, spec: &DeviceSpec) -> bool {
+        self.intensity() < spec.ridge_intensity()
+    }
+
+    /// Execution seconds on `spec` at a given throttle factor in (0, 1]
+    /// (thermal shedding scales attainable compute *and* bandwidth).
+    pub fn seconds_on(&self, spec: &DeviceSpec, throttle: f64) -> f64 {
+        let throttle = throttle.clamp(0.05, 1.0);
+        let compute_s = self.flops / (spec.peak_gflops * 1e9 * spec.lambda_effective() * throttle);
+        let memory_s = self.effective_bytes(spec) / (spec.bandwidth_gbs * 1e9 * throttle);
+        let eff_launches = match spec.launch_granularity {
+            super::spec::LaunchGranularity::PerLayer => self.launches.max(1),
+            super::spec::LaunchGranularity::PerGraph => 1,
+        };
+        let overhead_s = eff_launches as f64 * spec.kernel_overhead_us * 1e-6;
+        compute_s.max(memory_s) + overhead_s
+    }
+
+    /// Attained compute utilization in [0, 1] when running on `spec`:
+    /// ratio of useful FLOP time to total roofline time.
+    pub fn compute_utilization(&self, spec: &DeviceSpec) -> f64 {
+        let compute_s = self.flops / (spec.peak_gflops * 1e9 * spec.lambda_effective());
+        let total = self.seconds_on(spec, 1.0);
+        if total == 0.0 {
+            return 0.0;
+        }
+        (compute_s / total).clamp(0.0, 1.0)
+    }
+
+    /// Attained bandwidth utilization in [0, 1].
+    pub fn bandwidth_utilization(&self, spec: &DeviceSpec) -> f64 {
+        let memory_s = self.effective_bytes(spec) / (spec.bandwidth_gbs * 1e9);
+        let total = self.seconds_on(spec, 1.0);
+        if total == 0.0 {
+            return 0.0;
+        }
+        (memory_s / total).clamp(0.0, 1.0)
+    }
+
+    /// Seconds to move this task's activations across the host link when
+    /// it is placed on a different device than its predecessor.
+    pub fn transfer_seconds(&self, from: &DeviceSpec, to: &DeviceSpec, bytes: f64) -> f64 {
+        let link = from.link_gbs.min(to.link_gbs) * 1e9;
+        bytes / link
+    }
+}
+
+impl DeviceSpec {
+    /// Effective fraction of peak compute attainable for transformer
+    /// inference. λ in Formalism 2 is an *energy* multiplier; for compute
+    /// we model NPUs/GPUs reaching a large fraction of peak on MXU-shaped
+    /// matmuls and CPUs being SIMD-limited.
+    pub fn lambda_effective(&self) -> f64 {
+        match self.kind {
+            super::spec::DeviceKind::Cpu => 0.55,
+            super::spec::DeviceKind::Gpu => 0.65,
+            super::spec::DeviceKind::Npu => 0.70,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::spec::DeviceSpec;
+
+    fn decode_task() -> Task {
+        // One decode step of a ~1B model: 2 GFLOPs, 4 GB moved.
+        Task { phase: Phase::Decode, flops: 2e9, bytes: 4e9, mem_gb: 4.5, launches: 1 }
+    }
+
+    fn prefill_task() -> Task {
+        // 512-token prefill of the same model: high intensity.
+        Task { phase: Phase::Prefill, flops: 1.0e12, bytes: 4.2e9, mem_gb: 4.5, launches: 1 }
+    }
+
+    #[test]
+    fn decode_is_memory_bound_everywhere() {
+        let t = decode_task();
+        for spec in [DeviceSpec::intel_cpu(), DeviceSpec::nvidia_gpu(), DeviceSpec::intel_npu()] {
+            assert!(t.memory_bound_on(&spec), "{:?}", spec.id);
+        }
+    }
+
+    #[test]
+    fn prefill_is_compute_bound_on_cpu() {
+        let t = prefill_task();
+        assert!(!t.memory_bound_on(&DeviceSpec::intel_cpu()));
+    }
+
+    #[test]
+    fn gpu_fastest_for_prefill() {
+        let t = prefill_task();
+        let gpu = t.seconds_on(&DeviceSpec::nvidia_gpu(), 1.0);
+        let cpu = t.seconds_on(&DeviceSpec::intel_cpu(), 1.0);
+        let npu = t.seconds_on(&DeviceSpec::intel_npu(), 1.0);
+        assert!(gpu < cpu && gpu < npu);
+    }
+
+    #[test]
+    fn throttle_slows_execution_proportionally() {
+        let t = prefill_task();
+        let spec = DeviceSpec::nvidia_gpu();
+        let full = t.seconds_on(&spec, 1.0);
+        let half = t.seconds_on(&spec, 0.5);
+        assert!(half > 1.8 * full && half < 2.3 * full, "full={full} half={half}");
+    }
+
+    #[test]
+    fn throttle_is_clamped() {
+        let t = decode_task();
+        let spec = DeviceSpec::intel_npu();
+        assert!(t.seconds_on(&spec, 0.0).is_finite());
+        assert!(t.seconds_on(&spec, 2.0) >= t.seconds_on(&spec, 1.0) * 0.99);
+    }
+
+    #[test]
+    fn utilizations_are_complementary() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let d = decode_task();
+        // Memory-bound: bandwidth util high, compute util low.
+        assert!(d.bandwidth_utilization(&spec) > 0.5);
+        assert!(d.compute_utilization(&spec) < 0.2);
+        let p = prefill_task();
+        assert!(p.compute_utilization(&spec) > 0.5);
+    }
+
+    #[test]
+    fn launch_overhead_dominates_tiny_tasks() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let tiny = Task { phase: Phase::Embedding, flops: 1e3, bytes: 1e3, mem_gb: 0.0, launches: 1 };
+        let secs = tiny.seconds_on(&spec, 1.0);
+        assert!(secs >= spec.kernel_overhead_us * 1e-6);
+    }
+
+    #[test]
+    fn zero_bytes_means_infinite_intensity() {
+        let t = Task { phase: Phase::LmHead, flops: 1e6, bytes: 0.0, mem_gb: 0.0, launches: 1 };
+        assert!(t.intensity().is_infinite());
+        assert!(!t.memory_bound_on(&DeviceSpec::intel_cpu()));
+    }
+}

@@ -1,0 +1,371 @@
+//! Device capability vectors (paper Eq. 10):
+//! `d_i = (M_max, B, f, P, n_cores, λ, C_type, T_max, priority)`.
+
+use std::fmt;
+
+/// Stable identifier for a device within a fleet.
+#[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DeviceId(pub String);
+
+impl fmt::Display for DeviceId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl From<&str> for DeviceId {
+    fn from(s: &str) -> Self {
+        DeviceId(s.to_string())
+    }
+}
+
+/// Processor class (paper: CPU / GPU / NPU).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DeviceKind {
+    Cpu,
+    Gpu,
+    Npu,
+}
+
+impl DeviceKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DeviceKind::Cpu => "CPU",
+            DeviceKind::Gpu => "GPU",
+            DeviceKind::Npu => "NPU",
+        }
+    }
+}
+
+/// How a device's software stack dispatches a multi-layer model step:
+/// eager frameworks launch kernels per layer (CUDA/SYCL paths), compiled
+/// NPU pipelines execute one fused graph per step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchGranularity {
+    /// Overhead scales with layer count (eager GPU/CPU stacks).
+    PerLayer,
+    /// One fixed overhead per executed graph (compiled NPU pipelines).
+    PerGraph,
+}
+
+/// Silicon vendor — the paper stresses multi-vendor orchestration
+/// (Intel CPU + Intel NPU + Intel iGPU + NVIDIA dGPU in one box).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Vendor {
+    Intel,
+    Nvidia,
+    Qualcomm,
+    Amd,
+}
+
+impl Vendor {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Vendor::Intel => "Intel",
+            Vendor::Nvidia => "NVIDIA",
+            Vendor::Qualcomm => "Qualcomm",
+            Vendor::Amd => "AMD",
+        }
+    }
+}
+
+/// Full capability vector for one device (paper Eq. 10 + thermal/power
+/// parameters for the RC model).
+#[derive(Debug, Clone)]
+pub struct DeviceSpec {
+    pub id: DeviceId,
+    pub kind: DeviceKind,
+    pub vendor: Vendor,
+    /// M_i^max — usable memory (GB).
+    pub mem_gb: f64,
+    /// B_i — sustained memory bandwidth (GB/s).
+    pub bandwidth_gbs: f64,
+    /// C_i — peak compute (GFLOP/s, f32-equivalent).
+    pub peak_gflops: f64,
+    /// f_i — clock (GHz), informational (peak_gflops is authoritative).
+    pub freq_ghz: f64,
+    pub cores: u32,
+    /// P_i — peak board power (W).
+    pub tdp_w: f64,
+    /// Idle draw (W) while powered but not executing.
+    pub idle_w: f64,
+    /// λ_i — architecture efficiency multiplier from Formalism 2
+    /// (CPU 1.0 baseline; GPU 0.3–0.5; NPU 0.1–0.2).
+    pub lambda: f64,
+    /// Fraction of TDP drawn by the memory system at full bandwidth
+    /// utilization (GPUs pay for HBM even when ALUs idle).
+    pub mem_power_frac: f64,
+    /// T_i^max — junction temperature limit (°C); exceeding risks damage.
+    pub t_max_c: f64,
+    /// Hardware emergency-throttle trip point (°C), below `t_max_c`.
+    pub t_throttle_hw_c: f64,
+    /// Ambient temperature (°C).
+    pub t_ambient_c: f64,
+    /// Thermal resistance junction→ambient (K/W).
+    pub r_th_k_per_w: f64,
+    /// Thermal RC time constant (s).
+    pub tau_th_s: f64,
+    /// Scheduling priority (lower = preferred at equal efficiency).
+    pub priority: u32,
+    /// Fixed per-kernel-launch overhead (µs) — includes the host
+    /// framework/driver stack cost per step, which dominates small-model
+    /// decode on consumer stacks (CUDA launch+sync ≫ compiled NPU
+    /// pipelines). This is the physical mechanism behind the paper's
+    /// per-token latency ordering (GPU 1.73 ms vs NPU-led 1.34 ms).
+    pub kernel_overhead_us: f64,
+    /// Whether `kernel_overhead_us` applies per layer or per graph.
+    pub launch_granularity: LaunchGranularity,
+    /// Native-precision factor for decode weight streaming (the f(Q) of
+    /// Formalism 2 realized in hardware): NPUs execute INT8 natively
+    /// (0.25× fp32 bytes), GPUs/CPUs fp16/bf16 paths (0.5×).
+    pub decode_bytes_factor: f64,
+    /// Host interconnect bandwidth (GB/s) for cross-device transfers.
+    pub link_gbs: f64,
+}
+
+impl DeviceSpec {
+    /// Energy efficiency (paper Eq. 11): peak FLOPs per joule at TDP.
+    pub fn flops_per_joule(&self) -> f64 {
+        self.peak_gflops * 1e9 / self.tdp_w
+    }
+
+    /// Roofline ridge point C/B (FLOPs per byte): tasks with lower
+    /// arithmetic intensity are memory-bound on this device.
+    pub fn ridge_intensity(&self) -> f64 {
+        self.peak_gflops / self.bandwidth_gbs
+    }
+
+    /// Bytes movable per joule at peak bandwidth — the figure of merit
+    /// for memory-bound decode.
+    pub fn bytes_per_joule(&self) -> f64 {
+        // Memory-bound execution draws idle + memory-system power.
+        let mem_power = self.idle_w + self.mem_power_frac * (self.tdp_w - self.idle_w);
+        self.bandwidth_gbs * 1e9 / mem_power
+    }
+
+    /// Steady-state junction temperature at a constant power draw.
+    pub fn steady_temp_c(&self, power_w: f64) -> f64 {
+        self.t_ambient_c + power_w * self.r_th_k_per_w
+    }
+
+    /// The paper's edge platform: Intel Core Ultra 9 285HX.
+    pub fn intel_cpu() -> DeviceSpec {
+        DeviceSpec {
+            id: "cpu0".into(),
+            kind: DeviceKind::Cpu,
+            vendor: Vendor::Intel,
+            mem_gb: 127.0,
+            bandwidth_gbs: 100.0,
+            peak_gflops: 700.0,
+            freq_ghz: 2.8,
+            cores: 8,
+            tdp_w: 45.0,
+            idle_w: 6.0,
+            lambda: 1.0,
+            mem_power_frac: 0.5,
+            t_max_c: 100.0,
+            t_throttle_hw_c: 95.0,
+            t_ambient_c: 25.0,
+            r_th_k_per_w: 0.9,
+            tau_th_s: 18.0,
+            priority: 2,
+            kernel_overhead_us: 130.0,
+            launch_granularity: LaunchGranularity::PerLayer,
+            decode_bytes_factor: 0.5,
+            link_gbs: 30.0,
+        }
+    }
+
+    /// Intel AI Boost NPU (25 W TDP, bandwidth-lean but extremely
+    /// power-efficient — the decode workhorse).
+    pub fn intel_npu() -> DeviceSpec {
+        DeviceSpec {
+            id: "npu0".into(),
+            kind: DeviceKind::Npu,
+            vendor: Vendor::Intel,
+            mem_gb: 20.0,
+            bandwidth_gbs: 120.0,
+            peak_gflops: 10_000.0,
+            freq_ghz: 1.4,
+            cores: 2,
+            tdp_w: 25.0,
+            idle_w: 1.0,
+            lambda: 0.15,
+            mem_power_frac: 0.25,
+            t_max_c: 85.0,
+            t_throttle_hw_c: 80.0,
+            t_ambient_c: 25.0,
+            r_th_k_per_w: 1.6,
+            tau_th_s: 12.0,
+            priority: 0,
+            kernel_overhead_us: 300.0,
+            launch_granularity: LaunchGranularity::PerGraph,
+            decode_bytes_factor: 0.5,
+            link_gbs: 25.0,
+        }
+    }
+
+    /// Intel Graphics iGPU (shared memory, mid efficiency).
+    pub fn intel_igpu() -> DeviceSpec {
+        DeviceSpec {
+            id: "igpu0".into(),
+            kind: DeviceKind::Gpu,
+            vendor: Vendor::Intel,
+            mem_gb: 72.7,
+            bandwidth_gbs: 110.0,
+            peak_gflops: 6_000.0,
+            freq_ghz: 2.0,
+            cores: 128,
+            tdp_w: 60.0,
+            idle_w: 4.0,
+            lambda: 0.45,
+            mem_power_frac: 0.4,
+            t_max_c: 95.0,
+            t_throttle_hw_c: 90.0,
+            t_ambient_c: 25.0,
+            r_th_k_per_w: 0.8,
+            tau_th_s: 15.0,
+            priority: 1,
+            kernel_overhead_us: 250.0,
+            launch_granularity: LaunchGranularity::PerLayer,
+            decode_bytes_factor: 0.5,
+            link_gbs: 40.0,
+        }
+    }
+
+    /// NVIDIA RTX PRO 5000 Blackwell (compute monster, power hog).
+    pub fn nvidia_gpu() -> DeviceSpec {
+        DeviceSpec {
+            id: "gpu0".into(),
+            kind: DeviceKind::Gpu,
+            vendor: Vendor::Nvidia,
+            mem_gb: 96.2,
+            bandwidth_gbs: 900.0,
+            peak_gflops: 60_000.0,
+            freq_ghz: 2.6,
+            cores: 12_000,
+            tdp_w: 300.0,
+            idle_w: 35.0,
+            lambda: 0.4,
+            mem_power_frac: 0.75,
+            t_max_c: 95.0,
+            t_throttle_hw_c: 85.0,
+            t_ambient_c: 25.0,
+            r_th_k_per_w: 0.213,
+            tau_th_s: 25.0,
+            priority: 3,
+            kernel_overhead_us: 450.0,
+            launch_granularity: LaunchGranularity::PerLayer,
+            decode_bytes_factor: 0.5,
+            link_gbs: 32.0,
+        }
+    }
+
+    /// A Qualcomm-style NPU preset (future-work hardware in the paper;
+    /// used by the robustness ablations).
+    pub fn qualcomm_npu() -> DeviceSpec {
+        DeviceSpec {
+            id: "qnpu0".into(),
+            kind: DeviceKind::Npu,
+            vendor: Vendor::Qualcomm,
+            mem_gb: 16.0,
+            bandwidth_gbs: 75.0,
+            peak_gflops: 15_000.0,
+            freq_ghz: 1.0,
+            cores: 4,
+            tdp_w: 20.0,
+            idle_w: 0.8,
+            lambda: 0.12,
+            mem_power_frac: 0.25,
+            t_max_c: 80.0,
+            t_throttle_hw_c: 75.0,
+            t_ambient_c: 25.0,
+            r_th_k_per_w: 1.8,
+            tau_th_s: 10.0,
+            priority: 0,
+            kernel_overhead_us: 350.0,
+            launch_granularity: LaunchGranularity::PerGraph,
+            decode_bytes_factor: 0.5,
+            link_gbs: 20.0,
+        }
+    }
+
+    /// Datacenter-class GPU used by the edge-vs-cloud regime analysis
+    /// (§5.5): more of everything, including power.
+    pub fn cloud_gpu() -> DeviceSpec {
+        DeviceSpec {
+            id: "cloud-gpu0".into(),
+            kind: DeviceKind::Gpu,
+            vendor: Vendor::Nvidia,
+            mem_gb: 192.0,
+            bandwidth_gbs: 3_350.0,
+            peak_gflops: 495_000.0,
+            freq_ghz: 1.8,
+            cores: 16_896,
+            tdp_w: 700.0,
+            idle_w: 90.0,
+            lambda: 0.35,
+            mem_power_frac: 0.7,
+            t_max_c: 90.0,
+            t_throttle_hw_c: 85.0,
+            t_ambient_c: 22.0,
+            r_th_k_per_w: 0.06,
+            tau_th_s: 40.0,
+            priority: 5,
+            kernel_overhead_us: 200.0,
+            launch_granularity: LaunchGranularity::PerGraph,
+            decode_bytes_factor: 0.5,
+            link_gbs: 64.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn npu_is_most_power_efficient_for_memory_bound_work() {
+        let npu = DeviceSpec::intel_npu();
+        let gpu = DeviceSpec::nvidia_gpu();
+        let cpu = DeviceSpec::intel_cpu();
+        assert!(npu.bytes_per_joule() > gpu.bytes_per_joule());
+        assert!(npu.bytes_per_joule() > cpu.bytes_per_joule());
+    }
+
+    #[test]
+    fn gpu_has_highest_peak_compute() {
+        let gpu = DeviceSpec::nvidia_gpu();
+        for other in [DeviceSpec::intel_cpu(), DeviceSpec::intel_npu(), DeviceSpec::intel_igpu()] {
+            assert!(gpu.peak_gflops > other.peak_gflops);
+        }
+    }
+
+    #[test]
+    fn ridge_point_orders_devices() {
+        // CPU has lowest ridge: it becomes compute-bound earliest.
+        let cpu = DeviceSpec::intel_cpu();
+        let gpu = DeviceSpec::nvidia_gpu();
+        assert!(cpu.ridge_intensity() < gpu.ridge_intensity());
+    }
+
+    #[test]
+    fn gpu_at_tdp_would_overheat_without_protection() {
+        // The thermal-protection experiment (Table 10) needs the GPU to
+        // exceed its limit at sustained full power.
+        let gpu = DeviceSpec::nvidia_gpu();
+        assert!(gpu.steady_temp_c(gpu.tdp_w) > 0.85 * gpu.t_max_c);
+    }
+
+    #[test]
+    fn flops_per_joule_ranking_follows_the_paper() {
+        // Paper Eq. 11 ranking: NPU most efficient, then iGPU/dGPU, CPU last.
+        let order = [
+            DeviceSpec::intel_npu().flops_per_joule(),
+            DeviceSpec::nvidia_gpu().flops_per_joule(),
+            DeviceSpec::intel_igpu().flops_per_joule(),
+            DeviceSpec::intel_cpu().flops_per_joule(),
+        ];
+        assert!(order[0] > order[1] && order[1] > order[2] && order[2] > order[3]);
+    }
+}

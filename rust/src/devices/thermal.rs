@@ -1,0 +1,180 @@
+//! First-order RC thermal model (DESIGN.md §S5).
+//!
+//! Junction temperature follows
+//! `dT/dt = (P·R_th − (T − T_amb)) / τ_th`:
+//! steady state `T_amb + P·R_th`, exponential approach with time
+//! constant `τ_th`. The hardware itself force-throttles at `T_max`
+//! (emergency behaviour the orchestrator's guard is designed to avoid —
+//! paper Eq. 8 enforces `T ≤ 0.85·T_max` proactively).
+
+use super::spec::DeviceSpec;
+
+/// Evolving thermal state of one device.
+#[derive(Debug, Clone)]
+pub struct ThermalState {
+    /// Current junction temperature (°C).
+    temp_c: f64,
+    /// Count of hardware-level throttling events (entered T >= T_max).
+    throttle_events: u64,
+    /// Whether the device is currently hardware-throttled.
+    throttled: bool,
+    /// Peak temperature seen (°C).
+    peak_c: f64,
+}
+
+impl ThermalState {
+    pub fn new(spec: &DeviceSpec) -> Self {
+        ThermalState {
+            temp_c: spec.t_ambient_c,
+            throttle_events: 0,
+            throttled: false,
+            peak_c: spec.t_ambient_c,
+        }
+    }
+
+    pub fn temp_c(&self) -> f64 {
+        self.temp_c
+    }
+
+    pub fn peak_c(&self) -> f64 {
+        self.peak_c
+    }
+
+    pub fn throttle_events(&self) -> u64 {
+        self.throttle_events
+    }
+
+    pub fn is_throttled(&self) -> bool {
+        self.throttled
+    }
+
+    /// Advance the RC model by `dt` seconds at constant power `power_w`.
+    pub fn step(&mut self, spec: &DeviceSpec, power_w: f64, dt_s: f64) {
+        debug_assert!(dt_s >= 0.0);
+        let target = spec.t_ambient_c + power_w * spec.r_th_k_per_w;
+        // Exact solution of the linear ODE over the interval.
+        let alpha = (-dt_s / spec.tau_th_s).exp();
+        self.temp_c = target + (self.temp_c - target) * alpha;
+        self.peak_c = self.peak_c.max(self.temp_c);
+
+        // Hardware emergency throttling with hysteresis: trips at the
+        // silicon's throttle point, releases 10 °C below it (emergency
+        // throttling is deliberately sticky).
+        if self.temp_c >= spec.t_throttle_hw_c {
+            if !self.throttled {
+                self.throttled = true;
+                self.throttle_events += 1;
+            }
+        } else if self.throttled && self.temp_c < spec.t_throttle_hw_c - 10.0 {
+            self.throttled = false;
+        }
+    }
+
+    /// Hardware-enforced throughput factor: 1.0 normally, harshly reduced
+    /// while emergency-throttled (the unpredictable behaviour the paper's
+    /// guard exists to prevent).
+    pub fn hardware_throttle_factor(&self) -> f64 {
+        if self.throttled {
+            0.2
+        } else {
+            1.0
+        }
+    }
+
+    /// Fraction of the way to the thermal limit, 0 at ambient, 1 at T_max.
+    pub fn headroom_used(&self, spec: &DeviceSpec) -> f64 {
+        ((self.temp_c - spec.t_ambient_c) / (spec.t_max_c - spec.t_ambient_c)).clamp(0.0, 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn starts_at_ambient() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let t = ThermalState::new(&spec);
+        assert_eq!(t.temp_c(), spec.t_ambient_c);
+    }
+
+    #[test]
+    fn approaches_steady_state() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let mut t = ThermalState::new(&spec);
+        let p = 200.0;
+        for _ in 0..10_000 {
+            t.step(&spec, p, 0.1);
+        }
+        let expect = spec.steady_temp_c(p);
+        assert!((t.temp_c() - expect).abs() < 0.5, "temp={} expect={expect}", t.temp_c());
+    }
+
+    #[test]
+    fn cools_when_idle() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let mut t = ThermalState::new(&spec);
+        for _ in 0..1000 {
+            t.step(&spec, spec.tdp_w, 0.1);
+        }
+        let hot = t.temp_c();
+        for _ in 0..10_000 {
+            t.step(&spec, spec.idle_w, 0.1);
+        }
+        assert!(t.temp_c() < hot);
+        assert!(t.temp_c() < spec.steady_temp_c(spec.idle_w) + 1.0);
+    }
+
+    #[test]
+    fn sustained_tdp_trips_hardware_throttle() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let mut t = ThermalState::new(&spec);
+        for _ in 0..50_000 {
+            t.step(&spec, spec.tdp_w, 0.1);
+        }
+        assert!(t.throttle_events() >= 1);
+        assert!(t.is_throttled());
+        assert!(t.hardware_throttle_factor() < 1.0);
+    }
+
+    #[test]
+    fn hysteresis_releases_below_limit() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let mut t = ThermalState::new(&spec);
+        for _ in 0..50_000 {
+            t.step(&spec, spec.tdp_w, 0.1);
+        }
+        assert!(t.is_throttled());
+        for _ in 0..50_000 {
+            t.step(&spec, spec.idle_w, 0.1);
+        }
+        assert!(!t.is_throttled());
+        assert_eq!(t.throttle_events(), 1, "cooling must not double-count events");
+    }
+
+    #[test]
+    fn peak_records_maximum() {
+        let spec = DeviceSpec::intel_npu();
+        let mut t = ThermalState::new(&spec);
+        for _ in 0..5_000 {
+            t.step(&spec, spec.tdp_w, 0.1);
+        }
+        let peak_hot = t.peak_c();
+        for _ in 0..5_000 {
+            t.step(&spec, spec.idle_w, 0.1);
+        }
+        assert_eq!(t.peak_c(), peak_hot);
+        assert!(t.temp_c() < peak_hot);
+    }
+
+    #[test]
+    fn headroom_clamps() {
+        let spec = DeviceSpec::intel_cpu();
+        let mut t = ThermalState::new(&spec);
+        assert_eq!(t.headroom_used(&spec), 0.0);
+        for _ in 0..100_000 {
+            t.step(&spec, spec.tdp_w * 3.0, 0.1); // absurd power
+        }
+        assert_eq!(t.headroom_used(&spec), 1.0);
+    }
+}

@@ -1,0 +1,157 @@
+//! Breakdown experiments: Table 7 / Figure 2 (energy), Table 8 /
+//! Figure 3 (latency), Table 9 / Figure 4 (device utilization).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::workload::datasets::{Dataset, ModelFamily};
+
+use super::report::{f1, f2, pct, Table};
+use super::runner::{pct_delta, run_config, run_homogeneous};
+
+/// Table 7 (+ Figure 2): energy breakdown, Standard vs Energy-Aware.
+pub fn table7(seed: u64) -> Result<Table> {
+    let std_m = run_homogeneous(ModelFamily::Gpt2, Dataset::WikiText103, FleetPreset::GpuOnly, seed)?;
+    let ea_m = run_config(&ExperimentConfig {
+        seed,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    })?;
+    let mut table = Table::new(
+        "t07",
+        "Detailed energy breakdown: Standard vs Energy-Aware (GPT-2)",
+        &["Metric", "Standard", "Energy-Aware", "Δ"],
+    );
+    let rows: Vec<(&str, f64, f64)> = vec![
+        ("Total Energy (J)", std_m.energy_kj * 1e3, ea_m.energy_kj * 1e3),
+        ("Prefill Energy (J)", std_m.prefill_energy_kj * 1e3, ea_m.prefill_energy_kj * 1e3),
+        ("Decode Energy (J)", std_m.decode_energy_kj * 1e3, ea_m.decode_energy_kj * 1e3),
+        ("Overhead Energy (J)", std_m.overhead_energy_kj * 1e3, ea_m.overhead_energy_kj * 1e3),
+        ("Avg Power (W)", std_m.power_w, ea_m.power_w),
+        (
+            "Energy per Token (J)",
+            std_m.energy_kj * 1e3 / std_m.tokens.max(1) as f64,
+            ea_m.energy_kj * 1e3 / ea_m.tokens.max(1) as f64,
+        ),
+    ];
+    for (name, s, e) in rows {
+        table.row(vec![name.to_string(), f1(s), f1(e), pct(pct_delta(e, s))]);
+    }
+    table.note("paper Table 7: −47.8% total, decode phase saves most (−55.4%), power −79.2%");
+    Ok(table)
+}
+
+/// Table 8 (+ Figure 3): latency breakdown CPU-only vs heterogeneous.
+pub fn table8(seed: u64) -> Result<Table> {
+    let cpu_m = run_homogeneous(ModelFamily::Gpt2, Dataset::WikiText103, FleetPreset::CpuOnly, seed)?;
+    let het_m = run_config(&ExperimentConfig {
+        seed,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    })?;
+    // Decompose mean per-token latency into compute vs overhead using the
+    // roofline: overhead = launch cost share.
+    let decompose = |m: &super::runner::RunMetrics, fleet: FleetPreset| -> (f64, f64, f64) {
+        let fleet = Fleet::preset(fleet);
+        // Representative overhead: utilization-weighted kernel overhead.
+        let mut overhead_ms = 0.0;
+        let mut weight = 0.0;
+        for d in fleet.devices() {
+            let u = m.utilization.get(&d.id.0).copied().unwrap_or(0.0);
+            overhead_ms += d.kernel_overhead_us * 1e-3 * u;
+            weight += u;
+        }
+        let overhead_ms = if weight > 0.0 { overhead_ms / weight } else { 0.0 };
+        let compute_ms = (m.latency_ms - overhead_ms).max(0.0);
+        // Memory transfer: the IO share (tiny for homogeneous).
+        let transfer_ms = if fleet.len() > 1 { 0.1 * m.latency_ms } else { 0.02 * m.latency_ms };
+        (compute_ms - transfer_ms.min(compute_ms), transfer_ms, overhead_ms)
+    };
+    let (c_cpu, t_cpu, o_cpu) = decompose(&cpu_m, FleetPreset::CpuOnly);
+    let (c_het, t_het, o_het) = decompose(&het_m, FleetPreset::EdgeBox);
+    let mut table = Table::new(
+        "t08",
+        "Latency breakdown (per decode token): CPU-only vs heterogeneous",
+        &["Component", "CPU-Only (ms)", "Heterogeneous (ms)", "Δ"],
+    );
+    for (name, a, b) in [
+        ("Compute Time", c_cpu, c_het),
+        ("Memory Transfer", t_cpu, t_het),
+        ("Controller Overhead", o_cpu, o_het),
+        ("Total Latency", cpu_m.latency_ms, het_m.latency_ms),
+    ] {
+        table.row(vec![name.to_string(), f2(a), f2(b), pct(pct_delta(b, a))]);
+    }
+    table.note("paper Table 8: CPU-only 20.7 ms vs heterogeneous 8.6 ms (−58.5%); controller overhead rises, compute falls");
+    Ok(table)
+}
+
+/// Table 9 / Figure 4: device utilization snapshot during orchestration.
+pub fn table9(seed: u64) -> Result<Table> {
+    let m = run_config(&ExperimentConfig {
+        seed,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    })?;
+    let mut table = Table::new(
+        "t09",
+        "Real-time device utilization during QEIL orchestration",
+        &["Device", "Vendor", "Util.", "Peak Temp (°C)", "Role"],
+    );
+    let fleet = Fleet::preset(FleetPreset::EdgeBox);
+    for d in fleet.devices() {
+        let util = m.utilization.get(&d.id.0).copied().unwrap_or(0.0);
+        let temp = m.peak_temp_c.get(&d.id.0).copied().unwrap_or(0.0);
+        let role = match d.id.0.as_str() {
+            "cpu0" => "Orchestration, I/O, decode overflow",
+            "npu0" => "Decode (memory-bound)",
+            "igpu0" => "Decode overflow",
+            "gpu0" => "Prefill (compute-bound)",
+            _ => "—",
+        };
+        table.row(vec![
+            d.id.0.clone(),
+            d.vendor.as_str().to_string(),
+            format!("{:.0}%", util * 100.0),
+            f1(temp),
+            role.to_string(),
+        ]);
+    }
+    table.note("paper Table 9/Fig 4: multi-vendor parallel execution; GPU temp well below the 85°C throttle point");
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_breakdown_decode_dominates_savings() {
+        let t = table7(0).unwrap();
+        // Row 0 total, row 2 decode: both must be negative deltas, decode
+        // at least as large a reduction as prefill (paper's key insight).
+        let total_delta: f64 =
+            t.rows[0][3].trim_end_matches('%').parse().unwrap();
+        let decode_delta: f64 =
+            t.rows[2][3].trim_end_matches('%').parse().unwrap();
+        assert!(total_delta < -20.0, "total energy must fall: {total_delta}");
+        assert!(decode_delta < -20.0, "decode energy must fall: {decode_delta}");
+    }
+
+    #[test]
+    fn heterogeneous_beats_cpu_only_latency() {
+        let t = table8(0).unwrap();
+        let last = t.rows.last().unwrap();
+        let cpu: f64 = last[1].parse().unwrap();
+        let het: f64 = last[2].parse().unwrap();
+        assert!(het < cpu, "heterogeneous {het} must beat CPU-only {cpu}");
+    }
+
+    #[test]
+    fn utilization_snapshot_has_all_devices_cool() {
+        let t = table9(0).unwrap();
+        assert_eq!(t.rows.len(), 4);
+        for row in &t.rows {
+            let temp: f64 = row[3].parse().unwrap();
+            assert!(temp < 85.0, "{}: {temp}°C", row[0]);
+        }
+    }
+}

@@ -1,0 +1,156 @@
+//! Table 4: component-contribution analysis — progressively enabling
+//! QEIL features on GPT-2, and Table 5: variance across repeated runs.
+
+use anyhow::Result;
+
+use crate::config::{ExecMode, ExperimentConfig, OrchestratorFeatures};
+use crate::devices::fleet::FleetPreset;
+use crate::scaling::stats::summarize;
+use crate::workload::datasets::{Dataset, ModelFamily};
+
+use super::report::{f1, f2, f3, Table};
+use super::runner::run_config;
+
+/// The six progressive configurations of Table 4.
+fn ladder() -> Vec<(&'static str, FleetPreset, ExecMode, OrchestratorFeatures)> {
+    let off = OrchestratorFeatures::baseline();
+    vec![
+        ("Baseline (GPU-only)", FleetPreset::GpuOnly, ExecMode::Standard, off),
+        (
+            "+ Device Ranking",
+            FleetPreset::EdgeBox,
+            ExecMode::Standard,
+            OrchestratorFeatures { device_ranking: true, ..off },
+        ),
+        (
+            "+ Prefill/Decode Split",
+            FleetPreset::EdgeBox,
+            ExecMode::EnergyAware,
+            OrchestratorFeatures { device_ranking: true, prefill_decode_split: true, ..off },
+        ),
+        (
+            "+ Greedy Layer Assignment",
+            FleetPreset::EdgeBox,
+            ExecMode::EnergyAware,
+            OrchestratorFeatures {
+                device_ranking: true,
+                prefill_decode_split: true,
+                greedy_layer_assignment: true,
+                ..off
+            },
+        ),
+        (
+            "+ Adaptive Sample Budget",
+            FleetPreset::EdgeBox,
+            ExecMode::EnergyAware,
+            OrchestratorFeatures {
+                device_ranking: true,
+                prefill_decode_split: true,
+                greedy_layer_assignment: true,
+                adaptive_sample_budget: true,
+                ..off
+            },
+        ),
+        (
+            "+ Safety Constraints",
+            FleetPreset::EdgeBox,
+            ExecMode::EnergyAware,
+            OrchestratorFeatures::full(),
+        ),
+    ]
+}
+
+/// Table 4: incremental effect of each feature.
+pub fn table4(seed: u64) -> Result<Table> {
+    let mut table = Table::new(
+        "t04",
+        "Component contribution analysis (GPT-2, WikiText-103)",
+        &["Configuration", "Pass@k (%)", "Energy (kJ)", "IPW"],
+    );
+    for (label, fleet, mode, features) in ladder() {
+        let cfg = ExperimentConfig {
+            family: ModelFamily::Gpt2,
+            dataset: Dataset::WikiText103,
+            fleet,
+            mode,
+            features,
+            seed,
+            ..Default::default()
+        };
+        let m = run_config(&cfg)?;
+        table.row(vec![label.to_string(), f1(m.pass_at_k_pct), f1(m.energy_kj), f3(m.ipw)]);
+    }
+    table.note("paper Table 4: 59.5→70.0% pass@k, 43.1→22.5 kJ, 0.149→0.718 IPW; prefill/decode split is the largest single contributor");
+    Ok(table)
+}
+
+/// Table 5: variance across independent runs (seeded replicates).
+pub fn table5(runs: usize, base_seed: u64) -> Result<Table> {
+    let mut pass = Vec::new();
+    let mut energy = Vec::new();
+    let mut latency = Vec::new();
+    let mut ipw_v = Vec::new();
+    let mut power = Vec::new();
+    for i in 0..runs {
+        let cfg = ExperimentConfig {
+            seed: base_seed + i as u64,
+            ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+        };
+        let m = run_config(&cfg)?;
+        pass.push(m.pass_at_k_pct);
+        energy.push(m.energy_kj);
+        latency.push(m.latency_ms);
+        ipw_v.push(m.ipw);
+        power.push(m.power_w);
+    }
+    let mut table = Table::new(
+        "t05",
+        &format!("Variance across {runs} independent runs (GPT-2, QEIL energy-aware)"),
+        &["Metric", "Mean", "Std Dev", "CV (%)"],
+    );
+    for (name, xs) in [
+        ("Pass@k (%)", &pass),
+        ("Energy (kJ)", &energy),
+        ("Latency (ms)", &latency),
+        ("IPW", &ipw_v),
+        ("Power (W)", &power),
+    ] {
+        let s = summarize(xs);
+        table.row(vec![name.to_string(), f2(s.mean), f3(s.std_dev), f2(s.cv_percent())]);
+    }
+    table.note("paper Table 5: all CV < 2.5% (different seeds vary workload + oracle draws)");
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder_full_stack_beats_baseline() {
+        let t = table4(0).unwrap();
+        let ipws: Vec<f64> = t.rows.iter().map(|r| r[3].parse().unwrap()).collect();
+        let passes: Vec<f64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        let energies: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        // The full stack must decisively beat the baseline on all three
+        // axes. (Unlike the paper's strictly-monotone ladder, device
+        // ranking alone produces an NPU-only configuration whose very low
+        // power spikes IPW before the split recovers coverage — an honest
+        // artifact of a physically grounded power model.)
+        assert!(
+            ipws.last().unwrap() > &(ipws[0] * 2.0),
+            "full stack must at least double IPW: {ipws:?}"
+        );
+        assert!(passes.last().unwrap() > &(passes[0] + 5.0), "coverage: {passes:?}");
+        assert!(energies.last().unwrap() < &(energies[0] * 0.6), "energy: {energies:?}");
+    }
+
+    #[test]
+    fn variance_is_low() {
+        let t = table5(5, 100).unwrap();
+        for row in &t.rows {
+            let cv: f64 = row[3].parse().unwrap();
+            assert!(cv < 12.0, "{}: CV {cv}% too high", row[0]);
+        }
+    }
+}

@@ -1,0 +1,185 @@
+//! Cross-dataset experiments: Table 13 (GSM8K), Table 14 (ARC-Challenge),
+//! Table 15 (consistency summary), plus the §5.5 edge-vs-cloud regime.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::devices::fleet::FleetPreset;
+use crate::workload::datasets::{Dataset, ModelFamily};
+
+use super::report::{f1, f2, f3, pct, pp, Table};
+use super::runner::{pct_delta, run_config, run_homogeneous, run_pair};
+
+/// Aggregate deltas captured per dataset (feeds Table 15).
+#[derive(Debug, Clone, Default)]
+pub struct DatasetAggregate {
+    pub d_pass_pp: f64,
+    pub d_energy_pct: f64,
+    pub d_ipw_pct: f64,
+    pub d_latency_pct: f64,
+    pub d_ppp_pct: f64,
+}
+
+/// Shared engine for Tables 13/14 (and 16's layout on other datasets).
+pub fn cross_dataset_table(id: &str, dataset: Dataset, seed: u64) -> Result<(Table, DatasetAggregate)> {
+    let title = format!(
+        "Cross-dataset evaluation on {} ({})",
+        dataset.as_str(),
+        match dataset {
+            Dataset::Gsm8k => "mathematical reasoning",
+            Dataset::ArcChallenge => "scientific reasoning",
+            Dataset::WikiText103 => "language modeling",
+        }
+    );
+    let mut table = Table::new(
+        id,
+        &title,
+        &["Model", "Exec Type", "Accuracy (%)", "Pass@k (%)", "Energy (kJ)", "IPW", "Latency (ms)", "PPP"],
+    );
+    let mut agg = DatasetAggregate::default();
+    let n = ModelFamily::all().len() as f64;
+    for family in ModelFamily::all() {
+        let (s, e) = run_pair(family, dataset, seed)?;
+        for (label, m) in [("Standard", &s), ("Energy-Aware", &e)] {
+            table.row(vec![
+                family.display().to_string(),
+                label.to_string(),
+                f1(m.accuracy_pct),
+                f1(m.pass_at_k_pct),
+                f1(m.energy_kj),
+                f3(m.ipw),
+                f2(m.latency_ms),
+                f2(m.ppp),
+            ]);
+        }
+        table.row(vec![
+            family.display().to_string(),
+            "Improvement".to_string(),
+            pp(e.accuracy_pct - s.accuracy_pct),
+            pp(e.pass_at_k_pct - s.pass_at_k_pct),
+            pct(pct_delta(e.energy_kj, s.energy_kj)),
+            pct(pct_delta(e.ipw, s.ipw)),
+            pct(pct_delta(e.latency_ms, s.latency_ms)),
+            pct(pct_delta(e.ppp, s.ppp)),
+        ]);
+        agg.d_pass_pp += (e.pass_at_k_pct - s.pass_at_k_pct) / n;
+        agg.d_energy_pct += pct_delta(e.energy_kj, s.energy_kj) / n;
+        agg.d_ipw_pct += pct_delta(e.ipw, s.ipw) / n;
+        agg.d_latency_pct += pct_delta(e.latency_ms, s.latency_ms) / n;
+        agg.d_ppp_pct += pct_delta(e.ppp, s.ppp) / n;
+    }
+    table.row(vec![
+        "Mean Aggregate".into(),
+        "".into(),
+        "—".into(),
+        pp(agg.d_pass_pp),
+        pct(agg.d_energy_pct),
+        pct(agg.d_ipw_pct),
+        pct(agg.d_latency_pct),
+        pct(agg.d_ppp_pct),
+    ]);
+    Ok((table, agg))
+}
+
+/// Table 13: GSM8K.
+pub fn table13(seed: u64) -> Result<Table> {
+    let (mut t, _) = cross_dataset_table("t13", Dataset::Gsm8k, seed)?;
+    t.note("paper Table 13 means: +9.1pp pass@k, −48.8% energy, +236% IPW, −16.8% latency, +54.5% PPP");
+    Ok(t)
+}
+
+/// Table 14: ARC-Challenge.
+pub fn table14(seed: u64) -> Result<Table> {
+    let (mut t, _) = cross_dataset_table("t14", Dataset::ArcChallenge, seed)?;
+    t.note("paper Table 14 means: +9.1pp pass@k, −49.7% energy, +255% IPW, −15.7% latency, +49.0% PPP");
+    Ok(t)
+}
+
+/// Table 15: cross-dataset consistency summary.
+pub fn table15(seed: u64) -> Result<Table> {
+    let mut table = Table::new(
+        "t15",
+        "Cross-dataset consistency: mean improvements across benchmarks",
+        &["Metric", "WikiText", "GSM8K", "ARC-C"],
+    );
+    let (_, wiki) = cross_dataset_table("t15a", Dataset::WikiText103, seed)?;
+    let (_, gsm) = cross_dataset_table("t15b", Dataset::Gsm8k, seed)?;
+    let (_, arc) = cross_dataset_table("t15c", Dataset::ArcChallenge, seed)?;
+    let rows: Vec<(&str, fn(&DatasetAggregate) -> f64)> = vec![
+        ("ΔPass@k (pp)", |a| a.d_pass_pp),
+        ("ΔEnergy (%)", |a| a.d_energy_pct),
+        ("ΔIPW (%)", |a| a.d_ipw_pct),
+        ("ΔLatency (%)", |a| a.d_latency_pct),
+        ("ΔPPP (%)", |a| a.d_ppp_pct),
+    ];
+    for (name, get) in rows {
+        table.row(vec![
+            name.to_string(),
+            format!("{:+.1}", get(&wiki)),
+            format!("{:+.1}", get(&gsm)),
+            format!("{:+.1}", get(&arc)),
+        ]);
+    }
+    table.note("paper Table 15: pass@k stable at +9.0±0.1pp, energy −49.1±0.5% across datasets");
+    Ok(table)
+}
+
+/// §5.5 extra: edge-vs-cloud regime crossover.
+pub fn regimes(seed: u64) -> Result<Table> {
+    let mut table = Table::new(
+        "regimes",
+        "Edge vs cloud inference regimes (§5.5): energy per query by model scale",
+        &["Model", "Edge QEIL (J/query)", "Cloud GPU (J/query)", "Edge wins?"],
+    );
+    for family in ModelFamily::all() {
+        let edge = run_config(&ExperimentConfig {
+            seed,
+            ..ExperimentConfig::energy_aware(family, Dataset::WikiText103)
+        })?;
+        let cloud = run_homogeneous(family, Dataset::WikiText103, FleetPreset::Cloud, seed)?;
+        let edge_j = edge.energy_kj * 1e3 / 200.0;
+        let cloud_j = cloud.energy_kj * 1e3 / 200.0;
+        table.row(vec![
+            family.display().to_string(),
+            f1(edge_j),
+            f1(cloud_j),
+            if edge_j < cloud_j { "yes".into() } else { "no".into() },
+        ]);
+    }
+    table.note("paper §5.5: heterogeneous edge wins at small-to-medium scale; cloud dominates at larger scales");
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gsm8k_keeps_the_headline_shape() {
+        let (t, agg) = cross_dataset_table("t13", Dataset::Gsm8k, 0).unwrap();
+        // NOTE the paper reports +9pp here; a configuration-independent
+        // difficulty oracle cannot reproduce accuracy gains from
+        // orchestration alone, so the reasoning-set coverage gain is
+        // positive but modest (see EXPERIMENTS.md §Deviations).
+        assert!(agg.d_pass_pp > 0.2, "pass@k gain {:.1}pp", agg.d_pass_pp);
+        assert!(agg.d_energy_pct < -20.0, "energy delta {:.1}%", agg.d_energy_pct);
+        assert!(agg.d_latency_pct < 0.0, "latency delta {:.1}%", agg.d_latency_pct);
+        assert_eq!(t.rows.len(), 16);
+    }
+
+    #[test]
+    fn consistency_across_datasets() {
+        let t = table15(0).unwrap();
+        // Pass@k row: all three datasets positive and within a few pp of
+        // each other (paper: ±0.1pp; we allow wider tolerance).
+        let vals: Vec<f64> = t.rows[0][1..].iter().map(|c| c.parse().unwrap()).collect();
+        for v in &vals {
+            assert!(*v > 0.2, "gain must be positive: {vals:?}");
+        }
+        // Energy reduction row must be strongly negative on every set.
+        let energy: Vec<f64> = t.rows[1][1..].iter().map(|c| c.parse().unwrap()).collect();
+        for v in &energy {
+            assert!(*v < -30.0, "energy must fall sharply: {energy:?}");
+        }
+    }
+}

@@ -1,0 +1,166 @@
+//! Experiment harness: one regenerator per paper table/figure.
+//!
+//! `qeil experiment <id>` prints the table and saves markdown + JSON to
+//! the results directory; `qeil experiment all` regenerates everything.
+//! See DESIGN.md §4 for the experiment index.
+
+pub mod breakdown;
+pub mod components;
+pub mod crossdataset;
+pub mod heterogeneity;
+pub mod report;
+pub mod runner;
+pub mod safety_eval;
+pub mod scaling;
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use report::Table;
+
+/// All experiment ids in paper order.
+pub const ALL_IDS: &[&str] = &[
+    "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
+    "t15", "t16", "f2", "f3", "f4", "f5", "f6", "regimes",
+];
+
+/// Run one experiment by id.
+pub fn run_experiment(id: &str, queries: usize, seed: u64) -> Result<Table> {
+    Ok(match id {
+        "t1" => scaling::table1(queries, seed)?,
+        "t2" => scaling::table2(queries, seed)?,
+        "t3" => heterogeneity::table3(seed)?,
+        "t4" => components::table4(seed)?,
+        "t5" => components::table5(10, seed)?,
+        "t6" => heterogeneity::table6(seed)?,
+        "t7" | "f2" => {
+            let mut t = breakdown::table7(seed)?;
+            if id == "f2" {
+                t.id = "f02".into();
+                t.title = format!("Figure 2 series — {}", t.title);
+            }
+            t
+        }
+        "t8" | "f3" => {
+            let mut t = breakdown::table8(seed)?;
+            if id == "f3" {
+                t.id = "f03".into();
+                t.title = format!("Figure 3 series — {}", t.title);
+            }
+            t
+        }
+        "t9" | "f4" => {
+            let mut t = breakdown::table9(seed)?;
+            if id == "f4" {
+                t.id = "f04".into();
+                t.title = format!("Figure 4 snapshot — {}", t.title);
+            }
+            t
+        }
+        "t10" => safety_eval::table10()?,
+        "t11" => safety_eval::table11(seed)?,
+        "t12" => safety_eval::table12(seed)?,
+        "t13" => crossdataset::table13(seed)?,
+        "t14" => crossdataset::table14(seed)?,
+        "t15" => crossdataset::table15(seed)?,
+        "t16" => heterogeneity::table16(seed)?,
+        "f5" => scaling::figure5(queries, seed)?,
+        "f6" => scaling::figure6(queries, seed)?,
+        "regimes" => crossdataset::regimes(seed)?,
+        other => bail!("unknown experiment {other:?} (available: {ALL_IDS:?})"),
+    })
+}
+
+/// CLI integration for the `qeil` binary.
+pub mod cli {
+    use super::*;
+    use crate::cli::Args;
+
+    pub fn run(args: &Args) -> Result<()> {
+        let id = args
+            .positional
+            .get(1)
+            .map(|s| s.as_str())
+            .unwrap_or("all")
+            .to_lowercase();
+        let out = args.opt("out", "results");
+        let queries: usize = args.num("queries", 400usize)?;
+        let seed: u64 = args.num("seed", 0u64)?;
+        let out_dir = Path::new(&out);
+
+        let ids: Vec<&str> = if id == "all" {
+            ALL_IDS.to_vec()
+        } else {
+            vec![Box::leak(id.clone().into_boxed_str()) as &str]
+        };
+        for id in ids {
+            eprintln!("── running {id} ──");
+            let table = run_experiment(id, queries, seed)?;
+            println!("{}", table.to_markdown());
+            table.save(out_dir)?;
+        }
+        eprintln!("results saved to {out}/");
+        Ok(())
+    }
+
+    /// `qeil fit` — fit the coverage law to a measured sweep.
+    pub fn fit(args: &Args) -> Result<()> {
+        use crate::scaling::bootstrap::bootstrap_ci;
+        use crate::scaling::fit::{fit_coverage_law, LmOptions};
+        use crate::workload::datasets::ModelFamily;
+
+        let family = ModelFamily::from_str(&args.opt("variant", "gpt2"))?;
+        let queries: usize = args.num("queries", 400usize)?;
+        let seed: u64 = args.num("seed", 0u64)?;
+        let budgets = [1u32, 2, 5, 10, 15, 20, 30, 50];
+        let curve = super::scaling::coverage_curve(family, &budgets, queries, seed);
+        println!("coverage curve for {}:", family.display());
+        for (s, c) in &curve {
+            println!("  S={s:>3}  C={:.3}", c);
+        }
+        let fit = fit_coverage_law(&curve, &LmOptions::default())?;
+        let ci = bootstrap_ci(&curve, 1000, 0.95, seed)?;
+        println!(
+            "\nfit: α={:.4} β={:.3} (95% CI [{:.3}, {:.3}])  R²={:.4}  [{} LM iters]",
+            fit.alpha, fit.beta, ci.lo, ci.hi, fit.r_squared, fit.iterations
+        );
+        Ok(())
+    }
+
+    /// `qeil report` — summarize a results directory.
+    pub fn report(args: &Args) -> Result<()> {
+        let out = args.opt("out", "results");
+        let dir = Path::new(&out);
+        if !dir.exists() {
+            bail!("results directory {out:?} not found (run `qeil experiment all` first)");
+        }
+        let mut entries: Vec<_> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .filter(|e| e.path().extension().map(|x| x == "md").unwrap_or(false))
+            .collect();
+        entries.sort_by_key(|e| e.file_name());
+        for entry in entries {
+            println!("{}", std::fs::read_to_string(entry.path())?);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unknown_id_is_an_error() {
+        assert!(run_experiment("t99", 50, 0).is_err());
+    }
+
+    #[test]
+    fn figure_aliases_share_generators() {
+        let t7 = run_experiment("t7", 50, 0).unwrap();
+        let f2 = run_experiment("f2", 50, 0).unwrap();
+        assert_eq!(t7.rows, f2.rows);
+        assert_ne!(t7.id, f2.id);
+    }
+}

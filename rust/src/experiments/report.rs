@@ -1,0 +1,172 @@
+//! Table rendering + result persistence: every experiment produces a
+//! markdown table (mirroring the paper's layout) and a JSON result file
+//! for downstream tooling.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// A rendered experiment table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form key findings line(s).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, columns: &[&str]) -> Table {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            columns: columns.iter().map(|c| c.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.columns.len(), "row arity mismatch in {}", self.id);
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, text: impl Into<String>) {
+        self.notes.push(text.into());
+    }
+
+    /// Render as GitHub markdown.
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {} — {}\n\n", self.id.to_uppercase(), self.title);
+        let widths: Vec<usize> = self
+            .columns
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                self.rows
+                    .iter()
+                    .map(|r| r[i].len())
+                    .chain(std::iter::once(c.len()))
+                    .max()
+                    .unwrap_or(4)
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::from("|");
+            for (cell, w) in cells.iter().zip(&widths) {
+                line.push_str(&format!(" {cell:<w$} |"));
+            }
+            line.push('\n');
+            line
+        };
+        out.push_str(&fmt_row(&self.columns));
+        let mut sep = String::from("|");
+        for w in &widths {
+            sep.push_str(&format!("{}|", "-".repeat(w + 2)));
+        }
+        sep.push('\n');
+        out.push_str(&sep);
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        for note in &self.notes {
+            out.push_str(&format!("\n> {note}\n"));
+        }
+        out
+    }
+
+    /// Serialize to JSON for machine consumption.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("id", Json::Str(self.id.clone())),
+            ("title", Json::Str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::Str(c.clone())).collect()),
+            ),
+            (
+                "rows",
+                Json::Arr(
+                    self.rows
+                        .iter()
+                        .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+                        .collect(),
+                ),
+            ),
+            ("notes", Json::Arr(self.notes.iter().map(|n| Json::Str(n.clone())).collect())),
+        ])
+    }
+
+    /// Write `<out>/<id>.md` and `<out>/<id>.json`.
+    pub fn save(&self, out_dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(out_dir)
+            .with_context(|| format!("creating results dir {out_dir:?}"))?;
+        std::fs::write(out_dir.join(format!("{}.md", self.id)), self.to_markdown())?;
+        std::fs::write(
+            out_dir.join(format!("{}.json", self.id)),
+            self.to_json().to_string_pretty(),
+        )?;
+        Ok(())
+    }
+}
+
+/// Format helpers used across experiments.
+pub fn f1(x: f64) -> String {
+    format!("{x:.1}")
+}
+
+pub fn f2(x: f64) -> String {
+    format!("{x:.2}")
+}
+
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+pub fn pp(x: f64) -> String {
+    format!("{x:+.1}pp")
+}
+
+pub fn pct(x: f64) -> String {
+    format!("{x:+.1}%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_roundtrip_structure() {
+        let mut t = Table::new("t99", "Demo", &["Model", "IPW"]);
+        t.row(vec!["GPT-2".into(), "0.718".into()]);
+        t.note("key finding");
+        let md = t.to_markdown();
+        assert!(md.contains("| Model"));
+        assert!(md.contains("| GPT-2"));
+        assert!(md.contains("> key finding"));
+        let j = t.to_json();
+        assert_eq!(j.str_field("id").unwrap(), "t99");
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("t0", "x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn save_writes_both_files() {
+        let dir = std::env::temp_dir().join(format!("qeil-report-test-{}", std::process::id()));
+        let mut t = Table::new("t42", "Save test", &["c"]);
+        t.row(vec!["v".into()]);
+        t.save(&dir).unwrap();
+        assert!(dir.join("t42.md").exists());
+        assert!(dir.join("t42.json").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,281 @@
+//! Safety experiments: Table 10 (thermal protection), Table 11 (fault
+//! tolerance), Table 12 (adversarial robustness).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::devices::failure::{FailureKind, FailurePlan, FailureScenario};
+use crate::devices::spec::DeviceSpec;
+use crate::devices::thermal::ThermalState;
+use crate::safety::ratelimit::RateLimiter;
+use crate::safety::sanity::{OutputSanity, SanityVerdict};
+use crate::safety::thermal_guard::ThermalGuard;
+use crate::safety::validation::InputValidator;
+use crate::rng::Pcg;
+use crate::workload::datasets::{Dataset, ModelFamily};
+
+use super::report::{f1, f2, Table};
+use super::runner::{run_config_with, RunMetrics};
+
+/// Table 10: 30-minute sustained compute-heavy load on the GPU, with and
+/// without the thermal guard (closed-loop RC thermal simulation at the
+/// paper's 10 Hz fast-monitoring cadence).
+pub fn table10() -> Result<Table> {
+    let spec = DeviceSpec::nvidia_gpu();
+    let guard = ThermalGuard::default();
+    let duration_s = 30.0 * 60.0;
+    let dt = 0.1;
+    let steps = (duration_s / dt) as usize;
+    // Sustained compute-bound inference drives the ALUs at 95% of the
+    // dynamic range (the power model's compute-phase draw).
+    let offered_power = spec.idle_w + (spec.tdp_w - spec.idle_w) * 0.95;
+    // Nominal per-inference latency at full speed (ms) for the latency
+    // statistics; hardware throttling stretches it by the throttle factor.
+    let nominal_ms = 1.30;
+
+    let run = |protected: bool| -> (ThermalState, Vec<f64>, u64) {
+        let mut thermal = ThermalState::new(&spec);
+        let mut latencies = Vec::with_capacity(steps);
+        let mut tokens = 0u64;
+        for _ in 0..steps {
+            let factor = if protected {
+                guard.evaluate(&spec, thermal.temp_c()).workload_factor
+            } else {
+                1.0
+            };
+            let hw = thermal.hardware_throttle_factor();
+            let effective = (factor * hw).max(0.05);
+            let power = spec.idle_w + (offered_power - spec.idle_w) * effective;
+            thermal.step(&spec, power, dt);
+            latencies.push(nominal_ms / effective);
+            tokens += (dt * 1000.0 / (nominal_ms / effective)) as u64;
+        }
+        (thermal, latencies, tokens)
+    };
+
+    let (t_unprot, lat_unprot, tok_unprot) = run(false);
+    let (t_prot, lat_prot, tok_prot) = run(true);
+
+    let stats = |xs: &[f64]| -> (f64, f64, f64) {
+        let s = crate::scaling::stats::summarize(xs);
+        let p99 = crate::scaling::stats::percentile(xs, 99.0);
+        (s.mean, s.std_dev, p99)
+    };
+    let (m_u, sd_u, p99_u) = stats(&lat_unprot);
+    let (m_p, sd_p, p99_p) = stats(&lat_prot);
+
+    let mut table = Table::new(
+        "t10",
+        "Thermal protection: 30-minute sustained inference (GPU)",
+        &["Metric", "Without Protection", "With Protection"],
+    );
+    table.row(vec![
+        "Max GPU Temp (°C)".into(),
+        format!("{:.0}{}", t_unprot.peak_c(), if t_unprot.throttle_events() > 0 { " (throttled)" } else { "" }),
+        format!("{:.0}", t_prot.peak_c()),
+    ]);
+    table.row(vec![
+        "Thermal Throttling Events".into(),
+        format!("{}", t_unprot.throttle_events()),
+        format!("{}", t_prot.throttle_events()),
+    ]);
+    table.row(vec![
+        "Avg Latency (ms)".into(),
+        format!("{m_u:.2} ± {sd_u:.2}"),
+        format!("{m_p:.2} ± {sd_p:.2}"),
+    ]);
+    table.row(vec!["Latency 99th Pctl (ms)".into(), f2(p99_u), f2(p99_p)]);
+    table.row(vec![
+        "Total Throughput (tokens)".into(),
+        format!("{tok_unprot}"),
+        format!("{tok_prot}"),
+    ]);
+    table.note("paper Table 10: unprotected hits 89°C with 47 throttling events and higher latency variance; protected peaks at 72°C with zero events and HIGHER total throughput");
+    Ok(table)
+}
+
+/// Table 11: fault tolerance under injected device failures.
+pub fn table11(seed: u64) -> Result<Table> {
+    let scenarios: Vec<(&str, Vec<(&str, FailureKind)>)> = vec![
+        ("NPU failure (decode lead)", vec![("npu0", FailureKind::Crash)]),
+        ("iGPU failure", vec![("igpu0", FailureKind::Crash)]),
+        ("dGPU failure (prefill lead)", vec![("gpu0", FailureKind::Hang)]),
+        ("Both GPU failure", vec![("gpu0", FailureKind::Crash), ("igpu0", FailureKind::Crash)]),
+        ("NPU + dGPU failure", vec![("npu0", FailureKind::Crash), ("gpu0", FailureKind::Crash)]),
+    ];
+    let mut table = Table::new(
+        "t11",
+        "Fault tolerance: recovery from injected device failures",
+        &["Failure Scenario", "Recovery (ms)", "Throughput Δ", "Queries Lost"],
+    );
+    // Baseline throughput without failures.
+    let base_cfg = ExperimentConfig {
+        seed,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    };
+    let base = run_config_with(&base_cfg, FailurePlan::none(), "artifacts")?;
+    let mut all_lost = 0usize;
+    for (label, failures) in scenarios {
+        let plan = FailurePlan::new(
+            failures
+                .iter()
+                .map(|(dev, kind)| FailureScenario {
+                    device: (*dev).into(),
+                    kind: *kind,
+                    at_s: 0.3,
+                    recover_after_s: None,
+                })
+                .collect(),
+        );
+        let m: RunMetrics = run_config_with(&base_cfg, plan, "artifacts")?;
+        all_lost += m.queries_lost;
+        table.row(vec![
+            label.to_string(),
+            f1(m.mean_recovery_ms),
+            format!("{:+.0}%", super::runner::pct_delta(m.throughput_tps, base.throughput_tps)),
+            format!("{}", m.queries_lost),
+        ]);
+    }
+    table.note(format!(
+        "paper Table 11: zero query loss, recovery < 200 ms, degradation proportional to lost capacity (total lost here: {all_lost})"
+    ));
+    Ok(table)
+}
+
+/// Table 12: adversarial robustness of the validation path.
+pub fn table12(seed: u64) -> Result<Table> {
+    let mut rng = Pcg::seeded(seed);
+    let validator = InputValidator::new(64, 512);
+    let mut table = Table::new(
+        "t12",
+        "Adversarial robustness: input validation effectiveness",
+        &["Attack Type", "Blocked", "System Impact"],
+    );
+
+    // 1) Oversized inputs (10× context).
+    let n = 500;
+    let blocked = (0..n)
+        .filter(|_| {
+            let len = 64 * 10 + rng.below(100) as usize;
+            validator.validate_tokens(&vec![1i64; len]).is_err()
+        })
+        .count();
+    table.row(vec![
+        "Oversized input (10× context)".into(),
+        format!("{:.0}%", blocked as f64 / n as f64 * 100.0),
+        "None".into(),
+    ]);
+
+    // 2) Malformed UTF-8.
+    let blocked = (0..n)
+        .filter(|_| {
+            let mut bytes = b"benign prefix ".to_vec();
+            bytes.push(0xC0 + (rng.below(32) as u8) | 0x80); // invalid lead/continuation mixes
+            bytes.push(0xFF);
+            validator.validate_text(&bytes).is_err()
+        })
+        .count();
+    table.row(vec![
+        "Malformed UTF-8".into(),
+        format!("{:.0}%", blocked as f64 / n as f64 * 100.0),
+        "None".into(),
+    ]);
+
+    // 3) Rapid-fire DDoS: one client at 10k req/s against a 10 req/s
+    // bucket; measure blocked share and impact on a legitimate client.
+    let mut limiter = RateLimiter::new(10.0, 10.0);
+    let attack_n = 2000;
+    let mut attack_admitted = 0;
+    for i in 0..attack_n {
+        if limiter.admit(666, i as f64 * 1e-4) {
+            attack_admitted += 1;
+        }
+    }
+    let mut legit_blocked = 0;
+    for i in 0..20 {
+        if !limiter.admit(1, 0.2 + i as f64 * 0.5) {
+            legit_blocked += 1;
+        }
+    }
+    table.row(vec![
+        "Rapid-fire requests (DDoS)".into(),
+        format!("{:.1}%", (attack_n - attack_admitted) as f64 / attack_n as f64 * 100.0),
+        format!("{:.1}% legit degradation", legit_blocked as f64 / 20.0 * 100.0),
+    ]);
+
+    // 4) Repetition-inducing prompts: simulate degenerate generations and
+    // measure how many the sanity monitor halts, plus excess tokens.
+    let trials = 200;
+    let mut halted = 0;
+    let mut excess_tokens = 0usize;
+    let expected = 100;
+    for t in 0..trials {
+        let mut sanity = OutputSanity::new(expected);
+        let mut rng_t = Pcg::new(seed, t as u64 + 10);
+        let repeat_token = rng_t.below(512) as i32;
+        let healthy: Vec<f32> = (0..512).map(|i| ((i * 37 % 17) as f32) * 0.5 - 3.0).collect();
+        let mut emitted = 0usize;
+        // Degenerate stream: 95% repeated token.
+        for i in 0..(expected * 2) {
+            let token = if rng_t.chance(0.95) { repeat_token } else { i as i32 % 512 };
+            match sanity.check(token, &healthy) {
+                SanityVerdict::HaltRepetition | SanityVerdict::HaltLength => {
+                    halted += 1;
+                    break;
+                }
+                _ => emitted += 1,
+            }
+        }
+        excess_tokens += emitted.saturating_sub(expected);
+    }
+    let excess_pct = excess_tokens as f64 / (trials * expected) as f64 * 100.0;
+    table.row(vec![
+        "Repetition-inducing prompts".into(),
+        format!("{:.0}%", halted as f64 / trials as f64 * 100.0),
+        format!("{excess_pct:.1}% excess tokens"),
+    ]);
+
+    table.note("paper Table 12: 100% / 100% / 99.2% / 94% blocked; ≤6% excess tokens");
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn thermal_protection_eliminates_throttling() {
+        let t = table10().unwrap();
+        // Row 1: throttle events [without, with].
+        let without: u64 = t.rows[1][1].parse().unwrap();
+        let with: u64 = t.rows[1][2].parse().unwrap();
+        assert!(without >= 1, "unprotected run must throttle");
+        assert_eq!(with, 0, "protected run must never throttle");
+        // Protected throughput >= unprotected (the paper's surprise).
+        let tok_u: u64 = t.rows[4][1].parse().unwrap();
+        let tok_p: u64 = t.rows[4][2].parse().unwrap();
+        assert!(tok_p >= tok_u, "protected {tok_p} vs unprotected {tok_u}");
+    }
+
+    #[test]
+    fn fault_recovery_loses_zero_queries() {
+        let t = table11(0).unwrap();
+        for row in &t.rows {
+            assert_eq!(row[3], "0", "{}: lost queries", row[0]);
+            let recovery: f64 = row[1].parse().unwrap();
+            assert!(recovery < 200.0, "{}: recovery {recovery} ms", row[0]);
+        }
+    }
+
+    #[test]
+    fn adversarial_blocking_rates() {
+        let t = table12(0).unwrap();
+        let rate = |r: usize| -> f64 {
+            t.rows[r][1].trim_end_matches('%').parse().unwrap()
+        };
+        assert_eq!(rate(0), 100.0, "oversized");
+        assert_eq!(rate(1), 100.0, "utf8");
+        assert!(rate(2) > 98.0, "ddos");
+        assert!(rate(3) > 90.0, "repetition");
+    }
+}

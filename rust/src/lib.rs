@@ -1,0 +1,38 @@
+//! # QEIL — Quantifying Edge Intelligence
+//!
+//! Production-quality reproduction of *"Quantifying Edge Intelligence:
+//! Inference-time Scaling Formalisms for Heterogeneous Computing"* as a
+//! three-layer Rust + JAX + Pallas stack:
+//!
+//! - **L3 (this crate)** — the paper's contribution: a heterogeneous edge
+//!   orchestrator with greedy layer assignment, prefill/decode
+//!   disaggregation, adaptive sample budgeting, and a safety-first
+//!   reliability monitor (thermal guard, fault recovery, adversarial
+//!   input validation), plus every substrate the evaluation needs
+//!   (roofline device simulator, RC thermal model, scaling-law fitter,
+//!   workload/coverage generators, metrics).
+//! - **L2** — a JAX decoder-only transformer (five scaled model-family
+//!   variants), AOT-lowered once to HLO text by `python/compile/aot.py`.
+//! - **L1** — Pallas flash-attention / layernorm kernels inside the L2
+//!   graph (interpret mode; oracle-checked by pytest).
+//!
+//! Python never runs on the request path: the [`runtime`] module loads
+//! the HLO artifacts through PJRT and executes them natively.
+
+pub mod baselines;
+pub mod bench;
+pub mod cli;
+pub mod config;
+pub mod json;
+pub mod coordinator;
+pub mod devices;
+pub mod experiments;
+pub mod metrics;
+pub mod rng;
+pub mod runtime;
+pub mod safety;
+pub mod scaling;
+pub mod server;
+pub mod sim;
+pub mod testing;
+pub mod workload;

@@ -1,0 +1,69 @@
+//! `qeil` — CLI entrypoint for the QEIL heterogeneous edge coordinator.
+//!
+//! Subcommands:
+//!   smoke       — load a variant, run prefill + a few decode steps
+//!   serve       — start the serving loop on the simulated edge fleet
+//!   experiment  — regenerate a paper table/figure (t1..t16, f2..f6, all)
+//!   fit         — fit the coverage scaling law to a sweep and print β
+//!   report      — summarize a results directory
+
+use anyhow::{bail, Result};
+
+use qeil::cli::Args;
+
+const USAGE: &str = "\
+qeil — QEIL heterogeneous edge inference coordinator
+
+USAGE:
+    qeil <COMMAND> [OPTIONS]
+
+COMMANDS:
+    smoke        Load a variant, run prefill + decode (PJRT round-trip check)
+    serve        Run the serving loop over a synthetic request trace
+    experiment   Regenerate a paper table/figure (t1..t16, f2..f6, all)
+    fit          Fit the coverage scaling law and print the exponents
+    report       Summarize a results directory
+
+COMMON OPTIONS:
+    --artifacts <dir>   artifacts directory   [default: artifacts]
+    --variant <name>    model family          [default: gpt2]
+    --out <dir>         results directory     [default: results]
+    --seed <n>          experiment seed       [default: 0]
+";
+
+fn main() -> Result<()> {
+    let args = Args::from_env()?;
+    match args.command() {
+        Some("smoke") => smoke(&args),
+        Some("serve") => qeil::server::cli::run(&args),
+        Some("experiment") => qeil::experiments::cli::run(&args),
+        Some("fit") => qeil::experiments::cli::fit(&args),
+        Some("report") => qeil::experiments::cli::report(&args),
+        Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
+        None => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn smoke(args: &Args) -> Result<()> {
+    let artifacts = args.opt("artifacts", "artifacts");
+    let variant = args.opt("variant", "gpt2");
+
+    let mut engine = qeil::runtime::Engine::new(&artifacts)?;
+    engine.load_variant(&variant)?;
+    let meta = engine.meta(&variant)?.clone();
+    println!("loaded {variant}: {} layers, d_model {}", meta.n_layers, meta.d_model);
+
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).map(|i| i % meta.vocab as i32).collect();
+    let (mut session, logits) =
+        qeil::runtime::GenerationSession::start(&engine, &variant, &prompt)?;
+    println!("prefill ok: {} logits, {:.3} ms", logits.len(), session.prefill_seconds * 1e3);
+
+    let mut rng = qeil::rng::Pcg::seeded(args.num("seed", 0u64)?);
+    let tokens =
+        session.generate(logits, 8, qeil::runtime::session::Sampling::Greedy, &mut rng)?;
+    println!("decoded {:?} in {:.3} ms total compute", tokens, session.compute_seconds * 1e3);
+    Ok(())
+}

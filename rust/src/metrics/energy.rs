@@ -1,0 +1,177 @@
+//! Per-device energy ledger (DESIGN.md §S4: substitutes for
+//! RAPL / nvidia-smi / Watts-Up-Pro telemetry).
+//!
+//! The ledger integrates instantaneous power over virtual time, sampled
+//! per completed task plus idle spans, and attributes joules to
+//! inference phases (Table 7's prefill/decode/overhead breakdown).
+
+use std::collections::BTreeMap;
+
+use crate::devices::roofline::Phase;
+use crate::devices::spec::DeviceId;
+
+/// One accounted energy contribution.
+#[derive(Debug, Clone)]
+pub struct EnergySample {
+    pub device: DeviceId,
+    pub phase: Option<Phase>,
+    pub joules: f64,
+    pub seconds: f64,
+}
+
+/// Accumulates energy per device and per phase.
+#[derive(Debug, Clone, Default)]
+pub struct EnergyLedger {
+    per_device: BTreeMap<DeviceId, f64>,
+    per_phase: BTreeMap<&'static str, f64>,
+    idle_j: f64,
+    total_j: f64,
+    busy_seconds: f64,
+    wall_seconds: f64,
+}
+
+impl EnergyLedger {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record energy for a task execution.
+    pub fn record_task(&mut self, device: &DeviceId, phase: Phase, joules: f64, seconds: f64) {
+        assert!(joules >= 0.0 && seconds >= 0.0, "negative energy/time");
+        *self.per_device.entry(device.clone()).or_insert(0.0) += joules;
+        *self.per_phase.entry(phase.as_str()).or_insert(0.0) += joules;
+        self.total_j += joules;
+        self.busy_seconds += seconds;
+    }
+
+    /// Record idle draw across a span (devices powered but not working).
+    pub fn record_idle(&mut self, device: &DeviceId, joules: f64) {
+        assert!(joules >= 0.0);
+        *self.per_device.entry(device.clone()).or_insert(0.0) += joules;
+        self.idle_j += joules;
+        self.total_j += joules;
+    }
+
+    /// Record coordination overhead energy (scheduler, transfers).
+    pub fn record_overhead(&mut self, device: &DeviceId, joules: f64) {
+        assert!(joules >= 0.0);
+        *self.per_device.entry(device.clone()).or_insert(0.0) += joules;
+        *self.per_phase.entry("overhead").or_insert(0.0) += joules;
+        self.total_j += joules;
+    }
+
+    /// Advance the wall clock (for average-power queries).
+    pub fn advance_wall(&mut self, seconds: f64) {
+        assert!(seconds >= 0.0);
+        self.wall_seconds += seconds;
+    }
+
+    pub fn total_j(&self) -> f64 {
+        self.total_j
+    }
+
+    pub fn idle_j(&self) -> f64 {
+        self.idle_j
+    }
+
+    pub fn device_j(&self, device: &DeviceId) -> f64 {
+        self.per_device.get(device).copied().unwrap_or(0.0)
+    }
+
+    pub fn phase_j(&self, phase: Phase) -> f64 {
+        self.per_phase.get(phase.as_str()).copied().unwrap_or(0.0)
+    }
+
+    pub fn overhead_j(&self) -> f64 {
+        self.per_phase.get("overhead").copied().unwrap_or(0.0)
+    }
+
+    pub fn wall_seconds(&self) -> f64 {
+        self.wall_seconds
+    }
+
+    /// Mean system power over the recorded wall time.
+    pub fn avg_power_w(&self) -> f64 {
+        if self.wall_seconds == 0.0 {
+            return 0.0;
+        }
+        self.total_j / self.wall_seconds
+    }
+
+    /// Merge another ledger into this one (parallel shards).
+    pub fn merge(&mut self, other: &EnergyLedger) {
+        for (d, j) in &other.per_device {
+            *self.per_device.entry(d.clone()).or_insert(0.0) += j;
+        }
+        for (p, j) in &other.per_phase {
+            *self.per_phase.entry(p).or_insert(0.0) += j;
+        }
+        self.idle_j += other.idle_j;
+        self.total_j += other.total_j;
+        self.busy_seconds += other.busy_seconds;
+        self.wall_seconds += other.wall_seconds;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn totals_are_additive() {
+        let mut l = EnergyLedger::new();
+        let d1: DeviceId = "gpu0".into();
+        let d2: DeviceId = "npu0".into();
+        l.record_task(&d1, Phase::Prefill, 100.0, 1.0);
+        l.record_task(&d2, Phase::Decode, 50.0, 2.0);
+        l.record_idle(&d1, 5.0);
+        l.record_overhead(&d2, 2.0);
+        assert_eq!(l.total_j(), 157.0);
+        assert_eq!(l.device_j(&d1), 105.0);
+        assert_eq!(l.device_j(&d2), 52.0);
+        assert_eq!(l.phase_j(Phase::Prefill), 100.0);
+        assert_eq!(l.phase_j(Phase::Decode), 50.0);
+        assert_eq!(l.overhead_j(), 2.0);
+        assert_eq!(l.idle_j(), 5.0);
+    }
+
+    #[test]
+    fn avg_power_over_wall_time() {
+        let mut l = EnergyLedger::new();
+        let d: DeviceId = "cpu0".into();
+        l.record_task(&d, Phase::Decode, 200.0, 1.0);
+        l.advance_wall(4.0);
+        assert_eq!(l.avg_power_w(), 50.0);
+    }
+
+    #[test]
+    fn empty_ledger_is_zero() {
+        let l = EnergyLedger::new();
+        assert_eq!(l.total_j(), 0.0);
+        assert_eq!(l.avg_power_w(), 0.0);
+        assert_eq!(l.device_j(&"x".into()), 0.0);
+    }
+
+    #[test]
+    fn merge_combines_everything() {
+        let d: DeviceId = "gpu0".into();
+        let mut a = EnergyLedger::new();
+        a.record_task(&d, Phase::Prefill, 10.0, 0.1);
+        a.advance_wall(1.0);
+        let mut b = EnergyLedger::new();
+        b.record_task(&d, Phase::Prefill, 20.0, 0.2);
+        b.record_idle(&d, 1.0);
+        b.advance_wall(2.0);
+        a.merge(&b);
+        assert_eq!(a.total_j(), 31.0);
+        assert_eq!(a.phase_j(Phase::Prefill), 30.0);
+        assert_eq!(a.wall_seconds(), 3.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "negative")]
+    fn rejects_negative_energy() {
+        let mut l = EnergyLedger::new();
+        l.record_task(&"x".into(), Phase::Decode, -1.0, 0.0);
+    }
+}

@@ -1,0 +1,189 @@
+//! Streaming latency recorder: fixed-memory log-bucketed histogram with
+//! percentile queries (Tables 8, 10 report means and p99 tails).
+
+/// Log-bucketed histogram over (0, ~1000 s] with 1% resolution buckets.
+#[derive(Debug, Clone)]
+pub struct LatencyRecorder {
+    buckets: Vec<u64>,
+    count: u64,
+    sum_s: f64,
+    sum_sq_s: f64,
+    min_s: f64,
+    max_s: f64,
+}
+
+const BUCKETS: usize = 2048;
+const MIN_S: f64 = 1e-6; // 1 µs floor
+const GROWTH: f64 = 1.01; // ~1% per bucket
+
+impl Default for LatencyRecorder {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyRecorder {
+    pub fn new() -> Self {
+        LatencyRecorder {
+            buckets: vec![0; BUCKETS],
+            count: 0,
+            sum_s: 0.0,
+            sum_sq_s: 0.0,
+            min_s: f64::INFINITY,
+            max_s: 0.0,
+        }
+    }
+
+    fn bucket_for(seconds: f64) -> usize {
+        if seconds <= MIN_S {
+            return 0;
+        }
+        let idx = (seconds / MIN_S).ln() / GROWTH.ln();
+        (idx as usize).min(BUCKETS - 1)
+    }
+
+    fn bucket_value(idx: usize) -> f64 {
+        MIN_S * GROWTH.powi(idx as i32)
+    }
+
+    pub fn record(&mut self, seconds: f64) {
+        assert!(seconds >= 0.0 && seconds.is_finite(), "bad latency {seconds}");
+        self.buckets[Self::bucket_for(seconds)] += 1;
+        self.count += 1;
+        self.sum_s += seconds;
+        self.sum_sq_s += seconds * seconds;
+        self.min_s = self.min_s.min(seconds);
+        self.max_s = self.max_s.max(seconds);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean_s(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_s / self.count as f64
+    }
+
+    pub fn std_dev_s(&self) -> f64 {
+        if self.count < 2 {
+            return 0.0;
+        }
+        let n = self.count as f64;
+        let var = (self.sum_sq_s - self.sum_s * self.sum_s / n) / (n - 1.0);
+        var.max(0.0).sqrt()
+    }
+
+    pub fn min_s(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.min_s
+        }
+    }
+
+    pub fn max_s(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Percentile (0–100) from the histogram (≤1% relative error).
+    pub fn percentile_s(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let target = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return Self::bucket_value(idx);
+            }
+        }
+        self.max_s
+    }
+
+    pub fn merge(&mut self, other: &LatencyRecorder) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_s += other.sum_s;
+        self.sum_sq_s += other.sum_sq_s;
+        self.min_s = self.min_s.min(other.min_s);
+        self.max_s = self.max_s.max(other.max_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_and_bounds() {
+        let mut r = LatencyRecorder::new();
+        for ms in [1.0, 2.0, 3.0] {
+            r.record(ms / 1000.0);
+        }
+        assert_eq!(r.count(), 3);
+        assert!((r.mean_s() - 0.002).abs() < 1e-12);
+        assert!((r.min_s() - 0.001).abs() < 1e-12);
+        assert!((r.max_s() - 0.003).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_accuracy_within_bucket_resolution() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=1000 {
+            r.record(i as f64 / 1000.0); // 1 ms .. 1 s uniform
+        }
+        let p50 = r.percentile_s(50.0);
+        assert!((p50 - 0.5).abs() / 0.5 < 0.03, "p50={p50}");
+        let p99 = r.percentile_s(99.0);
+        assert!((p99 - 0.99).abs() / 0.99 < 0.03, "p99={p99}");
+    }
+
+    #[test]
+    fn std_dev_of_constant_is_zero() {
+        let mut r = LatencyRecorder::new();
+        for _ in 0..10 {
+            r.record(0.005);
+        }
+        assert!(r.std_dev_s() < 1e-6);
+    }
+
+    #[test]
+    fn std_dev_known() {
+        let mut r = LatencyRecorder::new();
+        for x in [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0] {
+            r.record(x);
+        }
+        assert!((r.std_dev_s() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_preserves_statistics() {
+        let mut a = LatencyRecorder::new();
+        let mut b = LatencyRecorder::new();
+        a.record(0.001);
+        b.record(0.003);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!((a.mean_s() - 0.002).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_recorder_is_safe() {
+        let r = LatencyRecorder::new();
+        assert_eq!(r.mean_s(), 0.0);
+        assert_eq!(r.percentile_s(99.0), 0.0);
+        assert_eq!(r.min_s(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_nan() {
+        LatencyRecorder::new().record(f64::NAN);
+    }
+}

@@ -1,0 +1,14 @@
+//! Unified efficiency metrics (paper §1, §5.3) and runtime accounting.
+//!
+//! - [`composite`] — IPW, ECE, PPP: the paper's three headline metrics.
+//! - [`energy`] — the per-device energy ledger (integrates the power
+//!   model over virtual time; substitutes for RAPL/NVML, DESIGN.md §S4).
+//! - [`latency`] — streaming latency histogram with percentile queries.
+
+pub mod composite;
+pub mod energy;
+pub mod latency;
+
+pub use composite::{ece, ipw, ppp, PppInputs};
+pub use energy::{EnergyLedger, EnergySample};
+pub use latency::LatencyRecorder;

@@ -1,0 +1,225 @@
+//! The PJRT execution engine: compile HLO-text artifacts once, execute
+//! prefill/decode natively from the request path.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use super::manifest::{Manifest, VariantMeta};
+
+/// Output of a prefill execution.
+pub struct PrefillOut {
+    /// Logits for every prompt position, row-major `[prefill_len, vocab]`.
+    pub logits: Vec<f32>,
+    /// KV caches, kept as XLA literals to feed straight back into decode.
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+    /// Wall-clock time of the PJRT execution (the *real* compute signal
+    /// that calibrates the device simulator).
+    pub elapsed: Duration,
+}
+
+/// Output of one decode step.
+pub struct DecodeOut {
+    /// Next-token logits, `[vocab]`.
+    pub logits: Vec<f32>,
+    pub k_cache: xla::Literal,
+    pub v_cache: xla::Literal,
+    pub elapsed: Duration,
+}
+
+struct VariantExec {
+    meta: VariantMeta,
+    prefill: xla::PjRtLoadedExecutable,
+    decode: xla::PjRtLoadedExecutable,
+    /// Fused greedy-decode chunk (§Perf): present when the artifact was
+    /// built with `decode_chunk_artifact`.
+    decode_chunk: Option<xla::PjRtLoadedExecutable>,
+}
+
+/// Loads + compiles artifacts and runs them on the PJRT CPU client.
+///
+/// One `Engine` owns the PJRT client and one compiled executable pair per
+/// model variant. All methods take `&self`; the underlying PJRT client is
+/// thread-safe for execution.
+pub struct Engine {
+    client: xla::PjRtClient,
+    variants: HashMap<String, VariantExec>,
+    artifacts_dir: PathBuf,
+    manifest: Manifest,
+}
+
+impl Engine {
+    /// Create an engine with no variants loaded yet.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifacts_dir = artifacts_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine { client, variants: HashMap::new(), artifacts_dir, manifest })
+    }
+
+    /// Load + compile the artifacts for `name` (idempotent).
+    pub fn load_variant(&mut self, name: &str) -> Result<()> {
+        if self.variants.contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.variant(name)?.clone();
+        let (prefill_path, decode_path) =
+            self.manifest.artifact_paths(&self.artifacts_dir, name)?;
+        let prefill = self.compile(&prefill_path)?;
+        let decode = self.compile(&decode_path)?;
+        let decode_chunk = match &meta.decode_chunk_artifact {
+            Some(rel) => {
+                let path = self.artifacts_dir.join(rel);
+                if path.exists() {
+                    Some(self.compile(&path)?)
+                } else {
+                    None
+                }
+            }
+            None => None,
+        };
+        self.variants
+            .insert(name.to_string(), VariantExec { meta, prefill, decode, decode_chunk });
+        Ok(())
+    }
+
+    /// Load every variant present in the manifest.
+    pub fn load_all(&mut self) -> Result<()> {
+        let names: Vec<String> = self.manifest.variants.keys().cloned().collect();
+        for name in names {
+            self.load_variant(&name)?;
+        }
+        Ok(())
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let path_str = path.to_str().context("non-utf8 artifact path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn meta(&self, name: &str) -> Result<&VariantMeta> {
+        Ok(&self.exec(name)?.meta)
+    }
+
+    pub fn loaded_variants(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    fn exec(&self, name: &str) -> Result<&VariantExec> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name:?} not loaded (call load_variant)"))
+    }
+
+    /// Run the prefill artifact on a token prompt.
+    ///
+    /// `tokens` must have exactly `meta.prefill_len` entries, each in
+    /// `[0, vocab)`.
+    pub fn prefill(&self, name: &str, tokens: &[i32]) -> Result<PrefillOut> {
+        let v = self.exec(name)?;
+        anyhow::ensure!(
+            tokens.len() == v.meta.prefill_len,
+            "prefill expects {} tokens, got {}",
+            v.meta.prefill_len,
+            tokens.len()
+        );
+        if let Some(bad) = tokens.iter().find(|&&t| t < 0 || t as usize >= v.meta.vocab) {
+            anyhow::bail!("token {bad} out of vocab range 0..{}", v.meta.vocab);
+        }
+        let input = xla::Literal::vec1(tokens);
+        let start = Instant::now();
+        let result = v.prefill.execute::<xla::Literal>(&[input])?[0][0].to_literal_sync()?;
+        let elapsed = start.elapsed();
+        let (logits_lit, k_cache, v_cache) = result.to_tuple3()?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        Ok(PrefillOut { logits, k_cache, v_cache, elapsed })
+    }
+
+    /// Run one decode step: `token` at position `pos` against the caches.
+    pub fn decode(
+        &self,
+        name: &str,
+        token: i32,
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        pos: i32,
+    ) -> Result<DecodeOut> {
+        let v = self.exec(name)?;
+        anyhow::ensure!(
+            (0..v.meta.vocab as i32).contains(&token),
+            "token {token} out of vocab range"
+        );
+        anyhow::ensure!(
+            (0..v.meta.max_seq as i32).contains(&pos),
+            "pos {pos} outside cache capacity {}",
+            v.meta.max_seq
+        );
+        let tok_lit = xla::Literal::scalar(token);
+        let pos_lit = xla::Literal::scalar(pos);
+        let args = [&tok_lit, k_cache, v_cache, &pos_lit];
+        let start = Instant::now();
+        let result = v.decode.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let elapsed = start.elapsed();
+        let (logits_lit, k_cache, v_cache) = result.to_tuple3()?;
+        let logits = logits_lit.to_vec::<f32>()?;
+        Ok(DecodeOut { logits, k_cache, v_cache, elapsed })
+    }
+}
+
+impl Engine {
+    /// Does this variant carry the fused greedy-decode chunk?
+    pub fn has_decode_chunk(&self, name: &str) -> bool {
+        self.variants.get(name).map(|v| v.decode_chunk.is_some()).unwrap_or(false)
+    }
+
+    /// Fused greedy decode: generate `meta.decode_chunk` tokens in one
+    /// PJRT call (argmax sampling happens in-graph). Returns the tokens
+    /// plus updated caches and the call duration. The §Perf L2 hot-path
+    /// optimization — it amortizes the host↔device round trip across the
+    /// whole chunk.
+    pub fn decode_chunk(
+        &self,
+        name: &str,
+        token: i32,
+        k_cache: &xla::Literal,
+        v_cache: &xla::Literal,
+        pos: i32,
+    ) -> Result<(Vec<i32>, xla::Literal, xla::Literal, Duration)> {
+        let v = self.exec(name)?;
+        let exe = v
+            .decode_chunk
+            .as_ref()
+            .with_context(|| format!("variant {name:?} has no decode-chunk artifact"))?;
+        anyhow::ensure!(
+            pos as usize + v.meta.decode_chunk <= v.meta.max_seq,
+            "chunk of {} from pos {pos} exceeds cache capacity {}",
+            v.meta.decode_chunk,
+            v.meta.max_seq
+        );
+        let tok_lit = xla::Literal::scalar(token);
+        let pos_lit = xla::Literal::scalar(pos);
+        let args = [&tok_lit, k_cache, v_cache, &pos_lit];
+        let start = Instant::now();
+        let result = exe.execute::<&xla::Literal>(&args)?[0][0].to_literal_sync()?;
+        let elapsed = start.elapsed();
+        let (tokens_lit, k_cache, v_cache) = result.to_tuple3()?;
+        let tokens = tokens_lit.to_vec::<i32>()?;
+        Ok((tokens, k_cache, v_cache, elapsed))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    //! Engine tests live in `rust/tests/runtime_integration.rs` (they need
+    //! compiled artifacts); here we only test pure helpers.
+}

@@ -1,0 +1,191 @@
+//! The artifact manifest: shape + analytic-cost metadata emitted by
+//! `python/compile/aot.py` alongside the HLO text files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::json::Json;
+
+/// Metadata for one model-family variant's pair of artifacts.
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    pub name: String,
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub prefill_len: usize,
+    /// Parameter count of the paper's full-size model family (used by the
+    /// scaling formalisms).
+    pub paper_params: u64,
+    /// Parameter count of the scaled artifact actually executed.
+    pub variant_params: u64,
+    /// Analytic FLOPs of one full prefill of `prefill_len` tokens.
+    pub flops_prefill: u64,
+    /// Analytic FLOPs per decode step.
+    pub flops_per_token_decode: u64,
+    /// Bytes moved per decode step (weights + KV cache): the roofline
+    /// denominator for the memory-bound phase.
+    pub bytes_per_token_decode: u64,
+    pub cache_shape: [usize; 4],
+    pub prefill_artifact: String,
+    pub decode_artifact: String,
+    /// Optional fused greedy-decode chunk artifact (§Perf optimization).
+    pub decode_chunk_artifact: Option<String>,
+    /// Tokens produced per fused chunk call.
+    pub decode_chunk: usize,
+}
+
+impl VariantMeta {
+    fn from_json(v: &Json) -> Result<Self> {
+        let cache = v.field("cache_shape")?.as_arr()?;
+        anyhow::ensure!(cache.len() == 4, "cache_shape must have 4 dims");
+        Ok(VariantMeta {
+            name: v.str_field("name")?.to_string(),
+            vocab: v.usize_field("vocab")?,
+            d_model: v.usize_field("d_model")?,
+            n_layers: v.usize_field("n_layers")?,
+            n_heads: v.usize_field("n_heads")?,
+            head_dim: v.usize_field("head_dim")?,
+            d_ff: v.usize_field("d_ff")?,
+            max_seq: v.usize_field("max_seq")?,
+            prefill_len: v.usize_field("prefill_len")?,
+            paper_params: v.u64_field("paper_params")?,
+            variant_params: v.u64_field("variant_params")?,
+            flops_prefill: v.u64_field("flops_prefill")?,
+            flops_per_token_decode: v.u64_field("flops_per_token_decode")?,
+            bytes_per_token_decode: v.u64_field("bytes_per_token_decode")?,
+            cache_shape: [
+                cache[0].as_usize()?,
+                cache[1].as_usize()?,
+                cache[2].as_usize()?,
+                cache[3].as_usize()?,
+            ],
+            prefill_artifact: v.str_field("prefill_artifact")?.to_string(),
+            decode_artifact: v.str_field("decode_artifact")?.to_string(),
+            decode_chunk_artifact: v
+                .get("decode_chunk_artifact")
+                .and_then(|x| x.as_str().ok())
+                .map(|x| x.to_string()),
+            decode_chunk: v.get("decode_chunk").and_then(|x| x.as_usize().ok()).unwrap_or(0),
+        })
+    }
+
+    /// Arithmetic intensity (FLOPs/byte) of the prefill phase: the whole
+    /// prompt amortizes one streaming pass over the weights.
+    pub fn prefill_intensity(&self) -> f64 {
+        let bytes = 4.0 * self.variant_params as f64;
+        self.flops_prefill as f64 / bytes
+    }
+
+    /// Arithmetic intensity of one decode step (≈0.5: memory-bound).
+    pub fn decode_intensity(&self) -> f64 {
+        self.flops_per_token_decode as f64 / self.bytes_per_token_decode as f64
+    }
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub variants: BTreeMap<String, VariantMeta>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Self> {
+        let root = Json::parse(text).context("parsing manifest JSON")?;
+        let format = root.str_field("format")?.to_string();
+        anyhow::ensure!(format == "hlo-text", "unsupported artifact format {format:?}");
+        let mut variants = BTreeMap::new();
+        for (name, v) in root.field("variants")?.as_obj()? {
+            let meta = VariantMeta::from_json(v).with_context(|| format!("variant {name}"))?;
+            variants.insert(name.clone(), meta);
+        }
+        Ok(Manifest { format, variants })
+    }
+
+    pub fn load(dir: &Path) -> Result<Self> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {path:?} (run `make artifacts`)"))?;
+        Self::parse(&text).with_context(|| format!("parsing {path:?}"))
+    }
+
+    pub fn variant(&self, name: &str) -> Result<&VariantMeta> {
+        self.variants
+            .get(name)
+            .with_context(|| format!("variant {name:?} not in manifest"))
+    }
+
+    pub fn artifact_paths(&self, dir: &Path, name: &str) -> Result<(PathBuf, PathBuf)> {
+        let meta = self.variant(name)?;
+        Ok((dir.join(&meta.prefill_artifact), dir.join(&meta.decode_artifact)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_manifest_json() -> &'static str {
+        r#"{
+          "format": "hlo-text",
+          "variants": {
+            "gpt2": {
+              "name": "gpt2", "vocab": 512, "d_model": 64, "n_layers": 4,
+              "n_heads": 4, "head_dim": 16, "d_ff": 256, "max_seq": 64,
+              "prefill_len": 32, "paper_params": 125000000,
+              "variant_params": 268672, "flops_prefill": 17195008,
+              "flops_per_token_decode": 537344,
+              "bytes_per_token_decode": 1337344,
+              "cache_shape": [4, 4, 64, 16],
+              "prefill_artifact": "gpt2.prefill.hlo.txt",
+              "decode_artifact": "gpt2.decode.hlo.txt"
+            }
+          }
+        }"#
+    }
+
+    #[test]
+    fn parses_manifest() {
+        let m = Manifest::parse(sample_manifest_json()).unwrap();
+        let v = m.variant("gpt2").unwrap();
+        assert_eq!(v.n_layers, 4);
+        assert_eq!(v.cache_shape, [4, 4, 64, 16]);
+        assert_eq!(v.paper_params, 125_000_000);
+    }
+
+    #[test]
+    fn unknown_variant_errors() {
+        let m = Manifest::parse(sample_manifest_json()).unwrap();
+        assert!(m.variant("nonexistent").is_err());
+    }
+
+    #[test]
+    fn wrong_format_rejected() {
+        let bad = sample_manifest_json().replace("hlo-text", "proto");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_field_rejected() {
+        let bad = sample_manifest_json().replace("\"vocab\": 512,", "");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn decode_is_memory_bound_prefill_is_not() {
+        let m = Manifest::parse(sample_manifest_json()).unwrap();
+        let v = m.variant("gpt2").unwrap();
+        assert!(v.decode_intensity() < 2.0, "decode should be memory-bound");
+        assert!(
+            v.prefill_intensity() > 4.0 * v.decode_intensity(),
+            "prefill should be far more compute-intense than decode"
+        );
+    }
+}

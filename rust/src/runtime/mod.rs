@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts and executes them.
+//!
+//! This is the only place the Rust coordinator touches XLA. Artifacts are
+//! HLO *text* (see `python/compile/aot.py` for why), compiled once per
+//! model variant at startup and cached. Python is never invoked.
+
+pub mod engine;
+pub mod manifest;
+pub mod session;
+
+pub use engine::{DecodeOut, Engine, PrefillOut};
+pub use manifest::{Manifest, VariantMeta};
+pub use session::GenerationSession;

@@ -1,0 +1,182 @@
+//! A generation session: owns the KV cache literals between decode steps
+//! and performs token sampling (greedy or temperature) in Rust.
+
+use anyhow::Result;
+
+use crate::rng::Pcg;
+
+use super::engine::Engine;
+
+/// Token sampling policy applied to the logits returned by PJRT.
+#[derive(Debug, Clone, Copy)]
+pub enum Sampling {
+    /// Argmax.
+    Greedy,
+    /// Softmax with temperature; requires a seeded RNG stream.
+    Temperature(f64),
+}
+
+/// Per-request autoregressive generation state.
+///
+/// The session keeps the KV cache as XLA literals so each decode step
+/// feeds the previous step's output straight back into PJRT without
+/// re-materializing host-side tensors.
+pub struct GenerationSession<'a> {
+    engine: &'a Engine,
+    variant: String,
+    k_cache: xla::Literal,
+    v_cache: xla::Literal,
+    pos: i32,
+    max_seq: i32,
+    generated: Vec<i32>,
+    /// Cumulative wall-clock seconds spent inside PJRT for this session.
+    pub compute_seconds: f64,
+    /// Wall-clock seconds of the prefill execution alone.
+    pub prefill_seconds: f64,
+}
+
+impl<'a> GenerationSession<'a> {
+    /// Run prefill over `prompt` and return a session ready to decode.
+    /// Returns the session and the last-position logits of the prompt.
+    pub fn start(engine: &'a Engine, variant: &str, prompt: &[i32]) -> Result<(Self, Vec<f32>)> {
+        let meta = engine.meta(variant)?;
+        let vocab = meta.vocab;
+        let max_seq = meta.max_seq as i32;
+        let prefill_len = meta.prefill_len as i32;
+        let out = engine.prefill(variant, prompt)?;
+        let last_logits = out.logits[(prompt.len() - 1) * vocab..].to_vec();
+        let secs = out.elapsed.as_secs_f64();
+        Ok((
+            GenerationSession {
+                engine,
+                variant: variant.to_string(),
+                k_cache: out.k_cache,
+                v_cache: out.v_cache,
+                pos: prefill_len,
+                max_seq,
+                generated: Vec::new(),
+                compute_seconds: secs,
+                prefill_seconds: secs,
+            },
+            last_logits,
+        ))
+    }
+
+    /// Remaining decode capacity before the KV cache is full.
+    pub fn remaining(&self) -> i32 {
+        self.max_seq - self.pos
+    }
+
+    pub fn generated(&self) -> &[i32] {
+        &self.generated
+    }
+
+    /// Decode one token (the argument is the token to feed, i.e. the one
+    /// sampled from the previous logits). Returns the new logits.
+    pub fn step(&mut self, token: i32) -> Result<Vec<f32>> {
+        anyhow::ensure!(self.remaining() > 0, "KV cache exhausted at pos {}", self.pos);
+        let out = self.engine.decode(&self.variant, token, &self.k_cache, &self.v_cache, self.pos)?;
+        self.k_cache = out.k_cache;
+        self.v_cache = out.v_cache;
+        self.pos += 1;
+        self.generated.push(token);
+        self.compute_seconds += out.elapsed.as_secs_f64();
+        Ok(out.logits)
+    }
+
+    /// Generate up to `n` tokens starting from `logits`, sampling with
+    /// `policy`. Stops early when the cache fills.
+    pub fn generate(
+        &mut self,
+        mut logits: Vec<f32>,
+        n: usize,
+        policy: Sampling,
+        rng: &mut Pcg,
+    ) -> Result<Vec<i32>> {
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            if self.remaining() == 0 {
+                break;
+            }
+            let token = sample(&logits, policy, rng);
+            logits = self.step(token)?;
+            out.push(token);
+        }
+        Ok(out)
+    }
+}
+
+/// Sample a token id from raw logits.
+pub fn sample(logits: &[f32], policy: Sampling, rng: &mut Pcg) -> i32 {
+    match policy {
+        Sampling::Greedy => argmax(logits),
+        Sampling::Temperature(t) => {
+            let t = t.max(1e-6) as f32;
+            let max = logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let exps: Vec<f64> = logits.iter().map(|&l| (((l - max) / t) as f64).exp()).collect();
+            let total: f64 = exps.iter().sum();
+            let mut r = rng.next_f64() * total;
+            for (i, e) in exps.iter().enumerate() {
+                r -= e;
+                if r <= 0.0 {
+                    return i as i32;
+                }
+            }
+            (exps.len() - 1) as i32
+        }
+    }
+}
+
+fn argmax(logits: &[f32]) -> i32 {
+    let mut best = 0;
+    let mut best_v = f32::NEG_INFINITY;
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best_v = v;
+            best = i;
+        }
+    }
+    best as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_peak() {
+        assert_eq!(argmax(&[0.1, 3.0, -2.0, 2.9]), 1);
+    }
+
+    #[test]
+    fn greedy_sampling_deterministic() {
+        let mut rng = Pcg::seeded(0);
+        let logits = vec![0.0, 5.0, 1.0];
+        for _ in 0..5 {
+            assert_eq!(sample(&logits, Sampling::Greedy, &mut rng), 1);
+        }
+    }
+
+    #[test]
+    fn temperature_sampling_respects_distribution() {
+        let mut rng = Pcg::seeded(1);
+        // One dominant logit: low temperature should almost always pick it.
+        let logits = vec![0.0, 8.0, 0.0, 0.0];
+        let n = 500;
+        let hits = (0..n)
+            .filter(|_| sample(&logits, Sampling::Temperature(0.5), &mut rng) == 1)
+            .count();
+        assert!(hits > n * 95 / 100, "hits={hits}");
+    }
+
+    #[test]
+    fn temperature_sampling_explores_at_high_temp() {
+        let mut rng = Pcg::seeded(2);
+        let logits = vec![0.0, 1.0, 0.5, 0.2];
+        let mut seen = [false; 4];
+        for _ in 0..400 {
+            seen[sample(&logits, Sampling::Temperature(5.0), &mut rng) as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "high temperature should reach all tokens");
+    }
+}

@@ -1,0 +1,207 @@
+//! Failure detection and recovery (paper Principle 6.2).
+//!
+//! Detection channels (paper thresholds):
+//! - **timeout** — an inference exceeding 10× its expected latency;
+//! - **error rate** — >1% kernel failures over a 100-inference window;
+//! - **heartbeat** — device unresponsive beyond the heartbeat deadline.
+//!
+//! Recovery: mark failed → redistribute pending + in-flight work within
+//! 100 ms (zero query loss: work is re-queued, never dropped) → attempt
+//! driver reset → reintroduce at 50% capacity.
+
+use std::collections::VecDeque;
+
+use crate::devices::spec::DeviceId;
+
+/// A detected fault.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultEvent {
+    Timeout { device: DeviceId, expected_s: f64, observed_s: f64 },
+    ErrorRate { device: DeviceId, rate: f64 },
+    HeartbeatLost { device: DeviceId, silent_for_s: f64 },
+}
+
+impl FaultEvent {
+    pub fn device(&self) -> &DeviceId {
+        match self {
+            FaultEvent::Timeout { device, .. } => device,
+            FaultEvent::ErrorRate { device, .. } => device,
+            FaultEvent::HeartbeatLost { device, .. } => device,
+        }
+    }
+}
+
+/// What the monitor tells the orchestrator to do.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RecoveryAction {
+    /// Exclude the device and redistribute its queue now.
+    FailAndRedistribute { device: DeviceId, deadline_s: f64 },
+    /// Keep scheduling but at degraded share.
+    Degrade { device: DeviceId },
+}
+
+/// Sliding-window fault detector for one device.
+#[derive(Debug, Clone)]
+pub struct FaultDetector {
+    device: DeviceId,
+    /// Kernel outcome window (true = ok).
+    window: VecDeque<bool>,
+    window_size: usize,
+    /// Error-rate threshold (paper: 1%).
+    error_threshold: f64,
+    /// Timeout multiple (paper: 10×).
+    timeout_multiple: f64,
+    /// Heartbeat deadline (s).
+    heartbeat_deadline_s: f64,
+    last_heartbeat_s: f64,
+    /// Redistribution deadline after failure (paper: 100 ms).
+    pub redistribution_deadline_s: f64,
+}
+
+impl FaultDetector {
+    pub fn new(device: DeviceId) -> Self {
+        FaultDetector {
+            device,
+            window: VecDeque::with_capacity(100),
+            window_size: 100,
+            error_threshold: 0.01,
+            timeout_multiple: 10.0,
+            heartbeat_deadline_s: 1.0,
+            last_heartbeat_s: 0.0,
+            redistribution_deadline_s: 0.1,
+        }
+    }
+
+    /// Record an inference outcome; returns a fault if a channel trips.
+    pub fn record_inference(
+        &mut self,
+        ok: bool,
+        expected_s: f64,
+        observed_s: f64,
+    ) -> Option<FaultEvent> {
+        if self.window.len() == self.window_size {
+            self.window.pop_front();
+        }
+        self.window.push_back(ok);
+
+        if observed_s > self.timeout_multiple * expected_s {
+            return Some(FaultEvent::Timeout {
+                device: self.device.clone(),
+                expected_s,
+                observed_s,
+            });
+        }
+        // Error-rate channel requires a full window (avoids tripping on
+        // one early failure).
+        if self.window.len() == self.window_size {
+            let errors = self.window.iter().filter(|&&o| !o).count();
+            let rate = errors as f64 / self.window.len() as f64;
+            if rate > self.error_threshold {
+                return Some(FaultEvent::ErrorRate { device: self.device.clone(), rate });
+            }
+        }
+        None
+    }
+
+    pub fn heartbeat(&mut self, now_s: f64) {
+        self.last_heartbeat_s = now_s;
+    }
+
+    /// Check the heartbeat channel at `now_s`.
+    pub fn check_heartbeat(&self, now_s: f64) -> Option<FaultEvent> {
+        let silent = now_s - self.last_heartbeat_s;
+        (silent > self.heartbeat_deadline_s).then(|| FaultEvent::HeartbeatLost {
+            device: self.device.clone(),
+            silent_for_s: silent,
+        })
+    }
+
+    /// Map a fault to its recovery action.
+    pub fn action_for(&self, event: &FaultEvent, now_s: f64) -> RecoveryAction {
+        match event {
+            FaultEvent::Timeout { device, .. } | FaultEvent::HeartbeatLost { device, .. } => {
+                RecoveryAction::FailAndRedistribute {
+                    device: device.clone(),
+                    deadline_s: now_s + self.redistribution_deadline_s,
+                }
+            }
+            FaultEvent::ErrorRate { device, rate } => {
+                if *rate > 0.10 {
+                    RecoveryAction::FailAndRedistribute {
+                        device: device.clone(),
+                        deadline_s: now_s + self.redistribution_deadline_s,
+                    }
+                } else {
+                    RecoveryAction::Degrade { device: device.clone() }
+                }
+            }
+        }
+    }
+
+    pub fn reset_window(&mut self) {
+        self.window.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timeout_detected_at_ten_x() {
+        let mut d = FaultDetector::new("gpu0".into());
+        assert!(d.record_inference(true, 0.01, 0.05).is_none());
+        let f = d.record_inference(true, 0.01, 0.11).unwrap();
+        assert!(matches!(f, FaultEvent::Timeout { .. }));
+    }
+
+    #[test]
+    fn error_rate_needs_full_window() {
+        let mut d = FaultDetector::new("gpu0".into());
+        // 2 early failures in a short window must NOT trip.
+        assert!(d.record_inference(false, 0.01, 0.01).is_none());
+        assert!(d.record_inference(false, 0.01, 0.01).is_none());
+        // Fill to 100 with successes: 2% > 1% -> trips at window full.
+        let mut tripped = None;
+        for _ in 0..98 {
+            tripped = d.record_inference(true, 0.01, 0.01);
+            if tripped.is_some() {
+                break;
+            }
+        }
+        assert!(matches!(tripped, Some(FaultEvent::ErrorRate { .. })));
+    }
+
+    #[test]
+    fn clean_window_never_trips() {
+        let mut d = FaultDetector::new("npu0".into());
+        for _ in 0..500 {
+            assert!(d.record_inference(true, 0.01, 0.012).is_none());
+        }
+    }
+
+    #[test]
+    fn heartbeat_channel() {
+        let mut d = FaultDetector::new("gpu0".into());
+        d.heartbeat(5.0);
+        assert!(d.check_heartbeat(5.5).is_none());
+        let f = d.check_heartbeat(6.5).unwrap();
+        assert!(matches!(f, FaultEvent::HeartbeatLost { .. }));
+    }
+
+    #[test]
+    fn actions_match_severity() {
+        let d = FaultDetector::new("gpu0".into());
+        let timeout = FaultEvent::Timeout { device: "gpu0".into(), expected_s: 0.01, observed_s: 1.0 };
+        match d.action_for(&timeout, 100.0) {
+            RecoveryAction::FailAndRedistribute { deadline_s, .. } => {
+                assert!((deadline_s - 100.1).abs() < 1e-12, "100 ms deadline");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        let mild = FaultEvent::ErrorRate { device: "gpu0".into(), rate: 0.02 };
+        assert!(matches!(d.action_for(&mild, 0.0), RecoveryAction::Degrade { .. }));
+        let severe = FaultEvent::ErrorRate { device: "gpu0".into(), rate: 0.5 };
+        assert!(matches!(d.action_for(&severe, 0.0), RecoveryAction::FailAndRedistribute { .. }));
+    }
+}

@@ -1,0 +1,181 @@
+//! Per-device health FSM (paper Principle 6.2):
+//! Healthy → Degraded → Failed → Recovering(50% capacity) → Healthy.
+
+use crate::devices::spec::DeviceId;
+
+/// Health state machine states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HealthState {
+    Healthy,
+    /// Elevated error rate — still schedulable at reduced share.
+    Degraded,
+    /// Not schedulable.
+    Failed,
+    /// Back from failure; reintroduced at 50% capacity (paper §3.4.2).
+    Recovering,
+}
+
+impl HealthState {
+    pub fn schedulable(&self) -> bool {
+        !matches!(self, HealthState::Failed)
+    }
+
+    /// Capacity multiplier applied by the orchestrator.
+    pub fn capacity_factor(&self) -> f64 {
+        match self {
+            HealthState::Healthy => 1.0,
+            HealthState::Degraded => 0.7,
+            HealthState::Failed => 0.0,
+            HealthState::Recovering => 0.5,
+        }
+    }
+}
+
+/// Health record for one device.
+#[derive(Debug, Clone)]
+pub struct DeviceHealth {
+    pub device: DeviceId,
+    state: HealthState,
+    /// Virtual time the device entered its current state.
+    since_s: f64,
+    /// Completed inferences since entering Recovering (graduation count).
+    recovery_successes: u32,
+    /// Total failures observed over the device's lifetime.
+    pub failures_total: u64,
+}
+
+/// Successful inferences required to graduate Recovering → Healthy.
+const RECOVERY_GRADUATION: u32 = 50;
+
+impl DeviceHealth {
+    pub fn new(device: DeviceId) -> Self {
+        DeviceHealth {
+            device,
+            state: HealthState::Healthy,
+            since_s: 0.0,
+            recovery_successes: 0,
+            failures_total: 0,
+        }
+    }
+
+    pub fn state(&self) -> HealthState {
+        self.state
+    }
+
+    pub fn since_s(&self) -> f64 {
+        self.since_s
+    }
+
+    pub fn mark_failed(&mut self, now_s: f64) {
+        if self.state != HealthState::Failed {
+            self.state = HealthState::Failed;
+            self.since_s = now_s;
+            self.failures_total += 1;
+        }
+    }
+
+    pub fn mark_degraded(&mut self, now_s: f64) {
+        if self.state == HealthState::Healthy {
+            self.state = HealthState::Degraded;
+            self.since_s = now_s;
+        }
+    }
+
+    /// Driver reset succeeded: enter Recovering at 50% capacity.
+    pub fn mark_recovering(&mut self, now_s: f64) {
+        if self.state == HealthState::Failed {
+            self.state = HealthState::Recovering;
+            self.since_s = now_s;
+            self.recovery_successes = 0;
+        }
+    }
+
+    /// Record a successful inference; may graduate to Healthy.
+    pub fn record_success(&mut self, now_s: f64) {
+        match self.state {
+            HealthState::Recovering => {
+                self.recovery_successes += 1;
+                if self.recovery_successes >= RECOVERY_GRADUATION {
+                    self.state = HealthState::Healthy;
+                    self.since_s = now_s;
+                }
+            }
+            HealthState::Degraded => {
+                // Sustained success clears degradation after a while.
+                self.recovery_successes += 1;
+                if self.recovery_successes >= RECOVERY_GRADUATION * 2 {
+                    self.state = HealthState::Healthy;
+                    self.since_s = now_s;
+                    self.recovery_successes = 0;
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_healthy_failed_recovering_healthy() {
+        let mut h = DeviceHealth::new("gpu0".into());
+        assert_eq!(h.state(), HealthState::Healthy);
+        h.mark_failed(10.0);
+        assert_eq!(h.state(), HealthState::Failed);
+        assert!(!h.state().schedulable());
+        h.mark_recovering(10.1);
+        assert_eq!(h.state(), HealthState::Recovering);
+        assert_eq!(h.state().capacity_factor(), 0.5);
+        for _ in 0..RECOVERY_GRADUATION {
+            h.record_success(11.0);
+        }
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn double_failure_counts_once_per_episode() {
+        let mut h = DeviceHealth::new("gpu0".into());
+        h.mark_failed(1.0);
+        h.mark_failed(2.0);
+        assert_eq!(h.failures_total, 1);
+        h.mark_recovering(3.0);
+        h.mark_failed(4.0);
+        assert_eq!(h.failures_total, 2);
+    }
+
+    #[test]
+    fn degraded_still_schedulable_at_reduced_capacity() {
+        let mut h = DeviceHealth::new("npu0".into());
+        h.mark_degraded(5.0);
+        assert!(h.state().schedulable());
+        assert!(h.state().capacity_factor() < 1.0);
+    }
+
+    #[test]
+    fn recovering_resets_on_new_failure() {
+        let mut h = DeviceHealth::new("gpu0".into());
+        h.mark_failed(1.0);
+        h.mark_recovering(2.0);
+        for _ in 0..RECOVERY_GRADUATION - 1 {
+            h.record_success(3.0);
+        }
+        h.mark_failed(4.0);
+        h.mark_recovering(5.0);
+        // Must need a full fresh set of successes.
+        for _ in 0..RECOVERY_GRADUATION - 1 {
+            h.record_success(6.0);
+        }
+        assert_eq!(h.state(), HealthState::Recovering);
+        h.record_success(7.0);
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn recovering_only_from_failed() {
+        let mut h = DeviceHealth::new("cpu0".into());
+        h.mark_recovering(1.0);
+        assert_eq!(h.state(), HealthState::Healthy, "no-op unless Failed");
+    }
+}

@@ -1,0 +1,30 @@
+//! Safety-first reliability framework (paper §3.4, contribution #6).
+//!
+//! "Safety-first, capability-second": this module has override authority
+//! over the optimization engine. Components:
+//!
+//! - [`thermal_guard`] — proactive workload shedding at 85% of T_max
+//!   (Eq. 8), preventing hardware emergency throttling.
+//! - [`health`] — per-device health FSM (Healthy → Degraded → Failed →
+//!   Recovering), driving fault-tolerant re-planning.
+//! - [`fault`] — failure detection (timeout / error-rate / heartbeat)
+//!   and the ≤100 ms redistribution policy with zero query loss.
+//! - [`validation`] — adversarial input validation (length, UTF-8,
+//!   token-rate).
+//! - [`sanity`] — output sanity checks (length cap, repetition halt,
+//!   logit anomaly).
+//! - [`ratelimit`] — per-client token buckets (DDoS protection).
+
+pub mod fault;
+pub mod health;
+pub mod ratelimit;
+pub mod sanity;
+pub mod thermal_guard;
+pub mod validation;
+
+pub use fault::{FaultDetector, FaultEvent, RecoveryAction};
+pub use health::{DeviceHealth, HealthState};
+pub use ratelimit::RateLimiter;
+pub use sanity::{OutputSanity, SanityVerdict};
+pub use thermal_guard::ThermalGuard;
+pub use validation::{InputValidator, ValidationError};

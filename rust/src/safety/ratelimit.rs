@@ -1,0 +1,133 @@
+//! Per-client token-bucket rate limiting (paper Principle 6.3's
+//! "rate-limit to prevent resource exhaustion"; Table 12's rapid-fire
+//! DDoS row).
+
+use std::collections::HashMap;
+
+/// Token bucket limiter keyed by client id.
+#[derive(Debug, Clone)]
+pub struct RateLimiter {
+    /// Sustained allowance (requests per second).
+    pub rate_per_s: f64,
+    /// Burst capacity (bucket size).
+    pub burst: f64,
+    buckets: HashMap<u32, Bucket>,
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Bucket {
+    tokens: f64,
+    last_s: f64,
+}
+
+impl RateLimiter {
+    pub fn new(rate_per_s: f64, burst: f64) -> Self {
+        assert!(rate_per_s > 0.0 && burst >= 1.0);
+        RateLimiter { rate_per_s, burst, buckets: HashMap::new() }
+    }
+
+    /// Try to admit a request from `client` at time `now_s`.
+    pub fn admit(&mut self, client: u32, now_s: f64) -> bool {
+        let bucket = self
+            .buckets
+            .entry(client)
+            .or_insert(Bucket { tokens: self.burst, last_s: now_s });
+        // Refill.
+        let dt = (now_s - bucket.last_s).max(0.0);
+        bucket.tokens = (bucket.tokens + dt * self.rate_per_s).min(self.burst);
+        bucket.last_s = now_s;
+        if bucket.tokens >= 1.0 {
+            bucket.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Number of clients currently tracked.
+    pub fn clients(&self) -> usize {
+        self.buckets.len()
+    }
+
+    /// Drop state for clients idle longer than `idle_s` (memory bound).
+    pub fn evict_idle(&mut self, now_s: f64, idle_s: f64) {
+        self.buckets.retain(|_, b| now_s - b.last_s < idle_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_then_throttle() {
+        let mut rl = RateLimiter::new(10.0, 5.0);
+        let mut admitted = 0;
+        for _ in 0..20 {
+            if rl.admit(1, 0.0) {
+                admitted += 1;
+            }
+        }
+        assert_eq!(admitted, 5, "only the burst goes through instantly");
+    }
+
+    #[test]
+    fn refill_restores_allowance() {
+        let mut rl = RateLimiter::new(10.0, 5.0);
+        for _ in 0..5 {
+            assert!(rl.admit(1, 0.0));
+        }
+        assert!(!rl.admit(1, 0.0));
+        // After 0.5 s, 5 tokens refilled.
+        for _ in 0..5 {
+            assert!(rl.admit(1, 0.5));
+        }
+        assert!(!rl.admit(1, 0.5));
+    }
+
+    #[test]
+    fn clients_are_independent() {
+        let mut rl = RateLimiter::new(1.0, 2.0);
+        assert!(rl.admit(1, 0.0));
+        assert!(rl.admit(1, 0.0));
+        assert!(!rl.admit(1, 0.0));
+        // Client 2 unaffected.
+        assert!(rl.admit(2, 0.0));
+    }
+
+    #[test]
+    fn ddos_burst_mostly_blocked() {
+        // Table 12: rapid-fire requests blocked ~99%.
+        let mut rl = RateLimiter::new(10.0, 10.0);
+        let mut admitted = 0;
+        let n = 1000;
+        for i in 0..n {
+            let t = i as f64 * 0.0001; // 10k req/s offered
+            if rl.admit(42, t) {
+                admitted += 1;
+            }
+        }
+        let blocked = (n - admitted) as f64 / n as f64;
+        assert!(blocked > 0.98, "blocked={blocked}");
+    }
+
+    #[test]
+    fn sustained_legitimate_rate_unaffected() {
+        let mut rl = RateLimiter::new(10.0, 5.0);
+        // 5 req/s, well under the 10/s allowance.
+        for i in 0..100 {
+            assert!(rl.admit(7, i as f64 * 0.2), "request {i} wrongly throttled");
+        }
+    }
+
+    #[test]
+    fn eviction_bounds_memory() {
+        let mut rl = RateLimiter::new(1.0, 1.0);
+        for c in 0..100 {
+            rl.admit(c, 0.0);
+        }
+        assert_eq!(rl.clients(), 100);
+        rl.evict_idle(1000.0, 60.0);
+        assert_eq!(rl.clients(), 0);
+    }
+}

@@ -1,0 +1,186 @@
+//! Output sanity checking (paper Principle 6.3):
+//! - hard cap at 2× expected output length;
+//! - halt when >90% of the last 100 tokens repeat;
+//! - flag anomalous logit distributions (degenerate near-uniform or
+//!   collapsed single-spike outputs).
+
+/// Verdict for a generation step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SanityVerdict {
+    Ok,
+    /// Stop generating: length cap reached.
+    HaltLength,
+    /// Stop generating: pathological repetition.
+    HaltRepetition,
+    /// Continue but flag for monitoring (anomalous logits).
+    FlagAnomaly,
+}
+
+/// Streaming output monitor for one generation.
+#[derive(Debug, Clone)]
+pub struct OutputSanity {
+    expected_tokens: usize,
+    /// Hard cap multiple (paper: 2×).
+    cap_multiple: f64,
+    /// Repetition window (paper: 100 tokens) and threshold (90%).
+    window: Vec<i32>,
+    window_size: usize,
+    repetition_threshold: f64,
+    emitted: usize,
+    anomalies: u32,
+}
+
+impl OutputSanity {
+    pub fn new(expected_tokens: usize) -> Self {
+        OutputSanity {
+            expected_tokens,
+            cap_multiple: 2.0,
+            window: Vec::with_capacity(100),
+            window_size: 100,
+            repetition_threshold: 0.9,
+            emitted: 0,
+            anomalies: 0,
+        }
+    }
+
+    pub fn emitted(&self) -> usize {
+        self.emitted
+    }
+
+    pub fn anomalies(&self) -> u32 {
+        self.anomalies
+    }
+
+    /// Hard output cap in tokens.
+    pub fn cap(&self) -> usize {
+        (self.expected_tokens as f64 * self.cap_multiple).ceil() as usize
+    }
+
+    /// Check one emitted token (with its logits). Call before emitting.
+    pub fn check(&mut self, token: i32, logits: &[f32]) -> SanityVerdict {
+        if self.emitted >= self.cap() {
+            return SanityVerdict::HaltLength;
+        }
+        self.emitted += 1;
+        if self.window.len() == self.window_size {
+            self.window.remove(0);
+        }
+        self.window.push(token);
+
+        if self.window.len() == self.window_size {
+            let mode_count = mode_count(&self.window);
+            if mode_count as f64 / self.window.len() as f64 > self.repetition_threshold {
+                return SanityVerdict::HaltRepetition;
+            }
+        }
+
+        if logit_anomaly(logits) {
+            self.anomalies += 1;
+            return SanityVerdict::FlagAnomaly;
+        }
+        SanityVerdict::Ok
+    }
+}
+
+fn mode_count(tokens: &[i32]) -> usize {
+    let mut counts = std::collections::HashMap::new();
+    for &t in tokens {
+        *counts.entry(t).or_insert(0usize) += 1;
+    }
+    counts.values().copied().max().unwrap_or(0)
+}
+
+/// Anomalous logits: non-finite values, a collapsed distribution (top
+/// logit absurdly dominant), or a degenerate flat distribution.
+fn logit_anomaly(logits: &[f32]) -> bool {
+    if logits.is_empty() {
+        return true;
+    }
+    let mut max = f32::NEG_INFINITY;
+    let mut min = f32::INFINITY;
+    for &l in logits {
+        if !l.is_finite() {
+            return true;
+        }
+        max = max.max(l);
+        min = min.min(l);
+    }
+    let spread = max - min;
+    // Flat (< 1e-6 spread over a whole vocab) or spiked (> 1e4) are both
+    // outside anything a healthy transformer produces.
+    spread < 1e-6 || spread > 1e4
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn healthy_logits(n: usize) -> Vec<f32> {
+        (0..n).map(|i| ((i * 37 % 17) as f32) * 0.5 - 3.0).collect()
+    }
+
+    #[test]
+    fn normal_stream_is_ok() {
+        let mut s = OutputSanity::new(50);
+        let logits = healthy_logits(512);
+        for i in 0..50 {
+            assert_eq!(s.check(i % 97, &logits), SanityVerdict::Ok);
+        }
+    }
+
+    #[test]
+    fn length_cap_at_two_x() {
+        let mut s = OutputSanity::new(10);
+        let logits = healthy_logits(512);
+        let mut verdicts = Vec::new();
+        for i in 0..25 {
+            verdicts.push(s.check(i % 7, &logits));
+        }
+        assert_eq!(s.cap(), 20);
+        assert!(verdicts[..20].iter().all(|v| *v == SanityVerdict::Ok));
+        assert!(verdicts[20..].iter().all(|v| *v == SanityVerdict::HaltLength));
+    }
+
+    #[test]
+    fn repetition_halts() {
+        // Table 12's repetition-inducing prompt: >90% same token over 100.
+        let mut s = OutputSanity::new(200);
+        let logits = healthy_logits(512);
+        let mut halted = false;
+        for i in 0..150 {
+            let token = if i % 20 == 0 { 5 } else { 7 }; // 95% sevens
+            if s.check(token, &logits) == SanityVerdict::HaltRepetition {
+                halted = true;
+                break;
+            }
+        }
+        assert!(halted, "repetition must halt the stream");
+    }
+
+    #[test]
+    fn varied_stream_never_trips_repetition() {
+        let mut s = OutputSanity::new(500);
+        let logits = healthy_logits(512);
+        for i in 0..400 {
+            let v = s.check(i % 13, &logits);
+            assert_ne!(v, SanityVerdict::HaltRepetition);
+        }
+    }
+
+    #[test]
+    fn logit_anomalies_flagged() {
+        let mut s = OutputSanity::new(10);
+        assert_eq!(s.check(1, &[f32::NAN, 0.0]), SanityVerdict::FlagAnomaly);
+        assert_eq!(s.check(2, &[3.0; 512]), SanityVerdict::FlagAnomaly); // flat
+        let mut spiked = healthy_logits(512);
+        spiked[0] = 1e6;
+        assert_eq!(s.check(3, &spiked), SanityVerdict::FlagAnomaly);
+        assert_eq!(s.anomalies(), 3);
+    }
+
+    #[test]
+    fn empty_logits_are_anomalous() {
+        let mut s = OutputSanity::new(10);
+        assert_eq!(s.check(0, &[]), SanityVerdict::FlagAnomaly);
+    }
+}

@@ -1,0 +1,138 @@
+//! Proactive thermal protection (paper Principle 6.1, Eq. 8).
+//!
+//! Enforces `T_i ≤ θ·T_i^max` with θ = 0.85. Above the guard point the
+//! device's workload share is reduced by
+//! `1 − (T − θT_max)/(T_max − θT_max)` — linear shedding that reaches
+//! zero at the hard limit. Monitoring cadence follows the paper: 1 Hz
+//! normally, 10 Hz above 70% of the limit.
+
+use crate::devices::spec::DeviceSpec;
+
+/// The guard's recommendation for one device at one instant.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ThermalDecision {
+    /// Workload multiplier in [0, 1]: 1 = unrestricted, 0 = fully shed.
+    pub workload_factor: f64,
+    /// Whether the guard is actively shedding.
+    pub shedding: bool,
+    /// Monitoring interval to use until the next reading (s).
+    pub next_sample_s: f64,
+}
+
+/// Stateless thermal guard policy (state lives in the thermal model).
+#[derive(Debug, Clone)]
+pub struct ThermalGuard {
+    /// θ in Eq. 8 (paper: 0.85).
+    pub theta: f64,
+    /// Fraction of limit above which monitoring accelerates (paper: 0.7).
+    pub fast_monitor_at: f64,
+    pub slow_period_s: f64,
+    pub fast_period_s: f64,
+}
+
+impl Default for ThermalGuard {
+    fn default() -> Self {
+        ThermalGuard { theta: 0.85, fast_monitor_at: 0.70, slow_period_s: 1.0, fast_period_s: 0.1 }
+    }
+}
+
+impl ThermalGuard {
+    /// Guard temperature for a device: θ·T_max.
+    pub fn guard_temp_c(&self, spec: &DeviceSpec) -> f64 {
+        self.theta * spec.t_max_c
+    }
+
+    /// Evaluate the policy at a temperature reading.
+    pub fn evaluate(&self, spec: &DeviceSpec, temp_c: f64) -> ThermalDecision {
+        let guard = self.guard_temp_c(spec);
+        let fast_at = self.fast_monitor_at * spec.t_max_c;
+        let next_sample_s =
+            if temp_c >= fast_at { self.fast_period_s } else { self.slow_period_s };
+        if temp_c <= guard {
+            return ThermalDecision { workload_factor: 1.0, shedding: false, next_sample_s };
+        }
+        // Eq. 8 shedding: linear from 1 at guard to 0 at T_max.
+        let span = spec.t_max_c - guard;
+        let factor = (1.0 - (temp_c - guard) / span).clamp(0.0, 1.0);
+        ThermalDecision { workload_factor: factor, shedding: true, next_sample_s }
+    }
+
+    /// Steady-state safe power: the draw whose equilibrium temperature
+    /// sits exactly at the guard point (used for proactive planning).
+    pub fn safe_power_w(&self, spec: &DeviceSpec) -> f64 {
+        (self.guard_temp_c(spec) - spec.t_ambient_c) / spec.r_th_k_per_w
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn below_guard_no_shedding() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let g = ThermalGuard::default();
+        let d = g.evaluate(&spec, 60.0);
+        assert_eq!(d.workload_factor, 1.0);
+        assert!(!d.shedding);
+    }
+
+    #[test]
+    fn shedding_is_linear_between_guard_and_limit() {
+        let spec = DeviceSpec::nvidia_gpu(); // T_max 95, guard 80.75
+        let g = ThermalGuard::default();
+        let guard = g.guard_temp_c(&spec);
+        let mid = (guard + spec.t_max_c) / 2.0;
+        let d = g.evaluate(&spec, mid);
+        assert!(d.shedding);
+        assert!((d.workload_factor - 0.5).abs() < 1e-9);
+        let at_limit = g.evaluate(&spec, spec.t_max_c);
+        assert_eq!(at_limit.workload_factor, 0.0);
+    }
+
+    #[test]
+    fn monitoring_accelerates_when_hot() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let g = ThermalGuard::default();
+        assert_eq!(g.evaluate(&spec, 40.0).next_sample_s, 1.0);
+        // 70% of 95 = 66.5
+        assert_eq!(g.evaluate(&spec, 70.0).next_sample_s, 0.1);
+    }
+
+    #[test]
+    fn safe_power_keeps_steady_state_at_guard() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let g = ThermalGuard::default();
+        let p = g.safe_power_w(&spec);
+        let steady = spec.steady_temp_c(p);
+        assert!((steady - g.guard_temp_c(&spec)).abs() < 1e-9);
+        // And that's below the hardware throttle trip point.
+        assert!(steady < spec.t_throttle_hw_c);
+    }
+
+    #[test]
+    fn guard_prevents_hardware_throttling_in_closed_loop() {
+        // Integration: drive the RC model at TDP but let the guard shed;
+        // the device must never reach the hardware throttle point.
+        use crate::devices::thermal::ThermalState;
+        let spec = DeviceSpec::nvidia_gpu();
+        let guard = ThermalGuard::default();
+        let mut thermal = ThermalState::new(&spec);
+        for _ in 0..360_000 {
+            // 10 Hz for 10 simulated hours
+            let decision = guard.evaluate(&spec, thermal.temp_c());
+            let power = spec.idle_w + (spec.tdp_w - spec.idle_w) * decision.workload_factor;
+            thermal.step(&spec, power, 0.1);
+        }
+        assert_eq!(thermal.throttle_events(), 0, "guard must prevent hw throttling");
+        assert!(thermal.peak_c() < spec.t_throttle_hw_c);
+    }
+
+    #[test]
+    fn factor_clamped_beyond_limit() {
+        let spec = DeviceSpec::intel_npu();
+        let g = ThermalGuard::default();
+        let d = g.evaluate(&spec, spec.t_max_c + 20.0);
+        assert_eq!(d.workload_factor, 0.0);
+    }
+}

@@ -1,0 +1,152 @@
+//! Adversarial input validation (paper Principle 6.3, Table 12):
+//! sequence-length caps, strict UTF-8, and token-rate accounting.
+
+/// Why an input was rejected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ValidationError {
+    /// Prompt exceeds the model context window.
+    TooLong { tokens: usize, max: usize },
+    /// Byte payload is not valid UTF-8.
+    MalformedUtf8 { at_byte: usize },
+    /// Empty input.
+    Empty,
+    /// Token contains an id outside the vocabulary.
+    TokenOutOfRange { token: i64, vocab: usize },
+}
+
+impl std::fmt::Display for ValidationError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ValidationError::TooLong { tokens, max } => {
+                write!(f, "input of {tokens} tokens exceeds context window {max}")
+            }
+            ValidationError::MalformedUtf8 { at_byte } => {
+                write!(f, "malformed UTF-8 at byte {at_byte}")
+            }
+            ValidationError::Empty => write!(f, "empty input"),
+            ValidationError::TokenOutOfRange { token, vocab } => {
+                write!(f, "token {token} outside vocab 0..{vocab}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ValidationError {}
+
+/// Stateless validator configured per model.
+#[derive(Debug, Clone)]
+pub struct InputValidator {
+    /// Model context window (tokens).
+    pub max_tokens: usize,
+    /// Vocabulary size.
+    pub vocab: usize,
+}
+
+impl InputValidator {
+    pub fn new(max_tokens: usize, vocab: usize) -> Self {
+        InputValidator { max_tokens, vocab }
+    }
+
+    /// Validate a raw byte payload (the text path).
+    pub fn validate_text(&self, bytes: &[u8]) -> Result<(), ValidationError> {
+        if bytes.is_empty() {
+            return Err(ValidationError::Empty);
+        }
+        if let Err(e) = std::str::from_utf8(bytes) {
+            return Err(ValidationError::MalformedUtf8 { at_byte: e.valid_up_to() });
+        }
+        // Conservative 4-bytes-per-token bound for the length pre-check.
+        let approx_tokens = bytes.len().div_ceil(4);
+        if approx_tokens > 10 * self.max_tokens {
+            return Err(ValidationError::TooLong { tokens: approx_tokens, max: self.max_tokens });
+        }
+        Ok(())
+    }
+
+    /// Validate a tokenized prompt (the serving path).
+    pub fn validate_tokens(&self, tokens: &[i64]) -> Result<(), ValidationError> {
+        if tokens.is_empty() {
+            return Err(ValidationError::Empty);
+        }
+        if tokens.len() > self.max_tokens {
+            return Err(ValidationError::TooLong { tokens: tokens.len(), max: self.max_tokens });
+        }
+        for &t in tokens {
+            if t < 0 || t as usize >= self.vocab {
+                return Err(ValidationError::TokenOutOfRange { token: t, vocab: self.vocab });
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v() -> InputValidator {
+        InputValidator::new(64, 512)
+    }
+
+    #[test]
+    fn accepts_normal_input() {
+        v().validate_text("What is the boiling point of nitrogen?".as_bytes()).unwrap();
+        v().validate_tokens(&[1, 2, 3, 511]).unwrap();
+    }
+
+    #[test]
+    fn rejects_oversized_10x_context() {
+        // Table 12's "oversized input (10× context)" attack: blocked 100%.
+        let huge = vec![7i64; 641];
+        assert!(matches!(
+            v().validate_tokens(&huge),
+            Err(ValidationError::TooLong { .. })
+        ));
+        let huge_text = vec![b'a'; 64 * 4 * 10 + 4];
+        assert!(matches!(
+            v().validate_text(&huge_text),
+            Err(ValidationError::TooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_malformed_utf8() {
+        // Table 12's malformed-UTF-8 attack: blocked 100%.
+        let bad = [0x68, 0x69, 0xFF, 0xFE];
+        match v().validate_text(&bad) {
+            Err(ValidationError::MalformedUtf8 { at_byte }) => assert_eq!(at_byte, 2),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn rejects_truncated_multibyte() {
+        let truncated = "héllo".as_bytes()[..2].to_vec(); // cut inside é
+        assert!(matches!(
+            v().validate_text(&truncated),
+            Err(ValidationError::MalformedUtf8 { .. })
+        ));
+    }
+
+    #[test]
+    fn rejects_empty_and_out_of_vocab() {
+        assert_eq!(v().validate_text(b""), Err(ValidationError::Empty));
+        assert_eq!(v().validate_tokens(&[]), Err(ValidationError::Empty));
+        assert!(matches!(
+            v().validate_tokens(&[0, 512]),
+            Err(ValidationError::TokenOutOfRange { token: 512, .. })
+        ));
+        assert!(matches!(
+            v().validate_tokens(&[-1]),
+            Err(ValidationError::TokenOutOfRange { token: -1, .. })
+        ));
+    }
+
+    #[test]
+    fn boundary_lengths() {
+        let exactly_max = vec![1i64; 64];
+        v().validate_tokens(&exactly_max).unwrap();
+        let one_over = vec![1i64; 65];
+        assert!(v().validate_tokens(&one_over).is_err());
+    }
+}

@@ -1,0 +1,126 @@
+//! Bootstrap confidence intervals for the coverage-law fit (Table 1 uses
+//! 1000 resamples for the 95% CI on β).
+
+use anyhow::Result;
+
+use crate::rng::Pcg;
+
+use super::fit::{fit_coverage_law, LmOptions};
+
+/// A percentile confidence interval.
+#[derive(Debug, Clone, Copy)]
+pub struct ConfidenceInterval {
+    pub lo: f64,
+    pub hi: f64,
+    pub level: f64,
+}
+
+impl ConfidenceInterval {
+    pub fn contains(&self, x: f64) -> bool {
+        (self.lo..=self.hi).contains(&x)
+    }
+
+    pub fn overlaps(&self, other: &ConfidenceInterval) -> bool {
+        self.lo <= other.hi && other.lo <= self.hi
+    }
+
+    pub fn width(&self) -> f64 {
+        self.hi - self.lo
+    }
+}
+
+/// Bootstrap the β exponent: resample *per-query outcome matrices* is the
+/// statistically right thing, but the fit consumes aggregated (S, C)
+/// curves, so we resample curve points with replacement and refit —
+/// matching the paper's description ("bootstrap resampling, 1000
+/// iterations").
+pub fn bootstrap_ci(
+    data: &[(f64, f64)],
+    iterations: usize,
+    level: f64,
+    seed: u64,
+) -> Result<ConfidenceInterval> {
+    anyhow::ensure!((0.0..1.0).contains(&level), "level must be in (0,1)");
+    let mut rng = Pcg::seeded(seed);
+    let opts = LmOptions::default();
+    let mut betas = Vec::with_capacity(iterations);
+    let mut attempts = 0;
+    while betas.len() < iterations && attempts < iterations * 4 {
+        attempts += 1;
+        let resample: Vec<(f64, f64)> =
+            (0..data.len()).map(|_| data[rng.below(data.len() as u64) as usize]).collect();
+        // Need at least 3 distinct S values for an identifiable fit.
+        let mut xs: Vec<u64> = resample.iter().map(|&(s, _)| s.to_bits()).collect();
+        xs.sort_unstable();
+        xs.dedup();
+        if xs.len() < 3 {
+            continue;
+        }
+        if let Ok(fit) = fit_coverage_law(&resample, &opts) {
+            betas.push(fit.beta);
+        }
+    }
+    anyhow::ensure!(betas.len() >= iterations / 2, "too few successful bootstrap fits");
+    betas.sort_by(f64::total_cmp);
+    let tail = (1.0 - level) / 2.0;
+    let lo_idx = ((betas.len() as f64) * tail).floor() as usize;
+    let hi_idx = (((betas.len() as f64) * (1.0 - tail)).ceil() as usize).min(betas.len()) - 1;
+    Ok(ConfidenceInterval { lo: betas[lo_idx], hi: betas[hi_idx], level })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn noisy_curve(alpha: f64, beta: f64, noise: f64, seed: u64) -> Vec<(f64, f64)> {
+        let mut rng = Pcg::seeded(seed);
+        [1.0, 2.0, 4.0, 6.0, 8.0, 10.0, 14.0, 20.0, 30.0, 50.0]
+            .iter()
+            .map(|&s: &f64| {
+                let c = 1.0 - (-alpha * s.powf(beta)).exp();
+                (s, (c + rng.next_gauss() * noise).clamp(1e-4, 1.0 - 1e-4))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ci_contains_true_beta() {
+        let data = noisy_curve(0.07, 0.7, 0.004, 1);
+        let ci = bootstrap_ci(&data, 300, 0.95, 42).unwrap();
+        assert!(ci.contains(0.7), "CI [{}, {}] should contain 0.7", ci.lo, ci.hi);
+    }
+
+    #[test]
+    fn ci_is_ordered_and_tightens_with_less_noise() {
+        let noisy = noisy_curve(0.07, 0.7, 0.01, 2);
+        let clean = noisy_curve(0.07, 0.7, 0.001, 2);
+        let ci_noisy = bootstrap_ci(&noisy, 200, 0.95, 7).unwrap();
+        let ci_clean = bootstrap_ci(&clean, 200, 0.95, 7).unwrap();
+        assert!(ci_noisy.lo <= ci_noisy.hi);
+        assert!(ci_clean.width() < ci_noisy.width());
+    }
+
+    #[test]
+    fn deterministic_for_fixed_seed() {
+        let data = noisy_curve(0.05, 0.65, 0.005, 3);
+        let a = bootstrap_ci(&data, 100, 0.95, 11).unwrap();
+        let b = bootstrap_ci(&data, 100, 0.95, 11).unwrap();
+        assert_eq!(a.lo, b.lo);
+        assert_eq!(a.hi, b.hi);
+    }
+
+    #[test]
+    fn overlap_logic() {
+        let a = ConfidenceInterval { lo: 0.64, hi: 0.72, level: 0.95 };
+        let b = ConfidenceInterval { lo: 0.70, hi: 0.76, level: 0.95 };
+        let c = ConfidenceInterval { lo: 0.80, hi: 0.90, level: 0.95 };
+        assert!(a.overlaps(&b));
+        assert!(!a.overlaps(&c));
+    }
+
+    #[test]
+    fn invalid_level_rejected() {
+        let data = noisy_curve(0.05, 0.65, 0.005, 4);
+        assert!(bootstrap_ci(&data, 50, 1.5, 1).is_err());
+    }
+}

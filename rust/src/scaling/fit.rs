@@ -1,0 +1,225 @@
+//! Nonlinear least squares for the coverage law (Tables 1–2).
+//!
+//! Fits `C(S) = 1 − exp(−α·S^β)` to `(S, coverage)` measurements with
+//! Levenberg–Marquardt over the log-parameterization `(ln α, β)` — the
+//! log keeps α positive and conditions the problem.
+
+use anyhow::{bail, Result};
+
+/// LM solver options.
+#[derive(Debug, Clone)]
+pub struct LmOptions {
+    pub max_iters: usize,
+    pub tol: f64,
+    pub initial_lambda: f64,
+}
+
+impl Default for LmOptions {
+    fn default() -> Self {
+        LmOptions { max_iters: 200, tol: 1e-12, initial_lambda: 1e-3 }
+    }
+}
+
+/// Result of fitting the coverage law.
+#[derive(Debug, Clone)]
+pub struct CoverageFit {
+    pub alpha: f64,
+    pub beta: f64,
+    /// Coefficient of determination on the fitted points.
+    pub r_squared: f64,
+    /// Residual sum of squares.
+    pub rss: f64,
+    pub iterations: usize,
+}
+
+impl CoverageFit {
+    pub fn predict(&self, s: f64) -> f64 {
+        1.0 - (-self.alpha * s.powf(self.beta)).exp()
+    }
+}
+
+fn model(params: [f64; 2], s: f64) -> f64 {
+    let (ln_alpha, beta) = (params[0], params[1]);
+    1.0 - (-(ln_alpha.exp()) * s.powf(beta)).exp()
+}
+
+fn residuals(params: [f64; 2], data: &[(f64, f64)]) -> Vec<f64> {
+    data.iter().map(|&(s, c)| model(params, s) - c).collect()
+}
+
+fn rss_of(res: &[f64]) -> f64 {
+    res.iter().map(|r| r * r).sum()
+}
+
+/// Numeric Jacobian by central differences.
+fn jacobian(params: [f64; 2], data: &[(f64, f64)]) -> Vec<[f64; 2]> {
+    let mut jac = Vec::with_capacity(data.len());
+    let h = [1e-6_f64.max(params[0].abs() * 1e-6), 1e-6_f64.max(params[1].abs() * 1e-6)];
+    for &(s, _) in data {
+        let mut row = [0.0; 2];
+        for (j, hj) in h.iter().enumerate() {
+            let mut plus = params;
+            let mut minus = params;
+            plus[j] += hj;
+            minus[j] -= hj;
+            row[j] = (model(plus, s) - model(minus, s)) / (2.0 * hj);
+        }
+        jac.push(row);
+    }
+    jac
+}
+
+/// Solve the 2×2 system `(JᵀJ + λ diag(JᵀJ)) δ = −Jᵀr`.
+fn lm_step(jac: &[[f64; 2]], res: &[f64], lambda: f64) -> Option<[f64; 2]> {
+    let mut jtj = [[0.0; 2]; 2];
+    let mut jtr = [0.0; 2];
+    for (row, r) in jac.iter().zip(res) {
+        for a in 0..2 {
+            for b in 0..2 {
+                jtj[a][b] += row[a] * row[b];
+            }
+            jtr[a] += row[a] * r;
+        }
+    }
+    for d in 0..2 {
+        jtj[d][d] *= 1.0 + lambda;
+    }
+    let det = jtj[0][0] * jtj[1][1] - jtj[0][1] * jtj[1][0];
+    if det.abs() < 1e-300 {
+        return None;
+    }
+    let dx = [
+        -(jtj[1][1] * jtr[0] - jtj[0][1] * jtr[1]) / det,
+        -(jtj[0][0] * jtr[1] - jtj[1][0] * jtr[0]) / det,
+    ];
+    Some(dx)
+}
+
+/// Fit the coverage law to `(S, coverage)` points.
+pub fn fit_coverage_law(data: &[(f64, f64)], opts: &LmOptions) -> Result<CoverageFit> {
+    if data.len() < 3 {
+        bail!("need at least 3 points to fit, got {}", data.len());
+    }
+    for &(s, c) in data {
+        if s <= 0.0 || !(0.0..=1.0).contains(&c) {
+            bail!("invalid data point (S={s}, C={c})");
+        }
+    }
+
+    // Initial guess from the first point: assume β = 0.7.
+    let c0 = data[0].1.clamp(1e-6, 1.0 - 1e-6);
+    let s0 = data[0].0;
+    let alpha0 = -(1.0 - c0).ln() / s0.powf(0.7);
+    let mut params = [alpha0.max(1e-12).ln(), 0.7];
+    let mut lambda = opts.initial_lambda;
+    let mut res = residuals(params, data);
+    let mut rss = rss_of(&res);
+    let mut iterations = 0;
+
+    for iter in 0..opts.max_iters {
+        iterations = iter + 1;
+        let jac = jacobian(params, data);
+        let Some(step) = lm_step(&jac, &res, lambda) else {
+            lambda *= 10.0;
+            continue;
+        };
+        let trial = [params[0] + step[0], (params[1] + step[1]).clamp(0.01, 3.0)];
+        let trial_res = residuals(trial, data);
+        let trial_rss = rss_of(&trial_res);
+        if trial_rss < rss {
+            let delta = rss - trial_rss;
+            params = trial;
+            res = trial_res;
+            rss = trial_rss;
+            lambda = (lambda * 0.5).max(1e-12);
+            if delta < opts.tol {
+                break;
+            }
+        } else {
+            lambda *= 4.0;
+            if lambda > 1e12 {
+                break;
+            }
+        }
+    }
+
+    let mean_c: f64 = data.iter().map(|&(_, c)| c).sum::<f64>() / data.len() as f64;
+    let tss: f64 = data.iter().map(|&(_, c)| (c - mean_c) * (c - mean_c)).sum();
+    let r_squared = if tss > 0.0 { 1.0 - rss / tss } else { 1.0 };
+
+    Ok(CoverageFit { alpha: params[0].exp(), beta: params[1], r_squared, rss, iterations })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn synth(alpha: f64, beta: f64, points: &[f64]) -> Vec<(f64, f64)> {
+        points.iter().map(|&s| (s, 1.0 - (-alpha * s.powf(beta)).exp())).collect()
+    }
+
+    #[test]
+    fn recovers_exact_parameters() {
+        let data = synth(0.08, 0.7, &[1.0, 2.0, 5.0, 10.0, 15.0, 20.0, 50.0]);
+        let fit = fit_coverage_law(&data, &LmOptions::default()).unwrap();
+        assert!((fit.alpha - 0.08).abs() < 1e-4, "alpha={}", fit.alpha);
+        assert!((fit.beta - 0.7).abs() < 1e-4, "beta={}", fit.beta);
+        assert!(fit.r_squared > 0.9999);
+    }
+
+    #[test]
+    fn recovers_under_noise() {
+        let mut rng = crate::rng::Pcg::seeded(7);
+        let mut data = synth(0.05, 0.68, &[1.0, 3.0, 5.0, 8.0, 12.0, 16.0, 20.0, 30.0, 40.0]);
+        for p in data.iter_mut() {
+            p.1 = (p.1 + rng.next_gauss() * 0.005).clamp(0.001, 0.999);
+        }
+        let fit = fit_coverage_law(&data, &LmOptions::default()).unwrap();
+        assert!((fit.beta - 0.68).abs() < 0.08, "beta={}", fit.beta);
+        assert!(fit.r_squared > 0.98, "r2={}", fit.r_squared);
+    }
+
+    #[test]
+    fn predict_matches_model() {
+        let data = synth(0.1, 0.75, &[1.0, 5.0, 10.0, 20.0]);
+        let fit = fit_coverage_law(&data, &LmOptions::default()).unwrap();
+        for &(s, c) in &data {
+            assert!((fit.predict(s) - c).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn rejects_degenerate_input() {
+        assert!(fit_coverage_law(&[(1.0, 0.5)], &LmOptions::default()).is_err());
+        assert!(fit_coverage_law(&[(0.0, 0.5), (1.0, 0.6), (2.0, 0.7)], &LmOptions::default())
+            .is_err());
+        assert!(fit_coverage_law(&[(1.0, 1.5), (2.0, 0.6), (3.0, 0.7)], &LmOptions::default())
+            .is_err());
+    }
+
+    #[test]
+    fn beta_stays_in_sane_range() {
+        // Even with adversarial flat data, β must stay clamped.
+        let data = vec![(1.0, 0.5), (10.0, 0.5), (100.0, 0.5)];
+        let fit = fit_coverage_law(&data, &LmOptions::default()).unwrap();
+        assert!((0.01..=3.0).contains(&fit.beta));
+    }
+
+    #[test]
+    fn different_sample_ranges_shift_beta_mildly() {
+        // Mirror of Table 2: fitting over a larger S range on data from a
+        // saturating mixture gives a slightly different β, not a wild one.
+        let mix = |s: f64| {
+            // two-difficulty mixture => not exactly the fitted family
+            let easy = 1.0 - (1.0_f64 - 0.15).powf(s);
+            let hard = 1.0 - (1.0_f64 - 0.01).powf(s);
+            0.6 * easy + 0.4 * hard
+        };
+        let lo: Vec<(f64, f64)> = [1.0, 2.0, 4.0, 7.0, 10.0].iter().map(|&s| (s, mix(s))).collect();
+        let hi: Vec<(f64, f64)> =
+            [10.0, 20.0, 40.0, 70.0, 100.0].iter().map(|&s| (s, mix(s))).collect();
+        let f_lo = fit_coverage_law(&lo, &LmOptions::default()).unwrap();
+        let f_hi = fit_coverage_law(&hi, &LmOptions::default()).unwrap();
+        assert!((f_lo.beta - f_hi.beta).abs() < 0.5);
+    }
+}

@@ -1,0 +1,17 @@
+//! Inference-time scaling formalisms (paper §3.3) — both directions:
+//!
+//! - [`formalisms`] — the five closed-form laws used *predictively* by
+//!   the orchestrator (coverage, energy, latency, cost, roofline match).
+//! - [`fit`] — nonlinear least squares (Levenberg–Marquardt) used to
+//!   *recover* the exponents from measured sweeps (Tables 1–2).
+//! - [`bootstrap`] — resampled confidence intervals for the fits.
+//! - [`stats`] — R², coefficient of variation, percentiles.
+
+pub mod bootstrap;
+pub mod fit;
+pub mod formalisms;
+pub mod stats;
+
+pub use bootstrap::bootstrap_ci;
+pub use fit::{fit_coverage_law, CoverageFit, LmOptions};
+pub use formalisms::{CoverageLaw, CostLaw, EnergyLaw, LatencyLaw};

@@ -1,0 +1,121 @@
+//! Small statistics toolbox: mean/std/CV (Table 5), percentiles
+//! (latency tails in Table 10), and R² helpers.
+
+/// Summary of a sample of measurements.
+#[derive(Debug, Clone, Copy)]
+pub struct Summary {
+    pub n: usize,
+    pub mean: f64,
+    pub std_dev: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Coefficient of variation in percent (Table 5 reports CV%).
+    pub fn cv_percent(&self) -> f64 {
+        if self.mean == 0.0 {
+            return f64::NAN;
+        }
+        100.0 * self.std_dev / self.mean.abs()
+    }
+}
+
+/// Compute summary statistics (sample standard deviation, n−1).
+pub fn summarize(xs: &[f64]) -> Summary {
+    assert!(!xs.is_empty(), "summarize requires data");
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = if n > 1 {
+        xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / (n - 1) as f64
+    } else {
+        0.0
+    };
+    let min = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    Summary { n, mean, std_dev: var.sqrt(), min, max }
+}
+
+/// Linear-interpolated percentile, `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile requires data");
+    let mut sorted = xs.to_vec();
+    sorted.sort_by(f64::total_cmp);
+    let rank = (p / 100.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// R² of predictions vs observations.
+pub fn r_squared(observed: &[f64], predicted: &[f64]) -> f64 {
+    assert_eq!(observed.len(), predicted.len());
+    assert!(!observed.is_empty());
+    let mean = observed.iter().sum::<f64>() / observed.len() as f64;
+    let tss: f64 = observed.iter().map(|o| (o - mean) * (o - mean)).sum();
+    let rss: f64 = observed.iter().zip(predicted).map(|(o, p)| (o - p) * (o - p)).sum();
+    if tss == 0.0 {
+        if rss == 0.0 {
+            1.0
+        } else {
+            f64::NEG_INFINITY
+        }
+    } else {
+        1.0 - rss / tss
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_of_constant_data() {
+        let s = summarize(&[5.0, 5.0, 5.0]);
+        assert_eq!(s.mean, 5.0);
+        assert_eq!(s.std_dev, 0.0);
+        assert_eq!(s.cv_percent(), 0.0);
+        assert_eq!((s.min, s.max), (5.0, 5.0));
+    }
+
+    #[test]
+    fn summary_known_values() {
+        let s = summarize(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        // Sample std dev of this classic dataset is ~2.138.
+        assert!((s.std_dev - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_unsorted_input() {
+        let xs = [9.0, 1.0, 5.0];
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+    }
+
+    #[test]
+    fn r_squared_perfect_and_mean_model() {
+        let obs = [1.0, 2.0, 3.0];
+        assert_eq!(r_squared(&obs, &obs), 1.0);
+        let mean_pred = [2.0, 2.0, 2.0];
+        assert!((r_squared(&obs, &mean_pred) - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_percent_scales() {
+        let s = summarize(&[90.0, 100.0, 110.0]);
+        assert!((s.cv_percent() - 10.0).abs() < 0.5);
+    }
+}

@@ -1,0 +1,105 @@
+//! Request/response types of the serving API.
+
+use std::time::Duration;
+
+/// An inference request as admitted by the request loop.
+#[derive(Debug, Clone)]
+pub struct InferenceRequest {
+    pub client_id: u32,
+    /// Tokenized prompt (the validator enforces vocab and length).
+    pub prompt: Vec<i64>,
+    /// Tokens to generate per sample.
+    pub max_new_tokens: usize,
+    /// Sampling temperature; 0 = greedy.
+    pub temperature: f64,
+    /// Seed for temperature sampling.
+    pub seed: u64,
+}
+
+/// Why a request was turned away before execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RejectReason {
+    Validation(String),
+    RateLimited,
+    Overloaded,
+}
+
+/// A served response.
+#[derive(Debug, Clone)]
+pub struct InferenceResponse {
+    pub tokens: Vec<i32>,
+    /// End-to-end latency including queueing.
+    pub latency: Duration,
+    /// Pure compute time inside PJRT.
+    pub compute: Duration,
+    /// Output-sanity anomalies flagged during generation.
+    pub anomalies: u32,
+    /// True when generation was halted early by a sanity check.
+    pub halted_early: bool,
+}
+
+/// Aggregate statistics for a serving run.
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub served: u64,
+    pub rejected_validation: u64,
+    pub rejected_rate_limited: u64,
+    pub tokens_out: u64,
+    pub total_latency_s: f64,
+    pub max_latency_s: f64,
+    pub total_compute_s: f64,
+    pub halted_early: u64,
+    pub wall_s: f64,
+}
+
+impl ServeStats {
+    pub fn mean_latency_s(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.total_latency_s / self.served as f64
+    }
+
+    pub fn throughput_tps(&self) -> f64 {
+        if self.wall_s == 0.0 {
+            return 0.0;
+        }
+        self.tokens_out as f64 / self.wall_s
+    }
+
+    pub fn admitted_fraction(&self) -> f64 {
+        let total = self.served + self.rejected_validation + self.rejected_rate_limited;
+        if total == 0 {
+            return 1.0;
+        }
+        self.served as f64 / total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_derived_quantities() {
+        let s = ServeStats {
+            served: 10,
+            tokens_out: 800,
+            total_latency_s: 2.0,
+            wall_s: 4.0,
+            rejected_rate_limited: 10,
+            ..Default::default()
+        };
+        assert!((s.mean_latency_s() - 0.2).abs() < 1e-12);
+        assert!((s.throughput_tps() - 200.0).abs() < 1e-12);
+        assert!((s.admitted_fraction() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_stats_are_safe() {
+        let s = ServeStats::default();
+        assert_eq!(s.mean_latency_s(), 0.0);
+        assert_eq!(s.throughput_tps(), 0.0);
+        assert_eq!(s.admitted_fraction(), 1.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! `qeil serve` — run the serving loop over a synthetic request trace
+//! with the real PJRT engine, reporting latency/throughput.
+
+use anyhow::Result;
+
+use crate::cli::Args;
+use crate::rng::Pcg;
+use crate::workload::datasets::{Dataset, ModelFamily};
+use crate::workload::generator::WorkloadGenerator;
+use crate::workload::trace::RequestTrace;
+
+use super::api::InferenceRequest;
+use super::service::{Service, ServiceConfig};
+
+pub fn run(args: &Args) -> Result<()> {
+    let variant = args.opt("variant", "gpt2");
+    let family = ModelFamily::from_str(&variant)?;
+    let dataset = Dataset::from_str(&args.opt("dataset", "wikitext-103"))?;
+    let requests: usize = args.num("requests", 32usize)?;
+    let rate: f64 = args.num("rate", 8.0f64)?;
+    let max_new: usize = args.num("max-new-tokens", 16usize)?;
+    let seed: u64 = args.num("seed", 0u64)?;
+
+    let config = ServiceConfig {
+        artifacts_dir: args.opt("artifacts", "artifacts"),
+        variant: variant.clone(),
+        ..Default::default()
+    };
+    println!("starting service: variant={variant} dataset={} requests={requests}", dataset.as_str());
+    let mut service = Service::start(&config)?;
+
+    let queries = WorkloadGenerator::new(dataset, family, seed).queries(requests);
+    let trace = RequestTrace::poisson(queries, rate, 4, seed);
+    let mut rng = Pcg::seeded(seed);
+
+    for traced in trace.requests() {
+        let prompt: Vec<i64> =
+            (0..config.max_prompt_tokens).map(|_| rng.below(config.vocab as u64) as i64).collect();
+        let request = InferenceRequest {
+            client_id: traced.client_id,
+            prompt,
+            max_new_tokens: max_new,
+            temperature: 0.8,
+            seed: rng.next_u64(),
+        };
+        match service.handle(request, traced.arrival_s) {
+            Ok(resp) => println!(
+                "  ok  client={} tokens={} latency={:.2} ms",
+                traced.client_id,
+                resp.tokens.len(),
+                resp.latency.as_secs_f64() * 1e3
+            ),
+            Err(reason) => println!("  rej client={} {:?}", traced.client_id, reason),
+        }
+    }
+
+    let stats = service.stats();
+    println!(
+        "\nserved {} / rejected {} (validation) + {} (rate)\nmean latency {:.2} ms  max {:.2} ms  throughput {:.1} tok/s",
+        stats.served,
+        stats.rejected_validation,
+        stats.rejected_rate_limited,
+        stats.mean_latency_s() * 1e3,
+        stats.max_latency_s * 1e3,
+        stats.throughput_tps(),
+    );
+    Ok(())
+}

@@ -1,0 +1,132 @@
+//! The PJRT executor thread: owns the (`!Send`) engine, services compute
+//! jobs from a channel.
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::rng::Pcg;
+use crate::runtime::session::{sample, Sampling};
+use crate::runtime::{Engine, GenerationSession};
+use crate::safety::sanity::{OutputSanity, SanityVerdict};
+
+use super::api::{InferenceRequest, InferenceResponse};
+
+/// A compute job: request plus a channel to send the result back on.
+pub struct Job {
+    pub request: InferenceRequest,
+    pub reply: mpsc::Sender<Result<InferenceResponse>>,
+    pub enqueued: Instant,
+}
+
+/// Handle to the executor thread.
+pub struct ExecutorHandle {
+    tx: mpsc::Sender<Job>,
+    join: Option<JoinHandle<()>>,
+}
+
+impl ExecutorHandle {
+    /// Spawn the executor: builds the engine *inside* the thread (the
+    /// engine is `!Send`) and loads `variant`.
+    pub fn spawn(artifacts_dir: String, variant: String) -> Result<ExecutorHandle> {
+        let (tx, rx) = mpsc::channel::<Job>();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let join = std::thread::Builder::new()
+            .name("pjrt-executor".into())
+            .spawn(move || {
+                let engine = match build_engine(&artifacts_dir, &variant) {
+                    Ok(e) => {
+                        let _ = ready_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = ready_tx.send(Err(e));
+                        return;
+                    }
+                };
+                for job in rx {
+                    let result = execute(&engine, &variant, &job);
+                    let _ = job.reply.send(result);
+                }
+            })?;
+        ready_rx
+            .recv()
+            .map_err(|_| anyhow!("executor thread died during startup"))??;
+        Ok(ExecutorHandle { tx, join: Some(join) })
+    }
+
+    /// Submit a job (non-blocking).
+    pub fn submit(&self, job: Job) -> Result<()> {
+        self.tx.send(job).map_err(|_| anyhow!("executor thread has shut down"))
+    }
+
+    /// Convenience: run one request synchronously.
+    pub fn run_sync(&self, request: InferenceRequest) -> Result<InferenceResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.submit(Job { request, reply: reply_tx, enqueued: Instant::now() })?;
+        reply_rx.recv().map_err(|_| anyhow!("executor dropped the reply channel"))?
+    }
+}
+
+impl Drop for ExecutorHandle {
+    fn drop(&mut self) {
+        // Close the channel; the thread drains and exits.
+        let (dead_tx, _) = mpsc::channel();
+        self.tx = dead_tx;
+        if let Some(join) = self.join.take() {
+            let _ = join.join();
+        }
+    }
+}
+
+fn build_engine(artifacts_dir: &str, variant: &str) -> Result<Engine> {
+    let mut engine = Engine::new(artifacts_dir)?;
+    engine.load_variant(variant)?;
+    Ok(engine)
+}
+
+fn execute(engine: &Engine, variant: &str, job: &Job) -> Result<InferenceResponse> {
+    let start = Instant::now();
+    let req = &job.request;
+    let prompt: Vec<i32> = req.prompt.iter().map(|&t| t as i32).collect();
+
+    let (mut session, mut logits) = GenerationSession::start(engine, variant, &prompt)?;
+    let policy = if req.temperature <= 0.0 {
+        Sampling::Greedy
+    } else {
+        Sampling::Temperature(req.temperature)
+    };
+    let mut rng = Pcg::seeded(req.seed);
+    let mut sanity = OutputSanity::new(req.max_new_tokens);
+    let mut tokens = Vec::with_capacity(req.max_new_tokens);
+    let mut halted_early = false;
+
+    for _ in 0..req.max_new_tokens {
+        if session.remaining() == 0 {
+            break;
+        }
+        let token = sample(&logits, policy, &mut rng);
+        match sanity.check(token, &logits) {
+            SanityVerdict::HaltLength | SanityVerdict::HaltRepetition => {
+                halted_early = true;
+                break;
+            }
+            SanityVerdict::FlagAnomaly | SanityVerdict::Ok => {}
+        }
+        logits = session.step(token)?;
+        tokens.push(token);
+    }
+
+    Ok(InferenceResponse {
+        tokens,
+        latency: job.enqueued.elapsed().max(start.elapsed()),
+        compute: Duration::from_secs_f64(session.compute_seconds),
+        anomalies: sanity.anomalies(),
+        halted_early,
+    })
+}
+
+// Executor integration tests live in rust/tests/server_integration.rs
+// (they need compiled artifacts on disk).

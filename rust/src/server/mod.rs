@@ -1,0 +1,19 @@
+//! The serving layer: validation → rate limiting → PJRT execution →
+//! output sanity, over std threads + channels (the offline toolchain has
+//! no tokio; see Cargo.toml).
+//!
+//! PJRT wrapper types are `!Send` (raw pointers), so a dedicated
+//! *executor thread* owns the [`crate::runtime::Engine`]; the request
+//! loop validates and admits requests, then ships compute jobs over an
+//! mpsc channel and receives responses on per-request channels. The CPU
+//! PJRT client parallelizes internally, so one executor thread saturates
+//! the host.
+
+pub mod api;
+pub mod cli;
+pub mod executor;
+pub mod service;
+
+pub use api::{InferenceRequest, InferenceResponse, RejectReason, ServeStats};
+pub use executor::ExecutorHandle;
+pub use service::{Service, ServiceConfig};

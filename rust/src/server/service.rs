@@ -1,0 +1,103 @@
+//! The request loop: validation → rate limiting → executor → stats.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::safety::ratelimit::RateLimiter;
+use crate::safety::validation::InputValidator;
+
+use super::api::{InferenceRequest, InferenceResponse, RejectReason, ServeStats};
+use super::executor::ExecutorHandle;
+
+/// Service configuration.
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    pub artifacts_dir: String,
+    pub variant: String,
+    /// Context window enforced by validation (tokens).
+    pub max_prompt_tokens: usize,
+    pub vocab: usize,
+    /// Rate limit per client.
+    pub rate_per_s: f64,
+    pub burst: f64,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            artifacts_dir: "artifacts".into(),
+            variant: "gpt2".into(),
+            max_prompt_tokens: 32,
+            vocab: 512,
+            rate_per_s: 50.0,
+            burst: 20.0,
+        }
+    }
+}
+
+/// The serving front end.
+pub struct Service {
+    executor: ExecutorHandle,
+    validator: InputValidator,
+    limiter: RateLimiter,
+    stats: ServeStats,
+    started: Instant,
+}
+
+impl Service {
+    pub fn start(config: &ServiceConfig) -> Result<Service> {
+        let executor =
+            ExecutorHandle::spawn(config.artifacts_dir.clone(), config.variant.clone())?;
+        Ok(Service {
+            executor,
+            validator: InputValidator::new(config.max_prompt_tokens, config.vocab),
+            limiter: RateLimiter::new(config.rate_per_s, config.burst),
+            stats: ServeStats::default(),
+            started: Instant::now(),
+        })
+    }
+
+    /// Admit + execute one request at logical time `now_s` (used by the
+    /// rate limiter; wall-clock timing is measured internally).
+    pub fn handle(
+        &mut self,
+        request: InferenceRequest,
+        now_s: f64,
+    ) -> Result<InferenceResponse, RejectReason> {
+        if let Err(e) = self.validator.validate_tokens(&request.prompt) {
+            self.stats.rejected_validation += 1;
+            return Err(RejectReason::Validation(e.to_string()));
+        }
+        if !self.limiter.admit(request.client_id, now_s) {
+            self.stats.rejected_rate_limited += 1;
+            return Err(RejectReason::RateLimited);
+        }
+        match self.executor.run_sync(request) {
+            Ok(resp) => {
+                self.stats.served += 1;
+                self.stats.tokens_out += resp.tokens.len() as u64;
+                let lat = resp.latency.as_secs_f64();
+                self.stats.total_latency_s += lat;
+                self.stats.max_latency_s = self.stats.max_latency_s.max(lat);
+                self.stats.total_compute_s += resp.compute.as_secs_f64();
+                if resp.halted_early {
+                    self.stats.halted_early += 1;
+                }
+                Ok(resp)
+            }
+            Err(e) => {
+                self.stats.rejected_validation += 1;
+                Err(RejectReason::Validation(format!("execution failed: {e}")))
+            }
+        }
+    }
+
+    /// Snapshot statistics (wall time updated on read).
+    pub fn stats(&mut self) -> ServeStats {
+        self.stats.wall_s = self.started.elapsed().as_secs_f64();
+        self.stats.clone()
+    }
+}
+
+// Service integration tests live in rust/tests/server_integration.rs.

@@ -1,0 +1,739 @@
+//! The simulation engine.
+//!
+//! Time model: queries are processed in arrival order; each query's S
+//! samples fan out across the decode devices of its phase plan and run
+//! concurrently across devices (serially within one device). The wall
+//! clock advances by each query's makespan; thermal states integrate the
+//! actual per-device power over that window; the energy ledger attributes
+//! joules to phases (Table 7) and devices (Table 9).
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::{ExecMode, OrchestratorFeatures};
+use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::disaggregation::{decode_task, prefill_task, PhasePlan};
+use crate::coordinator::sample_budget::{SampleBudgeter, SampleCost};
+use crate::devices::failure::{FailureKind, FailurePlan};
+use crate::devices::fleet::Fleet;
+use crate::devices::power::PowerModel;
+use crate::devices::roofline::Phase;
+use crate::devices::spec::{DeviceId, DeviceSpec};
+use crate::devices::thermal::ThermalState;
+use crate::metrics::energy::EnergyLedger;
+use crate::metrics::latency::LatencyRecorder;
+use crate::safety::fault::FaultDetector;
+use crate::safety::health::{DeviceHealth, HealthState};
+use crate::safety::thermal_guard::ThermalGuard;
+use crate::scaling::formalisms::LatencyLaw;
+use crate::workload::coverage::CoverageOracle;
+use crate::workload::generator::Query;
+
+/// Simulation options.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    pub mode: ExecMode,
+    pub features: OrchestratorFeatures,
+    /// Thermal guard policy; `features.safety == false` disables it.
+    pub guard: ThermalGuard,
+    pub failure_plan: FailurePlan,
+    /// Decode fan-out cap.
+    pub max_decode_devices: usize,
+    /// Pin ALL phases to one device (homogeneous baselines measured on
+    /// the full edge box: the other devices stay powered and idle, as a
+    /// real single-accelerator deployment would).
+    pub pin_device: Option<DeviceId>,
+    /// Per-query envelopes.
+    pub latency_sla_s: Option<f64>,
+    pub energy_budget_j: Option<f64>,
+    /// Interactive-serving SLA expressed as a multiple of one standard
+    /// GPU-serving sample duration for the model: samples completing
+    /// after `sla_sample_multiple × t_sample(GPU)` burn energy but do
+    /// not count toward pass@k. This is what makes the Standard baseline
+    /// waste its late samples while the disaggregated fan-out finishes
+    /// all of them (paper §4.2's "more effective sample diversity").
+    pub sla_sample_multiple: Option<f64>,
+    pub seed: u64,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions {
+            mode: ExecMode::EnergyAware,
+            features: OrchestratorFeatures::full(),
+            guard: ThermalGuard::default(),
+            failure_plan: FailurePlan::none(),
+            max_decode_devices: 4,
+            pin_device: None,
+            latency_sla_s: None,
+            energy_budget_j: None,
+            sla_sample_multiple: Some(12.0),
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregated simulation results.
+#[derive(Debug, Clone)]
+pub struct SimReport {
+    /// pass@k over the query set.
+    pub coverage: f64,
+    /// Mean single-sample accuracy (pass@1 view of the same outcomes).
+    pub accuracy: f64,
+    pub total_energy_j: f64,
+    pub prefill_energy_j: f64,
+    pub decode_energy_j: f64,
+    pub overhead_energy_j: f64,
+    pub avg_power_w: f64,
+    pub mean_latency_s: f64,
+    pub p99_latency_s: f64,
+    pub latency_std_s: f64,
+    pub throughput_tps: f64,
+    pub tokens_generated: u64,
+    pub queries: usize,
+    pub queries_lost: usize,
+    pub mean_samples_run: f64,
+    /// Device utilization: busy seconds / wall seconds.
+    pub utilization: BTreeMap<DeviceId, f64>,
+    /// Peak junction temperature per device.
+    pub peak_temp_c: BTreeMap<DeviceId, f64>,
+    /// Hardware throttle events across the run (0 with the guard on).
+    pub throttle_events: u64,
+    /// Device failures observed and recoveries completed.
+    pub failures: u64,
+    pub recoveries: u64,
+    /// Mean recovery (redistribution) latency in seconds.
+    pub mean_recovery_s: f64,
+    /// Wall-clock duration of the whole run (virtual seconds).
+    pub wall_s: f64,
+}
+
+struct SimDevice {
+    spec: DeviceSpec,
+    thermal: ThermalState,
+    health: DeviceHealth,
+    detector: FaultDetector,
+    busy_s: f64,
+    /// Active energy accumulated in the current query window.
+    window_energy_j: f64,
+    /// Busy seconds accumulated in the current query window.
+    window_busy_s: f64,
+}
+
+/// The engine.
+pub struct SimEngine {
+    fleet: Fleet,
+    shape: ModelShape,
+    options: SimOptions,
+    devices: BTreeMap<DeviceId, SimDevice>,
+    ledger: EnergyLedger,
+    latencies: LatencyRecorder,
+    latency_law: LatencyLaw,
+    clock_s: f64,
+    tokens: u64,
+    recoveries: Vec<f64>,
+    failures: u64,
+    queries_lost: usize,
+    samples_run_total: u64,
+    /// Calibration factor: real measured seconds per simulated second
+    /// (from PJRT execution of the artifact; 1.0 = pure analytic).
+    pub calibration: f64,
+}
+
+impl SimEngine {
+    pub fn new(fleet: Fleet, shape: ModelShape, options: SimOptions) -> Self {
+        let devices = fleet
+            .devices()
+            .iter()
+            .map(|spec| {
+                (
+                    spec.id.clone(),
+                    SimDevice {
+                        spec: spec.clone(),
+                        thermal: ThermalState::new(spec),
+                        health: DeviceHealth::new(spec.id.clone()),
+                        detector: FaultDetector::new(spec.id.clone()),
+                        busy_s: 0.0,
+                        window_energy_j: 0.0,
+                        window_busy_s: 0.0,
+                    },
+                )
+            })
+            .collect();
+        SimEngine {
+            fleet,
+            shape,
+            options,
+            devices,
+            ledger: EnergyLedger::new(),
+            latencies: LatencyRecorder::new(),
+            latency_law: LatencyLaw::default(),
+            clock_s: 0.0,
+            tokens: 0,
+            recoveries: Vec::new(),
+            failures: 0,
+            queries_lost: 0,
+            samples_run_total: 0,
+            calibration: 1.0,
+        }
+    }
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Throttle factor for a device: guard shedding (if safety on) ×
+    /// hardware emergency throttle (if the guard failed to prevent it).
+    fn throttle_factor(&self, id: &DeviceId) -> f64 {
+        let dev = &self.devices[id];
+        let hw = dev.thermal.hardware_throttle_factor();
+        if self.options.features.safety {
+            let decision = self.options.guard.evaluate(&dev.spec, dev.thermal.temp_c());
+            hw * decision.workload_factor.max(0.05)
+        } else {
+            hw
+        }
+    }
+
+    fn schedulable(&self, id: &DeviceId) -> bool {
+        self.devices[id].health.state().schedulable()
+    }
+
+    /// Apply scheduled failures / recoveries up to the current clock.
+    fn process_failures(&mut self) {
+        let plan = self.options.failure_plan.clone();
+        for scenario in plan.scenarios() {
+            let id = &scenario.device;
+            if !self.devices.contains_key(id) {
+                continue;
+            }
+            let hard = matches!(scenario.kind, FailureKind::Crash | FailureKind::Hang);
+            if !hard {
+                continue;
+            }
+            let dev = self.devices.get_mut(id).unwrap();
+            let failed_now = self.clock_s >= scenario.at_s
+                && scenario
+                    .recover_after_s
+                    .map(|r| self.clock_s < scenario.at_s + r)
+                    .unwrap_or(true);
+            match (dev.health.state(), failed_now) {
+                (HealthState::Healthy | HealthState::Degraded | HealthState::Recovering, true) => {
+                    dev.health.mark_failed(self.clock_s);
+                    self.failures += 1;
+                    if self.options.features.safety {
+                        // Detection + redistribution latency (paper: the
+                        // redistribution itself completes within 100 ms).
+                        let detect_s = match scenario.kind {
+                            FailureKind::Crash => 0.02, // heartbeat gap
+                            FailureKind::Hang => 0.05,  // timeout multiple
+                            FailureKind::ErrorRate(_) => 0.08,
+                        };
+                        let deadline = dev.detector.redistribution_deadline_s;
+                        self.recoveries.push(detect_s + deadline * 0.6);
+                    }
+                }
+                (HealthState::Failed, false) => {
+                    dev.health.mark_recovering(self.clock_s);
+                }
+                _ => {}
+            }
+        }
+    }
+
+    /// Build the phase plan for the current safety state.
+    fn plan(&self, query: &Query) -> Option<PhasePlan> {
+        // Restrict the fleet to schedulable devices.
+        let usable: Vec<DeviceSpec> = self
+            .fleet
+            .devices()
+            .iter()
+            .filter(|d| self.schedulable(&d.id))
+            .cloned()
+            .collect();
+        if usable.is_empty() {
+            return None;
+        }
+        let fleet = Fleet::new(usable).ok()?;
+        if let Some(pin) = &self.options.pin_device {
+            if fleet.get(pin).is_some() {
+                return Some(PhasePlan::homogeneous(pin.clone()));
+            }
+            return None; // pinned device failed and nothing may substitute
+        }
+        if self.options.mode == ExecMode::Standard || !self.options.features.prefill_decode_split {
+            // Homogeneous: everything on the single (or first-ranked)
+            // device. With ranking enabled, pick the most efficient.
+            let device = if self.options.features.device_ranking {
+                fleet.ranked_by_efficiency()[0].id.clone()
+            } else {
+                fleet.devices()[0].id.clone()
+            };
+            return Some(PhasePlan::homogeneous(device));
+        }
+        let cap = if self.options.features.greedy_layer_assignment {
+            self.options.max_decode_devices
+        } else {
+            1
+        };
+        PhasePlan::disaggregated(&self.shape, &fleet, query.prompt_tokens, cap)
+    }
+
+    /// Execute one query with up to `samples` samples. Returns whether it
+    /// was solved and how many samples ran.
+    pub fn run_query(&mut self, query: &Query, samples: u32, oracle: &CoverageOracle) -> (bool, u32) {
+        self.process_failures();
+
+        let Some(plan) = self.plan(query) else {
+            // Total fleet loss: the query is lost (only possible with
+            // safety off or all devices failed).
+            self.queries_lost += 1;
+            return (false, 0);
+        };
+
+        // ---- Sample budget ----
+        let p_task = prefill_task(&self.shape, query.prompt_tokens);
+        let d_task = decode_task(&self.shape);
+        let prefill_spec = self.devices[&plan.prefill].spec.clone();
+        let decode_specs: Vec<DeviceSpec> =
+            plan.decode.iter().map(|d| self.devices[d].spec.clone()).collect();
+
+        let per_token_s: f64 = d_task.seconds_on(&decode_specs[0], 1.0);
+        let per_sample_latency =
+            p_task.seconds_on(&prefill_spec, 1.0) + per_token_s * query.output_tokens as f64;
+        let per_sample_energy = PowerModel::new(prefill_spec.clone())
+            .task_energy_j(&p_task, 1.0)
+            / samples.max(1) as f64
+            + PowerModel::new(decode_specs[0].clone()).task_energy_j(&d_task, 1.0)
+                * query.output_tokens as f64;
+
+        let samples = if self.options.features.adaptive_sample_budget {
+            let budgeter = SampleBudgeter {
+                law: crate::scaling::formalisms::CoverageLaw::calibrated(
+                    self.shape.family.paper_params(),
+                ),
+                max_samples: samples,
+                ..Default::default()
+            };
+            budgeter.budget(
+                self.shape.family.paper_params(),
+                query.output_tokens as f64,
+                &SampleCost {
+                    energy_j: per_sample_energy,
+                    latency_s: per_sample_latency,
+                    parallelism: plan.decode.len() as u32,
+                },
+                self.options.energy_budget_j,
+                self.options.latency_sla_s,
+            )
+        } else {
+            samples
+        };
+
+        // ---- Prefill (shared across samples via prefix batching) ----
+        let prefill_throttle = self.throttle_factor(&plan.prefill);
+        let prefill_s = p_task.seconds_on(&prefill_spec, prefill_throttle) * self.calibration;
+        let prefill_power = PowerModel::new(prefill_spec.clone()).active_power_w(&p_task);
+        let prefill_j = prefill_power * prefill_s;
+        {
+            let id = plan.prefill.clone();
+            self.ledger.record_task(&id, Phase::Prefill, prefill_j, prefill_s);
+            let dev = self.devices.get_mut(&id).unwrap();
+            dev.busy_s += prefill_s;
+            dev.window_busy_s += prefill_s;
+            dev.window_energy_j += prefill_j;
+        }
+
+        // ---- Decode fan-out ----
+        let batcher = Batcher::default();
+        // Speed-weighted fan-out: assign samples proportional to each
+        // device's decode service rate so the makespan is minimized.
+        let rates: Vec<f64> = plan
+            .decode
+            .iter()
+            .map(|d| {
+                let spec = self.devices[d].spec.clone();
+                let throttle = self.throttle_factor(d);
+                1.0 / d_task.seconds_on(&spec, throttle).max(1e-12)
+            })
+            .collect();
+        let batches = batcher.assign_weighted(samples, &plan.decode, &rates);
+        let mut device_decode_s: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut device_samples: BTreeMap<DeviceId, u32> = BTreeMap::new();
+        let mut device_step_s: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let mut decode_tokens = 0u64;
+        for batch in &batches {
+            let spec = self.devices[&batch.device].spec.clone();
+            let throttle = self.throttle_factor(&batch.device);
+            let step_s = d_task.seconds_on(&spec, throttle) * self.calibration;
+            let batch_tokens = batch.samples.len() as u64 * query.output_tokens as u64;
+            let batch_s = step_s * batch_tokens as f64;
+            let power = PowerModel::new(spec.clone()).active_power_w(&d_task);
+            let joules = power * batch_s;
+            *device_decode_s.entry(batch.device.clone()).or_insert(0.0) += batch_s;
+            *device_samples.entry(batch.device.clone()).or_insert(0) += batch.samples.len() as u32;
+            device_step_s.insert(batch.device.clone(), step_s);
+            self.ledger.record_task(&batch.device, Phase::Decode, joules, batch_s);
+            let dev = self.devices.get_mut(&batch.device).unwrap();
+            dev.busy_s += batch_s;
+            dev.window_busy_s += batch_s;
+            dev.window_energy_j += joules;
+            decode_tokens += batch_tokens;
+        }
+        self.tokens += decode_tokens;
+        self.samples_run_total += samples as u64;
+
+        // ---- Coverage deadline: late samples burn energy but do not
+        // count (interactive SLA) ----
+        let effective_samples = match self.options.sla_sample_multiple {
+            Some(multiple) => {
+                // Reference: one sample served on a standard GPU stack.
+                let ref_step =
+                    d_task.seconds_on(&crate::devices::spec::DeviceSpec::nvidia_gpu(), 1.0);
+                let deadline_s = multiple * ref_step * query.output_tokens as f64;
+                let mut counted = 0u32;
+                for (dev, &n) in &device_samples {
+                    let step_s = device_step_s[dev];
+                    let sample_s = step_s * query.output_tokens as f64;
+                    let budget_s = (deadline_s - prefill_s).max(0.0);
+                    let fit = if sample_s > 0.0 {
+                        (budget_s / sample_s).floor() as u32
+                    } else {
+                        n
+                    };
+                    counted += n.min(fit);
+                }
+                counted.min(samples)
+            }
+            None => samples,
+        };
+
+        // ---- IO + scheduling overhead ----
+        let decode_parallel_s =
+            device_decode_s.values().cloned().fold(0.0_f64, f64::max);
+        let io_bytes = if plan.is_heterogeneous() {
+            // KV handoff prefill→decode device(s), once per sample.
+            self.shape.boundary_bytes * query.prompt_tokens as f64 * samples as f64
+        } else {
+            0.0
+        };
+        let link = prefill_spec.link_gbs;
+        let io_s = self.latency_law.io_s(io_bytes, link);
+        let overhead_s =
+            self.latency_law.overhead_s(samples as f64, plan.is_heterogeneous());
+        let overhead_j = 2.0 * overhead_s; // coordinator CPU draw ≈ 2 W
+        self.ledger.record_overhead(&plan.prefill, overhead_j);
+
+        // ---- Query makespan + bookkeeping ----
+        let makespan = prefill_s + decode_parallel_s + io_s + overhead_s;
+        // Effective per-token service latency — the paper's latency
+        // metric: decode wall time divided by tokens produced (device
+        // parallelism lowers it; serialization on one device does not).
+        if decode_tokens > 0 {
+            self.latencies.record(decode_parallel_s / decode_tokens as f64);
+        }
+        self.advance_window(makespan);
+
+        // ---- Coverage (only samples inside the deadline count) ----
+        let outcome = oracle.evaluate(query, effective_samples);
+        (outcome.solved(), samples)
+    }
+
+    /// Advance virtual time: thermal integration + idle energy for every
+    /// device over the window.
+    fn advance_window(&mut self, dt_s: f64) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        self.clock_s += dt_s;
+        self.ledger.advance_wall(dt_s);
+        let ids: Vec<DeviceId> = self.devices.keys().cloned().collect();
+        for id in ids {
+            let dev = self.devices.get_mut(&id).unwrap();
+            // Mean power over the window: active energy / window + idle
+            // draw for the remaining fraction.
+            let active_j = dev.window_energy_j;
+            let idle_fraction_s = (dt_s - dev.window_busy_s).max(0.0);
+            let idle_j = dev.spec.idle_w * idle_fraction_s;
+            let mean_power = ((active_j + idle_j) / dt_s).min(dev.spec.tdp_w);
+            dev.thermal.step(&dev.spec, mean_power, dt_s);
+            dev.window_energy_j = 0.0;
+            dev.window_busy_s = 0.0;
+            // Idle draw of the non-busy fraction (active joules already
+            // include the busy-period idle share via the power model).
+            self.ledger.record_idle(&id, idle_j);
+            // Health bookkeeping.
+            dev.health.record_success(self.clock_s);
+        }
+    }
+
+    /// Run a full query set with a uniform sample budget.
+    pub fn run(&mut self, queries: &[Query], samples: u32) -> Result<SimReport> {
+        let oracle = CoverageOracle::new(self.options.seed);
+        let mut solved = 0usize;
+        let mut accuracy_hits = 0usize;
+        for query in queries {
+            let (ok, ran) = self.run_query(query, samples, &oracle);
+            if ok {
+                solved += 1;
+            }
+            if ran > 0 && oracle.sample_succeeds(query, 0) {
+                accuracy_hits += 1;
+            }
+        }
+        Ok(self.report(queries.len(), solved, accuracy_hits))
+    }
+
+    fn report(&self, n_queries: usize, solved: usize, accuracy_hits: usize) -> SimReport {
+        let utilization = self
+            .devices
+            .iter()
+            .map(|(id, d)| {
+                (id.clone(), if self.clock_s > 0.0 { d.busy_s / self.clock_s } else { 0.0 })
+            })
+            .collect();
+        let peak_temp_c =
+            self.devices.iter().map(|(id, d)| (id.clone(), d.thermal.peak_c())).collect();
+        let throttle_events = self.devices.values().map(|d| d.thermal.throttle_events()).sum();
+        let recoveries = self.recoveries.len() as u64;
+        let mean_recovery_s = if self.recoveries.is_empty() {
+            0.0
+        } else {
+            self.recoveries.iter().sum::<f64>() / self.recoveries.len() as f64
+        };
+        SimReport {
+            coverage: if n_queries > 0 { solved as f64 / n_queries as f64 } else { 0.0 },
+            accuracy: if n_queries > 0 { accuracy_hits as f64 / n_queries as f64 } else { 0.0 },
+            total_energy_j: self.ledger.total_j(),
+            prefill_energy_j: self.ledger.phase_j(Phase::Prefill),
+            decode_energy_j: self.ledger.phase_j(Phase::Decode),
+            overhead_energy_j: self.ledger.overhead_j() + self.ledger.idle_j(),
+            avg_power_w: self.ledger.avg_power_w(),
+            mean_latency_s: self.latencies.mean_s(),
+            p99_latency_s: self.latencies.percentile_s(99.0),
+            latency_std_s: self.latencies.std_dev_s(),
+            throughput_tps: if self.clock_s > 0.0 { self.tokens as f64 / self.clock_s } else { 0.0 },
+            tokens_generated: self.tokens,
+            queries: n_queries,
+            queries_lost: self.queries_lost,
+            mean_samples_run: if n_queries > 0 {
+                self.samples_run_total as f64 / n_queries as f64
+            } else {
+                0.0
+            },
+            utilization,
+            peak_temp_c,
+            throttle_events,
+            failures: self.failures,
+            recoveries,
+            mean_recovery_s,
+            wall_s: self.clock_s,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::failure::FailureScenario;
+    use crate::devices::fleet::FleetPreset;
+    use crate::runtime::manifest::VariantMeta;
+    use crate::workload::datasets::{Dataset, ModelFamily};
+    use crate::workload::generator::WorkloadGenerator;
+
+    fn meta() -> VariantMeta {
+        VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 17_195_008,
+            flops_per_token_decode: 537_344,
+            bytes_per_token_decode: 1_337_344,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        }
+    }
+
+    fn engine(preset: FleetPreset, options: SimOptions) -> SimEngine {
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        SimEngine::new(Fleet::preset(preset), shape, options)
+    }
+
+    fn queries(n: usize) -> Vec<Query> {
+        WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 42).queries(n)
+    }
+
+    #[test]
+    fn heterogeneous_beats_homogeneous_gpu_on_energy_and_power() {
+        let qs = queries(60);
+        let mut hetero = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let hetero_r = hetero.run(&qs, 20).unwrap();
+
+        let homog_opts = SimOptions {
+            mode: ExecMode::Standard,
+            features: OrchestratorFeatures::baseline(),
+            ..Default::default()
+        };
+        let mut homog = engine(FleetPreset::GpuOnly, homog_opts);
+        let homog_r = homog.run(&qs, 20).unwrap();
+
+        assert!(
+            hetero_r.decode_energy_j < homog_r.decode_energy_j,
+            "hetero decode {} vs homog {}",
+            hetero_r.decode_energy_j,
+            homog_r.decode_energy_j
+        );
+        assert!(hetero_r.avg_power_w < homog_r.avg_power_w);
+    }
+
+    #[test]
+    fn coverage_equal_without_deadline_higher_with() {
+        // Without an SLA deadline, the oracle is configuration-
+        // independent: identical coverage. With the interactive deadline
+        // the Standard baseline loses its late samples and the
+        // heterogeneous fan-out pulls ahead (the paper's +10.5pp story).
+        let qs = queries(100);
+        let no_deadline = |mode, feats, fleet: FleetPreset| {
+            let opts = SimOptions {
+                mode,
+                features: feats,
+                sla_sample_multiple: None,
+                ..Default::default()
+            };
+            engine(fleet, opts)
+        };
+        let ra = no_deadline(ExecMode::EnergyAware, OrchestratorFeatures::full(), FleetPreset::EdgeBox)
+            .run(&qs, 20)
+            .unwrap();
+        let rb = no_deadline(ExecMode::Standard, OrchestratorFeatures::baseline(), FleetPreset::GpuOnly)
+            .run(&qs, 20)
+            .unwrap();
+        assert!((ra.coverage - rb.coverage).abs() < 1e-12);
+
+        // With the default deadline: heterogeneous wins coverage.
+        let mut hetero = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let mut homog = engine(
+            FleetPreset::GpuOnly,
+            SimOptions {
+                mode: ExecMode::Standard,
+                features: OrchestratorFeatures::baseline(),
+                ..Default::default()
+            },
+        );
+        let rh = hetero.run(&qs, 20).unwrap();
+        let rg = homog.run(&qs, 20).unwrap();
+        assert!(
+            rh.coverage > rg.coverage + 0.02,
+            "hetero {} vs homog {}",
+            rh.coverage,
+            rg.coverage
+        );
+    }
+
+    #[test]
+    fn energy_breakdown_sums_to_total() {
+        let qs = queries(30);
+        let mut e = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r = e.run(&qs, 10).unwrap();
+        let parts = r.prefill_energy_j + r.decode_energy_j + r.overhead_energy_j;
+        assert!((parts - r.total_energy_j).abs() / r.total_energy_j < 1e-9);
+    }
+
+    #[test]
+    fn guard_keeps_temperatures_safe() {
+        let qs = queries(200);
+        let mut e = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r = e.run(&qs, 20).unwrap();
+        assert_eq!(r.throttle_events, 0);
+        for (id, peak) in &r.peak_temp_c {
+            let spec = Fleet::preset(FleetPreset::EdgeBox).get(id).unwrap().clone();
+            assert!(peak < &spec.t_throttle_hw_c, "{id}: peak {peak}");
+        }
+    }
+
+    #[test]
+    fn failure_with_safety_loses_nothing() {
+        let plan = FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.5,
+            recover_after_s: None,
+        }]);
+        let qs = queries(80);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { failure_plan: plan, ..Default::default() },
+        );
+        let r = e.run(&qs, 10).unwrap();
+        assert_eq!(r.queries_lost, 0);
+        assert!(r.failures >= 1);
+        assert!(r.recoveries >= 1);
+        assert!(r.mean_recovery_s < 0.2, "recovery under 200 ms");
+    }
+
+    #[test]
+    fn total_fleet_loss_drops_queries() {
+        let plan = FailurePlan::new(vec![FailureScenario {
+            device: "gpu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.0,
+            recover_after_s: None,
+        }]);
+        let qs = queries(10);
+        let mut e = engine(
+            FleetPreset::GpuOnly,
+            SimOptions {
+                mode: ExecMode::Standard,
+                features: OrchestratorFeatures::baseline(),
+                failure_plan: plan,
+                ..Default::default()
+            },
+        );
+        let r = e.run(&qs, 5).unwrap();
+        assert!(r.queries_lost > 0);
+    }
+
+    #[test]
+    fn throughput_and_tokens_consistent() {
+        let qs = queries(20);
+        let mut e = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r = e.run(&qs, 5).unwrap();
+        assert!(r.tokens_generated > 0);
+        assert!((r.throughput_tps - r.tokens_generated as f64 / r.wall_s).abs() < 1e-9);
+    }
+
+    #[test]
+    fn adaptive_budget_reduces_samples_under_tight_energy() {
+        let qs = queries(30);
+        let tight = SimOptions { energy_budget_j: Some(10.0), ..Default::default() };
+        let mut constrained = engine(FleetPreset::EdgeBox, tight);
+        let rc = constrained.run(&qs, 20).unwrap();
+        let mut free = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let rf = free.run(&qs, 20).unwrap();
+        assert!(rc.mean_samples_run < rf.mean_samples_run);
+        assert!(rc.coverage <= rf.coverage + 1e-12);
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let qs = queries(30);
+        let mut e = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r = e.run(&qs, 10).unwrap();
+        for (id, u) in &r.utilization {
+            assert!((0.0..=1.0 + 1e-9).contains(u), "{id}: {u}");
+        }
+    }
+}

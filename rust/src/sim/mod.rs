@@ -1,0 +1,12 @@
+//! Virtual-time simulation of the heterogeneous fleet executing
+//! inference workloads (the measurement substrate for every experiment).
+//!
+//! The engine composes the device substrate (roofline + power + thermal +
+//! failures), the coordinator (allocation, disaggregation, batching,
+//! sample budgeting), and the safety monitor (thermal guard, fault
+//! detection/recovery) and reports the metrics the paper's tables are
+//! built from.
+
+pub mod engine;
+
+pub use engine::{SimEngine, SimOptions, SimReport};

@@ -1,0 +1,51 @@
+//! Property-based testing support (the offline environment has no
+//! `proptest`). `check` runs a property over many seeded random cases and
+//! reports the failing seed so a failure is reproducible with
+//! `Pcg::seeded(seed)`.
+
+use crate::rng::Pcg;
+
+/// Run `prop` over `cases` random seeds; panic with the failing seed on
+/// the first violation. The property receives a fresh deterministic RNG.
+pub fn check<F: FnMut(&mut Pcg) -> Result<(), String>>(name: &str, cases: u64, mut prop: F) {
+    for seed in 0..cases {
+        let mut rng = Pcg::seeded(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property {name:?} failed at seed {seed}: {msg}");
+        }
+    }
+}
+
+/// Assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_completes() {
+        check("u32 roundtrip", 50, |rng| {
+            let x = rng.next_u32();
+            prop_assert!(x as u64 <= u32::MAX as u64, "impossible");
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "seed")]
+    fn failing_property_reports_seed() {
+        check("always fails eventually", 10, |rng| {
+            let x = rng.next_f64();
+            prop_assert!(x < 0.5, "x={x}");
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,143 @@
+//! The coverage oracle: decides per-sample success and aggregates
+//! pass@k (DESIGN.md §S3).
+
+use crate::rng::Pcg;
+
+use super::generator::Query;
+
+/// Outcome of evaluating one query with some number of samples.
+#[derive(Debug, Clone)]
+pub struct QueryOutcome {
+    pub query_id: u64,
+    pub samples_run: u32,
+    pub successes: u32,
+}
+
+impl QueryOutcome {
+    pub fn solved(&self) -> bool {
+        self.successes > 0
+    }
+}
+
+/// Samples success outcomes for queries. Deterministic per
+/// (seed, query id, sample index) so replays and ablations see identical
+/// difficulty draws.
+#[derive(Debug, Clone)]
+pub struct CoverageOracle {
+    seed: u64,
+}
+
+impl CoverageOracle {
+    pub fn new(seed: u64) -> Self {
+        CoverageOracle { seed }
+    }
+
+    /// Did sample `sample_idx` of `query` succeed?
+    pub fn sample_succeeds(&self, query: &Query, sample_idx: u32) -> bool {
+        let mut rng = Pcg::new(
+            self.seed ^ query.id.wrapping_mul(0x9E3779B97F4A7C15),
+            sample_idx as u64 + 1,
+        );
+        rng.chance(query.difficulty_p)
+    }
+
+    /// Evaluate a query with `s` samples.
+    pub fn evaluate(&self, query: &Query, s: u32) -> QueryOutcome {
+        let successes = (0..s).filter(|&i| self.sample_succeeds(query, i)).count() as u32;
+        QueryOutcome { query_id: query.id, samples_run: s, successes }
+    }
+
+    /// pass@k coverage over a query set with a uniform sample budget.
+    pub fn coverage(&self, queries: &[Query], s: u32) -> f64 {
+        if queries.is_empty() {
+            return 0.0;
+        }
+        let solved = queries.iter().filter(|q| self.evaluate(q, s).solved()).count();
+        solved as f64 / queries.len() as f64
+    }
+
+    /// Measured coverage curve over the given sample budgets.
+    pub fn coverage_curve(&self, queries: &[Query], budgets: &[u32]) -> Vec<(f64, f64)> {
+        budgets.iter().map(|&s| (s as f64, self.coverage(queries, s))).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::{Dataset, ModelFamily};
+    use crate::workload::generator::WorkloadGenerator;
+
+    fn queries(n: usize) -> Vec<Query> {
+        WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 42).queries(n)
+    }
+
+    #[test]
+    fn deterministic_per_sample() {
+        let qs = queries(10);
+        let o = CoverageOracle::new(1);
+        for q in &qs {
+            for i in 0..5 {
+                assert_eq!(o.sample_succeeds(q, i), o.sample_succeeds(q, i));
+            }
+        }
+    }
+
+    #[test]
+    fn coverage_monotone_in_samples() {
+        let qs = queries(500);
+        let o = CoverageOracle::new(2);
+        let mut prev = 0.0;
+        for s in [1, 2, 5, 10, 20, 50] {
+            let c = o.coverage(&qs, s);
+            assert!(c >= prev, "S={s}: {c} < {prev}");
+            prev = c;
+        }
+    }
+
+    #[test]
+    fn empirical_coverage_matches_analytic() {
+        let gen = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 9);
+        let qs = gen.queries(8000);
+        let o = CoverageOracle::new(3);
+        for s in [1u32, 5, 20] {
+            let measured = o.coverage(&qs, s);
+            let analytic = gen.profile().analytic_coverage(s);
+            assert!(
+                (measured - analytic).abs() < 0.02,
+                "S={s}: measured={measured} analytic={analytic}"
+            );
+        }
+    }
+
+    #[test]
+    fn sure_and_impossible_queries() {
+        let mut easy = queries(1)[0].clone();
+        easy.difficulty_p = 1.0;
+        let mut hard = queries(1)[0].clone();
+        hard.difficulty_p = 0.0;
+        let o = CoverageOracle::new(4);
+        assert!(o.evaluate(&easy, 1).solved());
+        assert!(!o.evaluate(&hard, 100).solved());
+    }
+
+    #[test]
+    fn outcome_counts_bounded() {
+        let qs = queries(100);
+        let o = CoverageOracle::new(5);
+        for q in &qs {
+            let out = o.evaluate(q, 20);
+            assert!(out.successes <= out.samples_run);
+            assert_eq!(out.samples_run, 20);
+        }
+    }
+
+    #[test]
+    fn curve_matches_pointwise_coverage() {
+        let qs = queries(200);
+        let o = CoverageOracle::new(6);
+        let curve = o.coverage_curve(&qs, &[1, 5, 10]);
+        assert_eq!(curve.len(), 3);
+        assert_eq!(curve[1].1, o.coverage(&qs, 5));
+    }
+}

@@ -1,0 +1,348 @@
+//! Benchmark dataset profiles and model families (paper §4.8, §5).
+//!
+//! Each `(dataset, family)` pair carries the Beta-difficulty calibration
+//! that pins single-sample accuracy to the paper's Standard rows, plus
+//! prompt/output token statistics that drive the compute simulation.
+
+use anyhow::{bail, Result};
+
+/// The five transformer families evaluated by the paper.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelFamily {
+    Gpt2,
+    Granite,
+    Qwen2,
+    Llama32,
+    Lfm2,
+}
+
+impl ModelFamily {
+    pub fn all() -> [ModelFamily; 5] {
+        [
+            ModelFamily::Gpt2,
+            ModelFamily::Granite,
+            ModelFamily::Qwen2,
+            ModelFamily::Llama32,
+            ModelFamily::Lfm2,
+        ]
+    }
+
+    /// Artifact/variant name in the manifest.
+    pub fn variant(&self) -> &'static str {
+        match self {
+            ModelFamily::Gpt2 => "gpt2",
+            ModelFamily::Granite => "granite",
+            ModelFamily::Qwen2 => "qwen2",
+            ModelFamily::Llama32 => "llama32",
+            ModelFamily::Lfm2 => "lfm2",
+        }
+    }
+
+    /// Display name as the paper writes it.
+    pub fn display(&self) -> &'static str {
+        match self {
+            ModelFamily::Gpt2 => "GPT-2 (125M)",
+            ModelFamily::Granite => "Granite-350M",
+            ModelFamily::Qwen2 => "Qwen2-0.5B",
+            ModelFamily::Llama32 => "Llama-3.2-1B",
+            ModelFamily::Lfm2 => "LFM2-2.6B",
+        }
+    }
+
+    /// Paper-declared parameter count (the N in the formalisms).
+    pub fn paper_params(&self) -> f64 {
+        match self {
+            ModelFamily::Gpt2 => 125e6,
+            ModelFamily::Granite => 350e6,
+            ModelFamily::Qwen2 => 500e6,
+            ModelFamily::Llama32 => 1.0e9,
+            ModelFamily::Lfm2 => 2.6e9,
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<ModelFamily> {
+        Ok(match s {
+            "gpt2" => ModelFamily::Gpt2,
+            "granite" => ModelFamily::Granite,
+            "qwen2" => ModelFamily::Qwen2,
+            "llama32" => ModelFamily::Llama32,
+            "lfm2" => ModelFamily::Lfm2,
+            other => bail!("unknown model family {other:?}"),
+        })
+    }
+}
+
+/// Evaluation benchmarks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    WikiText103,
+    Gsm8k,
+    ArcChallenge,
+}
+
+impl Dataset {
+    pub fn all() -> [Dataset; 3] {
+        [Dataset::WikiText103, Dataset::Gsm8k, Dataset::ArcChallenge]
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Dataset::WikiText103 => "wikitext-103",
+            Dataset::Gsm8k => "gsm8k",
+            Dataset::ArcChallenge => "arc-challenge",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<Dataset> {
+        Ok(match s {
+            "wikitext-103" | "wikitext" => Dataset::WikiText103,
+            "gsm8k" => Dataset::Gsm8k,
+            "arc-challenge" | "arc" => Dataset::ArcChallenge,
+            other => bail!("unknown dataset {other:?}"),
+        })
+    }
+
+    /// Number of queries in the paper's evaluation slice.
+    pub fn default_queries(&self) -> usize {
+        match self {
+            Dataset::WikiText103 => 200,
+            Dataset::Gsm8k => 200,
+            Dataset::ArcChallenge => 200,
+        }
+    }
+}
+
+/// Per-(dataset, family) task profile: difficulty calibration + token
+/// statistics.
+#[derive(Debug, Clone)]
+pub struct TaskProfile {
+    pub dataset: Dataset,
+    pub family: ModelFamily,
+    /// Fraction of queries that are solvable at all (reasoning sets are
+    /// bimodal: a model either can or cannot solve a GSM8K problem).
+    pub solvable_fraction: f64,
+    /// Beta distribution of per-query single-sample success probability
+    /// *conditioned on the query being solvable*.
+    pub beta_a: f64,
+    pub beta_b: f64,
+    /// Mean prompt length (tokens) — drives prefill cost.
+    pub prompt_tokens: f64,
+    /// Mean output length per sample (tokens) — drives decode cost.
+    pub output_tokens: f64,
+}
+
+impl TaskProfile {
+    /// Expected single-sample accuracy q · a / (a + b).
+    pub fn expected_accuracy(&self) -> f64 {
+        self.solvable_fraction * self.beta_a / (self.beta_a + self.beta_b)
+    }
+
+    /// Analytic pass@k over the Beta mixture:
+    /// `C(S) = 1 − E[(1−p)^S] = 1 − B(a, b+S)/B(a, b)`.
+    pub fn analytic_coverage(&self, s: u32) -> f64 {
+        // B(a, b+S)/B(a, b) = Γ(b+S)Γ(a+b) / (Γ(b)Γ(a+b+S))
+        // computed stably with ln-gamma; scaled by the solvable mass.
+        let (a, b) = (self.beta_a, self.beta_b);
+        let ln_ratio = ln_gamma(b + s as f64) + ln_gamma(a + b)
+            - ln_gamma(b)
+            - ln_gamma(a + b + s as f64);
+        self.solvable_fraction * (1.0 - ln_ratio.exp())
+    }
+
+    /// Calibrated profile for a (dataset, family) pair.
+    ///
+    /// Calibration targets two paper anchors per pair:
+    /// - WikiText-103 (Table 16): heavy-tailed Beta(a = 0.55) with E[p]
+    ///   solving pass@20 = the Energy-Aware coverage (66.5–70%); the
+    ///   heavy tail is what produces the β ≈ 0.7 scaling of Table 1.
+    /// - GSM8K / ARC (Tables 13–14): bimodal reasoning sets — a solvable
+    ///   mass `q` with inner Beta(a = 1, b) solved exactly from the
+    ///   paper's (Standard accuracy, Energy-Aware pass@20) pair via
+    ///   `b = 20(r−1)/(20−r)`, `q = acc·(1+b)` with r = pass20/acc.
+    pub fn lookup(dataset: Dataset, family: ModelFamily) -> TaskProfile {
+        use Dataset::*;
+        use ModelFamily::*;
+        match dataset {
+            WikiText103 => {
+                // (E[p] solving C(20) = paper EA pass@20 with a = 0.55)
+                let acc = match family {
+                    Gpt2 => 0.1211,    // pass@20 -> 0.700
+                    Granite => 0.1211, // 0.700
+                    Qwen2 => 0.1034,   // 0.665
+                    Llama32 => 0.1211, // 0.700
+                    Lfm2 => 0.1211,    // 0.700
+                };
+                let beta_a = 0.8;
+                let beta_b = beta_a * (1.0 - acc) / acc;
+                TaskProfile {
+                    dataset,
+                    family,
+                    solvable_fraction: 1.0,
+                    beta_a,
+                    beta_b,
+                    prompt_tokens: 96.0,
+                    output_tokens: 48.0,
+                }
+            }
+            Gsm8k | ArcChallenge => {
+                // (Standard accuracy, Energy-Aware pass@20) paper anchors.
+                let (acc, pass20, prompt, output) = match (dataset, family) {
+                    (Gsm8k, Gpt2) => (0.124, 0.246, 128.0, 192.0),
+                    (Gsm8k, Granite) => (0.187, 0.358, 128.0, 192.0),
+                    (Gsm8k, Qwen2) => (0.245, 0.448, 128.0, 192.0),
+                    (Gsm8k, Llama32) => (0.358, 0.582, 128.0, 192.0),
+                    (Gsm8k, Lfm2) => (0.421, 0.664, 128.0, 192.0),
+                    (ArcChallenge, Gpt2) => (0.258, 0.428, 160.0, 32.0),
+                    (ArcChallenge, Granite) => (0.324, 0.542, 160.0, 32.0),
+                    (ArcChallenge, Qwen2) => (0.382, 0.628, 160.0, 32.0),
+                    (ArcChallenge, Llama32) => (0.486, 0.728, 160.0, 32.0),
+                    (ArcChallenge, Lfm2) => (0.542, 0.786, 160.0, 32.0),
+                    _ => unreachable!(),
+                };
+                // Heavy-tailed inner Beta (a = 0.5) solved against both
+                // anchors: find b such that C_inner(20)/C_inner(1) =
+                // pass20/acc (monotone decreasing in b -> bisection),
+                // then q = acc / C_inner(1).
+                let a = 0.5;
+                let inner = |b: f64, s: f64| -> f64 {
+                    1.0 - (ln_gamma(b + s) + ln_gamma(a + b) - ln_gamma(b) - ln_gamma(a + b + s))
+                        .exp()
+                };
+                let target_r = pass20 / acc;
+                let (mut lo, mut hi): (f64, f64) = (1e-3, 1e4);
+                for _ in 0..80 {
+                    let mid = (lo * hi).sqrt();
+                    let r_mid = inner(mid, 20.0) / inner(mid, 1.0);
+                    if r_mid > target_r {
+                        hi = mid; // more saturation needed -> smaller b? r decreases with b
+                    } else {
+                        lo = mid;
+                    }
+                }
+                let beta_b = (lo * hi).sqrt();
+                let q: f64 = (acc / inner(beta_b, 1.0)).min(1.0);
+                TaskProfile {
+                    dataset,
+                    family,
+                    solvable_fraction: q,
+                    beta_a: a,
+                    beta_b,
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                }
+            }
+        }
+    }
+}
+
+/// Lanczos approximation of ln Γ(x) (g = 7, n = 9 coefficients).
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.99999999999980993,
+        676.5203681218851,
+        -1259.1392167224028,
+        771.32342877765313,
+        -176.61502916214059,
+        12.507343278686905,
+        -0.13857109526572012,
+        9.9843695780195716e-6,
+        1.5056327351493116e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut acc = COEFFS[0];
+    for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+        acc += c / (x + i as f64);
+    }
+    let t = x + 7.5;
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + acc.ln()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_known_values() {
+        // Γ(1)=1, Γ(2)=1, Γ(5)=24, Γ(0.5)=√π
+        assert!(ln_gamma(1.0).abs() < 1e-10);
+        assert!(ln_gamma(2.0).abs() < 1e-10);
+        assert!((ln_gamma(5.0) - 24f64.ln()).abs() < 1e-9);
+        assert!((ln_gamma(0.5) - std::f64::consts::PI.sqrt().ln()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expected_accuracy_matches_calibration() {
+        for dataset in Dataset::all() {
+            for family in ModelFamily::all() {
+                let p = TaskProfile::lookup(dataset, family);
+                let acc = p.expected_accuracy();
+                assert!(acc > 0.05 && acc < 0.65, "{dataset:?}/{family:?}: {acc}");
+            }
+        }
+    }
+
+    #[test]
+    fn analytic_coverage_monotone_and_saturating() {
+        let p = TaskProfile::lookup(Dataset::WikiText103, ModelFamily::Gpt2);
+        let mut prev = 0.0;
+        for s in [1, 2, 5, 10, 20, 50, 100] {
+            let c = p.analytic_coverage(s);
+            assert!(c > prev && c < 1.0, "S={s}: {c}");
+            prev = c;
+        }
+        // pass@1 equals E[p].
+        assert!((p.analytic_coverage(1) - p.expected_accuracy()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn coverage_curve_fits_beta_near_point_seven() {
+        // The core calibration claim: the Beta mixture produces coverage
+        // curves whose fitted exponent lands near the paper's β ≈ 0.7.
+        let p = TaskProfile::lookup(Dataset::WikiText103, ModelFamily::Gpt2);
+        let data: Vec<(f64, f64)> =
+            [1u32, 5, 10, 15, 20].iter().map(|&s| (s as f64, p.analytic_coverage(s))).collect();
+        let fit =
+            crate::scaling::fit::fit_coverage_law(&data, &Default::default()).unwrap();
+        assert!(
+            (fit.beta - 0.7).abs() < 0.12,
+            "calibration should give β≈0.7, got {}",
+            fit.beta
+        );
+        assert!(fit.r_squared > 0.99);
+    }
+
+    #[test]
+    fn larger_models_are_more_accurate_on_reasoning() {
+        let gpt2 = TaskProfile::lookup(Dataset::Gsm8k, ModelFamily::Gpt2);
+        let lfm2 = TaskProfile::lookup(Dataset::Gsm8k, ModelFamily::Lfm2);
+        assert!(lfm2.expected_accuracy() > gpt2.expected_accuracy());
+    }
+
+    #[test]
+    fn family_variant_names_match_manifest() {
+        for f in ModelFamily::all() {
+            assert_eq!(ModelFamily::from_str(f.variant()).unwrap(), f);
+        }
+    }
+
+    #[test]
+    fn dataset_roundtrip() {
+        for d in Dataset::all() {
+            assert_eq!(Dataset::from_str(d.as_str()).unwrap(), d);
+        }
+        assert!(Dataset::from_str("imagenet").is_err());
+    }
+
+    #[test]
+    fn gsm8k_outputs_longer_than_arc() {
+        // Chain-of-thought produces long outputs; ARC is short-form QA.
+        let g = TaskProfile::lookup(Dataset::Gsm8k, ModelFamily::Qwen2);
+        let a = TaskProfile::lookup(Dataset::ArcChallenge, ModelFamily::Qwen2);
+        assert!(g.output_tokens > 3.0 * a.output_tokens);
+    }
+}

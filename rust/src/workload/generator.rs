@@ -1,0 +1,127 @@
+//! Query generation: materializes a benchmark slice as concrete queries
+//! with latent difficulties and token budgets.
+
+use crate::rng::Pcg;
+
+use super::datasets::{Dataset, ModelFamily, TaskProfile};
+
+/// One evaluation query.
+#[derive(Debug, Clone)]
+pub struct Query {
+    pub id: u64,
+    pub dataset: Dataset,
+    /// Latent single-sample success probability (drawn from the
+    /// profile's Beta distribution — hidden from the orchestrator).
+    pub difficulty_p: f64,
+    /// Prompt length in tokens.
+    pub prompt_tokens: u32,
+    /// Output budget per sample in tokens.
+    pub output_tokens: u32,
+}
+
+/// Deterministic workload generator for a (dataset, family) pair.
+#[derive(Debug, Clone)]
+pub struct WorkloadGenerator {
+    profile: TaskProfile,
+    seed: u64,
+}
+
+impl WorkloadGenerator {
+    pub fn new(dataset: Dataset, family: ModelFamily, seed: u64) -> Self {
+        WorkloadGenerator { profile: TaskProfile::lookup(dataset, family), seed }
+    }
+
+    pub fn profile(&self) -> &TaskProfile {
+        &self.profile
+    }
+
+    /// Generate `n` queries. Deterministic in (dataset, family, seed).
+    pub fn queries(&self, n: usize) -> Vec<Query> {
+        let stream = dataset_stream(self.profile.dataset)
+            ^ (self.profile.family.paper_params() as u64);
+        let mut rng = Pcg::new(self.seed, stream);
+        (0..n)
+            .map(|i| {
+                let p = if rng.chance(self.profile.solvable_fraction) {
+                    rng.next_beta(self.profile.beta_a, self.profile.beta_b)
+                } else {
+                    0.0
+                };
+                // Token counts jitter ±25% around the profile mean.
+                let prompt = jitter(&mut rng, self.profile.prompt_tokens);
+                let output = jitter(&mut rng, self.profile.output_tokens);
+                Query {
+                    id: i as u64,
+                    dataset: self.profile.dataset,
+                    difficulty_p: p,
+                    prompt_tokens: prompt,
+                    output_tokens: output,
+                }
+            })
+            .collect()
+    }
+}
+
+fn jitter(rng: &mut Pcg, mean: f64) -> u32 {
+    (mean * rng.range_f64(0.75, 1.25)).round().max(1.0) as u32
+}
+
+fn dataset_stream(d: Dataset) -> u64 {
+    match d {
+        Dataset::WikiText103 => 101,
+        Dataset::Gsm8k => 102,
+        Dataset::ArcChallenge => 103,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let g = WorkloadGenerator::new(Dataset::Gsm8k, ModelFamily::Qwen2, 7);
+        let a = g.queries(50);
+        let b = g.queries(50);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.difficulty_p, y.difficulty_p);
+            assert_eq!(x.prompt_tokens, y.prompt_tokens);
+        }
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = WorkloadGenerator::new(Dataset::Gsm8k, ModelFamily::Qwen2, 1).queries(20);
+        let b = WorkloadGenerator::new(Dataset::Gsm8k, ModelFamily::Qwen2, 2).queries(20);
+        assert!(a.iter().zip(&b).any(|(x, y)| x.difficulty_p != y.difficulty_p));
+    }
+
+    #[test]
+    fn empirical_accuracy_matches_profile() {
+        let g = WorkloadGenerator::new(Dataset::ArcChallenge, ModelFamily::Llama32, 3);
+        let qs = g.queries(20_000);
+        let mean_p: f64 = qs.iter().map(|q| q.difficulty_p).sum::<f64>() / qs.len() as f64;
+        let expect = g.profile().expected_accuracy();
+        assert!((mean_p - expect).abs() < 0.01, "mean_p={mean_p} expect={expect}");
+    }
+
+    #[test]
+    fn difficulties_in_unit_interval() {
+        let g = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 5);
+        for q in g.queries(1000) {
+            assert!((0.0..=1.0).contains(&q.difficulty_p));
+            assert!(q.prompt_tokens > 0 && q.output_tokens > 0);
+        }
+    }
+
+    #[test]
+    fn token_jitter_stays_within_bounds() {
+        let g = WorkloadGenerator::new(Dataset::Gsm8k, ModelFamily::Gpt2, 11);
+        let mean = g.profile().output_tokens;
+        for q in g.queries(500) {
+            let t = q.output_tokens as f64;
+            assert!(t >= mean * 0.74 && t <= mean * 1.26, "t={t}");
+        }
+    }
+}

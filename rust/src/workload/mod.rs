@@ -1,0 +1,21 @@
+//! Workload substrate: benchmark profiles, query traces, and the
+//! coverage oracle (DESIGN.md §S3).
+//!
+//! The paper evaluates pass@k on WikiText-103, GSM8K and ARC-Challenge.
+//! Random-weight scaled models cannot solve those benchmarks, so queries
+//! carry a latent per-query difficulty `p_q ~ Beta(a, b)` calibrated per
+//! (dataset, model family) to match the paper's single-sample accuracy;
+//! each generated sample succeeds i.i.d. `Bernoulli(p_q)`. A mixture of
+//! Bernoullis yields exactly the saturating-coverage family
+//! `C(S) = 1 − exp(−α·S^β)` the paper fits, so the entire measurement +
+//! fitting pipeline is exercised end-to-end.
+
+pub mod coverage;
+pub mod datasets;
+pub mod generator;
+pub mod trace;
+
+pub use coverage::{CoverageOracle, QueryOutcome};
+pub use datasets::{Dataset, ModelFamily, TaskProfile};
+pub use generator::{Query, WorkloadGenerator};
+pub use trace::{RequestTrace, TracedRequest};

@@ -1,0 +1,129 @@
+//! Request traces: arrival-timed serving workloads (Poisson arrivals)
+//! for the server loop and the DDoS / rate-limit experiments.
+
+use crate::rng::Pcg;
+
+use super::generator::Query;
+
+/// A query with an arrival time (virtual seconds from trace start).
+#[derive(Debug, Clone)]
+pub struct TracedRequest {
+    pub arrival_s: f64,
+    pub query: Query,
+    /// Client identifier (rate limiting is per client).
+    pub client_id: u32,
+}
+
+/// An arrival-ordered request trace.
+#[derive(Debug, Clone)]
+pub struct RequestTrace {
+    requests: Vec<TracedRequest>,
+}
+
+impl RequestTrace {
+    /// Poisson arrivals at `rate_per_s` over the given queries, cycling
+    /// clients round-robin over `n_clients`.
+    pub fn poisson(queries: Vec<Query>, rate_per_s: f64, n_clients: u32, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0 && n_clients > 0);
+        let mut rng = Pcg::new(seed, 777);
+        let mut t = 0.0;
+        let requests = queries
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| {
+                t += rng.next_exp(rate_per_s);
+                TracedRequest { arrival_s: t, query, client_id: i as u32 % n_clients }
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+
+    /// A burst: all requests from one client arriving nearly at once
+    /// (the rapid-fire DDoS scenario of Table 12).
+    pub fn burst(queries: Vec<Query>, client_id: u32, spacing_s: f64) -> Self {
+        let requests = queries
+            .into_iter()
+            .enumerate()
+            .map(|(i, query)| TracedRequest {
+                arrival_s: i as f64 * spacing_s,
+                query,
+                client_id,
+            })
+            .collect();
+        RequestTrace { requests }
+    }
+
+    pub fn requests(&self) -> &[TracedRequest] {
+        &self.requests
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    pub fn duration_s(&self) -> f64 {
+        self.requests.last().map(|r| r.arrival_s).unwrap_or(0.0)
+    }
+
+    /// Offered load in requests per second.
+    pub fn offered_rate(&self) -> f64 {
+        if self.duration_s() == 0.0 {
+            return 0.0;
+        }
+        self.len() as f64 / self.duration_s()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::{Dataset, ModelFamily};
+    use crate::workload::generator::WorkloadGenerator;
+
+    fn queries(n: usize) -> Vec<Query> {
+        WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 1).queries(n)
+    }
+
+    #[test]
+    fn arrivals_are_monotone() {
+        let t = RequestTrace::poisson(queries(200), 10.0, 4, 3);
+        let mut prev = 0.0;
+        for r in t.requests() {
+            assert!(r.arrival_s >= prev);
+            prev = r.arrival_s;
+        }
+    }
+
+    #[test]
+    fn offered_rate_near_target() {
+        let t = RequestTrace::poisson(queries(5000), 25.0, 4, 5);
+        let rate = t.offered_rate();
+        assert!((rate - 25.0).abs() < 2.0, "rate={rate}");
+    }
+
+    #[test]
+    fn clients_cycle() {
+        let t = RequestTrace::poisson(queries(8), 1.0, 4, 0);
+        let ids: Vec<u32> = t.requests().iter().map(|r| r.client_id).collect();
+        assert_eq!(ids, vec![0, 1, 2, 3, 0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn burst_is_single_client_dense() {
+        let t = RequestTrace::burst(queries(100), 9, 0.001);
+        assert!(t.requests().iter().all(|r| r.client_id == 9));
+        assert!(t.duration_s() < 0.1 + 1e-9);
+        assert!(t.offered_rate() > 500.0);
+    }
+
+    #[test]
+    fn empty_trace() {
+        let t = RequestTrace::burst(vec![], 0, 0.01);
+        assert!(t.is_empty());
+        assert_eq!(t.offered_rate(), 0.0);
+    }
+}

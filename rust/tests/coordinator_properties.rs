@@ -1,0 +1,198 @@
+//! Property-based tests over coordinator + safety invariants (seeded
+//! random cases via `qeil::testing::check`; no artifacts needed).
+
+use qeil::coordinator::allocation::ModelShape;
+use qeil::coordinator::batcher::Batcher;
+use qeil::coordinator::orchestrator::Orchestrator;
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::devices::spec::DeviceId;
+use qeil::devices::thermal::ThermalState;
+use qeil::prop_assert;
+use qeil::runtime::manifest::VariantMeta;
+use qeil::safety::ratelimit::RateLimiter;
+use qeil::safety::thermal_guard::ThermalGuard;
+use qeil::testing::check;
+use qeil::workload::datasets::ModelFamily;
+
+fn meta(layers: usize) -> VariantMeta {
+    VariantMeta {
+        name: "x".into(),
+        vocab: 512,
+        d_model: 64,
+        n_layers: layers,
+        n_heads: 4,
+        head_dim: 16,
+        d_ff: 256,
+        max_seq: 64,
+        prefill_len: 32,
+        paper_params: 125_000_000,
+        variant_params: 268_672,
+        flops_prefill: 1,
+        flops_per_token_decode: 1,
+        bytes_per_token_decode: 1,
+        cache_shape: [4, 4, 64, 16],
+        prefill_artifact: "p".into(),
+        decode_artifact: "d".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+    }
+}
+
+fn random_family(rng: &mut qeil::rng::Pcg) -> ModelFamily {
+    let all = ModelFamily::all();
+    all[rng.below(all.len() as u64) as usize]
+}
+
+#[test]
+fn prop_greedy_assignment_never_violates_memory() {
+    check("greedy memory safety", 200, |rng| {
+        let family = random_family(rng);
+        let layers = 1 + rng.below(16) as usize;
+        let shape = ModelShape::from_family(family, &meta(layers));
+        let presets =
+            [FleetPreset::EdgeBox, FleetPreset::MultiVendor, FleetPreset::NpuOnly, FleetPreset::CpuOnly];
+        let fleet = Fleet::preset(presets[rng.below(4) as usize]);
+        let orch = Orchestrator::new(&fleet);
+        match orch.assign(&shape) {
+            Ok(alloc) => {
+                prop_assert!(
+                    alloc.check_memory(&shape, &fleet).is_ok(),
+                    "memory violated for {family:?} L={layers}"
+                );
+                prop_assert!(alloc.layers.len() == layers, "layer count mismatch");
+                Ok(())
+            }
+            Err(_) => Ok(()), // infeasible is a legal outcome
+        }
+    });
+}
+
+#[test]
+fn prop_batcher_conserves_samples() {
+    check("batcher conservation", 300, |rng| {
+        let n_samples = rng.below(200) as u32;
+        let n_devices = 1 + rng.below(6) as usize;
+        let max_batch = 1 + rng.below(16) as usize;
+        let devices: Vec<DeviceId> =
+            (0..n_devices).map(|i| DeviceId(format!("d{i}"))).collect();
+        let batches = Batcher { max_batch }.assign(n_samples, &devices);
+        let mut seen: Vec<u32> = batches.iter().flat_map(|b| b.samples.clone()).collect();
+        seen.sort_unstable();
+        let expect: Vec<u32> = (0..n_samples).collect();
+        prop_assert!(seen == expect, "samples lost or duplicated: {} vs {}", seen.len(), n_samples);
+        for b in &batches {
+            prop_assert!(b.samples.len() <= max_batch, "batch over cap");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_thermal_guard_keeps_any_device_below_limit() {
+    check("guard bounds temperature", 40, |rng| {
+        let specs = [
+            qeil::devices::spec::DeviceSpec::intel_cpu(),
+            qeil::devices::spec::DeviceSpec::intel_npu(),
+            qeil::devices::spec::DeviceSpec::intel_igpu(),
+            qeil::devices::spec::DeviceSpec::nvidia_gpu(),
+            qeil::devices::spec::DeviceSpec::cloud_gpu(),
+        ];
+        let spec = specs[rng.below(5) as usize].clone();
+        let guard = ThermalGuard::default();
+        let mut thermal = ThermalState::new(&spec);
+        // Random offered load pattern, guard-modulated.
+        for _ in 0..20_000 {
+            let offered = rng.range_f64(0.2, 1.0);
+            let decision = guard.evaluate(&spec, thermal.temp_c());
+            let factor = offered.min(decision.workload_factor);
+            let power = spec.idle_w + (spec.tdp_w - spec.idle_w) * factor;
+            thermal.step(&spec, power, 0.1);
+            prop_assert!(
+                thermal.temp_c() <= spec.t_max_c + 1e-6,
+                "{}: temp {} exceeded T_max",
+                spec.id,
+                thermal.temp_c()
+            );
+        }
+        prop_assert!(thermal.throttle_events() == 0, "{}: hw throttled", spec.id);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rate_limiter_never_exceeds_sustained_rate() {
+    check("rate limiter sustained bound", 100, |rng| {
+        let rate = rng.range_f64(1.0, 50.0);
+        let burst = rng.range_f64(1.0, 20.0);
+        let mut rl = RateLimiter::new(rate, burst);
+        let horizon_s = 20.0;
+        let offered = rate * rng.range_f64(2.0, 10.0); // heavy overload
+        let n = (offered * horizon_s) as u64;
+        let mut admitted = 0u64;
+        for i in 0..n {
+            let t = i as f64 / offered;
+            if rl.admit(0, t) {
+                admitted += 1;
+            }
+        }
+        let bound = (rate * horizon_s + burst).ceil() as u64 + 1;
+        prop_assert!(admitted <= bound, "admitted {admitted} > bound {bound}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_coverage_oracle_monotone_in_budget() {
+    use qeil::workload::coverage::CoverageOracle;
+    use qeil::workload::datasets::Dataset;
+    use qeil::workload::generator::WorkloadGenerator;
+    check("coverage monotone", 30, |rng| {
+        let seed = rng.next_u64();
+        let family = random_family(rng);
+        let gen = WorkloadGenerator::new(Dataset::WikiText103, family, seed);
+        let queries = gen.queries(150);
+        let oracle = CoverageOracle::new(seed ^ 0xABCD);
+        let mut prev = -1.0;
+        for s in [1u32, 2, 5, 10, 20] {
+            let c = oracle.coverage(&queries, s);
+            prop_assert!(c >= prev, "coverage decreased at S={s}: {c} < {prev}");
+            prev = c;
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sim_energy_breakdown_always_sums() {
+    use qeil::config::{ExecMode, OrchestratorFeatures};
+    use qeil::sim::engine::{SimEngine, SimOptions};
+    use qeil::workload::datasets::Dataset;
+    use qeil::workload::generator::WorkloadGenerator;
+    check("sim energy additivity", 20, |rng| {
+        let family = random_family(rng);
+        let shape = ModelShape::from_family(family, &meta(4));
+        let hetero = rng.chance(0.5);
+        let options = SimOptions {
+            mode: if hetero { ExecMode::EnergyAware } else { ExecMode::Standard },
+            features: if hetero {
+                OrchestratorFeatures::full()
+            } else {
+                OrchestratorFeatures::baseline()
+            },
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let fleet = Fleet::preset(if hetero { FleetPreset::EdgeBox } else { FleetPreset::GpuOnly });
+        let mut engine = SimEngine::new(fleet, shape, options);
+        let queries = WorkloadGenerator::new(Dataset::Gsm8k, family, rng.next_u64()).queries(20);
+        let r = engine.run(&queries, 5).unwrap();
+        let parts = r.prefill_energy_j + r.decode_energy_j + r.overhead_energy_j;
+        prop_assert!(
+            (parts - r.total_energy_j).abs() <= 1e-6 * r.total_energy_j.max(1.0),
+            "breakdown {parts} != total {}",
+            r.total_energy_j
+        );
+        prop_assert!(r.queries_lost == 0, "no failures injected, none may be lost");
+        Ok(())
+    });
+}

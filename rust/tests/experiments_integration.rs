@@ -1,0 +1,50 @@
+//! Integration over the experiment harness: every paper table/figure
+//! generator must run and reproduce the paper's qualitative claims.
+
+use qeil::experiments::{run_experiment, ALL_IDS};
+
+#[test]
+fn every_experiment_generates() {
+    for id in ALL_IDS {
+        let t = run_experiment(id, 100, 0).unwrap_or_else(|e| panic!("{id}: {e}"));
+        assert!(!t.rows.is_empty(), "{id}: empty table");
+        assert!(!t.to_markdown().is_empty());
+    }
+}
+
+#[test]
+fn headline_claims_hold_at_full_scale() {
+    // Table 16 at full scale: mean aggregate row carries the signs the
+    // paper claims (IPW up, coverage up, energy down, latency down).
+    let t = run_experiment("t16", 400, 0).unwrap();
+    let mean = t.rows.last().unwrap();
+    assert!(mean[2].starts_with('+'), "mean IPW gain: {}", mean[2]);
+    assert!(mean[3].starts_with('+'), "mean coverage gain: {}", mean[3]);
+    assert!(mean[4].starts_with('-'), "mean energy delta: {}", mean[4]);
+    assert!(mean[7].starts_with('-'), "mean latency delta: {}", mean[7]);
+}
+
+#[test]
+fn safety_tables_reproduce_guarantees() {
+    // Table 10: guard -> zero throttle events.
+    let t10 = run_experiment("t10", 100, 0).unwrap();
+    assert_eq!(t10.rows[1][2], "0");
+    // Table 11: zero queries lost in every scenario.
+    let t11 = run_experiment("t11", 100, 0).unwrap();
+    for row in &t11.rows {
+        assert_eq!(row[3], "0", "{}", row[0]);
+    }
+    // Table 12: first two attacks blocked 100%.
+    let t12 = run_experiment("t12", 100, 0).unwrap();
+    assert_eq!(t12.rows[0][1], "100%");
+    assert_eq!(t12.rows[1][1], "100%");
+}
+
+#[test]
+fn results_are_seed_stable() {
+    let a = run_experiment("t3", 100, 5).unwrap();
+    let b = run_experiment("t3", 100, 5).unwrap();
+    assert_eq!(a.rows, b.rows, "same seed must give identical tables");
+    let c = run_experiment("t3", 100, 6).unwrap();
+    assert_ne!(a.rows, c.rows, "different seeds must differ somewhere");
+}

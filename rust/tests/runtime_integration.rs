@@ -1,0 +1,111 @@
+//! Integration tests over the real PJRT runtime: load the gpt2 artifact,
+//! execute prefill + decode, and validate the generation session.
+//!
+//! These tests need `make artifacts` to have run; they are skipped (with
+//! a message) when artifacts are absent so `cargo test` stays green on a
+//! fresh checkout.
+
+use qeil::rng::Pcg;
+use qeil::runtime::session::Sampling;
+use qeil::runtime::{Engine, GenerationSession};
+
+fn artifacts_dir() -> Option<&'static str> {
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        Some("artifacts")
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn engine_with(variant: &str) -> Option<Engine> {
+    let dir = artifacts_dir()?;
+    let mut engine = Engine::new(dir).expect("engine");
+    engine.load_variant(variant).expect("load variant");
+    Some(engine)
+}
+
+#[test]
+fn prefill_produces_finite_logits_and_caches() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+    let out = engine.prefill("gpt2", &prompt).unwrap();
+    assert_eq!(out.logits.len(), meta.prefill_len * meta.vocab);
+    assert!(out.logits.iter().all(|x| x.is_finite()));
+}
+
+#[test]
+fn decode_step_changes_logits_with_position() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+    let out = engine.prefill("gpt2", &prompt).unwrap();
+    let d1 = engine
+        .decode("gpt2", 5, &out.k_cache, &out.v_cache, meta.prefill_len as i32)
+        .unwrap();
+    let d2 = engine
+        .decode("gpt2", 6, &d1.k_cache, &d1.v_cache, meta.prefill_len as i32 + 1)
+        .unwrap();
+    assert_eq!(d1.logits.len(), meta.vocab);
+    assert!(d1.logits.iter().zip(&d2.logits).any(|(a, b)| a != b));
+}
+
+#[test]
+fn greedy_generation_is_deterministic() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).map(|i| i % 7).collect();
+    let mut outputs = Vec::new();
+    for _ in 0..2 {
+        let (mut session, logits) = GenerationSession::start(&engine, "gpt2", &prompt).unwrap();
+        let mut rng = Pcg::seeded(0);
+        let tokens = session.generate(logits, 6, Sampling::Greedy, &mut rng).unwrap();
+        outputs.push(tokens);
+    }
+    assert_eq!(outputs[0], outputs[1]);
+}
+
+#[test]
+fn generation_respects_cache_capacity() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+    let (mut session, logits) = GenerationSession::start(&engine, "gpt2", &prompt).unwrap();
+    let capacity = (meta.max_seq - meta.prefill_len) as usize;
+    let mut rng = Pcg::seeded(1);
+    // Ask for far more than fits: must stop at capacity, not error.
+    let tokens = session.generate(logits, capacity + 50, Sampling::Greedy, &mut rng).unwrap();
+    assert_eq!(tokens.len(), capacity);
+    assert_eq!(session.remaining(), 0);
+    // One more step must fail loudly.
+    assert!(session.step(0).is_err());
+}
+
+#[test]
+fn invalid_inputs_rejected() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    // Wrong prompt length.
+    assert!(engine.prefill("gpt2", &[1, 2, 3]).is_err());
+    // Out-of-vocab token.
+    let mut prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+    prompt[0] = meta.vocab as i32;
+    assert!(engine.prefill("gpt2", &prompt).is_err());
+    // Unknown variant.
+    assert!(engine.prefill("nonexistent", &[0; 32]).is_err());
+}
+
+#[test]
+fn temperature_sampling_varies_with_seed() {
+    let Some(engine) = engine_with("gpt2") else { return };
+    let meta = engine.meta("gpt2").unwrap().clone();
+    let prompt: Vec<i32> = (0..meta.prefill_len as i32).collect();
+    let mut outs = Vec::new();
+    for seed in [1u64, 2] {
+        let (mut session, logits) = GenerationSession::start(&engine, "gpt2", &prompt).unwrap();
+        let mut rng = Pcg::seeded(seed);
+        outs.push(session.generate(logits, 8, Sampling::Temperature(1.5), &mut rng).unwrap());
+    }
+    assert_ne!(outs[0], outs[1], "different seeds should explore differently");
+}

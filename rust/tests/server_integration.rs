@@ -1,0 +1,99 @@
+//! Integration tests over the serving stack: executor thread + service
+//! front end with validation / rate limiting / sanity checks, against
+//! the real PJRT engine. Skipped when artifacts are absent.
+
+use qeil::server::api::{InferenceRequest, RejectReason};
+use qeil::server::service::{Service, ServiceConfig};
+
+fn have_artifacts() -> bool {
+    let ok = std::path::Path::new("artifacts/manifest.json").exists();
+    if !ok {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+    }
+    ok
+}
+
+fn request(client: u32, prompt_len: usize, seed: u64) -> InferenceRequest {
+    InferenceRequest {
+        client_id: client,
+        prompt: (0..prompt_len as i64).map(|i| i % 500).collect(),
+        max_new_tokens: 6,
+        temperature: 0.0,
+        seed,
+    }
+}
+
+#[test]
+fn serves_valid_requests_end_to_end() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut service = Service::start(&ServiceConfig::default()).unwrap();
+    for i in 0..3 {
+        let resp = service.handle(request(i, 32, i as u64), i as f64).unwrap();
+        assert_eq!(resp.tokens.len(), 6);
+        assert!(resp.compute.as_secs_f64() > 0.0);
+    }
+    let stats = service.stats();
+    assert_eq!(stats.served, 3);
+    assert_eq!(stats.tokens_out, 18);
+    assert!(stats.mean_latency_s() > 0.0);
+}
+
+#[test]
+fn validation_rejects_bad_prompts_before_compute() {
+    if !have_artifacts() {
+        return;
+    }
+    let mut service = Service::start(&ServiceConfig::default()).unwrap();
+    // Oversized prompt (table 12's 10× context attack).
+    let oversized = request(0, 320, 0);
+    match service.handle(oversized, 0.0) {
+        Err(RejectReason::Validation(msg)) => assert!(msg.contains("exceeds")),
+        other => panic!("expected validation rejection, got {other:?}"),
+    }
+    // Out-of-vocab token.
+    let mut bad = request(0, 32, 0);
+    bad.prompt[0] = 100_000;
+    assert!(matches!(service.handle(bad, 0.0), Err(RejectReason::Validation(_))));
+    // Empty prompt.
+    let mut empty = request(0, 32, 0);
+    empty.prompt.clear();
+    assert!(matches!(service.handle(empty, 0.0), Err(RejectReason::Validation(_))));
+    let stats = service.stats();
+    assert_eq!(stats.served, 0);
+    assert_eq!(stats.rejected_validation, 3);
+}
+
+#[test]
+fn rate_limiter_blocks_rapid_fire() {
+    if !have_artifacts() {
+        return;
+    }
+    let config = ServiceConfig { rate_per_s: 5.0, burst: 3.0, ..Default::default() };
+    let mut service = Service::start(&config).unwrap();
+    let mut admitted = 0;
+    let mut limited = 0;
+    for i in 0..20 {
+        // All at t=0: only the burst should pass.
+        match service.handle(request(9, 32, i), 0.0) {
+            Ok(_) => admitted += 1,
+            Err(RejectReason::RateLimited) => limited += 1,
+            Err(other) => panic!("unexpected {other:?}"),
+        }
+    }
+    assert_eq!(admitted, 3);
+    assert_eq!(limited, 17);
+}
+
+#[test]
+fn distinct_clients_unaffected_by_each_other() {
+    if !have_artifacts() {
+        return;
+    }
+    let config = ServiceConfig { rate_per_s: 5.0, burst: 1.0, ..Default::default() };
+    let mut service = Service::start(&config).unwrap();
+    assert!(service.handle(request(1, 32, 0), 0.0).is_ok());
+    assert!(matches!(service.handle(request(1, 32, 1), 0.0), Err(RejectReason::RateLimited)));
+    assert!(service.handle(request(2, 32, 2), 0.0).is_ok(), "client 2 must be unaffected");
+}
