@@ -1,15 +1,21 @@
-//! L3 hot-path micro-benchmarks: greedy layer assignment, phase
-//! planning, batching, and the safety-monitor decision path. These are
-//! the per-request coordinator costs that must stay off the critical
-//! path (paper τ_overhead).
+//! L3 hot-path micro-benchmarks: greedy layer assignment, PGSAM
+//! refinement, stage-energy table construction, phase planning,
+//! batching, and the safety-monitor decision path. These are the
+//! per-request coordinator costs that must stay off the critical path
+//! (paper τ_overhead).
+//!
+//! Results print human-readable and land machine-readable in
+//! `BENCH_orchestrator.json` (the repo's perf trajectory record).
 //!
 //!     cargo bench --bench orchestrator
 
-use qeil::bench::Bencher;
+use qeil::bench::{write_json, Bencher};
 use qeil::coordinator::allocation::ModelShape;
 use qeil::coordinator::batcher::Batcher;
 use qeil::coordinator::disaggregation::{decode_task, PhasePlan};
+use qeil::coordinator::energy_table::EnergyTable;
 use qeil::coordinator::orchestrator::Orchestrator;
+use qeil::coordinator::pgsam::PgsamConfig;
 use qeil::devices::fleet::{Fleet, FleetPreset};
 use qeil::experiments::runner::default_meta;
 use qeil::safety::thermal_guard::ThermalGuard;
@@ -19,17 +25,48 @@ fn main() {
     let b = Bencher::default();
     let fleet = Fleet::preset(FleetPreset::EdgeBox);
     let shape = ModelShape::from_family(ModelFamily::Lfm2, &default_meta(ModelFamily::Lfm2));
+    let mut results = Vec::new();
+
+    // Cold table construction: the once-per-(fleet, shape) cost the
+    // memoized planner probes amortize away.
+    let r = b.run("energy_table_build(lfm2, edge-box)", || {
+        std::hint::black_box(EnergyTable::build(&fleet, &shape));
+    });
+    println!("{}", r.report());
+    results.push(r);
 
     let orch = Orchestrator::new(&fleet);
     let r = b.run("greedy_layer_assignment(lfm2, edge-box)", || {
         std::hint::black_box(orch.assign(&shape).unwrap());
     });
     println!("{}", r.report());
+    let greedy_mean = r.mean;
+    results.push(r);
+
+    // PGSAM at its default anytime budget (greedy seed + anneal).
+    let pgsam_cfg = PgsamConfig::default();
+    let r = b.run("pgsam_assignment(lfm2, edge-box)", || {
+        std::hint::black_box(orch.assign_pgsam(&shape, &pgsam_cfg).unwrap());
+    });
+    println!("{}", r.report());
+    let ratio = r.mean.as_secs_f64() / greedy_mean.as_secs_f64().max(1e-12);
+    println!("    pgsam/greedy wall ratio: {ratio:.2}x (budget: within 10x)");
+    results.push(r);
+
+    // Plan quality: PGSAM must never lose to its greedy seed.
+    let greedy_alloc = orch.assign(&shape).unwrap();
+    let greedy_e = orch.allocation_energy_j(&shape, &greedy_alloc);
+    let (_, pgsam_e) = orch.assign_pgsam(&shape, &pgsam_cfg).unwrap();
+    println!(
+        "    plan energy: greedy {greedy_e:.4} J/step, pgsam {pgsam_e:.4} J/step ({:+.2}%)",
+        (pgsam_e - greedy_e) / greedy_e * 100.0
+    );
 
     let r = b.run("phase_plan_disaggregated", || {
         std::hint::black_box(PhasePlan::disaggregated(&shape, &fleet, 96, 4).unwrap());
     });
     println!("{}", r.report());
+    results.push(r);
 
     let batcher = Batcher::default();
     let devices: Vec<_> = fleet.devices().iter().map(|d| d.id.clone()).collect();
@@ -38,6 +75,7 @@ fn main() {
         std::hint::black_box(batcher.assign_weighted(20, &devices, &rates));
     });
     println!("{}", r.report());
+    results.push(r);
 
     let guard = ThermalGuard::default();
     let spec = &fleet.devices()[3];
@@ -45,16 +83,25 @@ fn main() {
         std::hint::black_box(guard.evaluate(spec, 82.0));
     });
     println!("{}", r.report());
+    results.push(r);
 
     let task = decode_task(&shape);
     let r = b.run("roofline_task_seconds", || {
         std::hint::black_box(task.seconds_on(spec, 1.0));
     });
     println!("{}", r.report());
+    results.push(r);
 
     let alloc = orch.assign(&shape).unwrap();
     let r = b.run("allocation_energy_objective", || {
         std::hint::black_box(orch.allocation_energy_j(&shape, &alloc));
     });
     println!("{}", r.report());
+    results.push(r);
+
+    let out = std::path::Path::new("BENCH_orchestrator.json");
+    match write_json("orchestrator", &results, out) {
+        Ok(()) => println!("\nwrote {}", out.display()),
+        Err(e) => eprintln!("\nfailed to write {}: {e}", out.display()),
+    }
 }

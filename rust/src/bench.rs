@@ -1,8 +1,13 @@
 //! Measurement harness used by `benches/*.rs` (the offline environment
 //! has no `criterion`; this provides the same discipline: warmup,
-//! repeated timed samples, and robust summary statistics).
+//! repeated timed samples, and robust summary statistics). Suites emit
+//! machine-readable `BENCH_<suite>.json` files via [`write_json`] so the
+//! perf trajectory is diffable across PRs.
 
+use std::path::Path;
 use std::time::{Duration, Instant};
+
+use crate::json::Json;
 
 /// Summary statistics for one benchmark.
 #[derive(Debug, Clone)]
@@ -34,6 +39,37 @@ impl BenchResult {
             self.iters_per_sample,
         )
     }
+
+    /// Machine-readable form (nanosecond-denominated, diff-friendly).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("samples", Json::Num(self.samples as f64)),
+            ("iters_per_sample", Json::Num(self.iters_per_sample as f64)),
+            ("mean_ns", Json::Num(self.mean.as_nanos() as f64)),
+            ("median_ns", Json::Num(self.median.as_nanos() as f64)),
+            ("p95_ns", Json::Num(self.p95.as_nanos() as f64)),
+            ("std_dev_ns", Json::Num(self.std_dev.as_nanos() as f64)),
+            ("min_ns", Json::Num(self.min.as_nanos() as f64)),
+            ("max_ns", Json::Num(self.max.as_nanos() as f64)),
+        ])
+    }
+}
+
+/// Write a suite's results as `BENCH_<suite>.json`-style output at
+/// `path` — the repo's perf trajectory record. Pretty-printed and
+/// key-ordered so consecutive runs diff cleanly.
+pub fn write_json(suite: &str, results: &[BenchResult], path: &Path) -> anyhow::Result<()> {
+    let doc = Json::obj(vec![
+        ("suite", Json::Str(suite.to_string())),
+        ("results", Json::arr(results.iter().map(|r| r.to_json()).collect())),
+    ]);
+    let mut text = doc.to_string_pretty();
+    if !text.ends_with('\n') {
+        text.push('\n');
+    }
+    std::fs::write(path, text)?;
+    Ok(())
 }
 
 /// A configurable micro-benchmark runner.
@@ -144,5 +180,32 @@ mod tests {
             std::hint::black_box(1 + 1);
         });
         assert!(r.report().contains("my_bench"));
+    }
+
+    #[test]
+    fn json_round_trips_through_parser() {
+        let b = Bencher::new(Duration::from_millis(5), 3);
+        let r = b.run("json_bench", || {
+            std::hint::black_box(1 + 1);
+        });
+        let parsed = Json::parse(&r.to_json().to_string()).unwrap();
+        assert_eq!(parsed.str_field("name").unwrap(), "json_bench");
+        assert_eq!(parsed.u64_field("samples").unwrap(), 3);
+        assert!(parsed.f64_field("mean_ns").unwrap() > 0.0);
+    }
+
+    #[test]
+    fn write_json_emits_parseable_suite_file() {
+        let b = Bencher::new(Duration::from_millis(5), 3);
+        let r = b.run("suite_bench", || {
+            std::hint::black_box(1 + 1);
+        });
+        let path = std::env::temp_dir().join("qeil_bench_suite_test.json");
+        write_json("unit", &[r], &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let parsed = Json::parse(&text).unwrap();
+        assert_eq!(parsed.str_field("suite").unwrap(), "unit");
+        assert_eq!(parsed.field("results").unwrap().as_arr().unwrap().len(), 1);
+        let _ = std::fs::remove_file(&path);
     }
 }

@@ -48,6 +48,10 @@ pub struct OrchestratorFeatures {
     pub prefill_decode_split: bool,
     /// Greedy per-layer assignment (vs whole-model placement).
     pub greedy_layer_assignment: bool,
+    /// Refine the greedy layer plan with the PGSAM annealer (paper §4) —
+    /// the default planner of the full configuration; greedy remains the
+    /// fallback and the annealer's seed state.
+    pub pgsam_planner: bool,
     /// Adapt the sample budget to the energy/latency envelope.
     pub adaptive_sample_budget: bool,
     /// Thermal guard + fault tolerance + validation.
@@ -61,6 +65,7 @@ impl OrchestratorFeatures {
             device_ranking: true,
             prefill_decode_split: true,
             greedy_layer_assignment: true,
+            pgsam_planner: true,
             adaptive_sample_budget: true,
             safety: true,
         }
@@ -72,6 +77,7 @@ impl OrchestratorFeatures {
             device_ranking: false,
             prefill_decode_split: false,
             greedy_layer_assignment: false,
+            pgsam_planner: false,
             adaptive_sample_budget: false,
             safety: false,
         }
@@ -170,6 +176,7 @@ impl ExperimentConfig {
                             "greedy_layer_assignment" => {
                                 cfg.features.greedy_layer_assignment = b
                             }
+                            "pgsam_planner" => cfg.features.pgsam_planner = b,
                             "adaptive_sample_budget" => cfg.features.adaptive_sample_budget = b,
                             "safety" => cfg.features.safety = b,
                             other => bail!("unknown feature flag {other:?}"),
@@ -250,6 +257,15 @@ mod tests {
         assert!(!cfg.features.safety);
         assert!(cfg.features.device_ranking);
         assert_eq!(cfg.latency_sla_s, Some(2.5));
+    }
+
+    #[test]
+    fn pgsam_flag_parses_and_defaults() {
+        assert!(OrchestratorFeatures::full().pgsam_planner);
+        assert!(!OrchestratorFeatures::baseline().pgsam_planner);
+        let cfg =
+            ExperimentConfig::from_json(r#"{"features": {"pgsam_planner": false}}"#).unwrap();
+        assert!(!cfg.features.pgsam_planner);
     }
 
     #[test]

@@ -4,7 +4,7 @@
 use anyhow::{bail, Result};
 
 use crate::devices::fleet::Fleet;
-use crate::devices::spec::DeviceId;
+use crate::devices::spec::{DevIdx, DeviceId};
 use crate::runtime::manifest::VariantMeta;
 use crate::workload::datasets::ModelFamily;
 
@@ -96,53 +96,113 @@ pub struct Allocation {
 }
 
 impl Allocation {
-    /// All devices on the critical path, deduplicated, in first-use order.
-    pub fn devices_used(&self) -> Vec<DeviceId> {
-        let mut out: Vec<DeviceId> = Vec::new();
-        let mut push = |d: &DeviceId| {
-            if !out.contains(d) {
-                out.push(d.clone());
-            }
-        };
-        push(&self.embedding);
-        for l in &self.layers {
-            push(l);
+    /// The stage chain in execution order: embedding, layers…, LM head.
+    pub fn stages(&self) -> impl Iterator<Item = &DeviceId> {
+        std::iter::once(&self.embedding)
+            .chain(self.layers.iter())
+            .chain(std::iter::once(&self.lm_head))
+    }
+
+    /// Intern every stage's device through `fleet` into a plan chain of
+    /// copyable indices (the representation all planners operate on).
+    /// `None` if any stage references a device outside the fleet.
+    pub fn interned(&self, fleet: &Fleet) -> Option<Vec<DevIdx>> {
+        self.stages().map(|d| fleet.idx_of(d)).collect()
+    }
+
+    /// Rebuild the id-based allocation from an interned plan chain
+    /// `[embedding, layers…, lm_head]`.
+    pub fn from_indices(fleet: &Fleet, plan: &[DevIdx]) -> Allocation {
+        assert!(plan.len() >= 2, "plan chain needs embedding + lm_head");
+        Allocation {
+            embedding: fleet.id_at(plan[0]).clone(),
+            layers: plan[1..plan.len() - 1].iter().map(|&i| fleet.id_at(i).clone()).collect(),
+            lm_head: fleet.id_at(plan[plan.len() - 1]).clone(),
         }
-        push(&self.lm_head);
+    }
+
+    /// All devices on the critical path, deduplicated, in first-use
+    /// order. Dedup is index-keyed over the fleet's interned device
+    /// table (a seen-bitmap), not an O(n²) `Vec::contains` scan; stages
+    /// referencing devices outside `fleet` fall back to a linear check.
+    pub fn devices_used(&self, fleet: &Fleet) -> Vec<DeviceId> {
+        let mut seen = vec![false; fleet.len()];
+        let mut out: Vec<DeviceId> = Vec::new();
+        for d in self.stages() {
+            match fleet.idx_of(d) {
+                Some(idx) => {
+                    if !seen[idx.as_usize()] {
+                        seen[idx.as_usize()] = true;
+                        out.push(d.clone());
+                    }
+                }
+                None => {
+                    if !out.contains(d) {
+                        out.push(d.clone());
+                    }
+                }
+            }
+        }
         out
     }
 
     /// Number of device-boundary crossings along the layer chain.
     pub fn boundary_crossings(&self) -> usize {
-        let chain: Vec<&DeviceId> = std::iter::once(&self.embedding)
-            .chain(self.layers.iter())
-            .chain(std::iter::once(&self.lm_head))
-            .collect();
-        chain.windows(2).filter(|w| w[0] != w[1]).count()
+        let mut crossings = 0;
+        let mut prev: Option<&DeviceId> = None;
+        for d in self.stages() {
+            if let Some(p) = prev {
+                if p != d {
+                    crossings += 1;
+                }
+            }
+            prev = Some(d);
+        }
+        crossings
     }
 
-    /// Memory demanded from each device by this allocation (GB).
-    pub fn memory_demand(&self, shape: &ModelShape) -> Vec<(DeviceId, f64)> {
-        let mut demand: Vec<(DeviceId, f64)> = Vec::new();
-        let mut add = |d: &DeviceId, gb: f64| {
-            if let Some(entry) = demand.iter_mut().find(|(id, _)| id == d) {
-                entry.1 += gb;
+    /// Memory demanded from each device by this allocation (GB), in
+    /// first-use order. Accumulation is index-keyed over the interned
+    /// device table (dense per-index array), with a linear-scan fallback
+    /// only for devices outside `fleet`.
+    pub fn memory_demand(&self, shape: &ModelShape, fleet: &Fleet) -> Vec<(DeviceId, f64)> {
+        let stage_gb = |stage: usize| {
+            if stage == 0 {
+                shape.embedding.mem_gb
+            } else if stage == self.layers.len() + 1 {
+                shape.lm_head.mem_gb
             } else {
-                demand.push((d.clone(), gb));
+                shape.per_layer.mem_gb
             }
         };
-        add(&self.embedding, shape.embedding.mem_gb);
-        for l in &self.layers {
-            add(l, shape.per_layer.mem_gb);
+        // slot of each interned device in `out` (usize::MAX = unseen).
+        let mut slot = vec![usize::MAX; fleet.len()];
+        let mut out: Vec<(DeviceId, f64)> = Vec::new();
+        for (stage, d) in self.stages().enumerate() {
+            let gb = stage_gb(stage);
+            match fleet.idx_of(d) {
+                Some(idx) => {
+                    let s = slot[idx.as_usize()];
+                    if s == usize::MAX {
+                        slot[idx.as_usize()] = out.len();
+                        out.push((d.clone(), gb));
+                    } else {
+                        out[s].1 += gb;
+                    }
+                }
+                None => match out.iter_mut().find(|(id, _)| id == d) {
+                    Some(entry) => entry.1 += gb,
+                    None => out.push((d.clone(), gb)),
+                },
+            }
         }
-        add(&self.lm_head, shape.lm_head.mem_gb);
-        demand
+        out
     }
 
     /// Check memory feasibility against a fleet (paper Eq. 12 memory
     /// constraints).
     pub fn check_memory(&self, shape: &ModelShape, fleet: &Fleet) -> Result<()> {
-        for (dev, gb) in self.memory_demand(shape) {
+        for (dev, gb) in self.memory_demand(shape, fleet) {
             let Some(spec) = fleet.get(&dev) else {
                 bail!("allocation references unknown device {dev}");
             };
@@ -194,25 +254,72 @@ mod tests {
 
     #[test]
     fn allocation_devices_and_crossings() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
         let a = Allocation {
             embedding: "npu0".into(),
             layers: vec!["gpu0".into(), "gpu0".into(), "npu0".into(), "npu0".into()],
             lm_head: "npu0".into(),
         };
-        assert_eq!(a.devices_used().len(), 2);
+        assert_eq!(a.devices_used(&fleet).len(), 2);
         // npu -> gpu -> (gpu) -> npu -> (npu) -> npu : 2 crossings
         assert_eq!(a.boundary_crossings(), 2);
     }
 
     #[test]
     fn single_device_allocation_has_no_crossings() {
+        let fleet = Fleet::preset(FleetPreset::CpuOnly);
         let a = Allocation {
             embedding: "cpu0".into(),
             layers: vec!["cpu0".into(); 4],
             lm_head: "cpu0".into(),
         };
         assert_eq!(a.boundary_crossings(), 0);
-        assert_eq!(a.devices_used(), vec![DeviceId::from("cpu0")]);
+        assert_eq!(a.devices_used(&fleet), vec![DeviceId::from("cpu0")]);
+    }
+
+    #[test]
+    fn interning_round_trips_and_rejects_foreign_devices() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let a = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["gpu0".into(), "npu0".into()],
+            lm_head: "cpu0".into(),
+        };
+        let plan = a.interned(&fleet).unwrap();
+        assert_eq!(plan.len(), 4);
+        let back = Allocation::from_indices(&fleet, &plan);
+        assert_eq!(back.embedding, a.embedding);
+        assert_eq!(back.layers, a.layers);
+        assert_eq!(back.lm_head, a.lm_head);
+
+        let foreign = Allocation {
+            embedding: "mystery0".into(),
+            layers: vec!["npu0".into()],
+            lm_head: "npu0".into(),
+        };
+        assert!(foreign.interned(&fleet).is_none());
+        // Fallback accumulation still reports the foreign device.
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        let demand = foreign.memory_demand(&shape, &fleet);
+        assert!(demand.iter().any(|(d, _)| d == &DeviceId::from("mystery0")));
+    }
+
+    #[test]
+    fn memory_demand_accumulates_per_device() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        let a = Allocation {
+            embedding: "npu0".into(),
+            layers: vec!["gpu0".into(), "npu0".into(), "gpu0".into(), "npu0".into()],
+            lm_head: "npu0".into(),
+        };
+        let demand = a.memory_demand(&shape, &fleet);
+        assert_eq!(demand.len(), 2);
+        let total: f64 = demand.iter().map(|(_, gb)| gb).sum();
+        assert!((total - shape.total_mem_gb()).abs() < 1e-12);
+        let npu = demand.iter().find(|(d, _)| d == &DeviceId::from("npu0")).unwrap().1;
+        let expect = shape.embedding.mem_gb + 2.0 * shape.per_layer.mem_gb + shape.lm_head.mem_gb;
+        assert!((npu - expect).abs() < 1e-12);
     }
 
     #[test]

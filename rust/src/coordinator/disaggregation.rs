@@ -35,20 +35,16 @@ impl PhasePlan {
 
         // Decode: energy-ranked fan-out set. Keep devices whose energy is
         // within 20× of the best so hopeless devices don't burn joules,
-        // but parallelism is still available.
-        let ranked = ranking::rank_by_task_energy(fleet, &decode_task);
-        let best = ranked.first()?;
-        let best_e =
-            crate::devices::power::PowerModel::new((*best).clone()).task_energy_j(&decode_task, 1.0);
+        // but parallelism is still available. The scored ranking already
+        // carries each device's energy — nothing is recomputed (and no
+        // spec is cloned).
+        let ranked = ranking::rank_by_task_energy_scored(fleet, &decode_task);
+        let (_, best_e) = *ranked.first()?;
         let decode: Vec<DeviceId> = ranked
             .iter()
-            .filter(|d| {
-                let e = crate::devices::power::PowerModel::new((**d).clone())
-                    .task_energy_j(&decode_task, 1.0);
-                e <= 20.0 * best_e
-            })
+            .filter(|(_, e)| *e <= 20.0 * best_e)
             .take(max_decode_devices.max(1))
-            .map(|d| d.id.clone())
+            .map(|(d, _)| d.id.clone())
             .collect();
         Some(PhasePlan { prefill, decode })
     }

@@ -1,16 +1,17 @@
 //! Exact (branch-and-bound) layer assignment — the comparator behind the
-//! paper's claim that greedy lands "within 5% of the ILP optimum" (§3.7).
+//! paper's claim that greedy lands "within 5% of the ILP optimum" (§3.7),
+//! and the oracle PGSAM's property tests check against.
 //!
 //! Exponential in layer count; usable for L·D small (ablation-scale).
-
-use std::collections::BTreeMap;
+//! The search runs over the same memoized [`EnergyTable`] as the online
+//! planners: stage energies are dense array reads and per-device memory
+//! is tracked in an index-keyed array (no map lookups, no spec clones).
 
 use crate::devices::fleet::Fleet;
-use crate::devices::power::PowerModel;
-use crate::devices::roofline::{Phase, Task};
-use crate::devices::spec::{DeviceId, DeviceSpec};
+use crate::devices::spec::DevIdx;
 
 use super::allocation::{Allocation, ModelShape};
+use super::energy_table::EnergyTable;
 use super::orchestrator::Orchestrator;
 
 /// Exhaustively find the minimum-energy allocation (same objective as
@@ -21,51 +22,25 @@ pub fn optimal_assignment(
     fleet: &Fleet,
     max_nodes: u64,
 ) -> Option<(Allocation, f64)> {
-    let devices: Vec<&DeviceSpec> = fleet.devices().iter().collect();
+    let n_devices = fleet.len();
     let n_stages = shape.n_layers + 2; // embedding + layers + head
     // Quick bound on search size.
-    let space = (devices.len() as f64).powi(n_stages as i32);
+    let space = (n_devices as f64).powi(n_stages as i32);
     if space > max_nodes as f64 {
         return None;
     }
 
-    let stage_mem = |idx: usize| -> f64 {
-        if idx == 0 {
-            shape.embedding.mem_gb
-        } else if idx == n_stages - 1 {
-            shape.lm_head.mem_gb
-        } else {
-            shape.per_layer.mem_gb
-        }
-    };
-    let stage_energy: Vec<Vec<f64>> = (0..n_stages)
-        .map(|idx| {
-            let (flops, bytes, mem) = if idx == 0 {
-                (shape.embedding.flops, shape.embedding.bytes, shape.embedding.mem_gb)
-            } else if idx == n_stages - 1 {
-                (shape.lm_head.flops, shape.lm_head.bytes, shape.lm_head.mem_gb)
-            } else {
-                (shape.per_layer.flops, shape.per_layer.bytes, shape.per_layer.mem_gb)
-            };
-            let task = Task { phase: Phase::Decode, flops, bytes, mem_gb: mem, launches: 1 };
-            devices
-                .iter()
-                .map(|d| PowerModel::new((*d).clone()).task_energy_j(&task, 1.0))
-                .collect()
-        })
-        .collect();
-    let transfer = shape.boundary_bytes * 40e-9;
+    let table = EnergyTable::build(fleet, shape);
 
-    struct Search<'a> {
-        devices: &'a [&'a DeviceSpec],
-        stage_energy: &'a [Vec<f64>],
-        stage_mem: &'a dyn Fn(usize) -> f64,
-        transfer: f64,
+    struct Search<'t> {
+        table: &'t EnergyTable,
+        n_devices: usize,
         n_stages: usize,
         best: f64,
-        best_assign: Option<Vec<usize>>,
-        current: Vec<usize>,
-        used: BTreeMap<DeviceId, f64>,
+        best_assign: Option<Vec<DevIdx>>,
+        current: Vec<DevIdx>,
+        /// Memory committed per interned device index (GB).
+        used_gb: Vec<f64>,
     }
 
     impl Search<'_> {
@@ -78,49 +53,39 @@ pub fn optimal_assignment(
                 self.best_assign = Some(self.current.clone());
                 return;
             }
-            for (di, d) in self.devices.iter().enumerate() {
-                let need = (self.stage_mem)(stage);
-                let used = self.used.get(&d.id).copied().unwrap_or(0.0);
-                if used + need > d.mem_gb {
+            let kind = self.table.kind_of(stage);
+            let need = self.table.mem_gb(kind);
+            for di in 0..self.n_devices {
+                let dev = DevIdx(di as u16);
+                if self.used_gb[di] + need > self.table.capacity_gb(dev) {
                     continue;
                 }
-                let mut step = self.stage_energy[stage][di];
-                if stage > 0 {
-                    let prev = self.current[stage - 1];
-                    if prev != di {
-                        step += self.transfer;
-                    }
+                let mut step = self.table.energy(kind, dev);
+                if stage > 0 && self.current[stage - 1] != dev {
+                    step += self.table.transfer_j();
                 }
-                self.current.push(di);
-                *self.used.entry(d.id.clone()).or_insert(0.0) += need;
+                self.current.push(dev);
+                self.used_gb[di] += need;
                 self.dfs(stage + 1, cost + step);
                 self.current.pop();
-                *self.used.get_mut(&d.id).unwrap() -= need;
+                self.used_gb[di] -= need;
             }
         }
     }
 
-    let mem_fn = stage_mem;
     let mut search = Search {
-        devices: &devices,
-        stage_energy: &stage_energy,
-        stage_mem: &mem_fn,
-        transfer,
+        table: &table,
+        n_devices,
         n_stages,
         best: f64::INFINITY,
         best_assign: None,
         current: Vec::with_capacity(n_stages),
-        used: BTreeMap::new(),
+        used_gb: vec![0.0; n_devices],
     };
     search.dfs(0, 0.0);
 
     let assign = search.best_assign?;
-    let alloc = Allocation {
-        embedding: devices[assign[0]].id.clone(),
-        layers: assign[1..n_stages - 1].iter().map(|&i| devices[i].id.clone()).collect(),
-        lm_head: devices[assign[n_stages - 1]].id.clone(),
-    };
-    Some((alloc, search.best))
+    Some((Allocation::from_indices(fleet, &assign), search.best))
 }
 
 /// Relative gap between greedy and optimal energy (0.03 = 3%).
@@ -130,6 +95,18 @@ pub fn greedy_optimality_gap(shape: &ModelShape, fleet: &Fleet) -> Option<f64> {
     let greedy_e = orch.allocation_energy_j(shape, &greedy);
     let (_, opt_e) = optimal_assignment(shape, fleet, 50_000_000)?;
     Some((greedy_e - opt_e) / opt_e)
+}
+
+/// Relative gap between PGSAM and optimal energy (0.03 = 3%).
+pub fn pgsam_optimality_gap(
+    shape: &ModelShape,
+    fleet: &Fleet,
+    cfg: &super::pgsam::PgsamConfig,
+) -> Option<f64> {
+    let orch = Orchestrator::new(fleet);
+    let (_, pgsam_e) = orch.assign_pgsam(shape, cfg).ok()?;
+    let (_, opt_e) = optimal_assignment(shape, fleet, 50_000_000)?;
+    Some((pgsam_e - opt_e) / opt_e)
 }
 
 #[cfg(test)]
@@ -180,6 +157,19 @@ mod tests {
             let s = shape(layers);
             let gap = greedy_optimality_gap(&s, &fleet).unwrap();
             assert!((0.0..=0.05).contains(&gap), "L={layers}: gap={gap}");
+        }
+    }
+
+    #[test]
+    fn pgsam_gap_never_exceeds_greedy_gap() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let cfg = crate::coordinator::pgsam::PgsamConfig::default();
+        for layers in [2usize, 4, 6] {
+            let s = shape(layers);
+            let g = greedy_optimality_gap(&s, &fleet).unwrap();
+            let p = pgsam_optimality_gap(&s, &fleet, &cfg).unwrap();
+            assert!(p <= g + 1e-9, "L={layers}: pgsam gap {p} > greedy gap {g}");
+            assert!(p >= -1e-9, "optimal is a lower bound, got gap {p}");
         }
     }
 

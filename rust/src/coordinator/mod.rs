@@ -1,21 +1,29 @@
 //! The QEIL coordinator — the paper's L3 contribution.
 //!
-//! Pipeline (paper Fig. 1): device ranking → layer assignment (greedy,
-//! Eq. 12) → phase disaggregation (compute-bound prefill vs memory-bound
-//! decode, Formalism 5) → adaptive sample budgeting → constraint checks.
-//! The safety monitor ([`crate::safety`]) has override authority over all
-//! of it.
+//! Pipeline (paper Fig. 1): device ranking → layer assignment (greedy
+//! Eq. 12 seed, refined by the PGSAM annealer §4) → phase disaggregation
+//! (compute-bound prefill vs memory-bound decode, Formalism 5) →
+//! adaptive sample budgeting → constraint checks. The safety monitor
+//! ([`crate::safety`]) has override authority over all of it.
+//!
+//! All planners score `(stage, device)` pairs through one memoized
+//! [`EnergyTable`] over interned [`crate::devices::spec::DevIdx`]
+//! handles — the planner hot paths clone no specs and build no models.
 
 pub mod allocation;
 pub mod batcher;
 pub mod disaggregation;
+pub mod energy_table;
 pub mod exact;
 pub mod orchestrator;
+pub mod pgsam;
 pub mod ranking;
 pub mod sample_budget;
 
 pub use allocation::{Allocation, LayerCost, ModelShape};
 pub use batcher::{Batch, Batcher};
 pub use disaggregation::PhasePlan;
+pub use energy_table::{EnergyTable, StageKind};
 pub use orchestrator::{Orchestrator, PlanError};
+pub use pgsam::{PgsamConfig, PgsamOutcome};
 pub use sample_budget::SampleBudgeter;

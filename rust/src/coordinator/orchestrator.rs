@@ -6,15 +6,30 @@
 //! an interconnect penalty when the layer's device differs from its
 //! predecessor's — subject to memory capacity and thermal headroom.
 //! `O(L·D)`, re-runnable in real time when safety state changes.
+//!
+//! The hot path runs entirely over a memoized [`EnergyTable`] keyed by
+//! interned [`DevIdx`] handles: no `DeviceSpec` clone and no
+//! `PowerModel` construction happens inside any planner loop. The same
+//! table feeds [`Orchestrator::assign_pgsam`], the anytime annealer that
+//! refines the greedy plan (paper §4; see [`super::pgsam`]).
 
+use std::cell::RefCell;
 use std::collections::BTreeMap;
+use std::rc::Rc;
 
 use crate::devices::fleet::Fleet;
-use crate::devices::power::PowerModel;
-use crate::devices::roofline::{Phase, Task};
-use crate::devices::spec::{DeviceId, DeviceSpec};
+use crate::devices::spec::{DevIdx, DeviceId};
 
 use super::allocation::{Allocation, ModelShape};
+use super::energy_table::{EnergyTable, ShapeKey, StageKind, TRANSFER_J_PER_BYTE};
+use super::pgsam::{self, PgsamConfig};
+
+/// Relative half-width of the energy band inside which two devices count
+/// as tied and the deterministic `(priority, id)` order decides. A strict
+/// `==` here made the winner depend on the platform's floating-point
+/// rounding (libm differences flip the 17th digit), breaking cross-
+/// platform determinism of allocations.
+pub const ENERGY_TIE_REL_EPS: f64 = 1e-9;
 
 /// Planning failure modes.
 #[derive(Debug)]
@@ -35,7 +50,7 @@ impl std::fmt::Display for PlanError {
 
 impl std::error::Error for PlanError {}
 
-/// The greedy layer-assignment engine.
+/// The layer-assignment engine (greedy baseline + PGSAM refinement).
 pub struct Orchestrator<'f> {
     fleet: &'f Fleet,
     /// Devices currently excluded (failed or thermally shed) — the safety
@@ -44,11 +59,25 @@ pub struct Orchestrator<'f> {
     /// Per-device available-memory override (GB), e.g. under memory
     /// pressure; defaults to the spec capacity.
     mem_override: BTreeMap<DeviceId, f64>,
+    /// One memoized stage-energy table per model shape (planners are
+    /// typically re-run many times per shape as safety state changes;
+    /// exclusions and memory overrides do not invalidate the table —
+    /// they are applied as masks at planning time).
+    table_cache: RefCell<Option<(ShapeKey, Rc<EnergyTable>)>>,
 }
 
 impl<'f> Orchestrator<'f> {
     pub fn new(fleet: &'f Fleet) -> Self {
-        Orchestrator { fleet, excluded: Vec::new(), mem_override: BTreeMap::new() }
+        Orchestrator {
+            fleet,
+            excluded: Vec::new(),
+            mem_override: BTreeMap::new(),
+            table_cache: RefCell::new(None),
+        }
+    }
+
+    pub fn fleet(&self) -> &'f Fleet {
+        self.fleet
     }
 
     /// Exclude a device from planning (safety override authority).
@@ -66,143 +95,165 @@ impl<'f> Orchestrator<'f> {
         self.mem_override.insert(id.clone(), gb);
     }
 
-    fn usable(&self) -> Vec<&DeviceSpec> {
-        self.fleet.devices().iter().filter(|d| !self.excluded.contains(&d.id)).collect()
+    /// The memoized stage-energy table for `shape` (built on first use,
+    /// shared by every subsequent planning / scoring call).
+    pub fn energy_table(&self, shape: &ModelShape) -> Rc<EnergyTable> {
+        let key = ShapeKey::of(shape);
+        let mut cache = self.table_cache.borrow_mut();
+        if let Some((cached_key, table)) = cache.as_ref() {
+            if *cached_key == key {
+                return Rc::clone(table);
+            }
+        }
+        let table = Rc::new(EnergyTable::build(self.fleet, shape));
+        *cache = Some((key, Rc::clone(&table)));
+        table
     }
 
-    fn capacity(&self, d: &DeviceSpec) -> f64 {
-        self.mem_override.get(&d.id).copied().unwrap_or(d.mem_gb)
+    /// Schedulability mask over interned device indices.
+    fn usable_mask(&self) -> Vec<bool> {
+        self.fleet.devices().iter().map(|d| !self.excluded.contains(&d.id)).collect()
+    }
+
+    /// Effective memory capacity per interned index (override-aware).
+    fn effective_caps(&self) -> Vec<f64> {
+        self.fleet
+            .devices()
+            .iter()
+            .map(|d| self.mem_override.get(&d.id).copied().unwrap_or(d.mem_gb))
+            .collect()
     }
 
     /// Assign every stage of `shape` to a device, minimizing total decode
     /// energy under memory constraints (greedy, Eq. 12).
     pub fn assign(&self, shape: &ModelShape) -> Result<Allocation, PlanError> {
-        let devices = self.usable();
-        if devices.is_empty() {
+        let table = self.energy_table(shape);
+        let plan = self.plan_greedy(&table)?;
+        Ok(Allocation::from_indices(self.fleet, &plan))
+    }
+
+    /// PGSAM refinement (paper §4): anneal from the greedy seed with the
+    /// O(1) incremental evaluator; the result's energy never exceeds the
+    /// greedy plan's. Returns the allocation and its exact energy.
+    pub fn assign_pgsam(
+        &self,
+        shape: &ModelShape,
+        cfg: &PgsamConfig,
+    ) -> Result<(Allocation, f64), PlanError> {
+        let outcome = self.pgsam_outcome(shape, cfg)?;
+        Ok((Allocation::from_indices(self.fleet, &outcome.plan), outcome.energy_j))
+    }
+
+    /// Full PGSAM outcome, including the Pareto archive of non-dominated
+    /// `(energy, latency, underutilization)` plans — the multi-objective
+    /// trade-off set consumers pick alternates from (e.g. a latency-
+    /// leaning plan when an SLA tightens).
+    pub fn pgsam_outcome(
+        &self,
+        shape: &ModelShape,
+        cfg: &PgsamConfig,
+    ) -> Result<pgsam::PgsamOutcome, PlanError> {
+        let table = self.energy_table(shape);
+        let seed = self.plan_greedy(&table)?;
+        let caps = self.effective_caps();
+        let usable = self.usable_mask();
+        Ok(pgsam::anneal(&table, &caps, &usable, seed, cfg))
+    }
+
+    /// Greedy plan over interned indices (the annealer's seed state).
+    fn plan_greedy(&self, table: &EnergyTable) -> Result<Vec<DevIdx>, PlanError> {
+        let usable = self.usable_mask();
+        if !usable.iter().any(|&u| u) {
             return Err(PlanError::NoFeasibleDevice { stage: "any" });
         }
-        let mut used_gb: BTreeMap<DeviceId, f64> = BTreeMap::new();
+        let caps = self.effective_caps();
+        let mut used = vec![0.0; self.fleet.len()];
+        let mut plan = Vec::with_capacity(table.n_stages());
 
-        // Stage costs as roofline tasks (decode granularity — decode
-        // dominates token count, hence energy).
-        let task_of = |flops: f64, bytes: f64, mem: f64| Task {
-            phase: Phase::Decode,
-            flops,
-            bytes,
-            mem_gb: mem,
-            launches: 1,
-        };
-
-        // 1) Embedding + LM head → cheapest feasible device.
-        let emb_task =
-            task_of(shape.embedding.flops, shape.embedding.bytes, shape.embedding.mem_gb);
-        let embedding = self
-            .cheapest_fitting(&devices, &used_gb, &emb_task, shape.embedding.mem_gb, None)
+        // 1) Embedding → cheapest feasible device.
+        let emb = self
+            .cheapest_fitting(table, StageKind::Embedding, &usable, &caps, &used, None)
             .ok_or(PlanError::NoFeasibleDevice { stage: "embedding" })?;
-        *used_gb.entry(embedding.clone()).or_insert(0.0) += shape.embedding.mem_gb;
+        used[emb.as_usize()] += table.mem_gb(StageKind::Embedding);
+        plan.push(emb);
 
         // 2) Decoder layers in order, with boundary penalty.
-        let layer_task =
-            task_of(shape.per_layer.flops, shape.per_layer.bytes, shape.per_layer.mem_gb);
-        let mut layers = Vec::with_capacity(shape.n_layers);
-        let mut prev = embedding.clone();
-        for _ in 0..shape.n_layers {
+        let mut prev = emb;
+        for _ in 0..table.n_layers() {
             let dev = self
-                .cheapest_fitting(
-                    &devices,
-                    &used_gb,
-                    &layer_task,
-                    shape.per_layer.mem_gb,
-                    Some((&prev, shape.boundary_bytes)),
-                )
+                .cheapest_fitting(table, StageKind::Layer, &usable, &caps, &used, Some(prev))
                 .ok_or(PlanError::NoFeasibleDevice { stage: "decoder layer" })?;
-            *used_gb.entry(dev.clone()).or_insert(0.0) += shape.per_layer.mem_gb;
-            prev = dev.clone();
-            layers.push(dev);
+            used[dev.as_usize()] += table.mem_gb(StageKind::Layer);
+            plan.push(dev);
+            prev = dev;
         }
 
         // 3) LM head, boundary-aware.
-        let head_task = task_of(shape.lm_head.flops, shape.lm_head.bytes, shape.lm_head.mem_gb);
-        let lm_head = self
-            .cheapest_fitting(
-                &devices,
-                &used_gb,
-                &head_task,
-                shape.lm_head.mem_gb,
-                Some((&prev, shape.boundary_bytes)),
-            )
+        let head = self
+            .cheapest_fitting(table, StageKind::LmHead, &usable, &caps, &used, Some(prev))
             .ok_or(PlanError::NoFeasibleDevice { stage: "lm_head" })?;
-
-        Ok(Allocation { embedding, layers, lm_head })
+        plan.push(head);
+        Ok(plan)
     }
 
     /// Total decode-step energy of an allocation (the objective of
     /// Eq. 12), including interconnect transfer energy at boundaries.
+    /// A memoized-table array walk — no model reconstruction.
     pub fn allocation_energy_j(&self, shape: &ModelShape, alloc: &Allocation) -> f64 {
-        let mut total = 0.0;
-        let stage_energy = |dev: &DeviceId, flops: f64, bytes: f64, mem: f64| -> f64 {
-            let spec = self.fleet.get(dev).expect("allocation device in fleet");
-            let task = Task { phase: Phase::Decode, flops, bytes, mem_gb: mem, launches: 1 };
-            PowerModel::new(spec.clone()).task_energy_j(&task, 1.0)
-        };
-        total += stage_energy(
-            &alloc.embedding,
-            shape.embedding.flops,
-            shape.embedding.bytes,
-            shape.embedding.mem_gb,
-        );
-        for dev in &alloc.layers {
-            total += stage_energy(dev, shape.per_layer.flops, shape.per_layer.bytes, shape.per_layer.mem_gb);
-        }
-        total += stage_energy(
-            &alloc.lm_head,
-            shape.lm_head.flops,
-            shape.lm_head.bytes,
-            shape.lm_head.mem_gb,
-        );
-        total += alloc.boundary_crossings() as f64 * self.transfer_energy_j(shape.boundary_bytes);
-        total
+        let table = self.energy_table(shape);
+        let plan = alloc.interned(self.fleet).expect("allocation device in fleet");
+        table.plan_energy_j(&plan)
     }
 
     /// Energy to push activation bytes across the host link (5 pJ/bit ≈
     /// 40 nJ/byte — PCIe-class SerDes figure).
     pub fn transfer_energy_j(&self, bytes: f64) -> f64 {
-        bytes * 40e-9
+        bytes * TRANSFER_J_PER_BYTE
     }
 
     fn cheapest_fitting(
         &self,
-        devices: &[&DeviceSpec],
-        used_gb: &BTreeMap<DeviceId, f64>,
-        task: &Task,
-        need_gb: f64,
-        boundary: Option<(&DeviceId, f64)>,
-    ) -> Option<DeviceId> {
-        let mut best: Option<(f64, &DeviceSpec)> = None;
-        for d in devices {
-            let used = used_gb.get(&d.id).copied().unwrap_or(0.0);
-            if used + need_gb > self.capacity(d) {
+        table: &EnergyTable,
+        kind: StageKind,
+        usable: &[bool],
+        caps: &[f64],
+        used: &[f64],
+        prev: Option<DevIdx>,
+    ) -> Option<DevIdx> {
+        let need = table.mem_gb(kind);
+        let mut best: Option<(f64, u32, DevIdx)> = None;
+        for i in 0..self.fleet.len() {
+            if !usable[i] || used[i] + need > caps[i] {
                 continue;
             }
-            let mut energy = PowerModel::new((*d).clone()).task_energy_j(task, 1.0);
-            if let Some((prev, bytes)) = boundary {
-                if prev != &d.id {
-                    energy += self.transfer_energy_j(bytes);
+            let idx = DevIdx(i as u16);
+            let mut energy = table.energy(kind, idx);
+            if let Some(p) = prev {
+                if p != idx {
+                    energy += table.transfer_j();
                 }
             }
-            let better = match &best {
+            let spec = self.fleet.spec_at(idx);
+            let better = match best {
                 None => true,
-                Some((e, b)) => {
-                    energy < *e
-                        || (energy == *e
-                            && (d.priority, &d.id) < (b.priority, &b.id))
+                Some((best_e, best_prio, best_idx)) => {
+                    let eps = ENERGY_TIE_REL_EPS * best_e.abs().max(f64::MIN_POSITIVE);
+                    if energy < best_e - eps {
+                        true
+                    } else if energy > best_e + eps {
+                        false
+                    } else {
+                        // Near-tie: the platform-independent total order.
+                        (spec.priority, &spec.id)
+                            < (best_prio, &self.fleet.spec_at(best_idx).id)
+                    }
                 }
             };
             if better {
-                best = Some((energy, d));
+                best = Some((energy, spec.priority, idx));
             }
         }
-        best.map(|(_, d)| d.id.clone())
+        best.map(|(_, _, idx)| idx)
     }
 }
 
@@ -269,10 +320,10 @@ mod tests {
         orch.exclude(&"npu0".into());
         let s = shape(ModelFamily::Gpt2, 4);
         let alloc = orch.assign(&s).unwrap();
-        assert!(alloc.devices_used().iter().all(|d| d != &DeviceId::from("npu0")));
+        assert!(alloc.devices_used(&fleet).iter().all(|d| d != &DeviceId::from("npu0")));
         orch.readmit(&"npu0".into());
         let alloc2 = orch.assign(&s).unwrap();
-        assert!(alloc2.devices_used().contains(&"npu0".into()));
+        assert!(alloc2.devices_used(&fleet).contains(&"npu0".into()));
     }
 
     #[test]
@@ -291,10 +342,10 @@ mod tests {
         orch.set_available_memory(&"npu0".into(), 5.0);
         let s = shape(ModelFamily::Lfm2, 10);
         let alloc = orch.assign(&s).unwrap();
-        let used = alloc.devices_used();
+        let used = alloc.devices_used(&fleet);
         assert!(used.len() >= 2, "must spill to a second device, used {used:?}");
         // And the NPU's assigned share must respect the override.
-        let demand = alloc.memory_demand(&s);
+        let demand = alloc.memory_demand(&s, &fleet);
         let npu_demand = demand
             .iter()
             .find(|(d, _)| d == &DeviceId::from("npu0"))
@@ -334,5 +385,51 @@ mod tests {
         let b = orch.assign(&s).unwrap();
         assert_eq!(a.layers, b.layers);
         assert_eq!(a.embedding, b.embedding);
+    }
+
+    #[test]
+    fn table_is_memoized_per_shape() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Gpt2, 4);
+        let t1 = orch.energy_table(&s);
+        let t2 = orch.energy_table(&s);
+        assert!(Rc::ptr_eq(&t1, &t2), "same shape must reuse the cached table");
+        let other = shape(ModelFamily::Gpt2, 5);
+        let t3 = orch.energy_table(&other);
+        assert!(!Rc::ptr_eq(&t1, &t3), "different shape must rebuild");
+    }
+
+    #[test]
+    fn pgsam_never_worse_than_greedy() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        for layers in [2usize, 5, 10] {
+            let s = shape(ModelFamily::Lfm2, layers);
+            let greedy = orch.assign(&s).unwrap();
+            let greedy_e = orch.allocation_energy_j(&s, &greedy);
+            let (alloc, e) = orch.assign_pgsam(&s, &PgsamConfig::default()).unwrap();
+            assert!(e <= greedy_e * (1.0 + 1e-9), "L={layers}: pgsam {e} > greedy {greedy_e}");
+            alloc.check_memory(&s, &fleet).unwrap();
+            // Reported energy matches the objective recomputation.
+            let recomputed = orch.allocation_energy_j(&s, &alloc);
+            assert!((recomputed - e).abs() <= 1e-9 * e.max(1.0));
+        }
+    }
+
+    #[test]
+    fn pgsam_respects_memory_override() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut orch = Orchestrator::new(&fleet);
+        orch.set_available_memory(&"npu0".into(), 5.0);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let (alloc, _) = orch.assign_pgsam(&s, &PgsamConfig::default()).unwrap();
+        let npu_demand = alloc
+            .memory_demand(&s, &fleet)
+            .into_iter()
+            .find(|(d, _)| d == &DeviceId::from("npu0"))
+            .map(|(_, gb)| gb)
+            .unwrap_or(0.0);
+        assert!(npu_demand <= 5.0 + 1e-9, "npu demand {npu_demand}");
     }
 }

@@ -1,0 +1,571 @@
+//! PGSAM — Pareto-Guided Simulated Annealing with Momentum (paper §4).
+//!
+//! The paper's headline optimizer: an *anytime* allocation planner that
+//! refines the greedy Eq. 12 seed toward the multi-objective optimum
+//! over `(energy, latency, underutilization)`. Every knob below maps to
+//! a §4 construct:
+//!
+//! | code                      | paper §4                                  |
+//! |---------------------------|-------------------------------------------|
+//! | [`PgsamConfig::iters`]    | anytime iteration budget `K` (§4.1): the  |
+//! |                           | best feasible plan so far is valid at any |
+//! |                           | cutoff — the planner never blocks serving |
+//! | [`PgsamConfig::t0_frac`], | geometric temperature schedule            |
+//! | [`PgsamConfig::t_end_frac`]| `T_k = T_0 · α^k` (§4.2); `T_0` scales   |
+//! |                           | with the seed energy so acceptance is     |
+//! |                           | model-size invariant                      |
+//! | [`PgsamConfig::momentum`] | move momentum (§4.3): after an accepted   |
+//! |                           | move, the next proposal re-targets the    |
+//! |                           | same device with this probability, so the |
+//! |                           | walk "rolls" along a promising device     |
+//! |                           | instead of diffusing                      |
+//! | [`PgsamConfig::segment_prob`] | segment moves (§4.3): relocate a whole|
+//! |                           | same-device run of decoder layers at once,|
+//! |                           | the move class that removes boundary      |
+//! |                           | crossings greedy cannot undo              |
+//! | [`PgsamConfig::archive_cap`] | Pareto archive `A` (§4.4): bounded set |
+//! |                           | of non-dominated `(energy, latency,       |
+//! |                           | underutil)` plans guiding exploration and |
+//! |                           | exposed to the orchestrator's multi-      |
+//! |                           | objective consumers                       |
+//!
+//! The annealer's inner loop is built around an **incremental delta
+//! evaluator**: a proposed move changes allocation energy by a stage-
+//! energy delta plus a boundary-crossing delta, both read from the
+//! memoized [`EnergyTable`] — O(1) per moved stage — instead of the
+//! O(L·D) full `allocation_energy_j` sweep the seed implementation
+//! would have required. Rejected proposals perform **zero heap
+//! allocation**: state is a flat `Vec<DevIdx>` plan chain plus dense
+//! per-device `used`/`busy` arrays, all interned indices.
+//!
+//! Feasibility is invariant: the seed (greedy) plan satisfies memory
+//! capacities, every accepted move re-checks the target device's
+//! capacity, and the best plan only ever improves — so PGSAM's final
+//! energy is ≤ greedy's by construction, and the §3.7 "within 5% of the
+//! ILP optimum" bound carries over.
+
+use crate::devices::spec::DevIdx;
+use crate::rng::Pcg;
+
+use super::energy_table::EnergyTable;
+
+/// Annealer knobs (see module docs for the paper §4 mapping).
+#[derive(Debug, Clone)]
+pub struct PgsamConfig {
+    /// Anytime iteration budget. The default keeps a full anneal within
+    /// one order of magnitude of a single greedy `assign` on the
+    /// EdgeBox/LFM2 bench case (each iteration is a handful of table
+    /// reads); the quality floor does not depend on it — the greedy seed
+    /// already carries the §3.7 ≤5%-of-optimal bound and PGSAM only ever
+    /// improves on it. Use [`PgsamConfig::thorough`] for offline runs.
+    pub iters: u32,
+    /// Initial temperature as a fraction of the seed plan's energy.
+    pub t0_frac: f64,
+    /// Final temperature fraction; geometric cooling interpolates.
+    pub t_end_frac: f64,
+    /// Probability that a proposal re-targets the last accepted move's
+    /// device (momentum).
+    pub momentum: f64,
+    /// Probability that a proposal moves a whole same-device run of
+    /// decoder layers instead of a single stage.
+    pub segment_prob: f64,
+    /// Pareto archive capacity (energy-biased truncation beyond it).
+    pub archive_cap: usize,
+    /// PRNG seed — PGSAM is fully deterministic given the seed.
+    pub seed: u64,
+}
+
+impl Default for PgsamConfig {
+    fn default() -> Self {
+        PgsamConfig {
+            iters: 128,
+            t0_frac: 0.08,
+            t_end_frac: 1e-4,
+            momentum: 0.4,
+            segment_prob: 0.25,
+            archive_cap: 12,
+            seed: 0,
+        }
+    }
+}
+
+impl PgsamConfig {
+    /// A larger budget for offline planning (experiments, ablations).
+    pub fn thorough() -> Self {
+        PgsamConfig { iters: 5_000, ..Default::default() }
+    }
+
+    /// An explicit anytime budget.
+    pub fn with_budget(iters: u32) -> Self {
+        PgsamConfig { iters, ..Default::default() }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+}
+
+/// One non-dominated plan in the Pareto archive.
+#[derive(Debug, Clone)]
+pub struct ParetoPoint {
+    pub energy_j: f64,
+    pub latency_s: f64,
+    /// Fraction of the usable fleet's parallel capacity left idle by
+    /// this plan (0 = perfectly balanced, →1 = fully serialized on one
+    /// device of many).
+    pub underutil: f64,
+    pub plan: Vec<DevIdx>,
+}
+
+/// Annealing outcome: the best-energy feasible plan plus the archive.
+#[derive(Debug, Clone)]
+pub struct PgsamOutcome {
+    /// Best plan found (never worse than the seed).
+    pub plan: Vec<DevIdx>,
+    /// Exact (full-sweep) energy of `plan` — drift-free.
+    pub energy_j: f64,
+    /// Serial latency of `plan`.
+    pub latency_s: f64,
+    /// Non-dominated `(energy, latency, underutil)` trade-off set.
+    pub archive: Vec<ParetoPoint>,
+    pub proposed: u64,
+    pub accepted: u64,
+}
+
+/// `a` Pareto-dominates `b` (≤ on all objectives, < on at least one).
+fn dominates(a: &ParetoPoint, b: &ParetoPoint) -> bool {
+    a.energy_j <= b.energy_j
+        && a.latency_s <= b.latency_s
+        && a.underutil <= b.underutil
+        && (a.energy_j < b.energy_j || a.latency_s < b.latency_s || a.underutil < b.underutil)
+}
+
+/// Insert into the archive, pruning dominated points; energy-biased
+/// truncation beyond the capacity. Deterministic.
+fn archive_insert(archive: &mut Vec<ParetoPoint>, cand: ParetoPoint, cap: usize) {
+    if archive.iter().any(|p| dominates(p, &cand)) {
+        return;
+    }
+    archive.retain(|p| !dominates(&cand, p));
+    archive.push(cand);
+    if archive.len() > cap.max(1) {
+        archive.sort_by(|a, b| {
+            a.energy_j.total_cmp(&b.energy_j).then(a.latency_s.total_cmp(&b.latency_s))
+        });
+        archive.truncate(cap.max(1));
+    }
+}
+
+/// Dense per-device state the delta evaluator maintains.
+struct State<'t> {
+    table: &'t EnergyTable,
+    plan: Vec<DevIdx>,
+    /// Memory committed per device (GB).
+    used_gb: Vec<f64>,
+    /// Roofline seconds of stages resident per device (for underutil).
+    busy_s: Vec<f64>,
+    energy_j: f64,
+    latency_s: f64,
+    usable_count: usize,
+}
+
+impl State<'_> {
+    /// Rebuild the dense per-device state from a plan chain (used when
+    /// the walk restarts from a Pareto-archive point).
+    fn load(&mut self, plan: &[DevIdx]) {
+        self.plan.copy_from_slice(plan);
+        self.used_gb = self.table.plan_memory_gb(plan);
+        for b in self.busy_s.iter_mut() {
+            *b = 0.0;
+        }
+        for (stage, &dev) in plan.iter().enumerate() {
+            self.busy_s[dev.as_usize()] += self.table.seconds(self.table.kind_of(stage), dev);
+        }
+        self.energy_j = self.table.plan_energy_j(plan);
+        self.latency_s = self.table.plan_latency_s(plan);
+    }
+
+    /// Underutilization of the usable fleet's parallel capacity:
+    /// `1 − Σ busy / (k · max busy)` over the `k` usable devices.
+    fn underutil(&self) -> f64 {
+        let max = self.busy_s.iter().cloned().fold(0.0_f64, f64::max);
+        if max <= 0.0 || self.usable_count == 0 {
+            return 0.0;
+        }
+        let total: f64 = self.busy_s.iter().sum();
+        (1.0 - total / (self.usable_count as f64 * max)).max(0.0)
+    }
+
+    fn point(&self) -> ParetoPoint {
+        ParetoPoint {
+            energy_j: self.energy_j,
+            latency_s: self.latency_s,
+            underutil: self.underutil(),
+            plan: self.plan.clone(),
+        }
+    }
+}
+
+/// Incremental evaluation of moving the uniform span `[i..=j]` (all
+/// currently on `from`) to `to`.
+struct MoveDelta {
+    d_energy: f64,
+    d_latency: f64,
+    /// Roofline seconds the span contributes on `from` / on `to` (the
+    /// busy-time bookkeeping the accept path applies).
+    span_from_secs: f64,
+    span_to_secs: f64,
+}
+
+/// Per-stage table deltas plus the boundary-crossing delta at the
+/// span's two edges. O(span length) table reads, O(1) per moved stage —
+/// interior edges of a uniform span cannot change.
+fn move_delta(st: &State<'_>, i: usize, j: usize, from: DevIdx, to: DevIdx) -> MoveDelta {
+    let table = st.table;
+    let mut d_energy = 0.0;
+    let mut span_from_secs = 0.0;
+    let mut span_to_secs = 0.0;
+    for s in i..=j {
+        let kind = table.kind_of(s);
+        d_energy += table.energy(kind, to) - table.energy(kind, from);
+        span_from_secs += table.seconds(kind, from);
+        span_to_secs += table.seconds(kind, to);
+    }
+    let mut d_latency = span_to_secs - span_from_secs;
+    let t_j = table.transfer_j();
+    // Left edge.
+    if i > 0 {
+        let left = st.plan[i - 1];
+        d_energy += (((left != to) as i32) - ((left != from) as i32)) as f64 * t_j;
+        d_latency += table.transfer_s(left, to) - table.transfer_s(left, from);
+    }
+    // Right edge.
+    if j + 1 < st.plan.len() {
+        let right = st.plan[j + 1];
+        d_energy += (((right != to) as i32) - ((right != from) as i32)) as f64 * t_j;
+        d_latency += table.transfer_s(to, right) - table.transfer_s(from, right);
+    }
+    MoveDelta { d_energy, d_latency, span_from_secs, span_to_secs }
+}
+
+/// Run the PGSAM anneal from a feasible seed plan.
+///
+/// * `caps` — effective memory capacity per interned device (GB),
+///   override-aware (see `Orchestrator::assign_pgsam`).
+/// * `usable` — schedulability mask per interned device; moves never
+///   target an unusable device (the seed must not use one either).
+///
+/// Deterministic for a fixed `cfg.seed`. The returned plan's energy is
+/// never worse than the seed's.
+pub fn anneal(
+    table: &EnergyTable,
+    caps: &[f64],
+    usable: &[bool],
+    seed_plan: Vec<DevIdx>,
+    cfg: &PgsamConfig,
+) -> PgsamOutcome {
+    let n_stages = seed_plan.len();
+    debug_assert_eq!(n_stages, table.n_stages());
+    let n_devices = table.n_devices();
+    debug_assert_eq!(caps.len(), n_devices);
+    debug_assert_eq!(usable.len(), n_devices);
+
+    let usable_devs: Vec<DevIdx> =
+        (0..n_devices).filter(|&i| usable[i]).map(|i| DevIdx(i as u16)).collect();
+
+    let mut st = State {
+        table,
+        used_gb: Vec::new(),
+        busy_s: vec![0.0; n_devices],
+        energy_j: 0.0,
+        latency_s: 0.0,
+        plan: seed_plan.clone(),
+        usable_count: usable_devs.len(),
+    };
+    st.load(&seed_plan);
+
+    let mut best_plan = st.plan.clone();
+    let mut best_energy = st.energy_j;
+    let mut archive: Vec<ParetoPoint> = Vec::new();
+    archive_insert(&mut archive, st.point(), cfg.archive_cap);
+
+    let mut proposed = 0u64;
+    let mut accepted = 0u64;
+
+    if usable_devs.len() >= 2 && cfg.iters > 0 && n_stages >= 2 {
+        let mut rng = Pcg::new(cfg.seed, 0x9653);
+        let t0 = (cfg.t0_frac.max(1e-12) * st.energy_j.abs()).max(1e-15);
+        let alpha = (cfg.t_end_frac.max(1e-15) / cfg.t0_frac.max(1e-12))
+            .powf(1.0 / cfg.iters as f64);
+        let mut temp = t0;
+        let mut momentum_dev: Option<DevIdx> = None;
+
+        // Pareto guidance (§4.4): every RESTART_EVERY iterations the walk
+        // jumps to the archived non-dominated point with the best latency
+        // (ties on energy), pulling exploration out of the energy-greedy
+        // basin toward the rest of the frontier. Deterministic.
+        const RESTART_EVERY: u32 = 64;
+
+        for it in 0..cfg.iters {
+            temp *= alpha;
+            proposed += 1;
+
+            if it % RESTART_EVERY == RESTART_EVERY - 1 && !archive.is_empty() {
+                let guide = archive
+                    .iter()
+                    .min_by(|a, b| {
+                        a.latency_s.total_cmp(&b.latency_s).then(a.energy_j.total_cmp(&b.energy_j))
+                    })
+                    .expect("archive non-empty");
+                let plan = guide.plan.clone();
+                st.load(&plan);
+                momentum_dev = None;
+            }
+
+            // ---- propose: pick a stage, optionally expand to its run ----
+            let s = rng.below(n_stages as u64) as usize;
+            let from = st.plan[s];
+
+            // Momentum-biased target selection (always ≠ `from`).
+            let to = {
+                let momentum_hit = momentum_dev
+                    .filter(|&m| m != from && cfg.momentum > 0.0 && rng.chance(cfg.momentum));
+                match momentum_hit {
+                    Some(m) => m,
+                    None => {
+                        // Uniform over usable devices excluding `from`.
+                        let others = usable_devs.len() - usable.get(from.as_usize()).map_or(0, |&u| u as usize);
+                        if others == 0 {
+                            continue;
+                        }
+                        let mut k = rng.below(others as u64) as usize;
+                        let mut pick = usable_devs[0];
+                        for &d in &usable_devs {
+                            if d == from {
+                                continue;
+                            }
+                            if k == 0 {
+                                pick = d;
+                                break;
+                            }
+                            k -= 1;
+                        }
+                        pick
+                    }
+                }
+            };
+            if to == from {
+                continue;
+            }
+
+            // Span: a single stage, or the maximal same-device run of
+            // decoder layers around `s` (segment move).
+            let (i, j) = if cfg.segment_prob > 0.0
+                && n_stages > 3
+                && s > 0
+                && s < n_stages - 1
+                && rng.chance(cfg.segment_prob)
+            {
+                let mut i = s;
+                while i > 1 && st.plan[i - 1] == from {
+                    i -= 1;
+                }
+                let mut j = s;
+                while j + 2 < n_stages && st.plan[j + 1] == from {
+                    j += 1;
+                }
+                (i, j)
+            } else {
+                (s, s)
+            };
+
+            // ---- feasibility: target capacity ----
+            let mut need = 0.0;
+            for stage in i..=j {
+                need += table.mem_gb(table.kind_of(stage));
+            }
+            if st.used_gb[to.as_usize()] + need > caps[to.as_usize()] {
+                continue;
+            }
+
+            // ---- O(1) incremental delta evaluation ----
+            let delta = move_delta(&st, i, j, from, to);
+
+            // ---- Metropolis acceptance on the energy objective ----
+            let accept =
+                delta.d_energy <= 0.0 || rng.next_f64() < (-delta.d_energy / temp).exp();
+            if !accept {
+                continue;
+            }
+            accepted += 1;
+            for stage in i..=j {
+                st.plan[stage] = to;
+            }
+            st.used_gb[from.as_usize()] -= need;
+            st.used_gb[to.as_usize()] += need;
+            st.busy_s[from.as_usize()] -= delta.span_from_secs;
+            st.busy_s[to.as_usize()] += delta.span_to_secs;
+            st.energy_j += delta.d_energy;
+            st.latency_s += delta.d_latency;
+            momentum_dev = Some(to);
+
+            if st.energy_j < best_energy {
+                // Recompute exactly before committing: the incremental
+                // accumulator drifts at ~1e-16/step and `best` must stay
+                // a true lower envelope (the "≤ greedy" guarantee).
+                let exact = table.plan_energy_j(&st.plan);
+                if exact < best_energy {
+                    best_energy = exact;
+                    best_plan.copy_from_slice(&st.plan);
+                }
+                st.energy_j = exact;
+            }
+            archive_insert(&mut archive, st.point(), cfg.archive_cap);
+        }
+    }
+
+    let latency_s = table.plan_latency_s(&best_plan);
+    PgsamOutcome { plan: best_plan, energy_j: best_energy, latency_s, archive, proposed, accepted }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allocation::{Allocation, ModelShape};
+    use crate::coordinator::orchestrator::Orchestrator;
+    use crate::devices::fleet::{Fleet, FleetPreset};
+    use crate::runtime::manifest::VariantMeta;
+    use crate::workload::datasets::ModelFamily;
+
+    fn meta(layers: usize) -> VariantMeta {
+        VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: layers,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 0,
+            flops_per_token_decode: 0,
+            bytes_per_token_decode: 1,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        }
+    }
+
+    fn shape(family: ModelFamily, layers: usize) -> ModelShape {
+        ModelShape::from_family(family, &meta(layers))
+    }
+
+    #[test]
+    fn deterministic_under_fixed_seed() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let cfg = PgsamConfig::default().with_seed(42);
+        let (a, ea) = orch.assign_pgsam(&s, &cfg).unwrap();
+        let (b, eb) = orch.assign_pgsam(&s, &cfg).unwrap();
+        assert_eq!(a.layers, b.layers);
+        assert_eq!(a.embedding, b.embedding);
+        assert_eq!(a.lm_head, b.lm_head);
+        assert_eq!(ea, eb);
+    }
+
+    #[test]
+    fn single_device_fleet_returns_seed() {
+        let fleet = Fleet::preset(FleetPreset::NpuOnly);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Gpt2, 4);
+        let (alloc, e) = orch.assign_pgsam(&s, &PgsamConfig::default()).unwrap();
+        let greedy = orch.assign(&s).unwrap();
+        assert_eq!(alloc.layers, greedy.layers);
+        assert!((e - orch.allocation_energy_j(&s, &greedy)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn archive_holds_nondominated_points() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let table = orch.energy_table(&s);
+        let greedy = orch.assign(&s).unwrap();
+        let seed = greedy.interned(&fleet).unwrap();
+        let caps: Vec<f64> = fleet.devices().iter().map(|d| d.mem_gb).collect();
+        let usable = vec![true; fleet.len()];
+        let out = anneal(&table, &caps, &usable, seed, &PgsamConfig::default().with_seed(7));
+        assert!(!out.archive.is_empty());
+        assert!(out.archive.len() <= PgsamConfig::default().archive_cap);
+        for (x, a) in out.archive.iter().enumerate() {
+            for (y, b) in out.archive.iter().enumerate() {
+                if x != y {
+                    assert!(!dominates(a, b), "archive contains a dominated point");
+                }
+            }
+            // Every archived plan is memory-feasible.
+            let alloc = Allocation::from_indices(&fleet, &a.plan);
+            alloc.check_memory(&s, &fleet).unwrap();
+        }
+    }
+
+    #[test]
+    fn anytime_budget_zero_is_the_seed() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Qwen2, 6);
+        let (alloc, e) = orch.assign_pgsam(&s, &PgsamConfig::with_budget(0)).unwrap();
+        let greedy = orch.assign(&s).unwrap();
+        assert_eq!(alloc.layers, greedy.layers);
+        assert!((e - orch.allocation_energy_j(&s, &greedy)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn any_budget_stays_at_or_below_the_seed() {
+        // The anytime contract: whatever the cutoff, the returned plan's
+        // energy never exceeds the greedy seed's (different budgets walk
+        // different trajectories, so only the seed is the common bound).
+        let fleet = Fleet::preset(FleetPreset::MultiVendor);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 12);
+        let greedy = orch.assign(&s).unwrap();
+        let greedy_e = orch.allocation_energy_j(&s, &greedy);
+        for budget in [1u32, 100, 1000] {
+            let cfg = PgsamConfig::with_budget(budget).with_seed(3);
+            let (alloc, e) = orch.assign_pgsam(&s, &cfg).unwrap();
+            assert!(e <= greedy_e * (1.0 + 1e-9), "budget {budget}: {e} > {greedy_e}");
+            alloc.check_memory(&s, &fleet).unwrap();
+        }
+        let (_, thorough) = orch
+            .assign_pgsam(&s, &PgsamConfig { seed: 3, ..PgsamConfig::thorough() })
+            .unwrap();
+        assert!(thorough <= greedy_e * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn incremental_energy_matches_full_sweep() {
+        // Drive the annealer and verify its internal accumulator against
+        // the full-sweep objective at the end (drift must be negligible).
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Llama32, 8);
+        let table = orch.energy_table(&s);
+        let seed = orch.assign(&s).unwrap().interned(&fleet).unwrap();
+        let caps: Vec<f64> = fleet.devices().iter().map(|d| d.mem_gb).collect();
+        let usable = vec![true; fleet.len()];
+        let out = anneal(&table, &caps, &usable, seed, &PgsamConfig::default().with_seed(11));
+        let exact = table.plan_energy_j(&out.plan);
+        assert!(
+            (out.energy_j - exact).abs() <= 1e-9 * exact.max(1.0),
+            "incremental {} vs exact {exact}",
+            out.energy_j
+        );
+    }
+}

@@ -11,23 +11,31 @@ use crate::devices::power::PowerModel;
 use crate::devices::spec::{DeviceId, DeviceSpec};
 
 /// Rank devices by energy per execution of `task` (ascending — best
-/// first). Ties broken by priority, then id for determinism.
-pub fn rank_by_task_energy<'f>(fleet: &'f Fleet, task: &Task) -> Vec<&'f DeviceSpec> {
+/// first), returning each device's energy. Ties broken by priority,
+/// then id for determinism. Borrow-only: no spec clones, no model
+/// construction (see [`PowerModel::energy_for`]).
+pub fn rank_by_task_energy_scored<'f>(
+    fleet: &'f Fleet,
+    task: &Task,
+) -> Vec<(&'f DeviceSpec, f64)> {
     let mut scored: Vec<(&DeviceSpec, f64)> = fleet
         .devices()
         .iter()
         .filter(|d| task.mem_gb <= d.mem_gb)
-        .map(|d| {
-            let e = PowerModel::new(d.clone()).task_energy_j(task, 1.0);
-            (d, e)
-        })
+        .map(|d| (d, PowerModel::energy_for(d, task, 1.0)))
         .collect();
     scored.sort_by(|a, b| {
         a.1.total_cmp(&b.1)
             .then(a.0.priority.cmp(&b.0.priority))
             .then(a.0.id.cmp(&b.0.id))
     });
-    scored.into_iter().map(|(d, _)| d).collect()
+    scored
+}
+
+/// Rank devices by energy per execution of `task` (ascending — best
+/// first). Ties broken by priority, then id for determinism.
+pub fn rank_by_task_energy<'f>(fleet: &'f Fleet, task: &Task) -> Vec<&'f DeviceSpec> {
+    rank_by_task_energy_scored(fleet, task).into_iter().map(|(d, _)| d).collect()
 }
 
 /// Rank devices by *latency* for `task` (ascending).

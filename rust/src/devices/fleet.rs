@@ -3,7 +3,7 @@
 
 use anyhow::{bail, Result};
 
-use super::spec::{DeviceId, DeviceSpec};
+use super::spec::{DevIdx, DeviceId, DeviceSpec};
 
 /// Named fleet presets used across the experiments.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -60,10 +60,12 @@ impl FleetPreset {
     }
 }
 
-/// An ordered collection of devices.
+/// An ordered collection of devices, with an id→index interning map so
+/// `idx_of` resolves without a per-call linear string scan.
 #[derive(Debug, Clone)]
 pub struct Fleet {
     devices: Vec<DeviceSpec>,
+    index: std::collections::BTreeMap<DeviceId, DevIdx>,
 }
 
 impl Fleet {
@@ -71,13 +73,18 @@ impl Fleet {
         if devices.is_empty() {
             bail!("fleet must contain at least one device");
         }
-        let mut ids: Vec<&str> = devices.iter().map(|d| d.id.0.as_str()).collect();
-        ids.sort_unstable();
-        ids.dedup();
-        if ids.len() != devices.len() {
+        if devices.len() > u16::MAX as usize {
+            bail!("fleet exceeds the DevIdx interning range (u16)");
+        }
+        let index: std::collections::BTreeMap<DeviceId, DevIdx> = devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| (d.id.clone(), DevIdx(i as u16)))
+            .collect();
+        if index.len() != devices.len() {
             bail!("duplicate device ids in fleet");
         }
-        Ok(Fleet { devices })
+        Ok(Fleet { devices, index })
     }
 
     pub fn preset(preset: FleetPreset) -> Fleet {
@@ -117,7 +124,25 @@ impl Fleet {
     }
 
     pub fn get(&self, id: &DeviceId) -> Option<&DeviceSpec> {
-        self.devices.iter().find(|d| &d.id == id)
+        self.idx_of(id).map(|idx| self.spec_at(idx))
+    }
+
+    /// Intern a device id into its fleet index (the copyable handle the
+    /// planner hot paths operate on). An O(log D) map lookup, not a
+    /// string scan over the device table.
+    pub fn idx_of(&self, id: &DeviceId) -> Option<DevIdx> {
+        self.index.get(id).copied()
+    }
+
+    /// Resolve an interned index back to its id. Panics on a stale index
+    /// from a different fleet that is out of range.
+    pub fn id_at(&self, idx: DevIdx) -> &DeviceId {
+        &self.devices[idx.as_usize()].id
+    }
+
+    /// Resolve an interned index to the full capability vector.
+    pub fn spec_at(&self, idx: DevIdx) -> &DeviceSpec {
+        &self.devices[idx.as_usize()]
     }
 
     pub fn total_memory_gb(&self) -> f64 {
@@ -185,5 +210,17 @@ mod tests {
         let f = Fleet::preset(FleetPreset::EdgeBox);
         assert!(f.get(&"npu0".into()).is_some());
         assert!(f.get(&"nope".into()).is_none());
+    }
+
+    #[test]
+    fn interning_round_trips() {
+        let f = Fleet::preset(FleetPreset::MultiVendor);
+        for (i, d) in f.devices().iter().enumerate() {
+            let idx = f.idx_of(&d.id).unwrap();
+            assert_eq!(idx.as_usize(), i);
+            assert_eq!(f.id_at(idx), &d.id);
+            assert_eq!(f.spec_at(idx).id, d.id);
+        }
+        assert!(f.idx_of(&"nope".into()).is_none());
     }
 }

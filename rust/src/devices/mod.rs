@@ -23,5 +23,5 @@ pub use failure::{FailureKind, FailurePlan, FailureScenario};
 pub use fleet::{Fleet, FleetPreset};
 pub use power::PowerModel;
 pub use roofline::{Phase, Task};
-pub use spec::{DeviceId, DeviceKind, DeviceSpec, Vendor};
+pub use spec::{DevIdx, DeviceId, DeviceKind, DeviceSpec, Vendor};
 pub use thermal::ThermalState;

@@ -25,19 +25,28 @@ impl PowerModel {
         &self.spec
     }
 
-    /// Instantaneous draw (W) while executing `task`.
+    /// Instantaneous draw (W) for `task` on `spec`, borrow-only — the
+    /// planner/simulator hot paths call this instead of constructing a
+    /// `PowerModel` (which would clone the spec's heap-backed id).
     ///
     /// Phase-saturation model: a memory-bound task keeps the memory
     /// system busy for its whole active phase (draw = idle +
     /// mem_power_frac share of the dynamic range — HBM GPUs pay dearly
     /// here); a compute-bound task drives the ALUs near TDP (0.95).
+    pub fn active_power_for(spec: &DeviceSpec, task: &Task) -> f64 {
+        let util = if task.memory_bound_on(spec) { spec.mem_power_frac } else { 0.95 };
+        spec.idle_w + (spec.tdp_w - spec.idle_w) * util
+    }
+
+    /// Energy (J) to execute `task` on `spec` at a throttle factor,
+    /// borrow-only (see [`PowerModel::active_power_for`]).
+    pub fn energy_for(spec: &DeviceSpec, task: &Task, throttle: f64) -> f64 {
+        Self::active_power_for(spec, task) * task.seconds_on(spec, throttle)
+    }
+
+    /// Instantaneous draw (W) while executing `task`.
     pub fn active_power_w(&self, task: &Task) -> f64 {
-        let util = if task.memory_bound_on(&self.spec) {
-            self.spec.mem_power_frac
-        } else {
-            0.95
-        };
-        self.spec.idle_w + (self.spec.tdp_w - self.spec.idle_w) * util
+        Self::active_power_for(&self.spec, task)
     }
 
     /// Draw while idle but powered.
@@ -47,7 +56,7 @@ impl PowerModel {
 
     /// Energy (J) to execute `task` at a throttle factor.
     pub fn task_energy_j(&self, task: &Task, throttle: f64) -> f64 {
-        self.active_power_w(task) * task.seconds_on(&self.spec, throttle)
+        Self::energy_for(&self.spec, task, throttle)
     }
 
     /// Utilization efficiency γ_util from Formalism 2: fraction of peak

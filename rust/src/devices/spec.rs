@@ -7,6 +7,30 @@ use std::fmt;
 #[derive(Debug, Clone, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct DeviceId(pub String);
 
+/// Interned, copyable device index within one [`crate::devices::fleet::Fleet`].
+///
+/// Planner hot paths (greedy assignment, PGSAM annealing, the exact
+/// branch-and-bound) compare and store devices millions of times per
+/// plan; a `u16` index into the fleet's device table makes those
+/// comparisons branch-free and allocation-free, where the heap-backed
+/// `DeviceId(String)` would clone and compare byte strings. Resolve back
+/// with `Fleet::id_at` / `Fleet::spec_at`; intern with `Fleet::idx_of`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct DevIdx(pub u16);
+
+impl DevIdx {
+    #[inline]
+    pub fn as_usize(self) -> usize {
+        self.0 as usize
+    }
+}
+
+impl fmt::Display for DevIdx {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "#{}", self.0)
+    }
+}
+
 impl fmt::Display for DeviceId {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         write!(f, "{}", self.0)

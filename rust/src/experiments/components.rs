@@ -11,7 +11,12 @@ use crate::workload::datasets::{Dataset, ModelFamily};
 use super::report::{f1, f2, f3, Table};
 use super::runner::run_config;
 
-/// The six progressive configurations of Table 4.
+/// The six progressive configurations of Table 4. (`pgsam_planner` is
+/// not a rung: the sim's executed energy/latency path routes phases, not
+/// layers, so a planner-only rung would print numbers identical to the
+/// greedy rung and misread as "PGSAM contributed nothing". PGSAM quality
+/// is tracked by `RunMetrics::plan_energy_j` and the orchestrator
+/// benches instead.)
 fn ladder() -> Vec<(&'static str, FleetPreset, ExecMode, OrchestratorFeatures)> {
     let off = OrchestratorFeatures::baseline();
     vec![

@@ -103,6 +103,11 @@ pub struct RunMetrics {
     pub wall_s: f64,
     pub tokens: u64,
     pub cost_per_query_usd: f64,
+    /// Layer planner the feature set selected ("pgsam" / "greedy" / "none").
+    pub planner: String,
+    /// Decode-step energy of the final layer plan (J) — the planner-
+    /// quality trail for perf regression tracking.
+    pub plan_energy_j: f64,
 }
 
 impl RunMetrics {
@@ -148,6 +153,8 @@ impl RunMetrics {
             wall_s: r.wall_s,
             tokens: r.tokens_generated,
             cost_per_query_usd: cost_per_query,
+            planner: r.planner.to_string(),
+            plan_energy_j: r.plan_energy_j,
         }
     }
 }
@@ -268,6 +275,9 @@ mod tests {
         for v in [m.pass_at_k_pct, m.energy_kj, m.ipw, m.ppp, m.power_w, m.latency_ms, m.throughput_tps] {
             assert!(v.is_finite() && v > 0.0, "{v}");
         }
+        // Full feature set runs the PGSAM planner and records its plan.
+        assert_eq!(m.planner, "pgsam");
+        assert!(m.plan_energy_j > 0.0);
     }
 
     #[test]

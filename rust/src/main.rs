@@ -29,6 +29,10 @@ COMMON OPTIONS:
     --variant <name>    model family          [default: gpt2]
     --out <dir>         results directory     [default: results]
     --seed <n>          experiment seed       [default: 0]
+
+SERVE OPTIONS:
+    --fleet <preset>    simulated fleet preset  [default: edge-box]
+    --planner <name>    layer planner: pgsam | greedy  [default: pgsam]
 ";
 
 fn main() -> Result<()> {

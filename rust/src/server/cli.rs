@@ -1,9 +1,14 @@
 //! `qeil serve` — run the serving loop over a synthetic request trace
 //! with the real PJRT engine, reporting latency/throughput.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::cli::Args;
+use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::pgsam::PgsamConfig;
+use crate::coordinator::Orchestrator;
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::experiments::runner::default_meta;
 use crate::rng::Pcg;
 use crate::workload::datasets::{Dataset, ModelFamily};
 use crate::workload::generator::WorkloadGenerator;
@@ -20,6 +25,34 @@ pub fn run(args: &Args) -> Result<()> {
     let rate: f64 = args.num("rate", 8.0f64)?;
     let max_new: usize = args.num("max-new-tokens", 16usize)?;
     let seed: u64 = args.num("seed", 0u64)?;
+
+    // Announce the energy-aware layer plan for the edge fleet this
+    // service fronts (PGSAM is the default planner; `--planner greedy`
+    // shows the seed plan for comparison).
+    let fleet = Fleet::preset(FleetPreset::from_str(&args.opt("fleet", "edge-box"))?);
+    let planner = args.opt("planner", "pgsam");
+    let shape = ModelShape::from_family(family, &default_meta(family));
+    let orch = Orchestrator::new(&fleet);
+    let planned = match planner.as_str() {
+        "pgsam" => orch
+            .assign_pgsam(&shape, &PgsamConfig::default().with_seed(seed))
+            .ok(),
+        "greedy" => orch.assign(&shape).ok().map(|a| {
+            let e = orch.allocation_energy_j(&shape, &a);
+            (a, e)
+        }),
+        other => bail!("unknown --planner {other:?} (expected pgsam or greedy)"),
+    };
+    match planned {
+        Some((alloc, energy)) => println!(
+            "layer plan [{planner}]: uses {} of {} devices, {} boundary crossings, {:.4} J per decode step",
+            alloc.devices_used(&fleet).len(),
+            fleet.len(),
+            alloc.boundary_crossings(),
+            energy,
+        ),
+        None => println!("layer plan [{planner}]: infeasible for this fleet"),
+    }
 
     let config = ServiceConfig {
         artifacts_dir: args.opt("artifacts", "artifacts"),

@@ -15,6 +15,8 @@ use crate::config::{ExecMode, OrchestratorFeatures};
 use crate::coordinator::allocation::ModelShape;
 use crate::coordinator::batcher::Batcher;
 use crate::coordinator::disaggregation::{decode_task, prefill_task, PhasePlan};
+use crate::coordinator::orchestrator::Orchestrator;
+use crate::coordinator::pgsam::PgsamConfig;
 use crate::coordinator::sample_budget::{SampleBudgeter, SampleCost};
 use crate::devices::failure::{FailureKind, FailurePlan};
 use crate::devices::fleet::Fleet;
@@ -108,6 +110,12 @@ pub struct SimReport {
     pub mean_recovery_s: f64,
     /// Wall-clock duration of the whole run (virtual seconds).
     pub wall_s: f64,
+    /// Which layer planner the feature set selects ("pgsam", "greedy",
+    /// or "none" when no feasible plan exists for the final safety state).
+    pub planner: &'static str,
+    /// Decode-step energy of that layer plan (J) — the Eq. 12 objective
+    /// the planner optimized, reported for the planner-quality trail.
+    pub plan_energy_j: f64,
 }
 
 struct SimDevice {
@@ -182,6 +190,36 @@ impl SimEngine {
 
     pub fn clock_s(&self) -> f64 {
         self.clock_s
+    }
+
+    /// Score the layer allocation for the current safety state with the
+    /// feature-selected planner: PGSAM (paper §4) when enabled, greedy
+    /// Eq. 12 otherwise (greedy also remains PGSAM's fallback when no
+    /// feasible plan exists). Returns the planner label and the plan's
+    /// decode-step energy.
+    pub fn layer_plan(&self) -> (&'static str, f64) {
+        let features = &self.options.features;
+        // No layer planner selected (homogeneous baselines): report none
+        // rather than a trail for a planner that never ran.
+        if !features.pgsam_planner && !features.greedy_layer_assignment {
+            return ("none", 0.0);
+        }
+        let mut orch = Orchestrator::new(&self.fleet);
+        for d in self.fleet.devices() {
+            if !self.schedulable(&d.id) {
+                orch.exclude(&d.id);
+            }
+        }
+        if features.pgsam_planner {
+            let cfg = PgsamConfig::default().with_seed(self.options.seed);
+            if let Ok((_, energy)) = orch.assign_pgsam(&self.shape, &cfg) {
+                return ("pgsam", energy);
+            }
+        }
+        match orch.assign(&self.shape) {
+            Ok(alloc) => ("greedy", orch.allocation_energy_j(&self.shape, &alloc)),
+            Err(_) => ("none", 0.0),
+        }
     }
 
     /// Throttle factor for a device: guard shedding (if safety on) ×
@@ -303,10 +341,9 @@ impl SimEngine {
         let per_token_s: f64 = d_task.seconds_on(&decode_specs[0], 1.0);
         let per_sample_latency =
             p_task.seconds_on(&prefill_spec, 1.0) + per_token_s * query.output_tokens as f64;
-        let per_sample_energy = PowerModel::new(prefill_spec.clone())
-            .task_energy_j(&p_task, 1.0)
+        let per_sample_energy = PowerModel::energy_for(&prefill_spec, &p_task, 1.0)
             / samples.max(1) as f64
-            + PowerModel::new(decode_specs[0].clone()).task_energy_j(&d_task, 1.0)
+            + PowerModel::energy_for(&decode_specs[0], &d_task, 1.0)
                 * query.output_tokens as f64;
 
         let samples = if self.options.features.adaptive_sample_budget {
@@ -335,7 +372,7 @@ impl SimEngine {
         // ---- Prefill (shared across samples via prefix batching) ----
         let prefill_throttle = self.throttle_factor(&plan.prefill);
         let prefill_s = p_task.seconds_on(&prefill_spec, prefill_throttle) * self.calibration;
-        let prefill_power = PowerModel::new(prefill_spec.clone()).active_power_w(&p_task);
+        let prefill_power = PowerModel::active_power_for(&prefill_spec, &p_task);
         let prefill_j = prefill_power * prefill_s;
         {
             let id = plan.prefill.clone();
@@ -370,7 +407,7 @@ impl SimEngine {
             let step_s = d_task.seconds_on(&spec, throttle) * self.calibration;
             let batch_tokens = batch.samples.len() as u64 * query.output_tokens as u64;
             let batch_s = step_s * batch_tokens as f64;
-            let power = PowerModel::new(spec.clone()).active_power_w(&d_task);
+            let power = PowerModel::active_power_for(&spec, &d_task);
             let joules = power * batch_s;
             *device_decode_s.entry(batch.device.clone()).or_insert(0.0) += batch_s;
             *device_samples.entry(batch.device.clone()).or_insert(0) += batch.samples.len() as u32;
@@ -503,6 +540,7 @@ impl SimEngine {
         } else {
             self.recoveries.iter().sum::<f64>() / self.recoveries.len() as f64
         };
+        let (planner, plan_energy_j) = self.layer_plan();
         SimReport {
             coverage: if n_queries > 0 { solved as f64 / n_queries as f64 } else { 0.0 },
             accuracy: if n_queries > 0 { accuracy_hits as f64 / n_queries as f64 } else { 0.0 },
@@ -530,6 +568,8 @@ impl SimEngine {
             recoveries,
             mean_recovery_s,
             wall_s: self.clock_s,
+            planner,
+            plan_energy_j,
         }
     }
 }
@@ -725,6 +765,42 @@ mod tests {
         let rf = free.run(&qs, 20).unwrap();
         assert!(rc.mean_samples_run < rf.mean_samples_run);
         assert!(rc.coverage <= rf.coverage + 1e-12);
+    }
+
+    #[test]
+    fn report_carries_planner_trail() {
+        let qs = queries(10);
+        let mut full = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let rf = full.run(&qs, 5).unwrap();
+        assert_eq!(rf.planner, "pgsam");
+        assert!(rf.plan_energy_j > 0.0);
+
+        let mut base = engine(
+            FleetPreset::GpuOnly,
+            SimOptions {
+                mode: ExecMode::Standard,
+                features: OrchestratorFeatures::baseline(),
+                ..Default::default()
+            },
+        );
+        let rb = base.run(&qs, 5).unwrap();
+        // Baseline selects no layer planner — no trail to report.
+        assert_eq!(rb.planner, "none");
+        assert_eq!(rb.plan_energy_j, 0.0);
+        // PGSAM's plan is never worse than greedy on the same fleet.
+        let mut greedy_on_edge = engine(
+            FleetPreset::EdgeBox,
+            SimOptions {
+                features: OrchestratorFeatures {
+                    pgsam_planner: false,
+                    ..OrchestratorFeatures::full()
+                },
+                ..Default::default()
+            },
+        );
+        let rg = greedy_on_edge.run(&qs, 5).unwrap();
+        assert_eq!(rg.planner, "greedy");
+        assert!(rf.plan_energy_j <= rg.plan_energy_j * (1.0 + 1e-9));
     }
 
     #[test]

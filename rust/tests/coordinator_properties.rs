@@ -3,7 +3,9 @@
 
 use qeil::coordinator::allocation::ModelShape;
 use qeil::coordinator::batcher::Batcher;
+use qeil::coordinator::exact::optimal_assignment;
 use qeil::coordinator::orchestrator::Orchestrator;
+use qeil::coordinator::pgsam::PgsamConfig;
 use qeil::devices::fleet::{Fleet, FleetPreset};
 use qeil::devices::spec::DeviceId;
 use qeil::devices::thermal::ThermalState;
@@ -64,6 +66,111 @@ fn prop_greedy_assignment_never_violates_memory() {
             }
             Err(_) => Ok(()), // infeasible is a legal outcome
         }
+    });
+}
+
+#[test]
+fn prop_pgsam_never_worse_than_greedy_and_memory_safe() {
+    // PGSAM refines the greedy seed and only ever keeps improvements, so
+    // its energy is bounded by greedy's and every plan it returns passes
+    // the Eq. 12 memory constraints — on every fleet preset.
+    check("pgsam dominates greedy", 60, |rng| {
+        let family = random_family(rng);
+        let layers = 1 + rng.below(16) as usize;
+        let shape = ModelShape::from_family(family, &meta(layers));
+        let presets = [
+            FleetPreset::EdgeBox,
+            FleetPreset::MultiVendor,
+            FleetPreset::NpuOnly,
+            FleetPreset::CpuOnly,
+            FleetPreset::GpuOnly,
+            FleetPreset::IgpuOnly,
+            FleetPreset::Cloud,
+        ];
+        let fleet = Fleet::preset(presets[rng.below(presets.len() as u64) as usize]);
+        let orch = Orchestrator::new(&fleet);
+        let cfg = PgsamConfig::default().with_seed(rng.next_u64());
+        match (orch.assign(&shape), orch.assign_pgsam(&shape, &cfg)) {
+            (Ok(greedy), Ok((alloc, e))) => {
+                let greedy_e = orch.allocation_energy_j(&shape, &greedy);
+                prop_assert!(
+                    e <= greedy_e * (1.0 + 1e-9),
+                    "{family:?} L={layers}: pgsam {e} > greedy {greedy_e}"
+                );
+                prop_assert!(
+                    alloc.check_memory(&shape, &fleet).is_ok(),
+                    "{family:?} L={layers}: pgsam plan violates memory"
+                );
+                prop_assert!(alloc.layers.len() == layers, "layer count mismatch");
+                // Reported energy is the exact objective value.
+                let recomputed = orch.allocation_energy_j(&shape, &alloc);
+                prop_assert!(
+                    (recomputed - e).abs() <= 1e-9 * e.max(1.0),
+                    "energy report drifted: {e} vs {recomputed}"
+                );
+                Ok(())
+            }
+            (Err(_), Err(_)) => Ok(()), // infeasible is a legal outcome
+            (g, p) => Err(format!(
+                "planners disagree on feasibility: greedy {:?}, pgsam {:?}",
+                g.is_ok(),
+                p.is_ok()
+            )),
+        }
+    });
+}
+
+#[test]
+fn prop_pgsam_deterministic_under_fixed_seed() {
+    check("pgsam determinism", 25, |rng| {
+        let family = random_family(rng);
+        let layers = 2 + rng.below(10) as usize;
+        let shape = ModelShape::from_family(family, &meta(layers));
+        let fleet = Fleet::preset(if rng.chance(0.5) {
+            FleetPreset::EdgeBox
+        } else {
+            FleetPreset::MultiVendor
+        });
+        let orch = Orchestrator::new(&fleet);
+        let cfg = PgsamConfig::default().with_seed(rng.next_u64());
+        let (Ok((a, ea)), Ok((b, eb))) =
+            (orch.assign_pgsam(&shape, &cfg), orch.assign_pgsam(&shape, &cfg))
+        else {
+            return Ok(()); // infeasible is a legal outcome
+        };
+        prop_assert!(a.embedding == b.embedding, "embedding differs across runs");
+        prop_assert!(a.layers == b.layers, "layer plan differs across runs");
+        prop_assert!(a.lm_head == b.lm_head, "lm_head differs across runs");
+        prop_assert!(ea == eb, "energy differs across runs: {ea} vs {eb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pgsam_within_five_percent_of_optimal_on_small_spaces() {
+    // On exhaustively checkable (L·D) spaces, PGSAM inherits the greedy
+    // seed's §3.7 bound and may only tighten it.
+    check("pgsam near-optimality", 12, |rng| {
+        let families = [ModelFamily::Gpt2, ModelFamily::Granite, ModelFamily::Qwen2];
+        let family = families[rng.below(3) as usize];
+        let layers = 2 + rng.below(4) as usize; // 4..=7 stages on 4 devices
+        let shape = ModelShape::from_family(family, &meta(layers));
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let cfg = PgsamConfig::default().with_seed(rng.next_u64());
+        let Ok((_, pgsam_e)) = orch.assign_pgsam(&shape, &cfg) else {
+            return Err("edge box must be feasible for small shapes".to_string());
+        };
+        let Some((_, opt_e)) = optimal_assignment(&shape, &fleet, 50_000_000) else {
+            return Err("search space unexpectedly large".to_string());
+        };
+        prop_assert!(
+            pgsam_e >= opt_e - 1e-9 * opt_e.abs(),
+            "{family:?} L={layers}: pgsam {pgsam_e} beat the exact optimum {opt_e}"
+        );
+        let gap = (pgsam_e - opt_e) / opt_e;
+        prop_assert!(gap <= 0.05, "{family:?} L={layers}: gap {gap} > 5%");
+        Ok(())
     });
 }
 

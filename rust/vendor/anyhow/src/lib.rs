@@ -1,0 +1,238 @@
+//! Minimal, dependency-free stand-in for the `anyhow` crate.
+//!
+//! The build environment is fully offline (no crates.io), so qeil vendors
+//! the small API subset it actually uses: [`Error`], [`Result`], the
+//! [`Context`] extension trait for `Result`/`Option`, and the `anyhow!`,
+//! `bail!`, `ensure!` macros. Semantics follow upstream anyhow closely:
+//!
+//! - `Error` wraps any `std::error::Error + Send + Sync + 'static` (or a
+//!   plain message) plus a stack of context strings.
+//! - `Error` deliberately does NOT implement `std::error::Error`, which
+//!   is what lets the blanket `From<E: std::error::Error>` impl coexist
+//!   with `Result<T, Error>` (upstream anyhow does the same).
+//! - `Display` prints `outer context: ...: inner message`; `Debug` prints
+//!   the same chain (upstream prints a backtrace we don't carry).
+
+use std::error::Error as StdError;
+use std::fmt::{self, Debug, Display};
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A type-erased error with a context chain.
+pub struct Error {
+    /// Context frames, outermost last (pushed by `.context(...)`).
+    context: Vec<String>,
+    message: String,
+    source: Option<Box<dyn StdError + Send + Sync + 'static>>,
+}
+
+impl Error {
+    /// Build an error from a displayable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { context: Vec::new(), message: message.to_string(), source: None }
+    }
+
+    /// Wrap a concrete error value.
+    pub fn new<E: StdError + Send + Sync + 'static>(error: E) -> Error {
+        Error {
+            context: Vec::new(),
+            message: error.to_string(),
+            source: Some(Box::new(error)),
+        }
+    }
+
+    /// Attach another layer of context (outermost).
+    pub fn context<C: Display>(mut self, context: C) -> Error {
+        self.context.push(context.to_string());
+        self
+    }
+
+    /// The lowest-level wrapped error, if one exists.
+    pub fn root_cause(&self) -> Option<&(dyn StdError + 'static)> {
+        let mut cur: &(dyn StdError + 'static) = match &self.source {
+            Some(s) => s.as_ref(),
+            None => return None,
+        };
+        while let Some(next) = cur.source() {
+            cur = next;
+        }
+        Some(cur)
+    }
+
+    fn write_chain(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.message)?;
+        // Walk the wrapped error's own source chain for full diagnostics.
+        if let Some(src) = &self.source {
+            let mut cur = src.source();
+            while let Some(e) = cur {
+                write!(f, ": {e}")?;
+                cur = e.source();
+            }
+        }
+        Ok(())
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        self.write_chain(f)
+    }
+}
+
+impl<E: StdError + Send + Sync + 'static> From<E> for Error {
+    fn from(error: E) -> Error {
+        Error::new(error)
+    }
+}
+
+/// Internal conversion trait so `Context` works both for foreign error
+/// types and for `Error` itself (coherent because `Error` does not
+/// implement `std::error::Error` — the upstream anyhow trick).
+pub trait IntoAnyhow: Sized {
+    fn into_anyhow(self) -> Error;
+}
+
+impl<E: StdError + Send + Sync + 'static> IntoAnyhow for E {
+    fn into_anyhow(self) -> Error {
+        Error::new(self)
+    }
+}
+
+impl IntoAnyhow for Error {
+    fn into_anyhow(self) -> Error {
+        self
+    }
+}
+
+/// Extension trait adding `.context(...)` / `.with_context(...)`.
+pub trait Context<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoAnyhow> Context<T> for std::result::Result<T, E> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into_anyhow().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_anyhow().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from format arguments.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!(::std::concat!("condition failed: ", ::std::stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "missing thing")
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        let e = inner().unwrap_err();
+        assert!(e.to_string().contains("missing thing"));
+    }
+
+    #[test]
+    fn context_chains_outermost_first() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err().context("loading app");
+        let text = e.to_string();
+        assert!(text.starts_with("loading app: reading config:"), "{text}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("empty").is_err());
+        let e: Error = anyhow!("x = {}", 42);
+        assert_eq!(e.to_string(), "x = 42");
+
+        fn guarded(v: u32) -> Result<u32> {
+            ensure!(v < 10, "v too big: {v}");
+            if v == 3 {
+                bail!("three is right out");
+            }
+            Ok(v)
+        }
+        assert!(guarded(11).is_err());
+        assert!(guarded(3).is_err());
+        assert_eq!(guarded(2).unwrap(), 2);
+    }
+
+    #[test]
+    fn with_context_on_anyhow_result() {
+        fn inner() -> Result<u32> {
+            Err(anyhow!("boom"))
+        }
+        let e = inner().with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: boom");
+    }
+}
