@@ -18,7 +18,9 @@ use qeil::coordinator::orchestrator::Orchestrator;
 use qeil::coordinator::pgsam::PgsamConfig;
 use qeil::devices::fleet::{Fleet, FleetPreset};
 use qeil::experiments::runner::default_meta;
+use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
+use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
 use qeil::workload::datasets::ModelFamily;
 
 fn main() {
@@ -95,6 +97,38 @@ fn main() {
     let alloc = orch.assign(&shape).unwrap();
     let r = b.run("allocation_energy_objective", || {
         std::hint::black_box(orch.allocation_energy_j(&shape, &alloc));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // EAC/ARDE/CSVET cascade over a worst-case 20-sample stream (the
+    // verified winner lands in the last wave, so every elimination round
+    // runs over a near-full pool).
+    let cascade = SelectionCascade::default();
+    let r = b.run("cascade_selection(20 samples, 4 lanes)", || {
+        let mut rng = Pcg::seeded(7);
+        let report = cascade.run(20, 4, |i| Candidate {
+            index: i,
+            lane: i % 4,
+            score: rng.next_f64() * 0.6,
+            verified: i == 17,
+            energy_j: 0.5,
+        });
+        std::hint::black_box(report);
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // CSVET stream decisions alone — the per-wave stopping hot path on
+    // an all-failure stream (no early exit, 20 radius evaluations).
+    let csvet_cfg = CsvetConfig::default();
+    let r = b.run("csvet_early_stop(budget 20, all failures)", || {
+        let mut cs = Csvet::new(csvet_cfg.clone());
+        for i in 0..20u32 {
+            cs.observe(false);
+            std::hint::black_box(cs.decision(19 - i));
+        }
+        std::hint::black_box(cs.p_ucb());
     });
     println!("{}", r.report());
     results.push(r);

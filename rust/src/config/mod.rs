@@ -56,6 +56,11 @@ pub struct OrchestratorFeatures {
     pub adaptive_sample_budget: bool,
     /// Thermal guard + fault tolerance + validation.
     pub safety: bool,
+    /// Inference-time EAC/ARDE selection cascade with CSVET early
+    /// stopping: draw samples in waves, stop exactly on a verified
+    /// winner (or on confidence-sequence futility), pick the winner
+    /// energy-aware (see [`crate::selection`]).
+    pub selection_cascade: bool,
 }
 
 impl OrchestratorFeatures {
@@ -68,6 +73,7 @@ impl OrchestratorFeatures {
             pgsam_planner: true,
             adaptive_sample_budget: true,
             safety: true,
+            selection_cascade: true,
         }
     }
 
@@ -80,6 +86,7 @@ impl OrchestratorFeatures {
             pgsam_planner: false,
             adaptive_sample_budget: false,
             safety: false,
+            selection_cascade: false,
         }
     }
 }
@@ -179,6 +186,7 @@ impl ExperimentConfig {
                             "pgsam_planner" => cfg.features.pgsam_planner = b,
                             "adaptive_sample_budget" => cfg.features.adaptive_sample_budget = b,
                             "safety" => cfg.features.safety = b,
+                            "selection_cascade" => cfg.features.selection_cascade = b,
                             other => bail!("unknown feature flag {other:?}"),
                         }
                     }
@@ -266,6 +274,16 @@ mod tests {
         let cfg =
             ExperimentConfig::from_json(r#"{"features": {"pgsam_planner": false}}"#).unwrap();
         assert!(!cfg.features.pgsam_planner);
+    }
+
+    #[test]
+    fn selection_cascade_flag_parses_and_defaults() {
+        assert!(OrchestratorFeatures::full().selection_cascade);
+        assert!(!OrchestratorFeatures::baseline().selection_cascade);
+        let cfg =
+            ExperimentConfig::from_json(r#"{"features": {"selection_cascade": false}}"#).unwrap();
+        assert!(!cfg.features.selection_cascade);
+        assert!(cfg.features.pgsam_planner, "other full() flags stay on");
     }
 
     #[test]

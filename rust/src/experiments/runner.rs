@@ -108,6 +108,22 @@ pub struct RunMetrics {
     /// Decode-step energy of the final layer plan (J) — the planner-
     /// quality trail for perf regression tracking.
     pub plan_energy_j: f64,
+    /// Planning failure surfaced by the report (None when planning
+    /// succeeded or no planner ran).
+    pub plan_error: Option<String>,
+    /// Whether the EAC/ARDE/CSVET selection cascade ran.
+    pub cascade_enabled: bool,
+    /// Cascade trail: total samples budgeted / actually drawn.
+    pub cascade_samples_budgeted: u64,
+    pub cascade_samples_drawn: u64,
+    /// Estimated energy of the budgeted-but-undrawn samples (kJ), at
+    /// budgeter-model fidelity (see `CascadeTrail::energy_saved_j`) —
+    /// compare cascade-on/off `energy_kj` for the executed delta.
+    pub cascade_energy_saved_kj: f64,
+    /// Stop-reason counts: verified-winner / futility / exhausted.
+    pub cascade_success_stops: u64,
+    pub cascade_futility_stops: u64,
+    pub cascade_exhausted_stops: u64,
 }
 
 impl RunMetrics {
@@ -155,6 +171,14 @@ impl RunMetrics {
             cost_per_query_usd: cost_per_query,
             planner: r.planner.to_string(),
             plan_energy_j: r.plan_energy_j,
+            plan_error: r.plan_error.clone(),
+            cascade_enabled: r.cascade.is_some(),
+            cascade_samples_budgeted: r.cascade.as_ref().map_or(0, |c| c.samples_budgeted),
+            cascade_samples_drawn: r.cascade.as_ref().map_or(0, |c| c.samples_drawn),
+            cascade_energy_saved_kj: r.cascade.as_ref().map_or(0.0, |c| c.energy_saved_j / 1e3),
+            cascade_success_stops: r.cascade.as_ref().map_or(0, |c| c.success_stops),
+            cascade_futility_stops: r.cascade.as_ref().map_or(0, |c| c.futility_stops),
+            cascade_exhausted_stops: r.cascade.as_ref().map_or(0, |c| c.exhausted_stops),
         }
     }
 }
@@ -278,6 +302,11 @@ mod tests {
         // Full feature set runs the PGSAM planner and records its plan.
         assert_eq!(m.planner, "pgsam");
         assert!(m.plan_energy_j > 0.0);
+        assert!(m.plan_error.is_none());
+        // …and the selection cascade, whose trail must be consistent.
+        assert!(m.cascade_enabled);
+        assert!(m.cascade_samples_drawn <= m.cascade_samples_budgeted);
+        assert!(m.cascade_samples_drawn >= 30, "every query draws at least one sample");
     }
 
     #[test]

@@ -32,6 +32,7 @@ pub mod rng;
 pub mod runtime;
 pub mod safety;
 pub mod scaling;
+pub mod selection;
 pub mod server;
 pub mod sim;
 pub mod testing;

@@ -1,0 +1,218 @@
+//! CSVET — Confidence-Sequence Verified Early Termination.
+//!
+//! The cascade's stopping rule over the per-query sample stream
+//! (paper: "progressive verification among repeated samples"). Two
+//! exits, in priority order:
+//!
+//! 1. **Verified-winner stop** — the moment any sample passes
+//!    verification, further sampling cannot improve the query's pass@k
+//!    outcome (pass@k is 1 iff *any* sample succeeds), so stopping is
+//!    exact: it saves the remaining samples' energy at zero coverage
+//!    cost. This is the dominant saver at paper-scale budgets.
+//! 2. **Futility stop** — on an all-failure stream, stop once an
+//!    *anytime* confidence sequence rules out meaningful success mass
+//!    in the remaining budget: `UCB(p) · remaining < ε`. The upper
+//!    confidence bound uses a Hoeffding radius with a `1/(n(n+1))`
+//!    union allocation, so the bound holds simultaneously over every
+//!    stream length — the stop decision is valid at whatever wave it
+//!    fires on, not just at a pre-registered n.
+//!
+//! With the default configuration the futility radius is wide enough
+//! that an S ≤ 20 budget (the paper's operating point) never
+//! futility-stops: inside Table 4 the cascade is *exactly* coverage-
+//! preserving and all savings come from verified-winner stops. Futility
+//! only engages on the long all-failure tails of large offline budgets.
+
+/// Stopping-rule knobs.
+#[derive(Debug, Clone)]
+pub struct CsvetConfig {
+    /// Confidence level of the anytime confidence sequence (1 − δ).
+    pub confidence: f64,
+    /// Minimum observations before a futility stop may fire.
+    pub min_samples: u32,
+    /// Futility threshold ε: stop when the UCB-expected number of
+    /// successes in the remaining budget falls below this.
+    pub futility_epsilon: f64,
+}
+
+impl Default for CsvetConfig {
+    fn default() -> Self {
+        CsvetConfig { confidence: 0.95, min_samples: 4, futility_epsilon: 0.25 }
+    }
+}
+
+/// Per-wave stopping decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CsvetDecision {
+    /// Keep drawing samples.
+    Continue,
+    /// A verified winner exists — stop exactly (no coverage cost).
+    StopSuccess,
+    /// The confidence sequence rules out the remaining budget.
+    StopFutility,
+}
+
+/// Running confidence-sequence state over one query's sample stream.
+#[derive(Debug, Clone)]
+pub struct Csvet {
+    cfg: CsvetConfig,
+    n: u32,
+    successes: u32,
+}
+
+impl Csvet {
+    pub fn new(cfg: CsvetConfig) -> Csvet {
+        Csvet { cfg, n: 0, successes: 0 }
+    }
+
+    pub fn config(&self) -> &CsvetConfig {
+        &self.cfg
+    }
+
+    /// Record one sample's verification outcome.
+    pub fn observe(&mut self, verified: bool) {
+        self.n += 1;
+        if verified {
+            self.successes += 1;
+        }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    pub fn successes(&self) -> u32 {
+        self.successes
+    }
+
+    /// Empirical success rate (0 before any observation).
+    pub fn p_hat(&self) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        self.successes as f64 / self.n as f64
+    }
+
+    /// Anytime Hoeffding radius: `sqrt(ln(n(n+1)/δ) / (2n))`. The
+    /// `n(n+1)` union allocation spends `δ/(n(n+1))` at stream length n
+    /// (Σ 1/(n(n+1)) = 1), so `|p̂ − p| ≤ radius` holds for ALL n
+    /// simultaneously with probability ≥ 1 − δ.
+    pub fn radius(&self) -> f64 {
+        if self.n == 0 {
+            return 1.0;
+        }
+        let delta = (1.0 - self.cfg.confidence).clamp(1e-12, 1.0);
+        let n = self.n as f64;
+        ((n * (n + 1.0) / delta).ln() / (2.0 * n)).sqrt()
+    }
+
+    /// Upper confidence bound on the per-sample success probability.
+    pub fn p_ucb(&self) -> f64 {
+        (self.p_hat() + self.radius()).min(1.0)
+    }
+
+    /// Stopping decision given the remaining sample budget.
+    pub fn decision(&self, remaining: u32) -> CsvetDecision {
+        if self.successes > 0 {
+            return CsvetDecision::StopSuccess;
+        }
+        if remaining > 0
+            && self.n >= self.cfg.min_samples
+            && self.p_ucb() * remaining as f64 < self.cfg.futility_epsilon
+        {
+            return CsvetDecision::StopFutility;
+        }
+        CsvetDecision::Continue
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn success_stop_has_priority_and_fires_immediately() {
+        let mut cs = Csvet::new(CsvetConfig::default());
+        cs.observe(false);
+        assert_eq!(cs.decision(10), CsvetDecision::Continue);
+        cs.observe(true);
+        assert_eq!(cs.decision(10), CsvetDecision::StopSuccess);
+        // Success stop does not depend on remaining budget.
+        assert_eq!(cs.decision(0), CsvetDecision::StopSuccess);
+    }
+
+    #[test]
+    fn radius_shrinks_but_stays_anytime_wide() {
+        let mut cs = Csvet::new(CsvetConfig::default());
+        let mut prev = f64::INFINITY;
+        for _ in 0..100 {
+            cs.observe(false);
+            let r = cs.radius();
+            assert!(r < prev, "radius must shrink with n");
+            assert!(r > 0.0);
+            prev = r;
+        }
+        // Still wider than the pointwise Hoeffding bound at the same n
+        // (the union allocation costs width — that's what buys validity
+        // at every stopping time).
+        let pointwise = (0.05f64.recip().ln() / (2.0 * 100.0)).sqrt();
+        assert!(cs.radius() > pointwise);
+    }
+
+    #[test]
+    fn futility_never_fires_before_min_samples() {
+        let cfg = CsvetConfig { min_samples: 6, ..Default::default() };
+        let mut cs = Csvet::new(cfg);
+        for _ in 0..5 {
+            cs.observe(false);
+            assert_eq!(cs.decision(1), CsvetDecision::Continue);
+        }
+    }
+
+    #[test]
+    fn futility_requires_the_confidence_bound() {
+        let mut cs = Csvet::new(CsvetConfig::default());
+        for _ in 0..50 {
+            cs.observe(false);
+        }
+        for remaining in 1..200u32 {
+            match cs.decision(remaining) {
+                CsvetDecision::StopFutility => {
+                    assert!(
+                        cs.p_ucb() * remaining as f64 < cs.config().futility_epsilon,
+                        "stop without the bound at remaining={remaining}"
+                    );
+                }
+                CsvetDecision::Continue => {
+                    assert!(cs.p_ucb() * remaining as f64 >= cs.config().futility_epsilon);
+                }
+                CsvetDecision::StopSuccess => panic!("no success observed"),
+            }
+        }
+    }
+
+    #[test]
+    fn paper_scale_budgets_never_futility_stop() {
+        // The coverage-preservation guarantee the Table 4 comparison
+        // relies on: at S ≤ 20 with defaults, an all-failure stream runs
+        // to exhaustion.
+        let mut cs = Csvet::new(CsvetConfig::default());
+        for i in 0..20u32 {
+            cs.observe(false);
+            assert_eq!(cs.decision(20 - i - 1), CsvetDecision::Continue, "n={}", i + 1);
+        }
+    }
+
+    #[test]
+    fn p_hat_and_ucb_bounded() {
+        let mut cs = Csvet::new(CsvetConfig::default());
+        assert_eq!(cs.p_hat(), 0.0);
+        assert_eq!(cs.radius(), 1.0);
+        for i in 0..30 {
+            cs.observe(i % 3 == 0);
+        }
+        assert!(cs.p_hat() > 0.0 && cs.p_hat() < 1.0);
+        assert!(cs.p_ucb() <= 1.0);
+        assert!(cs.p_ucb() >= cs.p_hat());
+    }
+}

@@ -1,0 +1,174 @@
+//! EAC — Energy-Aware Candidate scoring.
+//!
+//! Scores each drawn sample by verifier quality *discounted by the
+//! energy it cost to produce* (Camel-style energy-aware selection: on a
+//! resource-constrained fleet, two near-equal candidates are not equal
+//! if one burned 4× the joules on the dGPU lane). The utility is
+//!
+//! `U(c) = score − w_E · (E_c / E_ref)  (+ bonus if verified)`
+//!
+//! with `E_ref` the pool's mean per-sample energy, so the energy term
+//! is scale-free across model sizes and fleets. The verified bonus
+//! exceeds the score range plus the maximum energy discount, so a
+//! verified candidate always outranks every unverified one — energy
+//! awareness tie-breaks *within* a verification class, never across.
+//!
+//! The induced order is total and deterministic: utility (desc), then
+//! energy (asc), then stream index (asc).
+
+/// One drawn sample as seen by the selection cascade.
+#[derive(Debug, Clone)]
+pub struct Candidate {
+    /// Stream position (draw order within the query).
+    pub index: u32,
+    /// Decode lane (fan-out slot) that produced it — ARDE's diversity key.
+    pub lane: u32,
+    /// Heuristic quality score in [0, 1] (verifier margin proxy).
+    pub score: f64,
+    /// Whether progressive verification accepted the sample.
+    pub verified: bool,
+    /// Energy charged to produce the sample (J) — the marginal cost the
+    /// EAC discount weighs.
+    pub energy_j: f64,
+}
+
+/// Scoring knobs.
+#[derive(Debug, Clone)]
+pub struct EacConfig {
+    /// Weight of the normalized energy discount (score weight is 1).
+    pub energy_weight: f64,
+    /// Additive utility bonus for verified candidates. Must dominate
+    /// `1 + energy_weight · ENERGY_NORM_CAP` for verified-always-wins.
+    pub verified_bonus: f64,
+}
+
+/// Cap on the normalized energy ratio so one pathological outlier
+/// cannot dominate the utility scale.
+pub const ENERGY_NORM_CAP: f64 = 10.0;
+
+impl Default for EacConfig {
+    fn default() -> Self {
+        EacConfig { energy_weight: 0.15, verified_bonus: 4.0 }
+    }
+}
+
+/// EAC utility of one candidate against a reference per-sample energy.
+/// NaN inputs are sanitized (NaN score → 0, NaN energy ratio → the
+/// cap): `total_cmp` would otherwise rank a NaN utility above every
+/// finite one and silently break the verified-dominance invariant.
+pub fn utility(c: &Candidate, ref_energy_j: f64, cfg: &EacConfig) -> f64 {
+    let score = if c.score.is_nan() { 0.0 } else { c.score.clamp(0.0, 1.0) };
+    let norm = if ref_energy_j > 0.0 {
+        let ratio = c.energy_j / ref_energy_j;
+        if ratio.is_nan() {
+            ENERGY_NORM_CAP
+        } else {
+            ratio.min(ENERGY_NORM_CAP)
+        }
+    } else {
+        0.0
+    };
+    let base = score - cfg.energy_weight * norm;
+    if c.verified {
+        base + cfg.verified_bonus
+    } else {
+        base
+    }
+}
+
+/// Rank candidate slice indices best-first under the EAC total order:
+/// utility desc, energy asc, index asc. Utilities are evaluated once
+/// per candidate, not per comparison.
+pub fn rank(candidates: &[Candidate], ref_energy_j: f64, cfg: &EacConfig) -> Vec<usize> {
+    let utils: Vec<f64> =
+        candidates.iter().map(|c| utility(c, ref_energy_j, cfg)).collect();
+    let mut order: Vec<usize> = (0..candidates.len()).collect();
+    order.sort_by(|&a, &b| {
+        utils[b]
+            .total_cmp(&utils[a])
+            .then(candidates[a].energy_j.total_cmp(&candidates[b].energy_j))
+            .then(candidates[a].index.cmp(&candidates[b].index))
+    });
+    order
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(index: u32, score: f64, verified: bool, energy_j: f64) -> Candidate {
+        Candidate { index, lane: index % 2, score, verified, energy_j }
+    }
+
+    #[test]
+    fn verified_always_outranks_unverified() {
+        let cfg = EacConfig::default();
+        // Worst verified (score 0, max-capped energy) vs best unverified.
+        let v = cand(5, 0.0, true, 1e6);
+        let u = cand(0, 1.0, false, 0.0);
+        assert!(utility(&v, 1.0, &cfg) > utility(&u, 1.0, &cfg));
+    }
+
+    #[test]
+    fn energy_discount_breaks_score_ties() {
+        let cfg = EacConfig::default();
+        let cheap = cand(1, 0.5, false, 1.0);
+        let pricey = cand(0, 0.5, false, 4.0);
+        let order = rank(&[pricey.clone(), cheap.clone()], 2.0, &cfg);
+        assert_eq!(order, vec![1, 0], "cheaper candidate must rank first");
+    }
+
+    #[test]
+    fn full_ties_fall_back_to_stream_index() {
+        let cfg = EacConfig::default();
+        let pool: Vec<Candidate> = (0..6).map(|i| cand(i, 0.5, false, 1.0)).collect();
+        let order = rank(&pool, 1.0, &cfg);
+        assert_eq!(order, vec![0, 1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn energy_norm_is_capped() {
+        let cfg = EacConfig::default();
+        let outlier = cand(0, 1.0, false, 1e12);
+        let u = utility(&outlier, 1.0, &cfg);
+        assert!((u - (1.0 - cfg.energy_weight * ENERGY_NORM_CAP)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_reference_energy_disables_the_discount() {
+        let cfg = EacConfig::default();
+        let c = cand(0, 0.7, false, 123.0);
+        assert!((utility(&c, 0.0, &cfg) - 0.7).abs() < 1e-12);
+    }
+
+    #[test]
+    fn nan_inputs_rank_at_the_bottom_of_their_class() {
+        let cfg = EacConfig::default();
+        // A NaN-scored failure must not outrank anything real…
+        let nan_u = cand(0, f64::NAN, false, 1.0);
+        let real_u = cand(1, 0.1, false, 1.0);
+        assert_eq!(rank(&[nan_u.clone(), real_u], 1.0, &cfg)[0], 1);
+        // …and certainly not a verified candidate.
+        let verified = cand(2, 0.0, true, 1.0);
+        assert_eq!(rank(&[nan_u, verified], 1.0, &cfg)[0], 1);
+        // NaN energy is treated as the cap, not as rank-first.
+        let nan_e = cand(0, 0.9, false, f64::NAN);
+        let cheap = cand(1, 0.9, false, 1.0);
+        assert_eq!(rank(&[nan_e, cheap], 1.0, &cfg)[0], 1);
+    }
+
+    #[test]
+    fn rank_is_deterministic() {
+        let cfg = EacConfig::default();
+        let pool: Vec<Candidate> = (0..16)
+            .map(|i| cand(i, (i as f64 * 0.37) % 1.0, i % 5 == 0, 1.0 + (i % 3) as f64))
+            .collect();
+        let a = rank(&pool, 2.0, &cfg);
+        let b = rank(&pool, 2.0, &cfg);
+        assert_eq!(a, b);
+        // Every index appears exactly once.
+        let mut seen = a.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..16).collect::<Vec<_>>());
+    }
+}

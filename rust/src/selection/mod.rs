@@ -1,0 +1,249 @@
+//! Inference-time selection cascade (paper: EAC/ARDE selection with
+//! CSVET early stopping — "progressive verification among repeated
+//! samples").
+//!
+//! [`crate::coordinator::SampleBudgeter`] decides *how many* samples a
+//! query may draw; until now nothing decided *which* candidate wins or
+//! *when to stop sampling early*. The [`SelectionCascade`] closes that
+//! gap on top of the same per-sample cost estimates the budgeter
+//! consumes (ultimately roofline-derived via the planner's
+//! [`crate::coordinator::EnergyTable`] substrate):
+//!
+//! 1. Samples are drawn in waves sized to the decode fan-out (each wave
+//!    is one pass over the parallel decode lanes).
+//! 2. After every wave, [`csvet`] decides whether to keep drawing: stop
+//!    exactly on a verified winner, stop on confidence-sequence
+//!    futility, or continue to budget exhaustion.
+//! 3. The drawn pool then runs [`arde`] elimination rounds under the
+//!    [`eac`] energy-aware total order to crown the winner.
+//!
+//! The emitted [`CascadeReport`] records winner, samples drawn vs.
+//! budgeted, energy spent vs. saved, and the stop reason — the trail
+//! the simulator aggregates into `SimReport`/`RunMetrics` and the
+//! Table 4 "+ Selection Cascade" rung reports.
+
+pub mod arde;
+pub mod csvet;
+pub mod eac;
+
+pub use arde::{ArdeConfig, ArdeOutcome};
+pub use csvet::{Csvet, CsvetConfig, CsvetDecision};
+pub use eac::{Candidate, EacConfig};
+
+/// Why the cascade stopped drawing samples.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StopReason {
+    /// Zero budget: nothing was drawn.
+    EmptyBudget,
+    /// A verified winner exists — the exact (coverage-lossless) stop.
+    VerifiedWinner,
+    /// The confidence sequence ruled out the remaining budget.
+    Futility,
+    /// The full budget was drawn without an early stop.
+    BudgetExhausted,
+}
+
+impl StopReason {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            StopReason::EmptyBudget => "empty-budget",
+            StopReason::VerifiedWinner => "verified-winner",
+            StopReason::Futility => "futility",
+            StopReason::BudgetExhausted => "budget-exhausted",
+        }
+    }
+}
+
+/// Full cascade configuration.
+#[derive(Debug, Clone, Default)]
+pub struct CascadeConfig {
+    pub eac: EacConfig,
+    pub arde: ArdeConfig,
+    pub csvet: CsvetConfig,
+}
+
+/// What the cascade decided for one query.
+#[derive(Debug, Clone)]
+pub struct CascadeReport {
+    /// The EAC/ARDE winner (None only when nothing was drawn).
+    pub winner: Option<Candidate>,
+    /// Samples the budgeter allowed.
+    pub samples_budgeted: u32,
+    /// Samples actually drawn (≤ budgeted).
+    pub samples_drawn: u32,
+    /// Energy of the drawn samples (J).
+    pub energy_spent_j: f64,
+    /// Estimated energy of the budgeted-but-undrawn samples (J), at the
+    /// drawn pool's mean per-sample energy.
+    pub energy_saved_j: f64,
+    pub stop_reason: StopReason,
+    /// ARDE elimination rounds run over the drawn pool.
+    pub elimination_rounds: u32,
+    /// CSVET's success-probability UCB at the stop decision.
+    pub p_ucb: f64,
+}
+
+/// The cascade driver.
+#[derive(Debug, Clone, Default)]
+pub struct SelectionCascade {
+    pub config: CascadeConfig,
+}
+
+impl SelectionCascade {
+    pub fn new(config: CascadeConfig) -> SelectionCascade {
+        SelectionCascade { config }
+    }
+
+    /// Draw up to `budget` candidates in waves of `parallelism` from
+    /// `draw` (called with the stream index), feeding the CSVET stream;
+    /// after stopping, run ARDE elimination over the drawn pool and
+    /// return the report. Deterministic for a deterministic `draw`.
+    pub fn run<F: FnMut(u32) -> Candidate>(
+        &self,
+        budget: u32,
+        parallelism: u32,
+        mut draw: F,
+    ) -> CascadeReport {
+        let par = parallelism.max(1);
+        let mut pool: Vec<Candidate> = Vec::with_capacity(budget.min(64) as usize);
+        let mut csvet = Csvet::new(self.config.csvet.clone());
+        let mut reason =
+            if budget == 0 { StopReason::EmptyBudget } else { StopReason::BudgetExhausted };
+        let mut drawn = 0u32;
+        while drawn < budget {
+            let wave = par.min(budget - drawn);
+            for _ in 0..wave {
+                let c = draw(drawn);
+                csvet.observe(c.verified);
+                pool.push(c);
+                drawn += 1;
+            }
+            match csvet.decision(budget - drawn) {
+                CsvetDecision::StopSuccess => {
+                    reason = StopReason::VerifiedWinner;
+                    break;
+                }
+                CsvetDecision::StopFutility => {
+                    reason = StopReason::Futility;
+                    break;
+                }
+                CsvetDecision::Continue => {}
+            }
+        }
+
+        let energy_spent_j: f64 = pool.iter().map(|c| c.energy_j).sum();
+        let mean_energy = if drawn > 0 { energy_spent_j / drawn as f64 } else { 0.0 };
+        let energy_saved_j = mean_energy * (budget - drawn) as f64;
+        let outcome = arde::select(&pool, mean_energy, &self.config.eac, &self.config.arde);
+        CascadeReport {
+            winner: outcome.as_ref().map(|o| pool[o.winner].clone()),
+            samples_budgeted: budget,
+            samples_drawn: drawn,
+            energy_spent_j,
+            energy_saved_j,
+            stop_reason: reason,
+            elimination_rounds: outcome.map(|o| o.rounds).unwrap_or(0),
+            p_ucb: csvet.p_ucb(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cand(index: u32, lane: u32, score: f64, verified: bool) -> Candidate {
+        Candidate { index, lane, score, verified, energy_j: 0.5 }
+    }
+
+    #[test]
+    fn stops_at_the_wave_containing_the_first_success() {
+        let cascade = SelectionCascade::default();
+        // First success at stream index 5; waves of 4 → stop after wave 2.
+        let r = cascade.run(20, 4, |i| cand(i, i % 4, 0.3, i == 5));
+        assert_eq!(r.samples_drawn, 8);
+        assert_eq!(r.stop_reason, StopReason::VerifiedWinner);
+        let w = r.winner.expect("winner");
+        assert_eq!(w.index, 5, "the verified candidate must win");
+        assert!((r.energy_spent_j - 8.0 * 0.5).abs() < 1e-12);
+        assert!((r.energy_saved_j - 12.0 * 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn exhaustion_draws_the_full_budget() {
+        let cascade = SelectionCascade::default();
+        let r = cascade.run(12, 4, |i| cand(i, i % 4, 0.4, false));
+        assert_eq!(r.samples_drawn, 12);
+        assert_eq!(r.stop_reason, StopReason::BudgetExhausted);
+        assert_eq!(r.energy_saved_j, 0.0);
+        assert!(r.winner.is_some());
+    }
+
+    #[test]
+    fn futility_fires_only_on_long_all_failure_streams() {
+        // At paper-scale budgets futility never fires (see csvet tests);
+        // on a long offline budget it trims the hopeless tail.
+        let cascade = SelectionCascade::default();
+        let r = cascade.run(4000, 4, |i| cand(i, i % 4, 0.2, false));
+        assert_eq!(r.stop_reason, StopReason::Futility);
+        assert!(r.samples_drawn < 4000, "futility must trim the tail");
+        assert!(r.samples_drawn >= cascade.config.csvet.min_samples);
+        let cfg = &cascade.config.csvet;
+        assert!(
+            r.p_ucb * (4000 - r.samples_drawn) as f64 < cfg.futility_epsilon,
+            "stop must carry its confidence bound: ucb {} drawn {}",
+            r.p_ucb,
+            r.samples_drawn
+        );
+    }
+
+    #[test]
+    fn zero_budget_is_empty_not_a_panic() {
+        let cascade = SelectionCascade::default();
+        let r = cascade.run(0, 4, |i| cand(i, 0, 0.5, true));
+        assert_eq!(r.samples_drawn, 0);
+        assert!(r.winner.is_none());
+        assert_eq!(r.stop_reason, StopReason::EmptyBudget);
+        assert_eq!(r.energy_spent_j, 0.0);
+        assert_eq!(r.energy_saved_j, 0.0);
+        assert_eq!(r.elimination_rounds, 0);
+    }
+
+    #[test]
+    fn zero_parallelism_degrades_to_serial_waves() {
+        let cascade = SelectionCascade::default();
+        let r = cascade.run(5, 0, |i| cand(i, 0, 0.5, false));
+        assert_eq!(r.samples_drawn, 5);
+        assert_eq!(r.stop_reason, StopReason::BudgetExhausted);
+    }
+
+    #[test]
+    fn serial_success_stop_is_tight() {
+        // With parallelism 1 the stop lands exactly one past the success.
+        let cascade = SelectionCascade::default();
+        let r = cascade.run(20, 1, |i| cand(i, 0, 0.5, i == 3));
+        assert_eq!(r.samples_drawn, 4);
+        assert_eq!(r.stop_reason, StopReason::VerifiedWinner);
+    }
+
+    #[test]
+    fn report_is_deterministic() {
+        let cascade = SelectionCascade::default();
+        let make = |i: u32| cand(i, i % 3, (i as f64 * 0.29) % 1.0, i == 7);
+        let a = cascade.run(24, 3, make);
+        let b = cascade.run(24, 3, make);
+        assert_eq!(a.samples_drawn, b.samples_drawn);
+        assert_eq!(a.stop_reason, b.stop_reason);
+        assert_eq!(a.winner.as_ref().map(|w| w.index), b.winner.as_ref().map(|w| w.index));
+        assert_eq!(a.elimination_rounds, b.elimination_rounds);
+        assert_eq!(a.energy_spent_j.to_bits(), b.energy_spent_j.to_bits());
+    }
+
+    #[test]
+    fn stop_reasons_have_stable_labels() {
+        assert_eq!(StopReason::VerifiedWinner.as_str(), "verified-winner");
+        assert_eq!(StopReason::Futility.as_str(), "futility");
+        assert_eq!(StopReason::BudgetExhausted.as_str(), "budget-exhausted");
+        assert_eq!(StopReason::EmptyBudget.as_str(), "empty-budget");
+    }
+}

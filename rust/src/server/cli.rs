@@ -6,10 +6,12 @@ use anyhow::{bail, Result};
 use crate::cli::Args;
 use crate::coordinator::allocation::ModelShape;
 use crate::coordinator::pgsam::PgsamConfig;
-use crate::coordinator::Orchestrator;
+use crate::coordinator::{Orchestrator, PhasePlan};
 use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::experiments::runner::default_meta;
 use crate::rng::Pcg;
+use crate::selection::{Candidate, SelectionCascade};
+use crate::workload::coverage::CoverageOracle;
 use crate::workload::datasets::{Dataset, ModelFamily};
 use crate::workload::generator::WorkloadGenerator;
 use crate::workload::trace::RequestTrace;
@@ -43,7 +45,7 @@ pub fn run(args: &Args) -> Result<()> {
         }),
         other => bail!("unknown --planner {other:?} (expected pgsam or greedy)"),
     };
-    match planned {
+    match &planned {
         Some((alloc, energy)) => println!(
             "layer plan [{planner}]: uses {} of {} devices, {} boundary crossings, {:.4} J per decode step",
             alloc.devices_used(&fleet).len(),
@@ -52,6 +54,43 @@ pub fn run(args: &Args) -> Result<()> {
             energy,
         ),
         None => println!("layer plan [{planner}]: infeasible for this fleet"),
+    }
+
+    // `--cascade`: preview the EAC/ARDE/CSVET selection cascade on the
+    // first trace query — how many of the budgeted samples it would
+    // draw, the stop reason, and the winner — using the layer plan's
+    // decode-step energy as the per-sample cost estimate.
+    if args.flag("cascade") {
+        let budget: u32 = args.num("cascade-budget", 20u32)?;
+        let oracle = CoverageOracle::new(seed);
+        let preview = WorkloadGenerator::new(dataset, family, seed).queries(1).remove(0);
+        // Wave width = the decode fan-out the engine would actually use
+        // (energy-ranked set under the engine's default fan-out cap),
+        // so the preview reproduces the real stopping schedule.
+        let fan_out_cap = crate::sim::engine::SimOptions::default().max_decode_devices;
+        let lanes = PhasePlan::disaggregated(&shape, &fleet, preview.prompt_tokens, fan_out_cap)
+            .map(|p| p.decode.len())
+            .unwrap_or(1)
+            .max(1) as u32;
+        let per_sample_j =
+            planned.as_ref().map(|(_, e)| e * max_new as f64).unwrap_or(0.0);
+        let cascade = SelectionCascade::default();
+        let report = cascade.run(budget, lanes, |idx| {
+            let (score, verified) = oracle.sample_outcome(&preview, idx);
+            Candidate { index: idx, lane: idx % lanes, score, verified, energy_j: per_sample_j }
+        });
+        let winner = match &report.winner {
+            Some(w) => format!("sample #{} (score {:.3})", w.index, w.score),
+            None => "none".to_string(),
+        };
+        println!(
+            "cascade plan [S={budget}]: drew {} of {} samples, stop={}, winner={winner}, {:.3} J spent / {:.3} J saved",
+            report.samples_drawn,
+            report.samples_budgeted,
+            report.stop_reason.as_str(),
+            report.energy_spent_j,
+            report.energy_saved_j,
+        );
     }
 
     let config = ServiceConfig {

@@ -30,6 +30,7 @@ use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
 use crate::safety::thermal_guard::ThermalGuard;
 use crate::scaling::formalisms::LatencyLaw;
+use crate::selection::{Candidate, SelectionCascade, StopReason};
 use crate::workload::coverage::CoverageOracle;
 use crate::workload::generator::Query;
 
@@ -77,6 +78,29 @@ impl Default for SimOptions {
     }
 }
 
+/// Aggregated selection-cascade trail over a run (present on
+/// [`SimReport`] only when `OrchestratorFeatures::selection_cascade`
+/// is enabled).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CascadeTrail {
+    /// Total samples the budgeter allowed across all queries.
+    pub samples_budgeted: u64,
+    /// Total samples the cascade actually drew (≤ budgeted).
+    pub samples_drawn: u64,
+    /// Estimated energy of the budgeted-but-undrawn samples (J), at the
+    /// same planning-model fidelity the sample budgeter uses (lead
+    /// decode device, unthrottled, uncalibrated) — an a-priori estimate
+    /// for the trail, NOT a ledger-grade delta; compare cascade-on vs
+    /// cascade-off `total_energy_j` for the executed difference.
+    pub energy_saved_j: f64,
+    /// Queries stopped exactly on a verified winner.
+    pub success_stops: u64,
+    /// Queries stopped by the CSVET confidence sequence.
+    pub futility_stops: u64,
+    /// Queries that drew their full budget.
+    pub exhausted_stops: u64,
+}
+
 /// Aggregated simulation results.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -116,6 +140,13 @@ pub struct SimReport {
     /// Decode-step energy of that layer plan (J) — the Eq. 12 objective
     /// the planner optimized, reported for the planner-quality trail.
     pub plan_energy_j: f64,
+    /// Planner failure surfaced by `layer_plan` (`None` when planning
+    /// succeeded or no layer planner was enabled). A failing planner is
+    /// reported as `planner == "none"` plus this error — never as a
+    /// silently mislabeled fallback.
+    pub plan_error: Option<String>,
+    /// Selection-cascade trail (`None` when the feature is off).
+    pub cascade: Option<CascadeTrail>,
 }
 
 struct SimDevice {
@@ -145,6 +176,7 @@ pub struct SimEngine {
     failures: u64,
     queries_lost: usize,
     samples_run_total: u64,
+    cascade: CascadeTrail,
     /// Calibration factor: real measured seconds per simulated second
     /// (from PJRT execution of the artifact; 1.0 = pure analytic).
     pub calibration: f64,
@@ -184,6 +216,7 @@ impl SimEngine {
             failures: 0,
             queries_lost: 0,
             samples_run_total: 0,
+            cascade: CascadeTrail::default(),
             calibration: 1.0,
         }
     }
@@ -194,15 +227,19 @@ impl SimEngine {
 
     /// Score the layer allocation for the current safety state with the
     /// feature-selected planner: PGSAM (paper §4) when enabled, greedy
-    /// Eq. 12 otherwise (greedy also remains PGSAM's fallback when no
-    /// feasible plan exists). Returns the planner label and the plan's
-    /// decode-step energy.
-    pub fn layer_plan(&self) -> (&'static str, f64) {
+    /// Eq. 12 otherwise. Returns the planner label, the plan's
+    /// decode-step energy, and the planning error if the selected
+    /// planner failed. A PGSAM failure is NOT silently relabeled as a
+    /// greedy run: PGSAM anneals from the greedy seed, so its only
+    /// failure mode is an infeasible seed — greedy would fail
+    /// identically, and reporting `("greedy", …)` here would mislabel
+    /// the planner trail. The error is surfaced instead.
+    pub fn layer_plan(&self) -> (&'static str, f64, Option<String>) {
         let features = &self.options.features;
         // No layer planner selected (homogeneous baselines): report none
         // rather than a trail for a planner that never ran.
         if !features.pgsam_planner && !features.greedy_layer_assignment {
-            return ("none", 0.0);
+            return ("none", 0.0, None);
         }
         let mut orch = Orchestrator::new(&self.fleet);
         for d in self.fleet.devices() {
@@ -212,13 +249,14 @@ impl SimEngine {
         }
         if features.pgsam_planner {
             let cfg = PgsamConfig::default().with_seed(self.options.seed);
-            if let Ok((_, energy)) = orch.assign_pgsam(&self.shape, &cfg) {
-                return ("pgsam", energy);
-            }
+            return match orch.assign_pgsam(&self.shape, &cfg) {
+                Ok((_, energy)) => ("pgsam", energy, None),
+                Err(e) => ("none", 0.0, Some(e.to_string())),
+            };
         }
         match orch.assign(&self.shape) {
-            Ok(alloc) => ("greedy", orch.allocation_energy_j(&self.shape, &alloc)),
-            Err(_) => ("none", 0.0),
+            Ok(alloc) => ("greedy", orch.allocation_energy_j(&self.shape, &alloc), None),
+            Err(e) => ("none", 0.0, Some(e.to_string())),
         }
     }
 
@@ -341,10 +379,13 @@ impl SimEngine {
         let per_token_s: f64 = d_task.seconds_on(&decode_specs[0], 1.0);
         let per_sample_latency =
             p_task.seconds_on(&prefill_spec, 1.0) + per_token_s * query.output_tokens as f64;
+        // Decode energy of one sample — the marginal cost a skipped
+        // sample actually avoids (prefill runs once regardless).
+        let per_sample_decode_j = PowerModel::energy_for(&decode_specs[0], &d_task, 1.0)
+            * query.output_tokens as f64;
         let per_sample_energy = PowerModel::energy_for(&prefill_spec, &p_task, 1.0)
             / samples.max(1) as f64
-            + PowerModel::energy_for(&decode_specs[0], &d_task, 1.0)
-                * query.output_tokens as f64;
+            + per_sample_decode_j;
 
         let samples = if self.options.features.adaptive_sample_budget {
             let budgeter = SampleBudgeter {
@@ -368,6 +409,56 @@ impl SimEngine {
         } else {
             samples
         };
+
+        // ---- EAC/ARDE selection cascade with CSVET early stopping ----
+        // Draw samples in waves sized to the decode fan-out; stop the
+        // moment a verified winner exists (exact for pass@k — further
+        // samples cannot improve a solved query) or on confidence-
+        // sequence futility. Drawn ≤ budgeted, so the cascade only ever
+        // removes decode work from the executed schedule below. (The
+        // SLA-deadline prefix accounting further down then applies to
+        // the drawn samples exactly as it would to the budgeted ones;
+        // at the paper operating point the deadline never binds the
+        // multi-lane fan-out, which keeps the drawn-vs-budgeted solved
+        // outcomes identical — asserted by the engine tests.)
+        let cascade_report = if self.options.features.selection_cascade {
+            let lanes = plan.decode.len().max(1) as u32;
+            let cascade = SelectionCascade::default();
+            Some(cascade.run(samples, lanes, |idx| {
+                let (score, verified) = oracle.sample_outcome(query, idx);
+                Candidate {
+                    index: idx,
+                    lane: idx % lanes,
+                    score,
+                    verified,
+                    // Marginal (decode-only) cost: a skipped sample does
+                    // not save any share of the once-per-query prefill,
+                    // so crediting it would overstate energy_saved_j.
+                    energy_j: per_sample_decode_j,
+                }
+            }))
+        } else {
+            None
+        };
+        // Execute exactly what was drawn: for budget ≥ 1 the first wave
+        // always draws, and a zero budget executes zero samples just
+        // like the cascade-off path would.
+        let samples = match &cascade_report {
+            Some(r) => r.samples_drawn,
+            None => samples,
+        };
+        if let Some(r) = &cascade_report {
+            self.cascade.samples_budgeted += r.samples_budgeted as u64;
+            self.cascade.samples_drawn += r.samples_drawn as u64;
+            self.cascade.energy_saved_j += r.energy_saved_j;
+            match r.stop_reason {
+                StopReason::VerifiedWinner => self.cascade.success_stops += 1,
+                StopReason::Futility => self.cascade.futility_stops += 1,
+                StopReason::BudgetExhausted | StopReason::EmptyBudget => {
+                    self.cascade.exhausted_stops += 1
+                }
+            }
+        }
 
         // ---- Prefill (shared across samples via prefix batching) ----
         let prefill_throttle = self.throttle_factor(&plan.prefill);
@@ -540,7 +631,7 @@ impl SimEngine {
         } else {
             self.recoveries.iter().sum::<f64>() / self.recoveries.len() as f64
         };
-        let (planner, plan_energy_j) = self.layer_plan();
+        let (planner, plan_energy_j, plan_error) = self.layer_plan();
         SimReport {
             coverage: if n_queries > 0 { solved as f64 / n_queries as f64 } else { 0.0 },
             accuracy: if n_queries > 0 { accuracy_hits as f64 / n_queries as f64 } else { 0.0 },
@@ -570,6 +661,12 @@ impl SimEngine {
             wall_s: self.clock_s,
             planner,
             plan_energy_j,
+            plan_error,
+            cascade: if self.options.features.selection_cascade {
+                Some(self.cascade.clone())
+            } else {
+                None
+            },
         }
     }
 }
@@ -801,6 +898,73 @@ mod tests {
         let rg = greedy_on_edge.run(&qs, 5).unwrap();
         assert_eq!(rg.planner, "greedy");
         assert!(rf.plan_energy_j <= rg.plan_energy_j * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn cascade_reduces_samples_and_energy_at_equal_coverage() {
+        let qs = queries(60);
+        let mut on = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r_on = on.run(&qs, 20).unwrap();
+        let off_opts = SimOptions {
+            features: OrchestratorFeatures {
+                selection_cascade: false,
+                ..OrchestratorFeatures::full()
+            },
+            ..Default::default()
+        };
+        let mut off = engine(FleetPreset::EdgeBox, off_opts);
+        let r_off = off.run(&qs, 20).unwrap();
+        // Verified-winner stops are exact and futility never fires at
+        // S ≤ 20: bitwise-equal coverage at strictly lower energy.
+        assert!(
+            (r_on.coverage - r_off.coverage).abs() < 1e-12,
+            "cascade must not cost coverage: {} vs {}",
+            r_on.coverage,
+            r_off.coverage
+        );
+        assert!(r_on.total_energy_j < r_off.total_energy_j, "cascade must save energy");
+        assert!(r_on.mean_samples_run < r_off.mean_samples_run);
+        let trail = r_on.cascade.as_ref().expect("trail present when the cascade is on");
+        assert!(trail.samples_drawn <= trail.samples_budgeted);
+        assert!(trail.energy_saved_j > 0.0);
+        assert!(trail.success_stops > 0, "solvable queries must stop on verified winners");
+        assert_eq!(trail.futility_stops, 0, "futility must not fire at S=20");
+        assert_eq!(
+            trail.success_stops + trail.futility_stops + trail.exhausted_stops,
+            qs.len() as u64
+        );
+        assert!(r_off.cascade.is_none(), "no trail when the feature is off");
+    }
+
+    #[test]
+    fn planner_failure_is_surfaced_not_mislabeled() {
+        // Every device crashes at t=0 with no recovery: by report time
+        // the planner has no feasible device, and the report must carry
+        // the error with planner == "none" — not a mislabeled fallback.
+        let scenarios: Vec<FailureScenario> = ["cpu0", "npu0", "igpu0", "gpu0"]
+            .iter()
+            .map(|d| FailureScenario {
+                device: (*d).into(),
+                kind: FailureKind::Crash,
+                at_s: 0.0,
+                recover_after_s: None,
+            })
+            .collect();
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { failure_plan: FailurePlan::new(scenarios), ..Default::default() },
+        );
+        let r = e.run(&queries(5), 3).unwrap();
+        assert_eq!(r.planner, "none");
+        assert_eq!(r.plan_energy_j, 0.0);
+        let err = r.plan_error.as_ref().expect("planning error must be surfaced");
+        assert!(err.contains("no feasible device"), "unexpected error text: {err}");
+
+        // A healthy full-feature run reports its planner with no error.
+        let mut ok = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let ro = ok.run(&queries(5), 3).unwrap();
+        assert_eq!(ro.planner, "pgsam");
+        assert!(ro.plan_error.is_none());
     }
 
     #[test]

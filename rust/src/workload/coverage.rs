@@ -41,6 +41,25 @@ impl CoverageOracle {
         rng.chance(query.difficulty_p)
     }
 
+    /// Deterministic `(score, verified)` pair for one sample — the EAC
+    /// scoring signal of the selection cascade, derived in one pass so
+    /// the success draw is evaluated once per candidate. Verified
+    /// (successful) samples score in [0.6, 1.0), failures in
+    /// [0.0, 0.6), so score orders candidates *within* a verification
+    /// class without ever contradicting verification. The score stream
+    /// is independent of the success stream, so scores leak nothing
+    /// about other samples' outcomes.
+    pub fn sample_outcome(&self, query: &Query, sample_idx: u32) -> (f64, bool) {
+        let verified = self.sample_succeeds(query, sample_idx);
+        let mut rng = Pcg::new(
+            self.seed ^ query.id.wrapping_mul(0xD1B54A32D192ED03),
+            0x5C05E ^ (sample_idx as u64 + 1),
+        );
+        let u = rng.next_f64();
+        let score = if verified { 0.6 + 0.4 * u } else { 0.6 * u };
+        (score, verified)
+    }
+
     /// Evaluate a query with `s` samples.
     pub fn evaluate(&self, query: &Query, s: u32) -> QueryOutcome {
         let successes = (0..s).filter(|&i| self.sample_succeeds(query, i)).count() as u32;
@@ -129,6 +148,25 @@ mod tests {
             let out = o.evaluate(q, 20);
             assert!(out.successes <= out.samples_run);
             assert_eq!(out.samples_run, 20);
+        }
+    }
+
+    #[test]
+    fn sample_scores_deterministic_bounded_and_class_separated() {
+        let qs = queries(50);
+        let o = CoverageOracle::new(7);
+        for q in &qs {
+            for i in 0..10u32 {
+                let (s, verified) = o.sample_outcome(q, i);
+                assert_eq!((s, verified), o.sample_outcome(q, i), "outcome must be deterministic");
+                assert_eq!(verified, o.sample_succeeds(q, i), "verified bit must agree");
+                assert!((0.0..1.0).contains(&s), "score {s} out of range");
+                if verified {
+                    assert!(s >= 0.6, "verified sample scored {s}");
+                } else {
+                    assert!(s < 0.6, "failed sample scored {s}");
+                }
+            }
         }
     }
 

@@ -175,6 +175,95 @@ fn prop_pgsam_within_five_percent_of_optimal_on_small_spaces() {
 }
 
 #[test]
+fn golden_energy_table_matches_direct_power_model_on_all_presets() {
+    // Golden regression pin for the PR 1 memoization substrate: every
+    // cached `(stage kind, device)` energy/seconds entry must equal the
+    // direct PowerModel/roofline computation BIT FOR BIT, on every fleet
+    // preset and a spread of model shapes — so future planner refactors
+    // cannot silently drift the memoized values.
+    use qeil::coordinator::energy_table::{EnergyTable, StageKind, TRANSFER_J_PER_BYTE};
+    use qeil::devices::power::PowerModel;
+    use qeil::devices::roofline::{Phase, Task};
+    use qeil::devices::spec::DevIdx;
+
+    for preset in FleetPreset::all() {
+        let fleet = Fleet::preset(preset);
+        for family in ModelFamily::all() {
+            for layers in [1usize, 4, 10] {
+                let shape = ModelShape::from_family(family, &meta(layers));
+                let table = EnergyTable::build(&fleet, &shape);
+                assert_eq!(table.n_devices(), fleet.len());
+                assert_eq!(table.n_layers(), layers);
+                assert_eq!(table.n_stages(), layers + 2);
+                let kinds = [
+                    (StageKind::Embedding, &shape.embedding),
+                    (StageKind::Layer, &shape.per_layer),
+                    (StageKind::LmHead, &shape.lm_head),
+                ];
+                for (kind, cost) in kinds {
+                    // The exact task the table builder evaluates.
+                    let task = Task {
+                        phase: Phase::Decode,
+                        flops: cost.flops,
+                        bytes: cost.bytes,
+                        mem_gb: cost.mem_gb,
+                        launches: 1,
+                    };
+                    assert_eq!(
+                        table.mem_gb(kind).to_bits(),
+                        cost.mem_gb.to_bits(),
+                        "{preset:?}/{family:?}/L{layers}: stage memory drifted"
+                    );
+                    for (i, spec) in fleet.devices().iter().enumerate() {
+                        let idx = DevIdx(i as u16);
+                        let direct_e = PowerModel::energy_for(spec, &task, 1.0);
+                        let direct_s = task.seconds_on(spec, 1.0);
+                        assert_eq!(
+                            table.energy(kind, idx).to_bits(),
+                            direct_e.to_bits(),
+                            "{preset:?}/{family:?}/L{layers}/{}: energy({kind:?}) drifted: \
+                             cached {} vs direct {direct_e}",
+                            spec.id,
+                            table.energy(kind, idx)
+                        );
+                        assert_eq!(
+                            table.seconds(kind, idx).to_bits(),
+                            direct_s.to_bits(),
+                            "{preset:?}/{family:?}/L{layers}/{}: seconds({kind:?}) drifted",
+                            spec.id
+                        );
+                        assert_eq!(
+                            table.capacity_gb(idx).to_bits(),
+                            spec.mem_gb.to_bits(),
+                            "{preset:?}/{family:?}: capacity drifted for {}",
+                            spec.id
+                        );
+                    }
+                }
+                // Boundary-crossing energy is the shape's activation
+                // bytes at the fixed interconnect figure.
+                assert_eq!(
+                    table.transfer_j().to_bits(),
+                    (shape.boundary_bytes * TRANSFER_J_PER_BYTE).to_bits(),
+                    "{preset:?}/{family:?}/L{layers}: transfer energy drifted"
+                );
+                // And a single-device plan's full-sweep energy is the
+                // exact stage sum (no crossings).
+                let plan = vec![DevIdx(0); layers + 2];
+                let expect = table.energy(StageKind::Embedding, DevIdx(0))
+                    + layers as f64 * table.energy(StageKind::Layer, DevIdx(0))
+                    + table.energy(StageKind::LmHead, DevIdx(0));
+                let swept = table.plan_energy_j(&plan);
+                assert!(
+                    (swept - expect).abs() <= 1e-12 * expect.abs().max(1.0),
+                    "{preset:?}/{family:?}/L{layers}: plan sweep {swept} vs stage sum {expect}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
 fn prop_batcher_conserves_samples() {
     check("batcher conservation", 300, |rng| {
         let n_samples = rng.below(200) as u32;

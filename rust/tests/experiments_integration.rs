@@ -41,6 +41,94 @@ fn safety_tables_reproduce_guarantees() {
 }
 
 #[test]
+fn table4_cascade_rung_dominates_the_adaptive_budget_rung() {
+    // The new seventh rung: with `selection_cascade` enabled the sweep
+    // must show strictly lower total energy at equal-or-better pass@k
+    // than the adaptive-sample-budget rung, and be monotone in IPW
+    // relative to it. (Verified-winner stops are exact for pass@k and
+    // CSVET futility never fires inside S = 20, so the cascade can only
+    // remove wasted decode work.)
+    let t = run_experiment("t4", 100, 0).unwrap();
+    assert_eq!(t.rows.len(), 7, "Table 4 must have seven rungs");
+    assert_eq!(t.rows[4][0], "+ Adaptive Sample Budget");
+    assert_eq!(t.rows[5][0], "+ Safety Constraints");
+    assert_eq!(t.rows[6][0], "+ Selection Cascade");
+    let cell = |r: usize, c: usize| -> f64 { t.rows[r][c].parse().unwrap() };
+    assert!(
+        cell(6, 2) < cell(4, 2),
+        "cascade energy {} must be strictly below adaptive-budget energy {}",
+        cell(6, 2),
+        cell(4, 2)
+    );
+    assert!(
+        cell(6, 1) >= cell(4, 1),
+        "cascade pass@k {} fell below adaptive-budget pass@k {}",
+        cell(6, 1),
+        cell(4, 1)
+    );
+    assert!(
+        cell(6, 3) >= cell(4, 3),
+        "cascade IPW {} not monotone vs adaptive-budget IPW {}",
+        cell(6, 3),
+        cell(4, 3)
+    );
+    // Isolation: rungs 6 and 7 differ ONLY in the selection_cascade
+    // flag, so this pair attributes the delta to the cascade alone (a
+    // future safety-cost change cannot mask or fake it here).
+    assert!(
+        cell(6, 2) < cell(5, 2),
+        "cascade-only energy delta missing: {} vs {}",
+        cell(6, 2),
+        cell(5, 2)
+    );
+    assert!(
+        cell(6, 1) >= cell(5, 1),
+        "cascade-only pass@k regressed: {} vs {}",
+        cell(6, 1),
+        cell(5, 1)
+    );
+}
+
+#[test]
+fn run_metrics_carry_planner_and_cascade_trail() {
+    use qeil::config::ExperimentConfig;
+    use qeil::experiments::runner::run_config;
+    use qeil::workload::datasets::{Dataset, ModelFamily};
+
+    let cfg = ExperimentConfig {
+        queries: 40,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    };
+    let m = run_config(&cfg).unwrap();
+    // Planner trail serializes through RunMetrics…
+    assert_eq!(m.planner, "pgsam");
+    assert!(m.plan_energy_j > 0.0);
+    assert!(m.plan_error.is_none());
+    // …and so does the cascade trail.
+    assert!(m.cascade_enabled);
+    assert!(m.cascade_samples_drawn >= 40, "every query draws at least one sample");
+    assert!(m.cascade_samples_drawn <= m.cascade_samples_budgeted);
+    assert!(m.cascade_energy_saved_kj > 0.0);
+    assert_eq!(
+        m.cascade_success_stops + m.cascade_futility_stops + m.cascade_exhausted_stops,
+        40,
+        "exactly one stop per query"
+    );
+
+    // With the cascade off the trail is absent and zeroed.
+    let mut off = cfg.clone();
+    off.features.selection_cascade = false;
+    let m_off = run_config(&off).unwrap();
+    assert!(!m_off.cascade_enabled);
+    assert_eq!(m_off.cascade_samples_budgeted, 0);
+    assert_eq!(m_off.cascade_samples_drawn, 0);
+    assert!(
+        m.mean_samples <= m_off.mean_samples,
+        "cascade must never draw more samples than the full budget"
+    );
+}
+
+#[test]
 fn results_are_seed_stable() {
     let a = run_experiment("t3", 100, 5).unwrap();
     let b = run_experiment("t3", 100, 5).unwrap();

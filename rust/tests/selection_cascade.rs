@@ -1,0 +1,263 @@
+//! Property tests over the EAC/ARDE/CSVET selection cascade, plus
+//! sim-level guarantees: on every fleet preset the cascade spends no
+//! more energy than the full budget and never costs coverage, and its
+//! decisions are deterministic under a fixed seed.
+
+use qeil::config::{ExperimentConfig, OrchestratorFeatures};
+use qeil::devices::fleet::FleetPreset;
+use qeil::experiments::runner::run_config;
+use qeil::prop_assert;
+use qeil::selection::{
+    Candidate, Csvet, CsvetConfig, CsvetDecision, SelectionCascade, StopReason,
+};
+use qeil::testing::check;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+
+fn cand(index: u32, lane: u32, score: f64, verified: bool, energy_j: f64) -> Candidate {
+    Candidate { index, lane, score, verified, energy_j }
+}
+
+#[test]
+fn prop_csvet_never_stops_before_its_confidence_threshold() {
+    // Whatever the stream, a stop must carry its justification: a
+    // verified sample for success stops; ≥ min_samples observations AND
+    // the anytime confidence bound for futility stops; the full budget
+    // for exhaustion.
+    check("csvet stop validity", 400, |rng| {
+        let budget = 1 + rng.below(60) as u32;
+        let par = 1 + rng.below(6) as u32;
+        let p = rng.range_f64(0.0, 0.4);
+        let stream: Vec<bool> = (0..budget).map(|_| rng.chance(p)).collect();
+        let cascade = SelectionCascade::default();
+        let cfg = cascade.config.csvet.clone();
+        let report =
+            cascade.run(budget, par, |i| cand(i, i % par, 0.5, stream[i as usize], 1.0));
+        prop_assert!(report.samples_drawn <= budget, "drew past the budget");
+        prop_assert!(report.samples_drawn >= 1, "budget >= 1 must draw");
+        let drawn = report.samples_drawn as usize;
+        match report.stop_reason {
+            StopReason::VerifiedWinner => {
+                prop_assert!(
+                    stream[..drawn].iter().any(|&v| v),
+                    "success stop without a verified sample in the drawn prefix"
+                );
+                prop_assert!(
+                    report.winner.as_ref().map(|w| w.verified) == Some(true),
+                    "winner of a success stop must be verified"
+                );
+            }
+            StopReason::Futility => {
+                prop_assert!(
+                    report.samples_drawn >= cfg.min_samples,
+                    "futility before min_samples"
+                );
+                prop_assert!(
+                    stream[..drawn].iter().all(|&v| !v),
+                    "futility despite an observed success"
+                );
+                // Re-derive the confidence state at the stop and verify
+                // the bound the stop claims.
+                let mut cs = Csvet::new(cfg.clone());
+                for &v in &stream[..drawn] {
+                    cs.observe(v);
+                }
+                let remaining = (budget - report.samples_drawn) as f64;
+                prop_assert!(
+                    cs.p_ucb() * remaining < cfg.futility_epsilon,
+                    "stopped without the bound: ucb {} × remaining {remaining}",
+                    cs.p_ucb()
+                );
+            }
+            StopReason::BudgetExhausted => {
+                prop_assert!(
+                    report.samples_drawn == budget,
+                    "exhaustion must draw the full budget"
+                );
+            }
+            StopReason::EmptyBudget => {
+                prop_assert!(false, "budget >= 1 can never be empty");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_winner_survives_from_the_drawn_pool() {
+    // The winner is always one of the drawn candidates, and with any
+    // verified sample present the winner is verified (EAC's verified
+    // bonus dominates energy discounts).
+    check("cascade winner membership", 200, |rng| {
+        let budget = 1 + rng.below(40) as u32;
+        let par = 1 + rng.below(5) as u32;
+        let stream: Vec<(f64, bool)> =
+            (0..budget).map(|_| (rng.next_f64(), rng.chance(0.2))).collect();
+        let cascade = SelectionCascade::default();
+        let report = cascade.run(budget, par, |i| {
+            let (score, verified) = stream[i as usize];
+            cand(i, i % par, score, verified, 0.5 + (i % 3) as f64 * 0.5)
+        });
+        let w = report.winner.as_ref().expect("non-empty budget has a winner");
+        prop_assert!(w.index < report.samples_drawn, "winner outside the drawn pool");
+        let drawn = report.samples_drawn as usize;
+        if stream[..drawn].iter().any(|&(_, v)| v) {
+            prop_assert!(w.verified, "a verified candidate was drawn but did not win");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn csvet_futility_never_fires_at_paper_scale_budgets() {
+    // The guarantee the Table 4 comparison rests on: within S ≤ 20 the
+    // default confidence sequence never futility-stops, so the cascade
+    // is exactly coverage-preserving there.
+    for budget in 1..=20u32 {
+        let cascade = SelectionCascade::default();
+        let report = cascade.run(budget, 4, |i| cand(i, i % 4, 0.3, false, 1.0));
+        assert_eq!(report.samples_drawn, budget, "budget {budget}");
+        assert_eq!(report.stop_reason, StopReason::BudgetExhausted, "budget {budget}");
+    }
+    // Direct CSVET view of the same property.
+    let mut cs = Csvet::new(CsvetConfig::default());
+    for i in 0..20u32 {
+        cs.observe(false);
+        assert_eq!(cs.decision(20 - i - 1), CsvetDecision::Continue);
+    }
+}
+
+#[test]
+fn cascade_energy_never_exceeds_full_budget_on_any_fleet_preset() {
+    // Sim-level property across every fleet preset: enabling the
+    // cascade lowers (or keeps) total energy at equal-or-better pass@k,
+    // and saves strictly on presets where queries stop early.
+    for preset in FleetPreset::all() {
+        let base = ExperimentConfig {
+            fleet: preset,
+            queries: 60,
+            seed: 0,
+            ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+        };
+        let on = run_config(&base).unwrap();
+        let off_cfg = ExperimentConfig {
+            features: OrchestratorFeatures {
+                selection_cascade: false,
+                ..OrchestratorFeatures::full()
+            },
+            ..base.clone()
+        };
+        let off = run_config(&off_cfg).unwrap();
+        assert!(
+            on.energy_kj <= off.energy_kj + 1e-9,
+            "{preset:?}: cascade energy {} > full-budget energy {}",
+            on.energy_kj,
+            off.energy_kj
+        );
+        assert!(
+            on.pass_at_k_pct >= off.pass_at_k_pct - 1e-9,
+            "{preset:?}: cascade lost coverage: {} vs {}",
+            on.pass_at_k_pct,
+            off.pass_at_k_pct
+        );
+        assert!(on.cascade_enabled && !off.cascade_enabled);
+        assert!(
+            on.cascade_samples_drawn <= on.cascade_samples_budgeted,
+            "{preset:?}: drew past the budget"
+        );
+        assert!(
+            on.cascade_samples_drawn < on.cascade_samples_budgeted,
+            "{preset:?}: solvable workloads must stop some queries early"
+        );
+        assert!(on.cascade_energy_saved_kj > 0.0, "{preset:?}");
+        assert_eq!(on.cascade_futility_stops, 0, "{preset:?}: futility inside S=20");
+    }
+}
+
+#[test]
+fn winner_is_deterministic_under_a_fixed_seed() {
+    // Cascade level: identical streams give identical reports.
+    let cascade = SelectionCascade::default();
+    let make = |i: u32| cand(i, i % 3, (i as f64 * 0.37) % 1.0, i % 11 == 7, 1.0);
+    let a = cascade.run(24, 3, make);
+    let b = cascade.run(24, 3, make);
+    assert_eq!(a.samples_drawn, b.samples_drawn);
+    assert_eq!(a.stop_reason, b.stop_reason);
+    assert_eq!(a.elimination_rounds, b.elimination_rounds);
+    assert_eq!(
+        a.winner.as_ref().map(|w| w.index),
+        b.winner.as_ref().map(|w| w.index)
+    );
+
+    // Sim level: a fixed config seed reproduces the whole cascade trail.
+    let cfg = ExperimentConfig {
+        queries: 40,
+        seed: 9,
+        ..ExperimentConfig::energy_aware(ModelFamily::Gpt2, Dataset::WikiText103)
+    };
+    let m1 = run_config(&cfg).unwrap();
+    let m2 = run_config(&cfg).unwrap();
+    assert_eq!(m1.cascade_samples_drawn, m2.cascade_samples_drawn);
+    assert_eq!(m1.cascade_success_stops, m2.cascade_success_stops);
+    assert_eq!(m1.pass_at_k_pct.to_bits(), m2.pass_at_k_pct.to_bits());
+    assert_eq!(m1.energy_kj.to_bits(), m2.energy_kj.to_bits());
+}
+
+#[test]
+fn degenerate_inputs_do_not_panic() {
+    let cascade = SelectionCascade::default();
+
+    // 0 samples: nothing drawn, no winner, labeled empty.
+    let r0 = cascade.run(0, 4, |i| cand(i, 0, 0.5, true, 1.0));
+    assert_eq!(r0.samples_drawn, 0);
+    assert!(r0.winner.is_none());
+    assert_eq!(r0.stop_reason, StopReason::EmptyBudget);
+
+    // 1 candidate, unverified: it wins by exhaustion.
+    let r1 = cascade.run(1, 4, |i| cand(i, 0, 0.2, false, 1.0));
+    assert_eq!(r1.samples_drawn, 1);
+    assert_eq!(r1.stop_reason, StopReason::BudgetExhausted);
+    assert_eq!(r1.winner.as_ref().map(|w| w.index), Some(0));
+
+    // 1 candidate, verified: a verified-winner stop.
+    let r1v = cascade.run(1, 4, |i| cand(i, 0, 0.9, true, 1.0));
+    assert_eq!(r1v.stop_reason, StopReason::VerifiedWinner);
+    assert_eq!(r1v.winner.as_ref().map(|w| w.index), Some(0));
+
+    // All-tied scores: deterministic index tie-break picks the first.
+    let rt = cascade.run(8, 2, |i| cand(i, i % 2, 0.5, false, 1.0));
+    assert_eq!(rt.samples_drawn, 8);
+    assert_eq!(rt.winner.as_ref().map(|w| w.index), Some(0));
+
+    // Zero parallelism degrades to serial waves.
+    let rz = cascade.run(5, 0, |i| cand(i, 0, 0.1, false, 1.0));
+    assert_eq!(rz.samples_drawn, 5);
+
+    // NaN scores must not break the total order or panic — and the
+    // sanitized NaN candidate must lose to every real-scored one.
+    let rn = cascade.run(4, 2, |i| {
+        cand(i, i % 2, if i == 1 { f64::NAN } else { 0.5 }, false, 1.0)
+    });
+    assert_eq!(rn.winner.as_ref().map(|w| w.index), Some(0));
+}
+
+#[test]
+fn prop_cascade_monotone_in_budget_on_all_failure_streams() {
+    // With no successes, more budget never draws fewer samples (waves
+    // only extend), and inside S ≤ 20 drawn == budget exactly.
+    check("cascade budget monotonicity", 100, |rng| {
+        let par = 1 + rng.below(6) as u32;
+        let cascade = SelectionCascade::default();
+        let mut prev = 0u32;
+        for budget in [1u32, 2, 5, 10, 20] {
+            let r = cascade.run(budget, par, |i| cand(i, i % par, 0.4, false, 1.0));
+            prop_assert!(
+                r.samples_drawn >= prev,
+                "drawn fell from {prev} to {} at budget {budget}",
+                r.samples_drawn
+            );
+            prop_assert!(r.samples_drawn == budget, "early stop inside S<=20");
+            prev = r.samples_drawn;
+        }
+        Ok(())
+    });
+}

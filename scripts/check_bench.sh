@@ -1,0 +1,94 @@
+#!/usr/bin/env bash
+# Perf regression gate over the orchestrator micro-bench suite.
+#
+# Runs `cargo bench --bench orchestrator` (which writes
+# BENCH_orchestrator.json at the repo root), diffs it against the
+# committed baseline at benches/BENCH_orchestrator.baseline.json, and
+# FAILS when any gated entry (`pgsam_assignment*`, `energy_table_build*`
+# — the two planner-substrate hot paths ROADMAP.md tracks) regresses by
+# more than MAX_RATIO (default 10x) in mean time. Non-gated entries are
+# reported but never fail the run (they are too machine-sensitive for a
+# hard gate).
+#
+# Usage:
+#   scripts/check_bench.sh            # bench + compare
+#   scripts/check_bench.sh --no-run   # compare an existing BENCH_orchestrator.json
+#   MAX_RATIO=5 scripts/check_bench.sh
+#   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
+#
+# First run on a machine with no committed baseline: the current result
+# is copied to the baseline path and the run exits 0 — commit the
+# baseline to arm the gate. CI should set REQUIRE_BASELINE=1 so a
+# missing baseline fails instead of silently bootstrapping.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+CURRENT=BENCH_orchestrator.json
+BASELINE=benches/BENCH_orchestrator.baseline.json
+MAX_RATIO="${MAX_RATIO:-10}"
+
+if [[ "${1:-}" != "--no-run" ]]; then
+    cargo bench --bench orchestrator
+fi
+
+if [[ ! -f "$CURRENT" ]]; then
+    echo "error: $CURRENT not found (run 'cargo bench --bench orchestrator' first)" >&2
+    exit 2
+fi
+
+if [[ ! -f "$BASELINE" ]]; then
+    if [[ "${REQUIRE_BASELINE:-0}" == "1" ]]; then
+        echo "error: baseline $BASELINE missing and REQUIRE_BASELINE=1 (CI mode)" >&2
+        echo "run the gate once on a toolchain-bearing machine and commit the baseline." >&2
+        exit 3
+    fi
+    cp "$CURRENT" "$BASELINE"
+    echo "no committed baseline found — bootstrapped $BASELINE from this run."
+    echo "commit it to arm the regression gate (CI should set REQUIRE_BASELINE=1)."
+    exit 0
+fi
+
+python3 - "$CURRENT" "$BASELINE" "$MAX_RATIO" <<'PY'
+import json
+import sys
+
+cur_path, base_path, max_ratio = sys.argv[1], sys.argv[2], float(sys.argv[3])
+GATED_PREFIXES = ("pgsam_assignment", "energy_table_build")
+
+
+def load(path):
+    with open(path) as f:
+        doc = json.load(f)
+    return {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
+
+
+cur, base = load(cur_path), load(base_path)
+failed = False
+print(f"bench gate: mean-time ratio vs {base_path} (fail gated > {max_ratio:g}x)")
+for name in sorted(set(base) | set(cur)):
+    gated = name.startswith(GATED_PREFIXES)
+    if name not in cur:
+        status = "MISSING" if gated else "missing"
+        if gated:
+            failed = True
+        print(f"  {status:<10} {name} (in baseline, absent from current run)")
+        continue
+    if name not in base:
+        print(f"  {'new':<10} {name:<48} {cur[name] / 1e3:10.1f} us (no baseline)")
+        continue
+    ratio = cur[name] / max(base[name], 1.0)
+    status = "ok"
+    if gated and ratio > max_ratio:
+        status = "REGRESSION"
+        failed = True
+    tag = " [gated]" if gated else ""
+    print(
+        f"  {status:<10} {name:<48} {base[name] / 1e3:10.1f} us -> "
+        f"{cur[name] / 1e3:10.1f} us  ({ratio:5.2f}x){tag}"
+    )
+if failed:
+    print("bench gate FAILED", file=sys.stderr)
+    sys.exit(1)
+print("bench gate passed")
+PY
