@@ -61,6 +61,14 @@ pub struct OrchestratorFeatures {
     /// winner (or on confidence-sequence futility), pick the winner
     /// energy-aware (see [`crate::selection`]).
     pub selection_cascade: bool,
+    /// Event-driven re-planning with the warm-start plan cache: the
+    /// layer planner runs only on safety-state transitions (failure,
+    /// recovery, shedding-band change), coincident transitions batch
+    /// into one anneal, previously seen health signatures hit the
+    /// cache, and misses warm-restart PGSAM from a sibling Pareto
+    /// archive (see [`crate::coordinator::plan_cache`]). Off = the
+    /// legacy once-per-report cold plan.
+    pub plan_cache: bool,
 }
 
 impl OrchestratorFeatures {
@@ -74,6 +82,7 @@ impl OrchestratorFeatures {
             adaptive_sample_budget: true,
             safety: true,
             selection_cascade: true,
+            plan_cache: true,
         }
     }
 
@@ -87,6 +96,7 @@ impl OrchestratorFeatures {
             adaptive_sample_budget: false,
             safety: false,
             selection_cascade: false,
+            plan_cache: false,
         }
     }
 }
@@ -187,6 +197,7 @@ impl ExperimentConfig {
                             "adaptive_sample_budget" => cfg.features.adaptive_sample_budget = b,
                             "safety" => cfg.features.safety = b,
                             "selection_cascade" => cfg.features.selection_cascade = b,
+                            "plan_cache" => cfg.features.plan_cache = b,
                             other => bail!("unknown feature flag {other:?}"),
                         }
                     }
@@ -283,6 +294,15 @@ mod tests {
         let cfg =
             ExperimentConfig::from_json(r#"{"features": {"selection_cascade": false}}"#).unwrap();
         assert!(!cfg.features.selection_cascade);
+        assert!(cfg.features.pgsam_planner, "other full() flags stay on");
+    }
+
+    #[test]
+    fn plan_cache_flag_parses_and_defaults() {
+        assert!(OrchestratorFeatures::full().plan_cache);
+        assert!(!OrchestratorFeatures::baseline().plan_cache);
+        let cfg = ExperimentConfig::from_json(r#"{"features": {"plan_cache": false}}"#).unwrap();
+        assert!(!cfg.features.plan_cache);
         assert!(cfg.features.pgsam_planner, "other full() flags stay on");
     }
 

@@ -46,8 +46,19 @@ impl Batcher {
 impl Batcher {
     /// Distribute samples proportionally to per-device service rates
     /// (1 / step seconds): faster devices take more samples, minimizing
-    /// the decode makespan. Every device in `devices` gets its share
-    /// rounded largest-remainder so all samples are assigned.
+    /// the decode makespan.
+    ///
+    /// Apportionment is a highest-averages (Jefferson / D'Hondt)
+    /// divisor *sequence*: sample `s` goes to the device maximizing
+    /// `rate / (assigned + 1)` at step `s`, ties to the lowest index.
+    /// Unlike the largest-remainder rounding this replaced, the
+    /// sequence is **prefix-stable**: the assignment of the first `n`
+    /// samples is identical under every total ≥ `n`, so per-device
+    /// shares are componentwise monotone in the sample count and a
+    /// deadline-bound lane prefix can never lose an already-assigned
+    /// sample when the budget shrinks — the ROADMAP apportionment-
+    /// stability sharp edge (Alabama paradox) the SLA accounting
+    /// depends on.
     pub fn assign_weighted(
         &self,
         n_samples: u32,
@@ -56,32 +67,26 @@ impl Batcher {
     ) -> Vec<Batch> {
         assert!(!devices.is_empty(), "batcher needs at least one device");
         assert_eq!(devices.len(), rates.len());
-        let total_rate: f64 = rates.iter().sum();
-        if total_rate <= 0.0 {
+        let clean: Vec<f64> =
+            rates.iter().map(|r| if r.is_finite() && *r > 0.0 { *r } else { 0.0 }).collect();
+        if clean.iter().sum::<f64>() <= 0.0 {
             return self.assign(n_samples, devices);
         }
-        // Largest-remainder apportionment.
-        let shares: Vec<f64> =
-            rates.iter().map(|r| n_samples as f64 * r / total_rate).collect();
-        let mut counts: Vec<u32> = shares.iter().map(|s| s.floor() as u32).collect();
-        let mut remaining = n_samples - counts.iter().sum::<u32>();
-        let mut order: Vec<usize> = (0..devices.len()).collect();
-        order.sort_by(|&a, &b| {
-            (shares[b] - shares[b].floor()).total_cmp(&(shares[a] - shares[a].floor()))
-        });
-        for &i in order.iter().cycle().take(devices.len() * 4) {
-            if remaining == 0 {
-                break;
+        let mut per_device: Vec<Vec<u32>> = vec![Vec::new(); devices.len()];
+        for s in 0..n_samples {
+            let mut best = 0usize;
+            let mut best_avg = f64::NEG_INFINITY;
+            for (i, &rate) in clean.iter().enumerate() {
+                let avg = rate / (per_device[i].len() + 1) as f64;
+                if avg > best_avg {
+                    best_avg = avg;
+                    best = i;
+                }
             }
-            counts[i] += 1;
-            remaining -= 1;
+            per_device[best].push(s);
         }
-        // Assign contiguous sample index ranges per device.
         let mut out = Vec::new();
-        let mut next = 0u32;
-        for (di, &count) in counts.iter().enumerate() {
-            let samples: Vec<u32> = (next..next + count).collect();
-            next += count;
+        for (di, samples) in per_device.into_iter().enumerate() {
             for chunk in samples.chunks(self.max_batch.max(1)) {
                 out.push(Batch { device: devices[di].clone(), samples: chunk.to_vec() });
             }
@@ -168,6 +173,58 @@ mod tests {
         assert_eq!(count(0), 16);
         assert_eq!(count(1), 4);
         assert_eq!(count(2), 4);
+    }
+
+    /// Device index of every sample, in index order.
+    fn sample_devices(batches: &[Batch], devices: &[DeviceId], n: u32) -> Vec<usize> {
+        let mut owner = vec![usize::MAX; n as usize];
+        for batch in batches {
+            let di = devices.iter().position(|d| d == &batch.device).unwrap();
+            for &s in &batch.samples {
+                owner[s as usize] = di;
+            }
+        }
+        assert!(owner.iter().all(|&d| d != usize::MAX), "unassigned sample");
+        owner
+    }
+
+    #[test]
+    fn weighted_assignment_is_prefix_stable() {
+        // The core apportionment-stability property: the first n
+        // samples land on the same devices under every total ≥ n, so
+        // shares are componentwise monotone in the sample count (no
+        // Alabama paradox) and per-device index lists are prefixes.
+        let b = Batcher { max_batch: 100 };
+        let devices = devs(4);
+        let rates = [3.0, 2.0, 1.25, 0.5];
+        let n_max = 48u32;
+        let full = sample_devices(&b.assign_weighted(n_max, &devices, &rates), &devices, n_max);
+        let mut prev_counts = vec![0u32; devices.len()];
+        for n in 0..=n_max {
+            let owner = sample_devices(&b.assign_weighted(n, &devices, &rates), &devices, n);
+            assert_eq!(owner[..], full[..n as usize], "n={n}: assignment not a prefix");
+            let mut counts = vec![0u32; devices.len()];
+            for &d in &owner {
+                counts[d] += 1;
+            }
+            for (d, (&c, &p)) in counts.iter().zip(prev_counts.iter()).enumerate() {
+                assert!(c >= p, "device {d} lost a sample going from {} to {n}", n - 1);
+            }
+            prev_counts = counts;
+        }
+    }
+
+    #[test]
+    fn weighted_ties_break_to_lowest_index_deterministically() {
+        let b = Batcher { max_batch: 100 };
+        let devices = devs(3);
+        let batches1 = b.assign_weighted(7, &devices, &[1.0, 1.0, 1.0]);
+        let batches2 = b.assign_weighted(7, &devices, &[1.0, 1.0, 1.0]);
+        let o1 = sample_devices(&batches1, &devices, 7);
+        assert_eq!(o1, sample_devices(&batches2, &devices, 7), "must be deterministic");
+        // Equal rates degrade to round-robin: 3/2/2 with the extra
+        // sample on the lowest index.
+        assert_eq!(o1, vec![0, 1, 2, 0, 1, 2, 0]);
     }
 
     #[test]

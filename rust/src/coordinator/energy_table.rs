@@ -207,8 +207,9 @@ impl EnergyTable {
 }
 
 /// Memoization key for one model shape: the planner-relevant fields,
-/// bit-exact. Two shapes with identical costs share one table.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// bit-exact. Two shapes with identical costs share one table. `Hash`
+/// lets the plan cache key on it directly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ShapeKey {
     n_layers: usize,
     costs: [[u64; 3]; 3],

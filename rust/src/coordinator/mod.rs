@@ -17,6 +17,7 @@ pub mod energy_table;
 pub mod exact;
 pub mod orchestrator;
 pub mod pgsam;
+pub mod plan_cache;
 pub mod ranking;
 pub mod sample_budget;
 
@@ -26,4 +27,5 @@ pub use disaggregation::PhasePlan;
 pub use energy_table::{EnergyTable, StageKind};
 pub use orchestrator::{Orchestrator, PlanError};
 pub use pgsam::{PgsamConfig, PgsamOutcome};
+pub use plan_cache::{CachedPlan, PlanCache, PlanCacheStats, PlanKey, PlannerKind};
 pub use sample_budget::SampleBudgeter;

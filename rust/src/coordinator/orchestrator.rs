@@ -22,7 +22,7 @@ use crate::devices::spec::{DevIdx, DeviceId};
 
 use super::allocation::{Allocation, ModelShape};
 use super::energy_table::{EnergyTable, ShapeKey, StageKind, TRANSFER_J_PER_BYTE};
-use super::pgsam::{self, PgsamConfig};
+use super::pgsam::{self, ParetoPoint, PgsamConfig};
 
 /// Relative half-width of the energy band inside which two devices count
 /// as tied and the deterministic `(priority, id)` order decides. A strict
@@ -158,6 +158,32 @@ impl<'f> Orchestrator<'f> {
         let caps = self.effective_caps();
         let usable = self.usable_mask();
         Ok(pgsam::anneal(&table, &caps, &usable, seed, cfg))
+    }
+
+    /// Warm-restarted PGSAM — the plan-cache path. `warm` is a Pareto
+    /// archive from a previous anneal of the same model shape (any
+    /// health signature); its points are re-validated against the
+    /// current exclusions/capacities and seed the restart. Pass the
+    /// cold `cfg`: the anneal self-reduces to
+    /// [`PgsamConfig::warm_restart`]'s budget only when a feasible
+    /// warm point actually engages (see [`pgsam::anneal_warm`]).
+    ///
+    /// Energy floor: never worse than the greedy seed AND never worse
+    /// than the best still-feasible archived plan — so with the archive
+    /// of a cold anneal over the same key, the warm restart provably
+    /// never returns a worse allocation than that cold anneal (see
+    /// [`pgsam::anneal_warm`]).
+    pub fn pgsam_outcome_warm(
+        &self,
+        shape: &ModelShape,
+        cfg: &PgsamConfig,
+        warm: &[ParetoPoint],
+    ) -> Result<pgsam::PgsamOutcome, PlanError> {
+        let table = self.energy_table(shape);
+        let seed = self.plan_greedy(&table)?;
+        let caps = self.effective_caps();
+        let usable = self.usable_mask();
+        Ok(pgsam::anneal_warm(&table, &caps, &usable, seed, warm, cfg))
     }
 
     /// Greedy plan over interned indices (the annealer's seed state).

@@ -95,6 +95,16 @@ impl PgsamConfig {
         PgsamConfig { iters: 5_000, ..Default::default() }
     }
 
+    /// The reduced budget for a warm restart from a cached Pareto
+    /// archive (see [`anneal_warm`]): the walk starts at — or next to —
+    /// a previously annealed optimum, so an eighth of the cold budget
+    /// suffices to re-converge, and the energy floor (never worse than
+    /// the greedy seed or the best feasible archived plan) holds at any
+    /// budget, including zero.
+    pub fn warm_restart(&self) -> Self {
+        PgsamConfig { iters: (self.iters / 8).max(8), ..self.clone() }
+    }
+
     /// An explicit anytime budget.
     pub fn with_budget(iters: u32) -> Self {
         PgsamConfig { iters, ..Default::default() }
@@ -131,6 +141,11 @@ pub struct PgsamOutcome {
     pub archive: Vec<ParetoPoint>,
     pub proposed: u64,
     pub accepted: u64,
+    /// Whether a warm-start archive point actually engaged — seeded the
+    /// walk and reduced the budget (see [`anneal_warm`]). Always false
+    /// for a cold [`anneal`]; the telemetry consumers report THIS, not
+    /// the mere existence of a hint.
+    pub warm_engaged: bool,
 }
 
 /// `a` Pareto-dominates `b` (≤ on all objectives, < on at least one).
@@ -265,6 +280,38 @@ pub fn anneal(
     seed_plan: Vec<DevIdx>,
     cfg: &PgsamConfig,
 ) -> PgsamOutcome {
+    anneal_warm(table, caps, usable, seed_plan, &[], cfg)
+}
+
+/// [`anneal`] with a warm-start archive (the plan-cache restart
+/// schedule): archived Pareto points from a previous anneal of the same
+/// model shape are re-validated against the *current* `caps`/`usable`
+/// state and re-scored on `table` (drift-free); the best still-feasible
+/// one is admitted to the initial archive and becomes the walk's start
+/// state instead of the greedy seed.
+///
+/// Pass the COLD config: when a feasible warm point engages, the anneal
+/// self-reduces to [`PgsamConfig::warm_restart`]'s budget (the point of
+/// the restart schedule); when the whole archive is stale it runs the
+/// full budget, identical to a cold [`anneal`].
+///
+/// Energy floor, by construction: the returned plan is never worse than
+/// the greedy seed (PGSAM's standing contract) AND never worse than the
+/// best still-feasible warm point — `best` starts at the minimum of
+/// both and only ever improves. So when `warm` is the archive of a cold
+/// anneal over the same (fleet health, shape, config) key — which
+/// always contains that run's winning plan — the warm restart provably
+/// never returns a worse allocation than the cold path, at any budget.
+/// Infeasible warm points (a device failed, a capacity tightened) are
+/// dropped, never repaired: a stale hint is useless, not unsafe.
+pub fn anneal_warm(
+    table: &EnergyTable,
+    caps: &[f64],
+    usable: &[bool],
+    seed_plan: Vec<DevIdx>,
+    warm: &[ParetoPoint],
+    cfg: &PgsamConfig,
+) -> PgsamOutcome {
     let n_stages = seed_plan.len();
     debug_assert_eq!(n_stages, table.n_stages());
     let n_devices = table.n_devices();
@@ -289,6 +336,79 @@ pub fn anneal(
     let mut best_energy = st.energy_j;
     let mut archive: Vec<ParetoPoint> = Vec::new();
     archive_insert(&mut archive, st.point(), cfg.archive_cap);
+
+    // Pick the best still-feasible warm point with one cheap pass per
+    // candidate (memory + energy in a single stage walk — no State
+    // rebuild), then admit just that point: it alone carries the
+    // cold-path floor, and one relocation target is all the restart
+    // needs. Re-scoring the whole archive through `State::load` would
+    // cost more table reads than the reduced anneal itself — exactly
+    // the overhead the warm restart exists to avoid. The cold path
+    // (`warm` empty) pays nothing here.
+    let mut warm_best: Option<(f64, &ParetoPoint)> = None;
+    let mut scratch_gb = if warm.is_empty() { Vec::new() } else { vec![0.0; n_devices] };
+    for point in warm {
+        if point.plan.len() != n_stages {
+            continue; // stale hint from another shape — drop it
+        }
+        if point.plan.iter().any(|d| d.as_usize() >= n_devices || !usable[d.as_usize()]) {
+            continue; // uses a failed/excluded device under this state
+        }
+        for gb in scratch_gb.iter_mut() {
+            *gb = 0.0;
+        }
+        let mut energy = 0.0;
+        for (stage, &dev) in point.plan.iter().enumerate() {
+            let kind = table.kind_of(stage);
+            scratch_gb[dev.as_usize()] += table.mem_gb(kind);
+            energy += table.energy(kind, dev);
+            if stage > 0 && point.plan[stage - 1] != dev {
+                energy += table.transfer_j();
+            }
+        }
+        // Strict, matching the move-feasibility check and
+        // `Allocation::check_memory`: a marginally-over point must be
+        // dropped, never admitted past the contract it would violate.
+        if scratch_gb.iter().zip(caps.iter()).any(|(u, c)| *u > *c) {
+            continue; // violates a (possibly tightened) capacity
+        }
+        // Strict `<` keeps the first-seen of equal-energy points —
+        // deterministic under the archive's stored order.
+        if warm_best.as_ref().map_or(true, |(e, _)| energy < *e) {
+            warm_best = Some((energy, point));
+        }
+    }
+    let mut warm_engaged = false;
+    if let Some((energy, point)) = warm_best {
+        // Engage only when the archived point is at least as good as
+        // the greedy seed: it then FLOORS the walk, which is what makes
+        // the reduced budget below safe — and the same-key cold winner
+        // always qualifies (cold's best is ≤ its own greedy seed), so
+        // the warm-≤-cold contract is preserved. A strictly-worse point
+        // cannot floor anything and is ignored outright: the anneal
+        // stays bit-identical to the cold path rather than trading its
+        // budget for a hint with nothing to offer.
+        if energy <= best_energy {
+            st.load(&point.plan);
+            archive_insert(&mut archive, st.point(), cfg.archive_cap);
+            warm_engaged = true;
+            if energy < best_energy {
+                // The walk starts here (st already holds the warm plan).
+                best_energy = st.energy_j;
+                best_plan.copy_from_slice(&st.plan);
+            } else {
+                st.load(&seed_plan); // equal energy: keep the seed start
+            }
+        }
+    }
+    // Budget: only an ENGAGED warm start re-converges at the reduced
+    // [`PgsamConfig::warm_restart`] budget. When no archived point
+    // survives filtering at-or-below the seed (the hint is stale — e.g.
+    // every plan used a now-failed device), the anneal runs the
+    // caller's full budget: a useless hint must never cost plan quality
+    // relative to the cold path it replaced.
+    let cfg = if warm_engaged { cfg.warm_restart() } else { cfg.clone() };
+    let cfg = &cfg;
 
     let mut proposed = 0u64;
     let mut accepted = 0u64;
@@ -426,7 +546,15 @@ pub fn anneal(
     }
 
     let latency_s = table.plan_latency_s(&best_plan);
-    PgsamOutcome { plan: best_plan, energy_j: best_energy, latency_s, archive, proposed, accepted }
+    PgsamOutcome {
+        plan: best_plan,
+        energy_j: best_energy,
+        latency_s,
+        archive,
+        proposed,
+        accepted,
+        warm_engaged,
+    }
 }
 
 #[cfg(test)]
@@ -547,6 +675,75 @@ mod tests {
             .assign_pgsam(&s, &PgsamConfig { seed: 3, ..PgsamConfig::thorough() })
             .unwrap();
         assert!(thorough <= greedy_e * (1.0 + 1e-9));
+    }
+
+    #[test]
+    fn warm_restart_never_worse_than_its_archive_or_seed() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let cfg = PgsamConfig::default().with_seed(5);
+        let cold = orch.pgsam_outcome(&s, &cfg).unwrap();
+        assert!(cfg.warm_restart().iters < cfg.iters);
+        let warm = orch.pgsam_outcome_warm(&s, &cfg, &cold.archive).unwrap();
+        // The cold archive contains the cold winner, so the warm floor
+        // is the cold result — at the self-reduced (eighth) budget.
+        assert!(
+            warm.energy_j <= cold.energy_j * (1.0 + 1e-9),
+            "warm {} > cold {}",
+            warm.energy_j,
+            cold.energy_j
+        );
+        assert!(warm.warm_engaged, "the same-key cold winner must engage");
+        let greedy = orch.assign(&s).unwrap();
+        assert!(warm.energy_j <= orch.allocation_energy_j(&s, &greedy) * (1.0 + 1e-9));
+        Allocation::from_indices(&fleet, &warm.plan).check_memory(&s, &fleet).unwrap();
+        // Deterministic: the same warm restart reproduces bit-exactly.
+        let again = orch.pgsam_outcome_warm(&s, &cfg, &cold.archive).unwrap();
+        assert_eq!(warm.plan, again.plan);
+        assert_eq!(warm.energy_j.to_bits(), again.energy_j.to_bits());
+    }
+
+    #[test]
+    fn warm_restart_drops_infeasible_archive_points() {
+        // Archive from the healthy fleet; warm-restart after the NPU
+        // fails: any archived plan touching the NPU must be discarded,
+        // and the result must still be feasible and ≤ the degraded
+        // greedy seed.
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let orch = Orchestrator::new(&fleet);
+        let s = shape(ModelFamily::Lfm2, 10);
+        let cfg = PgsamConfig::default().with_seed(5);
+        let cold = orch.pgsam_outcome(&s, &cfg).unwrap();
+        let npu = fleet.idx_of(&"npu0".into()).unwrap();
+
+        let mut degraded = Orchestrator::new(&fleet);
+        degraded.exclude(&"npu0".into());
+        let warm = degraded.pgsam_outcome_warm(&s, &cfg, &cold.archive).unwrap();
+        assert!(warm.plan.iter().all(|&d| d != npu), "plan uses the failed device");
+        for p in &warm.archive {
+            assert!(p.plan.iter().all(|&d| d != npu), "archive keeps an infeasible point");
+        }
+        let greedy = degraded.assign(&s).unwrap();
+        let greedy_e = degraded.allocation_energy_j(&s, &greedy);
+        assert!(warm.energy_j <= greedy_e * (1.0 + 1e-9));
+        Allocation::from_indices(&fleet, &warm.plan).check_memory(&s, &fleet).unwrap();
+
+        // A fully-foreign archive (wrong stage count) is ignored whole,
+        // and a warm call whose hint never engages runs the FULL cold
+        // budget — bit-identical to the cold anneal on the same state.
+        let bogus = vec![ParetoPoint {
+            energy_j: 0.0,
+            latency_s: 0.0,
+            underutil: 0.0,
+            plan: vec![npu; 3],
+        }];
+        let fallback = degraded.pgsam_outcome_warm(&s, &cfg, &bogus).unwrap();
+        assert!(!fallback.warm_engaged, "a filtered-out hint must not report engagement");
+        assert!(fallback.energy_j <= greedy_e * (1.0 + 1e-9));
+        let cold_degraded = degraded.pgsam_outcome(&s, &cfg).unwrap();
+        assert_eq!(fallback.plan, cold_degraded.plan, "stale hint must not change the plan");
+        assert_eq!(fallback.energy_j.to_bits(), cold_degraded.energy_j.to_bits());
     }
 
     #[test]

@@ -1,0 +1,322 @@
+//! Warm-start plan cache: amortizing PGSAM across safety-state changes.
+//!
+//! The orchestrator re-plans whenever the fleet's safety state changes
+//! (a failure, a recovery, a thermal shedding-band change). Most of
+//! those transitions revisit a *previously seen* planning problem — a
+//! device recovers and the fleet's health signature returns to exactly
+//! what it was before the failure — so re-annealing from the greedy
+//! seed throws away work the planner already did. The [`PlanCache`]
+//! keys every planning outcome by the triple that fully determines it:
+//!
+//! * the **fleet health signature** — the schedulability mask over the
+//!   fleet's interned device indices. Failed devices flip a bit;
+//!   Degraded/Recovering devices remain schedulable and deliberately do
+//!   NOT (same planning problem, same plan).
+//! * the **model shape** — the bit-exact [`ShapeKey`] the energy-table
+//!   memoization already uses.
+//! * the **planner identity** — which planner ([`PlannerKind`]) and,
+//!   for PGSAM, the PRNG seed (plans are seed-deterministic).
+//!
+//! A lookup hit returns the cached winning plan in O(1) — no anneal at
+//! all. A miss consults [`PlanCache::warm_hint`] for the most recent
+//! entry with the same shape/planner under a *different* health
+//! signature: its Pareto archive seeds a warm-restarted anneal (see
+//! `pgsam::anneal_warm`) at a fraction of the cold budget.
+//!
+//! Invalidation contract: safety transitions bump monotone version
+//! counters (`DeviceHealth::version`, `ShedTracker::version`); a bump
+//! invalidates the *consumer's current plan* — forcing a fresh lookup —
+//! but never the cache entries themselves, which persist as the
+//! warm-restart pool under FIFO eviction.
+
+use std::collections::HashMap;
+
+use crate::devices::spec::DevIdx;
+
+use super::energy_table::ShapeKey;
+use super::pgsam::ParetoPoint;
+
+/// Which layer planner produced a cached entry. Part of the key: a
+/// greedy plan must never satisfy a PGSAM lookup (or vice versa).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PlannerKind {
+    Greedy,
+    Pgsam,
+}
+
+impl PlannerKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PlannerKind::Greedy => "greedy",
+            PlannerKind::Pgsam => "pgsam",
+        }
+    }
+}
+
+/// Cache key: (fleet health signature, model shape, planner identity).
+///
+/// Precondition: memory-capacity overrides
+/// (`Orchestrator::set_available_memory`) are NOT part of the key — a
+/// consumer that plans under different override states must use a
+/// separate cache per state (the sim never sets overrides; its caps
+/// are the spec capacities the shape key's fleet implies).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    /// Schedulability mask over the fleet's interned device indices —
+    /// the health signature. Two safety states with the same mask pose
+    /// the identical planning problem.
+    pub usable: Vec<bool>,
+    /// Bit-exact planner-relevant model shape.
+    pub shape: ShapeKey,
+    pub planner: PlannerKind,
+    /// PGSAM PRNG seed (the anneal is deterministic given it; greedy
+    /// ignores it but keying on it is harmless).
+    pub seed: u64,
+}
+
+/// One cached planning outcome.
+#[derive(Debug, Clone)]
+pub struct CachedPlan {
+    /// The winning plan chain `[embedding, layers…, lm_head]`.
+    pub plan: Vec<DevIdx>,
+    /// Exact Eq. 12 decode-step energy of `plan`.
+    pub energy_j: f64,
+    /// Pareto archive of the anneal that produced `plan` (empty for
+    /// greedy entries) — the warm-restart seed pool.
+    pub archive: Vec<ParetoPoint>,
+}
+
+/// Cumulative cache counters (reported by the serve CLI and the sim).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanCacheStats {
+    pub lookups: u64,
+    pub hits: u64,
+    pub misses: u64,
+    pub insertions: u64,
+    /// Misses for which a sibling archive HINT was offered. Whether the
+    /// anneal actually engaged a point (and ran the reduced warm
+    /// budget) is per-outcome information — `PgsamOutcome::warm_engaged`
+    /// / `ReplanEvent::warm_restart` — that the cache cannot observe.
+    pub warm_seeds: u64,
+    pub evictions: u64,
+}
+
+/// FIFO-bounded map from [`PlanKey`] to [`CachedPlan`].
+#[derive(Debug, Clone)]
+pub struct PlanCache {
+    entries: HashMap<PlanKey, CachedPlan>,
+    /// Insertion order: FIFO eviction + deterministic warm-hint pick
+    /// (most recently inserted sibling wins).
+    order: Vec<PlanKey>,
+    cap: usize,
+    stats: PlanCacheStats,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache::with_capacity(64)
+    }
+}
+
+impl PlanCache {
+    pub fn with_capacity(cap: usize) -> Self {
+        PlanCache {
+            entries: HashMap::new(),
+            order: Vec::new(),
+            cap: cap.max(1),
+            stats: PlanCacheStats::default(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn stats(&self) -> PlanCacheStats {
+        self.stats
+    }
+
+    /// Exact-key lookup. A hit replaces an entire planning run with a
+    /// borrow of the cached outcome — no clone: the hit path is a map
+    /// probe, and the consumer copies only what it keeps (the archive
+    /// in particular is never needed on a hit).
+    pub fn lookup(&mut self, key: &PlanKey) -> Option<&CachedPlan> {
+        self.stats.lookups += 1;
+        match self.entries.get(key) {
+            Some(entry) => {
+                self.stats.hits += 1;
+                Some(entry)
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Warm-restart seed for a miss: the Pareto archive of the most
+    /// recently inserted entry for the same (shape, planner, seed)
+    /// under a different health signature — the only part of a sibling
+    /// entry a warm restart consumes. Its points are re-validated
+    /// against the new signature by `pgsam::anneal_warm`, so a hint is
+    /// never unsafe — only possibly useless.
+    pub fn warm_hint(&mut self, key: &PlanKey) -> Option<Vec<ParetoPoint>> {
+        let hint = self
+            .order
+            .iter()
+            .rev()
+            .find(|k| {
+                k.shape == key.shape
+                    && k.planner == key.planner
+                    && k.seed == key.seed
+                    && k.usable != key.usable
+            })
+            .and_then(|k| self.entries.get(k))
+            .map(|entry| entry.archive.clone());
+        if hint.is_some() {
+            self.stats.warm_seeds += 1;
+        }
+        hint
+    }
+
+    /// Insert (or refresh) an entry; refreshing moves it to the back of
+    /// the eviction / warm-hint order.
+    pub fn insert(&mut self, key: PlanKey, value: CachedPlan) {
+        self.stats.insertions += 1;
+        if self.entries.insert(key.clone(), value).is_some() {
+            self.order.retain(|k| k != &key);
+            self.order.push(key);
+            return;
+        }
+        self.order.push(key);
+        if self.order.len() > self.cap {
+            let evicted = self.order.remove(0);
+            self.entries.remove(&evicted);
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::allocation::ModelShape;
+    use crate::runtime::manifest::VariantMeta;
+    use crate::workload::datasets::ModelFamily;
+
+    fn meta(layers: usize) -> VariantMeta {
+        VariantMeta {
+            name: "gpt2".into(),
+            vocab: 512,
+            d_model: 64,
+            n_layers: layers,
+            n_heads: 4,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq: 64,
+            prefill_len: 32,
+            paper_params: 125_000_000,
+            variant_params: 268_672,
+            flops_prefill: 0,
+            flops_per_token_decode: 0,
+            bytes_per_token_decode: 1,
+            cache_shape: [4, 4, 64, 16],
+            prefill_artifact: "x".into(),
+            decode_artifact: "y".into(),
+            decode_chunk_artifact: None,
+            decode_chunk: 0,
+        }
+    }
+
+    fn key(usable: Vec<bool>, layers: usize, seed: u64) -> PlanKey {
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta(layers));
+        PlanKey { usable, shape: ShapeKey::of(&shape), planner: PlannerKind::Pgsam, seed }
+    }
+
+    fn entry(energy_j: f64) -> CachedPlan {
+        // One archive point tagged with the entry's energy, so tests
+        // can tell WHICH sibling's archive a warm hint returned.
+        let archive = vec![ParetoPoint {
+            energy_j,
+            latency_s: 0.0,
+            underutil: 0.0,
+            plan: vec![DevIdx(0), DevIdx(1), DevIdx(0)],
+        }];
+        CachedPlan { plan: vec![DevIdx(0), DevIdx(1), DevIdx(0)], energy_j, archive }
+    }
+
+    #[test]
+    fn hit_and_miss_counters() {
+        let mut cache = PlanCache::default();
+        let k = key(vec![true, true], 1, 0);
+        assert!(cache.lookup(&k).is_none());
+        cache.insert(k.clone(), entry(1.0));
+        let hit = cache.lookup(&k).expect("inserted key must hit");
+        assert_eq!(hit.energy_j, 1.0);
+        let s = cache.stats();
+        assert_eq!((s.lookups, s.hits, s.misses, s.insertions), (2, 1, 1, 1));
+    }
+
+    #[test]
+    fn health_signature_discriminates() {
+        let mut cache = PlanCache::default();
+        cache.insert(key(vec![true, true], 1, 0), entry(1.0));
+        assert!(cache.lookup(&key(vec![true, false], 1, 0)).is_none());
+        assert!(cache.lookup(&key(vec![true, true], 2, 0)).is_none());
+        assert!(cache.lookup(&key(vec![true, true], 1, 7)).is_none());
+        assert!(cache.lookup(&key(vec![true, true], 1, 0)).is_some());
+    }
+
+    #[test]
+    fn warm_hint_prefers_latest_sibling_and_skips_same_signature() {
+        let mut cache = PlanCache::default();
+        cache.insert(key(vec![true, true], 1, 0), entry(1.0));
+        cache.insert(key(vec![false, true], 1, 0), entry(2.0));
+        // Same shape/planner/seed, new signature: latest sibling wins.
+        let hint = cache.warm_hint(&key(vec![true, false], 1, 0)).expect("sibling exists");
+        assert_eq!(hint.len(), 1);
+        assert_eq!(hint[0].energy_j, 2.0);
+        // Different shape: no sibling.
+        assert!(cache.warm_hint(&key(vec![true, false], 2, 0)).is_none());
+        // The exact key itself is never its own hint.
+        let mut solo = PlanCache::default();
+        solo.insert(key(vec![true, true], 1, 0), entry(1.0));
+        assert!(solo.warm_hint(&key(vec![true, true], 1, 0)).is_none());
+        assert_eq!(cache.stats().warm_seeds, 1);
+    }
+
+    #[test]
+    fn fifo_eviction_bounds_entries() {
+        let mut cache = PlanCache::with_capacity(2);
+        let a = key(vec![true, true], 1, 0);
+        let b = key(vec![false, true], 1, 0);
+        let c = key(vec![true, false], 1, 0);
+        cache.insert(a.clone(), entry(1.0));
+        cache.insert(b.clone(), entry(2.0));
+        cache.insert(c.clone(), entry(3.0));
+        assert_eq!(cache.len(), 2);
+        assert!(cache.lookup(&a).is_none(), "oldest entry must be evicted");
+        assert!(cache.lookup(&b).is_some());
+        assert!(cache.lookup(&c).is_some());
+        assert_eq!(cache.stats().evictions, 1);
+    }
+
+    #[test]
+    fn refresh_moves_entry_to_back_of_eviction_order() {
+        let mut cache = PlanCache::with_capacity(2);
+        let a = key(vec![true, true], 1, 0);
+        let b = key(vec![false, true], 1, 0);
+        let c = key(vec![true, false], 1, 0);
+        cache.insert(a.clone(), entry(1.0));
+        cache.insert(b.clone(), entry(2.0));
+        cache.insert(a.clone(), entry(9.0)); // refresh: a is now newest
+        cache.insert(c.clone(), entry(3.0)); // evicts b, not a
+        assert_eq!(cache.lookup(&a).expect("refreshed entry survives").energy_j, 9.0);
+        assert!(cache.lookup(&b).is_none());
+        assert!(cache.lookup(&c).is_some());
+    }
+}

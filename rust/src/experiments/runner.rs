@@ -124,6 +124,14 @@ pub struct RunMetrics {
     pub cascade_success_stops: u64,
     pub cascade_futility_stops: u64,
     pub cascade_exhausted_stops: u64,
+    /// Event-driven replanning episodes (plan-cache feature; 0 when the
+    /// feature is off and planning is once-per-report).
+    pub replans: u64,
+    /// Episodes served straight from the warm-start plan cache.
+    pub plan_cache_hits: u64,
+    /// Eq. 12 energy of each successive plan, in trigger order — the
+    /// per-replan energy trail for planner-quality regression tracking.
+    pub replan_energy_trail: Vec<f64>,
 }
 
 impl RunMetrics {
@@ -179,6 +187,9 @@ impl RunMetrics {
             cascade_success_stops: r.cascade.as_ref().map_or(0, |c| c.success_stops),
             cascade_futility_stops: r.cascade.as_ref().map_or(0, |c| c.futility_stops),
             cascade_exhausted_stops: r.cascade.as_ref().map_or(0, |c| c.exhausted_stops),
+            replans: r.replans,
+            plan_cache_hits: r.plan_cache_hits,
+            replan_energy_trail: r.replan_trail.iter().map(|e| e.plan_energy_j).collect(),
         }
     }
 }
@@ -307,6 +318,11 @@ mod tests {
         assert!(m.cascade_enabled);
         assert!(m.cascade_samples_drawn <= m.cascade_samples_budgeted);
         assert!(m.cascade_samples_drawn >= 30, "every query draws at least one sample");
+        // …and event-driven replanning with the plan cache.
+        assert!(m.replans >= 1, "the full feature set plans at least once");
+        assert_eq!(m.replan_energy_trail.len(), m.replans as usize);
+        assert!(m.plan_cache_hits <= m.replans);
+        assert!(m.replan_energy_trail.iter().all(|e| *e > 0.0));
     }
 
     #[test]

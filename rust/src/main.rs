@@ -33,6 +33,9 @@ COMMON OPTIONS:
 SERVE OPTIONS:
     --fleet <preset>    simulated fleet preset  [default: edge-box]
     --planner <name>    layer planner: pgsam | greedy  [default: pgsam]
+    --plan-cache        preview the warm-start plan cache across failure
+                        signatures and print its hit/miss statistics
+    --cascade           preview the selection cascade on the first query
 ";
 
 fn main() -> Result<()> {

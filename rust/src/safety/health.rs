@@ -42,6 +42,12 @@ pub struct DeviceHealth {
     recovery_successes: u32,
     /// Total failures observed over the device's lifetime.
     pub failures_total: u64,
+    /// Monotone state-version counter: bumped on every FSM transition
+    /// (and only on transitions). Event-driven consumers — the plan
+    /// cache above all — compare versions instead of states: an
+    /// unchanged version guarantees no transition happened in between,
+    /// so the current plan is still valid.
+    version: u64,
 }
 
 /// Successful inferences required to graduate Recovering → Healthy.
@@ -55,6 +61,7 @@ impl DeviceHealth {
             since_s: 0.0,
             recovery_successes: 0,
             failures_total: 0,
+            version: 0,
         }
     }
 
@@ -66,11 +73,18 @@ impl DeviceHealth {
         self.since_s
     }
 
+    /// Monotone state-version: increments exactly once per FSM
+    /// transition, never otherwise.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
     pub fn mark_failed(&mut self, now_s: f64) {
         if self.state != HealthState::Failed {
             self.state = HealthState::Failed;
             self.since_s = now_s;
             self.failures_total += 1;
+            self.version += 1;
         }
     }
 
@@ -78,6 +92,7 @@ impl DeviceHealth {
         if self.state == HealthState::Healthy {
             self.state = HealthState::Degraded;
             self.since_s = now_s;
+            self.version += 1;
         }
     }
 
@@ -87,6 +102,7 @@ impl DeviceHealth {
             self.state = HealthState::Recovering;
             self.since_s = now_s;
             self.recovery_successes = 0;
+            self.version += 1;
         }
     }
 
@@ -98,6 +114,7 @@ impl DeviceHealth {
                 if self.recovery_successes >= RECOVERY_GRADUATION {
                     self.state = HealthState::Healthy;
                     self.since_s = now_s;
+                    self.version += 1;
                 }
             }
             HealthState::Degraded => {
@@ -107,6 +124,7 @@ impl DeviceHealth {
                     self.state = HealthState::Healthy;
                     self.since_s = now_s;
                     self.recovery_successes = 0;
+                    self.version += 1;
                 }
             }
             _ => {}
@@ -169,6 +187,27 @@ mod tests {
         }
         assert_eq!(h.state(), HealthState::Recovering);
         h.record_success(7.0);
+        assert_eq!(h.state(), HealthState::Healthy);
+    }
+
+    #[test]
+    fn version_bumps_exactly_on_transitions() {
+        let mut h = DeviceHealth::new("gpu0".into());
+        assert_eq!(h.version(), 0);
+        h.record_success(0.5); // Healthy: no transition, no bump
+        assert_eq!(h.version(), 0);
+        h.mark_failed(1.0);
+        assert_eq!(h.version(), 1);
+        h.mark_failed(2.0); // already Failed: no bump
+        assert_eq!(h.version(), 1);
+        h.mark_recovering(3.0);
+        assert_eq!(h.version(), 2);
+        for _ in 0..RECOVERY_GRADUATION - 1 {
+            h.record_success(4.0);
+        }
+        assert_eq!(h.version(), 2, "no bump before graduation");
+        h.record_success(5.0); // graduates Recovering → Healthy
+        assert_eq!(h.version(), 3);
         assert_eq!(h.state(), HealthState::Healthy);
     }
 

@@ -26,5 +26,5 @@ pub use fault::{FaultDetector, FaultEvent, RecoveryAction};
 pub use health::{DeviceHealth, HealthState};
 pub use ratelimit::RateLimiter;
 pub use sanity::{OutputSanity, SanityVerdict};
-pub use thermal_guard::ThermalGuard;
+pub use thermal_guard::{ShedTracker, ThermalGuard};
 pub use validation::{InputValidator, ValidationError};

@@ -8,6 +8,10 @@
 
 use crate::devices::spec::DeviceSpec;
 
+/// Number of discrete shedding bands [`ThermalDecision::shed_level`]
+/// quantizes the continuous Eq. 8 factor into.
+pub const SHED_LEVELS: u8 = 4;
+
 /// The guard's recommendation for one device at one instant.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ThermalDecision {
@@ -17,6 +21,54 @@ pub struct ThermalDecision {
     pub shedding: bool,
     /// Monitoring interval to use until the next reading (s).
     pub next_sample_s: f64,
+}
+
+impl ThermalDecision {
+    /// Quantized shedding band: 0 = unrestricted, 1..=[`SHED_LEVELS`]
+    /// index progressively deeper sheds. Event-driven re-planning keys
+    /// on this level rather than the raw factor, so smooth factor drift
+    /// within a band does not storm the planner — only a band crossing
+    /// is a safety-state transition.
+    pub fn shed_level(&self) -> u8 {
+        if !self.shedding {
+            return 0;
+        }
+        let depth = (1.0 - self.workload_factor).clamp(0.0, 1.0);
+        1 + ((depth * SHED_LEVELS as f64) as u8).min(SHED_LEVELS - 1)
+    }
+}
+
+/// Per-device shedding-band tracker: the thermal half of the monotone
+/// safety-state version the plan cache invalidates on (the health half
+/// is `DeviceHealth::version`). The version bumps exactly when the
+/// guard moves the device across a shedding band.
+#[derive(Debug, Clone, Default)]
+pub struct ShedTracker {
+    level: u8,
+    version: u64,
+}
+
+impl ShedTracker {
+    pub fn level(&self) -> u8 {
+        self.level
+    }
+
+    /// Monotone: increments once per band crossing, never otherwise.
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+
+    /// Record an observed band; returns whether the device crossed into
+    /// a different one (bumping the version).
+    pub fn observe(&mut self, level: u8) -> bool {
+        if level != self.level {
+            self.level = level;
+            self.version += 1;
+            true
+        } else {
+            false
+        }
+    }
 }
 
 /// Stateless thermal guard policy (state lives in the thermal model).
@@ -126,6 +178,38 @@ mod tests {
         }
         assert_eq!(thermal.throttle_events(), 0, "guard must prevent hw throttling");
         assert!(thermal.peak_c() < spec.t_throttle_hw_c);
+    }
+
+    #[test]
+    fn shed_levels_quantize_monotonically() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let g = ThermalGuard::default();
+        assert_eq!(g.evaluate(&spec, 40.0).shed_level(), 0, "below guard: level 0");
+        let guard = g.guard_temp_c(&spec);
+        let mut prev = 0u8;
+        let steps = 20;
+        for i in 1..=steps {
+            let t = guard + (spec.t_max_c - guard) * i as f64 / steps as f64;
+            let level = g.evaluate(&spec, t).shed_level();
+            assert!((1..=SHED_LEVELS).contains(&level), "level {level} out of band range");
+            assert!(level >= prev, "shedding deepened but level dropped: {prev} -> {level}");
+            prev = level;
+        }
+        assert_eq!(g.evaluate(&spec, spec.t_max_c).shed_level(), SHED_LEVELS);
+        assert_eq!(g.evaluate(&spec, spec.t_max_c + 50.0).shed_level(), SHED_LEVELS);
+    }
+
+    #[test]
+    fn shed_tracker_versions_on_band_crossings_only() {
+        let mut t = ShedTracker::default();
+        assert_eq!((t.level(), t.version()), (0, 0));
+        assert!(!t.observe(0), "same band: no transition");
+        assert_eq!(t.version(), 0);
+        assert!(t.observe(2));
+        assert_eq!((t.level(), t.version()), (2, 1));
+        assert!(!t.observe(2));
+        assert!(t.observe(1), "shallower band is still a crossing");
+        assert_eq!((t.level(), t.version()), (1, 2));
     }
 
     #[test]

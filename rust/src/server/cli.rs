@@ -5,7 +5,9 @@ use anyhow::{bail, Result};
 
 use crate::cli::Args;
 use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::energy_table::ShapeKey;
 use crate::coordinator::pgsam::PgsamConfig;
+use crate::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind};
 use crate::coordinator::{Orchestrator, PhasePlan};
 use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::experiments::runner::default_meta;
@@ -54,6 +56,85 @@ pub fn run(args: &Args) -> Result<()> {
             energy,
         ),
         None => println!("layer plan [{planner}]: infeasible for this fleet"),
+    }
+
+    // `--plan-cache`: exercise the warm-start plan cache across every
+    // single-device-failure health signature this fleet can present and
+    // print the cache statistics — the serving-loop preview of event-
+    // driven re-planning (cold plan → warm restarts → replay hit).
+    if args.flag("plan-cache") {
+        let pgsam_cfg = PgsamConfig::default().with_seed(seed);
+        let healthy: Vec<bool> = vec![true; fleet.len()];
+        let shape_key = ShapeKey::of(&shape);
+        let key_of = |usable: &[bool]| PlanKey {
+            usable: usable.to_vec(),
+            shape: shape_key,
+            planner: PlannerKind::Pgsam,
+            seed,
+        };
+        match orch.pgsam_outcome(&shape, &pgsam_cfg) {
+            Ok(cold) => {
+                let mut cache = PlanCache::default();
+                println!(
+                    "plan cache: cold plan {:.4} J/step ({} Pareto points archived)",
+                    cold.energy_j,
+                    cold.archive.len()
+                );
+                cache.insert(
+                    key_of(&healthy),
+                    CachedPlan {
+                        plan: cold.plan.clone(),
+                        energy_j: cold.energy_j,
+                        archive: cold.archive,
+                    },
+                );
+                if fleet.len() >= 2 {
+                    for (i, dev) in fleet.devices().iter().enumerate() {
+                        let mut usable = healthy.clone();
+                        usable[i] = false;
+                        let key = key_of(&usable);
+                        if cache.lookup(&key).is_some() {
+                            continue;
+                        }
+                        let warm = cache.warm_hint(&key).unwrap_or_default();
+                        let mut degraded = Orchestrator::new(&fleet);
+                        degraded.exclude(&dev.id);
+                        match degraded.pgsam_outcome_warm(&shape, &pgsam_cfg, &warm) {
+                            Ok(o) => {
+                                println!(
+                                    "  -{}: {} replan {:.4} J/step ({} archived candidates considered)",
+                                    dev.id,
+                                    if o.warm_engaged { "warm" } else { "cold-budget" },
+                                    o.energy_j,
+                                    warm.len()
+                                );
+                                cache.insert(
+                                    key,
+                                    CachedPlan {
+                                        plan: o.plan.clone(),
+                                        energy_j: o.energy_j,
+                                        archive: o.archive,
+                                    },
+                                );
+                            }
+                            Err(e) => println!("  -{}: infeasible ({e})", dev.id),
+                        }
+                    }
+                }
+                let replay_hit = cache.lookup(&key_of(&healthy)).is_some();
+                let stats = cache.stats();
+                println!(
+                    "plan cache stats: {} entries, {} lookups, {} hits / {} misses, {} warm hints offered{}",
+                    cache.len(),
+                    stats.lookups,
+                    stats.hits,
+                    stats.misses,
+                    stats.warm_seeds,
+                    if replay_hit { " (healthy-signature replay hit)" } else { "" },
+                );
+            }
+            Err(e) => println!("plan cache: planning infeasible for this fleet ({e})"),
+        }
     }
 
     // `--cascade`: preview the EAC/ARDE/CSVET selection cascade on the

@@ -13,22 +13,24 @@ use anyhow::Result;
 
 use crate::config::{ExecMode, OrchestratorFeatures};
 use crate::coordinator::allocation::ModelShape;
-use crate::coordinator::batcher::Batcher;
+use crate::coordinator::batcher::{Batch, Batcher};
 use crate::coordinator::disaggregation::{decode_task, prefill_task, PhasePlan};
-use crate::coordinator::orchestrator::Orchestrator;
-use crate::coordinator::pgsam::PgsamConfig;
+use crate::coordinator::energy_table::ShapeKey;
+use crate::coordinator::orchestrator::{Orchestrator, PlanError};
+use crate::coordinator::pgsam::{ParetoPoint, PgsamConfig};
+use crate::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind};
 use crate::coordinator::sample_budget::{SampleBudgeter, SampleCost};
 use crate::devices::failure::{FailureKind, FailurePlan};
 use crate::devices::fleet::Fleet;
 use crate::devices::power::PowerModel;
 use crate::devices::roofline::Phase;
-use crate::devices::spec::{DeviceId, DeviceSpec};
+use crate::devices::spec::{DevIdx, DeviceId, DeviceSpec};
 use crate::devices::thermal::ThermalState;
 use crate::metrics::energy::EnergyLedger;
 use crate::metrics::latency::LatencyRecorder;
 use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
-use crate::safety::thermal_guard::ThermalGuard;
+use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
 use crate::scaling::formalisms::LatencyLaw;
 use crate::selection::{Candidate, SelectionCascade, StopReason};
 use crate::workload::coverage::CoverageOracle;
@@ -101,6 +103,35 @@ pub struct CascadeTrail {
     pub exhausted_stops: u64,
 }
 
+/// One event-driven replanning episode (plan-cache feature): the layer
+/// planner ran because the safety-state version moved — a failure, a
+/// recovery, a graduation, or a thermal shedding-band crossing, with
+/// coincident transitions batched into the single episode.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplanEvent {
+    /// Virtual time of the transition batch that triggered the replan.
+    pub at_s: f64,
+    /// Safety-state version the plan was computed for (strictly
+    /// increasing across the trail — one episode per version).
+    pub version: u64,
+    /// "pgsam" / "greedy", or "none" when planning failed.
+    pub planner: &'static str,
+    /// Eq. 12 decode-step energy of the new plan (0 on failure).
+    pub plan_energy_j: f64,
+    pub plan_error: Option<String>,
+    /// The plan came straight out of the cache (already-seen health
+    /// signature) — no anneal ran.
+    pub cache_hit: bool,
+    /// A cache miss whose anneal ENGAGED a sibling-archive point — the
+    /// reduced-budget warm restart actually ran (a hint whose points
+    /// were all filtered out runs the full cold budget and reports
+    /// false here).
+    pub warm_restart: bool,
+    /// The interned plan chain (empty on failure) — lets scenario tests
+    /// assert bit-exact restoration after recovery.
+    pub plan: Vec<DevIdx>,
+}
+
 /// Aggregated simulation results.
 #[derive(Debug, Clone)]
 pub struct SimReport {
@@ -147,6 +178,13 @@ pub struct SimReport {
     pub plan_error: Option<String>,
     /// Selection-cascade trail (`None` when the feature is off).
     pub cascade: Option<CascadeTrail>,
+    /// Event-driven replanning episodes (0 with `plan_cache` off: the
+    /// legacy path plans once per report and keeps no trail).
+    pub replans: u64,
+    /// Episodes served straight from the plan cache.
+    pub plan_cache_hits: u64,
+    /// Per-replan energy trail, in trigger order.
+    pub replan_trail: Vec<ReplanEvent>,
 }
 
 struct SimDevice {
@@ -154,6 +192,9 @@ struct SimDevice {
     thermal: ThermalState,
     health: DeviceHealth,
     detector: FaultDetector,
+    /// Thermal shedding-band tracker (the thermal half of the
+    /// safety-state version; the health half lives in `health`).
+    shed: ShedTracker,
     busy_s: f64,
     /// Active energy accumulated in the current query window.
     window_energy_j: f64,
@@ -177,6 +218,14 @@ pub struct SimEngine {
     queries_lost: usize,
     samples_run_total: u64,
     cascade: CascadeTrail,
+    /// Warm-start plan cache (plan_cache feature).
+    plan_cache: PlanCache,
+    /// Safety-state version the current layer plan was computed for;
+    /// `None` before the first event-driven plan.
+    last_planned_version: Option<u64>,
+    replans: u64,
+    plan_cache_hits: u64,
+    replan_trail: Vec<ReplanEvent>,
     /// Calibration factor: real measured seconds per simulated second
     /// (from PJRT execution of the artifact; 1.0 = pure analytic).
     pub calibration: f64,
@@ -195,6 +244,7 @@ impl SimEngine {
                         thermal: ThermalState::new(spec),
                         health: DeviceHealth::new(spec.id.clone()),
                         detector: FaultDetector::new(spec.id.clone()),
+                        shed: ShedTracker::default(),
                         busy_s: 0.0,
                         window_energy_j: 0.0,
                         window_busy_s: 0.0,
@@ -217,6 +267,11 @@ impl SimEngine {
             queries_lost: 0,
             samples_run_total: 0,
             cascade: CascadeTrail::default(),
+            plan_cache: PlanCache::default(),
+            last_planned_version: None,
+            replans: 0,
+            plan_cache_hits: 0,
+            replan_trail: Vec::new(),
             calibration: 1.0,
         }
     }
@@ -241,23 +296,170 @@ impl SimEngine {
         if !features.pgsam_planner && !features.greedy_layer_assignment {
             return ("none", 0.0, None);
         }
+        match self.run_selected_planner(None) {
+            (kind, Ok((_, energy_j, _, _))) => (kind.as_str(), energy_j, None),
+            (_, Err(e)) => ("none", 0.0, Some(e.to_string())),
+        }
+    }
+
+    /// The cache-less planning core: dispatch to the feature-selected
+    /// planner against the current safety state. The SINGLE dispatch
+    /// implementation — both the legacy per-report path
+    /// ([`SimEngine::layer_plan`]) and the event-driven plan-cache path
+    /// call it, so planner selection, config, and error labeling cannot
+    /// diverge between the two feature settings. Returns the planner
+    /// identity plus `(plan, energy, archive, warm_engaged)` or the
+    /// planning error. Precondition: a layer planner feature is on.
+    fn run_selected_planner(
+        &self,
+        warm: Option<&[ParetoPoint]>,
+    ) -> (PlannerKind, Result<(Vec<DevIdx>, f64, Vec<ParetoPoint>, bool), PlanError>) {
+        let orch = self.planning_orchestrator();
+        if self.options.features.pgsam_planner {
+            let cfg = PgsamConfig::default().with_seed(self.options.seed);
+            let result = match warm {
+                // Cold config: the anneal self-reduces its budget only
+                // when a feasible archived point engages.
+                Some(archive) => orch.pgsam_outcome_warm(&self.shape, &cfg, archive),
+                None => orch.pgsam_outcome(&self.shape, &cfg),
+            }
+            .map(|o| (o.plan, o.energy_j, o.archive, o.warm_engaged));
+            return (PlannerKind::Pgsam, result);
+        }
+        let result = orch.assign(&self.shape).map(|alloc| {
+            let energy = orch.allocation_energy_j(&self.shape, &alloc);
+            let plan =
+                alloc.interned(&self.fleet).expect("allocation devices are fleet members");
+            (plan, energy, Vec::new(), false)
+        });
+        (PlannerKind::Greedy, result)
+    }
+
+    /// The planning view of the fleet for the CURRENT safety state:
+    /// unschedulable (failed) devices excluded. The single place the
+    /// exclusion rule lives — both the legacy per-report path and the
+    /// event-driven plan-cache path plan through it, so the reported
+    /// planner trail cannot diverge between the two feature settings.
+    fn planning_orchestrator(&self) -> Orchestrator<'_> {
         let mut orch = Orchestrator::new(&self.fleet);
         for d in self.fleet.devices() {
             if !self.schedulable(&d.id) {
                 orch.exclude(&d.id);
             }
         }
-        if features.pgsam_planner {
-            let cfg = PgsamConfig::default().with_seed(self.options.seed);
-            return match orch.assign_pgsam(&self.shape, &cfg) {
-                Ok((_, energy)) => ("pgsam", energy, None),
-                Err(e) => ("none", 0.0, Some(e.to_string())),
+        orch
+    }
+
+    /// Current safety-state version: the sum of every device's health
+    /// and thermal shedding version counters. Monotone, and constant
+    /// exactly while no safety transition occurs — so comparing it
+    /// against the version of the last plan detects staleness without
+    /// diffing any state, and transitions that land in the same window
+    /// coalesce into a single version jump (one replan, not several).
+    pub fn safety_version(&self) -> u64 {
+        self.devices.values().map(|d| d.health.version() + d.shed.version()).sum()
+    }
+
+    /// Event-driven re-planning (plan_cache feature): re-plan IFF the
+    /// safety state changed since the last plan — a failure, recovery,
+    /// graduation, or shedding-band crossing. Coincident transitions
+    /// batch into one episode.
+    fn replan_if_stale(&mut self) {
+        let features = &self.options.features;
+        if !features.plan_cache {
+            return;
+        }
+        if !features.pgsam_planner && !features.greedy_layer_assignment {
+            return; // no layer planner selected: nothing to (re)plan
+        }
+        let version = self.safety_version();
+        if self.last_planned_version == Some(version) {
+            return;
+        }
+        let event = self.plan_layers(version);
+        self.replans += 1;
+        if event.cache_hit {
+            self.plan_cache_hits += 1;
+        }
+        self.last_planned_version = Some(version);
+        self.replan_trail.push(event);
+    }
+
+    /// One replanning episode: cache lookup by (health signature,
+    /// shape, planner), warm-restarted anneal on a miss with a sibling
+    /// archive, cold anneal otherwise.
+    fn plan_layers(&mut self, version: u64) -> ReplanEvent {
+        let features = &self.options.features;
+        let usable: Vec<bool> =
+            self.fleet.devices().iter().map(|d| self.schedulable(&d.id)).collect();
+        let planner_kind =
+            if features.pgsam_planner { PlannerKind::Pgsam } else { PlannerKind::Greedy };
+        let key = PlanKey {
+            usable,
+            shape: ShapeKey::of(&self.shape),
+            planner: planner_kind,
+            seed: self.options.seed,
+        };
+        let at_s = self.clock_s;
+        if let Some(cached) = self.plan_cache.lookup(&key) {
+            return ReplanEvent {
+                at_s,
+                version,
+                planner: planner_kind.as_str(),
+                plan_energy_j: cached.energy_j,
+                plan_error: None,
+                cache_hit: true,
+                warm_restart: false,
+                plan: cached.plan.clone(),
             };
         }
-        match orch.assign(&self.shape) {
-            Ok(alloc) => ("greedy", orch.allocation_energy_j(&self.shape, &alloc), None),
-            Err(e) => ("none", 0.0, Some(e.to_string())),
+        let warm = match planner_kind {
+            PlannerKind::Pgsam => self.plan_cache.warm_hint(&key),
+            PlannerKind::Greedy => None,
+        };
+        let (kind, outcome) = self.run_selected_planner(warm.as_deref());
+        debug_assert_eq!(kind, planner_kind, "key and dispatch must agree on the planner");
+        match outcome {
+            Ok((plan, energy_j, archive, warm_engaged)) => {
+                self.plan_cache
+                    .insert(key, CachedPlan { plan: plan.clone(), energy_j, archive });
+                ReplanEvent {
+                    at_s: self.clock_s,
+                    version,
+                    planner: planner_kind.as_str(),
+                    plan_energy_j: energy_j,
+                    plan_error: None,
+                    cache_hit: false,
+                    warm_restart: warm_engaged,
+                    plan,
+                }
+            }
+            // Planning failure (every device failed): surfaced, never
+            // cached — the next transition re-attempts from scratch.
+            Err(e) => ReplanEvent {
+                at_s: self.clock_s,
+                version,
+                planner: "none",
+                plan_energy_j: 0.0,
+                plan_error: Some(e.to_string()),
+                cache_hit: false,
+                warm_restart: false,
+                plan: Vec::new(),
+            },
         }
+    }
+
+    /// The interactive deadline for one query (s): the SLA multiple of
+    /// one standard GPU-served sample (12x when no SLA is configured —
+    /// the documented default envelope). One definition serves both the
+    /// per-lane sample counting and the hold window a LOST query
+    /// occupies before being dropped — the clock must advance for lost
+    /// queries either way, or a total outage would freeze virtual time
+    /// and a scheduled recovery could never manifest.
+    fn interactive_deadline_s(&self, query: &Query) -> f64 {
+        let multiple = self.options.sla_sample_multiple.unwrap_or(12.0);
+        let ref_step = decode_task(&self.shape).seconds_on(&DeviceSpec::nvidia_gpu(), 1.0);
+        multiple * ref_step * query.output_tokens as f64
     }
 
     /// Throttle factor for a device: guard shedding (if safety on) ×
@@ -361,11 +563,23 @@ impl SimEngine {
     /// was solved and how many samples ran.
     pub fn run_query(&mut self, query: &Query, samples: u32, oracle: &CoverageOracle) -> (bool, u32) {
         self.process_failures();
+        // Tick ordering: failures/recoveries land BEFORE planning and
+        // execution at this clock value, so a replan sees the post-
+        // transition fleet exactly once — an event on the same tick as
+        // a cascade stop can never charge two plans to one episode.
+        self.replan_if_stale();
 
         let Some(plan) = self.plan(query) else {
             // Total fleet loss: the query is lost (only possible with
-            // safety off or all devices failed).
+            // safety off or all devices failed). A lost interactive
+            // query still occupies wall time — it is held to its SLA
+            // deadline, then dropped — so the clock advances and a
+            // scheduled driver-reset recovery can manifest even when
+            // every device is down (a wedged clock would otherwise
+            // freeze a single-device outage forever).
             self.queries_lost += 1;
+            let hold_s = self.interactive_deadline_s(query);
+            self.advance_window(hold_s);
             return (false, 0);
         };
 
@@ -489,7 +703,6 @@ impl SimEngine {
             .collect();
         let batches = batcher.assign_weighted(samples, &plan.decode, &rates);
         let mut device_decode_s: BTreeMap<DeviceId, f64> = BTreeMap::new();
-        let mut device_samples: BTreeMap<DeviceId, u32> = BTreeMap::new();
         let mut device_step_s: BTreeMap<DeviceId, f64> = BTreeMap::new();
         let mut decode_tokens = 0u64;
         for batch in &batches {
@@ -501,7 +714,6 @@ impl SimEngine {
             let power = PowerModel::active_power_for(&spec, &d_task);
             let joules = power * batch_s;
             *device_decode_s.entry(batch.device.clone()).or_insert(0.0) += batch_s;
-            *device_samples.entry(batch.device.clone()).or_insert(0) += batch.samples.len() as u32;
             device_step_s.insert(batch.device.clone(), step_s);
             self.ledger.record_task(&batch.device, Phase::Decode, joules, batch_s);
             let dev = self.devices.get_mut(&batch.device).unwrap();
@@ -514,28 +726,22 @@ impl SimEngine {
         self.samples_run_total += samples as u64;
 
         // ---- Coverage deadline: late samples burn energy but do not
-        // count (interactive SLA) ----
-        let effective_samples = match self.options.sla_sample_multiple {
-            Some(multiple) => {
-                // Reference: one sample served on a standard GPU stack.
-                let ref_step =
-                    d_task.seconds_on(&crate::devices::spec::DeviceSpec::nvidia_gpu(), 1.0);
-                let deadline_s = multiple * ref_step * query.output_tokens as f64;
-                let mut counted = 0u32;
-                for (dev, &n) in &device_samples {
-                    let step_s = device_step_s[dev];
-                    let sample_s = step_s * query.output_tokens as f64;
-                    let budget_s = (deadline_s - prefill_s).max(0.0);
-                    let fit = if sample_s > 0.0 {
-                        (budget_s / sample_s).floor() as u32
-                    } else {
-                        n
-                    };
-                    counted += n.min(fit);
-                }
-                counted.min(samples)
+        // count (interactive SLA). Per-lane prefix accounting: each
+        // decode lane counts the samples it completes within the
+        // deadline in service order. Because the weighted apportionment
+        // is prefix-stable in the sample count, a cascade-shortened
+        // draw counts exactly the full-budget counted set restricted to
+        // the drawn indices — a verified winner the full budget counts
+        // is never truncated by stopping early. ----
+        let solved = match self.options.sla_sample_multiple {
+            Some(_) => {
+                let deadline_s = self.interactive_deadline_s(query);
+                let budget_s = (deadline_s - prefill_s).max(0.0);
+                let counted =
+                    deadline_counted(&batches, &device_step_s, query.output_tokens, budget_s);
+                counted.iter().any(|&s| oracle.sample_succeeds(query, s))
             }
-            None => samples,
+            None => oracle.evaluate(query, samples).solved(),
         };
 
         // ---- IO + scheduling overhead ----
@@ -564,9 +770,7 @@ impl SimEngine {
         }
         self.advance_window(makespan);
 
-        // ---- Coverage (only samples inside the deadline count) ----
-        let outcome = oracle.evaluate(query, effective_samples);
-        (outcome.solved(), samples)
+        (solved, samples)
     }
 
     /// Advance virtual time: thermal integration + idle energy for every
@@ -589,6 +793,12 @@ impl SimEngine {
             dev.thermal.step(&dev.spec, mean_power, dt_s);
             dev.window_energy_j = 0.0;
             dev.window_busy_s = 0.0;
+            // Shedding-band bookkeeping: a band crossing is a safety
+            // transition (bumps the version the plan cache keys on).
+            if self.options.features.safety {
+                let decision = self.options.guard.evaluate(&dev.spec, dev.thermal.temp_c());
+                dev.shed.observe(decision.shed_level());
+            }
             // Idle draw of the non-busy fraction (active joules already
             // include the busy-period idle share via the power model).
             self.ledger.record_idle(&id, idle_j);
@@ -614,7 +824,12 @@ impl SimEngine {
         Ok(self.report(queries.len(), solved, accuracy_hits))
     }
 
-    fn report(&self, n_queries: usize, solved: usize, accuracy_hits: usize) -> SimReport {
+    fn report(&mut self, n_queries: usize, solved: usize, accuracy_hits: usize) -> SimReport {
+        // The planner trail must reflect the final safety state —
+        // recoveries or graduations may land after the last query's
+        // window. With the plan cache on this is one more event-driven
+        // check (a cache hit unless the signature is genuinely new).
+        self.replan_if_stale();
         let utilization = self
             .devices
             .iter()
@@ -631,7 +846,18 @@ impl SimEngine {
         } else {
             self.recoveries.iter().sum::<f64>() / self.recoveries.len() as f64
         };
-        let (planner, plan_energy_j, plan_error) = self.layer_plan();
+        // Planner trail: with the plan cache on, the latest event-
+        // driven episode IS the current plan (plan_energy_j is that
+        // single plan's energy, never a sum across episodes); the
+        // legacy path re-plans cold at report time.
+        let (planner, plan_energy_j, plan_error) = if self.options.features.plan_cache {
+            match self.replan_trail.last() {
+                Some(event) => (event.planner, event.plan_energy_j, event.plan_error.clone()),
+                None => ("none", 0.0, None), // no layer planner enabled
+            }
+        } else {
+            self.layer_plan()
+        };
         SimReport {
             coverage: if n_queries > 0 { solved as f64 / n_queries as f64 } else { 0.0 },
             accuracy: if n_queries > 0 { accuracy_hits as f64 / n_queries as f64 } else { 0.0 },
@@ -667,8 +893,46 @@ impl SimEngine {
             } else {
                 None
             },
+            replans: self.replans,
+            plan_cache_hits: self.plan_cache_hits,
+            replan_trail: self.replan_trail.clone(),
         }
     }
+}
+
+/// Per-lane deadline accounting: walk the decode batches in service
+/// order and keep, per device, the prefix of samples that completes
+/// within `budget_s`. Returns the counted sample indices.
+///
+/// Stability argument (the ROADMAP apportionment sharp edge): each
+/// lane's `fit` depends only on its step time and the budget — not on
+/// how many samples were drawn — and `Batcher::assign_weighted` is
+/// prefix-stable, so a sample keeps both its lane and its service
+/// position under any larger total draw. Hence the counted set of a
+/// shortened draw (a cascade stop at `n' < N`) is exactly the counted
+/// set of the full budget restricted to indices `< n'`: a verified
+/// winner counted at full budget is counted whenever it is drawn.
+fn deadline_counted(
+    batches: &[Batch],
+    step_s: &BTreeMap<DeviceId, f64>,
+    output_tokens: u32,
+    budget_s: f64,
+) -> Vec<u32> {
+    let mut counted = Vec::new();
+    let mut position: BTreeMap<&DeviceId, u32> = BTreeMap::new();
+    for batch in batches {
+        let sample_s = step_s[&batch.device] * output_tokens as f64;
+        let fit =
+            if sample_s > 0.0 { (budget_s / sample_s).floor() as u32 } else { u32::MAX };
+        let pos = position.entry(&batch.device).or_insert(0);
+        for &sample in &batch.samples {
+            if *pos < fit {
+                counted.push(sample);
+            }
+            *pos += 1;
+        }
+    }
+    counted
 }
 
 #[cfg(test)]
@@ -975,5 +1239,234 @@ mod tests {
         for (id, u) in &r.utilization {
             assert!((0.0..=1.0 + 1e-9).contains(u), "{id}: {u}");
         }
+    }
+
+    #[test]
+    fn event_driven_replanning_plans_once_when_nothing_changes() {
+        // A healthy run with no failures: the only replans are the
+        // initial plan plus any thermal shedding-band crossings — and a
+        // crossing with an unchanged schedulability mask must hit the
+        // cache (same health signature, same plan).
+        let qs = queries(40);
+        let mut e = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r = e.run(&qs, 10).unwrap();
+        assert!(r.replans >= 1);
+        assert_eq!(r.replans as usize, r.replan_trail.len());
+        let first = &r.replan_trail[0];
+        assert_eq!(first.planner, "pgsam");
+        assert!(!first.cache_hit, "the first episode is always a cold miss");
+        assert!(!first.warm_restart, "no sibling archive exists yet");
+        for event in &r.replan_trail[1..] {
+            assert!(event.cache_hit, "unchanged health signature must hit the cache");
+            assert_eq!(event.plan, first.plan, "cache hit must return the identical plan");
+        }
+        // Versions strictly increase: one episode per safety transition
+        // batch, never a redundant replan.
+        for pair in r.replan_trail.windows(2) {
+            assert!(pair[0].version < pair[1].version, "replan without a version bump");
+        }
+        assert_eq!(r.planner, "pgsam");
+        assert!((r.plan_energy_j - first.plan_energy_j).abs() <= 1e-12 * first.plan_energy_j);
+    }
+
+    #[test]
+    fn plan_cache_off_reports_legacy_trail() {
+        let qs = queries(10);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions {
+                features: OrchestratorFeatures {
+                    plan_cache: false,
+                    ..OrchestratorFeatures::full()
+                },
+                ..Default::default()
+            },
+        );
+        let r = e.run(&qs, 5).unwrap();
+        assert_eq!(r.planner, "pgsam", "legacy per-report planning still labels the trail");
+        assert!(r.plan_energy_j > 0.0);
+        assert_eq!(r.replans, 0, "no event-driven episodes with the feature off");
+        assert_eq!(r.plan_cache_hits, 0);
+        assert!(r.replan_trail.is_empty());
+    }
+
+    #[test]
+    fn same_tick_failure_and_cascade_stop_do_not_double_count_plan_energy() {
+        // An npu0 crash at t=0 lands on the exact tick the first
+        // query's cascade stop resolves (the whole first query executes
+        // at clock 0). Tick ordering processes the failure BEFORE
+        // planning, so the trail carries exactly one cold episode for
+        // the degraded fleet and plan_energy_j is that single plan's
+        // energy — never a pre-failure plus post-failure sum.
+        let plan = FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.0,
+            recover_after_s: None,
+        }]);
+        let qs = queries(20);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { failure_plan: plan, ..Default::default() },
+        );
+        let r = e.run(&qs, 10).unwrap();
+        assert!(r.failures >= 1);
+        let first = &r.replan_trail[0];
+        assert_eq!(first.at_s, 0.0, "the failure tick is the first planning tick");
+        assert!(!first.cache_hit);
+        // The report's plan energy equals the LAST episode's (== the
+        // first's: no further signature change), not any accumulation.
+        let last = r.replan_trail.last().unwrap();
+        assert_eq!(r.plan_energy_j.to_bits(), last.plan_energy_j.to_bits());
+        assert_eq!(first.plan, last.plan);
+        let trail_sum: f64 = r.replan_trail.iter().map(|ev| ev.plan_energy_j).sum();
+        if r.replan_trail.len() > 1 {
+            assert!(
+                r.plan_energy_j < trail_sum,
+                "plan_energy_j must not accumulate across episodes"
+            );
+        }
+        // And it matches an independent cold plan on the degraded
+        // fleet bit-for-bit (same seed, same exclusion, no warm hint).
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut orch = Orchestrator::new(&fleet);
+        orch.exclude(&"npu0".into());
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta());
+        let cfg = PgsamConfig::default().with_seed(0);
+        let expected = orch.pgsam_outcome(&shape, &cfg).unwrap();
+        assert_eq!(r.plan_energy_j.to_bits(), expected.energy_j.to_bits());
+        assert_eq!(first.plan, expected.plan);
+    }
+
+    #[test]
+    fn failure_recovery_restores_cached_plan_bit_exactly() {
+        let plan = FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.2,
+            recover_after_s: Some(0.3),
+        }]);
+        let qs = queries(150);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { failure_plan: plan, ..Default::default() },
+        );
+        let r = e.run(&qs, 10).unwrap();
+        assert!(r.failures >= 1, "failure must fire");
+        assert!(r.recoveries >= 1, "recovery must fire");
+        // Three signatures crossed: healthy (cold), degraded (miss +
+        // warm restart), healthy again (pure cache hit).
+        let misses: Vec<_> = r.replan_trail.iter().filter(|ev| !ev.cache_hit).collect();
+        assert_eq!(misses.len(), 2, "exactly two distinct health signatures are planned");
+        // (Whether the degraded replan ENGAGES the healthy archive
+        // depends on a feasible point beating the degraded seed — with
+        // npu0 gone the healthy winner is infeasible, so no engagement
+        // is asserted here; the scenario matrix covers the engaged
+        // case with a victim the healthy plan never used.)
+        assert!(r.plan_cache_hits >= 1, "the recovered signature must hit the cache");
+        // The recovery episode is the LAST trail event (outage-time
+        // shed crossings may hit the degraded key legally; after
+        // recovery every lookup is the healthy signature again).
+        let first = &r.replan_trail[0];
+        let hit = r.replan_trail.last().unwrap();
+        assert!(hit.cache_hit, "the post-recovery replan must be a pure cache hit");
+        assert_eq!(first.plan, hit.plan, "recovery must restore the pre-failure plan");
+        assert_eq!(first.plan_energy_j.to_bits(), hit.plan_energy_j.to_bits());
+    }
+
+    #[test]
+    fn deadline_counting_is_stable_under_shortened_draws() {
+        // The satellite regression lock: construct a binding multi-lane
+        // deadline directly over the batcher + deadline accounting and
+        // assert the counted set of every shortened draw is the full
+        // counted set restricted to the drawn prefix — so a verified
+        // winner counted at full budget is counted whenever drawn.
+        let devices: Vec<DeviceId> =
+            ["fast", "mid", "slow"].iter().map(|d| DeviceId((*d).to_string())).collect();
+        // Service rates 1/step: the slow lane binds hard (fit 2), the
+        // mid lane moderately (fit 5), the fast lane comfortably.
+        let step_s: BTreeMap<DeviceId, f64> = [
+            (devices[0].clone(), 0.010),
+            (devices[1].clone(), 0.022),
+            (devices[2].clone(), 0.050),
+        ]
+        .into_iter()
+        .collect();
+        let rates: Vec<f64> = devices.iter().map(|d| 1.0 / step_s[d]).collect();
+        let batcher = Batcher { max_batch: 4 };
+        let output_tokens = 8u32;
+        let budget_s = 0.9; // fits: fast 11, mid 5, slow 2
+        let full_n = 24u32;
+        let full_batches = batcher.assign_weighted(full_n, &devices, &rates);
+        let mut full_counted =
+            deadline_counted(&full_batches, &step_s, output_tokens, budget_s);
+        full_counted.sort_unstable();
+        assert!(
+            (full_counted.len() as u32) < full_n,
+            "deadline must actually bind: counted {full_counted:?}"
+        );
+        assert!(!full_counted.is_empty());
+        for drawn in 1..=full_n {
+            let batches = batcher.assign_weighted(drawn, &devices, &rates);
+            let mut counted = deadline_counted(&batches, &step_s, output_tokens, budget_s);
+            counted.sort_unstable();
+            let expect: Vec<u32> =
+                full_counted.iter().copied().filter(|&s| s < drawn).collect();
+            assert_eq!(
+                counted, expect,
+                "draw {drawn}: counted set is not the restricted full set"
+            );
+        }
+        // Name the winner explicitly: the last counted full-budget
+        // sample plays the verified winner — it must be counted in
+        // every draw that includes it.
+        let winner = *full_counted.last().unwrap();
+        for drawn in winner + 1..=full_n {
+            let batches = batcher.assign_weighted(drawn, &devices, &rates);
+            let counted = deadline_counted(&batches, &step_s, output_tokens, budget_s);
+            assert!(
+                counted.contains(&winner),
+                "draw {drawn}: verified winner {winner} truncated"
+            );
+        }
+    }
+
+    #[test]
+    fn binding_deadline_cascade_never_beats_nor_loses_to_full_budget_unfairly() {
+        // Engine-level view of the same invariant: under a deadline
+        // tight enough to bind the multi-lane fan-out, the cascade run
+        // can never count a sample the full-budget run would not
+        // (counted sets are nested), so its coverage is bounded by the
+        // full-budget run's.
+        let qs = queries(80);
+        let tight = |cascade: bool| SimOptions {
+            features: OrchestratorFeatures {
+                selection_cascade: cascade,
+                ..OrchestratorFeatures::full()
+            },
+            sla_sample_multiple: Some(3.0),
+            ..Default::default()
+        };
+        let r_on = engine(FleetPreset::EdgeBox, tight(true)).run(&qs, 20).unwrap();
+        let r_off = engine(FleetPreset::EdgeBox, tight(false)).run(&qs, 20).unwrap();
+        let r_free = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { sla_sample_multiple: None, ..tight(false) },
+        )
+        .run(&qs, 20)
+        .unwrap();
+        assert!(
+            r_off.coverage < r_free.coverage,
+            "multiple 3.0 must bind: {} vs unconstrained {}",
+            r_off.coverage,
+            r_free.coverage
+        );
+        assert!(
+            r_on.coverage <= r_off.coverage + 1e-12,
+            "nested counted sets: cascade {} vs full {}",
+            r_on.coverage,
+            r_off.coverage
+        );
+        assert!(r_on.coverage > 0.0);
     }
 }

@@ -1,7 +1,7 @@
 //! Property-based tests over coordinator + safety invariants (seeded
 //! random cases via `qeil::testing::check`; no artifacts needed).
 
-use qeil::coordinator::allocation::ModelShape;
+use qeil::coordinator::allocation::{Allocation, ModelShape};
 use qeil::coordinator::batcher::Batcher;
 use qeil::coordinator::exact::optimal_assignment;
 use qeil::coordinator::orchestrator::Orchestrator;
@@ -142,6 +142,136 @@ fn prop_pgsam_deterministic_under_fixed_seed() {
         prop_assert!(a.layers == b.layers, "layer plan differs across runs");
         prop_assert!(a.lm_head == b.lm_head, "lm_head differs across runs");
         prop_assert!(ea == eb, "energy differs across runs: {ea} vs {eb}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pgsam_warm_restart_deterministic_and_never_worse_than_cold() {
+    // The plan-cache warm-restart contract, across all presets and
+    // seeds: seeding PGSAM with the Pareto archive of a cold anneal of
+    // the same key (the anneal self-reduces to the eighth warm budget
+    // when a feasible point engages) (a) is deterministic, (b) never
+    // yields higher energy than the cold anneal — the archive contains
+    // the cold winner, which floors the warm walk — and (c) still
+    // respects memory on every fleet preset. After a device failure
+    // (new health signature), the stale archive is filtered and the
+    // warm result keeps PGSAM's standing never-worse-than-greedy floor
+    // (full cold budget when nothing feasible survives).
+    check("pgsam warm restart", 40, |rng| {
+        let family = random_family(rng);
+        let layers = 1 + rng.below(16) as usize;
+        let shape = ModelShape::from_family(family, &meta(layers));
+        let presets = [
+            FleetPreset::EdgeBox,
+            FleetPreset::MultiVendor,
+            FleetPreset::NpuOnly,
+            FleetPreset::CpuOnly,
+            FleetPreset::GpuOnly,
+            FleetPreset::IgpuOnly,
+            FleetPreset::Cloud,
+        ];
+        let fleet = Fleet::preset(presets[rng.below(presets.len() as u64) as usize]);
+        let orch = Orchestrator::new(&fleet);
+        let cfg = PgsamConfig::default().with_seed(rng.next_u64());
+        let Ok(cold) = orch.pgsam_outcome(&shape, &cfg) else {
+            return Ok(()); // infeasible is a legal outcome
+        };
+        let Ok(warm) = orch.pgsam_outcome_warm(&shape, &cfg, &cold.archive) else {
+            return Err("warm restart must be feasible when cold is".to_string());
+        };
+        prop_assert!(
+            warm.energy_j <= cold.energy_j * (1.0 + 1e-9),
+            "warm {} > cold {}",
+            warm.energy_j,
+            cold.energy_j
+        );
+        let alloc = Allocation::from_indices(&fleet, &warm.plan);
+        prop_assert!(
+            alloc.check_memory(&shape, &fleet).is_ok(),
+            "warm plan violates memory"
+        );
+        let Ok(again) = orch.pgsam_outcome_warm(&shape, &cfg, &cold.archive) else {
+            return Err("warm restart must be reproducible".to_string());
+        };
+        prop_assert!(again.plan == warm.plan, "warm restart is not deterministic");
+        prop_assert!(
+            again.energy_j.to_bits() == warm.energy_j.to_bits(),
+            "warm restart energy not bit-reproducible"
+        );
+
+        // Degraded fleet: the healthy archive is a stale hint — the
+        // greedy floor must still hold and no excluded device may
+        // appear in the plan.
+        if fleet.len() >= 2 {
+            let excluded = fleet.devices()[rng.below(fleet.len() as u64) as usize].id.clone();
+            let mut degraded = Orchestrator::new(&fleet);
+            degraded.exclude(&excluded);
+            match (degraded.assign(&shape), degraded.pgsam_outcome_warm(&shape, &cfg, &cold.archive)) {
+                (Ok(greedy), Ok(w)) => {
+                    let greedy_e = degraded.allocation_energy_j(&shape, &greedy);
+                    prop_assert!(
+                        w.energy_j <= greedy_e * (1.0 + 1e-9),
+                        "degraded warm {} > greedy {greedy_e}",
+                        w.energy_j
+                    );
+                    prop_assert!(
+                        w.plan.iter().all(|&d| fleet.id_at(d) != &excluded),
+                        "warm plan uses the excluded device"
+                    );
+                    let w_alloc = Allocation::from_indices(&fleet, &w.plan);
+                    prop_assert!(
+                        w_alloc.check_memory(&shape, &fleet).is_ok(),
+                        "degraded warm plan violates memory"
+                    );
+                }
+                (Err(_), Err(_)) => {} // both infeasible: legal
+                (g, w) => {
+                    return Err(format!(
+                        "degraded feasibility disagreement: greedy {:?}, warm {:?}",
+                        g.is_ok(),
+                        w.is_ok()
+                    ))
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_weighted_apportionment_prefix_stable_and_monotone() {
+    // The SLA-deadline accounting depends on this (ROADMAP sharp edge):
+    // the weighted batcher's divisor sequence must assign the first n
+    // samples identically under every larger total, making per-device
+    // shares componentwise monotone in the sample count.
+    use qeil::coordinator::batcher::Batch;
+    check("apportionment stability", 120, |rng| {
+        let n_devices = 1 + rng.below(6) as usize;
+        let devices: Vec<DeviceId> =
+            (0..n_devices).map(|i| DeviceId(format!("d{i}"))).collect();
+        let rates: Vec<f64> = (0..n_devices).map(|_| rng.range_f64(0.05, 8.0)).collect();
+        let n_max = 1 + rng.below(60) as u32;
+        let batcher = Batcher { max_batch: 1 + rng.below(16) as usize };
+        let owner_of = |batches: &[Batch], n: u32| -> Vec<usize> {
+            let mut owner = vec![usize::MAX; n as usize];
+            for batch in batches {
+                let di = devices.iter().position(|d| d == &batch.device).unwrap();
+                for &s in &batch.samples {
+                    owner[s as usize] = di;
+                }
+            }
+            owner
+        };
+        let full = owner_of(&batcher.assign_weighted(n_max, &devices, &rates), n_max);
+        prop_assert!(full.iter().all(|&d| d != usize::MAX), "unassigned sample at full draw");
+        for n in 0..n_max {
+            let owner = owner_of(&batcher.assign_weighted(n, &devices, &rates), n);
+            prop_assert!(
+                owner[..] == full[..n as usize],
+                "draw {n} is not a prefix of draw {n_max}"
+            );
+        }
         Ok(())
     });
 }
