@@ -18,7 +18,12 @@ use qeil::coordinator::orchestrator::Orchestrator;
 use qeil::coordinator::pgsam::PgsamConfig;
 use qeil::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind};
 use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::devices::spec::DevIdx;
 use qeil::experiments::runner::default_meta;
+use qeil::gateway::{
+    AdmissionConfig, AdmissionController, GatewayRequest, SlaClass, SlaQueues, TelemetryProbe,
+    WaveScheduler,
+};
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
@@ -172,6 +177,53 @@ fn main() {
             std::hint::black_box(cs.decision(19 - i));
         }
         std::hint::black_box(cs.p_ucb());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Gateway admission hot path: one shed-ladder evaluation (Phi/CPQ
+    // bands over the lanes) + token-bucket probe per request. Gated by
+    // scripts/check_bench.sh — this sits on the per-request critical
+    // path of the serving gateway.
+    let probe = TelemetryProbe::new(&fleet, &shape);
+    let snap = probe.snapshot(0.0);
+    let lanes: Vec<DevIdx> = (0..fleet.len() as u16).map(DevIdx).collect();
+    let mut admission = AdmissionController::new(AdmissionConfig::default());
+    let mut tick = 0u64;
+    let r = b.run("gateway_admission(edge-box, ladder + bucket)", || {
+        tick += 1;
+        let class = SlaClass::all()[(tick % 3) as usize];
+        let level = admission.effective_level(&snap, &lanes, 0.3);
+        std::hint::black_box(admission.admit((tick % 8) as u32, class, tick as f64 * 1e-3, level));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Gateway wave dispatch: enqueue a 64-request multi-tenant backlog
+    // (EDF inserts), form one class-priority/D'Hondt wave, and bind it
+    // to the lanes with the weighted apportionment — all three gateway
+    // hot paths, no container clones in the timed body. Gated
+    // (per-wave scheduler cost).
+    let backlog: Vec<GatewayRequest> = (0..64u64)
+        .map(|i| GatewayRequest {
+            id: i,
+            tenant: (i % 4) as u32,
+            class: SlaClass::all()[(i % 3) as usize],
+            arrival_s: 0.0,
+            deadline_s: 1.0 + i as f64 * 1e-3,
+            prompt_tokens: 32,
+            output_tokens: 16,
+        })
+        .collect();
+    let mut scheduler = WaveScheduler::new(&[1.0; 4]);
+    scheduler.ensure_routes(&fleet, &shape, &snap, 4, 0.0);
+    let r = b.run("gateway_dispatch_wave(64 queued, 4 tenants)", || {
+        let mut queues = SlaQueues::new(16);
+        for req in &backlog {
+            queues.enqueue(req.clone()).expect("backlog fits the queue bound");
+        }
+        let wave = scheduler.form_wave(&mut queues, 16);
+        std::hint::black_box(scheduler.dispatch(&wave, 0.0, &snap));
     });
     println!("{}", r.report());
     results.push(r);

@@ -11,6 +11,7 @@ use anyhow::Result;
 
 use qeil::config::ExperimentConfig;
 use qeil::experiments::runner::{run_config, run_pair};
+use qeil::gateway::SlaClass;
 use qeil::rng::Pcg;
 use qeil::server::api::InferenceRequest;
 use qeil::server::service::{Service, ServiceConfig};
@@ -33,6 +34,7 @@ fn main() -> Result<()> {
             (0..config.max_prompt_tokens).map(|_| rng.below(config.vocab as u64) as i64).collect();
         let request = InferenceRequest {
             client_id: traced.client_id,
+            class: SlaClass::Interactive,
             prompt,
             max_new_tokens: 12,
             temperature: 0.8,

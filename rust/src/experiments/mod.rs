@@ -7,6 +7,7 @@
 pub mod breakdown;
 pub mod components;
 pub mod crossdataset;
+pub mod gateway_load;
 pub mod heterogeneity;
 pub mod report;
 pub mod runner;
@@ -22,7 +23,7 @@ use report::Table;
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
-    "t15", "t16", "f2", "f3", "f4", "f5", "f6", "regimes",
+    "t15", "t16", "f2", "f3", "f4", "f5", "f6", "regimes", "gateway",
 ];
 
 /// Run one experiment by id.
@@ -68,6 +69,7 @@ pub fn run_experiment(id: &str, queries: usize, seed: u64) -> Result<Table> {
         "f5" => scaling::figure5(queries, seed)?,
         "f6" => scaling::figure6(queries, seed)?,
         "regimes" => crossdataset::regimes(seed)?,
+        "gateway" => gateway_load::gateway_table(seed)?,
         other => bail!("unknown experiment {other:?} (available: {ALL_IDS:?})"),
     })
 }

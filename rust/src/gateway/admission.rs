@@ -1,0 +1,241 @@
+//! Telemetry-gated admission: the SLA shed ladder over the fleet's
+//! pressure bands, composed with the existing per-client token-bucket
+//! [`RateLimiter`].
+//!
+//! The controller folds three pressure sources into ONE effective band
+//! on the same 0..=[`SHED_LEVELS`] scale the thermal guard quantizes
+//! Eq. 8 into, so every consumer (admission here, re-planning in the
+//! sim) speaks the same ladder:
+//!
+//! 1. **Phi (thermal)** — the minimum shedding band over the executor
+//!    lanes: shedding engages only once EVERY lane is pressured (a cool
+//!    lane can still absorb Batch work).
+//! 2. **CPQ (memory)** — the minimum memory pressure over the lanes,
+//!    quantized at a caution and a critical threshold (bands 1 and 2).
+//! 3. **Queue backpressure** — gateway backlog over total queue
+//!    capacity, same two thresholds. This is what differentiates the
+//!    classes under overload even when the fleet is thermally cool:
+//!    Batch stops being admitted once the queues half-fill, Standard
+//!    once they are nearly full, and Interactive is never
+//!    backpressure-shed (bands from this source cap at 2).
+//!
+//! The ladder itself lives on [`SlaClass::sheddable_at`]: Batch drops at
+//! band ≥ 1, Standard at band ≥ 2, Interactive only at the top band.
+
+use crate::devices::spec::DevIdx;
+use crate::safety::ratelimit::RateLimiter;
+use crate::safety::thermal_guard::SHED_LEVELS;
+
+use super::queue::SlaClass;
+use super::telemetry::FleetTelemetry;
+
+/// Admission policy knobs.
+#[derive(Debug, Clone)]
+pub struct AdmissionConfig {
+    /// Per-tenant sustained allowance (requests/s). The default is
+    /// effectively unlimited — rate limiting is an opt-in tenant policy,
+    /// not the overload-control mechanism (that is the shed ladder).
+    pub rate_per_s: f64,
+    pub burst: f64,
+    /// CPQ band thresholds (bands 1 and 2).
+    pub cpq_caution: f64,
+    pub cpq_critical: f64,
+    /// Queue-backpressure band thresholds (bands 1 and 2).
+    pub queue_caution: f64,
+    pub queue_critical: f64,
+}
+
+impl Default for AdmissionConfig {
+    fn default() -> Self {
+        AdmissionConfig {
+            rate_per_s: 1e9,
+            burst: 1e9,
+            cpq_caution: 0.85,
+            cpq_critical: 0.95,
+            // Tuned against the expiry-capped backlog equilibrium: a
+            // queue row under sustained overload settles near
+            // deadline_multiple × per-class offered rate ≈ 0.4 of a
+            // 32-slot row on single-lane fleets, so caution must sit
+            // below that for the Batch shed to engage on every preset.
+            queue_caution: 0.3,
+            queue_critical: 0.75,
+        }
+    }
+}
+
+/// Outcome of one admission decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum AdmitDecision {
+    Admit,
+    /// Blocked by the per-tenant token bucket.
+    RateLimited,
+    /// Dropped by the shed ladder at the given effective band.
+    Shed { level: u8 },
+}
+
+/// The admission controller: shed ladder first (an overloaded fleet
+/// rejects before charging the tenant's token bucket), rate limit
+/// second.
+#[derive(Debug, Clone)]
+pub struct AdmissionController {
+    config: AdmissionConfig,
+    limiter: RateLimiter,
+}
+
+impl AdmissionController {
+    pub fn new(config: AdmissionConfig) -> AdmissionController {
+        let limiter = RateLimiter::new(config.rate_per_s.max(1e-9), config.burst.max(1.0));
+        AdmissionController { config, limiter }
+    }
+
+    /// Fold thermal (Phi), memory (CPQ), and queue pressure into one
+    /// effective shedding band over the given executor lanes.
+    /// `queue_utilization` is backlog over queue capacity in [0, ∞).
+    /// No routable lane at all is maximal pressure.
+    pub fn effective_level(
+        &self,
+        telemetry: &FleetTelemetry,
+        lanes: &[DevIdx],
+        queue_utilization: f64,
+    ) -> u8 {
+        let mut thermal: Option<u8> = None;
+        let mut cpq: Option<f64> = None;
+        for d in &telemetry.devices {
+            if !d.schedulable || !lanes.contains(&d.dev) {
+                continue;
+            }
+            thermal = Some(thermal.map_or(d.shed_level, |t: u8| t.min(d.shed_level)));
+            cpq = Some(cpq.map_or(d.cpq, |c: f64| c.min(d.cpq)));
+        }
+        let (Some(thermal), Some(cpq)) = (thermal, cpq) else {
+            return SHED_LEVELS;
+        };
+        let band = |value: f64, caution: f64, critical: f64| -> u8 {
+            if value >= critical {
+                2
+            } else if value >= caution {
+                1
+            } else {
+                0
+            }
+        };
+        let cpq_band = band(cpq, self.config.cpq_caution, self.config.cpq_critical);
+        let queue_band =
+            band(queue_utilization, self.config.queue_caution, self.config.queue_critical);
+        thermal.max(cpq_band).max(queue_band).min(SHED_LEVELS)
+    }
+
+    /// Decide one request at the already-computed effective band.
+    pub fn admit(&mut self, tenant: u32, class: SlaClass, now_s: f64, level: u8) -> AdmitDecision {
+        if class.sheddable_at(level) {
+            return AdmitDecision::Shed { level };
+        }
+        if !self.limiter.admit(tenant, now_s) {
+            return AdmitDecision::RateLimited;
+        }
+        AdmitDecision::Admit
+    }
+
+    /// Tenants currently tracked by the rate limiter.
+    pub fn tracked_tenants(&self) -> usize {
+        self.limiter.clients()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::telemetry::DeviceTelemetry;
+
+    fn snapshot(levels: &[(u8, f64)]) -> FleetTelemetry {
+        // (shed_level, cpq) per device.
+        FleetTelemetry {
+            at_s: 0.0,
+            safety_version: 0,
+            devices: levels
+                .iter()
+                .enumerate()
+                .map(|(i, &(shed_level, cpq))| DeviceTelemetry {
+                    dev: DevIdx(i as u16),
+                    dasi: 0.1,
+                    cpq,
+                    phi: 1.0 - shed_level as f64 / SHED_LEVELS as f64,
+                    shed_level,
+                    temp_c: 40.0,
+                    schedulable: true,
+                    step_s: 1e-3,
+                    prefill_unit_s: 1e-5,
+                    active_power_w: 10.0,
+                })
+                .collect(),
+        }
+    }
+
+    #[test]
+    fn thermal_band_is_min_over_lanes() {
+        let ctl = AdmissionController::new(AdmissionConfig::default());
+        let snap = snapshot(&[(3, 0.1), (0, 0.1)]);
+        let both = vec![DevIdx(0), DevIdx(1)];
+        assert_eq!(ctl.effective_level(&snap, &both, 0.0), 0, "a cool lane absorbs load");
+        assert_eq!(ctl.effective_level(&snap, &[DevIdx(0)], 0.0), 3, "hot-only lanes shed");
+        assert_eq!(ctl.effective_level(&snap, &[], 0.0), SHED_LEVELS, "no lane = max band");
+    }
+
+    #[test]
+    fn cpq_and_queue_bands_quantize_at_thresholds() {
+        let ctl = AdmissionController::new(AdmissionConfig::default());
+        let lanes = vec![DevIdx(0)];
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.84)]), &lanes, 0.0), 0);
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.85)]), &lanes, 0.0), 1);
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.95)]), &lanes, 0.0), 2);
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.1)]), &lanes, 0.29), 0);
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.1)]), &lanes, 0.3), 1);
+        assert_eq!(ctl.effective_level(&snapshot(&[(0, 0.1)]), &lanes, 0.8), 2);
+        // Sources combine by max, capped at the ladder top.
+        assert_eq!(ctl.effective_level(&snapshot(&[(4, 0.99)]), &lanes, 2.0), SHED_LEVELS);
+    }
+
+    #[test]
+    fn ladder_decisions_follow_class_order() {
+        let mut ctl = AdmissionController::new(AdmissionConfig::default());
+        let admitted = |ctl: &mut AdmissionController, level: u8| -> Vec<SlaClass> {
+            SlaClass::all()
+                .into_iter()
+                .filter(|c| matches!(ctl.admit(0, *c, 0.0, level), AdmitDecision::Admit))
+                .collect()
+        };
+        assert_eq!(admitted(&mut ctl, 0).len(), 3);
+        assert_eq!(
+            admitted(&mut ctl, 1),
+            vec![SlaClass::Interactive, SlaClass::Standard],
+            "band 1 drops Batch only"
+        );
+        assert_eq!(admitted(&mut ctl, 2), vec![SlaClass::Interactive]);
+        assert_eq!(admitted(&mut ctl, 3), vec![SlaClass::Interactive]);
+        assert!(admitted(&mut ctl, SHED_LEVELS).is_empty(), "top band sheds everything");
+    }
+
+    #[test]
+    fn rate_limit_composes_after_the_ladder() {
+        let mut ctl = AdmissionController::new(AdmissionConfig {
+            rate_per_s: 10.0,
+            burst: 2.0,
+            ..Default::default()
+        });
+        assert_eq!(ctl.admit(7, SlaClass::Interactive, 0.0, 0), AdmitDecision::Admit);
+        assert_eq!(ctl.admit(7, SlaClass::Interactive, 0.0, 0), AdmitDecision::Admit);
+        assert_eq!(ctl.admit(7, SlaClass::Interactive, 0.0, 0), AdmitDecision::RateLimited);
+        // A shed request never consumes the tenant's tokens.
+        let mut fresh = AdmissionController::new(AdmissionConfig {
+            rate_per_s: 10.0,
+            burst: 1.0,
+            ..Default::default()
+        });
+        assert!(matches!(
+            fresh.admit(1, SlaClass::Batch, 0.0, 1),
+            AdmitDecision::Shed { level: 1 }
+        ));
+        assert_eq!(fresh.admit(1, SlaClass::Batch, 0.0, 0), AdmitDecision::Admit);
+        assert_eq!(ctl.tracked_tenants(), 1);
+    }
+}

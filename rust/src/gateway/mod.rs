@@ -1,0 +1,520 @@
+//! The telemetry-driven serving gateway: SLA-class admission, per-tenant
+//! bounded deadline queues, and continuous wave batching over a pool of
+//! executor lanes — the admission/dispatch layer that makes the
+//! planner/safety substrate of PRs 1–3 reachable from a request.
+//!
+//! Pipeline per request: shed ladder over fleet telemetry (Phi thermal
+//! yield, CPQ memory pressure, queue backpressure — [`admission`]) →
+//! per-tenant token bucket → bounded EDF queue ([`queue`]) → wave
+//! formation (strict class priority + cumulative D'Hondt tenant fair
+//! share) → weighted lane dispatch ([`scheduler`]). Telemetry snapshots
+//! roll at a configurable cadence ([`telemetry`]); a `safety_version`
+//! bump (thermal shedding-band crossing) invalidates the current lane
+//! route, mirroring the PR-3 plan-cache consumer contract.
+//!
+//! The whole subsystem runs on an injected logical clock: [`Gateway`]
+//! consumes arrival-stamped [`GatewayRequest`]s and never reads wall
+//! time, so full runs are bit-deterministic under a fixed seed —
+//! property-testable end to end (`rust/tests/gateway_properties.rs`).
+
+pub mod admission;
+pub mod queue;
+pub mod scheduler;
+pub mod telemetry;
+
+pub use admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+pub use queue::{GatewayRequest, SlaClass, SlaQueues};
+pub use scheduler::{DispatchRecord, FairShare, Lane, WaveScheduler};
+pub use telemetry::{DeviceTelemetry, FleetTelemetry, TelemetryProbe};
+
+use crate::coordinator::allocation::ModelShape;
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::experiments::runner::default_meta;
+use crate::json::Json;
+use crate::rng::Pcg;
+use crate::workload::datasets::ModelFamily;
+
+/// Gateway configuration.
+#[derive(Debug, Clone)]
+pub struct GatewayConfig {
+    pub fleet: FleetPreset,
+    pub family: ModelFamily,
+    pub tenants: u32,
+    /// Per-tenant fair-share weights (equal when `None`).
+    pub tenant_weights: Option<Vec<f64>>,
+    /// Bound per `(tenant, class)` queue.
+    pub queue_depth: usize,
+    /// Wave slots per free lane.
+    pub wave_per_lane: usize,
+    /// Decode fan-out cap for lane routing.
+    pub max_decode_devices: usize,
+    pub admission: AdmissionConfig,
+    /// Telemetry snapshot cadence / thermal integration chunk (s).
+    pub telemetry_refresh_s: f64,
+    /// Deadline scale: every request's deadline is `arrival +
+    /// deadline_multiple × best-case service time`. One shared scale —
+    /// classes differentiate through dispatch priority and the shed
+    /// ladder, which is what makes the Interactive ≥ Standard ≥ Batch
+    /// hit-rate ordering structural (a looser Batch deadline would let
+    /// drain-phase Batch dispatches outscore starved Standard traffic).
+    pub deadline_multiple: f64,
+    pub seed: u64,
+}
+
+impl Default for GatewayConfig {
+    fn default() -> Self {
+        GatewayConfig {
+            fleet: FleetPreset::EdgeBox,
+            family: ModelFamily::Gpt2,
+            tenants: 4,
+            tenant_weights: None,
+            queue_depth: 8,
+            wave_per_lane: 4,
+            max_decode_devices: 4,
+            admission: AdmissionConfig::default(),
+            telemetry_refresh_s: 0.25,
+            deadline_multiple: 12.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Per-class accounting. Invariants (checked by the property tests):
+/// `submitted = admitted + shed + rate_limited + overflow` and, once a
+/// run drains, `admitted = completed + expired`.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassStats {
+    pub submitted: u64,
+    pub admitted: u64,
+    /// Dropped by the shed ladder at admission.
+    pub shed: u64,
+    pub rate_limited: u64,
+    /// Dropped because the tenant's class queue was full.
+    pub overflow: u64,
+    /// Dropped from the queue after the deadline passed unserved.
+    pub expired: u64,
+    pub completed: u64,
+    pub deadline_hits: u64,
+    /// Effective band of this class's first shed drop, when any.
+    pub first_shed_level: Option<u8>,
+}
+
+impl ClassStats {
+    /// Deadline hit-rate over everything SUBMITTED (not just admitted):
+    /// shed/overflow/expired requests count against the class, so the
+    /// SLA ordering cannot be gamed by admission survivorship.
+    pub fn hit_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 1.0;
+        }
+        self.deadline_hits as f64 / self.submitted as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("admitted", Json::Num(self.admitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("rate_limited", Json::Num(self.rate_limited as f64)),
+            ("overflow", Json::Num(self.overflow as f64)),
+            ("expired", Json::Num(self.expired as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("deadline_hits", Json::Num(self.deadline_hits as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+            (
+                "first_shed_level",
+                self.first_shed_level.map(|l| Json::Num(l as f64)).unwrap_or(Json::Null),
+            ),
+        ])
+    }
+}
+
+/// End-of-run statistics.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayReport {
+    /// Indexed by [`SlaClass::index`].
+    pub classes: [ClassStats; 3],
+    pub per_tenant_dispatched: Vec<u64>,
+    pub waves: u64,
+    pub reroutes: u64,
+    pub safety_version: u64,
+    pub max_shed_level: u8,
+    pub wall_s: f64,
+    pub energy_j: f64,
+    pub idle_energy_j: f64,
+    /// Per-device active busy seconds, fleet order.
+    pub lane_busy_s: Vec<(String, f64)>,
+}
+
+impl GatewayReport {
+    pub fn class(&self, class: SlaClass) -> &ClassStats {
+        &self.classes[class.index()]
+    }
+
+    /// Machine-readable form (`serve --gateway --stats-json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "classes",
+                Json::obj(
+                    SlaClass::all()
+                        .iter()
+                        .map(|c| (c.as_str(), self.class(*c).to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "tenant_dispatched",
+                Json::arr(
+                    self.per_tenant_dispatched.iter().map(|&n| Json::Num(n as f64)).collect(),
+                ),
+            ),
+            ("waves", Json::Num(self.waves as f64)),
+            ("reroutes", Json::Num(self.reroutes as f64)),
+            ("safety_version", Json::Num(self.safety_version as f64)),
+            ("max_shed_level", Json::Num(self.max_shed_level as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("energy_j", Json::Num(self.energy_j)),
+            ("idle_energy_j", Json::Num(self.idle_energy_j)),
+            (
+                "device_busy_s",
+                Json::obj(
+                    self.lane_busy_s.iter().map(|(id, s)| (id.as_str(), Json::Num(*s))).collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// The gateway driver: owns the queues, admission controller, telemetry
+/// probe, and wave scheduler, and runs arrival-stamped traces on the
+/// logical clock.
+pub struct Gateway {
+    config: GatewayConfig,
+    fleet: Fleet,
+    shape: ModelShape,
+    probe: TelemetryProbe,
+    admission: AdmissionController,
+    queues: SlaQueues,
+    scheduler: WaveScheduler,
+    snap: FleetTelemetry,
+    clock_s: f64,
+    classes: [ClassStats; 3],
+    max_shed_level: u8,
+}
+
+impl Gateway {
+    pub fn new(config: GatewayConfig) -> Gateway {
+        let fleet = Fleet::preset(config.fleet);
+        let shape = ModelShape::from_family(config.family, &default_meta(config.family));
+        let probe = TelemetryProbe::new(&fleet, &shape);
+        let snap = probe.snapshot(0.0);
+        let tenants = config.tenants.max(1) as usize;
+        let weights = match &config.tenant_weights {
+            Some(w) if w.len() == tenants => w.clone(),
+            _ => vec![1.0; tenants],
+        };
+        Gateway {
+            admission: AdmissionController::new(config.admission.clone()),
+            queues: SlaQueues::new(config.queue_depth),
+            scheduler: WaveScheduler::new(&weights),
+            snap,
+            probe,
+            fleet,
+            shape,
+            clock_s: 0.0,
+            classes: Default::default(),
+            max_shed_level: 0,
+            config,
+        }
+    }
+
+    pub fn clock_s(&self) -> f64 {
+        self.clock_s
+    }
+
+    /// Best-case service seconds for a request on this fleet — the
+    /// scale deadlines are set on.
+    pub fn unloaded_service_s(&self, prompt_tokens: u32, output_tokens: u32) -> f64 {
+        self.probe.unloaded_service_s(prompt_tokens, output_tokens)
+    }
+
+    /// Build a request with its SLA deadline stamped relative to the
+    /// fleet's best-case service time.
+    pub fn make_request(
+        &self,
+        id: u64,
+        tenant: u32,
+        class: SlaClass,
+        arrival_s: f64,
+        prompt_tokens: u32,
+        output_tokens: u32,
+    ) -> GatewayRequest {
+        let est = self.unloaded_service_s(prompt_tokens, output_tokens);
+        GatewayRequest {
+            id,
+            tenant,
+            class,
+            arrival_s,
+            deadline_s: arrival_s + self.config.deadline_multiple * est,
+            prompt_tokens,
+            output_tokens,
+        }
+    }
+
+    /// Synthetic multi-tenant overload trace: Poisson arrivals at
+    /// `overload ×` the fleet's aggregate best-case service rate, token
+    /// counts jittered ±25%, classes interleaved one-per-arrival (every
+    /// class continuously present — the regime the SLA ordering is
+    /// specified in), tenants cycling one step per class round so class
+    /// and tenant stay decorrelated for every tenant count. `class`
+    /// pins every request to one class instead of the mixed rotation.
+    pub fn overload_trace(
+        &self,
+        n: usize,
+        overload: f64,
+        class: Option<SlaClass>,
+    ) -> Vec<GatewayRequest> {
+        let mut rng = Pcg::new(self.config.seed, 0x6A7E_1A7E);
+        let per_device_rate: f64 = self
+            .snap
+            .devices
+            .iter()
+            .map(|d| 1.0 / (32.0 * d.prefill_unit_s + 16.0 * d.step_s))
+            .sum();
+        let rate = (overload * per_device_rate).max(1e-9);
+        let tenants = self.config.tenants.max(1);
+        let mut arrival_s = 0.0;
+        (0..n)
+            .map(|i| {
+                arrival_s += rng.next_exp(rate);
+                let cls = class.unwrap_or(SlaClass::all()[i % 3]);
+                let tenant = ((i / 3) as u32) % tenants;
+                let prompt = 24 + rng.below(17) as u32;
+                let output = 12 + rng.below(9) as u32;
+                self.make_request(i as u64, tenant, cls, arrival_s, prompt, output)
+            })
+            .collect()
+    }
+
+    /// Refresh the rolling snapshot when it is older than the cadence
+    /// or the safety version moved (a band crossing must be visible to
+    /// the very next admission/routing decision).
+    fn refresh_snapshot(&mut self) {
+        let stale = self.clock_s - self.snap.at_s >= self.config.telemetry_refresh_s
+            || self.snap.safety_version != self.probe.safety_version();
+        if stale {
+            self.snap = self.probe.snapshot(self.clock_s);
+        }
+    }
+
+    /// Admit one request at the current clock. Tenant ids fold into the
+    /// configured tenant range — an out-of-range tenant would otherwise
+    /// be admitted into a queue the fair-share selector never visits
+    /// and silently expire there.
+    fn submit(&mut self, mut req: GatewayRequest) {
+        req.tenant %= self.config.tenants.max(1);
+        let ci = req.class.index();
+        self.classes[ci].submitted += 1;
+        let lanes = self.scheduler.lane_devs();
+        let queue_util = self.queues.utilization(self.config.tenants.max(1));
+        let level = self.admission.effective_level(&self.snap, &lanes, queue_util);
+        self.max_shed_level = self.max_shed_level.max(level);
+        match self.admission.admit(req.tenant, req.class, self.clock_s, level) {
+            AdmitDecision::Admit => match self.queues.enqueue(req) {
+                Ok(()) => self.classes[ci].admitted += 1,
+                Err(_) => self.classes[ci].overflow += 1,
+            },
+            AdmitDecision::RateLimited => self.classes[ci].rate_limited += 1,
+            AdmitDecision::Shed { level } => {
+                let stats = &mut self.classes[ci];
+                stats.shed += 1;
+                if stats.first_shed_level.is_none() {
+                    stats.first_shed_level = Some(level);
+                }
+            }
+        }
+    }
+
+    /// Advance the logical clock, integrating telemetry in
+    /// cadence-sized chunks while busy backlog remains (idle stretches
+    /// fast-forward in one exact step — see
+    /// [`TelemetryProbe::advance_chunked`]).
+    fn advance(&mut self, dt_s: f64) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        self.probe.advance_chunked(dt_s, self.config.telemetry_refresh_s);
+        self.clock_s += dt_s;
+    }
+
+    /// Run a full arrival-stamped trace (must be arrival-ordered) to
+    /// completion: every admitted request is either completed or
+    /// expired when this returns.
+    pub fn run_trace(&mut self, trace: &[GatewayRequest]) -> GatewayReport {
+        let mut next = 0usize;
+        loop {
+            self.refresh_snapshot();
+            self.scheduler.ensure_routes(
+                &self.fleet,
+                &self.shape,
+                &self.snap,
+                self.config.max_decode_devices,
+                self.clock_s,
+            );
+            while next < trace.len() && trace[next].arrival_s <= self.clock_s {
+                let req = trace[next].clone();
+                next += 1;
+                self.submit(req);
+            }
+            for req in self.queues.drop_expired(self.clock_s) {
+                self.classes[req.class.index()].expired += 1;
+            }
+            // Continuous wave batching: keep binding waves while lanes
+            // are free and backlog exists.
+            loop {
+                let free = self.scheduler.free_lane_count(self.clock_s);
+                if free == 0 || self.queues.total() == 0 {
+                    break;
+                }
+                let width = free * self.config.wave_per_lane.max(1);
+                let wave = self.scheduler.form_wave(&mut self.queues, width);
+                if wave.is_empty() {
+                    break;
+                }
+                let records = self.scheduler.dispatch(&wave, self.clock_s, &self.snap);
+                for rec in &records {
+                    self.probe.record_busy(rec.lane, rec.service_s, rec.energy_j);
+                    let stats = &mut self.classes[rec.request.class.index()];
+                    stats.completed += 1;
+                    if rec.deadline_hit {
+                        stats.deadline_hits += 1;
+                    }
+                }
+            }
+            // Next event: arrival, lane-free instant, or (with no
+            // routable lane) the earliest queued deadline — whichever
+            // comes first. All are strictly in the future, so the loop
+            // always advances.
+            let mut next_t = f64::INFINITY;
+            if let Some(req) = trace.get(next) {
+                next_t = next_t.min(req.arrival_s);
+            }
+            if self.queues.total() > 0 {
+                match self.scheduler.next_free_after(self.clock_s) {
+                    Some(t) => next_t = next_t.min(t),
+                    None => {
+                        if let Some(deadline) = self.queues.earliest_deadline_s() {
+                            next_t = next_t.min(deadline.max(self.clock_s + 1e-9));
+                        }
+                    }
+                }
+            }
+            if !next_t.is_finite() {
+                break;
+            }
+            let dt = next_t - self.clock_s;
+            self.advance(dt);
+        }
+        // Cool-down: integrate idle/thermal out to the last committed
+        // lane work so the energy ledger covers every dispatch.
+        if let Some(last) = self.scheduler.last_busy_s() {
+            if last > self.clock_s {
+                let dt = last - self.clock_s;
+                self.advance(dt);
+            }
+        }
+        self.report()
+    }
+
+    fn report(&self) -> GatewayReport {
+        GatewayReport {
+            classes: self.classes.clone(),
+            per_tenant_dispatched: self.scheduler.tenant_dispatched().to_vec(),
+            waves: self.scheduler.waves,
+            reroutes: self.scheduler.reroutes,
+            safety_version: self.probe.safety_version(),
+            max_shed_level: self.max_shed_level,
+            wall_s: self.clock_s,
+            energy_j: self.probe.total_energy_j(),
+            idle_energy_j: self.probe.idle_energy_j(),
+            lane_busy_s: self.probe.busy_seconds(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_trace_terminates_immediately() {
+        let mut gw = Gateway::new(GatewayConfig::default());
+        let report = gw.run_trace(&[]);
+        assert_eq!(report.wall_s, 0.0);
+        assert_eq!(report.waves, 0);
+        for stats in &report.classes {
+            assert_eq!(stats.submitted, 0);
+            assert_eq!(stats.hit_rate(), 1.0, "no traffic = vacuous SLA");
+        }
+    }
+
+    #[test]
+    fn light_load_hits_every_deadline() {
+        let mut gw = Gateway::new(GatewayConfig::default());
+        // 0.2x capacity: everything admitted, dispatched immediately.
+        let trace = gw.overload_trace(30, 0.2, None);
+        let report = gw.run_trace(&trace);
+        for class in SlaClass::all() {
+            let stats = report.class(class);
+            assert_eq!(stats.submitted, 10);
+            assert_eq!(stats.admitted, 10, "{class:?} fully admitted under light load");
+            assert_eq!(stats.completed, 10);
+            assert_eq!(stats.deadline_hits, 10, "{class:?} must hit all deadlines");
+        }
+        assert!(report.waves > 0);
+        assert!(report.energy_j > 0.0);
+        assert!(report.wall_s > 0.0);
+    }
+
+    #[test]
+    fn overload_trace_is_deterministic_and_decorrelated() {
+        let gw = Gateway::new(GatewayConfig::default());
+        let a = gw.overload_trace(60, 3.0, None);
+        let b = gw.overload_trace(60, 3.0, None);
+        assert_eq!(a, b, "same seed, same trace");
+        // Every (tenant, class) pair occurs: no correlation collapse.
+        let mut pairs = std::collections::BTreeSet::new();
+        for req in &a {
+            pairs.insert((req.tenant, req.class.index()));
+        }
+        assert_eq!(pairs.len(), 12, "4 tenants × 3 classes all present");
+        // Arrival-ordered with deadlines ahead of arrivals.
+        for pair in a.windows(2) {
+            assert!(pair[0].arrival_s <= pair[1].arrival_s);
+        }
+        for req in &a {
+            assert!(req.deadline_s > req.arrival_s);
+        }
+        // Pinned-class traces pin every request.
+        let batch_only = gw.overload_trace(9, 1.0, Some(SlaClass::Batch));
+        assert!(batch_only.iter().all(|r| r.class == SlaClass::Batch));
+    }
+
+    #[test]
+    fn report_json_is_parseable_one_liner() {
+        let mut gw = Gateway::new(GatewayConfig::default());
+        let trace = gw.overload_trace(30, 2.0, None);
+        let report = gw.run_trace(&trace);
+        let line = report.to_json().to_string();
+        assert!(!line.contains('\n'));
+        let parsed = Json::parse(&line).unwrap();
+        let interactive = parsed.field("classes").unwrap().field("interactive").unwrap();
+        assert_eq!(interactive.u64_field("submitted").unwrap(), 10);
+        assert!(parsed.f64_field("wall_s").unwrap() > 0.0);
+        assert_eq!(
+            parsed.field("tenant_dispatched").unwrap().as_arr().unwrap().len(),
+            4
+        );
+    }
+}

@@ -1,0 +1,318 @@
+//! SLA classes and per-tenant bounded deadline queues.
+//!
+//! Admitted requests wait in per-`(tenant, class)` queues ordered
+//! earliest-deadline-first. Queues are bounded: an insert into a full
+//! queue is an explicit overflow drop (counted by the gateway, never
+//! silent), and entries whose deadline passes while queued are removed
+//! as explicit expiry drops at wave-formation time so a hopeless request
+//! never occupies a lane.
+//!
+//! Ordering keys are `(deadline bits, request id)` — deadlines are
+//! non-negative finite seconds, for which the IEEE-754 bit pattern is
+//! order-preserving, so the EDF order is total and bit-deterministic
+//! without any float comparison edge cases.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+use crate::safety::thermal_guard::SHED_LEVELS;
+
+/// Service class of a request — the unit the admission shed ladder and
+/// the dispatch priority operate on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum SlaClass {
+    /// Latency-sensitive traffic: dispatched first, shed last (only in
+    /// the top thermal band).
+    Interactive,
+    /// Default traffic: dispatched after Interactive, shed at band 2.
+    Standard,
+    /// Throughput traffic: dispatched last, shed first (band 1).
+    Batch,
+}
+
+impl SlaClass {
+    /// All classes in dispatch-priority order (highest first).
+    pub fn all() -> [SlaClass; 3] {
+        [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch]
+    }
+
+    /// Dense index (0 = Interactive … 2 = Batch), also the priority rank.
+    pub fn index(&self) -> usize {
+        match self {
+            SlaClass::Interactive => 0,
+            SlaClass::Standard => 1,
+            SlaClass::Batch => 2,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SlaClass::Interactive => "interactive",
+            SlaClass::Standard => "standard",
+            SlaClass::Batch => "batch",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Result<SlaClass> {
+        Ok(match s {
+            "interactive" => SlaClass::Interactive,
+            "standard" => SlaClass::Standard,
+            "batch" => SlaClass::Batch,
+            other => bail!("unknown SLA class {other:?} (interactive|standard|batch)"),
+        })
+    }
+
+    /// The shed ladder, mirroring the sim's 4-band
+    /// [`crate::safety::thermal_guard::ThermalDecision::shed_level`]
+    /// contract: Batch is dropped first (band ≥ 1), Standard next
+    /// (band ≥ 2), and Interactive only in the top band
+    /// ([`SHED_LEVELS`]) — never earlier.
+    pub fn sheddable_at(&self, level: u8) -> bool {
+        match self {
+            SlaClass::Batch => level >= 1,
+            SlaClass::Standard => level >= 2,
+            SlaClass::Interactive => level >= SHED_LEVELS,
+        }
+    }
+}
+
+/// One request as the gateway queues and dispatches it. The gateway is
+/// execution-agnostic: requests carry token counts, not prompts — the
+/// cost model (roofline service time per lane) is all dispatch needs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct GatewayRequest {
+    /// Submission sequence number (EDF tie-break, deterministic).
+    pub id: u64,
+    pub tenant: u32,
+    pub class: SlaClass,
+    /// Arrival on the logical clock (s).
+    pub arrival_s: f64,
+    /// Absolute completion deadline on the logical clock (s).
+    pub deadline_s: f64,
+    pub prompt_tokens: u32,
+    pub output_tokens: u32,
+}
+
+impl GatewayRequest {
+    fn edf_key(&self) -> (u64, u64) {
+        (self.deadline_s.to_bits(), self.id)
+    }
+}
+
+/// Per-tenant, per-class bounded EDF queues.
+#[derive(Debug, Clone)]
+pub struct SlaQueues {
+    /// Bound per `(tenant, class)` queue.
+    depth: usize,
+    /// `queues[class.index()][tenant]`, each Vec EDF-sorted.
+    queues: [BTreeMap<u32, Vec<GatewayRequest>>; 3],
+}
+
+impl SlaQueues {
+    pub fn new(depth: usize) -> SlaQueues {
+        SlaQueues { depth: depth.max(1), queues: std::array::from_fn(|_| BTreeMap::new()) }
+    }
+
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Insert in EDF position; a full queue rejects the incoming request
+    /// (explicit overflow — the caller counts it).
+    pub fn enqueue(&mut self, req: GatewayRequest) -> Result<(), GatewayRequest> {
+        let queue = self.queues[req.class.index()].entry(req.tenant).or_default();
+        if queue.len() >= self.depth {
+            return Err(req);
+        }
+        let key = req.edf_key();
+        let pos = queue.partition_point(|r| r.edf_key() <= key);
+        queue.insert(pos, req);
+        Ok(())
+    }
+
+    /// Earliest-deadline request of one `(class, tenant)` queue.
+    pub fn pop_edf(&mut self, class: SlaClass, tenant: u32) -> Option<GatewayRequest> {
+        let queue = self.queues[class.index()].get_mut(&tenant)?;
+        if queue.is_empty() {
+            None
+        } else {
+            Some(queue.remove(0))
+        }
+    }
+
+    pub fn has_backlog(&self, class: SlaClass, tenant: u32) -> bool {
+        self.queues[class.index()].get(&tenant).map(|q| !q.is_empty()).unwrap_or(false)
+    }
+
+    /// Queued requests in one class.
+    pub fn backlog(&self, class: SlaClass) -> usize {
+        self.queues[class.index()].values().map(|q| q.len()).sum()
+    }
+
+    /// Total queued requests.
+    pub fn total(&self) -> usize {
+        SlaClass::all().iter().map(|c| self.backlog(*c)).sum()
+    }
+
+    /// Queue pressure: the fullest class row's backlog over that row's
+    /// capacity (`tenants × depth`) — the signal the admission
+    /// backpressure band keys on. Max-occupancy (not total/total) so a
+    /// single saturated class registers full pressure even when the
+    /// other rows are idle (a Batch-only flood must still shed Batch).
+    pub fn utilization(&self, tenants: u32) -> f64 {
+        let row_capacity = ((tenants as usize).max(1) * self.depth) as f64;
+        SlaClass::all()
+            .iter()
+            .map(|c| self.backlog(*c) as f64 / row_capacity)
+            .fold(0.0, f64::max)
+    }
+
+    /// Remove every entry whose deadline is at or before `now_s`
+    /// (explicit expiry drops, returned in deterministic class → tenant
+    /// → EDF order for accounting).
+    pub fn drop_expired(&mut self, now_s: f64) -> Vec<GatewayRequest> {
+        let mut dropped = Vec::new();
+        for map in self.queues.iter_mut() {
+            for queue in map.values_mut() {
+                let mut kept = Vec::with_capacity(queue.len());
+                for req in queue.drain(..) {
+                    if req.deadline_s <= now_s {
+                        dropped.push(req);
+                    } else {
+                        kept.push(req);
+                    }
+                }
+                *queue = kept;
+            }
+        }
+        dropped
+    }
+
+    /// Earliest deadline over every queued request (drives the event
+    /// loop when no lane is routable).
+    pub fn earliest_deadline_s(&self) -> Option<f64> {
+        let mut best: Option<f64> = None;
+        for map in self.queues.iter() {
+            for queue in map.values() {
+                if let Some(front) = queue.first() {
+                    best = Some(best.map_or(front.deadline_s, |b: f64| b.min(front.deadline_s)));
+                }
+            }
+        }
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tenant: u32, class: SlaClass, deadline_s: f64) -> GatewayRequest {
+        GatewayRequest {
+            id,
+            tenant,
+            class,
+            arrival_s: 0.0,
+            deadline_s,
+            prompt_tokens: 32,
+            output_tokens: 16,
+        }
+    }
+
+    #[test]
+    fn pops_in_earliest_deadline_order() {
+        let mut q = SlaQueues::new(16);
+        for (id, d) in [(0u64, 5.0), (1, 2.0), (2, 9.0), (3, 2.5)] {
+            q.enqueue(req(id, 0, SlaClass::Standard, d)).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_edf(SlaClass::Standard, 0))
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(order, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn equal_deadlines_tie_break_by_id() {
+        let mut q = SlaQueues::new(16);
+        for id in [3u64, 1, 2] {
+            q.enqueue(req(id, 0, SlaClass::Batch, 1.0)).unwrap();
+        }
+        let order: Vec<u64> =
+            std::iter::from_fn(|| q.pop_edf(SlaClass::Batch, 0)).map(|r| r.id).collect();
+        assert_eq!(order, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn overflow_is_explicit_and_bounded() {
+        let mut q = SlaQueues::new(2);
+        assert!(q.enqueue(req(0, 0, SlaClass::Interactive, 1.0)).is_ok());
+        assert!(q.enqueue(req(1, 0, SlaClass::Interactive, 2.0)).is_ok());
+        let rejected = q.enqueue(req(2, 0, SlaClass::Interactive, 0.5));
+        assert!(rejected.is_err());
+        assert_eq!(rejected.unwrap_err().id, 2);
+        assert_eq!(q.backlog(SlaClass::Interactive), 2);
+        // Other tenants and classes are unaffected by the full queue.
+        assert!(q.enqueue(req(3, 1, SlaClass::Interactive, 1.0)).is_ok());
+        assert!(q.enqueue(req(4, 0, SlaClass::Batch, 1.0)).is_ok());
+    }
+
+    #[test]
+    fn expiry_drops_at_or_before_now() {
+        let mut q = SlaQueues::new(8);
+        q.enqueue(req(0, 0, SlaClass::Standard, 1.0)).unwrap();
+        q.enqueue(req(1, 0, SlaClass::Standard, 2.0)).unwrap();
+        q.enqueue(req(2, 1, SlaClass::Batch, 0.5)).unwrap();
+        let dropped = q.drop_expired(1.0);
+        let ids: Vec<u64> = dropped.iter().map(|r| r.id).collect();
+        assert_eq!(ids, vec![0, 2]);
+        assert_eq!(q.total(), 1);
+        assert_eq!(q.earliest_deadline_s(), Some(2.0));
+    }
+
+    #[test]
+    fn utilization_is_the_fullest_class_row() {
+        let mut q = SlaQueues::new(4);
+        for id in 0..6u64 {
+            q.enqueue(req(id, (id % 2) as u32, SlaClass::Standard, 1.0 + id as f64)).unwrap();
+        }
+        q.enqueue(req(9, 0, SlaClass::Batch, 1.0)).unwrap();
+        // Row capacity for 2 tenants: 2 × 4 = 8; Standard holds 6.
+        assert!((q.utilization(2) - 6.0 / 8.0).abs() < 1e-12);
+        // A single saturated row registers full pressure.
+        let mut full = SlaQueues::new(2);
+        for id in 0..4u64 {
+            full.enqueue(req(id, (id % 2) as u32, SlaClass::Batch, 1.0 + id as f64)).unwrap();
+        }
+        assert!((full.utilization(2) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn shed_ladder_is_strictly_ordered() {
+        // Batch first, Standard second, Interactive only at the top band.
+        assert!(!SlaClass::Batch.sheddable_at(0));
+        assert!(SlaClass::Batch.sheddable_at(1));
+        assert!(!SlaClass::Standard.sheddable_at(1));
+        assert!(SlaClass::Standard.sheddable_at(2));
+        assert!(!SlaClass::Interactive.sheddable_at(SHED_LEVELS - 1));
+        assert!(SlaClass::Interactive.sheddable_at(SHED_LEVELS));
+        for level in 0..=SHED_LEVELS {
+            // Monotone: anything shed at `level` is shed at every deeper level.
+            for class in SlaClass::all() {
+                if class.sheddable_at(level) {
+                    assert!(class.sheddable_at(SHED_LEVELS));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn class_roundtrip_and_priority_order() {
+        for class in SlaClass::all() {
+            assert_eq!(SlaClass::from_str(class.as_str()).unwrap(), class);
+        }
+        assert!(SlaClass::from_str("bulk").is_err());
+        assert_eq!(SlaClass::Interactive.index(), 0);
+        assert_eq!(SlaClass::Batch.index(), 2);
+    }
+}

@@ -1,0 +1,457 @@
+//! Continuous wave batching over a pool of executor lanes.
+//!
+//! A *wave* is the set of queued requests the scheduler binds to the
+//! currently-free lanes at one instant: classes are drained in strict
+//! priority order (Interactive → Standard → Batch), tenants take wave
+//! slots through a cumulative Jefferson/D'Hondt divisor sequence
+//! ([`FairShare`], the same prefix-stable rule as
+//! [`Batcher::assign_weighted`] — the first n slots of the run are
+//! identical under every larger total), and each tenant contributes its
+//! earliest-deadline request. Within the wave, requests are apportioned
+//! to lanes by [`Batcher::assign_weighted`] itself, weighted by each
+//! lane's throttle-adjusted decode rate (Phi over roofline step time).
+//!
+//! Lane routing follows the PR-3 plan-cache consumer contract: the lane
+//! set is derived from the current telemetry snapshot and considered
+//! valid exactly while the monotone `safety_version` is unchanged; a
+//! version bump invalidates the route and the next scheduling step
+//! re-derives the lanes (busy lanes keep their committed work).
+
+use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::batcher::Batcher;
+use crate::coordinator::disaggregation::PhasePlan;
+use crate::devices::fleet::Fleet;
+use crate::devices::spec::{DevIdx, DeviceId, DeviceSpec};
+
+use super::queue::{GatewayRequest, SlaClass, SlaQueues};
+use super::telemetry::FleetTelemetry;
+
+/// Floor on the throttle factor (mirrors the sim engine's clamp).
+const MIN_THROTTLE: f64 = 0.05;
+
+/// Prompt length used when ranking devices for lane routing.
+const ROUTE_PROMPT_TOKENS: u32 = 32;
+
+/// Cumulative per-tenant Jefferson/D'Hondt divisor sequence: slot `k`
+/// goes to the eligible tenant maximizing `weight / (assigned + 1)`,
+/// ties to the lowest index — exactly the [`Batcher::assign_weighted`]
+/// rule, carried across waves so run-level tenant shares stay
+/// proportional and prefix-stable (a per-wave reset would hand the
+/// rounding surplus to the same tenant every wave).
+#[derive(Debug, Clone)]
+pub struct FairShare {
+    weights: Vec<f64>,
+    assigned: Vec<u64>,
+}
+
+impl FairShare {
+    pub fn new(weights: &[f64]) -> FairShare {
+        let mut clean: Vec<f64> =
+            weights.iter().map(|w| if w.is_finite() && *w > 0.0 { *w } else { 0.0 }).collect();
+        if clean.iter().sum::<f64>() <= 0.0 {
+            clean = vec![1.0; weights.len().max(1)];
+        }
+        FairShare { assigned: vec![0; clean.len()], weights: clean }
+    }
+
+    pub fn len(&self) -> usize {
+        self.weights.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.weights.is_empty()
+    }
+
+    /// Grant the next slot among `eligible` tenants; `None` when no
+    /// tenant is eligible.
+    pub fn next(&mut self, eligible: &[bool]) -> Option<usize> {
+        let mut best: Option<usize> = None;
+        let mut best_avg = f64::NEG_INFINITY;
+        for (t, &weight) in self.weights.iter().enumerate() {
+            if !eligible.get(t).copied().unwrap_or(false) {
+                continue;
+            }
+            let avg = weight / (self.assigned[t] + 1) as f64;
+            if avg > best_avg {
+                best_avg = avg;
+                best = Some(t);
+            }
+        }
+        if let Some(t) = best {
+            self.assigned[t] += 1;
+        }
+        best
+    }
+
+    /// Cumulative slots granted per tenant.
+    pub fn assigned(&self) -> &[u64] {
+        &self.assigned
+    }
+}
+
+/// One executor lane: a decode device with committed work up to
+/// `busy_until_s` on the logical clock.
+#[derive(Debug, Clone)]
+pub struct Lane {
+    pub dev: DevIdx,
+    pub id: DeviceId,
+    pub busy_until_s: f64,
+}
+
+/// One dispatched request with its pricing — the gateway feeds these
+/// into the telemetry probe and its class accounting.
+#[derive(Debug, Clone)]
+pub struct DispatchRecord {
+    pub request: GatewayRequest,
+    pub lane: DevIdx,
+    pub start_s: f64,
+    pub service_s: f64,
+    pub completion_s: f64,
+    pub energy_j: f64,
+    pub deadline_hit: bool,
+}
+
+/// The wave scheduler over the executor lane pool.
+#[derive(Debug, Clone)]
+pub struct WaveScheduler {
+    batcher: Batcher,
+    fair: FairShare,
+    lanes: Vec<Lane>,
+    /// Safety version the lane set was derived for.
+    plan_version: Option<u64>,
+    pub waves: u64,
+    pub reroutes: u64,
+}
+
+impl WaveScheduler {
+    pub fn new(tenant_weights: &[f64]) -> WaveScheduler {
+        WaveScheduler {
+            // Lanes serve a wave serially; the chunk cap is irrelevant
+            // here, so keep chunks wide enough to never split a wave.
+            batcher: Batcher { max_batch: 4096 },
+            fair: FairShare::new(tenant_weights),
+            lanes: Vec::new(),
+            plan_version: None,
+            waves: 0,
+            reroutes: 0,
+        }
+    }
+
+    pub fn lanes(&self) -> &[Lane] {
+        &self.lanes
+    }
+
+    pub fn lane_devs(&self) -> Vec<DevIdx> {
+        self.lanes.iter().map(|l| l.dev).collect()
+    }
+
+    pub fn tenant_dispatched(&self) -> &[u64] {
+        self.fair.assigned()
+    }
+
+    /// Re-derive the lane set iff the telemetry safety version moved
+    /// (or no route exists yet): the energy-ranked decode fan-out of
+    /// [`PhasePlan::disaggregated`] over the schedulable devices.
+    /// Surviving lanes keep their committed `busy_until_s`.
+    pub fn ensure_routes(
+        &mut self,
+        fleet: &Fleet,
+        shape: &ModelShape,
+        telemetry: &FleetTelemetry,
+        max_decode_devices: usize,
+        now_s: f64,
+    ) {
+        if self.plan_version == Some(telemetry.safety_version) {
+            return;
+        }
+        let usable: Vec<DeviceSpec> = telemetry
+            .devices
+            .iter()
+            .filter(|d| d.schedulable)
+            .filter_map(|d| fleet.devices().get(d.dev.as_usize()).cloned())
+            .collect();
+        let decode_ids: Vec<DeviceId> = Fleet::new(usable)
+            .ok()
+            .and_then(|restricted| {
+                PhasePlan::disaggregated(shape, &restricted, ROUTE_PROMPT_TOKENS, max_decode_devices)
+                    .map(|plan| plan.decode)
+            })
+            .unwrap_or_default();
+        let new_lanes: Vec<Lane> = decode_ids
+            .iter()
+            .filter_map(|id| fleet.idx_of(id).map(|dev| (dev, id.clone())))
+            .map(|(dev, id)| {
+                let busy = self
+                    .lanes
+                    .iter()
+                    .find(|l| l.dev == dev)
+                    .map(|l| l.busy_until_s)
+                    .unwrap_or(now_s);
+                Lane { dev, id, busy_until_s: busy }
+            })
+            .collect();
+        if self.plan_version.is_some() {
+            self.reroutes += 1;
+        }
+        self.lanes = new_lanes;
+        self.plan_version = Some(telemetry.safety_version);
+    }
+
+    /// Lanes idle at `now_s`.
+    pub fn free_lane_count(&self, now_s: f64) -> usize {
+        self.lanes.iter().filter(|l| l.busy_until_s <= now_s).count()
+    }
+
+    /// Earliest future lane-free instant strictly after `now_s`.
+    pub fn next_free_after(&self, now_s: f64) -> Option<f64> {
+        self.lanes
+            .iter()
+            .map(|l| l.busy_until_s)
+            .filter(|&t| t > now_s)
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.min(t))))
+    }
+
+    /// Latest committed lane work (drain horizon).
+    pub fn last_busy_s(&self) -> Option<f64> {
+        self.lanes
+            .iter()
+            .map(|l| l.busy_until_s)
+            .fold(None, |acc: Option<f64>, t| Some(acc.map_or(t, |a| a.max(t))))
+    }
+
+    /// Pull up to `width` requests out of the queues: strict class
+    /// priority, cumulative D'Hondt tenant fair share, EDF within each
+    /// tenant queue.
+    pub fn form_wave(&mut self, queues: &mut SlaQueues, width: usize) -> Vec<GatewayRequest> {
+        let mut wave = Vec::new();
+        let tenants = self.fair.len();
+        for class in SlaClass::all() {
+            while wave.len() < width {
+                let eligible: Vec<bool> =
+                    (0..tenants).map(|t| queues.has_backlog(class, t as u32)).collect();
+                if !eligible.iter().any(|&e| e) {
+                    break;
+                }
+                let Some(tenant) = self.fair.next(&eligible) else {
+                    break;
+                };
+                let req = queues
+                    .pop_edf(class, tenant as u32)
+                    .expect("eligible tenant must have backlog");
+                wave.push(req);
+            }
+            if wave.len() >= width {
+                break;
+            }
+        }
+        wave
+    }
+
+    /// Bind a formed wave to the free lanes (all lanes when none is
+    /// free) by throttle-adjusted service rate — the prefix-stable
+    /// weighted apportionment — and price each dispatch with the
+    /// telemetry snapshot's roofline coefficients. Lanes serve their
+    /// share serially in EDF order.
+    pub fn dispatch(
+        &mut self,
+        wave: &[GatewayRequest],
+        now_s: f64,
+        telemetry: &FleetTelemetry,
+    ) -> Vec<DispatchRecord> {
+        if wave.is_empty() || self.lanes.is_empty() {
+            return Vec::new();
+        }
+        let free: Vec<usize> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .filter(|(_, l)| l.busy_until_s <= now_s)
+            .map(|(i, _)| i)
+            .collect();
+        let pool: Vec<usize> =
+            if free.is_empty() { (0..self.lanes.len()).collect() } else { free };
+        let ids: Vec<DeviceId> = pool.iter().map(|&i| self.lanes[i].id.clone()).collect();
+        struct LaneCost {
+            throttle: f64,
+            step_s: f64,
+            prefill_unit_s: f64,
+            power_w: f64,
+        }
+        let costs: Vec<LaneCost> = pool
+            .iter()
+            .map(|&i| {
+                let t = telemetry.device(self.lanes[i].dev);
+                LaneCost {
+                    throttle: t.map(|d| d.phi).unwrap_or(1.0).clamp(MIN_THROTTLE, 1.0),
+                    step_s: t.map(|d| d.step_s).unwrap_or(1e-3).max(1e-12),
+                    prefill_unit_s: t.map(|d| d.prefill_unit_s).unwrap_or(0.0),
+                    power_w: t.map(|d| d.active_power_w).unwrap_or(0.0),
+                }
+            })
+            .collect();
+        let rates: Vec<f64> = costs.iter().map(|c| c.throttle / c.step_s).collect();
+        let batches = self.batcher.assign_weighted(wave.len() as u32, &ids, &rates);
+        let mut records = Vec::with_capacity(wave.len());
+        for batch in &batches {
+            let pi = ids
+                .iter()
+                .position(|id| id == &batch.device)
+                .expect("batch device comes from the lane pool");
+            let cost = &costs[pi];
+            let li = pool[pi];
+            for &slot in &batch.samples {
+                let request = wave[slot as usize].clone();
+                let service_s = (request.prompt_tokens as f64 * cost.prefill_unit_s
+                    + request.output_tokens as f64 * cost.step_s)
+                    / cost.throttle;
+                let lane = &mut self.lanes[li];
+                let start_s = lane.busy_until_s.max(now_s);
+                let completion_s = start_s + service_s;
+                lane.busy_until_s = completion_s;
+                records.push(DispatchRecord {
+                    deadline_hit: completion_s <= request.deadline_s,
+                    lane: lane.dev,
+                    start_s,
+                    service_s,
+                    completion_s,
+                    energy_j: cost.power_w * service_s,
+                    request,
+                });
+            }
+        }
+        self.waves += 1;
+        records
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::batcher::Batch;
+    use crate::devices::fleet::FleetPreset;
+    use crate::experiments::runner::default_meta;
+    use crate::gateway::telemetry::TelemetryProbe;
+    use crate::workload::datasets::ModelFamily;
+
+    fn setup() -> (Fleet, ModelShape, FleetTelemetry) {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2));
+        let snap = TelemetryProbe::new(&fleet, &shape).snapshot(0.0);
+        (fleet, shape, snap)
+    }
+
+    fn req(id: u64, tenant: u32, class: SlaClass) -> GatewayRequest {
+        GatewayRequest {
+            id,
+            tenant,
+            class,
+            arrival_s: 0.0,
+            deadline_s: 1e9,
+            prompt_tokens: 32,
+            output_tokens: 16,
+        }
+    }
+
+    #[test]
+    fn fair_share_matches_the_batcher_divisor_sequence() {
+        // The scheduler's tenant rule IS Batcher::assign_weighted's rule:
+        // with all tenants eligible, the slot sequence must reproduce
+        // the batcher's per-sample owners exactly.
+        let weights = [3.0, 2.0, 1.25, 0.5];
+        let devices: Vec<DeviceId> =
+            (0..4).map(|i| DeviceId(format!("t{i}"))).collect();
+        let n = 40u32;
+        let batches: Vec<Batch> =
+            Batcher { max_batch: 4096 }.assign_weighted(n, &devices, &weights);
+        let mut owner = vec![usize::MAX; n as usize];
+        for batch in &batches {
+            let ti = devices.iter().position(|d| d == &batch.device).unwrap();
+            for &s in &batch.samples {
+                owner[s as usize] = ti;
+            }
+        }
+        let mut fair = FairShare::new(&weights);
+        let eligible = vec![true; 4];
+        let sequence: Vec<usize> =
+            (0..n).map(|_| fair.next(&eligible).unwrap()).collect();
+        assert_eq!(sequence, owner, "FairShare must be the same D'Hondt sequence");
+        // Prefix stability: a shorter run is a prefix of the longer one.
+        let mut fair2 = FairShare::new(&weights);
+        let short: Vec<usize> = (0..17).map(|_| fair2.next(&eligible).unwrap()).collect();
+        assert_eq!(short[..], sequence[..17]);
+    }
+
+    #[test]
+    fn fair_share_degenerate_weights_fall_back_to_equal() {
+        let mut fair = FairShare::new(&[0.0, f64::NAN, -3.0]);
+        let eligible = vec![true; 3];
+        let seq: Vec<usize> = (0..6).map(|_| fair.next(&eligible).unwrap()).collect();
+        assert_eq!(seq, vec![0, 1, 2, 0, 1, 2]);
+        assert!(FairShare::new(&[1.0]).next(&[false]).is_none());
+    }
+
+    #[test]
+    fn routes_derive_lanes_and_reroute_only_on_version_bump() {
+        let (fleet, shape, snap) = setup();
+        let mut sched = WaveScheduler::new(&[1.0; 2]);
+        sched.ensure_routes(&fleet, &shape, &snap, 4, 0.0);
+        assert!(!sched.lanes().is_empty());
+        assert_eq!(sched.reroutes, 0, "first derivation is not a reroute");
+        let lanes_before = sched.lane_devs();
+        // Same version: no reroute, lanes untouched.
+        sched.ensure_routes(&fleet, &shape, &snap, 4, 1.0);
+        assert_eq!(sched.reroutes, 0);
+        assert_eq!(sched.lane_devs(), lanes_before);
+        // Version bump: reroute (same lane set here, counted anyway).
+        let mut bumped = snap.clone();
+        bumped.safety_version += 1;
+        sched.ensure_routes(&fleet, &shape, &bumped, 4, 1.0);
+        assert_eq!(sched.reroutes, 1);
+        // NPU leads the decode fan-out on the edge box.
+        assert_eq!(fleet.id_at(sched.lanes()[0].dev), &DeviceId::from("npu0"));
+    }
+
+    #[test]
+    fn waves_drain_classes_in_priority_order() {
+        let (fleet, shape, snap) = setup();
+        let mut sched = WaveScheduler::new(&[1.0; 2]);
+        sched.ensure_routes(&fleet, &shape, &snap, 4, 0.0);
+        let mut queues = SlaQueues::new(8);
+        queues.enqueue(req(0, 0, SlaClass::Batch)).unwrap();
+        queues.enqueue(req(1, 0, SlaClass::Interactive)).unwrap();
+        queues.enqueue(req(2, 1, SlaClass::Standard)).unwrap();
+        queues.enqueue(req(3, 1, SlaClass::Interactive)).unwrap();
+        let wave = sched.form_wave(&mut queues, 3);
+        let classes: Vec<SlaClass> = wave.iter().map(|r| r.class).collect();
+        assert_eq!(
+            classes,
+            vec![SlaClass::Interactive, SlaClass::Interactive, SlaClass::Standard],
+            "Interactive fills first, Batch is left behind"
+        );
+        assert_eq!(queues.total(), 1);
+        assert_eq!(queues.backlog(SlaClass::Batch), 1);
+    }
+
+    #[test]
+    fn dispatch_conserves_the_wave_and_prices_serially() {
+        let (fleet, shape, snap) = setup();
+        let mut sched = WaveScheduler::new(&[1.0]);
+        sched.ensure_routes(&fleet, &shape, &snap, 4, 0.0);
+        let wave: Vec<GatewayRequest> =
+            (0..10).map(|i| req(i, 0, SlaClass::Standard)).collect();
+        let records = sched.dispatch(&wave, 0.0, &snap);
+        assert_eq!(records.len(), wave.len(), "every wave member is dispatched");
+        let mut ids: Vec<u64> = records.iter().map(|r| r.request.id).collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>());
+        for r in &records {
+            assert!(r.service_s > 0.0 && r.energy_j > 0.0);
+            assert!((r.completion_s - (r.start_s + r.service_s)).abs() < 1e-12);
+            assert!(r.deadline_hit, "deadline 1e9 cannot be missed");
+        }
+        // Lanes end busy; a second wave queues behind the first.
+        assert_eq!(sched.free_lane_count(0.0), 0);
+        assert!(sched.next_free_after(0.0).unwrap() > 0.0);
+        assert_eq!(sched.waves, 1);
+    }
+}

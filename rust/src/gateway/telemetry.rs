@@ -1,0 +1,351 @@
+//! Fleet telemetry: the paper's three device-workload metrics (DASI /
+//! CPQ / Phi) per interned [`DevIdx`], sourced from the roofline, power,
+//! and RC-thermal models plus the [`EnergyTable`] memory substrate.
+//!
+//! - **DASI** — roofline-derived compute utilization of the decode task
+//!   on the device (attained FLOP time over total roofline time): the
+//!   workload's utilization signature, static per `(fleet, shape)`.
+//! - **CPQ** — memory pressure: resident stage memory demanded by the
+//!   model (embedding + layers + LM head, from the [`EnergyTable`])
+//!   over the device's capacity.
+//! - **Phi** — thermal yield: the guard's Eq. 8 workload factor in
+//!   [0, 1], quantized into the same 4 shedding bands the plan cache
+//!   invalidates on ([`crate::safety::thermal_guard::ThermalDecision`]).
+//!
+//! [`TelemetryProbe`] owns the evolving per-device thermal state and the
+//! [`ShedTracker`] band counters whose summed version is the gateway's
+//! `safety_version` — the monotone staleness signal route decisions key
+//! on (the PR-3 plan-cache consumer contract: a version bump invalidates
+//! the consumer's current plan, never the telemetry history).
+
+use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::disaggregation::{decode_task, prefill_task};
+use crate::coordinator::energy_table::{EnergyTable, StageKind};
+use crate::devices::fleet::Fleet;
+use crate::devices::power::PowerModel;
+use crate::devices::spec::{DevIdx, DeviceSpec};
+use crate::devices::thermal::ThermalState;
+use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
+
+/// Prompt length the per-token prefill cost is normalized at.
+const PREFILL_UNIT_TOKENS: u32 = 32;
+
+/// One device's telemetry at one instant, plus the static service-cost
+/// coefficients the wave scheduler prices dispatches with.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceTelemetry {
+    pub dev: DevIdx,
+    /// Roofline compute utilization of the decode task in [0, 1].
+    pub dasi: f64,
+    /// Resident model memory over device capacity (can exceed 1 when
+    /// the model does not fit).
+    pub cpq: f64,
+    /// Thermal yield: guard workload factor in [0, 1] (1 = cool).
+    pub phi: f64,
+    /// Quantized shedding band (0..=SHED_LEVELS) of `phi`.
+    pub shed_level: u8,
+    pub temp_c: f64,
+    pub schedulable: bool,
+    /// Unthrottled roofline seconds of one decode step.
+    pub step_s: f64,
+    /// Unthrottled prefill seconds per prompt token.
+    pub prefill_unit_s: f64,
+    /// Active draw (W) while decoding.
+    pub active_power_w: f64,
+}
+
+/// A rolling snapshot of the whole fleet. Snapshots are cheap value
+/// types: the gateway refreshes one at the telemetry cadence and every
+/// admission/dispatch decision reads the same frozen view, which keeps
+/// runs bit-deterministic under the logical clock.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FleetTelemetry {
+    /// Logical time the snapshot was taken (s).
+    pub at_s: f64,
+    /// Monotone safety-state version (Σ per-device shed versions) at
+    /// snapshot time.
+    pub safety_version: u64,
+    /// One entry per fleet device, in fleet (interned index) order.
+    pub devices: Vec<DeviceTelemetry>,
+}
+
+impl FleetTelemetry {
+    pub fn device(&self, dev: DevIdx) -> Option<&DeviceTelemetry> {
+        self.devices.get(dev.as_usize()).filter(|d| d.dev == dev)
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ProbeDevice {
+    spec: DeviceSpec,
+    thermal: ThermalState,
+    shed: ShedTracker,
+    dasi: f64,
+    cpq: f64,
+    step_s: f64,
+    prefill_unit_s: f64,
+    active_power_w: f64,
+    /// Active seconds/joules accumulated since the last `advance`.
+    window_busy_s: f64,
+    window_energy_j: f64,
+    busy_s: f64,
+    energy_j: f64,
+    idle_j: f64,
+}
+
+/// Evolving telemetry source: integrates recorded busy work into the RC
+/// thermal model on an injected logical clock and emits
+/// [`FleetTelemetry`] snapshots. No wall time anywhere.
+#[derive(Debug, Clone)]
+pub struct TelemetryProbe {
+    guard: ThermalGuard,
+    devices: Vec<ProbeDevice>,
+}
+
+impl TelemetryProbe {
+    /// Evaluate the static per-device coefficients once (roofline +
+    /// power model + [`EnergyTable`] memory demand) and start every
+    /// device cold at ambient.
+    pub fn new(fleet: &Fleet, shape: &ModelShape) -> TelemetryProbe {
+        let table = EnergyTable::build(fleet, shape);
+        let d_task = decode_task(shape);
+        let p_task = prefill_task(shape, PREFILL_UNIT_TOKENS);
+        let resident_gb = table.mem_gb(StageKind::Embedding)
+            + table.n_layers() as f64 * table.mem_gb(StageKind::Layer)
+            + table.mem_gb(StageKind::LmHead);
+        let devices = fleet
+            .devices()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| ProbeDevice {
+                thermal: ThermalState::new(spec),
+                shed: ShedTracker::default(),
+                dasi: d_task.compute_utilization(spec),
+                cpq: resident_gb / table.capacity_gb(DevIdx(i as u16)).max(1e-9),
+                step_s: d_task.seconds_on(spec, 1.0),
+                prefill_unit_s: p_task.seconds_on(spec, 1.0) / PREFILL_UNIT_TOKENS as f64,
+                active_power_w: PowerModel::active_power_for(spec, &d_task),
+                window_busy_s: 0.0,
+                window_energy_j: 0.0,
+                busy_s: 0.0,
+                energy_j: 0.0,
+                idle_j: 0.0,
+                spec: spec.clone(),
+            })
+            .collect();
+        TelemetryProbe { guard: ThermalGuard::default(), devices }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Attribute active work to a device: `busy_s` seconds drawing
+    /// `energy_j` joules, integrated into the thermal model at the next
+    /// [`TelemetryProbe::advance`].
+    pub fn record_busy(&mut self, dev: DevIdx, busy_s: f64, energy_j: f64) {
+        let d = &mut self.devices[dev.as_usize()];
+        d.window_busy_s += busy_s;
+        d.window_energy_j += energy_j;
+        d.busy_s += busy_s;
+        d.energy_j += energy_j;
+    }
+
+    /// Advance the logical clock by `dt_s`: each device consumes up to
+    /// `dt_s` of its recorded busy backlog (work is committed ahead at
+    /// dispatch time, so the window carries the remainder forward),
+    /// integrates the window's mean power (active + idle share,
+    /// TDP-capped) through the RC model, then observes its shedding
+    /// band — a band crossing bumps the device's monotone version.
+    /// Carrying the backlog keeps a lane's serial commitment heating it
+    /// for the whole service interval and keeps idle draw off seconds
+    /// the lane is actually busy.
+    pub fn advance(&mut self, dt_s: f64) {
+        if dt_s <= 0.0 {
+            return;
+        }
+        for d in &mut self.devices {
+            let busy_s = d.window_busy_s.min(dt_s);
+            let active_j = if d.window_busy_s > 0.0 {
+                d.window_energy_j * (busy_s / d.window_busy_s)
+            } else {
+                0.0
+            };
+            let idle_s = dt_s - busy_s;
+            let idle_j = d.spec.idle_w * idle_s;
+            let mean_w = ((active_j + idle_j) / dt_s).min(d.spec.tdp_w);
+            d.thermal.step(&d.spec, mean_w, dt_s);
+            d.idle_j += idle_j;
+            d.window_busy_s -= busy_s;
+            d.window_energy_j -= active_j;
+            let decision = self.guard.evaluate(&d.spec, d.thermal.temp_c());
+            d.shed.observe(decision.shed_level());
+        }
+    }
+
+    /// Advance by `dt_s` in `chunk_s` slices while recorded busy
+    /// backlog remains (shed bands must keep updating as committed
+    /// work heats a device), then fast-forward the idle remainder in
+    /// ONE exact step: the RC solution is exact at constant power and
+    /// an idle fleet draws constant idle power, so the temperature is
+    /// bit-identical to chunked stepping — only cool-down band
+    /// crossings coalesce into the single step's observation (the same
+    /// coalescing semantic safety transitions already have). This is
+    /// what keeps a sparse trace (hours of idle logical time between
+    /// arrivals) from grinding through millions of no-op chunks.
+    pub fn advance_chunked(&mut self, dt_s: f64, chunk_s: f64) {
+        let chunk = chunk_s.max(1e-6);
+        let mut remaining = dt_s;
+        while remaining > 0.0 {
+            if !self.has_pending_work() {
+                self.advance(remaining);
+                return;
+            }
+            let step = remaining.min(chunk);
+            self.advance(step);
+            remaining -= step;
+        }
+    }
+
+    /// Any device still carrying committed-but-unintegrated busy work.
+    fn has_pending_work(&self) -> bool {
+        self.devices.iter().any(|d| d.window_busy_s > 0.0)
+    }
+
+    /// Monotone safety-state version: the sum of every device's shed
+    /// version counter. Constant exactly while no band crossing occurs.
+    pub fn safety_version(&self) -> u64 {
+        self.devices.iter().map(|d| d.shed.version()).sum()
+    }
+
+    pub fn snapshot(&self, at_s: f64) -> FleetTelemetry {
+        let devices = self
+            .devices
+            .iter()
+            .enumerate()
+            .map(|(i, d)| {
+                let decision = self.guard.evaluate(&d.spec, d.thermal.temp_c());
+                DeviceTelemetry {
+                    dev: DevIdx(i as u16),
+                    dasi: d.dasi,
+                    cpq: d.cpq,
+                    phi: decision.workload_factor,
+                    shed_level: decision.shed_level(),
+                    temp_c: d.thermal.temp_c(),
+                    schedulable: true,
+                    step_s: d.step_s,
+                    prefill_unit_s: d.prefill_unit_s,
+                    active_power_w: d.active_power_w,
+                }
+            })
+            .collect();
+        FleetTelemetry { at_s, safety_version: self.safety_version(), devices }
+    }
+
+    /// Best-case (unthrottled, unloaded, fastest device) service seconds
+    /// for a request — the scale SLA deadlines are set on.
+    pub fn unloaded_service_s(&self, prompt_tokens: u32, output_tokens: u32) -> f64 {
+        self.devices
+            .iter()
+            .map(|d| {
+                prompt_tokens as f64 * d.prefill_unit_s + output_tokens as f64 * d.step_s
+            })
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Total energy attributed so far (active + idle), J.
+    pub fn total_energy_j(&self) -> f64 {
+        self.devices.iter().map(|d| d.energy_j + d.idle_j).sum()
+    }
+
+    pub fn idle_energy_j(&self) -> f64 {
+        self.devices.iter().map(|d| d.idle_j).sum()
+    }
+
+    /// Per-device active busy seconds, in fleet order.
+    pub fn busy_seconds(&self) -> Vec<(String, f64)> {
+        self.devices.iter().map(|d| (d.spec.id.0.clone(), d.busy_s)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::FleetPreset;
+    use crate::experiments::runner::default_meta;
+    use crate::workload::datasets::ModelFamily;
+
+    fn probe(preset: FleetPreset) -> TelemetryProbe {
+        let fleet = Fleet::preset(preset);
+        let shape = ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2));
+        TelemetryProbe::new(&fleet, &shape)
+    }
+
+    #[test]
+    fn cold_fleet_has_full_thermal_yield() {
+        let p = probe(FleetPreset::EdgeBox);
+        let snap = p.snapshot(0.0);
+        assert_eq!(snap.safety_version, 0);
+        for d in &snap.devices {
+            assert_eq!(d.phi, 1.0, "{:?} must start cool", d.dev);
+            assert_eq!(d.shed_level, 0);
+            assert!((0.0..=1.0).contains(&d.dasi));
+            assert!(d.cpq > 0.0 && d.cpq < 1.0, "gpt2 fits every edge device");
+            assert!(d.step_s > 0.0 && d.prefill_unit_s > 0.0);
+        }
+    }
+
+    #[test]
+    fn sustained_heat_crosses_bands_and_bumps_version() {
+        let mut p = probe(FleetPreset::GpuOnly);
+        let v0 = p.safety_version();
+        // Slam the single lane with compute-grade draw for minutes of
+        // logical time: the guard must start shedding and the version
+        // must move exactly with band crossings.
+        for _ in 0..600 {
+            let spec_tdp = 300.0;
+            p.record_busy(DevIdx(0), 1.0, spec_tdp);
+            p.advance(1.0);
+        }
+        let snap = p.snapshot(600.0);
+        assert!(snap.devices[0].shed_level >= 1, "GPU at TDP must shed");
+        assert!(snap.devices[0].phi < 1.0);
+        assert!(p.safety_version() > v0, "band crossings must bump the version");
+    }
+
+    #[test]
+    fn idle_advance_keeps_version_stable() {
+        let mut p = probe(FleetPreset::EdgeBox);
+        for _ in 0..100 {
+            p.advance(1.0);
+        }
+        assert_eq!(p.safety_version(), 0, "idle fleet never crosses a band");
+        assert!(p.idle_energy_j() > 0.0, "idle draw must be accounted");
+        assert_eq!(p.total_energy_j(), p.idle_energy_j());
+    }
+
+    #[test]
+    fn unloaded_service_uses_the_fastest_device() {
+        let p = probe(FleetPreset::EdgeBox);
+        let snap = p.snapshot(0.0);
+        let best_manual = snap
+            .devices
+            .iter()
+            .map(|d| 32.0 * d.prefill_unit_s + 16.0 * d.step_s)
+            .fold(f64::INFINITY, f64::min);
+        assert_eq!(p.unloaded_service_s(32, 16), best_manual);
+        assert!(best_manual.is_finite() && best_manual > 0.0);
+    }
+
+    #[test]
+    fn snapshot_indexes_by_interned_dev() {
+        let p = probe(FleetPreset::MultiVendor);
+        let snap = p.snapshot(1.0);
+        assert_eq!(snap.devices.len(), 5);
+        for (i, d) in snap.devices.iter().enumerate() {
+            assert_eq!(d.dev, DevIdx(i as u16));
+            assert_eq!(snap.device(DevIdx(i as u16)), Some(d));
+        }
+        assert!(snap.device(DevIdx(9)).is_none());
+    }
+}

@@ -27,6 +27,7 @@ pub mod json;
 pub mod coordinator;
 pub mod devices;
 pub mod experiments;
+pub mod gateway;
 pub mod metrics;
 pub mod rng;
 pub mod runtime;

@@ -36,6 +36,14 @@ SERVE OPTIONS:
     --plan-cache        preview the warm-start plan cache across failure
                         signatures and print its hit/miss statistics
     --cascade           preview the selection cascade on the first query
+    --gateway           run the serving gateway on a synthetic multi-tenant
+                        overload trace and print the SLA-class report
+    --tenants <n>       gateway tenants                 [default: 4]
+    --overload <x>      offered load vs fleet capacity  [default: 3.0]
+    --sla-class <c>     interactive | standard | batch | mixed [default:
+                        standard for the serve loop, mixed for --gateway]
+    --stats-json        emit ServeStats / GatewayReport as one JSON line
+    --legacy-admission  pre-gateway request loop (validate + rate-limit)
 ";
 
 fn main() -> Result<()> {

@@ -2,10 +2,16 @@
 
 use std::time::Duration;
 
+use crate::gateway::SlaClass;
+use crate::json::Json;
+
 /// An inference request as admitted by the request loop.
 #[derive(Debug, Clone)]
 pub struct InferenceRequest {
     pub client_id: u32,
+    /// SLA class the gateway admission ladder and dispatch priority
+    /// apply to.
+    pub class: SlaClass,
     /// Tokenized prompt (the validator enforces vocab and length).
     pub prompt: Vec<i64>,
     /// Tokens to generate per sample.
@@ -16,12 +22,17 @@ pub struct InferenceRequest {
     pub seed: u64,
 }
 
-/// Why a request was turned away before execution.
+/// Why a request was turned away or failed.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum RejectReason {
     Validation(String),
     RateLimited,
+    /// Dropped by the gateway shed ladder (fleet pressure).
     Overloaded,
+    /// Admitted but failed DURING execution (engine/runtime fault) —
+    /// distinct from `Validation` so overload experiments cannot
+    /// masquerade execution faults as client errors.
+    Execution(String),
 }
 
 /// A served response.
@@ -44,6 +55,11 @@ pub struct ServeStats {
     pub served: u64,
     pub rejected_validation: u64,
     pub rejected_rate_limited: u64,
+    /// Shed by the gateway admission ladder.
+    pub rejected_overloaded: u64,
+    /// Admitted requests that failed during execution (engine faults) —
+    /// counted apart from any rejection class.
+    pub failed_execution: u64,
     pub tokens_out: u64,
     pub total_latency_s: f64,
     pub max_latency_s: f64,
@@ -67,12 +83,38 @@ impl ServeStats {
         self.tokens_out as f64 / self.wall_s
     }
 
+    /// Fraction of requests that passed admission (served or failed
+    /// DURING execution — an executor fault happens to an already-
+    /// admitted request) over everything submitted.
     pub fn admitted_fraction(&self) -> f64 {
-        let total = self.served + self.rejected_validation + self.rejected_rate_limited;
+        let total = self.served
+            + self.failed_execution
+            + self.rejected_validation
+            + self.rejected_rate_limited
+            + self.rejected_overloaded;
         if total == 0 {
             return 1.0;
         }
-        self.served as f64 / total as f64
+        (self.served + self.failed_execution) as f64 / total as f64
+    }
+
+    /// Machine-readable one-liner (`serve --stats-json`).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("served", Json::Num(self.served as f64)),
+            ("rejected_validation", Json::Num(self.rejected_validation as f64)),
+            ("rejected_rate_limited", Json::Num(self.rejected_rate_limited as f64)),
+            ("rejected_overloaded", Json::Num(self.rejected_overloaded as f64)),
+            ("failed_execution", Json::Num(self.failed_execution as f64)),
+            ("tokens_out", Json::Num(self.tokens_out as f64)),
+            ("mean_latency_s", Json::Num(self.mean_latency_s())),
+            ("max_latency_s", Json::Num(self.max_latency_s)),
+            ("total_compute_s", Json::Num(self.total_compute_s)),
+            ("halted_early", Json::Num(self.halted_early as f64)),
+            ("wall_s", Json::Num(self.wall_s)),
+            ("throughput_tps", Json::Num(self.throughput_tps())),
+            ("admitted_fraction", Json::Num(self.admitted_fraction())),
+        ])
     }
 }
 
@@ -101,5 +143,43 @@ mod tests {
         assert_eq!(s.mean_latency_s(), 0.0);
         assert_eq!(s.throughput_tps(), 0.0);
         assert_eq!(s.admitted_fraction(), 1.0);
+    }
+
+    #[test]
+    fn execution_failures_count_apart_from_rejections() {
+        // The PR-4 satellite bugfix: an executor fault is neither a
+        // validation nor a rate-limit rejection — it has its own
+        // counter and still dilutes the admitted fraction.
+        let s = ServeStats {
+            served: 6,
+            failed_execution: 2,
+            rejected_validation: 1,
+            rejected_overloaded: 1,
+            ..Default::default()
+        };
+        assert_eq!(s.rejected_validation, 1, "faults must not inflate validation");
+        // 6 served + 2 faulted = 8 of 10 admitted: faults happened to
+        // requests that HAD passed admission.
+        assert!((s.admitted_fraction() - 0.8).abs() < 1e-12);
+        let reason = RejectReason::Execution("pjrt died".into());
+        assert!(matches!(reason, RejectReason::Execution(_)));
+    }
+
+    #[test]
+    fn stats_json_round_trips() {
+        let s = ServeStats {
+            served: 3,
+            failed_execution: 1,
+            rejected_overloaded: 2,
+            tokens_out: 48,
+            wall_s: 2.0,
+            ..Default::default()
+        };
+        let parsed = crate::json::Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.u64_field("served").unwrap(), 3);
+        assert_eq!(parsed.u64_field("failed_execution").unwrap(), 1);
+        assert_eq!(parsed.u64_field("rejected_overloaded").unwrap(), 2);
+        assert!((parsed.f64_field("throughput_tps").unwrap() - 24.0).abs() < 1e-12);
+        assert!(!s.to_json().to_string().contains('\n'), "must be a single line");
     }
 }

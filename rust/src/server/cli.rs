@@ -11,6 +11,7 @@ use crate::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind
 use crate::coordinator::{Orchestrator, PhasePlan};
 use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::experiments::runner::default_meta;
+use crate::gateway::{Gateway, GatewayConfig, SlaClass};
 use crate::rng::Pcg;
 use crate::selection::{Candidate, SelectionCascade};
 use crate::workload::coverage::CoverageOracle;
@@ -29,6 +30,67 @@ pub fn run(args: &Args) -> Result<()> {
     let rate: f64 = args.num("rate", 8.0f64)?;
     let max_new: usize = args.num("max-new-tokens", 16usize)?;
     let seed: u64 = args.num("seed", 0u64)?;
+    let stats_json = args.flag("stats-json");
+
+    // `--gateway`: drive the serving gateway with a synthetic
+    // multi-tenant overload trace on the simulated fleet (no artifacts
+    // needed — the gateway runs on the logical clock) and print the
+    // SLA-class report. `--tenants`, `--overload`, `--sla-class`, and
+    // `--requests` shape the trace.
+    if args.flag("gateway") {
+        let preset = FleetPreset::from_str(&args.opt("fleet", "edge-box"))?;
+        let tenants: u32 = args.num("tenants", 4u32)?;
+        let overload: f64 = args.num("overload", 3.0f64)?;
+        if !(overload > 0.0) || !overload.is_finite() {
+            bail!("--overload must be a positive finite multiple of fleet capacity");
+        }
+        // Gateway-mode default trace length is 240, but an explicit
+        // --requests always wins (flag() sees the option's presence).
+        let n = if args.flag("requests") { requests } else { 240 };
+        let class_opt = match args.opt("sla-class", "mixed").as_str() {
+            "mixed" => None,
+            other => Some(SlaClass::from_str(other)?),
+        };
+        let mut gateway = Gateway::new(GatewayConfig {
+            fleet: preset,
+            family,
+            tenants,
+            seed,
+            ..Default::default()
+        });
+        let trace = gateway.overload_trace(n, overload, class_opt);
+        println!(
+            "gateway: fleet={} tenants={tenants} requests={n} offered={overload:.1}x capacity",
+            preset.as_str()
+        );
+        let report = gateway.run_trace(&trace);
+        for class in SlaClass::all() {
+            let stats = report.class(class);
+            println!(
+                "  {:<11} submitted={:<4} admitted={:<4} hit-rate={:>5.1}%  shed={} overflow={} expired={} rate-limited={}",
+                class.as_str(),
+                stats.submitted,
+                stats.admitted,
+                stats.hit_rate() * 100.0,
+                stats.shed,
+                stats.overflow,
+                stats.expired,
+                stats.rate_limited,
+            );
+        }
+        println!(
+            "  {} waves, {} lane reroutes, max shed band {}, per-tenant dispatched {:?}",
+            report.waves, report.reroutes, report.max_shed_level, report.per_tenant_dispatched,
+        );
+        println!(
+            "  wall {:.2} s (logical), {:.1} J total ({:.1} J idle)",
+            report.wall_s, report.energy_j, report.idle_energy_j,
+        );
+        if stats_json {
+            println!("{}", report.to_json().to_string());
+        }
+        return Ok(());
+    }
 
     // Announce the energy-aware layer plan for the edge fleet this
     // service fronts (PGSAM is the default planner; `--planner greedy`
@@ -174,9 +236,17 @@ pub fn run(args: &Args) -> Result<()> {
         );
     }
 
+    // `mixed` (also valid here, not just under --gateway) rotates the
+    // class per request; a named class pins every request to it.
+    let class_cycle: Option<SlaClass> = match args.opt("sla-class", "standard").as_str() {
+        "mixed" => None,
+        other => Some(SlaClass::from_str(other)?),
+    };
     let config = ServiceConfig {
         artifacts_dir: args.opt("artifacts", "artifacts"),
         variant: variant.clone(),
+        fleet: FleetPreset::from_str(&args.opt("fleet", "edge-box"))?,
+        legacy_admission: args.flag("legacy-admission"),
         ..Default::default()
     };
     println!("starting service: variant={variant} dataset={} requests={requests}", dataset.as_str());
@@ -186,11 +256,12 @@ pub fn run(args: &Args) -> Result<()> {
     let trace = RequestTrace::poisson(queries, rate, 4, seed);
     let mut rng = Pcg::seeded(seed);
 
-    for traced in trace.requests() {
+    for (i, traced) in trace.requests().iter().enumerate() {
         let prompt: Vec<i64> =
             (0..config.max_prompt_tokens).map(|_| rng.below(config.vocab as u64) as i64).collect();
         let request = InferenceRequest {
             client_id: traced.client_id,
+            class: class_cycle.unwrap_or(SlaClass::all()[i % 3]),
             prompt,
             max_new_tokens: max_new,
             temperature: 0.8,
@@ -209,13 +280,18 @@ pub fn run(args: &Args) -> Result<()> {
 
     let stats = service.stats();
     println!(
-        "\nserved {} / rejected {} (validation) + {} (rate)\nmean latency {:.2} ms  max {:.2} ms  throughput {:.1} tok/s",
+        "\nserved {} / rejected {} (validation) + {} (rate) + {} (overload) / failed {} (execution)\nmean latency {:.2} ms  max {:.2} ms  throughput {:.1} tok/s",
         stats.served,
         stats.rejected_validation,
         stats.rejected_rate_limited,
+        stats.rejected_overloaded,
+        stats.failed_execution,
         stats.mean_latency_s() * 1e3,
         stats.max_latency_s * 1e3,
         stats.throughput_tps(),
     );
+    if stats_json {
+        println!("{}", stats.to_json().to_string());
+    }
     Ok(())
 }

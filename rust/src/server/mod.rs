@@ -1,6 +1,7 @@
-//! The serving layer: validation → rate limiting → PJRT execution →
-//! output sanity, over std threads + channels (the offline toolchain has
-//! no tokio; see Cargo.toml).
+//! The serving layer: validation → gateway admission (SLA shed ladder +
+//! rate limiting, see [`crate::gateway`]) → PJRT execution → output
+//! sanity, over std threads + channels (the offline toolchain has no
+//! tokio; see Cargo.toml).
 //!
 //! PJRT wrapper types are `!Send` (raw pointers), so a dedicated
 //! *executor thread* owns the [`crate::runtime::Engine`]; the request

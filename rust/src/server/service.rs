@@ -1,11 +1,28 @@
-//! The request loop: validation → rate limiting → executor → stats.
+//! The serving front end: a thin wrapper over the gateway admission
+//! layer in front of the PJRT executor.
+//!
+//! Default path per request: validation → gateway admission (SLA shed
+//! ladder over rolling fleet telemetry + per-client token bucket) →
+//! executor → stats. The executor's measured compute feeds back into
+//! the telemetry probe, so sustained load moves the thermal model and
+//! the shed ladder engages on real traffic. The pre-gateway behaviour
+//! (validate → rate-limit only) stays available behind
+//! [`ServiceConfig::legacy_admission`].
 
 use std::time::Instant;
 
 use anyhow::Result;
 
+use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::disaggregation::PhasePlan;
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::devices::spec::DevIdx;
+use crate::experiments::runner::default_meta;
+use crate::gateway::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
+use crate::gateway::telemetry::{FleetTelemetry, TelemetryProbe};
 use crate::safety::ratelimit::RateLimiter;
 use crate::safety::validation::InputValidator;
+use crate::workload::datasets::ModelFamily;
 
 use super::api::{InferenceRequest, InferenceResponse, RejectReason, ServeStats};
 use super::executor::ExecutorHandle;
@@ -21,6 +38,15 @@ pub struct ServiceConfig {
     /// Rate limit per client.
     pub rate_per_s: f64,
     pub burst: f64,
+    /// Simulated fleet the gateway admission telemetry models (the
+    /// edge box this service fronts).
+    pub fleet: FleetPreset,
+    /// Telemetry snapshot cadence for the admission front (s) — the
+    /// same knob as `GatewayConfig::telemetry_refresh_s`.
+    pub telemetry_refresh_s: f64,
+    /// Bypass the gateway admission layer: validate → rate-limit only,
+    /// exactly the pre-gateway request loop.
+    pub legacy_admission: bool,
 }
 
 impl Default for ServiceConfig {
@@ -32,7 +58,81 @@ impl Default for ServiceConfig {
             vocab: 512,
             rate_per_s: 50.0,
             burst: 20.0,
+            fleet: FleetPreset::EdgeBox,
+            telemetry_refresh_s: 0.25,
+            legacy_admission: false,
         }
+    }
+}
+
+/// The gateway admission front: telemetry probe + shed-ladder
+/// controller over the service's simulated fleet.
+struct GatewayFront {
+    probe: TelemetryProbe,
+    admission: AdmissionController,
+    snap: FleetTelemetry,
+    lanes: Vec<DevIdx>,
+    /// Lead decode lane: measured executor compute is attributed here.
+    lead: DevIdx,
+    lead_power_w: f64,
+    last_now_s: f64,
+    refresh_s: f64,
+}
+
+impl GatewayFront {
+    fn new(config: &ServiceConfig) -> GatewayFront {
+        let fleet = Fleet::preset(config.fleet);
+        let family =
+            ModelFamily::from_str(&config.variant).unwrap_or(ModelFamily::Gpt2);
+        let shape = ModelShape::from_family(family, &default_meta(family));
+        let probe = TelemetryProbe::new(&fleet, &shape);
+        let mut lanes: Vec<DevIdx> =
+            PhasePlan::disaggregated(&shape, &fleet, config.max_prompt_tokens.max(1) as u32, 4)
+                .map(|plan| plan.decode.iter().filter_map(|id| fleet.idx_of(id)).collect())
+                .unwrap_or_default();
+        if lanes.is_empty() {
+            lanes.push(DevIdx(0));
+        }
+        let lead = lanes[0];
+        let snap = probe.snapshot(0.0);
+        let lead_power_w = snap.devices[lead.as_usize()].active_power_w;
+        GatewayFront {
+            admission: AdmissionController::new(AdmissionConfig {
+                rate_per_s: config.rate_per_s,
+                burst: config.burst,
+                ..Default::default()
+            }),
+            snap,
+            probe,
+            lanes,
+            lead,
+            lead_power_w,
+            last_now_s: 0.0,
+            refresh_s: config.telemetry_refresh_s.max(1e-6),
+        }
+    }
+
+    /// Advance the probe to `now_s` (cadence-chunked while busy
+    /// backlog heats the devices — the same integration the gateway
+    /// driver uses) and refresh the rolling snapshot at the cadence
+    /// (or immediately on a safety-version bump).
+    fn observe(&mut self, now_s: f64) {
+        let dt = now_s - self.last_now_s;
+        if dt > 0.0 {
+            self.probe.advance_chunked(dt, self.refresh_s);
+            self.last_now_s = now_s;
+        }
+        if now_s - self.snap.at_s >= self.refresh_s
+            || self.snap.safety_version != self.probe.safety_version()
+        {
+            self.snap = self.probe.snapshot(now_s);
+        }
+    }
+
+    fn admit(&mut self, client: u32, class: crate::gateway::SlaClass, now_s: f64) -> AdmitDecision {
+        // The synchronous service has no queue: backpressure is 0.
+        let level = self.admission.effective_level(&self.snap, &self.lanes, 0.0);
+        self.admission.admit(client, class, now_s, level)
     }
 }
 
@@ -40,7 +140,9 @@ impl Default for ServiceConfig {
 pub struct Service {
     executor: ExecutorHandle,
     validator: InputValidator,
+    /// Legacy-path limiter (gateway admission owns its own bucket).
     limiter: RateLimiter,
+    front: Option<GatewayFront>,
     stats: ServeStats,
     started: Instant,
 }
@@ -49,17 +151,19 @@ impl Service {
     pub fn start(config: &ServiceConfig) -> Result<Service> {
         let executor =
             ExecutorHandle::spawn(config.artifacts_dir.clone(), config.variant.clone())?;
+        let front = if config.legacy_admission { None } else { Some(GatewayFront::new(config)) };
         Ok(Service {
             executor,
             validator: InputValidator::new(config.max_prompt_tokens, config.vocab),
             limiter: RateLimiter::new(config.rate_per_s, config.burst),
+            front,
             stats: ServeStats::default(),
             started: Instant::now(),
         })
     }
 
     /// Admit + execute one request at logical time `now_s` (used by the
-    /// rate limiter; wall-clock timing is measured internally).
+    /// admission layer; wall-clock timing is measured internally).
     pub fn handle(
         &mut self,
         request: InferenceRequest,
@@ -69,7 +173,20 @@ impl Service {
             self.stats.rejected_validation += 1;
             return Err(RejectReason::Validation(e.to_string()));
         }
-        if !self.limiter.admit(request.client_id, now_s) {
+        if let Some(front) = &mut self.front {
+            front.observe(now_s);
+            match front.admit(request.client_id, request.class, now_s) {
+                AdmitDecision::Admit => {}
+                AdmitDecision::RateLimited => {
+                    self.stats.rejected_rate_limited += 1;
+                    return Err(RejectReason::RateLimited);
+                }
+                AdmitDecision::Shed { .. } => {
+                    self.stats.rejected_overloaded += 1;
+                    return Err(RejectReason::Overloaded);
+                }
+            }
+        } else if !self.limiter.admit(request.client_id, now_s) {
             self.stats.rejected_rate_limited += 1;
             return Err(RejectReason::RateLimited);
         }
@@ -84,11 +201,20 @@ impl Service {
                 if resp.halted_early {
                     self.stats.halted_early += 1;
                 }
+                if let Some(front) = &mut self.front {
+                    // Feed measured compute back into the telemetry
+                    // model on the lead decode lane.
+                    let busy = resp.compute.as_secs_f64();
+                    front.probe.record_busy(front.lead, busy, busy * front.lead_power_w);
+                }
                 Ok(resp)
             }
             Err(e) => {
-                self.stats.rejected_validation += 1;
-                Err(RejectReason::Validation(format!("execution failed: {e}")))
+                // An executor fault is NOT a client error: count it on
+                // its own ledger (the PR-4 satellite bugfix — this used
+                // to increment `rejected_validation`).
+                self.stats.failed_execution += 1;
+                Err(RejectReason::Execution(format!("execution failed: {e}")))
             }
         }
     }

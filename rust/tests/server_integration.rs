@@ -1,7 +1,15 @@
 //! Integration tests over the serving stack: executor thread + service
-//! front end with validation / rate limiting / sanity checks, against
-//! the real PJRT engine. Skipped when artifacts are absent.
+//! front end with validation / gateway admission / sanity checks,
+//! against the real PJRT engine (PJRT-touching tests skip when
+//! artifacts are absent; the gateway admission tests run everywhere —
+//! the shed ladder needs no engine).
 
+use qeil::devices::spec::DevIdx;
+use qeil::gateway::{
+    AdmissionConfig, AdmissionController, AdmitDecision, DeviceTelemetry, FleetTelemetry,
+    SlaClass,
+};
+use qeil::safety::thermal_guard::SHED_LEVELS;
 use qeil::server::api::{InferenceRequest, RejectReason};
 use qeil::server::service::{Service, ServiceConfig};
 
@@ -16,10 +24,70 @@ fn have_artifacts() -> bool {
 fn request(client: u32, prompt_len: usize, seed: u64) -> InferenceRequest {
     InferenceRequest {
         client_id: client,
+        class: SlaClass::Standard,
         prompt: (0..prompt_len as i64).map(|i| i % 500).collect(),
         max_new_tokens: 6,
         temperature: 0.0,
         seed,
+    }
+}
+
+/// A single-device snapshot pinned to one thermal shedding band.
+fn snapshot_at_band(shed_level: u8) -> FleetTelemetry {
+    FleetTelemetry {
+        at_s: 0.0,
+        safety_version: shed_level as u64,
+        devices: vec![DeviceTelemetry {
+            dev: DevIdx(0),
+            dasi: 0.1,
+            cpq: 0.2,
+            phi: 1.0 - shed_level as f64 / SHED_LEVELS as f64,
+            shed_level,
+            temp_c: 60.0,
+            schedulable: true,
+            step_s: 1e-3,
+            prefill_unit_s: 1e-5,
+            active_power_w: 20.0,
+        }],
+    }
+}
+
+#[test]
+fn shed_ladder_drops_batch_then_standard_then_interactive() {
+    // The admission contract across every thermal band, driven straight
+    // through the gateway controller (no artifacts needed): band 1
+    // drops Batch, band 2 drops Standard, only the top band drops
+    // Interactive — and the admitted set shrinks monotonically.
+    let mut controller = AdmissionController::new(AdmissionConfig::default());
+    let lanes = vec![DevIdx(0)];
+    let mut previous: Option<Vec<SlaClass>> = None;
+    for band in 0..=SHED_LEVELS {
+        let snap = snapshot_at_band(band);
+        let level = controller.effective_level(&snap, &lanes, 0.0);
+        assert_eq!(level, band, "thermal band must pass through unchanged");
+        let admitted: Vec<SlaClass> = SlaClass::all()
+            .into_iter()
+            .filter(|class| {
+                matches!(
+                    controller.admit(0, *class, band as f64, level),
+                    AdmitDecision::Admit
+                )
+            })
+            .collect();
+        let expected: Vec<SlaClass> = match band {
+            0 => SlaClass::all().to_vec(),
+            1 => vec![SlaClass::Interactive, SlaClass::Standard],
+            2 | 3 => vec![SlaClass::Interactive],
+            _ => Vec::new(),
+        };
+        assert_eq!(admitted, expected, "band {band}");
+        if let Some(prev) = &previous {
+            assert!(
+                admitted.iter().all(|c| prev.contains(c)),
+                "band {band}: admitted set must shrink monotonically"
+            );
+        }
+        previous = Some(admitted);
     }
 }
 

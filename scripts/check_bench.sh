@@ -5,8 +5,9 @@
 # BENCH_orchestrator.json at the repo root), diffs it against the
 # committed baseline at benches/BENCH_orchestrator.baseline.json, and
 # FAILS when any gated entry (`pgsam_assignment*`, `energy_table_build*`,
-# `pgsam_warm_restart*`, `plan_cache_lookup*` — the planner-substrate
-# and plan-cache hot paths ROADMAP.md tracks) regresses by more than
+# `pgsam_warm_restart*`, `plan_cache_lookup*`, `gateway_admission*`,
+# `gateway_dispatch_wave*` — the planner-substrate, plan-cache, and
+# serving-gateway hot paths ROADMAP.md tracks) regresses by more than
 # MAX_RATIO (default 10x) in mean time. Non-gated entries are reported
 # but never fail the run (they are too machine-sensitive for a hard
 # gate).
@@ -123,6 +124,8 @@ GATED_PREFIXES = (
     "pgsam_assignment",
     "energy_table_build",
     "pgsam_warm_restart",
+    "gateway_admission",
+    "gateway_dispatch_wave",
 )
 
 
