@@ -10,6 +10,7 @@
 //!     cargo bench --bench orchestrator
 
 use qeil::bench::{write_json, Bencher};
+use qeil::calibration::{CalibratedSpec, FleetCalibrator};
 use qeil::coordinator::allocation::ModelShape;
 use qeil::coordinator::batcher::Batcher;
 use qeil::coordinator::disaggregation::{decode_task, PhasePlan};
@@ -85,6 +86,7 @@ fn main() {
     let mut cache = PlanCache::default();
     let healthy_key = PlanKey {
         usable: vec![true; fleet.len()],
+        calibration: 0,
         shape: ShapeKey::of(&shape),
         planner: PlannerKind::Pgsam,
         seed: 0,
@@ -224,6 +226,41 @@ fn main() {
         }
         let wave = scheduler.form_wave(&mut queues, 16);
         std::hint::black_box(scheduler.dispatch(&wave, 0.0, &snap));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Calibration estimator update — the per-executed-task cost of the
+    // PR-5 closed loop (two RLS channels + the Page-Hinkley step on a
+    // zero-residual sample: the steady-state fast path). Gated: it sits
+    // on every task completion, sim and serve alike.
+    let mut calibrator = FleetCalibrator::new(fleet.len());
+    let r = b.run("calibration_update(observe_task)", || {
+        std::hint::black_box(calibrator.observe_task(
+            DevIdx(1),
+            true,
+            2.0e-3,
+            2.0e-3,
+            1.4e-2,
+            1.4e-2,
+        ));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Energy-table rebuild from a non-identity calibration overlay —
+    // the per-drift-event cost (overlay application + full table
+    // build). Gated, and additionally held to a small multiple of the
+    // cold energy_table_build by scripts/check_bench.sh: a drift event
+    // must stay cheap enough to re-plan on immediately.
+    let mut drifted = FleetCalibrator::new(fleet.len());
+    drifted.force_overlay(
+        DevIdx(1),
+        CalibratedSpec { bandwidth_scale: 0.125, ..CalibratedSpec::identity() },
+    );
+    let r = b.run("energy_table_rebuild(lfm2, edge-box, calibrated)", || {
+        let calibrated = drifted.calibrated_fleet(&fleet);
+        std::hint::black_box(EnergyTable::build(&calibrated, &shape));
     });
     println!("{}", r.report());
     results.push(r);

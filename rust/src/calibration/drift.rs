@@ -1,0 +1,207 @@
+//! Ground-truth degradation injection for the simulator.
+//!
+//! The calibration loop is only testable against *known* targets: the
+//! sim injects a [`DriftPlan`] describing how each device's true
+//! physics departs from its nameplate over virtual time — sustained-
+//! throttle bandwidth derating, idle-power creep, contention noise —
+//! and the estimators must recover the injected factors from the
+//! resulting (time, energy) residuals. The injected factors never
+//! touch the planning path: planners see nameplate (or the calibrated
+//! overlay), execution sees the drifted ground truth, exactly like a
+//! real deployment whose hardware has aged.
+
+use crate::devices::spec::{DeviceId, DeviceSpec};
+
+/// One scheduled ground-truth departure from nameplate on one device.
+/// Factors of 1.0 (and noise 0.0) are inert; an inactive scenario
+/// (clock before `at_s`) injects nothing.
+#[derive(Debug, Clone)]
+pub struct DriftScenario {
+    pub device: DeviceId,
+    /// Virtual time the degradation manifests (s).
+    pub at_s: f64,
+    /// Multiplier on sustained memory bandwidth (0.125 = the 8×
+    /// derating a thermally saturated LPDDR interface exhibits).
+    pub bandwidth_factor: f64,
+    /// Multiplier on attainable peak compute.
+    pub compute_factor: f64,
+    /// Multiplier on idle draw (idle-power creep under sustained load).
+    pub idle_factor: f64,
+    /// Zero-mean uniform contention jitter amplitude applied to
+    /// measured execution seconds (relative; 0.05 = ±5%).
+    pub noise_rel: f64,
+}
+
+impl DriftScenario {
+    /// A pure bandwidth derating (the canonical sustained-throttle
+    /// scenario).
+    pub fn bandwidth_derate(device: DeviceId, at_s: f64, factor: f64) -> DriftScenario {
+        DriftScenario {
+            device,
+            at_s,
+            bandwidth_factor: factor,
+            compute_factor: 1.0,
+            idle_factor: 1.0,
+            noise_rel: 0.0,
+        }
+    }
+
+    /// Pure idle-power creep.
+    pub fn idle_creep(device: DeviceId, at_s: f64, factor: f64) -> DriftScenario {
+        DriftScenario {
+            device,
+            at_s,
+            bandwidth_factor: 1.0,
+            compute_factor: 1.0,
+            idle_factor: factor,
+            noise_rel: 0.0,
+        }
+    }
+
+    /// Pure contention noise (no systematic drift — the detector must
+    /// NOT fire on this).
+    pub fn contention_noise(device: DeviceId, at_s: f64, noise_rel: f64) -> DriftScenario {
+        DriftScenario {
+            device,
+            at_s,
+            bandwidth_factor: 1.0,
+            compute_factor: 1.0,
+            idle_factor: 1.0,
+            noise_rel,
+        }
+    }
+
+    fn active(&self, id: &DeviceId, now_s: f64) -> bool {
+        &self.device == id && now_s >= self.at_s
+    }
+}
+
+/// The full injection schedule for a run.
+#[derive(Debug, Clone, Default)]
+pub struct DriftPlan {
+    scenarios: Vec<DriftScenario>,
+}
+
+impl DriftPlan {
+    /// No injected drift: ground truth IS the nameplate, bit-exactly.
+    pub fn none() -> DriftPlan {
+        DriftPlan { scenarios: Vec::new() }
+    }
+
+    pub fn new(scenarios: Vec<DriftScenario>) -> DriftPlan {
+        DriftPlan { scenarios }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scenarios.is_empty()
+    }
+
+    pub fn scenarios(&self) -> &[DriftScenario] {
+        &self.scenarios
+    }
+
+    /// The ground-truth effective spec of `spec.id` at `now_s`. With no
+    /// active scenario this is a plain clone — bit-identical to the
+    /// nameplate, which is what makes the zero-drift calibrated path
+    /// provably identical to the uncalibrated one.
+    pub fn effective_spec(&self, spec: &DeviceSpec, now_s: f64) -> DeviceSpec {
+        let mut out = spec.clone();
+        for sc in &self.scenarios {
+            if !sc.active(&spec.id, now_s) {
+                continue;
+            }
+            out.bandwidth_gbs *= sc.bandwidth_factor;
+            out.peak_gflops *= sc.compute_factor;
+            out.idle_w *= sc.idle_factor;
+        }
+        out
+    }
+
+    /// Whether any scenario currently distorts `id`'s physics (used to
+    /// skip the spec rebuild on the fast path). Pure contention-noise
+    /// scenarios (all factors 1.0) do NOT distort the spec — noise is
+    /// applied to measured seconds by the engine, not to coefficients.
+    pub fn distorts(&self, id: &DeviceId, now_s: f64) -> bool {
+        self.scenarios.iter().any(|sc| {
+            sc.active(id, now_s)
+                && (sc.bandwidth_factor != 1.0
+                    || sc.compute_factor != 1.0
+                    || sc.idle_factor != 1.0)
+        })
+    }
+
+    /// Contention-noise amplitude active on `id` at `now_s` (max over
+    /// active scenarios; 0.0 = deterministic execution, and the engine
+    /// draws no random number at all).
+    pub fn noise_rel(&self, id: &DeviceId, now_s: f64) -> f64 {
+        self.scenarios
+            .iter()
+            .filter(|sc| sc.active(id, now_s))
+            .map(|sc| sc.noise_rel)
+            .fold(0.0, f64::max)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> DeviceSpec {
+        DeviceSpec::intel_npu()
+    }
+
+    #[test]
+    fn empty_plan_is_bit_identical_nameplate() {
+        let plan = DriftPlan::none();
+        let s = spec();
+        let eff = plan.effective_spec(&s, 1e9);
+        assert_eq!(eff.bandwidth_gbs.to_bits(), s.bandwidth_gbs.to_bits());
+        assert_eq!(eff.idle_w.to_bits(), s.idle_w.to_bits());
+        assert_eq!(eff.peak_gflops.to_bits(), s.peak_gflops.to_bits());
+        assert!(!plan.distorts(&s.id, 0.0));
+        assert_eq!(plan.noise_rel(&s.id, 0.0), 0.0);
+    }
+
+    #[test]
+    fn derate_activates_at_its_time_on_its_device_only() {
+        let s = spec();
+        let plan =
+            DriftPlan::new(vec![DriftScenario::bandwidth_derate(s.id.clone(), 2.0, 0.25)]);
+        let before = plan.effective_spec(&s, 1.0);
+        assert_eq!(before.bandwidth_gbs.to_bits(), s.bandwidth_gbs.to_bits());
+        let after = plan.effective_spec(&s, 2.0);
+        assert!((after.bandwidth_gbs - s.bandwidth_gbs * 0.25).abs() < 1e-12);
+        assert!(plan.distorts(&s.id, 2.0) && !plan.distorts(&s.id, 1.9));
+        let other = DeviceSpec::intel_cpu();
+        let untouched = plan.effective_spec(&other, 3.0);
+        assert_eq!(untouched.bandwidth_gbs.to_bits(), other.bandwidth_gbs.to_bits());
+    }
+
+    #[test]
+    fn scenarios_compose_multiplicatively() {
+        let s = spec();
+        let plan = DriftPlan::new(vec![
+            DriftScenario::bandwidth_derate(s.id.clone(), 0.0, 0.5),
+            DriftScenario::idle_creep(s.id.clone(), 1.0, 1.2),
+        ]);
+        let eff = plan.effective_spec(&s, 1.5);
+        assert!((eff.bandwidth_gbs - s.bandwidth_gbs * 0.5).abs() < 1e-12);
+        assert!((eff.idle_w - s.idle_w * 1.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn noise_is_the_max_over_active_scenarios() {
+        let s = spec();
+        let plan = DriftPlan::new(vec![
+            DriftScenario::contention_noise(s.id.clone(), 0.0, 0.03),
+            DriftScenario::contention_noise(s.id.clone(), 1.0, 0.08),
+        ]);
+        assert_eq!(plan.noise_rel(&s.id, 0.5), 0.03);
+        assert_eq!(plan.noise_rel(&s.id, 1.0), 0.08);
+        // Noise-only scenarios never distort the spec (the fast-path
+        // skip stays armed): coefficients are bit-identical nameplate.
+        assert!(!plan.distorts(&s.id, 1.0));
+        let eff = plan.effective_spec(&s, 1.0);
+        assert_eq!(eff.bandwidth_gbs.to_bits(), s.bandwidth_gbs.to_bits());
+    }
+}

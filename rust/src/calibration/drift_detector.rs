@@ -1,0 +1,130 @@
+//! Two-sided Page-Hinkley drift detector over a relative-residual
+//! stream.
+//!
+//! The calibration loop must distinguish *drift* (the device's physics
+//! moved — re-fit and re-plan) from *noise* (contention jitter — do
+//! nothing, or every query would invalidate the plan cache). Page-
+//! Hinkley is the classical sequential test for exactly this: it
+//! accumulates residual mass beyond a tolerance `delta` in each
+//! direction and fires when either side's cumulative excess crosses
+//! `lambda`. Zero-mean noise of amplitude ≤ `delta` can never fire it;
+//! a sustained shift of size `s > delta` fires after roughly
+//! `lambda / (s − delta)` samples — one sample for a hard derating,
+//! a handful for slow idle-power creep.
+
+/// Two-sided Page-Hinkley test. Deterministic; no allocation.
+#[derive(Debug, Clone)]
+pub struct PageHinkley {
+    /// Per-sample residual tolerance (relative-error units): the noise
+    /// band the detector ignores.
+    delta: f64,
+    /// Cumulative-excess firing threshold.
+    lambda: f64,
+    up: f64,
+    down: f64,
+    fires: u64,
+}
+
+impl PageHinkley {
+    pub fn new(delta: f64, lambda: f64) -> PageHinkley {
+        PageHinkley { delta: delta.max(0.0), lambda: lambda.max(1e-9), up: 0.0, down: 0.0, fires: 0 }
+    }
+
+    /// Fold one residual (e.g. `measured/predicted − 1`); returns true
+    /// when a drift fires. Firing resets the accumulators — the caller
+    /// re-anchors its model and detection restarts from the new anchor.
+    pub fn observe(&mut self, residual: f64) -> bool {
+        if !residual.is_finite() {
+            return false;
+        }
+        self.up = (self.up + residual - self.delta).max(0.0);
+        self.down = (self.down - residual - self.delta).max(0.0);
+        if self.up > self.lambda || self.down > self.lambda {
+            self.up = 0.0;
+            self.down = 0.0;
+            self.fires += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Lifetime fire count.
+    pub fn fires(&self) -> u64 {
+        self.fires
+    }
+
+    /// Drop accumulated mass without counting a fire — used when a
+    /// fold triggered by a *different* channel re-anchors this
+    /// channel's predictions too (its pre-fold mass no longer refers
+    /// to the current model).
+    pub fn reset(&mut self) {
+        self.up = 0.0;
+        self.down = 0.0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_residuals_never_fire() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        for _ in 0..10_000 {
+            assert!(!ph.observe(0.0));
+        }
+        assert_eq!(ph.fires(), 0);
+    }
+
+    #[test]
+    fn noise_inside_the_tolerance_never_fires() {
+        // Deterministic zero-mean jitter at exactly the tolerance
+        // amplitude: per-sample excess is ≤ 0, so mass never builds.
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        for i in 0..10_000u32 {
+            let e = if i % 2 == 0 { 0.05 } else { -0.05 };
+            assert!(!ph.observe(e));
+        }
+        assert_eq!(ph.fires(), 0);
+    }
+
+    #[test]
+    fn hard_shift_fires_immediately_and_both_sides_detect() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        assert!(ph.observe(5.0), "a 500% residual must fire at once");
+        assert!(ph.observe(-5.0), "a large negative residual fires the down side");
+        assert_eq!(ph.fires(), 2);
+    }
+
+    #[test]
+    fn slow_creep_fires_after_the_expected_sample_count() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        // Sustained +0.15 residual: excess 0.10/sample → fires on the
+        // 11th observation (cumulative 1.1 > 1.0).
+        let mut fired_at = None;
+        for i in 1..=20 {
+            if ph.observe(0.15) {
+                fired_at = Some(i);
+                break;
+            }
+        }
+        assert_eq!(fired_at, Some(11));
+    }
+
+    #[test]
+    fn firing_resets_the_accumulators() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        assert!(ph.observe(5.0));
+        // Post-fire, small residuals start from zero mass again.
+        assert!(!ph.observe(0.2));
+        assert!(!ph.observe(0.2));
+    }
+
+    #[test]
+    fn non_finite_residuals_are_ignored() {
+        let mut ph = PageHinkley::new(0.05, 1.0);
+        assert!(!ph.observe(f64::NAN));
+        assert!(!ph.observe(f64::INFINITY));
+        assert_eq!(ph.fires(), 0);
+    }
+}

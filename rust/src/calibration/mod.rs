@@ -1,0 +1,554 @@
+//! Online device calibration: residual-driven roofline/power
+//! coefficient estimation with drift-triggered replan invalidation.
+//!
+//! Every coefficient the planners consume — `DeviceSpec::{peak_gflops,
+//! bandwidth_gbs, idle_w, tdp_w, compute_util}` — is a *nameplate*
+//! value. Measured on-device rooflines diverge substantially from
+//! datasheet peaks, and idle/dynamic power splits drift with sustained
+//! load, aging, and contention; a planner annealing against stale
+//! coefficients optimizes the wrong objective. This subsystem closes
+//! the telemetry→model loop:
+//!
+//! 1. Every executed task reports `(predicted, measured)` time and
+//!    energy against the currently applied model. Per device, per
+//!    roofline boundness class, a scalar RLS channel ([`rls::RatioRls`])
+//!    tracks the measured/predicted ratio.
+//! 2. A two-sided Page-Hinkley detector
+//!    ([`drift_detector::PageHinkley`]) runs over each channel's
+//!    residual stream (one detector per channel — clean co-channel
+//!    observations must not drain a drifting channel's mass). Noise
+//!    within its tolerance never fires; sustained drift fires, which
+//!    **folds** the RLS estimates into the device's
+//!    [`CalibratedSpec`] overlay, bumps the monotone
+//!    `calibration_version`, and re-anchors the channels at unity.
+//! 3. Consumers (the sim engine, the serving gateway) treat the
+//!    version exactly like PR-3's `safety_version`: a bump invalidates
+//!    the *current plan* (the `EnergyTable` is rebuilt from the overlay
+//!    and `PlanKey` carries the version, so PGSAM warm-restarts from
+//!    the pre-drift Pareto archive instead of serving
+//!    stale-coefficient plans), never the cache history.
+//!
+//! Presets stay immutable: [`CalibratedSpec`] is a delta layer over
+//! `DeviceSpec`, and the identity overlay applies as a bit-exact clone
+//! — the zero-drift calibrated path is provably identical to the
+//! uncalibrated one (locked by `rust/tests/calibration_properties.rs`).
+
+pub mod drift;
+pub mod drift_detector;
+pub mod rls;
+
+pub use drift::{DriftPlan, DriftScenario};
+pub use drift_detector::PageHinkley;
+pub use rls::RatioRls;
+
+use crate::devices::fleet::Fleet;
+use crate::devices::spec::{DevIdx, DeviceSpec};
+
+/// Multiplicative delta layer over one device's nameplate spec. The
+/// presets are never mutated; planners consume `overlay.apply(spec)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CalibratedSpec {
+    /// Scale on `peak_gflops` (effective roofline C).
+    pub compute_scale: f64,
+    /// Scale on `bandwidth_gbs` (effective roofline B).
+    pub bandwidth_scale: f64,
+    /// Scale on `idle_w`.
+    pub idle_scale: f64,
+    /// Scale on the dynamic power range `tdp_w − idle_w` (active-draw
+    /// split — what the estimated `compute_util` correction folds
+    /// into).
+    pub power_scale: f64,
+    /// Scale on `kernel_overhead_us` (launch overhead).
+    pub overhead_scale: f64,
+}
+
+/// Clamp band for folded scales: a residual can never push an
+/// estimated coefficient beyond 20× away from nameplate in either
+/// direction (a physical derating bound, and a guard against folding a
+/// corrupt sample).
+const SCALE_MIN: f64 = 0.05;
+const SCALE_MAX: f64 = 20.0;
+
+impl CalibratedSpec {
+    pub fn identity() -> CalibratedSpec {
+        CalibratedSpec {
+            compute_scale: 1.0,
+            bandwidth_scale: 1.0,
+            idle_scale: 1.0,
+            power_scale: 1.0,
+            overhead_scale: 1.0,
+        }
+    }
+
+    pub fn is_identity(&self) -> bool {
+        self.compute_scale == 1.0
+            && self.bandwidth_scale == 1.0
+            && self.idle_scale == 1.0
+            && self.power_scale == 1.0
+            && self.overhead_scale == 1.0
+    }
+
+    /// Apply the overlay to a nameplate spec. The identity overlay
+    /// returns a bit-exact clone (no arithmetic touches the fields), so
+    /// an uncalibrated fleet is indistinguishable from no calibration.
+    pub fn apply(&self, spec: &DeviceSpec) -> DeviceSpec {
+        if self.is_identity() {
+            return spec.clone();
+        }
+        let mut s = spec.clone();
+        s.peak_gflops = spec.peak_gflops * self.compute_scale;
+        s.bandwidth_gbs = spec.bandwidth_gbs * self.bandwidth_scale;
+        s.idle_w = spec.idle_w * self.idle_scale;
+        s.tdp_w = s.idle_w + self.power_scale * (spec.tdp_w - spec.idle_w);
+        s.kernel_overhead_us = spec.kernel_overhead_us * self.overhead_scale;
+        s
+    }
+}
+
+/// Estimator knobs. Defaults documented in ROADMAP.md ("Calibration
+/// contract (PR 5)").
+#[derive(Debug, Clone)]
+pub struct CalibrationConfig {
+    /// RLS forgetting factor λ (steady-state gain `1 − λ`).
+    pub rls_forgetting: f64,
+    /// Page-Hinkley per-sample tolerance (relative residual units) —
+    /// the contention-noise band that must never trigger a replan.
+    pub ph_delta: f64,
+    /// Page-Hinkley cumulative firing threshold.
+    pub ph_lambda: f64,
+    /// Decay of the "recent" error EWMA reported by [`CalibrationStats`].
+    pub recent_err_decay: f64,
+}
+
+impl Default for CalibrationConfig {
+    fn default() -> Self {
+        CalibrationConfig {
+            rls_forgetting: 0.9,
+            ph_delta: 0.05,
+            ph_lambda: 1.0,
+            recent_err_decay: 0.9,
+        }
+    }
+}
+
+/// Aggregate calibration counters (sim trail, serve CLI printout).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CalibrationStats {
+    /// Monotone calibration version: Σ per-device overlay folds (one
+    /// per drift event, plus any forced injection). The
+    /// replan-invalidation signal (composes with `safety_version`).
+    pub version: u64,
+    /// Task + idle samples observed.
+    pub samples: u64,
+    /// Lifetime mean |relative energy prediction error| (%), dominated
+    /// by the pre-convergence window after each drift.
+    pub mean_abs_err_pct: f64,
+    /// Exponentially decayed recent |relative energy error| (%) — the
+    /// post-convergence figure.
+    pub recent_abs_err_pct: f64,
+}
+
+/// One device's calibration state: four RLS channels, each paired with
+/// its OWN drift detector, + the currently applied overlay.
+///
+/// Per-channel detectors are load-bearing: Page-Hinkley drains `delta`
+/// of accumulated mass on every in-band observation, so a shared
+/// accumulator would let the zero residuals co-observed on the clean
+/// channels (a bandwidth derate leaves active power exactly unchanged,
+/// and idle windows interleave constantly) cancel a mild drift's
+/// excess forever — a sustained shift between `delta` and a few
+/// multiples of it could then never fire. Channel-owned detectors
+/// restore the documented contract: a shift of size `s > delta` fires
+/// after ~`lambda / (s − delta)` samples OF THAT CHANNEL, regardless
+/// of traffic on the others.
+#[derive(Debug, Clone)]
+struct DeviceCalibration {
+    /// measured/predicted execution-time ratio, compute-bound tasks.
+    compute_time: RatioRls,
+    /// measured/predicted execution-time ratio, memory-bound tasks.
+    memory_time: RatioRls,
+    /// measured/predicted active-power ratio.
+    active_power: RatioRls,
+    /// measured/predicted idle-energy ratio.
+    idle_power: RatioRls,
+    detect_compute_time: PageHinkley,
+    detect_memory_time: PageHinkley,
+    detect_power: PageHinkley,
+    detect_idle: PageHinkley,
+    applied: CalibratedSpec,
+    version: u64,
+    samples: u64,
+    /// Lifetime |relative energy error| accumulator.
+    err_sum: f64,
+    err_n: u64,
+    /// EWMA of |relative energy error|.
+    recent_err: f64,
+}
+
+impl DeviceCalibration {
+    fn new(cfg: &CalibrationConfig) -> DeviceCalibration {
+        DeviceCalibration {
+            compute_time: RatioRls::new(cfg.rls_forgetting),
+            memory_time: RatioRls::new(cfg.rls_forgetting),
+            active_power: RatioRls::new(cfg.rls_forgetting),
+            idle_power: RatioRls::new(cfg.rls_forgetting),
+            detect_compute_time: PageHinkley::new(cfg.ph_delta, cfg.ph_lambda),
+            detect_memory_time: PageHinkley::new(cfg.ph_delta, cfg.ph_lambda),
+            detect_power: PageHinkley::new(cfg.ph_delta, cfg.ph_lambda),
+            detect_idle: PageHinkley::new(cfg.ph_delta, cfg.ph_lambda),
+            applied: CalibratedSpec::identity(),
+            version: 0,
+            samples: 0,
+            err_sum: 0.0,
+            err_n: 0,
+            recent_err: 0.0,
+        }
+    }
+
+    fn track_err(&mut self, decay: f64, pred_j: f64, meas_j: f64) {
+        if pred_j > 0.0 && meas_j.is_finite() {
+            let e = (meas_j / pred_j - 1.0).abs();
+            self.err_sum += e;
+            self.err_n += 1;
+            self.recent_err = decay * self.recent_err + (1.0 - decay) * e;
+        }
+    }
+
+    /// Fold the current ratio estimates into the applied overlay and
+    /// re-anchor every channel at unity. The fold direction inverts the
+    /// time ratios (a task that took θ× longer than predicted means the
+    /// effective rate coefficient is 1/θ of what the overlay assumed)
+    /// and multiplies the power ratios straight through.
+    fn recalibrate(&mut self) {
+        let clamp = |v: f64| v.clamp(SCALE_MIN, SCALE_MAX);
+        let a = &mut self.applied;
+        a.compute_scale = clamp(a.compute_scale / self.compute_time.ratio().max(1e-9));
+        a.bandwidth_scale = clamp(a.bandwidth_scale / self.memory_time.ratio().max(1e-9));
+        a.power_scale = clamp(a.power_scale * self.active_power.ratio());
+        a.idle_scale = clamp(a.idle_scale * self.idle_power.ratio());
+        self.compute_time.rebase();
+        self.memory_time.rebase();
+        self.active_power.rebase();
+        self.idle_power.rebase();
+        // A fold re-anchors EVERY channel's predictions, so mass the
+        // other detectors accumulated against the pre-fold model no
+        // longer refers to anything — drop it (without counting fires).
+        self.detect_compute_time.reset();
+        self.detect_memory_time.reset();
+        self.detect_power.reset();
+        self.detect_idle.reset();
+        self.version += 1;
+    }
+}
+
+/// The per-fleet calibrator: one [`DeviceCalibration`] per interned
+/// device index, summed into one monotone `calibration_version`.
+#[derive(Debug, Clone)]
+pub struct FleetCalibrator {
+    config: CalibrationConfig,
+    devices: Vec<DeviceCalibration>,
+}
+
+impl FleetCalibrator {
+    pub fn new(n_devices: usize) -> FleetCalibrator {
+        FleetCalibrator::with_config(n_devices, CalibrationConfig::default())
+    }
+
+    pub fn with_config(n_devices: usize, config: CalibrationConfig) -> FleetCalibrator {
+        let devices = (0..n_devices).map(|_| DeviceCalibration::new(&config)).collect();
+        FleetCalibrator { config, devices }
+    }
+
+    pub fn n_devices(&self) -> usize {
+        self.devices.len()
+    }
+
+    /// Monotone calibration version: Σ per-device fold counters.
+    /// Constant exactly while no drift event fires — the same
+    /// compare-don't-diff staleness contract as `safety_version`.
+    pub fn version(&self) -> u64 {
+        self.devices.iter().map(|d| d.version).sum()
+    }
+
+    /// The currently applied overlay of `dev`.
+    pub fn overlay(&self, dev: DevIdx) -> &CalibratedSpec {
+        &self.devices[dev.as_usize()].applied
+    }
+
+    /// Inject an overlay directly, bumping the version (bench/test hook
+    /// for exercising the rebuild path without streaming samples).
+    pub fn force_overlay(&mut self, dev: DevIdx, overlay: CalibratedSpec) {
+        let d = &mut self.devices[dev.as_usize()];
+        d.applied = overlay;
+        d.version += 1;
+    }
+
+    /// True while every overlay is the identity (no drift ever folded).
+    pub fn is_identity(&self) -> bool {
+        self.devices.iter().all(|d| d.applied.is_identity())
+    }
+
+    /// One executed task's residuals: predicted values must come from
+    /// the *currently applied* model (nameplate × overlay) under the
+    /// same throttle as the measurement, so the ratio isolates drift.
+    /// `memory_bound` is the task's roofline class on the applied spec.
+    /// Returns true when the sample fired the drift detector (the
+    /// overlay was refolded and the version bumped).
+    pub fn observe_task(
+        &mut self,
+        dev: DevIdx,
+        memory_bound: bool,
+        predicted_s: f64,
+        measured_s: f64,
+        predicted_j: f64,
+        measured_j: f64,
+    ) -> bool {
+        let decay = self.config.recent_err_decay;
+        let d = &mut self.devices[dev.as_usize()];
+        d.samples += 1;
+        d.track_err(decay, predicted_j, measured_j);
+        if memory_bound {
+            d.memory_time.observe(predicted_s, measured_s);
+        } else {
+            d.compute_time.observe(predicted_s, measured_s);
+        }
+        let mut fired = false;
+        if predicted_s > 0.0 && measured_s > 0.0 {
+            let time_residual = measured_s / predicted_s - 1.0;
+            fired |= if memory_bound {
+                d.detect_memory_time.observe(time_residual)
+            } else {
+                d.detect_compute_time.observe(time_residual)
+            };
+            let pred_w = predicted_j / predicted_s;
+            let meas_w = measured_j / measured_s;
+            d.active_power.observe(pred_w, meas_w);
+            if pred_w > 0.0 {
+                fired |= d.detect_power.observe(meas_w / pred_w - 1.0);
+            }
+        }
+        if fired {
+            d.recalibrate();
+        }
+        fired
+    }
+
+    /// One idle window's energy residual (idle-power creep channel).
+    pub fn observe_idle(&mut self, dev: DevIdx, predicted_j: f64, measured_j: f64) -> bool {
+        if !(predicted_j > 0.0) {
+            return false;
+        }
+        let decay = self.config.recent_err_decay;
+        let d = &mut self.devices[dev.as_usize()];
+        d.samples += 1;
+        d.track_err(decay, predicted_j, measured_j);
+        d.idle_power.observe(predicted_j, measured_j);
+        let fired = d.detect_idle.observe(measured_j / predicted_j - 1.0);
+        if fired {
+            d.recalibrate();
+        }
+        fired
+    }
+
+    /// The calibrated view of a nameplate fleet: every device with its
+    /// overlay applied. Identity overlays clone bit-exactly, so with no
+    /// drift this fleet is indistinguishable from `fleet`. Device ids
+    /// and order are preserved — interned `DevIdx` handles remain valid
+    /// across both views.
+    pub fn calibrated_fleet(&self, fleet: &Fleet) -> Fleet {
+        debug_assert_eq!(fleet.len(), self.devices.len());
+        let specs = fleet
+            .devices()
+            .iter()
+            .enumerate()
+            .map(|(i, spec)| self.devices[i].applied.apply(spec))
+            .collect();
+        Fleet::new(specs).expect("overlay application preserves device ids")
+    }
+
+    /// Aggregate counters across the fleet.
+    pub fn stats(&self) -> CalibrationStats {
+        let samples = self.devices.iter().map(|d| d.samples).sum();
+        let err_sum: f64 = self.devices.iter().map(|d| d.err_sum).sum();
+        let err_n: u64 = self.devices.iter().map(|d| d.err_n).sum();
+        // Recent: worst device (a calibrated fleet is only as converged
+        // as its least-converged member).
+        let recent = self.devices.iter().map(|d| d.recent_err).fold(0.0, f64::max);
+        CalibrationStats {
+            version: self.version(),
+            samples,
+            mean_abs_err_pct: if err_n > 0 { 100.0 * err_sum / err_n as f64 } else { 0.0 },
+            recent_abs_err_pct: 100.0 * recent,
+        }
+    }
+
+    /// One device's lifetime sample count (CLI printout).
+    pub fn device_samples(&self, dev: DevIdx) -> u64 {
+        self.devices[dev.as_usize()].samples
+    }
+
+    /// One device's fold count (CLI printout).
+    pub fn device_version(&self, dev: DevIdx) -> u64 {
+        self.devices[dev.as_usize()].version
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::devices::fleet::FleetPreset;
+
+    #[test]
+    fn identity_overlay_applies_bit_exactly() {
+        let spec = DeviceSpec::nvidia_gpu();
+        let id = CalibratedSpec::identity();
+        assert!(id.is_identity());
+        let applied = id.apply(&spec);
+        assert_eq!(applied.peak_gflops.to_bits(), spec.peak_gflops.to_bits());
+        assert_eq!(applied.bandwidth_gbs.to_bits(), spec.bandwidth_gbs.to_bits());
+        assert_eq!(applied.tdp_w.to_bits(), spec.tdp_w.to_bits());
+        assert_eq!(applied.idle_w.to_bits(), spec.idle_w.to_bits());
+        assert_eq!(applied.kernel_overhead_us.to_bits(), spec.kernel_overhead_us.to_bits());
+    }
+
+    #[test]
+    fn overlay_scales_the_roofline_and_power_coefficients() {
+        let spec = DeviceSpec::intel_npu();
+        let overlay = CalibratedSpec {
+            bandwidth_scale: 0.25,
+            power_scale: 0.5,
+            ..CalibratedSpec::identity()
+        };
+        let s = overlay.apply(&spec);
+        assert!((s.bandwidth_gbs - spec.bandwidth_gbs * 0.25).abs() < 1e-12);
+        // Dynamic range halves, idle unchanged.
+        assert_eq!(s.idle_w, spec.idle_w);
+        assert!((s.tdp_w - (spec.idle_w + 0.5 * (spec.tdp_w - spec.idle_w))).abs() < 1e-12);
+    }
+
+    #[test]
+    fn zero_residual_stream_never_bumps_the_version() {
+        let mut cal = FleetCalibrator::new(2);
+        for _ in 0..1_000 {
+            cal.observe_task(DevIdx(0), true, 1.0, 1.0, 5.0, 5.0);
+            cal.observe_idle(DevIdx(1), 2.0, 2.0);
+        }
+        assert_eq!(cal.version(), 0);
+        assert!(cal.is_identity());
+        let stats = cal.stats();
+        assert_eq!(stats.version, 0);
+        assert_eq!(stats.samples, 2_000);
+        assert_eq!(stats.mean_abs_err_pct, 0.0);
+    }
+
+    #[test]
+    fn bandwidth_derate_converges_to_the_injected_factor() {
+        // Emulate the engine's loop: ground truth is an 8× bandwidth
+        // derate; predictions always come from the applied overlay.
+        let mut cal = FleetCalibrator::new(1);
+        let base_s = 2.0e-3; // nameplate memory-bound step
+        let true_s = base_s / 0.125;
+        let power_w = 7.0;
+        for _ in 0..60 {
+            let overlay = *cal.overlay(DevIdx(0));
+            let pred_s = base_s / overlay.bandwidth_scale;
+            cal.observe_task(DevIdx(0), true, pred_s, true_s, pred_s * power_w, true_s * power_w);
+        }
+        let est = cal.overlay(DevIdx(0)).bandwidth_scale;
+        assert!(
+            (est - 0.125).abs() < 0.125 * 0.05,
+            "bandwidth_scale {est} must converge within 5% of 0.125"
+        );
+        assert!(cal.version() >= 1, "the derate must fire at least one drift event");
+        // Converged: recent error is small even though the lifetime
+        // mean carries the pre-convergence spike.
+        let stats = cal.stats();
+        assert!(stats.recent_abs_err_pct < 5.0, "recent {}", stats.recent_abs_err_pct);
+        assert!(stats.mean_abs_err_pct > stats.recent_abs_err_pct);
+    }
+
+    #[test]
+    fn idle_creep_folds_into_the_idle_scale() {
+        let mut cal = FleetCalibrator::new(1);
+        for _ in 0..40 {
+            let overlay = *cal.overlay(DevIdx(0));
+            let pred_j = 6.0 * overlay.idle_scale;
+            cal.observe_idle(DevIdx(0), pred_j, 6.0 * 1.3);
+        }
+        let est = cal.overlay(DevIdx(0)).idle_scale;
+        assert!((est - 1.3).abs() < 0.05, "idle_scale {est} must approach 1.3");
+    }
+
+    #[test]
+    fn mild_derate_fires_despite_clean_co_channels() {
+        // A 7.5% sustained slowdown — just above the 5% tolerance —
+        // must still fold even though every task co-observes a clean
+        // power residual and idle windows interleave constantly.
+        // Channels own their detectors, so in-band observations on the
+        // clean channels cannot drain the drifting channel's mass (a
+        // shared accumulator would pin it below the threshold forever).
+        let mut cal = FleetCalibrator::new(1);
+        for _ in 0..200 {
+            let overlay = *cal.overlay(DevIdx(0));
+            let pred_s = 1.0e-3 / overlay.bandwidth_scale;
+            cal.observe_task(DevIdx(0), true, pred_s, 1.075e-3, pred_s * 7.0, 1.075e-3 * 7.0);
+            cal.observe_idle(DevIdx(0), 2.0, 2.0);
+        }
+        assert!(cal.version() >= 1, "a mild drift above the band must eventually fold");
+        let est = cal.overlay(DevIdx(0)).bandwidth_scale;
+        let want = 1.0 / 1.075;
+        assert!((est - want).abs() < 0.02, "folded scale {est} must approach {want}");
+    }
+
+    #[test]
+    fn contention_noise_inside_the_band_never_fires() {
+        let mut cal = FleetCalibrator::new(1);
+        for i in 0..2_000u32 {
+            // Deterministic ±4% jitter, inside the 5% PH tolerance.
+            let jitter = if i % 2 == 0 { 1.04 } else { 0.96 };
+            cal.observe_task(DevIdx(0), true, 1.0, jitter, 7.0, 7.0 * jitter);
+        }
+        assert_eq!(cal.version(), 0, "zero-mean in-band noise must not trigger replans");
+        assert!(cal.is_identity());
+    }
+
+    #[test]
+    fn calibrated_fleet_preserves_ids_and_identity_bits() {
+        let fleet = Fleet::preset(FleetPreset::MultiVendor);
+        let cal = FleetCalibrator::new(fleet.len());
+        let calibrated = cal.calibrated_fleet(&fleet);
+        assert_eq!(calibrated.len(), fleet.len());
+        for (a, b) in fleet.devices().iter().zip(calibrated.devices()) {
+            assert_eq!(a.id, b.id);
+            assert_eq!(a.bandwidth_gbs.to_bits(), b.bandwidth_gbs.to_bits());
+            assert_eq!(a.tdp_w.to_bits(), b.tdp_w.to_bits());
+        }
+    }
+
+    #[test]
+    fn force_overlay_bumps_version_and_applies() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut cal = FleetCalibrator::new(fleet.len());
+        cal.force_overlay(
+            DevIdx(1),
+            CalibratedSpec { bandwidth_scale: 0.5, ..CalibratedSpec::identity() },
+        );
+        assert_eq!(cal.version(), 1);
+        let calibrated = cal.calibrated_fleet(&fleet);
+        assert!(
+            (calibrated.devices()[1].bandwidth_gbs
+                - fleet.devices()[1].bandwidth_gbs * 0.5)
+                .abs()
+                < 1e-9
+        );
+    }
+
+    #[test]
+    fn fold_clamps_to_the_physical_band() {
+        let mut cal = FleetCalibrator::new(1);
+        // An absurd 1000× time ratio folds to the clamp floor, not to
+        // a denormal coefficient.
+        cal.observe_task(DevIdx(0), true, 1e-3, 1.0, 1e-3, 1.0);
+        assert!(cal.overlay(DevIdx(0)).bandwidth_scale >= SCALE_MIN);
+    }
+}

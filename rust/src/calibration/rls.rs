@@ -1,0 +1,145 @@
+//! Scalar recursive-least-squares ratio estimator.
+//!
+//! Every calibration channel fits the same one-parameter model:
+//! `measured = θ · predicted`, with θ the multiplicative correction the
+//! nameplate (or currently applied overlay) coefficient needs. On the
+//! normalized regressor (x ≡ 1, y = measured/predicted) the exact RLS
+//! recursion with forgetting factor λ reduces to a gain-scheduled
+//! exponential average: the gain starts near 1 (a huge prior variance
+//! makes the first sample land almost exactly on its ratio — fast
+//! acquisition) and settles at `1 − λ` (steady tracking that forgets a
+//! sample's influence geometrically). Deterministic: pure f64
+//! arithmetic, no time, no randomness.
+
+/// One RLS channel estimating a measured/predicted ratio.
+#[derive(Debug, Clone)]
+pub struct RatioRls {
+    /// Current ratio estimate θ (1.0 = the applied coefficient is
+    /// exact).
+    theta: f64,
+    /// Scalar covariance P of the recursion.
+    p: f64,
+    /// Forgetting factor λ in (0, 1]: steady-state gain is `1 − λ`.
+    lambda: f64,
+    samples: u64,
+}
+
+impl RatioRls {
+    /// Prior covariance: large enough that the first observation
+    /// dominates the θ = 1 prior.
+    const P0: f64 = 1e3;
+
+    pub fn new(lambda: f64) -> RatioRls {
+        RatioRls { theta: 1.0, p: Self::P0, lambda: lambda.clamp(1e-3, 1.0), samples: 0 }
+    }
+
+    /// Fold one `(predicted, measured)` observation. Non-positive or
+    /// non-finite inputs — on either side — are discarded: a zero-cost
+    /// stage carries no ratio information, and a single
+    /// `measured == 0` sample (e.g. a sub-resolution executor timing)
+    /// would otherwise collapse θ toward 0 and send the next fold to
+    /// the clamp ceiling.
+    pub fn observe(&mut self, predicted: f64, measured: f64) {
+        if !(predicted > 0.0 && predicted.is_finite() && measured > 0.0 && measured.is_finite())
+        {
+            return;
+        }
+        let y = measured / predicted;
+        let k = self.p / (self.lambda + self.p);
+        self.theta += k * (y - self.theta);
+        self.p = (1.0 - k) * self.p / self.lambda;
+        self.samples += 1;
+    }
+
+    /// Current ratio estimate (1.0 before any observation).
+    pub fn ratio(&self) -> f64 {
+        self.theta
+    }
+
+    pub fn samples(&self) -> u64 {
+        self.samples
+    }
+
+    /// Re-anchor the channel at θ = 1 after its estimate has been
+    /// folded into the applied overlay (subsequent predictions already
+    /// carry the correction, so the residual model restarts at unity).
+    /// The sample count survives — it records lifetime evidence.
+    pub fn rebase(&mut self) {
+        self.theta = 1.0;
+        self.p = Self::P0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn converges_to_a_constant_ratio() {
+        let mut rls = RatioRls::new(0.9);
+        for _ in 0..50 {
+            rls.observe(2.0, 16.0);
+        }
+        assert!((rls.ratio() - 8.0).abs() < 1e-9, "theta={}", rls.ratio());
+        assert_eq!(rls.samples(), 50);
+    }
+
+    #[test]
+    fn first_sample_dominates_the_prior() {
+        let mut rls = RatioRls::new(0.9);
+        rls.observe(1.0, 4.0);
+        assert!((rls.ratio() - 4.0).abs() < 0.01, "theta={}", rls.ratio());
+    }
+
+    #[test]
+    fn tracks_a_ratio_change_within_tens_of_samples() {
+        let mut rls = RatioRls::new(0.9);
+        for _ in 0..30 {
+            rls.observe(1.0, 1.0);
+        }
+        for _ in 0..60 {
+            rls.observe(1.0, 3.0);
+        }
+        assert!((rls.ratio() - 3.0).abs() < 0.02, "theta={}", rls.ratio());
+    }
+
+    #[test]
+    fn degenerate_inputs_are_discarded() {
+        let mut rls = RatioRls::new(0.9);
+        rls.observe(0.0, 1.0);
+        rls.observe(-1.0, 1.0);
+        rls.observe(f64::INFINITY, 1.0);
+        rls.observe(1.0, f64::NAN);
+        rls.observe(1.0, f64::INFINITY);
+        rls.observe(1.0, -2.0);
+        rls.observe(1.0, 0.0);
+        assert_eq!(rls.samples(), 0);
+        assert_eq!(rls.ratio(), 1.0);
+    }
+
+    #[test]
+    fn rebase_restarts_at_unity_keeping_evidence() {
+        let mut rls = RatioRls::new(0.9);
+        for _ in 0..10 {
+            rls.observe(1.0, 5.0);
+        }
+        rls.rebase();
+        assert_eq!(rls.ratio(), 1.0);
+        assert_eq!(rls.samples(), 10);
+        rls.observe(1.0, 2.0);
+        assert!((rls.ratio() - 2.0).abs() < 0.01, "fast re-acquisition after rebase");
+    }
+
+    #[test]
+    fn estimator_is_deterministic() {
+        let run = || {
+            let mut rls = RatioRls::new(0.93);
+            for i in 0..200u32 {
+                let x = 1.0 + (i % 7) as f64 * 0.1;
+                rls.observe(x, x * 2.5);
+            }
+            rls.ratio().to_bits()
+        };
+        assert_eq!(run(), run());
+    }
+}

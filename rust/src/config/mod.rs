@@ -69,6 +69,16 @@ pub struct OrchestratorFeatures {
     /// archive (see [`crate::coordinator::plan_cache`]). Off = the
     /// legacy once-per-report cold plan.
     pub plan_cache: bool,
+    /// Online device calibration (PR 5): per-device RLS estimation of
+    /// effective roofline/power coefficients from predicted-vs-measured
+    /// (time, energy) residuals, with Page-Hinkley drift detection. A
+    /// drift fold bumps the monotone `calibration_version`, rebuilds
+    /// the planning `EnergyTable` from the [`crate::calibration`]
+    /// overlay, and invalidates the current plan (the plan cache keys
+    /// on the version; PGSAM warm-restarts from the pre-drift
+    /// archive). Off = planners consume nameplate coefficients forever,
+    /// however far the measured physics has drifted.
+    pub calibration: bool,
 }
 
 impl OrchestratorFeatures {
@@ -83,6 +93,7 @@ impl OrchestratorFeatures {
             safety: true,
             selection_cascade: true,
             plan_cache: true,
+            calibration: true,
         }
     }
 
@@ -97,6 +108,7 @@ impl OrchestratorFeatures {
             safety: false,
             selection_cascade: false,
             plan_cache: false,
+            calibration: false,
         }
     }
 }
@@ -198,6 +210,7 @@ impl ExperimentConfig {
                             "safety" => cfg.features.safety = b,
                             "selection_cascade" => cfg.features.selection_cascade = b,
                             "plan_cache" => cfg.features.plan_cache = b,
+                            "calibration" => cfg.features.calibration = b,
                             other => bail!("unknown feature flag {other:?}"),
                         }
                     }
@@ -304,6 +317,15 @@ mod tests {
         let cfg = ExperimentConfig::from_json(r#"{"features": {"plan_cache": false}}"#).unwrap();
         assert!(!cfg.features.plan_cache);
         assert!(cfg.features.pgsam_planner, "other full() flags stay on");
+    }
+
+    #[test]
+    fn calibration_flag_parses_and_defaults() {
+        assert!(OrchestratorFeatures::full().calibration);
+        assert!(!OrchestratorFeatures::baseline().calibration);
+        let cfg = ExperimentConfig::from_json(r#"{"features": {"calibration": false}}"#).unwrap();
+        assert!(!cfg.features.calibration);
+        assert!(cfg.features.plan_cache, "other full() flags stay on");
     }
 
     #[test]

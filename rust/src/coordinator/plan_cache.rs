@@ -16,6 +16,11 @@
 //!   memoization already uses.
 //! * the **planner identity** — which planner ([`PlannerKind`]) and,
 //!   for PGSAM, the PRNG seed (plans are seed-deterministic).
+//! * the **calibration version** — the monotone
+//!   `FleetCalibrator::version` the consumer's energy table was built
+//!   at (PR 5). A drift fold changes the coefficients under every
+//!   cached plan: post-drift lookups miss, and the pre-drift archives
+//!   serve as warm hints instead.
 //!
 //! A lookup hit returns the cached winning plan in O(1) — no anneal at
 //! all. A miss consults [`PlanCache::warm_hint`] for the most recent
@@ -53,7 +58,8 @@ impl PlannerKind {
     }
 }
 
-/// Cache key: (fleet health signature, model shape, planner identity).
+/// Cache key: (fleet health signature, calibration version, model
+/// shape, planner identity).
 ///
 /// Precondition: memory-capacity overrides
 /// (`Orchestrator::set_available_memory`) are NOT part of the key — a
@@ -66,6 +72,13 @@ pub struct PlanKey {
     /// the health signature. Two safety states with the same mask pose
     /// the identical planning problem.
     pub usable: Vec<bool>,
+    /// Monotone calibration version the consumer's `EnergyTable` was
+    /// built at (`FleetCalibrator::version`; 0 with calibration off or
+    /// before any drift event). A drift fold changes the stage-energy
+    /// coefficients, so plans computed against the pre-drift table must
+    /// never satisfy a post-drift lookup — they persist as the
+    /// warm-restart pool instead (see [`PlanCache::warm_hint`]).
+    pub calibration: u64,
     /// Bit-exact planner-relevant model shape.
     pub shape: ShapeKey,
     pub planner: PlannerKind,
@@ -160,10 +173,14 @@ impl PlanCache {
 
     /// Warm-restart seed for a miss: the Pareto archive of the most
     /// recently inserted entry for the same (shape, planner, seed)
-    /// under a different health signature — the only part of a sibling
-    /// entry a warm restart consumes. Its points are re-validated
-    /// against the new signature by `pgsam::anneal_warm`, so a hint is
-    /// never unsafe — only possibly useless.
+    /// under a different health signature OR calibration version — the
+    /// only part of a sibling entry a warm restart consumes. Its
+    /// points are re-validated against the new signature and re-scored
+    /// on the caller's (post-drift) energy table by
+    /// `pgsam::anneal_warm`, so a hint is never unsafe — only possibly
+    /// useless. This is what lets a calibration bump warm-restart
+    /// PGSAM from the pre-drift Pareto archive instead of annealing
+    /// cold.
     pub fn warm_hint(&mut self, key: &PlanKey) -> Option<Vec<ParetoPoint>> {
         let hint = self
             .order
@@ -173,7 +190,7 @@ impl PlanCache {
                 k.shape == key.shape
                     && k.planner == key.planner
                     && k.seed == key.seed
-                    && k.usable != key.usable
+                    && (k.usable != key.usable || k.calibration != key.calibration)
             })
             .and_then(|k| self.entries.get(k))
             .map(|entry| entry.archive.clone());
@@ -234,7 +251,13 @@ mod tests {
 
     fn key(usable: Vec<bool>, layers: usize, seed: u64) -> PlanKey {
         let shape = ModelShape::from_family(ModelFamily::Gpt2, &meta(layers));
-        PlanKey { usable, shape: ShapeKey::of(&shape), planner: PlannerKind::Pgsam, seed }
+        PlanKey {
+            usable,
+            calibration: 0,
+            shape: ShapeKey::of(&shape),
+            planner: PlannerKind::Pgsam,
+            seed,
+        }
     }
 
     fn entry(energy_j: f64) -> CachedPlan {
@@ -287,6 +310,21 @@ mod tests {
         solo.insert(key(vec![true, true], 1, 0), entry(1.0));
         assert!(solo.warm_hint(&key(vec![true, true], 1, 0)).is_none());
         assert_eq!(cache.stats().warm_seeds, 1);
+    }
+
+    #[test]
+    fn calibration_version_discriminates_and_feeds_warm_hints() {
+        // A drift fold must miss the pre-drift entry (stale
+        // coefficients) but receive its archive as the warm hint.
+        let mut cache = PlanCache::default();
+        let pre = key(vec![true, true], 1, 0);
+        cache.insert(pre.clone(), entry(1.0));
+        let post = PlanKey { calibration: 1, ..pre.clone() };
+        assert!(cache.lookup(&post).is_none(), "post-drift lookup must miss");
+        let hint = cache.warm_hint(&post).expect("pre-drift sibling archive must be offered");
+        assert_eq!(hint[0].energy_j, 1.0);
+        // And the pre-drift key still hits exactly.
+        assert!(cache.lookup(&pre).is_some());
     }
 
     #[test]

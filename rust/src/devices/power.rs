@@ -32,9 +32,13 @@ impl PowerModel {
     /// Phase-saturation model: a memory-bound task keeps the memory
     /// system busy for its whole active phase (draw = idle +
     /// mem_power_frac share of the dynamic range — HBM GPUs pay dearly
-    /// here); a compute-bound task drives the ALUs near TDP (0.95).
+    /// here); a compute-bound task drives the ALUs near TDP
+    /// (`DeviceSpec::compute_util`, nameplate 0.95 — a per-device
+    /// coefficient so online calibration can estimate it, not the
+    /// hardcoded constant it used to be).
     pub fn active_power_for(spec: &DeviceSpec, task: &Task) -> f64 {
-        let util = if task.memory_bound_on(spec) { spec.mem_power_frac } else { 0.95 };
+        let util =
+            if task.memory_bound_on(spec) { spec.mem_power_frac } else { spec.compute_util };
         spec.idle_w + (spec.tdp_w - spec.idle_w) * util
     }
 
@@ -126,6 +130,25 @@ mod tests {
         let e_full = pm.task_energy_j(&t, 1.0);
         let e_half = pm.task_energy_j(&t, 0.5);
         assert!(e_half > e_full && e_half < 2.5 * e_full);
+    }
+
+    #[test]
+    fn compute_util_is_a_per_device_coefficient() {
+        // Satellite lock (PR 5): the 0.95 saturation constant lives on
+        // the spec (nameplate 0.95, bit-exact with the old hardcode) so
+        // calibration can estimate it per device.
+        let t = prefill_task();
+        let mut spec = DeviceSpec::nvidia_gpu();
+        assert_eq!(spec.compute_util, 0.95);
+        let nameplate = PowerModel::active_power_for(&spec, &t);
+        assert_eq!(nameplate, spec.idle_w + (spec.tdp_w - spec.idle_w) * 0.95);
+        spec.compute_util = 0.80;
+        assert!(PowerModel::active_power_for(&spec, &t) < nameplate);
+        // Memory-bound draw is set by mem_power_frac, not compute_util.
+        let d = decode_task();
+        let mem = PowerModel::active_power_for(&spec, &d);
+        spec.compute_util = 0.95;
+        assert_eq!(mem, PowerModel::active_power_for(&spec, &d));
     }
 
     #[test]

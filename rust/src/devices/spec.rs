@@ -119,6 +119,13 @@ pub struct DeviceSpec {
     /// Fraction of TDP drawn by the memory system at full bandwidth
     /// utilization (GPUs pay for HBM even when ALUs idle).
     pub mem_power_frac: f64,
+    /// Effective ALU power utilization while executing compute-bound
+    /// work: the fraction of the dynamic power range a saturating
+    /// kernel actually draws. Nameplate default 0.95 on every preset;
+    /// the online calibration subsystem estimates it per device from
+    /// measured energy residuals (it was a hardcoded constant inside
+    /// the power model before PR 5, invisible to calibration).
+    pub compute_util: f64,
     /// T_i^max — junction temperature limit (°C); exceeding risks damage.
     pub t_max_c: f64,
     /// Hardware emergency-throttle trip point (°C), below `t_max_c`.
@@ -187,6 +194,7 @@ impl DeviceSpec {
             idle_w: 6.0,
             lambda: 1.0,
             mem_power_frac: 0.5,
+            compute_util: 0.95,
             t_max_c: 100.0,
             t_throttle_hw_c: 95.0,
             t_ambient_c: 25.0,
@@ -216,6 +224,7 @@ impl DeviceSpec {
             idle_w: 1.0,
             lambda: 0.15,
             mem_power_frac: 0.25,
+            compute_util: 0.95,
             t_max_c: 85.0,
             t_throttle_hw_c: 80.0,
             t_ambient_c: 25.0,
@@ -244,6 +253,7 @@ impl DeviceSpec {
             idle_w: 4.0,
             lambda: 0.45,
             mem_power_frac: 0.4,
+            compute_util: 0.95,
             t_max_c: 95.0,
             t_throttle_hw_c: 90.0,
             t_ambient_c: 25.0,
@@ -272,6 +282,7 @@ impl DeviceSpec {
             idle_w: 35.0,
             lambda: 0.4,
             mem_power_frac: 0.75,
+            compute_util: 0.95,
             t_max_c: 95.0,
             t_throttle_hw_c: 85.0,
             t_ambient_c: 25.0,
@@ -301,6 +312,7 @@ impl DeviceSpec {
             idle_w: 0.8,
             lambda: 0.12,
             mem_power_frac: 0.25,
+            compute_util: 0.95,
             t_max_c: 80.0,
             t_throttle_hw_c: 75.0,
             t_ambient_c: 25.0,
@@ -330,6 +342,7 @@ impl DeviceSpec {
             idle_w: 90.0,
             lambda: 0.35,
             mem_power_frac: 0.7,
+            compute_util: 0.95,
             t_max_c: 90.0,
             t_throttle_hw_c: 85.0,
             t_ambient_c: 22.0,

@@ -5,6 +5,7 @@
 //! See DESIGN.md §4 for the experiment index.
 
 pub mod breakdown;
+pub mod calibration_eval;
 pub mod components;
 pub mod crossdataset;
 pub mod gateway_load;
@@ -23,7 +24,7 @@ use report::Table;
 /// All experiment ids in paper order.
 pub const ALL_IDS: &[&str] = &[
     "t1", "t2", "t3", "t4", "t5", "t6", "t7", "t8", "t9", "t10", "t11", "t12", "t13", "t14",
-    "t15", "t16", "f2", "f3", "f4", "f5", "f6", "regimes", "gateway",
+    "t15", "t16", "f2", "f3", "f4", "f5", "f6", "regimes", "gateway", "calibration",
 ];
 
 /// Run one experiment by id.
@@ -70,6 +71,7 @@ pub fn run_experiment(id: &str, queries: usize, seed: u64) -> Result<Table> {
         "f6" => scaling::figure6(queries, seed)?,
         "regimes" => crossdataset::regimes(seed)?,
         "gateway" => gateway_load::gateway_table(seed)?,
+        "calibration" => calibration_eval::calibration_table(seed)?,
         other => bail!("unknown experiment {other:?} (available: {ALL_IDS:?})"),
     })
 }

@@ -132,6 +132,18 @@ pub struct RunMetrics {
     /// Eq. 12 energy of each successive plan, in trigger order — the
     /// per-replan energy trail for planner-quality regression tracking.
     pub replan_energy_trail: Vec<f64>,
+    /// Whether the online-calibration feature ran.
+    pub calibration_enabled: bool,
+    /// Final monotone calibration version (drift folds).
+    pub calibration_version: u64,
+    /// Predicted-vs-measured samples the estimators observed.
+    pub calibration_samples: u64,
+    /// Calibrated planning-substrate (EnergyTable) rebuilds.
+    pub energy_table_rebuilds: u64,
+    /// Lifetime mean |relative energy prediction error| (%).
+    pub calibration_mean_err_pct: f64,
+    /// Post-convergence (exponentially decayed) |error| (%).
+    pub calibration_recent_err_pct: f64,
 }
 
 impl RunMetrics {
@@ -190,6 +202,21 @@ impl RunMetrics {
             replans: r.replans,
             plan_cache_hits: r.plan_cache_hits,
             replan_energy_trail: r.replan_trail.iter().map(|e| e.plan_energy_j).collect(),
+            calibration_enabled: r.calibration.is_some(),
+            calibration_version: r.calibration.as_ref().map_or(0, |c| c.calibration_version),
+            calibration_samples: r.calibration.as_ref().map_or(0, |c| c.samples),
+            energy_table_rebuilds: r
+                .calibration
+                .as_ref()
+                .map_or(0, |c| c.energy_table_rebuilds),
+            calibration_mean_err_pct: r
+                .calibration
+                .as_ref()
+                .map_or(0.0, |c| c.mean_abs_energy_err_pct),
+            calibration_recent_err_pct: r
+                .calibration
+                .as_ref()
+                .map_or(0.0, |c| c.recent_abs_energy_err_pct),
         }
     }
 }

@@ -29,6 +29,7 @@ pub use telemetry::{DeviceTelemetry, FleetTelemetry, TelemetryProbe};
 
 use crate::coordinator::allocation::ModelShape;
 use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::devices::spec::DeviceId;
 use crate::experiments::runner::default_meta;
 use crate::json::Json;
 use crate::rng::Pcg;
@@ -233,6 +234,33 @@ impl Gateway {
         self.clock_s
     }
 
+    /// Mark a fleet device Failed (PR-5 satellite: failures, not just
+    /// thermal bands, reroute the executor lanes). The health bump
+    /// moves `safety_version`, so the very next scheduling step
+    /// re-derives the lane set without the device. Returns false for
+    /// an unknown id.
+    pub fn fail_device(&mut self, id: &DeviceId) -> bool {
+        match self.fleet.idx_of(id) {
+            Some(dev) => {
+                self.probe.mark_failed(dev, self.clock_s);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Failed → Recovering (schedulable again): the version bump routes
+    /// the lanes back over the device.
+    pub fn recover_device(&mut self, id: &DeviceId) -> bool {
+        match self.fleet.idx_of(id) {
+            Some(dev) => {
+                self.probe.mark_recovering(dev, self.clock_s);
+                true
+            }
+            None => false,
+        }
+    }
+
     /// Best-case service seconds for a request on this fleet — the
     /// scale deadlines are set on.
     pub fn unloaded_service_s(&self, prompt_tokens: u32, output_tokens: u32) -> f64 {
@@ -384,6 +412,11 @@ impl Gateway {
                 }
                 let records = self.scheduler.dispatch(&wave, self.clock_s, &self.snap);
                 for rec in &records {
+                    // NOTE: the gateway driver prices dispatches from
+                    // its own snapshot, so it has no independent
+                    // measurement to calibrate against — the serve path
+                    // (server/service.rs) is where real executor
+                    // residuals feed TelemetryProbe::record_measured.
                     self.probe.record_busy(rec.lane, rec.service_s, rec.energy_j);
                     let stats = &mut self.classes[rec.request.class.index()];
                     stats.completed += 1;

@@ -12,12 +12,24 @@
 //!   [0, 1], quantized into the same 4 shedding bands the plan cache
 //!   invalidates on ([`crate::safety::thermal_guard::ThermalDecision`]).
 //!
-//! [`TelemetryProbe`] owns the evolving per-device thermal state and the
-//! [`ShedTracker`] band counters whose summed version is the gateway's
-//! `safety_version` — the monotone staleness signal route decisions key
-//! on (the PR-3 plan-cache consumer contract: a version bump invalidates
-//! the consumer's current plan, never the telemetry history).
+//! [`TelemetryProbe`] owns the evolving per-device thermal state, a
+//! [`DeviceHealth`] FSM per device (PR 5: a Failed device flips
+//! `schedulable` and so reroutes the executor lanes — failures, not
+//! just thermal bands, move the route), and the [`ShedTracker`] band
+//! counters. The gateway's `safety_version` is the sum of every
+//! device's shed AND health version counters — the monotone staleness
+//! signal route decisions key on (the PR-3 plan-cache consumer
+//! contract: a version bump invalidates the consumer's current plan,
+//! never the telemetry history).
+//!
+//! The probe can also host the PR-5 calibration estimators
+//! ([`TelemetryProbe::enable_calibration`]): the serve path feeds
+//! measured executor (time, energy) samples against the snapshot's
+//! predicted coefficients through [`TelemetryProbe::record_measured`],
+//! so the same residual→RLS→Page-Hinkley loop the sim closes runs on
+//! live traffic.
 
+use crate::calibration::{CalibrationStats, FleetCalibrator};
 use crate::coordinator::allocation::ModelShape;
 use crate::coordinator::disaggregation::{decode_task, prefill_task};
 use crate::coordinator::energy_table::{EnergyTable, StageKind};
@@ -25,6 +37,7 @@ use crate::devices::fleet::Fleet;
 use crate::devices::power::PowerModel;
 use crate::devices::spec::{DevIdx, DeviceSpec};
 use crate::devices::thermal::ThermalState;
+use crate::safety::health::{DeviceHealth, HealthState};
 use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
 
 /// Prompt length the per-token prefill cost is normalized at.
@@ -80,6 +93,12 @@ struct ProbeDevice {
     spec: DeviceSpec,
     thermal: ThermalState,
     shed: ShedTracker,
+    /// Health FSM: Failed devices are unschedulable, which the lane
+    /// router reads off the snapshot — a failure reroutes lanes.
+    health: DeviceHealth,
+    /// Roofline class of the decode task on this device (classifies
+    /// serve-path residual samples for the calibrator).
+    decode_memory_bound: bool,
     dasi: f64,
     cpq: f64,
     step_s: f64,
@@ -100,6 +119,9 @@ struct ProbeDevice {
 pub struct TelemetryProbe {
     guard: ThermalGuard,
     devices: Vec<ProbeDevice>,
+    /// PR-5 online calibration estimators (`None` until
+    /// [`TelemetryProbe::enable_calibration`]).
+    calibrator: Option<FleetCalibrator>,
 }
 
 impl TelemetryProbe {
@@ -120,6 +142,8 @@ impl TelemetryProbe {
             .map(|(i, spec)| ProbeDevice {
                 thermal: ThermalState::new(spec),
                 shed: ShedTracker::default(),
+                health: DeviceHealth::new(spec.id.clone()),
+                decode_memory_bound: d_task.memory_bound_on(spec),
                 dasi: d_task.compute_utilization(spec),
                 cpq: resident_gb / table.capacity_gb(DevIdx(i as u16)).max(1e-9),
                 step_s: d_task.seconds_on(spec, 1.0),
@@ -133,11 +157,81 @@ impl TelemetryProbe {
                 spec: spec.clone(),
             })
             .collect();
-        TelemetryProbe { guard: ThermalGuard::default(), devices }
+        TelemetryProbe { guard: ThermalGuard::default(), devices, calibrator: None }
     }
 
     pub fn n_devices(&self) -> usize {
         self.devices.len()
+    }
+
+    /// Attach the PR-5 calibration estimators: subsequent
+    /// [`TelemetryProbe::record_measured`] calls feed them.
+    pub fn enable_calibration(&mut self) {
+        if self.calibrator.is_none() {
+            self.calibrator = Some(FleetCalibrator::new(self.devices.len()));
+        }
+    }
+
+    pub fn calibrator(&self) -> Option<&FleetCalibrator> {
+        self.calibrator.as_ref()
+    }
+
+    /// Serve-path calibration stats (`None` until enabled).
+    pub fn calibration_stats(&self) -> Option<CalibrationStats> {
+        self.calibrator.as_ref().map(|c| c.stats())
+    }
+
+    /// Mark a device Failed: it leaves every subsequent snapshot's
+    /// schedulable set (the lane router reroutes on the version bump)
+    /// and stops absorbing admission pressure.
+    pub fn mark_failed(&mut self, dev: DevIdx, now_s: f64) {
+        self.devices[dev.as_usize()].health.mark_failed(now_s);
+    }
+
+    /// Driver reset succeeded: Failed → Recovering (schedulable again
+    /// at reduced capacity; another version bump reroutes the lanes
+    /// back).
+    pub fn mark_recovering(&mut self, dev: DevIdx, now_s: f64) {
+        self.devices[dev.as_usize()].health.mark_recovering(now_s);
+    }
+
+    pub fn health(&self, dev: DevIdx) -> HealthState {
+        self.devices[dev.as_usize()].health.state()
+    }
+
+    /// One measured executor sample for work served on `dev`: records
+    /// the busy work (as [`TelemetryProbe::record_busy`]) AND feeds the
+    /// predicted-vs-measured residual to the calibrator when enabled.
+    /// `predicted_*` are priced from the snapshot's NAMEPLATE
+    /// coefficients (the ones the dispatch decision used); the applied
+    /// calibration overlay is folded in here, so the residual is
+    /// measured against the CURRENT model — the `observe_task`
+    /// contract. Without that fold, a sustained executor-vs-model bias
+    /// would re-fire the detector after every recalibration and
+    /// compound the scales geometrically toward the clamp bounds.
+    pub fn record_measured(
+        &mut self,
+        dev: DevIdx,
+        predicted_s: f64,
+        measured_s: f64,
+        predicted_j: f64,
+        measured_j: f64,
+    ) {
+        let memory_bound = self.devices[dev.as_usize()].decode_memory_bound;
+        self.record_busy(dev, measured_s, measured_j);
+        if let Some(cal) = &mut self.calibrator {
+            let overlay = *cal.overlay(dev);
+            let time_scale = if memory_bound {
+                overlay.bandwidth_scale
+            } else {
+                overlay.compute_scale
+            };
+            // A slower effective coefficient (scale < 1) means the
+            // applied model predicts proportionally MORE seconds.
+            let pred_s = predicted_s / time_scale.max(1e-9);
+            let pred_j = predicted_j / time_scale.max(1e-9) * overlay.power_scale;
+            cal.observe_task(dev, memory_bound, pred_s, measured_s, pred_j, measured_j);
+        }
     }
 
     /// Attribute active work to a device: `busy_s` seconds drawing
@@ -213,9 +307,12 @@ impl TelemetryProbe {
     }
 
     /// Monotone safety-state version: the sum of every device's shed
-    /// version counter. Constant exactly while no band crossing occurs.
+    /// AND health version counters. Constant exactly while no band
+    /// crossing and no health transition occurs — so a device failure
+    /// invalidates the lane route exactly like a thermal band change
+    /// (the PR-4 ROADMAP knob, closed in PR 5).
     pub fn safety_version(&self) -> u64 {
-        self.devices.iter().map(|d| d.shed.version()).sum()
+        self.devices.iter().map(|d| d.shed.version() + d.health.version()).sum()
     }
 
     pub fn snapshot(&self, at_s: f64) -> FleetTelemetry {
@@ -232,7 +329,7 @@ impl TelemetryProbe {
                     phi: decision.workload_factor,
                     shed_level: decision.shed_level(),
                     temp_c: d.thermal.temp_c(),
-                    schedulable: true,
+                    schedulable: d.health.state().schedulable(),
                     step_s: d.step_s,
                     prefill_unit_s: d.prefill_unit_s,
                     active_power_w: d.active_power_w,
@@ -335,6 +432,52 @@ mod tests {
             .fold(f64::INFINITY, f64::min);
         assert_eq!(p.unloaded_service_s(32, 16), best_manual);
         assert!(best_manual.is_finite() && best_manual > 0.0);
+    }
+
+    #[test]
+    fn failure_flips_schedulable_and_bumps_the_version() {
+        let mut p = probe(FleetPreset::EdgeBox);
+        let v0 = p.safety_version();
+        p.mark_failed(DevIdx(1), 1.0);
+        assert_eq!(p.safety_version(), v0 + 1, "a failure is a safety transition");
+        let snap = p.snapshot(1.0);
+        assert!(!snap.devices[1].schedulable, "Failed device leaves the schedulable set");
+        assert!(snap.devices[0].schedulable);
+        assert_eq!(p.health(DevIdx(1)), crate::safety::health::HealthState::Failed);
+        p.mark_recovering(DevIdx(1), 2.0);
+        assert_eq!(p.safety_version(), v0 + 2, "recovery bumps again (route comes back)");
+        assert!(p.snapshot(2.0).devices[1].schedulable, "Recovering is schedulable");
+        // Double-failure is idempotent: no spurious version churn.
+        p.mark_failed(DevIdx(1), 3.0);
+        p.mark_failed(DevIdx(1), 3.5);
+        assert_eq!(p.safety_version(), v0 + 3);
+    }
+
+    #[test]
+    fn record_measured_feeds_the_calibrator() {
+        let mut p = probe(FleetPreset::GpuOnly);
+        assert!(p.calibration_stats().is_none(), "estimators are opt-in");
+        p.enable_calibration();
+        // Zero residual: sample counted, no drift event.
+        p.record_measured(DevIdx(0), 0.5, 0.5, 10.0, 10.0);
+        let stats = p.calibration_stats().unwrap();
+        assert_eq!(stats.samples, 1);
+        assert_eq!(stats.version, 0);
+        // A sustained 3x time residual must fire the drift detector —
+        // and because record_measured folds the applied overlay into
+        // the nameplate-priced predictions, the bias folds a BOUNDED
+        // number of times and then stabilizes (no geometric compounding
+        // toward the clamp).
+        for _ in 0..200 {
+            p.record_measured(DevIdx(0), 0.5, 1.5, 10.0, 30.0);
+        }
+        let v = p.calibration_stats().unwrap().version;
+        assert!((1..=4).contains(&v), "bias must fold a bounded number of times, got {v}");
+        // The recovered coefficient models the 3x bias.
+        let overlay = p.calibrator().unwrap().overlay(DevIdx(0));
+        let scale =
+            if overlay.bandwidth_scale != 1.0 { overlay.bandwidth_scale } else { overlay.compute_scale };
+        assert!((scale - 1.0 / 3.0).abs() < 0.05, "recovered scale {scale} must approach 1/3");
     }
 
     #[test]

@@ -21,6 +21,7 @@
 
 pub mod baselines;
 pub mod bench;
+pub mod calibration;
 pub mod cli;
 pub mod config;
 pub mod json;

@@ -35,6 +35,10 @@ SERVE OPTIONS:
     --planner <name>    layer planner: pgsam | greedy  [default: pgsam]
     --plan-cache        preview the warm-start plan cache across failure
                         signatures and print its hit/miss statistics
+    --calibration       preview the online-calibration estimators (injected
+                        bandwidth derate -> recovered coefficients), then run
+                        the serve loop with the estimators attached to the
+                        admission front (measured executor residuals)
     --cascade           preview the selection cascade on the first query
     --gateway           run the serving gateway on a synthetic multi-tenant
                         overload trace and print the SLA-class report

@@ -3,8 +3,12 @@
 
 use anyhow::{bail, Result};
 
+use crate::calibration::{DriftPlan, DriftScenario, FleetCalibrator};
 use crate::cli::Args;
 use crate::coordinator::allocation::ModelShape;
+use crate::coordinator::disaggregation::decode_task;
+use crate::devices::power::PowerModel;
+use crate::devices::spec::DevIdx;
 use crate::coordinator::energy_table::ShapeKey;
 use crate::coordinator::pgsam::PgsamConfig;
 use crate::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind};
@@ -130,6 +134,7 @@ pub fn run(args: &Args) -> Result<()> {
         let shape_key = ShapeKey::of(&shape);
         let key_of = |usable: &[bool]| PlanKey {
             usable: usable.to_vec(),
+            calibration: 0,
             shape: shape_key,
             planner: PlannerKind::Pgsam,
             seed,
@@ -199,6 +204,65 @@ pub fn run(args: &Args) -> Result<()> {
         }
     }
 
+    // `--calibration`: preview the online-calibration estimators on
+    // this fleet — inject a 4x bandwidth derating on the lead decode
+    // device, stream predicted-vs-measured decode samples through the
+    // same RLS + Page-Hinkley loop the sim and gateway run, and print
+    // the recovered coefficients and drift folds. (The serve loop below
+    // then runs with the estimators attached to its admission front.)
+    if args.flag("calibration") {
+        let d_task = decode_task(&shape);
+        let lead = PhasePlan::disaggregated(&shape, &fleet, 32, 4)
+            .map(|p| p.decode[0].clone())
+            .unwrap_or_else(|| fleet.devices()[0].id.clone());
+        let drift =
+            DriftPlan::new(vec![DriftScenario::bandwidth_derate(lead.clone(), 0.0, 0.25)]);
+        let mut cal = FleetCalibrator::new(fleet.len());
+        for _ in 0..48 {
+            let believed = cal.calibrated_fleet(&fleet);
+            for (i, nameplate) in fleet.devices().iter().enumerate() {
+                let dev = DevIdx(i as u16);
+                let pred_spec = believed.spec_at(dev);
+                let truth = drift.effective_spec(nameplate, 0.0);
+                let pred_s = d_task.seconds_on(pred_spec, 1.0);
+                let meas_s = d_task.seconds_on(&truth, 1.0);
+                let pred_j = PowerModel::active_power_for(pred_spec, &d_task) * pred_s;
+                let meas_j = PowerModel::active_power_for(&truth, &d_task) * meas_s;
+                cal.observe_task(
+                    dev,
+                    d_task.memory_bound_on(pred_spec),
+                    pred_s,
+                    meas_s,
+                    pred_j,
+                    meas_j,
+                );
+            }
+        }
+        println!(
+            "calibration preview: injected bandwidth x0.25 on {lead} (the lead decode lane)"
+        );
+        for (i, spec) in fleet.devices().iter().enumerate() {
+            let dev = DevIdx(i as u16);
+            let overlay = cal.overlay(dev);
+            println!(
+                "  {:<10} bandwidth_scale {:.3}  compute_scale {:.3}  folds {}  samples {}",
+                spec.id.to_string(),
+                overlay.bandwidth_scale,
+                overlay.compute_scale,
+                cal.device_version(dev),
+                cal.device_samples(dev),
+            );
+        }
+        let stats = cal.stats();
+        println!(
+            "calibration stats: {} samples, {} drift folds, err {:.2}% mean / {:.2}% recent",
+            stats.samples,
+            stats.version,
+            stats.mean_abs_err_pct,
+            stats.recent_abs_err_pct,
+        );
+    }
+
     // `--cascade`: preview the EAC/ARDE/CSVET selection cascade on the
     // first trace query — how many of the budgeted samples it would
     // draw, the stop reason, and the winner — using the layer plan's
@@ -247,6 +311,7 @@ pub fn run(args: &Args) -> Result<()> {
         variant: variant.clone(),
         fleet: FleetPreset::from_str(&args.opt("fleet", "edge-box"))?,
         legacy_admission: args.flag("legacy-admission"),
+        calibration: args.flag("calibration"),
         ..Default::default()
     };
     println!("starting service: variant={variant} dataset={} requests={requests}", dataset.as_str());
@@ -290,6 +355,15 @@ pub fn run(args: &Args) -> Result<()> {
         stats.max_latency_s * 1e3,
         stats.throughput_tps(),
     );
+    if let Some(cal) = service.calibration_stats() {
+        println!(
+            "serve calibration: {} measured samples, {} drift folds, err {:.2}% mean / {:.2}% recent",
+            cal.samples,
+            cal.version,
+            cal.mean_abs_err_pct,
+            cal.recent_abs_err_pct,
+        );
+    }
     if stats_json {
         println!("{}", stats.to_json().to_string());
     }

@@ -47,6 +47,11 @@ pub struct ServiceConfig {
     /// Bypass the gateway admission layer: validate → rate-limit only,
     /// exactly the pre-gateway request loop.
     pub legacy_admission: bool,
+    /// Attach the PR-5 calibration estimators to the admission front's
+    /// telemetry probe: every executed request feeds its measured
+    /// compute seconds against the snapshot-predicted service time, so
+    /// the effective-roofline estimate tracks the real executor.
+    pub calibration: bool,
 }
 
 impl Default for ServiceConfig {
@@ -61,6 +66,7 @@ impl Default for ServiceConfig {
             fleet: FleetPreset::EdgeBox,
             telemetry_refresh_s: 0.25,
             legacy_admission: false,
+            calibration: false,
         }
     }
 }
@@ -77,6 +83,8 @@ struct GatewayFront {
     lead_power_w: f64,
     last_now_s: f64,
     refresh_s: f64,
+    /// Feed measured executor samples to the probe's calibrator.
+    calibration: bool,
 }
 
 impl GatewayFront {
@@ -85,7 +93,10 @@ impl GatewayFront {
         let family =
             ModelFamily::from_str(&config.variant).unwrap_or(ModelFamily::Gpt2);
         let shape = ModelShape::from_family(family, &default_meta(family));
-        let probe = TelemetryProbe::new(&fleet, &shape);
+        let mut probe = TelemetryProbe::new(&fleet, &shape);
+        if config.calibration {
+            probe.enable_calibration();
+        }
         let mut lanes: Vec<DevIdx> =
             PhasePlan::disaggregated(&shape, &fleet, config.max_prompt_tokens.max(1) as u32, 4)
                 .map(|plan| plan.decode.iter().filter_map(|id| fleet.idx_of(id)).collect())
@@ -109,6 +120,7 @@ impl GatewayFront {
             lead_power_w,
             last_now_s: 0.0,
             refresh_s: config.telemetry_refresh_s.max(1e-6),
+            calibration: config.calibration,
         }
     }
 
@@ -190,6 +202,7 @@ impl Service {
             self.stats.rejected_rate_limited += 1;
             return Err(RejectReason::RateLimited);
         }
+        let prompt_len = request.prompt.len();
         match self.executor.run_sync(request) {
             Ok(resp) => {
                 self.stats.served += 1;
@@ -203,9 +216,26 @@ impl Service {
                 }
                 if let Some(front) = &mut self.front {
                     // Feed measured compute back into the telemetry
-                    // model on the lead decode lane.
+                    // model on the lead decode lane — and, with
+                    // calibration on, the residual against the
+                    // snapshot's predicted service time into the same
+                    // estimators the sim trains (the serve-path half of
+                    // the PR-5 closed loop).
                     let busy = resp.compute.as_secs_f64();
-                    front.probe.record_busy(front.lead, busy, busy * front.lead_power_w);
+                    if front.calibration {
+                        let lead = &front.snap.devices[front.lead.as_usize()];
+                        let predicted_s = prompt_len as f64 * lead.prefill_unit_s
+                            + resp.tokens.len() as f64 * lead.step_s;
+                        front.probe.record_measured(
+                            front.lead,
+                            predicted_s,
+                            busy,
+                            front.lead_power_w * predicted_s,
+                            front.lead_power_w * busy,
+                        );
+                    } else {
+                        front.probe.record_busy(front.lead, busy, busy * front.lead_power_w);
+                    }
                 }
                 Ok(resp)
             }
@@ -223,6 +253,12 @@ impl Service {
     pub fn stats(&mut self) -> ServeStats {
         self.stats.wall_s = self.started.elapsed().as_secs_f64();
         self.stats.clone()
+    }
+
+    /// Serve-path calibration stats (`None` unless
+    /// `ServiceConfig::calibration` enabled the estimators).
+    pub fn calibration_stats(&self) -> Option<crate::calibration::CalibrationStats> {
+        self.front.as_ref().and_then(|f| f.probe.calibration_stats())
     }
 }
 

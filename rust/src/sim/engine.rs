@@ -11,6 +11,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
+use crate::calibration::{DriftPlan, FleetCalibrator};
 use crate::config::{ExecMode, OrchestratorFeatures};
 use crate::coordinator::allocation::ModelShape;
 use crate::coordinator::batcher::{Batch, Batcher};
@@ -28,6 +29,7 @@ use crate::devices::spec::{DevIdx, DeviceId, DeviceSpec};
 use crate::devices::thermal::ThermalState;
 use crate::metrics::energy::EnergyLedger;
 use crate::metrics::latency::LatencyRecorder;
+use crate::rng::Pcg;
 use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
 use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
@@ -44,6 +46,11 @@ pub struct SimOptions {
     /// Thermal guard policy; `features.safety == false` disables it.
     pub guard: ThermalGuard,
     pub failure_plan: FailurePlan,
+    /// Ground-truth coefficient drift injected into *executed* physics
+    /// (bandwidth derating, idle creep, contention noise). Planners
+    /// never see it directly — with `features.calibration` on, the
+    /// estimators recover it from residuals; off, plans go stale.
+    pub drift_plan: DriftPlan,
     /// Decode fan-out cap.
     pub max_decode_devices: usize,
     /// Pin ALL phases to one device (homogeneous baselines measured on
@@ -70,6 +77,7 @@ impl Default for SimOptions {
             features: OrchestratorFeatures::full(),
             guard: ThermalGuard::default(),
             failure_plan: FailurePlan::none(),
+            drift_plan: DriftPlan::none(),
             max_decode_devices: 4,
             pin_device: None,
             latency_sla_s: None,
@@ -103,17 +111,44 @@ pub struct CascadeTrail {
     pub exhausted_stops: u64,
 }
 
+/// Aggregated calibration trail over a run (present on [`SimReport`]
+/// only when `OrchestratorFeatures::calibration` is enabled).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct CalibrationTrail {
+    /// Final monotone calibration version (Σ per-device overlay
+    /// folds, one per Page-Hinkley drift fire; 0 = the planners ran
+    /// on pure nameplate coefficients all run).
+    pub calibration_version: u64,
+    /// Predicted-vs-measured samples fed to the estimators.
+    pub samples: u64,
+    /// Times the calibrated planning fleet (and hence the planner's
+    /// `EnergyTable`) was rebuilt from the overlay — once per drift
+    /// version observed at a planning tick.
+    pub energy_table_rebuilds: u64,
+    /// Lifetime mean |relative energy prediction error| (%) — carries
+    /// the pre-convergence spike after every injected drift.
+    pub mean_abs_energy_err_pct: f64,
+    /// Exponentially decayed recent |relative energy error| (%) — the
+    /// post-convergence figure the experiment rung reports.
+    pub recent_abs_energy_err_pct: f64,
+}
+
 /// One event-driven replanning episode (plan-cache feature): the layer
 /// planner ran because the safety-state version moved — a failure, a
 /// recovery, a graduation, or a thermal shedding-band crossing, with
-/// coincident transitions batched into the single episode.
+/// coincident transitions batched into the single episode — or because
+/// a calibration drift fold re-coefficiented the planning substrate.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplanEvent {
     /// Virtual time of the transition batch that triggered the replan.
     pub at_s: f64,
-    /// Safety-state version the plan was computed for (strictly
-    /// increasing across the trail — one episode per version).
+    /// Safety-state version the plan was computed for (non-decreasing
+    /// across the trail; strictly increasing when no calibration bump
+    /// intervenes — one episode per (safety, calibration) pair).
     pub version: u64,
+    /// Calibration version the plan's `EnergyTable` was built at
+    /// (0 until the first drift fold; monotone across the trail).
+    pub calibration_version: u64,
     /// "pgsam" / "greedy", or "none" when planning failed.
     pub planner: &'static str,
     /// Eq. 12 decode-step energy of the new plan (0 on failure).
@@ -185,6 +220,8 @@ pub struct SimReport {
     pub plan_cache_hits: u64,
     /// Per-replan energy trail, in trigger order.
     pub replan_trail: Vec<ReplanEvent>,
+    /// Calibration trail (`None` when the feature is off).
+    pub calibration: Option<CalibrationTrail>,
 }
 
 struct SimDevice {
@@ -220,15 +257,31 @@ pub struct SimEngine {
     cascade: CascadeTrail,
     /// Warm-start plan cache (plan_cache feature).
     plan_cache: PlanCache,
-    /// Safety-state version the current layer plan was computed for;
-    /// `None` before the first event-driven plan.
-    last_planned_version: Option<u64>,
+    /// (safety, calibration) version pair the current layer plan was
+    /// computed for; `None` before the first event-driven plan.
+    last_planned_version: Option<(u64, u64)>,
     replans: u64,
     plan_cache_hits: u64,
     replan_trail: Vec<ReplanEvent>,
-    /// Calibration factor: real measured seconds per simulated second
+    /// Online coefficient estimators (calibration feature): fed by
+    /// every executed task's predicted-vs-measured residuals.
+    calibrator: FleetCalibrator,
+    /// The planning view of the fleet: nameplate specs with the
+    /// calibration overlays applied. Rebuilt (== the planner's
+    /// `EnergyTable` substrate rebuilt) once per observed drift
+    /// version; identical to `fleet` while no drift has folded.
+    calibrated_fleet: Fleet,
+    /// Calibration version `calibrated_fleet` was built at.
+    calibrated_version: u64,
+    /// Rebuilds of the calibrated planning substrate (drift events
+    /// observed at a planning tick).
+    table_rebuilds: u64,
+    /// Contention-noise stream (drawn ONLY while a noise scenario is
+    /// active, so drift-free runs consume no randomness).
+    noise_rng: Pcg,
+    /// PJRT time scale: real measured seconds per simulated second
     /// (from PJRT execution of the artifact; 1.0 = pure analytic).
-    pub calibration: f64,
+    pub pjrt_time_scale: f64,
 }
 
 impl SimEngine {
@@ -252,6 +305,9 @@ impl SimEngine {
                 )
             })
             .collect();
+        let calibrator = FleetCalibrator::new(fleet.len());
+        let calibrated_fleet = fleet.clone();
+        let noise_rng = Pcg::new(options.seed, 0xCA11_B7A7);
         SimEngine {
             fleet,
             shape,
@@ -272,7 +328,12 @@ impl SimEngine {
             replans: 0,
             plan_cache_hits: 0,
             replan_trail: Vec::new(),
-            calibration: 1.0,
+            calibrator,
+            calibrated_fleet,
+            calibrated_version: 0,
+            table_rebuilds: 0,
+            noise_rng,
+            pjrt_time_scale: 1.0,
         }
     }
 
@@ -335,13 +396,65 @@ impl SimEngine {
         (PlannerKind::Greedy, result)
     }
 
+    /// The coefficient view every planner and scheduling estimate
+    /// consumes: the calibrated overlay fleet when the calibration
+    /// feature is on (bit-identical to the nameplate fleet until a
+    /// drift folds), the nameplate fleet otherwise.
+    fn planning_fleet(&self) -> &Fleet {
+        if self.options.features.calibration {
+            &self.calibrated_fleet
+        } else {
+            &self.fleet
+        }
+    }
+
+    /// The believed (planning-view) spec of one device.
+    fn planning_spec(&self, id: &DeviceId) -> DeviceSpec {
+        self.planning_fleet().get(id).expect("plan device is a fleet member").clone()
+    }
+
+    /// The ground-truth spec of one device at the current clock: the
+    /// nameplate with the injected drift applied. A bit-exact clone
+    /// while no drift scenario is active.
+    fn measured_spec(&self, id: &DeviceId) -> DeviceSpec {
+        self.options.drift_plan.effective_spec(&self.devices[id].spec, self.clock_s)
+    }
+
+    /// Contention-noise multiplier on one measured execution time.
+    /// Draws from the noise stream ONLY while a noise scenario is
+    /// active on this device, so drift-free runs are bit-identical.
+    fn noise_factor(&mut self, id: &DeviceId) -> f64 {
+        let rel = self.options.drift_plan.noise_rel(id, self.clock_s);
+        if rel <= 0.0 {
+            return 1.0;
+        }
+        1.0 + rel * (2.0 * self.noise_rng.next_f64() - 1.0)
+    }
+
+    /// Fold any new calibration version into the planning substrate:
+    /// rebuilding the calibrated fleet is what rebuilds the planner's
+    /// `EnergyTable` (the orchestrator memoizes per fleet+shape), so
+    /// this is the drift→replan edge of the closed loop.
+    fn refresh_calibration(&mut self) {
+        if !self.options.features.calibration {
+            return;
+        }
+        let v = self.calibrator.version();
+        if v != self.calibrated_version {
+            self.calibrated_fleet = self.calibrator.calibrated_fleet(&self.fleet);
+            self.calibrated_version = v;
+            self.table_rebuilds += 1;
+        }
+    }
+
     /// The planning view of the fleet for the CURRENT safety state:
-    /// unschedulable (failed) devices excluded. The single place the
-    /// exclusion rule lives — both the legacy per-report path and the
-    /// event-driven plan-cache path plan through it, so the reported
-    /// planner trail cannot diverge between the two feature settings.
+    /// unschedulable (failed) devices excluded, calibrated coefficients
+    /// applied. The single place the exclusion rule lives — both the
+    /// legacy per-report path and the event-driven plan-cache path plan
+    /// through it, so the reported planner trail cannot diverge between
+    /// the two feature settings.
     fn planning_orchestrator(&self) -> Orchestrator<'_> {
-        let mut orch = Orchestrator::new(&self.fleet);
+        let mut orch = Orchestrator::new(self.planning_fleet());
         for d in self.fleet.devices() {
             if !self.schedulable(&d.id) {
                 orch.exclude(&d.id);
@@ -361,10 +474,14 @@ impl SimEngine {
     }
 
     /// Event-driven re-planning (plan_cache feature): re-plan IFF the
-    /// safety state changed since the last plan — a failure, recovery,
-    /// graduation, or shedding-band crossing. Coincident transitions
-    /// batch into one episode.
+    /// safety state OR the calibration version changed since the last
+    /// plan — a failure, recovery, graduation, shedding-band crossing,
+    /// or a drift fold. Coincident transitions batch into one episode.
     fn replan_if_stale(&mut self) {
+        // Fold any drift observed since the last tick into the
+        // planning substrate first — with `plan_cache` off the legacy
+        // per-report path reads the same refreshed fleet.
+        self.refresh_calibration();
         let features = &self.options.features;
         if !features.plan_cache {
             return;
@@ -373,22 +490,26 @@ impl SimEngine {
             return; // no layer planner selected: nothing to (re)plan
         }
         let version = self.safety_version();
-        if self.last_planned_version == Some(version) {
+        let cal_version = self.calibrated_version;
+        if self.last_planned_version == Some((version, cal_version)) {
             return;
         }
-        let event = self.plan_layers(version);
+        let event = self.plan_layers(version, cal_version);
         self.replans += 1;
         if event.cache_hit {
             self.plan_cache_hits += 1;
         }
-        self.last_planned_version = Some(version);
+        self.last_planned_version = Some((version, cal_version));
         self.replan_trail.push(event);
     }
 
     /// One replanning episode: cache lookup by (health signature,
-    /// shape, planner), warm-restarted anneal on a miss with a sibling
-    /// archive, cold anneal otherwise.
-    fn plan_layers(&mut self, version: u64) -> ReplanEvent {
+    /// calibration version, shape, planner), warm-restarted anneal on a
+    /// miss with a sibling archive, cold anneal otherwise. A
+    /// calibration bump always misses (fresh key axis) and
+    /// warm-restarts from the pre-drift archive — never serves a
+    /// stale-coefficient plan.
+    fn plan_layers(&mut self, version: u64, cal_version: u64) -> ReplanEvent {
         let features = &self.options.features;
         let usable: Vec<bool> =
             self.fleet.devices().iter().map(|d| self.schedulable(&d.id)).collect();
@@ -396,6 +517,7 @@ impl SimEngine {
             if features.pgsam_planner { PlannerKind::Pgsam } else { PlannerKind::Greedy };
         let key = PlanKey {
             usable,
+            calibration: cal_version,
             shape: ShapeKey::of(&self.shape),
             planner: planner_kind,
             seed: self.options.seed,
@@ -405,6 +527,7 @@ impl SimEngine {
             return ReplanEvent {
                 at_s,
                 version,
+                calibration_version: cal_version,
                 planner: planner_kind.as_str(),
                 plan_energy_j: cached.energy_j,
                 plan_error: None,
@@ -426,6 +549,7 @@ impl SimEngine {
                 ReplanEvent {
                     at_s: self.clock_s,
                     version,
+                    calibration_version: cal_version,
                     planner: planner_kind.as_str(),
                     plan_energy_j: energy_j,
                     plan_error: None,
@@ -439,6 +563,7 @@ impl SimEngine {
             Err(e) => ReplanEvent {
                 at_s: self.clock_s,
                 version,
+                calibration_version: cal_version,
                 planner: "none",
                 plan_energy_j: 0.0,
                 plan_error: Some(e.to_string()),
@@ -521,11 +646,13 @@ impl SimEngine {
         }
     }
 
-    /// Build the phase plan for the current safety state.
+    /// Build the phase plan for the current safety state, against the
+    /// planning-view (calibrated) coefficients — after a drift fold the
+    /// prefill/decode routing re-ranks on the measured physics.
     fn plan(&self, query: &Query) -> Option<PhasePlan> {
         // Restrict the fleet to schedulable devices.
         let usable: Vec<DeviceSpec> = self
-            .fleet
+            .planning_fleet()
             .devices()
             .iter()
             .filter(|d| self.schedulable(&d.id))
@@ -584,11 +711,16 @@ impl SimEngine {
         };
 
         // ---- Sample budget ----
+        // All scheduling ESTIMATES (budgeter, cascade pricing, batcher
+        // weights) come from the planning-view specs — the calibrated
+        // belief; execution below runs on the ground-truth (drifted)
+        // specs, and the gap between the two is exactly what the
+        // calibrator observes.
         let p_task = prefill_task(&self.shape, query.prompt_tokens);
         let d_task = decode_task(&self.shape);
-        let prefill_spec = self.devices[&plan.prefill].spec.clone();
+        let prefill_spec = self.planning_spec(&plan.prefill);
         let decode_specs: Vec<DeviceSpec> =
-            plan.decode.iter().map(|d| self.devices[d].spec.clone()).collect();
+            plan.decode.iter().map(|d| self.planning_spec(d)).collect();
 
         let per_token_s: f64 = d_task.seconds_on(&decode_specs[0], 1.0);
         let per_sample_latency =
@@ -675,10 +807,37 @@ impl SimEngine {
         }
 
         // ---- Prefill (shared across samples via prefix batching) ----
+        // Executed on the ground-truth spec (drift injected); the
+        // planning-view prediction under the SAME throttle feeds the
+        // calibrator, so the residual ratio isolates coefficient drift.
         let prefill_throttle = self.throttle_factor(&plan.prefill);
-        let prefill_s = p_task.seconds_on(&prefill_spec, prefill_throttle) * self.calibration;
-        let prefill_power = PowerModel::active_power_for(&prefill_spec, &p_task);
+        let prefill_exec = self.measured_spec(&plan.prefill);
+        let prefill_noise = self.noise_factor(&plan.prefill);
+        let prefill_s = p_task.seconds_on(&prefill_exec, prefill_throttle)
+            * prefill_noise
+            * self.pjrt_time_scale;
+        let prefill_power = PowerModel::active_power_for(&prefill_exec, &p_task);
         let prefill_j = prefill_power * prefill_s;
+        if self.options.features.calibration {
+            // Residuals are priced against the CURRENTLY APPLIED
+            // overlay (the observe_task contract), not the specs
+            // captured at planning time — a fold fired earlier in this
+            // same query must not be counted twice.
+            let dev = self.fleet.idx_of(&plan.prefill).expect("plan device is interned");
+            let pred_spec =
+                self.calibrator.overlay(dev).apply(&self.devices[&plan.prefill].spec);
+            let pred_s =
+                p_task.seconds_on(&pred_spec, prefill_throttle) * self.pjrt_time_scale;
+            let pred_j = PowerModel::active_power_for(&pred_spec, &p_task) * pred_s;
+            self.calibrator.observe_task(
+                dev,
+                p_task.memory_bound_on(&pred_spec),
+                pred_s,
+                prefill_s,
+                pred_j,
+                prefill_j,
+            );
+        }
         {
             let id = plan.prefill.clone();
             self.ledger.record_task(&id, Phase::Prefill, prefill_j, prefill_s);
@@ -691,14 +850,17 @@ impl SimEngine {
         // ---- Decode fan-out ----
         let batcher = Batcher::default();
         // Speed-weighted fan-out: assign samples proportional to each
-        // device's decode service rate so the makespan is minimized.
+        // device's BELIEVED decode service rate (planning-view specs) so
+        // the makespan the scheduler optimizes is the one it can
+        // actually predict — a stale belief misallocates, which is the
+        // cost the calibrated path recovers.
         let rates: Vec<f64> = plan
             .decode
             .iter()
-            .map(|d| {
-                let spec = self.devices[d].spec.clone();
+            .zip(&decode_specs)
+            .map(|(d, spec)| {
                 let throttle = self.throttle_factor(d);
-                1.0 / d_task.seconds_on(&spec, throttle).max(1e-12)
+                1.0 / d_task.seconds_on(spec, throttle).max(1e-12)
             })
             .collect();
         let batches = batcher.assign_weighted(samples, &plan.decode, &rates);
@@ -706,13 +868,34 @@ impl SimEngine {
         let mut device_step_s: BTreeMap<DeviceId, f64> = BTreeMap::new();
         let mut decode_tokens = 0u64;
         for batch in &batches {
-            let spec = self.devices[&batch.device].spec.clone();
+            let exec = self.measured_spec(&batch.device);
             let throttle = self.throttle_factor(&batch.device);
-            let step_s = d_task.seconds_on(&spec, throttle) * self.calibration;
+            let noise = self.noise_factor(&batch.device);
+            let step_s = d_task.seconds_on(&exec, throttle) * noise * self.pjrt_time_scale;
             let batch_tokens = batch.samples.len() as u64 * query.output_tokens as u64;
             let batch_s = step_s * batch_tokens as f64;
-            let power = PowerModel::active_power_for(&spec, &d_task);
+            let power = PowerModel::active_power_for(&exec, &d_task);
             let joules = power * batch_s;
+            if self.options.features.calibration && batch_tokens > 0 {
+                // Priced against the CURRENT overlay (not the
+                // planning-time decode_specs): a fold fired by the
+                // prefill residual on a shared device earlier in this
+                // query must not re-count as a second drift.
+                let dev = self.fleet.idx_of(&batch.device).expect("plan device is interned");
+                let pred_spec =
+                    self.calibrator.overlay(dev).apply(&self.devices[&batch.device].spec);
+                let pred_step = d_task.seconds_on(&pred_spec, throttle) * self.pjrt_time_scale;
+                let pred_s = pred_step * batch_tokens as f64;
+                let pred_j = PowerModel::active_power_for(&pred_spec, &d_task) * pred_s;
+                self.calibrator.observe_task(
+                    dev,
+                    d_task.memory_bound_on(&pred_spec),
+                    pred_s,
+                    batch_s,
+                    pred_j,
+                    joules,
+                );
+            }
             *device_decode_s.entry(batch.device.clone()).or_insert(0.0) += batch_s;
             device_step_s.insert(batch.device.clone(), step_s);
             self.ledger.record_task(&batch.device, Phase::Decode, joules, batch_s);
@@ -783,12 +966,23 @@ impl SimEngine {
         self.ledger.advance_wall(dt_s);
         let ids: Vec<DeviceId> = self.devices.keys().cloned().collect();
         for id in ids {
+            // Ground-truth idle draw: idle-power creep manifests here
+            // (the drift plan returns the nameplate bit-exactly while
+            // no scenario is active).
+            let idle_w_true = if self.options.drift_plan.distorts(&id, self.clock_s) {
+                self.options
+                    .drift_plan
+                    .effective_spec(&self.devices[&id].spec, self.clock_s)
+                    .idle_w
+            } else {
+                self.devices[&id].spec.idle_w
+            };
             let dev = self.devices.get_mut(&id).unwrap();
             // Mean power over the window: active energy / window + idle
             // draw for the remaining fraction.
             let active_j = dev.window_energy_j;
             let idle_fraction_s = (dt_s - dev.window_busy_s).max(0.0);
-            let idle_j = dev.spec.idle_w * idle_fraction_s;
+            let idle_j = idle_w_true * idle_fraction_s;
             let mean_power = ((active_j + idle_j) / dt_s).min(dev.spec.tdp_w);
             dev.thermal.step(&dev.spec, mean_power, dt_s);
             dev.window_energy_j = 0.0;
@@ -798,6 +992,18 @@ impl SimEngine {
             if self.options.features.safety {
                 let decision = self.options.guard.evaluate(&dev.spec, dev.thermal.temp_c());
                 dev.shed.observe(decision.shed_level());
+            }
+            // Idle residual: predicted idle from the CURRENTLY APPLIED
+            // overlay (not the possibly one-fold-stale planning fleet)
+            // vs ground truth — the idle-power-creep channel. Exactly
+            // zero while no drift is active.
+            if self.options.features.calibration && idle_fraction_s > 0.0 {
+                if let Some(idx) = self.fleet.idx_of(&id) {
+                    let pred_j = dev.spec.idle_w
+                        * self.calibrator.overlay(idx).idle_scale
+                        * idle_fraction_s;
+                    self.calibrator.observe_idle(idx, pred_j, idle_j);
+                }
             }
             // Idle draw of the non-busy fraction (active joules already
             // include the busy-period idle share via the power model).
@@ -896,6 +1102,18 @@ impl SimEngine {
             replans: self.replans,
             plan_cache_hits: self.plan_cache_hits,
             replan_trail: self.replan_trail.clone(),
+            calibration: if self.options.features.calibration {
+                let stats = self.calibrator.stats();
+                Some(CalibrationTrail {
+                    calibration_version: stats.version,
+                    samples: stats.samples,
+                    energy_table_rebuilds: self.table_rebuilds,
+                    mean_abs_energy_err_pct: stats.mean_abs_err_pct,
+                    recent_abs_energy_err_pct: stats.recent_abs_err_pct,
+                })
+            } else {
+                None
+            },
         }
     }
 }
@@ -938,6 +1156,7 @@ fn deadline_counted(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::calibration::DriftScenario;
     use crate::devices::failure::FailureScenario;
     use crate::devices::fleet::FleetPreset;
     use crate::runtime::manifest::VariantMeta;
@@ -1229,6 +1448,70 @@ mod tests {
         let ro = ok.run(&queries(5), 3).unwrap();
         assert_eq!(ro.planner, "pgsam");
         assert!(ro.plan_error.is_none());
+    }
+
+    #[test]
+    fn zero_drift_calibration_is_inert_and_bit_identical() {
+        // Feature on, no injected drift: the overlay stays identity,
+        // the version never bumps, and every reported number is
+        // bit-identical to the uncalibrated path.
+        let qs = queries(40);
+        let mut on = engine(FleetPreset::EdgeBox, SimOptions::default());
+        let r_on = on.run(&qs, 10).unwrap();
+        let mut off = engine(
+            FleetPreset::EdgeBox,
+            SimOptions {
+                features: OrchestratorFeatures {
+                    calibration: false,
+                    ..OrchestratorFeatures::full()
+                },
+                ..Default::default()
+            },
+        );
+        let r_off = off.run(&qs, 10).unwrap();
+        assert_eq!(r_on.total_energy_j.to_bits(), r_off.total_energy_j.to_bits());
+        assert_eq!(r_on.coverage.to_bits(), r_off.coverage.to_bits());
+        assert_eq!(r_on.plan_energy_j.to_bits(), r_off.plan_energy_j.to_bits());
+        assert_eq!(r_on.replans, r_off.replans);
+        let trail = r_on.calibration.as_ref().expect("trail present when the feature is on");
+        assert_eq!(trail.calibration_version, 0);
+        assert_eq!(trail.energy_table_rebuilds, 0);
+        assert!(trail.samples > 0, "estimators observe every executed task");
+        assert_eq!(trail.mean_abs_energy_err_pct, 0.0, "zero drift = zero residual, exactly");
+        assert!(r_off.calibration.is_none(), "no trail when the feature is off");
+    }
+
+    #[test]
+    fn injected_derate_fires_drift_and_replans_on_the_new_key() {
+        // An 8x cpu0 bandwidth derate at t=0.2: the detector must
+        // fire, the planning substrate must rebuild, and the replan
+        // trail must carry the calibration bump (the plan-cache key
+        // moved along the calibration axis).
+        let drift = DriftPlan::new(vec![DriftScenario::bandwidth_derate(
+            "cpu0".into(),
+            0.2,
+            0.125,
+        )]);
+        let qs = queries(80);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { drift_plan: drift, ..Default::default() },
+        );
+        let r = e.run(&qs, 10).unwrap();
+        let trail = r.calibration.as_ref().expect("calibration trail");
+        assert!(trail.calibration_version >= 1, "the derate must fire the detector");
+        assert!(trail.energy_table_rebuilds >= 1, "each observed fold rebuilds the table");
+        assert!(
+            r.replan_trail.iter().any(|ev| ev.calibration_version > 0),
+            "the calibration bump must reach the replan trail"
+        );
+        // Calibration versions are monotone along the trail.
+        for pair in r.replan_trail.windows(2) {
+            assert!(pair[0].calibration_version <= pair[1].calibration_version);
+        }
+        // Post-convergence the model tracks the measured physics far
+        // better than the lifetime mean (which carries the drift spike).
+        assert!(trail.recent_abs_energy_err_pct < trail.mean_abs_energy_err_pct);
     }
 
     #[test]

@@ -9,4 +9,4 @@
 
 pub mod engine;
 
-pub use engine::{CascadeTrail, ReplanEvent, SimEngine, SimOptions, SimReport};
+pub use engine::{CalibrationTrail, CascadeTrail, ReplanEvent, SimEngine, SimOptions, SimReport};

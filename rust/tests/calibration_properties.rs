@@ -1,0 +1,193 @@
+//! Property tests over the PR-5 online-calibration subsystem: the
+//! zero-drift no-op guarantee (bit-identical to the uncalibrated path
+//! on every fleet preset), convergence of the RLS estimates to
+//! injected ground truth, drift-triggered replan invalidation with the
+//! closed loop beating stale-coefficient plans, in-band contention
+//! noise never firing the detector, and bit-determinism under a fixed
+//! seed. Everything runs on the simulator's logical clock — no
+//! artifacts, no wall time.
+
+use qeil::calibration::{DriftPlan, DriftScenario, FleetCalibrator};
+use qeil::config::OrchestratorFeatures;
+use qeil::coordinator::allocation::ModelShape;
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::devices::spec::DevIdx;
+use qeil::experiments::calibration_eval::{victim_device, DERATE_AT_S, DERATE_FACTOR};
+use qeil::experiments::runner::default_meta;
+use qeil::sim::engine::{SimEngine, SimOptions, SimReport};
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::{Query, WorkloadGenerator};
+
+fn queries(n: usize) -> Vec<Query> {
+    WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 42).queries(n)
+}
+
+fn run(preset: FleetPreset, options: SimOptions, n: usize, samples: u32) -> SimReport {
+    let shape = ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2));
+    let mut engine = SimEngine::new(Fleet::preset(preset), shape, options);
+    engine.run(&queries(n), samples).unwrap()
+}
+
+fn with_calibration(on: bool, drift: DriftPlan) -> SimOptions {
+    SimOptions {
+        features: OrchestratorFeatures { calibration: on, ..OrchestratorFeatures::full() },
+        drift_plan: drift,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn zero_drift_is_bit_identical_on_every_preset() {
+    // Satellite (a): with no injected drift the calibrated path must
+    // never bump the version and must be bit-identical to the
+    // uncalibrated path — same energy, same coverage, same plans —
+    // on every fleet preset.
+    for preset in FleetPreset::all() {
+        let r_on = run(preset, with_calibration(true, DriftPlan::none()), 40, 8);
+        let r_off = run(preset, with_calibration(false, DriftPlan::none()), 40, 8);
+        let trail = r_on.calibration.as_ref().expect("trail present with the feature on");
+        assert_eq!(trail.calibration_version, 0, "{preset:?}: version must never bump");
+        assert_eq!(trail.energy_table_rebuilds, 0);
+        assert_eq!(
+            r_on.total_energy_j.to_bits(),
+            r_off.total_energy_j.to_bits(),
+            "{preset:?}: executed energy must be bit-identical"
+        );
+        assert_eq!(r_on.coverage.to_bits(), r_off.coverage.to_bits(), "{preset:?}");
+        assert_eq!(r_on.plan_energy_j.to_bits(), r_off.plan_energy_j.to_bits(), "{preset:?}");
+        assert_eq!(r_on.replans, r_off.replans, "{preset:?}");
+        assert_eq!(
+            r_on.replan_trail.len(),
+            r_off.replan_trail.len(),
+            "{preset:?}: same replan episodes"
+        );
+        for (a, b) in r_on.replan_trail.iter().zip(&r_off.replan_trail) {
+            assert_eq!(a.plan, b.plan, "{preset:?}: plans must be bit-identical");
+            assert_eq!(a.plan_energy_j.to_bits(), b.plan_energy_j.to_bits());
+            assert_eq!(a.calibration_version, 0);
+        }
+    }
+}
+
+#[test]
+fn rls_estimate_converges_to_the_injected_derate() {
+    // Satellite (b), estimator half: under a ground-truth bandwidth
+    // derate the folded overlay must converge to the injected factor.
+    // Emulates the engine's loop — predictions always come from the
+    // currently applied overlay.
+    let mut cal = FleetCalibrator::new(1);
+    let nameplate_s = 2.08e-3;
+    let true_s = nameplate_s / DERATE_FACTOR;
+    let power_w = 7.0;
+    for _ in 0..80 {
+        let scale = cal.overlay(DevIdx(0)).bandwidth_scale;
+        let pred_s = nameplate_s / scale;
+        cal.observe_task(DevIdx(0), true, pred_s, true_s, pred_s * power_w, true_s * power_w);
+    }
+    let est = cal.overlay(DevIdx(0)).bandwidth_scale;
+    assert!(
+        (est - DERATE_FACTOR).abs() < DERATE_FACTOR * 0.05,
+        "bandwidth_scale {est} must land within 5% of {DERATE_FACTOR}"
+    );
+    assert!(cal.version() >= 1);
+}
+
+#[test]
+fn derate_replans_on_the_calibration_axis_and_beats_the_stale_plan() {
+    // Satellite (b), closed-loop half + the PR acceptance scenario:
+    // derate the second decode lane of the edge box. The calibrated
+    // run must fold the drift, bump calibration_version in the replan
+    // trail (a cache miss on the new key axis — never a stale-plan
+    // hit), and finish at strictly lower executed energy than the
+    // stale-coefficient run.
+    let victim = victim_device(FleetPreset::EdgeBox);
+    let drift = || {
+        DriftPlan::new(vec![DriftScenario::bandwidth_derate(
+            victim.clone(),
+            DERATE_AT_S,
+            DERATE_FACTOR,
+        )])
+    };
+    let calibrated = run(FleetPreset::EdgeBox, with_calibration(true, drift()), 120, 10);
+    let stale = run(FleetPreset::EdgeBox, with_calibration(false, drift()), 120, 10);
+
+    let trail = calibrated.calibration.as_ref().expect("calibration trail");
+    assert!(trail.calibration_version >= 1, "the derate must fire the detector");
+    assert!(trail.energy_table_rebuilds >= 1);
+
+    // The bump reaches the replan trail as a MISS on the new key axis.
+    let bump = calibrated
+        .replan_trail
+        .iter()
+        .find(|ev| ev.calibration_version > 0)
+        .expect("a post-drift replan episode must exist");
+    assert!(!bump.cache_hit, "the first post-drift replan can never be a stale-plan hit");
+    // Calibration versions are monotone along the trail, and the
+    // pre-drift episodes all carry version 0.
+    for pair in calibrated.replan_trail.windows(2) {
+        assert!(pair[0].calibration_version <= pair[1].calibration_version);
+    }
+    assert_eq!(calibrated.replan_trail[0].calibration_version, 0);
+
+    // Closed loop beats stale coefficients on executed energy.
+    assert!(
+        calibrated.total_energy_j < stale.total_energy_j,
+        "calibrated {} J must strictly beat stale {} J",
+        calibrated.total_energy_j,
+        stale.total_energy_j
+    );
+    // Convergence: the recent error sits well below the lifetime mean
+    // (which carries the drift spike).
+    assert!(trail.recent_abs_energy_err_pct < trail.mean_abs_energy_err_pct);
+}
+
+#[test]
+fn in_band_contention_noise_never_bumps_the_version() {
+    // Zero-mean jitter inside the Page-Hinkley tolerance must never
+    // trigger a recalibration (or every noisy query would thrash the
+    // plan cache).
+    let victim = victim_device(FleetPreset::EdgeBox);
+    let drift =
+        DriftPlan::new(vec![DriftScenario::contention_noise(victim, 0.0, 0.04)]);
+    let r = run(FleetPreset::EdgeBox, with_calibration(true, drift), 60, 8);
+    let trail = r.calibration.as_ref().unwrap();
+    assert_eq!(trail.calibration_version, 0, "in-band noise must not fold");
+    assert_eq!(trail.energy_table_rebuilds, 0);
+    assert!(trail.samples > 0);
+    for ev in &r.replan_trail {
+        assert_eq!(ev.calibration_version, 0);
+    }
+}
+
+#[test]
+fn calibrated_runs_are_bit_deterministic_under_a_fixed_seed() {
+    // Satellite (c): the full drift + noise scenario, run twice with
+    // the same seed, must agree bit for bit — estimators, detector,
+    // noise stream, replan trail, energy.
+    let victim = victim_device(FleetPreset::EdgeBox);
+    let drift = || {
+        DriftPlan::new(vec![
+            DriftScenario::bandwidth_derate(victim.clone(), DERATE_AT_S, DERATE_FACTOR),
+            DriftScenario::contention_noise(victim.clone(), 0.0, 0.03),
+        ])
+    };
+    let a = run(FleetPreset::EdgeBox, with_calibration(true, drift()), 80, 8);
+    let b = run(FleetPreset::EdgeBox, with_calibration(true, drift()), 80, 8);
+    assert_eq!(a.total_energy_j.to_bits(), b.total_energy_j.to_bits());
+    assert_eq!(a.coverage.to_bits(), b.coverage.to_bits());
+    assert_eq!(a.replans, b.replans);
+    let (ta, tb) = (a.calibration.as_ref().unwrap(), b.calibration.as_ref().unwrap());
+    assert_eq!(ta.calibration_version, tb.calibration_version);
+    assert_eq!(ta.samples, tb.samples);
+    assert_eq!(
+        ta.mean_abs_energy_err_pct.to_bits(),
+        tb.mean_abs_energy_err_pct.to_bits(),
+        "estimator arithmetic must be bit-deterministic"
+    );
+    assert_eq!(a.replan_trail.len(), b.replan_trail.len());
+    for (ea, eb) in a.replan_trail.iter().zip(&b.replan_trail) {
+        assert_eq!(ea.plan, eb.plan);
+        assert_eq!(ea.plan_energy_j.to_bits(), eb.plan_energy_j.to_bits());
+        assert_eq!(ea.calibration_version, eb.calibration_version);
+    }
+}

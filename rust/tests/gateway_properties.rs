@@ -325,3 +325,71 @@ fn devidx_lanes_resolve_against_the_preset_fleet() {
         assert_eq!(d.dev, DevIdx(i as u16));
     }
 }
+
+#[test]
+fn failed_device_reroutes_lanes_and_recovery_routes_back() {
+    // The PR-5 satellite lock for the PR-4 ROADMAP knob: DeviceHealth
+    // feeds the probe, so a Failed device (not just a thermal band)
+    // invalidates the lane route. The edge box routes its decode lanes
+    // NPU-first; failing the NPU must reroute the lanes without it,
+    // and recovery must route it back — each via one version bump.
+    let fleet = qeil::devices::fleet::Fleet::preset(FleetPreset::EdgeBox);
+    let shape = qeil::coordinator::allocation::ModelShape::from_family(
+        qeil::workload::datasets::ModelFamily::Gpt2,
+        &qeil::experiments::runner::default_meta(qeil::workload::datasets::ModelFamily::Gpt2),
+    );
+    let mut probe = TelemetryProbe::new(&fleet, &shape);
+    let mut scheduler = WaveScheduler::new(&[1.0; 2]);
+    let npu = fleet.idx_of(&DeviceId::from("npu0")).unwrap();
+
+    let cold = probe.snapshot(0.0);
+    scheduler.ensure_routes(&fleet, &shape, &cold, 4, 0.0);
+    assert!(scheduler.lane_devs().contains(&npu), "healthy edge box routes the NPU");
+    assert_eq!(scheduler.reroutes, 0);
+
+    probe.mark_failed(npu, 1.0);
+    let failed = probe.snapshot(1.0);
+    assert!(failed.safety_version > cold.safety_version, "failure is a safety transition");
+    assert!(!failed.devices[npu.as_usize()].schedulable);
+    scheduler.ensure_routes(&fleet, &shape, &failed, 4, 1.0);
+    assert_eq!(scheduler.reroutes, 1, "failure must re-derive the lanes");
+    assert!(
+        !scheduler.lane_devs().contains(&npu),
+        "Failed device must leave the lane set: {:?}",
+        scheduler.lane_devs()
+    );
+    assert!(!scheduler.lane_devs().is_empty(), "survivors keep serving");
+
+    probe.mark_recovering(npu, 2.0);
+    let recovered = probe.snapshot(2.0);
+    assert!(recovered.safety_version > failed.safety_version);
+    scheduler.ensure_routes(&fleet, &shape, &recovered, 4, 2.0);
+    assert_eq!(scheduler.reroutes, 2, "recovery must re-derive the lanes again");
+    assert!(
+        scheduler.lane_devs().contains(&npu),
+        "Recovering device is schedulable and rejoins the route"
+    );
+}
+
+#[test]
+fn gateway_run_with_failed_device_serves_around_it() {
+    // End-to-end: fail the NPU before an overload run on the edge box.
+    // The run must still complete work, and the failed device must
+    // accumulate zero busy seconds (nothing was ever dispatched to it).
+    let mut gateway = Gateway::new(GatewayConfig { seed: 9, ..Default::default() });
+    assert!(gateway.fail_device(&DeviceId::from("npu0")));
+    assert!(!gateway.fail_device(&DeviceId::from("nope")), "unknown ids are rejected");
+    let trace = gateway.overload_trace(120, 2.0, None);
+    let report = gateway.run_trace(&trace);
+    let completed: u64 = report.classes.iter().map(|c| c.completed).sum();
+    assert!(completed > 0, "the degraded fleet must keep serving");
+    let npu_busy = report
+        .lane_busy_s
+        .iter()
+        .find(|(id, _)| id == "npu0")
+        .map(|(_, s)| *s)
+        .unwrap();
+    assert_eq!(npu_busy, 0.0, "no work may land on the failed device");
+    let other_busy: f64 = report.lane_busy_s.iter().map(|(_, s)| *s).sum();
+    assert!(other_busy > 0.0);
+}

@@ -6,13 +6,14 @@
 # committed baseline at benches/BENCH_orchestrator.baseline.json, and
 # FAILS when any gated entry (`pgsam_assignment*`, `energy_table_build*`,
 # `pgsam_warm_restart*`, `plan_cache_lookup*`, `gateway_admission*`,
-# `gateway_dispatch_wave*` — the planner-substrate, plan-cache, and
-# serving-gateway hot paths ROADMAP.md tracks) regresses by more than
-# MAX_RATIO (default 10x) in mean time. Non-gated entries are reported
-# but never fail the run (they are too machine-sensitive for a hard
-# gate).
+# `gateway_dispatch_wave*`, `calibration_update*`,
+# `energy_table_rebuild*` — the planner-substrate, plan-cache,
+# serving-gateway, and calibration hot paths ROADMAP.md tracks)
+# regresses by more than MAX_RATIO (default 10x) in mean time.
+# Non-gated entries are reported but never fail the run (they are too
+# machine-sensitive for a hard gate).
 #
-# Additionally enforces two machine-robust intra-run contracts that
+# Additionally enforces three machine-robust intra-run contracts that
 # need no baseline:
 #   * warm-restart amortization: the pgsam_warm_restart mean must stay
 #     ≤ MAX_WARM_RATIO (default 0.5) of the cold pgsam_assignment mean;
@@ -20,7 +21,12 @@
 #     MAX_LOOKUP_US (default 50 µs) — a nanosecond-scale HashMap probe
 #     is too machine-sensitive for the 10x ratio gate, but degrading to
 #     anneal-scale means the hit path regressed to real planning work.
-# When a result file predates these entries (pre-PR3 artifact via
+#   * drift-rebuild cheapness: energy_table_rebuild (overlay apply +
+#     table build, the per-drift-event cost) must stay ≤
+#     MAX_REBUILD_RATIO (default 3) of the cold energy_table_build mean
+#     — a calibration drift event must remain cheap enough to re-plan
+#     on immediately, every time it fires.
+# When a result file predates these entries (pre-PR3/PR5 artifact via
 # --no-run), the intra-run checks warn and skip; REQUIRE_BASELINE=1
 # (CI mode) makes missing entries fail instead.
 #
@@ -30,6 +36,7 @@
 #   MAX_RATIO=5 scripts/check_bench.sh
 #   MAX_WARM_RATIO=0.6 scripts/check_bench.sh
 #   MAX_LOOKUP_US=100 scripts/check_bench.sh
+#   MAX_REBUILD_RATIO=4 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
 #
 # First run on a machine with no committed baseline: the current result
@@ -45,6 +52,7 @@ BASELINE=benches/BENCH_orchestrator.baseline.json
 MAX_RATIO="${MAX_RATIO:-10}"
 MAX_WARM_RATIO="${MAX_WARM_RATIO:-0.5}"
 MAX_LOOKUP_US="${MAX_LOOKUP_US:-50}"
+MAX_REBUILD_RATIO="${MAX_REBUILD_RATIO:-3}"
 
 if [[ "${1:-}" != "--no-run" ]]; then
     cargo bench --bench orchestrator
@@ -56,19 +64,23 @@ if [[ ! -f "$CURRENT" ]]; then
 fi
 
 # Intra-run gates (baseline-free, so they also arm on the bootstrap
-# run): warm-restart amortization + plan-cache hit-cost ceiling.
-python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "${REQUIRE_BASELINE:-0}" <<'PY'
+# run): warm-restart amortization + plan-cache hit-cost ceiling +
+# drift-rebuild cheapness.
+python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
 import json
 import sys
 
 cur_path, max_warm, max_lookup_us = sys.argv[1], float(sys.argv[2]), float(sys.argv[3])
-strict = sys.argv[4] == "1"
+max_rebuild = float(sys.argv[4])
+strict = sys.argv[5] == "1"
 with open(cur_path) as f:
     doc = json.load(f)
 means = {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
 warm = next((v for k, v in means.items() if k.startswith("pgsam_warm_restart")), None)
 cold = next((v for k, v in means.items() if k.startswith("pgsam_assignment")), None)
 lookup = next((v for k, v in means.items() if k.startswith("plan_cache_lookup")), None)
+build = next((v for k, v in means.items() if k.startswith("energy_table_build")), None)
+rebuild = next((v for k, v in means.items() if k.startswith("energy_table_rebuild")), None)
 failed = False
 if warm is None or cold is None:
     # Pre-PR3 artifact (e.g. --no-run against an old result file): the
@@ -95,6 +107,21 @@ else:
     if lookup > max_lookup_us * 1e3:
         print("lookup-ceiling gate FAILED: the cache hit path costs real planning work",
               file=sys.stderr)
+        failed = True
+if rebuild is None or build is None:
+    # Pre-PR5 artifact: the compare-existing workflow stays usable; CI
+    # mode insists on the calibration entries being present.
+    print("drift-rebuild gate: skipped (energy_table_rebuild / energy_table_build "
+          "entries missing from this result file)", file=sys.stderr)
+    failed = failed or strict
+else:
+    ratio = rebuild / max(build, 1.0)
+    status = "ok" if ratio <= max_rebuild else "REGRESSION"
+    print(f"drift-rebuild gate: {status} rebuild {rebuild / 1e3:.1f} us vs build "
+          f"{build / 1e3:.1f} us ({ratio:.2f}x, budget {max_rebuild:g}x)")
+    if ratio > max_rebuild:
+        print("drift-rebuild gate FAILED: a calibration drift event is no longer cheap "
+              "enough to re-plan on immediately", file=sys.stderr)
         failed = True
 sys.exit(1 if failed else 0)
 PY
@@ -126,6 +153,8 @@ GATED_PREFIXES = (
     "pgsam_warm_restart",
     "gateway_admission",
     "gateway_dispatch_wave",
+    "calibration_update",
+    "energy_table_rebuild",
 )
 
 
