@@ -25,10 +25,15 @@ use qeil::gateway::{
     AdmissionConfig, AdmissionController, GatewayRequest, SlaClass, SlaQueues, TelemetryProbe,
     WaveScheduler,
 };
+use qeil::json::Json;
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
-use qeil::workload::datasets::ModelFamily;
+use qeil::sim::engine::{SimEngine, SimOptions};
+use qeil::snapshot::{restore_engine, snapshot_engine};
+use qeil::workload::coverage::CoverageOracle;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::WorkloadGenerator;
 
 fn main() {
     let b = Bencher::default();
@@ -261,6 +266,49 @@ fn main() {
     let r = b.run("energy_table_rebuild(lfm2, edge-box, calibrated)", || {
         let calibrated = drifted.calibrated_fleet(&fleet);
         std::hint::black_box(EnergyTable::build(&calibrated, &shape));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Snapshot/replay substrate (PR 6). A warm mid-run engine — 24
+    // queries of real history in the ledger, plan cache, thermal and
+    // calibration state — is the realistic checkpoint subject. Gated:
+    // snapshot_save + snapshot_restore together must stay within a
+    // small multiple of a cold EnergyTable build (MAX_SNAPSHOT_RATIO in
+    // scripts/check_bench.sh) — a checkpoint cadence that rivals the
+    // planner's own costs would make operators turn it off.
+    let gpt2_shape = ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2));
+    let warm_queries =
+        WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 11).queries(25);
+    let mut warm_engine =
+        SimEngine::new(Fleet::preset(FleetPreset::EdgeBox), gpt2_shape, SimOptions::default());
+    let oracle = CoverageOracle::new(warm_engine.seed());
+    for q in &warm_queries[..24] {
+        warm_engine.step_query(q, 4, &oracle);
+    }
+
+    let r = b.run("snapshot_save(edge-box, 24-query warm engine)", || {
+        std::hint::black_box(snapshot_engine(&warm_engine).to_string());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    let snapshot_text = snapshot_engine(&warm_engine).to_string();
+    println!("    snapshot size: {} bytes", snapshot_text.len());
+    let r = b.run("snapshot_restore(edge-box, 24-query warm engine)", || {
+        let doc = Json::parse(&snapshot_text).unwrap();
+        std::hint::black_box(restore_engine(&doc).unwrap());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // One replayed event on a cloned warm engine — the per-event cost
+    // of catching a restored replica up through the log suffix (clone
+    // included: the drill harness replays on clones).
+    let replay_query = &warm_queries[24];
+    let r = b.run("replay_apply(one event, warm engine)", || {
+        let mut e = warm_engine.clone();
+        std::hint::black_box(e.step_query(replay_query, 4, &oracle));
     });
     println!("{}", r.report());
     results.push(r);

@@ -17,12 +17,12 @@
 pub struct PageHinkley {
     /// Per-sample residual tolerance (relative-error units): the noise
     /// band the detector ignores.
-    delta: f64,
+    pub(crate) delta: f64,
     /// Cumulative-excess firing threshold.
-    lambda: f64,
-    up: f64,
-    down: f64,
-    fires: u64,
+    pub(crate) lambda: f64,
+    pub(crate) up: f64,
+    pub(crate) down: f64,
+    pub(crate) fires: u64,
 }
 
 impl PageHinkley {

@@ -162,31 +162,31 @@ pub struct CalibrationStats {
 /// after ~`lambda / (s − delta)` samples OF THAT CHANNEL, regardless
 /// of traffic on the others.
 #[derive(Debug, Clone)]
-struct DeviceCalibration {
+pub(crate) struct DeviceCalibration {
     /// measured/predicted execution-time ratio, compute-bound tasks.
-    compute_time: RatioRls,
+    pub(crate) compute_time: RatioRls,
     /// measured/predicted execution-time ratio, memory-bound tasks.
-    memory_time: RatioRls,
+    pub(crate) memory_time: RatioRls,
     /// measured/predicted active-power ratio.
-    active_power: RatioRls,
+    pub(crate) active_power: RatioRls,
     /// measured/predicted idle-energy ratio.
-    idle_power: RatioRls,
-    detect_compute_time: PageHinkley,
-    detect_memory_time: PageHinkley,
-    detect_power: PageHinkley,
-    detect_idle: PageHinkley,
-    applied: CalibratedSpec,
-    version: u64,
-    samples: u64,
+    pub(crate) idle_power: RatioRls,
+    pub(crate) detect_compute_time: PageHinkley,
+    pub(crate) detect_memory_time: PageHinkley,
+    pub(crate) detect_power: PageHinkley,
+    pub(crate) detect_idle: PageHinkley,
+    pub(crate) applied: CalibratedSpec,
+    pub(crate) version: u64,
+    pub(crate) samples: u64,
     /// Lifetime |relative energy error| accumulator.
-    err_sum: f64,
-    err_n: u64,
+    pub(crate) err_sum: f64,
+    pub(crate) err_n: u64,
     /// EWMA of |relative energy error|.
-    recent_err: f64,
+    pub(crate) recent_err: f64,
 }
 
 impl DeviceCalibration {
-    fn new(cfg: &CalibrationConfig) -> DeviceCalibration {
+    pub(crate) fn new(cfg: &CalibrationConfig) -> DeviceCalibration {
         DeviceCalibration {
             compute_time: RatioRls::new(cfg.rls_forgetting),
             memory_time: RatioRls::new(cfg.rls_forgetting),
@@ -245,8 +245,8 @@ impl DeviceCalibration {
 /// device index, summed into one monotone `calibration_version`.
 #[derive(Debug, Clone)]
 pub struct FleetCalibrator {
-    config: CalibrationConfig,
-    devices: Vec<DeviceCalibration>,
+    pub(crate) config: CalibrationConfig,
+    pub(crate) devices: Vec<DeviceCalibration>,
 }
 
 impl FleetCalibrator {

@@ -16,12 +16,12 @@
 pub struct RatioRls {
     /// Current ratio estimate θ (1.0 = the applied coefficient is
     /// exact).
-    theta: f64,
+    pub(crate) theta: f64,
     /// Scalar covariance P of the recursion.
-    p: f64,
+    pub(crate) p: f64,
     /// Forgetting factor λ in (0, 1]: steady-state gain is `1 − λ`.
-    lambda: f64,
-    samples: u64,
+    pub(crate) lambda: f64,
+    pub(crate) samples: u64,
 }
 
 impl RatioRls {

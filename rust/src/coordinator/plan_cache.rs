@@ -117,12 +117,12 @@ pub struct PlanCacheStats {
 /// FIFO-bounded map from [`PlanKey`] to [`CachedPlan`].
 #[derive(Debug, Clone)]
 pub struct PlanCache {
-    entries: HashMap<PlanKey, CachedPlan>,
+    pub(crate) entries: HashMap<PlanKey, CachedPlan>,
     /// Insertion order: FIFO eviction + deterministic warm-hint pick
     /// (most recently inserted sibling wins).
-    order: Vec<PlanKey>,
-    cap: usize,
-    stats: PlanCacheStats,
+    pub(crate) order: Vec<PlanKey>,
+    pub(crate) cap: usize,
+    pub(crate) stats: PlanCacheStats,
 }
 
 impl Default for PlanCache {

@@ -13,13 +13,13 @@ use super::spec::DeviceSpec;
 #[derive(Debug, Clone)]
 pub struct ThermalState {
     /// Current junction temperature (°C).
-    temp_c: f64,
+    pub(crate) temp_c: f64,
     /// Count of hardware-level throttling events (entered T >= T_max).
-    throttle_events: u64,
+    pub(crate) throttle_events: u64,
     /// Whether the device is currently hardware-throttled.
-    throttled: bool,
+    pub(crate) throttled: bool,
     /// Peak temperature seen (°C).
-    peak_c: f64,
+    pub(crate) peak_c: f64,
 }
 
 impl ThermalState {

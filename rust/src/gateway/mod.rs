@@ -234,6 +234,66 @@ impl Gateway {
         self.clock_s
     }
 
+    /// Canonical capture of the gateway's externally-observable state:
+    /// logical clock (bit-exact), safety version (shed + health), queue
+    /// backlog and earliest deadline, per-class accounting, dispatch
+    /// counters, and the energy ledger. Two gateway replicas that
+    /// processed one trace identically produce byte-identical captures
+    /// — the cross-replica desync contract, extended to the serving
+    /// front.
+    pub fn state_capture(&self) -> Json {
+        let backlog: Vec<Json> = SlaClass::all()
+            .iter()
+            .map(|c| Json::Num(self.queues.backlog(*c) as f64))
+            .collect();
+        Json::obj(vec![
+            ("clock_s", crate::snapshot::serialize::f64_bits(self.clock_s)),
+            ("safety_version", Json::Num(self.probe.safety_version() as f64)),
+            ("queued_total", Json::Num(self.queues.total() as f64)),
+            ("queued_per_class", Json::arr(backlog)),
+            (
+                "earliest_deadline_s",
+                match self.queues.earliest_deadline_s() {
+                    Some(d) => crate::snapshot::serialize::f64_bits(d),
+                    None => Json::Null,
+                },
+            ),
+            (
+                "classes",
+                Json::obj(
+                    SlaClass::all()
+                        .iter()
+                        .map(|c| (c.as_str(), self.classes[c.index()].to_json()))
+                        .collect(),
+                ),
+            ),
+            ("max_shed_level", Json::Num(self.max_shed_level as f64)),
+            ("waves", Json::Num(self.scheduler.waves as f64)),
+            ("reroutes", Json::Num(self.scheduler.reroutes as f64)),
+            (
+                "tenant_dispatched",
+                Json::arr(
+                    self.scheduler
+                        .tenant_dispatched()
+                        .iter()
+                        .map(|&n| Json::Num(n as f64))
+                        .collect(),
+                ),
+            ),
+            ("energy_j", crate::snapshot::serialize::f64_bits(self.probe.total_energy_j())),
+            (
+                "idle_energy_j",
+                crate::snapshot::serialize::f64_bits(self.probe.idle_energy_j()),
+            ),
+        ])
+    }
+
+    /// FNV-1a 64 digest of [`Gateway::state_capture`]'s canonical
+    /// serialization (exported on `serve --gateway --stats-json`).
+    pub fn state_digest(&self) -> u64 {
+        crate::snapshot::fnv1a64(self.state_capture().to_string().as_bytes())
+    }
+
     /// Mark a fleet device Failed (PR-5 satellite: failures, not just
     /// thermal bands, reroute the executor lanes). The health bump
     /// moves `safety_version`, so the very next scheduling step

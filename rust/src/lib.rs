@@ -37,5 +37,6 @@ pub mod scaling;
 pub mod selection;
 pub mod server;
 pub mod sim;
+pub mod snapshot;
 pub mod testing;
 pub mod workload;

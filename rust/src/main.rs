@@ -6,6 +6,7 @@
 //!   experiment  — regenerate a paper table/figure (t1..t16, f2..f6, all)
 //!   fit         — fit the coverage scaling law to a sweep and print β
 //!   report      — summarize a results directory
+//!   replay      — checkpointed runs, crash-recovery drills, desync scans
 
 use anyhow::{bail, Result};
 
@@ -23,6 +24,8 @@ COMMANDS:
     experiment   Regenerate a paper table/figure (t1..t16, f2..f6, all)
     fit          Fit the coverage scaling law and print the exponents
     report       Summarize a results directory
+    replay       Checkpoint/restore runs, crash-recovery drills (--drill),
+                 cross-replica desync scans (--desync)
 
 COMMON OPTIONS:
     --artifacts <dir>   artifacts directory   [default: artifacts]
@@ -48,6 +51,17 @@ SERVE OPTIONS:
                         standard for the serve loop, mixed for --gateway]
     --stats-json        emit ServeStats / GatewayReport as one JSON line
     --legacy-admission  pre-gateway request loop (validate + rate-limit)
+
+REPLAY OPTIONS:
+    --queries <n>            workload size            [default: 120]
+    --samples <n>            per-query sample budget  [default: 4]
+    --checkpoint-every <n>   snapshot cadence (ticks) [default: 25]
+    --checkpoint-dir <dir>   persist snapshots + event log for --restore
+    --restore <file>         restore a snapshot, replay --log <file>
+    --drill                  kill-point recovery matrix (--fleet all,
+                             --kill-ticks a,b,c, --fuzz <n>)
+    --desync                 stale-replica divergence scan
+                             (--stale-device <idx>, --compare-every <n>)
 ";
 
 fn main() -> Result<()> {
@@ -58,6 +72,7 @@ fn main() -> Result<()> {
         Some("experiment") => qeil::experiments::cli::run(&args),
         Some("fit") => qeil::experiments::cli::fit(&args),
         Some("report") => qeil::experiments::cli::report(&args),
+        Some("replay") => qeil::snapshot::cli::run(&args),
         Some(other) => bail!("unknown command {other:?}\n{USAGE}"),
         None => {
             print!("{USAGE}");

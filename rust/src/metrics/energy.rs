@@ -22,12 +22,12 @@ pub struct EnergySample {
 /// Accumulates energy per device and per phase.
 #[derive(Debug, Clone, Default)]
 pub struct EnergyLedger {
-    per_device: BTreeMap<DeviceId, f64>,
-    per_phase: BTreeMap<&'static str, f64>,
-    idle_j: f64,
-    total_j: f64,
-    busy_seconds: f64,
-    wall_seconds: f64,
+    pub(crate) per_device: BTreeMap<DeviceId, f64>,
+    pub(crate) per_phase: BTreeMap<&'static str, f64>,
+    pub(crate) idle_j: f64,
+    pub(crate) total_j: f64,
+    pub(crate) busy_seconds: f64,
+    pub(crate) wall_seconds: f64,
 }
 
 impl EnergyLedger {

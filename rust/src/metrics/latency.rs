@@ -4,12 +4,12 @@
 /// Log-bucketed histogram over (0, ~1000 s] with 1% resolution buckets.
 #[derive(Debug, Clone)]
 pub struct LatencyRecorder {
-    buckets: Vec<u64>,
-    count: u64,
-    sum_s: f64,
-    sum_sq_s: f64,
-    min_s: f64,
-    max_s: f64,
+    pub(crate) buckets: Vec<u64>,
+    pub(crate) count: u64,
+    pub(crate) sum_s: f64,
+    pub(crate) sum_sq_s: f64,
+    pub(crate) min_s: f64,
+    pub(crate) max_s: f64,
 }
 
 const BUCKETS: usize = 2048;

@@ -9,8 +9,10 @@
 /// paper (O'Neill 2014).
 #[derive(Debug, Clone)]
 pub struct Pcg {
-    state: u64,
-    inc: u64,
+    /// Raw generator state, exposed crate-internally so snapshots can
+    /// capture and restore a stream mid-sequence bit-exactly.
+    pub(crate) state: u64,
+    pub(crate) inc: u64,
 }
 
 const PCG_MULT: u64 = 6364136223846793005;

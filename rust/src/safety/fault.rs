@@ -45,7 +45,7 @@ pub enum RecoveryAction {
 pub struct FaultDetector {
     device: DeviceId,
     /// Kernel outcome window (true = ok).
-    window: VecDeque<bool>,
+    pub(crate) window: VecDeque<bool>,
     window_size: usize,
     /// Error-rate threshold (paper: 1%).
     error_threshold: f64,
@@ -53,7 +53,7 @@ pub struct FaultDetector {
     timeout_multiple: f64,
     /// Heartbeat deadline (s).
     heartbeat_deadline_s: f64,
-    last_heartbeat_s: f64,
+    pub(crate) last_heartbeat_s: f64,
     /// Redistribution deadline after failure (paper: 100 ms).
     pub redistribution_deadline_s: f64,
 }

@@ -35,11 +35,11 @@ impl HealthState {
 #[derive(Debug, Clone)]
 pub struct DeviceHealth {
     pub device: DeviceId,
-    state: HealthState,
+    pub(crate) state: HealthState,
     /// Virtual time the device entered its current state.
-    since_s: f64,
+    pub(crate) since_s: f64,
     /// Completed inferences since entering Recovering (graduation count).
-    recovery_successes: u32,
+    pub(crate) recovery_successes: u32,
     /// Total failures observed over the device's lifetime.
     pub failures_total: u64,
     /// Monotone state-version counter: bumped on every FSM transition
@@ -47,7 +47,7 @@ pub struct DeviceHealth {
     /// cache above all — compare versions instead of states: an
     /// unchanged version guarantees no transition happened in between,
     /// so the current plan is still valid.
-    version: u64,
+    pub(crate) version: u64,
 }
 
 /// Successful inferences required to graduate Recovering → Healthy.

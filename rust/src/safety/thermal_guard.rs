@@ -44,8 +44,8 @@ impl ThermalDecision {
 /// guard moves the device across a shedding band.
 #[derive(Debug, Clone, Default)]
 pub struct ShedTracker {
-    level: u8,
-    version: u64,
+    pub(crate) level: u8,
+    pub(crate) version: u64,
 }
 
 impl ShedTracker {

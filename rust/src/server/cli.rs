@@ -91,7 +91,17 @@ pub fn run(args: &Args) -> Result<()> {
             report.wall_s, report.energy_j, report.idle_energy_j,
         );
         if stats_json {
-            println!("{}", report.to_json().to_string());
+            // The gateway's canonical state digest rides along so a
+            // monitoring scrape can cross-check replicas (two gateways
+            // fed one trace must print one digest).
+            let mut doc = report.to_json();
+            if let crate::json::Json::Obj(map) = &mut doc {
+                map.insert(
+                    "state_digest".into(),
+                    crate::json::Json::Str(format!("{:016x}", gateway.state_digest())),
+                );
+            }
+            println!("{}", doc.to_string());
         }
         return Ok(());
     }

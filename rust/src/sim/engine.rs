@@ -67,6 +67,13 @@ pub struct SimOptions {
     /// waste its late samples while the disaggregated fan-out finishes
     /// all of them (paper §4.2's "more effective sample diversity").
     pub sla_sample_multiple: Option<f64>,
+    /// Snapshot cadence for checkpointed runs: a snapshot is cut every
+    /// N queries (the engine's logical tick). `None` = never. The
+    /// cadence is HARNESS state, not engine state — it deliberately
+    /// does not participate in the snapshot digest, so a straight run
+    /// and a chunked run through any number of checkpoint/restore
+    /// cycles stay bit-identical.
+    pub checkpoint_every: Option<u64>,
     pub seed: u64,
 }
 
@@ -83,6 +90,7 @@ impl Default for SimOptions {
             latency_sla_s: None,
             energy_budget_j: None,
             sla_sample_multiple: Some(12.0),
+            checkpoint_every: None,
             seed: 0,
         }
     }
@@ -168,7 +176,11 @@ pub struct ReplanEvent {
 }
 
 /// Aggregated simulation results.
-#[derive(Debug, Clone)]
+///
+/// `PartialEq` is load-bearing: the crash-recovery drills assert a
+/// restored-and-replayed run produces a report EQUAL (bit-exact f64s
+/// included) to the uninterrupted one.
+#[derive(Debug, Clone, PartialEq)]
 pub struct SimReport {
     /// pass@k over the query set.
     pub coverage: f64,
@@ -222,63 +234,84 @@ pub struct SimReport {
     pub replan_trail: Vec<ReplanEvent>,
     /// Calibration trail (`None` when the feature is off).
     pub calibration: Option<CalibrationTrail>,
+    /// FNV-1a 64 digest of the engine's canonical serialized state at
+    /// report time (see `snapshot::engine_digest`). Two runs with this
+    /// digest equal went through bit-identical state trajectories — the
+    /// replay-equivalence and cross-replica desync checks compare it.
+    pub state_digest: u64,
 }
 
-struct SimDevice {
-    spec: DeviceSpec,
-    thermal: ThermalState,
-    health: DeviceHealth,
-    detector: FaultDetector,
+#[derive(Debug, Clone)]
+pub(crate) struct SimDevice {
+    pub(crate) spec: DeviceSpec,
+    pub(crate) thermal: ThermalState,
+    pub(crate) health: DeviceHealth,
+    pub(crate) detector: FaultDetector,
     /// Thermal shedding-band tracker (the thermal half of the
     /// safety-state version; the health half lives in `health`).
-    shed: ShedTracker,
-    busy_s: f64,
+    pub(crate) shed: ShedTracker,
+    pub(crate) busy_s: f64,
     /// Active energy accumulated in the current query window.
-    window_energy_j: f64,
+    pub(crate) window_energy_j: f64,
     /// Busy seconds accumulated in the current query window.
-    window_busy_s: f64,
+    pub(crate) window_busy_s: f64,
 }
 
 /// The engine.
+///
+/// `Clone` is part of the failover substrate: the desync harness runs
+/// two replicas of one engine in lockstep, and the replay bench clones
+/// a warm engine per iteration. Every field is either snapshot state
+/// (serialized by `snapshot::serialize`) or derivable from it.
+#[derive(Debug, Clone)]
 pub struct SimEngine {
-    fleet: Fleet,
-    shape: ModelShape,
-    options: SimOptions,
-    devices: BTreeMap<DeviceId, SimDevice>,
-    ledger: EnergyLedger,
-    latencies: LatencyRecorder,
-    latency_law: LatencyLaw,
-    clock_s: f64,
-    tokens: u64,
-    recoveries: Vec<f64>,
-    failures: u64,
-    queries_lost: usize,
-    samples_run_total: u64,
-    cascade: CascadeTrail,
+    pub(crate) fleet: Fleet,
+    pub(crate) shape: ModelShape,
+    pub(crate) options: SimOptions,
+    pub(crate) devices: BTreeMap<DeviceId, SimDevice>,
+    pub(crate) ledger: EnergyLedger,
+    pub(crate) latencies: LatencyRecorder,
+    pub(crate) latency_law: LatencyLaw,
+    pub(crate) clock_s: f64,
+    pub(crate) tokens: u64,
+    pub(crate) recoveries: Vec<f64>,
+    pub(crate) failures: u64,
+    pub(crate) queries_lost: usize,
+    pub(crate) samples_run_total: u64,
+    pub(crate) cascade: CascadeTrail,
     /// Warm-start plan cache (plan_cache feature).
-    plan_cache: PlanCache,
+    pub(crate) plan_cache: PlanCache,
     /// (safety, calibration) version pair the current layer plan was
     /// computed for; `None` before the first event-driven plan.
-    last_planned_version: Option<(u64, u64)>,
-    replans: u64,
-    plan_cache_hits: u64,
-    replan_trail: Vec<ReplanEvent>,
+    pub(crate) last_planned_version: Option<(u64, u64)>,
+    pub(crate) replans: u64,
+    pub(crate) plan_cache_hits: u64,
+    pub(crate) replan_trail: Vec<ReplanEvent>,
     /// Online coefficient estimators (calibration feature): fed by
     /// every executed task's predicted-vs-measured residuals.
-    calibrator: FleetCalibrator,
+    pub(crate) calibrator: FleetCalibrator,
     /// The planning view of the fleet: nameplate specs with the
     /// calibration overlays applied. Rebuilt (== the planner's
     /// `EnergyTable` substrate rebuilt) once per observed drift
     /// version; identical to `fleet` while no drift has folded.
-    calibrated_fleet: Fleet,
+    pub(crate) calibrated_fleet: Fleet,
     /// Calibration version `calibrated_fleet` was built at.
-    calibrated_version: u64,
+    pub(crate) calibrated_version: u64,
     /// Rebuilds of the calibrated planning substrate (drift events
     /// observed at a planning tick).
-    table_rebuilds: u64,
+    pub(crate) table_rebuilds: u64,
     /// Contention-noise stream (drawn ONLY while a noise scenario is
     /// active, so drift-free runs consume no randomness).
-    noise_rng: Pcg,
+    pub(crate) noise_rng: Pcg,
+    /// Queries solved so far (pass@k numerator). Lives on the engine —
+    /// not as a local in `run` — so a restored engine resumes the
+    /// count mid-run exactly.
+    pub(crate) solved: usize,
+    /// Queries whose first sample succeeded (pass@1 numerator).
+    pub(crate) accuracy_hits: usize,
+    /// Queries stepped so far — the engine's logical tick. The replay
+    /// cursor: event `k` of a run's log applies IFF `queries_done == k`.
+    pub(crate) queries_done: usize,
     /// PJRT time scale: real measured seconds per simulated second
     /// (from PJRT execution of the artifact; 1.0 = pure analytic).
     pub pjrt_time_scale: f64,
@@ -333,6 +366,9 @@ impl SimEngine {
             calibrated_version: 0,
             table_rebuilds: 0,
             noise_rng,
+            solved: 0,
+            accuracy_hits: 0,
+            queries_done: 0,
             pjrt_time_scale: 1.0,
         }
     }
@@ -1013,21 +1049,62 @@ impl SimEngine {
         }
     }
 
+    /// Step exactly one query through the engine, updating the solved /
+    /// accuracy / tick counters that live ON the engine (so a restored
+    /// snapshot resumes them mid-run). This is the unit of replay: one
+    /// logged arrival = one `step_query` call.
+    pub fn step_query(
+        &mut self,
+        query: &Query,
+        samples: u32,
+        oracle: &CoverageOracle,
+    ) -> (bool, u32) {
+        let (ok, ran) = self.run_query(query, samples, oracle);
+        if ok {
+            self.solved += 1;
+        }
+        if ran > 0 && oracle.sample_succeeds(query, 0) {
+            self.accuracy_hits += 1;
+        }
+        self.queries_done += 1;
+        (ok, ran)
+    }
+
+    /// Logical tick: queries stepped so far (the replay cursor).
+    pub fn queries_done(&self) -> usize {
+        self.queries_done
+    }
+
+    /// The run seed (drives the coverage oracle and every RNG stream).
+    pub fn seed(&self) -> u64 {
+        self.options.seed
+    }
+
+    /// Force-pin one device's calibration overlay and rebuild the
+    /// planning substrate from it immediately. Testing/drill hook: the
+    /// desync harness uses it to build a replica whose planner runs on
+    /// deliberately stale coefficients.
+    pub fn force_overlay(&mut self, device: DevIdx, overlay: crate::calibration::CalibratedSpec) {
+        self.calibrator.force_overlay(device, overlay);
+        self.calibrated_fleet = self.calibrator.calibrated_fleet(&self.fleet);
+        self.calibrated_version = self.calibrator.version();
+        self.table_rebuilds += 1;
+    }
+
+    /// Finalize the run and build the report from the engine's own
+    /// counters. Equivalent to ending [`SimEngine::run`]; split out so a
+    /// checkpointed / replayed run can finish from wherever it resumed.
+    pub fn finish(&mut self) -> SimReport {
+        self.report(self.queries_done, self.solved, self.accuracy_hits)
+    }
+
     /// Run a full query set with a uniform sample budget.
     pub fn run(&mut self, queries: &[Query], samples: u32) -> Result<SimReport> {
         let oracle = CoverageOracle::new(self.options.seed);
-        let mut solved = 0usize;
-        let mut accuracy_hits = 0usize;
         for query in queries {
-            let (ok, ran) = self.run_query(query, samples, &oracle);
-            if ok {
-                solved += 1;
-            }
-            if ran > 0 && oracle.sample_succeeds(query, 0) {
-                accuracy_hits += 1;
-            }
+            self.step_query(query, samples, &oracle);
         }
-        Ok(self.report(queries.len(), solved, accuracy_hits))
+        Ok(self.finish())
     }
 
     fn report(&mut self, n_queries: usize, solved: usize, accuracy_hits: usize) -> SimReport {
@@ -1036,6 +1113,10 @@ impl SimEngine {
         // window. With the plan cache on this is one more event-driven
         // check (a cache hit unless the signature is genuinely new).
         self.replan_if_stale();
+        // Canonical state digest AFTER the final replan settles: every
+        // bit of engine state is folded in, so digest-equal reports
+        // certify bit-identical state trajectories.
+        let state_digest = crate::snapshot::engine_digest(self);
         let utilization = self
             .devices
             .iter()
@@ -1114,6 +1195,7 @@ impl SimEngine {
             } else {
                 None
             },
+            state_digest,
         }
     }
 }

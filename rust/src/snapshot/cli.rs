@@ -1,0 +1,230 @@
+//! `qeil replay` — checkpointed runs, crash-recovery drills, and
+//! cross-replica desync scans from the command line.
+//!
+//! Modes (first match wins):
+//!   --drill           run the kill-point drill matrix and exit nonzero
+//!                     on any digest/report mismatch
+//!   --desync          run a calibrated replica against a deliberately
+//!                     stale-coefficient one and report the first
+//!                     divergence tick + component
+//!   --restore FILE    restore a snapshot, replay the log suffix from
+//!                     --log FILE, print the final report
+//!   (default)         run fresh; with --checkpoint-dir, write periodic
+//!                     snapshots and the event log there so a later
+//!                     --restore can continue the run
+
+use anyhow::{bail, Context, Result};
+
+use crate::calibration::CalibratedSpec;
+use crate::cli::Args;
+use crate::coordinator::allocation::ModelShape;
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::devices::spec::DevIdx;
+use crate::experiments::runner::default_meta;
+use crate::json::Json;
+use crate::sim::engine::{SimEngine, SimOptions, SimReport};
+use crate::snapshot::desync::{detect_desync, stale_replica};
+use crate::snapshot::drill::{drill_preset, DrillOutcome};
+use crate::snapshot::replay::{EventLog, ReplaySession};
+use crate::snapshot::{restore_engine, snapshot_engine};
+use crate::workload::datasets::{Dataset, ModelFamily};
+use crate::workload::generator::WorkloadGenerator;
+
+pub fn run(args: &Args) -> Result<()> {
+    if args.flag("drill") {
+        drill(args)
+    } else if args.flag("desync") {
+        desync(args)
+    } else if args.flag("restore") {
+        restore(args)
+    } else {
+        fresh(args)
+    }
+}
+
+fn presets_from(args: &Args) -> Result<Vec<FleetPreset>> {
+    let name = args.opt("fleet", "edge-box");
+    if name == "all" {
+        Ok(FleetPreset::all().to_vec())
+    } else {
+        Ok(vec![FleetPreset::from_str(&name)?])
+    }
+}
+
+fn workload(args: &Args) -> Result<(Vec<crate::workload::generator::Query>, u32, SimOptions)> {
+    let n = args.num("queries", 120usize)?;
+    let samples = args.num("samples", 4u32)?;
+    let seed = args.num("seed", 0u64)?;
+    let gen = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, seed);
+    let mut options = SimOptions { seed, ..SimOptions::default() };
+    options.checkpoint_every = Some(args.num("checkpoint-every", 25u64)?);
+    Ok((gen.queries(n), samples, options))
+}
+
+fn shape() -> ModelShape {
+    ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2))
+}
+
+fn report_json(report: &SimReport) -> Json {
+    Json::obj(vec![
+        ("coverage", Json::Num(report.coverage)),
+        ("total_energy_j", Json::Num(report.total_energy_j)),
+        ("mean_latency_s", Json::Num(report.mean_latency_s)),
+        ("p99_latency_s", Json::Num(report.p99_latency_s)),
+        ("throughput_tps", Json::Num(report.throughput_tps)),
+        ("queries", Json::Num(report.queries as f64)),
+        ("failures", Json::Num(report.failures as f64)),
+        ("recoveries", Json::Num(report.recoveries as f64)),
+        ("replans", Json::Num(report.replans as f64)),
+        ("planner", Json::Str(report.planner.into())),
+        ("state_digest", Json::Str(format!("{:016x}", report.state_digest))),
+    ])
+}
+
+fn print_report(args: &Args, report: &SimReport) {
+    if args.flag("stats-json") {
+        println!("{}", report_json(report).to_string());
+    } else {
+        println!(
+            "queries {}  coverage {:.3}  energy {:.1} J  p99 {:.3} s  digest {:016x}",
+            report.queries,
+            report.coverage,
+            report.total_energy_j,
+            report.p99_latency_s,
+            report.state_digest
+        );
+    }
+}
+
+/// Fresh run; with --checkpoint-dir, persist the event log up front and
+/// a snapshot every `checkpoint_every` ticks so a crash at ANY point is
+/// recoverable from disk via --restore.
+fn fresh(args: &Args) -> Result<()> {
+    let (queries, samples, options) = workload(args)?;
+    let preset = FleetPreset::from_str(&args.opt("fleet", "edge-box"))?;
+    let cadence = options.checkpoint_every.unwrap_or(0);
+    let dir = match args.opt("checkpoint-dir", "") {
+        d if d.is_empty() => None,
+        d => Some(d),
+    };
+
+    let log = EventLog::from_queries(&queries, samples);
+    if let Some(dir) = &dir {
+        std::fs::create_dir_all(dir).with_context(|| format!("creating {dir}"))?;
+        std::fs::write(format!("{dir}/events.json"), log.to_json().to_string())
+            .context("writing event log")?;
+    }
+
+    let engine = SimEngine::new(Fleet::preset(preset), shape(), options);
+    let mut session = ReplaySession::new(engine, log)?;
+    while session.step() {
+        let tick = session.cursor();
+        if cadence > 0 && tick % cadence == 0 {
+            if let Some(dir) = &dir {
+                let doc = snapshot_engine(session.engine());
+                std::fs::write(format!("{dir}/snapshot-{tick:08}.json"), doc.to_string())
+                    .with_context(|| format!("writing checkpoint at tick {tick}"))?;
+            }
+        }
+    }
+    let report = session.run_to_end();
+    print_report(args, &report);
+    Ok(())
+}
+
+/// Restore a snapshot and replay the rest of its event log.
+fn restore(args: &Args) -> Result<()> {
+    let snap_path = args.required("restore")?;
+    let log_path = args.required("log")?;
+    let snap_text =
+        std::fs::read_to_string(&snap_path).with_context(|| format!("reading {snap_path}"))?;
+    let log_text =
+        std::fs::read_to_string(&log_path).with_context(|| format!("reading {log_path}"))?;
+    let engine = restore_engine(&Json::parse(&snap_text)?)?;
+    let log = EventLog::from_json(&Json::parse(&log_text)?)?;
+    let resumed_at = engine.queries_done();
+    let mut session = ReplaySession::new(engine, log)?;
+    let remaining = session.remaining();
+    eprintln!("restored at tick {resumed_at}; replaying {remaining} logged events");
+    let report = session.run_to_end();
+    print_report(args, &report);
+    Ok(())
+}
+
+fn parse_kill_ticks(spec: &str) -> Result<Vec<u64>> {
+    spec.split(',')
+        .filter(|s| !s.trim().is_empty())
+        .map(|s| s.trim().parse::<u64>().with_context(|| format!("bad kill tick {s:?}")))
+        .collect()
+}
+
+/// Kill-point drill matrix. Exits nonzero on the first mismatch so CI
+/// (scripts/drill.sh) can gate on it.
+fn drill(args: &Args) -> Result<()> {
+    let (queries, samples, options) = workload(args)?;
+    let cadence = options.checkpoint_every.unwrap_or(25).max(1);
+    let kill_ticks = parse_kill_ticks(&args.opt(
+        "kill-ticks",
+        &format!("1,{},{}", queries.len() / 2, queries.len().saturating_sub(1)),
+    ))?;
+    let fuzz = args.num("fuzz", 2usize)?;
+
+    let mut failed = 0usize;
+    for preset in presets_from(args)? {
+        let outcomes =
+            drill_preset(preset, options.clone(), &queries, samples, cadence, &kill_ticks, fuzz)?;
+        for o in &outcomes {
+            print_outcome(o);
+            if !o.passed() {
+                failed += 1;
+            }
+        }
+    }
+    if failed > 0 {
+        bail!("{failed} drill(s) FAILED: recovered state diverged from the uninterrupted run");
+    }
+    println!("all drills passed");
+    Ok(())
+}
+
+fn print_outcome(o: &DrillOutcome) {
+    println!(
+        "drill {:12} kill@{:5} restore@{:5} digest {:016x} {}",
+        o.preset.as_str(),
+        o.kill_tick,
+        o.checkpoint_tick,
+        o.final_digest,
+        if o.passed() { "OK" } else { "MISMATCH" }
+    );
+}
+
+/// Cross-replica desync scan: calibrated primary vs a replica whose
+/// overlay for one device is pinned stale.
+fn desync(args: &Args) -> Result<()> {
+    let (queries, samples, options) = workload(args)?;
+    let preset = FleetPreset::from_str(&args.opt("fleet", "edge-box"))?;
+    let compare_every = args.num("compare-every", 1u64)?;
+    let dev = DevIdx(args.num("stale-device", 1u16)?);
+    let derate = args.num("stale-bandwidth-scale", 0.5f64)?;
+
+    let primary = SimEngine::new(Fleet::preset(preset), shape(), options);
+    let overlay = CalibratedSpec { bandwidth_scale: derate, ..CalibratedSpec::identity() };
+    let replica = stale_replica(&primary, dev, overlay);
+
+    let log = EventLog::from_queries(&queries, samples);
+    let report = detect_desync(primary, replica, &log, compare_every)?;
+    match report.first_divergence_tick {
+        Some(tick) => {
+            println!(
+                "desync at tick {tick}: diverging components [{}] ({} comparisons)",
+                report.components.join(", "),
+                report.checkpoints.len()
+            );
+        }
+        None => println!(
+            "replicas stayed in sync across {} comparisons",
+            report.checkpoints.len()
+        ),
+    }
+    Ok(())
+}

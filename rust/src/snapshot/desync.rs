@@ -1,0 +1,125 @@
+//! Cross-replica desync detection.
+//!
+//! Two replicas of one coordinator fed the same event log MUST hold
+//! byte-identical state at every checkpoint boundary — that invariant
+//! is what makes snapshot-based failover sound (a standby promoted
+//! mid-run behaves exactly like the primary it replaced). This module
+//! runs two engines in lockstep through a shared log, compares
+//! whole-state digests at a configurable cadence, and on the first
+//! mismatch reports the tick AND the diverging state components (the
+//! serialization is component-grouped so divergence localizes to
+//! "calibration", "ledger", … instead of an opaque hash mismatch).
+//!
+//! The canonical seeded-desync scenario: a replica whose calibration
+//! overlay was force-pinned to stale coefficients. Both replicas see
+//! identical arrivals, but the stale replica plans against different
+//! physics — the detector must name the first divergent tick and
+//! attribute it to the calibration/plan components.
+
+use anyhow::Result;
+
+use crate::calibration::CalibratedSpec;
+use crate::devices::spec::DevIdx;
+use crate::sim::engine::SimEngine;
+use crate::snapshot::replay::{EventLog, ReplaySession};
+use crate::snapshot::{component_digests, engine_digest};
+
+/// One digest comparison point.
+#[derive(Debug, Clone)]
+pub struct CheckpointComparison {
+    pub tick: u64,
+    pub digest_a: u64,
+    pub digest_b: u64,
+}
+
+impl CheckpointComparison {
+    pub fn matches(&self) -> bool {
+        self.digest_a == self.digest_b
+    }
+}
+
+/// Result of a lockstep desync scan.
+#[derive(Debug, Clone)]
+pub struct DesyncReport {
+    /// First tick where the replicas' state digests differed; `None`
+    /// when the replicas stayed identical through the whole log.
+    pub first_divergence_tick: Option<u64>,
+    /// State components differing AT the first divergent checkpoint
+    /// (names from [`crate::snapshot::COMPONENTS`]).
+    pub components: Vec<&'static str>,
+    /// Every comparison made, in tick order (the last entry is the
+    /// end-of-log comparison).
+    pub checkpoints: Vec<CheckpointComparison>,
+}
+
+impl DesyncReport {
+    pub fn in_sync(&self) -> bool {
+        self.first_divergence_tick.is_none()
+    }
+}
+
+/// Run two replicas through one log in lockstep, comparing state
+/// digests every `compare_every` ticks (and always at end of log).
+/// Stops stepping at the first divergence — once trajectories split,
+/// later comparisons measure nothing.
+pub fn detect_desync(
+    replica_a: SimEngine,
+    replica_b: SimEngine,
+    log: &EventLog,
+    compare_every: u64,
+) -> Result<DesyncReport> {
+    let mut a = ReplaySession::new(replica_a, log.clone())?;
+    let mut b = ReplaySession::new(replica_b, log.clone())?;
+    let mut checkpoints = Vec::new();
+
+    loop {
+        let stepped_a = a.step();
+        let stepped_b = b.step();
+        debug_assert_eq!(stepped_a, stepped_b, "replicas consumed different event counts");
+        let done = !stepped_a;
+        let tick = a.cursor();
+        let at_boundary = compare_every > 0 && tick % compare_every == 0;
+        if done || at_boundary {
+            let cmp = CheckpointComparison {
+                tick,
+                digest_a: engine_digest(a.engine()),
+                digest_b: engine_digest(b.engine()),
+            };
+            let diverged = !cmp.matches();
+            checkpoints.push(cmp);
+            if diverged {
+                let da = component_digests(a.engine());
+                let db = component_digests(b.engine());
+                let components = da
+                    .iter()
+                    .zip(db.iter())
+                    .filter(|((_, x), (_, y))| x != y)
+                    .map(|((name, _), _)| *name)
+                    .collect();
+                return Ok(DesyncReport {
+                    first_divergence_tick: Some(tick),
+                    components,
+                    checkpoints,
+                });
+            }
+        }
+        if done {
+            return Ok(DesyncReport {
+                first_divergence_tick: None,
+                components: Vec::new(),
+                checkpoints,
+            });
+        }
+    }
+}
+
+/// Build a deliberately-stale replica: a clone of `engine` whose
+/// calibration overlay for `device` is force-pinned to `overlay`
+/// (version-bumped, planning fleet rebuilt) — the "standby that missed
+/// the last calibration fold" failure mode the desync probe exists to
+/// catch.
+pub fn stale_replica(engine: &SimEngine, device: DevIdx, overlay: CalibratedSpec) -> SimEngine {
+    let mut replica = engine.clone();
+    replica.force_overlay(device, overlay);
+    replica
+}

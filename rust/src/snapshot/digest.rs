@@ -1,0 +1,60 @@
+//! Canonical state digests.
+//!
+//! A digest is FNV-1a 64 over the COMPACT serialization of a state
+//! document. Canonical because `Json::Obj` is a `BTreeMap` — object
+//! keys serialize in one fixed order regardless of insertion order —
+//! and every `f64` is encoded as its exact bit pattern (see
+//! `serialize::f64_bits`), so two digests are equal iff the serialized
+//! states are byte-identical, which for the engine means the state
+//! trajectories were bit-identical.
+//!
+//! FNV-1a is NOT cryptographic; it certifies determinism against
+//! itself, not against an adversary. It is tiny, dependency-free, and
+//! stable across platforms, which is everything a desync probe needs.
+
+use crate::json::Json;
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a 64 over raw bytes.
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut hash = FNV_OFFSET;
+    for &b in bytes {
+        hash ^= b as u64;
+        hash = hash.wrapping_mul(FNV_PRIME);
+    }
+    hash
+}
+
+/// Digest of a JSON document's canonical compact serialization.
+pub fn digest_json(doc: &Json) -> u64 {
+    fnv1a64(doc.to_string().as_bytes())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_fnv_vectors() {
+        // Standard FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn digest_is_insertion_order_independent() {
+        let a = Json::obj(vec![("x", Json::Num(1.0)), ("y", Json::Num(2.0))]);
+        let b = Json::obj(vec![("y", Json::Num(2.0)), ("x", Json::Num(1.0))]);
+        assert_eq!(digest_json(&a), digest_json(&b));
+    }
+
+    #[test]
+    fn digest_discriminates_values() {
+        let a = Json::obj(vec![("x", Json::Num(1.0))]);
+        let b = Json::obj(vec![("x", Json::Num(2.0))]);
+        assert_ne!(digest_json(&a), digest_json(&b));
+    }
+}

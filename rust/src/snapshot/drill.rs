@@ -1,0 +1,183 @@
+//! Crash-recovery drills.
+//!
+//! A drill simulates the coordinator dying at an arbitrary tick
+//! mid-run and recovering from durable state: run with checkpoints at
+//! a fixed cadence, "kill" at the drilled tick (drop the live engine on
+//! the floor), restore the last checkpoint at-or-before the kill,
+//! replay the log suffix, and finish. The recovered run must produce a
+//! [`SimReport`] EQUAL (bit-exact, via `PartialEq`) to the
+//! uninterrupted reference, with an equal state digest.
+//!
+//! The process boundary is simulated for real: every checkpoint a
+//! drill restores from goes through serialize → STRING → parse —
+//! nothing survives the "crash" except bytes that would have been on
+//! disk. Kill ticks can be pinned or fuzzed per seed, so repeated CI
+//! runs sweep different crash points while any failure stays exactly
+//! reproducible from its seed.
+
+use anyhow::{bail, Result};
+
+use crate::devices::fleet::{Fleet, FleetPreset};
+use crate::json::Json;
+use crate::rng::Pcg;
+use crate::sim::engine::{SimEngine, SimOptions, SimReport};
+use crate::snapshot::replay::{EventLog, ReplaySession};
+use crate::snapshot::{engine_digest, restore_engine, snapshot_engine};
+use crate::workload::generator::Query;
+
+/// Outcome of one kill-point drill.
+#[derive(Debug, Clone)]
+pub struct DrillOutcome {
+    pub preset: FleetPreset,
+    /// Tick the coordinator was killed at.
+    pub kill_tick: u64,
+    /// Tick of the checkpoint the recovery restored from (≤ kill_tick).
+    pub checkpoint_tick: u64,
+    /// Recovered state digest == uninterrupted reference digest.
+    pub digest_match: bool,
+    /// Recovered report == uninterrupted reference report (bit-exact).
+    pub report_match: bool,
+    pub final_digest: u64,
+}
+
+impl DrillOutcome {
+    pub fn passed(&self) -> bool {
+        self.digest_match && self.report_match
+    }
+}
+
+/// Checkpointed reference run: steps the engine through the whole log,
+/// cutting a serialized snapshot STRING every `checkpoint_every` ticks
+/// (including tick 0, so a kill before the first cadence point can
+/// still recover). Returns the checkpoints and the reference report.
+fn checkpointed_run(
+    engine: SimEngine,
+    log: &EventLog,
+    checkpoint_every: u64,
+) -> Result<(Vec<(u64, String)>, SimReport)> {
+    let mut session = ReplaySession::new(engine, log.clone())?;
+    let mut checkpoints = vec![(0u64, snapshot_engine(session.engine()).to_string())];
+    loop {
+        if !session.step() {
+            break;
+        }
+        let tick = session.cursor();
+        if checkpoint_every > 0 && tick % checkpoint_every == 0 {
+            checkpoints.push((tick, snapshot_engine(session.engine()).to_string()));
+        }
+    }
+    // All events consumed; finish() settles the final replan and
+    // stamps the digest.
+    debug_assert_eq!(session.cursor(), log.events.len() as u64);
+    let report = session.run_to_end();
+    Ok((checkpoints, report))
+}
+
+/// Kill-at-`kill_tick` recovery: restore the newest checkpoint at or
+/// before the kill, replay the log suffix, finish.
+fn recover(
+    checkpoints: &[(u64, String)],
+    log: &EventLog,
+    kill_tick: u64,
+) -> Result<(u64, SimReport, u64)> {
+    let Some((tick, text)) = checkpoints.iter().rev().find(|(t, _)| *t <= kill_tick) else {
+        bail!("no checkpoint at or before kill tick {kill_tick}");
+    };
+    let engine = restore_engine(&Json::parse(text)?)?;
+    if engine.queries_done() as u64 != *tick {
+        bail!(
+            "checkpoint tagged tick {tick} restored an engine at tick {}",
+            engine.queries_done()
+        );
+    }
+    let mut session = ReplaySession::new(engine, log.clone())?;
+    let report = session.run_to_end();
+    let digest = engine_digest(session.engine());
+    Ok((*tick, report, digest))
+}
+
+/// Run the full drill matrix for one preset: an uninterrupted
+/// reference, then one recovery per kill tick. `fuzz_kills` extra kill
+/// points are drawn per-seed from a PCG stream — deterministic for a
+/// given seed, different across seeds.
+pub fn drill_preset(
+    preset: FleetPreset,
+    options: SimOptions,
+    queries: &[Query],
+    samples: u32,
+    checkpoint_every: u64,
+    kill_ticks: &[u64],
+    fuzz_kills: usize,
+) -> Result<Vec<DrillOutcome>> {
+    if queries.is_empty() {
+        bail!("drill needs a non-empty query set");
+    }
+    let fleet = Fleet::preset(preset);
+    let shape = crate::coordinator::allocation::ModelShape::from_family(
+        crate::workload::datasets::ModelFamily::Gpt2,
+        &crate::experiments::runner::default_meta(crate::workload::datasets::ModelFamily::Gpt2),
+    );
+    let log = EventLog::from_queries(queries, samples);
+
+    // Uninterrupted reference (no checkpoint I/O on the hot path is
+    // needed for correctness, but running THROUGH the checkpointed
+    // driver also proves cutting snapshots perturbs nothing).
+    let engine = SimEngine::new(fleet, shape, options);
+    let (checkpoints, reference) = checkpointed_run(engine, &log, checkpoint_every)?;
+    let reference_digest = reference.state_digest;
+
+    let n = queries.len() as u64;
+    let mut kills: Vec<u64> = kill_ticks.iter().map(|&t| t.min(n - 1)).collect();
+    let mut fuzz = Pcg::new(options_seed(&log, &checkpoints), 0xD811_D811);
+    for _ in 0..fuzz_kills {
+        kills.push(fuzz.next_u64() % n);
+    }
+
+    kills
+        .into_iter()
+        .map(|kill_tick| {
+            let (checkpoint_tick, report, digest) = recover(&checkpoints, &log, kill_tick)?;
+            Ok(DrillOutcome {
+                preset,
+                kill_tick,
+                checkpoint_tick,
+                digest_match: digest == reference_digest,
+                report_match: report == reference,
+                final_digest: digest,
+            })
+        })
+        .collect()
+}
+
+/// Seed for the fuzzed kill points: tied to the run's own identity
+/// (first checkpoint digest ⊕ log length) so different runs drill
+/// different crash points while one run's drills stay reproducible.
+fn options_seed(log: &EventLog, checkpoints: &[(u64, String)]) -> u64 {
+    let base = crate::snapshot::fnv1a64(checkpoints[0].1.as_bytes());
+    base ^ (log.events.len() as u64)
+}
+
+/// Drill every fleet preset with one options template. Returns all
+/// outcomes; callers assert `.iter().all(DrillOutcome::passed)`.
+pub fn drill_all_presets(
+    options: &SimOptions,
+    queries: &[Query],
+    samples: u32,
+    checkpoint_every: u64,
+    kill_ticks: &[u64],
+    fuzz_kills: usize,
+) -> Result<Vec<DrillOutcome>> {
+    let mut outcomes = Vec::new();
+    for preset in FleetPreset::all() {
+        outcomes.extend(drill_preset(
+            preset,
+            options.clone(),
+            queries,
+            samples,
+            checkpoint_every,
+            kill_ticks,
+            fuzz_kills,
+        )?);
+    }
+    Ok(outcomes)
+}

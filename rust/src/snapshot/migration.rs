@@ -1,0 +1,114 @@
+//! Snapshot format versioning and forward migration.
+//!
+//! A snapshot document is tagged with the `FORMAT_VERSION` it was
+//! written at. `migrate` walks a document forward one version at a
+//! time until it reaches the current format, so any historical
+//! checkpoint a deployment kept on disk stays restorable after the
+//! state schema grows. Each step is a small, total JSON→JSON rewrite;
+//! a version newer than the binary understands is a hard error (never
+//! guess at fields from the future).
+//!
+//! History:
+//! - v1: initial engine snapshot format (PR 6 development form). The
+//!   `clock` component had no `pjrt_time_scale` field — the scale was
+//!   an implicit 1.0.
+//! - v2: `clock.pjrt_time_scale` serialized explicitly (bit-pattern
+//!   encoded like every other `f64`).
+
+use anyhow::{bail, Result};
+
+use crate::json::Json;
+
+/// The snapshot format this binary writes.
+pub const FORMAT_VERSION: u64 = 2;
+
+/// Document kind tag for engine snapshots.
+pub const SNAPSHOT_KIND: &str = "qeil-engine-snapshot";
+
+/// Document kind tag for event logs.
+pub const LOG_KIND: &str = "qeil-event-log";
+
+/// Migrate a parsed snapshot document forward to `FORMAT_VERSION`,
+/// in place. Idempotent for current-version documents.
+pub fn migrate(doc: &mut Json) -> Result<()> {
+    let mut version = doc.field("format_version")?.as_u64()?;
+    if version > FORMAT_VERSION {
+        bail!(
+            "snapshot format v{version} is newer than this binary's v{FORMAT_VERSION}; \
+             refusing to guess at unknown fields"
+        );
+    }
+    while version < FORMAT_VERSION {
+        match version {
+            1 => migrate_v1_to_v2(doc)?,
+            v => bail!("no migration path from snapshot format v{v}"),
+        }
+        version += 1;
+        if let Json::Obj(map) = doc {
+            map.insert("format_version".into(), Json::Num(version as f64));
+        }
+    }
+    Ok(())
+}
+
+/// v1 → v2: `clock.pjrt_time_scale` appears, defaulting to the exact
+/// bit pattern of 1.0 (v1 engines always ran pure-analytic).
+fn migrate_v1_to_v2(doc: &mut Json) -> Result<()> {
+    let Json::Obj(map) = doc else {
+        bail!("snapshot document must be an object");
+    };
+    let Some(Json::Obj(engine)) = map.get_mut("engine") else {
+        bail!("snapshot document missing engine object");
+    };
+    let Some(Json::Obj(clock)) = engine.get_mut("clock") else {
+        bail!("snapshot engine missing clock component");
+    };
+    clock
+        .entry("pjrt_time_scale".to_string())
+        .or_insert_with(|| Json::Str(format!("{:016x}", 1.0f64.to_bits())));
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn future_versions_are_refused() {
+        let mut doc = Json::obj(vec![
+            ("format_version", Json::Num((FORMAT_VERSION + 1) as f64)),
+            ("engine", Json::obj(vec![])),
+        ]);
+        let err = migrate(&mut doc).unwrap_err().to_string();
+        assert!(err.contains("newer"), "got: {err}");
+    }
+
+    #[test]
+    fn current_version_is_a_no_op() {
+        let mut doc = Json::obj(vec![
+            ("format_version", Json::Num(FORMAT_VERSION as f64)),
+            ("engine", Json::obj(vec![("clock", Json::obj(vec![]))])),
+        ]);
+        let before = doc.to_string();
+        migrate(&mut doc).unwrap();
+        assert_eq!(doc.to_string(), before);
+    }
+
+    #[test]
+    fn v1_gains_pjrt_time_scale() {
+        let mut doc = Json::obj(vec![
+            ("format_version", Json::Num(1.0)),
+            ("engine", Json::obj(vec![("clock", Json::obj(vec![]))])),
+        ]);
+        migrate(&mut doc).unwrap();
+        assert_eq!(doc.field("format_version").unwrap().as_u64().unwrap(), FORMAT_VERSION);
+        let scale = doc
+            .field("engine")
+            .unwrap()
+            .field("clock")
+            .unwrap()
+            .field("pjrt_time_scale")
+            .unwrap();
+        assert_eq!(scale, &Json::Str(format!("{:016x}", 1.0f64.to_bits())));
+    }
+}

@@ -1,0 +1,220 @@
+//! Event/command log and deterministic replay.
+//!
+//! The engine is a deterministic function of (initial state, arrival
+//! stream): every other input — failures, drift, thermal physics, the
+//! noise RNG — is either serialized state or derived from it. So the
+//! ONLY thing the log must capture is each externally-sourced event
+//! (one query arrival per engine tick) plus the per-query sample
+//! budget. `restore(snapshot at tick k)` + `replay(events k..n)` then
+//! reproduces the uninterrupted run bit-for-bit, which the state
+//! digest certifies.
+//!
+//! The replay cursor is the engine's own `queries_done` tick: event
+//! `k` applies iff the engine has stepped exactly `k` queries. A
+//! session restored from a mid-run snapshot therefore skips the
+//! already-applied prefix automatically — there is no separate cursor
+//! to keep consistent (or to corrupt).
+
+use anyhow::{bail, Context, Result};
+
+use crate::json::Json;
+use crate::sim::engine::{SimEngine, SimReport};
+use crate::snapshot::migration::{FORMAT_VERSION, LOG_KIND};
+use crate::snapshot::serialize::{f64_bits, f64_from, u64_from, u64_json};
+use crate::workload::coverage::CoverageOracle;
+use crate::workload::datasets::Dataset;
+use crate::workload::generator::Query;
+
+/// One externally-sourced event: the query that arrived at `tick`.
+#[derive(Debug, Clone)]
+pub struct LogEvent {
+    /// Engine tick (query index) this event applies at.
+    pub tick: u64,
+    pub query: Query,
+}
+
+/// Append-only log of a run's external inputs.
+#[derive(Debug, Clone)]
+pub struct EventLog {
+    /// Per-query sample budget the run was launched with (part of the
+    /// command, not the engine state — two runs of one engine with
+    /// different budgets are different runs).
+    pub samples: u32,
+    pub events: Vec<LogEvent>,
+}
+
+impl EventLog {
+    /// Build the log for a run over `queries` (tick = arrival index).
+    pub fn from_queries(queries: &[Query], samples: u32) -> EventLog {
+        EventLog {
+            samples,
+            events: queries
+                .iter()
+                .enumerate()
+                .map(|(i, q)| LogEvent { tick: i as u64, query: q.clone() })
+                .collect(),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format_version", Json::Num(FORMAT_VERSION as f64)),
+            ("kind", Json::Str(LOG_KIND.into())),
+            ("samples", Json::Num(self.samples as f64)),
+            (
+                "events",
+                Json::arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("tick", u64_json(e.tick)),
+                                ("id", u64_json(e.query.id)),
+                                ("dataset", Json::Str(e.query.dataset.as_str().into())),
+                                ("difficulty_p", f64_bits(e.query.difficulty_p)),
+                                ("prompt_tokens", Json::Num(e.query.prompt_tokens as f64)),
+                                ("output_tokens", Json::Num(e.query.output_tokens as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn from_json(doc: &Json) -> Result<EventLog> {
+        let kind = doc.field("kind")?.as_str()?;
+        if kind != LOG_KIND {
+            bail!("expected a {LOG_KIND:?} document, got kind {kind:?}");
+        }
+        let version = doc.field("format_version")?.as_u64()?;
+        if version > FORMAT_VERSION {
+            bail!("event log format v{version} is newer than this binary's v{FORMAT_VERSION}");
+        }
+        let events = doc
+            .field("events")?
+            .as_arr()?
+            .iter()
+            .map(|e| {
+                Ok(LogEvent {
+                    tick: u64_from(e.field("tick")?)?,
+                    query: Query {
+                        id: e.u64_field("id")?,
+                        dataset: Dataset::from_str(e.str_field("dataset")?)?,
+                        difficulty_p: f64_from(e.field("difficulty_p")?)
+                            .context("difficulty_p")?,
+                        prompt_tokens: e.u64_field("prompt_tokens")? as u32,
+                        output_tokens: e.u64_field("output_tokens")? as u32,
+                    },
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // The tick sequence must be dense from 0 — a gap means the log
+        // was truncated mid-stream and replay would silently skip work.
+        for (i, e) in events.iter().enumerate() {
+            if e.tick != i as u64 {
+                bail!("event log tick {} at position {i}: log is not dense", e.tick);
+            }
+        }
+        Ok(EventLog { samples: doc.u64_field("samples")? as u32, events })
+    }
+}
+
+/// Drives an engine (fresh or snapshot-restored) through a log.
+pub struct ReplaySession {
+    engine: SimEngine,
+    oracle: CoverageOracle,
+    log: EventLog,
+}
+
+impl ReplaySession {
+    /// Attach a log to an engine. The engine may already be mid-run
+    /// (restored from a snapshot); replay resumes at its own tick. An
+    /// engine that is AHEAD of the log is refused — the log cannot
+    /// reproduce the state the engine is already in.
+    pub fn new(engine: SimEngine, log: EventLog) -> Result<ReplaySession> {
+        if engine.queries_done() > log.events.len() {
+            bail!(
+                "engine is at tick {} but the log only holds {} events",
+                engine.queries_done(),
+                log.events.len()
+            );
+        }
+        // The oracle is a pure function of the seed — derived state,
+        // not logged state.
+        let oracle = CoverageOracle::new(engine.seed());
+        Ok(ReplaySession { engine, oracle, log })
+    }
+
+    /// The next tick to apply (== events already applied).
+    pub fn cursor(&self) -> u64 {
+        self.engine.queries_done() as u64
+    }
+
+    /// Ticks remaining in the log.
+    pub fn remaining(&self) -> u64 {
+        self.log.events.len() as u64 - self.cursor()
+    }
+
+    /// Apply the next event. Returns false when the log is exhausted.
+    pub fn step(&mut self) -> bool {
+        let idx = self.engine.queries_done();
+        let Some(event) = self.log.events.get(idx) else {
+            return false;
+        };
+        debug_assert_eq!(event.tick, idx as u64);
+        self.engine.step_query(&event.query, self.log.samples, &self.oracle);
+        true
+    }
+
+    /// Replay every remaining event and produce the final report —
+    /// bit-identical to the uninterrupted run's.
+    pub fn run_to_end(&mut self) -> SimReport {
+        while self.step() {}
+        self.engine.finish()
+    }
+
+    pub fn engine(&self) -> &SimEngine {
+        &self.engine
+    }
+
+    /// Surrender the engine (e.g. to snapshot it between steps).
+    pub fn into_engine(self) -> SimEngine {
+        self.engine
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::datasets::ModelFamily;
+    use crate::workload::generator::WorkloadGenerator;
+
+    #[test]
+    fn log_roundtrip_preserves_every_event() {
+        let gen = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 7);
+        let queries = gen.queries(20);
+        let log = EventLog::from_queries(&queries, 4);
+        let text = log.to_json().to_string();
+        let back = EventLog::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.samples, 4);
+        assert_eq!(back.events.len(), 20);
+        for (a, b) in log.events.iter().zip(back.events.iter()) {
+            assert_eq!(a.tick, b.tick);
+            assert_eq!(a.query.id, b.query.id);
+            assert_eq!(a.query.difficulty_p.to_bits(), b.query.difficulty_p.to_bits());
+            assert_eq!(a.query.prompt_tokens, b.query.prompt_tokens);
+            assert_eq!(a.query.output_tokens, b.query.output_tokens);
+        }
+    }
+
+    #[test]
+    fn truncated_log_with_gap_is_refused() {
+        let gen = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 7);
+        let queries = gen.queries(3);
+        let mut log = EventLog::from_queries(&queries, 2);
+        log.events.remove(1);
+        let doc = log.to_json();
+        assert!(EventLog::from_json(&doc).is_err());
+    }
+}

@@ -1,0 +1,1218 @@
+//! Bit-exact engine state (de)serialization.
+//!
+//! Every `f64` is encoded as the 16-hex-digit big-endian bit pattern of
+//! its IEEE-754 representation (`f64_bits`), NOT as a decimal literal:
+//! the hand-rolled `Json` number writer has an integer fast path that
+//! drops the sign of `-0.0`, cannot represent NaN/Inf (the latency
+//! recorder's `min_s` starts at `f64::INFINITY`), and decimal
+//! round-tripping of 17-significant-digit values is exactly the class
+//! of almost-right that a digest check exists to catch. `u64` values
+//! ride as plain JSON numbers below 2^53 and as decimal strings above
+//! (PCG state uses the full 64-bit range).
+//!
+//! The engine state serializes as an object of NAMED COMPONENTS
+//! (`fleet`, `devices`, `ledger`, `calibration`, …) so the desync
+//! detector can digest each component independently and name the first
+//! diverging one, not just "something differs".
+
+use std::collections::{BTreeMap, HashMap, VecDeque};
+
+use anyhow::{bail, Context, Result};
+
+use crate::calibration::drift::{DriftPlan, DriftScenario};
+use crate::calibration::drift_detector::PageHinkley;
+use crate::calibration::rls::RatioRls;
+use crate::calibration::{
+    CalibratedSpec, CalibrationConfig, DeviceCalibration, FleetCalibrator,
+};
+use crate::config::{ExecMode, OrchestratorFeatures};
+use crate::coordinator::allocation::{LayerCost, ModelShape};
+use crate::coordinator::energy_table::ShapeKey;
+use crate::coordinator::pgsam::ParetoPoint;
+use crate::coordinator::plan_cache::{
+    CachedPlan, PlanCache, PlanCacheStats, PlanKey, PlannerKind,
+};
+use crate::devices::failure::{FailureKind, FailurePlan, FailureScenario};
+use crate::devices::fleet::Fleet;
+use crate::devices::spec::{DevIdx, DeviceId, DeviceKind, DeviceSpec, LaunchGranularity, Vendor};
+use crate::devices::thermal::ThermalState;
+use crate::json::Json;
+use crate::metrics::energy::EnergyLedger;
+use crate::metrics::latency::LatencyRecorder;
+use crate::rng::Pcg;
+use crate::safety::fault::FaultDetector;
+use crate::safety::health::{DeviceHealth, HealthState};
+use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
+use crate::scaling::formalisms::LatencyLaw;
+use crate::sim::engine::{
+    CascadeTrail, ReplanEvent, SimDevice, SimEngine, SimOptions,
+};
+use crate::workload::datasets::ModelFamily;
+
+// ---------------------------------------------------------------------
+// Scalar codecs
+// ---------------------------------------------------------------------
+
+/// Encode an `f64` as its exact bit pattern (16 lowercase hex digits).
+pub fn f64_bits(v: f64) -> Json {
+    Json::Str(format!("{:016x}", v.to_bits()))
+}
+
+/// Decode an `f64` from `f64_bits` form.
+pub fn f64_from(j: &Json) -> Result<f64> {
+    let s = j.as_str().context("f64 bit pattern must be a string")?;
+    let bits = u64::from_str_radix(s, 16)
+        .with_context(|| format!("bad f64 bit pattern {s:?}"))?;
+    Ok(f64::from_bits(bits))
+}
+
+/// Encode a `u64`: a plain JSON number when exactly representable,
+/// a decimal string above 2^53.
+pub fn u64_json(v: u64) -> Json {
+    if v < (1u64 << 53) {
+        Json::Num(v as f64)
+    } else {
+        Json::Str(v.to_string())
+    }
+}
+
+/// Decode a `u64` from either `u64_json` form.
+pub fn u64_from(j: &Json) -> Result<u64> {
+    match j {
+        Json::Str(s) => s.parse::<u64>().with_context(|| format!("bad u64 string {s:?}")),
+        other => other.as_u64(),
+    }
+}
+
+fn opt_f64(v: Option<f64>) -> Json {
+    match v {
+        Some(x) => f64_bits(x),
+        None => Json::Null,
+    }
+}
+
+fn opt_f64_from(j: &Json) -> Result<Option<f64>> {
+    match j {
+        Json::Null => Ok(None),
+        other => Ok(Some(f64_from(other)?)),
+    }
+}
+
+fn f64_field(obj: &Json, key: &str) -> Result<f64> {
+    f64_from(obj.field(key)?).with_context(|| format!("field {key:?}"))
+}
+
+fn u64_field(obj: &Json, key: &str) -> Result<u64> {
+    u64_from(obj.field(key)?).with_context(|| format!("field {key:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Leaf codecs
+// ---------------------------------------------------------------------
+
+fn spec_json(s: &DeviceSpec) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(s.id.0.clone())),
+        ("kind", Json::Str(s.kind.as_str().into())),
+        ("vendor", Json::Str(s.vendor.as_str().into())),
+        ("mem_gb", f64_bits(s.mem_gb)),
+        ("bandwidth_gbs", f64_bits(s.bandwidth_gbs)),
+        ("peak_gflops", f64_bits(s.peak_gflops)),
+        ("freq_ghz", f64_bits(s.freq_ghz)),
+        ("cores", Json::Num(s.cores as f64)),
+        ("tdp_w", f64_bits(s.tdp_w)),
+        ("idle_w", f64_bits(s.idle_w)),
+        ("lambda", f64_bits(s.lambda)),
+        ("mem_power_frac", f64_bits(s.mem_power_frac)),
+        ("compute_util", f64_bits(s.compute_util)),
+        ("t_max_c", f64_bits(s.t_max_c)),
+        ("t_throttle_hw_c", f64_bits(s.t_throttle_hw_c)),
+        ("t_ambient_c", f64_bits(s.t_ambient_c)),
+        ("r_th_k_per_w", f64_bits(s.r_th_k_per_w)),
+        ("tau_th_s", f64_bits(s.tau_th_s)),
+        ("priority", Json::Num(s.priority as f64)),
+        ("kernel_overhead_us", f64_bits(s.kernel_overhead_us)),
+        (
+            "launch_granularity",
+            Json::Str(
+                match s.launch_granularity {
+                    LaunchGranularity::PerLayer => "per-layer",
+                    LaunchGranularity::PerGraph => "per-graph",
+                }
+                .into(),
+            ),
+        ),
+        ("decode_bytes_factor", f64_bits(s.decode_bytes_factor)),
+        ("link_gbs", f64_bits(s.link_gbs)),
+    ])
+}
+
+fn spec_from(j: &Json) -> Result<DeviceSpec> {
+    let kind = match j.str_field("kind")? {
+        "CPU" => DeviceKind::Cpu,
+        "GPU" => DeviceKind::Gpu,
+        "NPU" => DeviceKind::Npu,
+        other => bail!("unknown device kind {other:?}"),
+    };
+    let vendor = match j.str_field("vendor")? {
+        "Intel" => Vendor::Intel,
+        "NVIDIA" => Vendor::Nvidia,
+        "Qualcomm" => Vendor::Qualcomm,
+        "AMD" => Vendor::Amd,
+        other => bail!("unknown vendor {other:?}"),
+    };
+    let launch_granularity = match j.str_field("launch_granularity")? {
+        "per-layer" => LaunchGranularity::PerLayer,
+        "per-graph" => LaunchGranularity::PerGraph,
+        other => bail!("unknown launch granularity {other:?}"),
+    };
+    Ok(DeviceSpec {
+        id: DeviceId(j.str_field("id")?.to_string()),
+        kind,
+        vendor,
+        mem_gb: f64_field(j, "mem_gb")?,
+        bandwidth_gbs: f64_field(j, "bandwidth_gbs")?,
+        peak_gflops: f64_field(j, "peak_gflops")?,
+        freq_ghz: f64_field(j, "freq_ghz")?,
+        cores: j.u64_field("cores")? as u32,
+        tdp_w: f64_field(j, "tdp_w")?,
+        idle_w: f64_field(j, "idle_w")?,
+        lambda: f64_field(j, "lambda")?,
+        mem_power_frac: f64_field(j, "mem_power_frac")?,
+        compute_util: f64_field(j, "compute_util")?,
+        t_max_c: f64_field(j, "t_max_c")?,
+        t_throttle_hw_c: f64_field(j, "t_throttle_hw_c")?,
+        t_ambient_c: f64_field(j, "t_ambient_c")?,
+        r_th_k_per_w: f64_field(j, "r_th_k_per_w")?,
+        tau_th_s: f64_field(j, "tau_th_s")?,
+        priority: j.u64_field("priority")? as u32,
+        kernel_overhead_us: f64_field(j, "kernel_overhead_us")?,
+        launch_granularity,
+        decode_bytes_factor: f64_field(j, "decode_bytes_factor")?,
+        link_gbs: f64_field(j, "link_gbs")?,
+    })
+}
+
+fn fleet_json(fleet: &Fleet) -> Json {
+    Json::arr(fleet.devices().iter().map(spec_json).collect())
+}
+
+fn fleet_from(j: &Json) -> Result<Fleet> {
+    let specs = j.as_arr()?.iter().map(spec_from).collect::<Result<Vec<_>>>()?;
+    Fleet::new(specs)
+}
+
+fn layer_cost_json(c: &LayerCost) -> Json {
+    Json::obj(vec![
+        ("flops", f64_bits(c.flops)),
+        ("bytes", f64_bits(c.bytes)),
+        ("mem_gb", f64_bits(c.mem_gb)),
+    ])
+}
+
+fn layer_cost_from(j: &Json) -> Result<LayerCost> {
+    Ok(LayerCost {
+        flops: f64_field(j, "flops")?,
+        bytes: f64_field(j, "bytes")?,
+        mem_gb: f64_field(j, "mem_gb")?,
+    })
+}
+
+fn shape_json(s: &ModelShape) -> Json {
+    Json::obj(vec![
+        ("family", Json::Str(s.family.variant().into())),
+        ("n_layers", Json::Num(s.n_layers as f64)),
+        ("embedding", layer_cost_json(&s.embedding)),
+        ("per_layer", layer_cost_json(&s.per_layer)),
+        ("lm_head", layer_cost_json(&s.lm_head)),
+        ("boundary_bytes", f64_bits(s.boundary_bytes)),
+    ])
+}
+
+fn shape_from(j: &Json) -> Result<ModelShape> {
+    Ok(ModelShape {
+        family: ModelFamily::from_str(j.str_field("family")?)?,
+        n_layers: j.usize_field("n_layers")?,
+        embedding: layer_cost_from(j.field("embedding")?)?,
+        per_layer: layer_cost_from(j.field("per_layer")?)?,
+        lm_head: layer_cost_from(j.field("lm_head")?)?,
+        boundary_bytes: f64_field(j, "boundary_bytes")?,
+    })
+}
+
+fn features_json(f: &OrchestratorFeatures) -> Json {
+    Json::obj(vec![
+        ("device_ranking", Json::Bool(f.device_ranking)),
+        ("prefill_decode_split", Json::Bool(f.prefill_decode_split)),
+        ("greedy_layer_assignment", Json::Bool(f.greedy_layer_assignment)),
+        ("pgsam_planner", Json::Bool(f.pgsam_planner)),
+        ("adaptive_sample_budget", Json::Bool(f.adaptive_sample_budget)),
+        ("safety", Json::Bool(f.safety)),
+        ("selection_cascade", Json::Bool(f.selection_cascade)),
+        ("plan_cache", Json::Bool(f.plan_cache)),
+        ("calibration", Json::Bool(f.calibration)),
+    ])
+}
+
+fn features_from(j: &Json) -> Result<OrchestratorFeatures> {
+    Ok(OrchestratorFeatures {
+        device_ranking: j.field("device_ranking")?.as_bool()?,
+        prefill_decode_split: j.field("prefill_decode_split")?.as_bool()?,
+        greedy_layer_assignment: j.field("greedy_layer_assignment")?.as_bool()?,
+        pgsam_planner: j.field("pgsam_planner")?.as_bool()?,
+        adaptive_sample_budget: j.field("adaptive_sample_budget")?.as_bool()?,
+        safety: j.field("safety")?.as_bool()?,
+        selection_cascade: j.field("selection_cascade")?.as_bool()?,
+        plan_cache: j.field("plan_cache")?.as_bool()?,
+        calibration: j.field("calibration")?.as_bool()?,
+    })
+}
+
+fn failure_kind_json(k: &FailureKind) -> Json {
+    match k {
+        FailureKind::Crash => Json::Str("crash".into()),
+        FailureKind::Hang => Json::Str("hang".into()),
+        FailureKind::ErrorRate(r) => Json::obj(vec![("error_rate", f64_bits(*r))]),
+    }
+}
+
+fn failure_kind_from(j: &Json) -> Result<FailureKind> {
+    match j {
+        Json::Str(s) => match s.as_str() {
+            "crash" => Ok(FailureKind::Crash),
+            "hang" => Ok(FailureKind::Hang),
+            other => bail!("unknown failure kind {other:?}"),
+        },
+        Json::Obj(_) => Ok(FailureKind::ErrorRate(f64_field(j, "error_rate")?)),
+        _ => bail!("failure kind must be a string or object"),
+    }
+}
+
+fn failure_plan_json(p: &FailurePlan) -> Json {
+    Json::arr(
+        p.scenarios()
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("device", Json::Str(s.device.0.clone())),
+                    ("kind", failure_kind_json(&s.kind)),
+                    ("at_s", f64_bits(s.at_s)),
+                    ("recover_after_s", opt_f64(s.recover_after_s)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn failure_plan_from(j: &Json) -> Result<FailurePlan> {
+    let scenarios = j
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(FailureScenario {
+                device: DeviceId(s.str_field("device")?.to_string()),
+                kind: failure_kind_from(s.field("kind")?)?,
+                at_s: f64_field(s, "at_s")?,
+                recover_after_s: opt_f64_from(s.field("recover_after_s")?)?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    // `new` re-sorts by at_s; the serialized order already IS that sort
+    // (it came from a constructed plan), so this is a stable identity.
+    Ok(FailurePlan::new(scenarios))
+}
+
+fn drift_plan_json(p: &DriftPlan) -> Json {
+    Json::arr(
+        p.scenarios()
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("device", Json::Str(s.device.0.clone())),
+                    ("at_s", f64_bits(s.at_s)),
+                    ("bandwidth_factor", f64_bits(s.bandwidth_factor)),
+                    ("compute_factor", f64_bits(s.compute_factor)),
+                    ("idle_factor", f64_bits(s.idle_factor)),
+                    ("noise_rel", f64_bits(s.noise_rel)),
+                ])
+            })
+            .collect(),
+    )
+}
+
+fn drift_plan_from(j: &Json) -> Result<DriftPlan> {
+    let scenarios = j
+        .as_arr()?
+        .iter()
+        .map(|s| {
+            Ok(DriftScenario {
+                device: DeviceId(s.str_field("device")?.to_string()),
+                at_s: f64_field(s, "at_s")?,
+                bandwidth_factor: f64_field(s, "bandwidth_factor")?,
+                compute_factor: f64_field(s, "compute_factor")?,
+                idle_factor: f64_field(s, "idle_factor")?,
+                noise_rel: f64_field(s, "noise_rel")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(DriftPlan::new(scenarios))
+}
+
+fn options_json(o: &SimOptions) -> Json {
+    Json::obj(vec![
+        ("mode", Json::Str(o.mode.as_str().into())),
+        ("features", features_json(&o.features)),
+        (
+            "guard",
+            Json::obj(vec![
+                ("theta", f64_bits(o.guard.theta)),
+                ("fast_monitor_at", f64_bits(o.guard.fast_monitor_at)),
+                ("slow_period_s", f64_bits(o.guard.slow_period_s)),
+                ("fast_period_s", f64_bits(o.guard.fast_period_s)),
+            ]),
+        ),
+        ("failure_plan", failure_plan_json(&o.failure_plan)),
+        ("drift_plan", drift_plan_json(&o.drift_plan)),
+        ("max_decode_devices", Json::Num(o.max_decode_devices as f64)),
+        (
+            "pin_device",
+            match &o.pin_device {
+                Some(d) => Json::Str(d.0.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("latency_sla_s", opt_f64(o.latency_sla_s)),
+        ("energy_budget_j", opt_f64(o.energy_budget_j)),
+        ("sla_sample_multiple", opt_f64(o.sla_sample_multiple)),
+        (
+            "checkpoint_every",
+            match o.checkpoint_every {
+                Some(n) => u64_json(n),
+                None => Json::Null,
+            },
+        ),
+        ("seed", u64_json(o.seed)),
+    ])
+}
+
+fn options_from(j: &Json) -> Result<SimOptions> {
+    let guard = j.field("guard")?;
+    Ok(SimOptions {
+        mode: ExecMode::from_str(j.str_field("mode")?)?,
+        features: features_from(j.field("features")?)?,
+        guard: ThermalGuard {
+            theta: f64_field(guard, "theta")?,
+            fast_monitor_at: f64_field(guard, "fast_monitor_at")?,
+            slow_period_s: f64_field(guard, "slow_period_s")?,
+            fast_period_s: f64_field(guard, "fast_period_s")?,
+        },
+        failure_plan: failure_plan_from(j.field("failure_plan")?)?,
+        drift_plan: drift_plan_from(j.field("drift_plan")?)?,
+        max_decode_devices: j.usize_field("max_decode_devices")?,
+        pin_device: match j.field("pin_device")? {
+            Json::Null => None,
+            other => Some(DeviceId(other.as_str()?.to_string())),
+        },
+        latency_sla_s: opt_f64_from(j.field("latency_sla_s")?)?,
+        energy_budget_j: opt_f64_from(j.field("energy_budget_j")?)?,
+        sla_sample_multiple: opt_f64_from(j.field("sla_sample_multiple")?)?,
+        checkpoint_every: match j.field("checkpoint_every")? {
+            Json::Null => None,
+            other => Some(u64_from(other)?),
+        },
+        seed: u64_field(j, "seed")?,
+    })
+}
+
+fn device_json(id: &DeviceId, d: &SimDevice) -> Json {
+    Json::obj(vec![
+        ("id", Json::Str(id.0.clone())),
+        ("spec", spec_json(&d.spec)),
+        (
+            "thermal",
+            Json::obj(vec![
+                ("temp_c", f64_bits(d.thermal.temp_c)),
+                ("throttle_events", u64_json(d.thermal.throttle_events)),
+                ("throttled", Json::Bool(d.thermal.throttled)),
+                ("peak_c", f64_bits(d.thermal.peak_c)),
+            ]),
+        ),
+        (
+            "health",
+            Json::obj(vec![
+                (
+                    "state",
+                    Json::Str(
+                        match d.health.state() {
+                            HealthState::Healthy => "healthy",
+                            HealthState::Degraded => "degraded",
+                            HealthState::Failed => "failed",
+                            HealthState::Recovering => "recovering",
+                        }
+                        .into(),
+                    ),
+                ),
+                ("since_s", f64_bits(d.health.since_s)),
+                ("recovery_successes", Json::Num(d.health.recovery_successes as f64)),
+                ("failures_total", u64_json(d.health.failures_total)),
+                ("version", u64_json(d.health.version)),
+            ]),
+        ),
+        (
+            "detector",
+            Json::obj(vec![
+                (
+                    "window",
+                    Json::arr(d.detector.window.iter().map(|&ok| Json::Bool(ok)).collect()),
+                ),
+                ("last_heartbeat_s", f64_bits(d.detector.last_heartbeat_s)),
+            ]),
+        ),
+        (
+            "shed",
+            Json::obj(vec![
+                ("level", Json::Num(d.shed.level as f64)),
+                ("version", u64_json(d.shed.version)),
+            ]),
+        ),
+        ("busy_s", f64_bits(d.busy_s)),
+        ("window_energy_j", f64_bits(d.window_energy_j)),
+        ("window_busy_s", f64_bits(d.window_busy_s)),
+    ])
+}
+
+fn device_from(j: &Json) -> Result<(DeviceId, SimDevice)> {
+    let id = DeviceId(j.str_field("id")?.to_string());
+    let spec = spec_from(j.field("spec")?)?;
+
+    let t = j.field("thermal")?;
+    let mut thermal = ThermalState::new(&spec);
+    thermal.temp_c = f64_field(t, "temp_c")?;
+    thermal.throttle_events = u64_field(t, "throttle_events")?;
+    thermal.throttled = t.field("throttled")?.as_bool()?;
+    thermal.peak_c = f64_field(t, "peak_c")?;
+
+    let h = j.field("health")?;
+    let mut health = DeviceHealth::new(id.clone());
+    health.state = match h.str_field("state")? {
+        "healthy" => HealthState::Healthy,
+        "degraded" => HealthState::Degraded,
+        "failed" => HealthState::Failed,
+        "recovering" => HealthState::Recovering,
+        other => bail!("unknown health state {other:?}"),
+    };
+    health.since_s = f64_field(h, "since_s")?;
+    health.recovery_successes = h.u64_field("recovery_successes")? as u32;
+    health.failures_total = u64_field(h, "failures_total")?;
+    health.version = u64_field(h, "version")?;
+
+    let det = j.field("detector")?;
+    let mut detector = FaultDetector::new(id.clone());
+    detector.window = det
+        .field("window")?
+        .as_arr()?
+        .iter()
+        .map(|b| b.as_bool())
+        .collect::<Result<VecDeque<bool>>>()?;
+    detector.last_heartbeat_s = f64_field(det, "last_heartbeat_s")?;
+
+    let sh = j.field("shed")?;
+    let mut shed = ShedTracker::default();
+    shed.level = sh.u64_field("level")? as u8;
+    shed.version = u64_field(sh, "version")?;
+
+    Ok((
+        id,
+        SimDevice {
+            spec,
+            thermal,
+            health,
+            detector,
+            shed,
+            busy_s: f64_field(j, "busy_s")?,
+            window_energy_j: f64_field(j, "window_energy_j")?,
+            window_busy_s: f64_field(j, "window_busy_s")?,
+        },
+    ))
+}
+
+fn ledger_json(l: &EnergyLedger) -> Json {
+    Json::obj(vec![
+        (
+            "per_device",
+            Json::Obj(
+                l.per_device.iter().map(|(id, &j)| (id.0.clone(), f64_bits(j))).collect(),
+            ),
+        ),
+        (
+            "per_phase",
+            Json::Obj(
+                l.per_phase.iter().map(|(&k, &j)| (k.to_string(), f64_bits(j))).collect(),
+            ),
+        ),
+        ("idle_j", f64_bits(l.idle_j)),
+        ("total_j", f64_bits(l.total_j)),
+        ("busy_seconds", f64_bits(l.busy_seconds)),
+        ("wall_seconds", f64_bits(l.wall_seconds)),
+    ])
+}
+
+fn ledger_from(j: &Json) -> Result<EnergyLedger> {
+    let per_device = j
+        .field("per_device")?
+        .as_obj()?
+        .iter()
+        .map(|(k, v)| Ok((DeviceId(k.clone()), f64_from(v)?)))
+        .collect::<Result<BTreeMap<DeviceId, f64>>>()?;
+    // Phase keys are `&'static str` in the ledger; re-intern by matching
+    // the known literals (the ledger only ever inserts these).
+    let per_phase = j
+        .field("per_phase")?
+        .as_obj()?
+        .iter()
+        .map(|(k, v)| {
+            let key: &'static str = match k.as_str() {
+                "embedding" => "embedding",
+                "prefill" => "prefill",
+                "decode" => "decode",
+                "lm_head" => "lm_head",
+                "overhead" => "overhead",
+                other => bail!("unknown ledger phase {other:?}"),
+            };
+            Ok((key, f64_from(v)?))
+        })
+        .collect::<Result<BTreeMap<&'static str, f64>>>()?;
+    Ok(EnergyLedger {
+        per_device,
+        per_phase,
+        idle_j: f64_field(j, "idle_j")?,
+        total_j: f64_field(j, "total_j")?,
+        busy_seconds: f64_field(j, "busy_seconds")?,
+        wall_seconds: f64_field(j, "wall_seconds")?,
+    })
+}
+
+fn latencies_json(l: &LatencyRecorder) -> Json {
+    // Sparse bucket encoding: [index, count] pairs for non-zero buckets
+    // (2048 mostly-zero buckets would dominate the snapshot otherwise).
+    let buckets: Vec<Json> = l
+        .buckets
+        .iter()
+        .enumerate()
+        .filter(|(_, &c)| c > 0)
+        .map(|(i, &c)| Json::arr(vec![Json::Num(i as f64), u64_json(c)]))
+        .collect();
+    Json::obj(vec![
+        ("buckets", Json::arr(buckets)),
+        ("count", u64_json(l.count)),
+        ("sum_s", f64_bits(l.sum_s)),
+        ("sum_sq_s", f64_bits(l.sum_sq_s)),
+        ("min_s", f64_bits(l.min_s)),
+        ("max_s", f64_bits(l.max_s)),
+    ])
+}
+
+fn latencies_from(j: &Json) -> Result<LatencyRecorder> {
+    let mut rec = LatencyRecorder::new();
+    for pair in j.field("buckets")?.as_arr()? {
+        let pair = pair.as_arr()?;
+        if pair.len() != 2 {
+            bail!("latency bucket pair must be [index, count]");
+        }
+        let idx = pair[0].as_usize()?;
+        if idx >= rec.buckets.len() {
+            bail!("latency bucket index {idx} out of range");
+        }
+        rec.buckets[idx] = u64_from(&pair[1])?;
+    }
+    rec.count = u64_field(j, "count")?;
+    rec.sum_s = f64_field(j, "sum_s")?;
+    rec.sum_sq_s = f64_field(j, "sum_sq_s")?;
+    rec.min_s = f64_field(j, "min_s")?;
+    rec.max_s = f64_field(j, "max_s")?;
+    Ok(rec)
+}
+
+fn cascade_json(c: &CascadeTrail) -> Json {
+    Json::obj(vec![
+        ("samples_budgeted", u64_json(c.samples_budgeted)),
+        ("samples_drawn", u64_json(c.samples_drawn)),
+        ("energy_saved_j", f64_bits(c.energy_saved_j)),
+        ("success_stops", u64_json(c.success_stops)),
+        ("futility_stops", u64_json(c.futility_stops)),
+        ("exhausted_stops", u64_json(c.exhausted_stops)),
+    ])
+}
+
+fn cascade_from(j: &Json) -> Result<CascadeTrail> {
+    Ok(CascadeTrail {
+        samples_budgeted: u64_field(j, "samples_budgeted")?,
+        samples_drawn: u64_field(j, "samples_drawn")?,
+        energy_saved_j: f64_field(j, "energy_saved_j")?,
+        success_stops: u64_field(j, "success_stops")?,
+        futility_stops: u64_field(j, "futility_stops")?,
+        exhausted_stops: u64_field(j, "exhausted_stops")?,
+    })
+}
+
+fn plan_chain_json(plan: &[DevIdx]) -> Json {
+    Json::arr(plan.iter().map(|d| Json::Num(d.0 as f64)).collect())
+}
+
+fn plan_chain_from(j: &Json) -> Result<Vec<DevIdx>> {
+    j.as_arr()?.iter().map(|v| Ok(DevIdx(v.as_u64()? as u16))).collect()
+}
+
+fn pareto_json(p: &ParetoPoint) -> Json {
+    Json::obj(vec![
+        ("energy_j", f64_bits(p.energy_j)),
+        ("latency_s", f64_bits(p.latency_s)),
+        ("underutil", f64_bits(p.underutil)),
+        ("plan", plan_chain_json(&p.plan)),
+    ])
+}
+
+fn pareto_from(j: &Json) -> Result<ParetoPoint> {
+    Ok(ParetoPoint {
+        energy_j: f64_field(j, "energy_j")?,
+        latency_s: f64_field(j, "latency_s")?,
+        underutil: f64_field(j, "underutil")?,
+        plan: plan_chain_from(j.field("plan")?)?,
+    })
+}
+
+fn planner_kind_json(k: PlannerKind) -> Json {
+    Json::Str(k.as_str().into())
+}
+
+fn planner_kind_from(j: &Json) -> Result<PlannerKind> {
+    match j.as_str()? {
+        "greedy" => Ok(PlannerKind::Greedy),
+        "pgsam" => Ok(PlannerKind::Pgsam),
+        other => bail!("unknown planner kind {other:?}"),
+    }
+}
+
+fn plan_cache_json(c: &PlanCache) -> Json {
+    // Entries in INSERTION order (the `order` vec), not map order: the
+    // FIFO eviction / warm-hint order is behavioral state. `PlanKey`
+    // serializes WITHOUT its shape component — the engine has exactly
+    // one shape, reattached on restore (`ShapeKey` is private-field and
+    // reconstructible from the shape, so persisting it would only add
+    // a second copy that could drift from the real one).
+    let entries: Vec<Json> = c
+        .order
+        .iter()
+        .map(|key| {
+            let entry = &c.entries[key];
+            Json::obj(vec![
+                (
+                    "key",
+                    Json::obj(vec![
+                        (
+                            "usable",
+                            Json::arr(key.usable.iter().map(|&b| Json::Bool(b)).collect()),
+                        ),
+                        ("calibration", u64_json(key.calibration)),
+                        ("planner", planner_kind_json(key.planner)),
+                        ("seed", u64_json(key.seed)),
+                    ]),
+                ),
+                ("plan", plan_chain_json(&entry.plan)),
+                ("energy_j", f64_bits(entry.energy_j)),
+                ("archive", Json::arr(entry.archive.iter().map(pareto_json).collect())),
+            ])
+        })
+        .collect();
+    let s = c.stats;
+    Json::obj(vec![
+        ("cap", Json::Num(c.cap as f64)),
+        (
+            "stats",
+            Json::obj(vec![
+                ("lookups", u64_json(s.lookups)),
+                ("hits", u64_json(s.hits)),
+                ("misses", u64_json(s.misses)),
+                ("insertions", u64_json(s.insertions)),
+                ("warm_seeds", u64_json(s.warm_seeds)),
+                ("evictions", u64_json(s.evictions)),
+            ]),
+        ),
+        ("entries", Json::arr(entries)),
+    ])
+}
+
+fn plan_cache_from(j: &Json, shape: &ModelShape) -> Result<PlanCache> {
+    let shape_key = ShapeKey::of(shape);
+    let mut entries = HashMap::new();
+    let mut order = Vec::new();
+    for e in j.field("entries")?.as_arr()? {
+        let k = e.field("key")?;
+        let key = PlanKey {
+            usable: k
+                .field("usable")?
+                .as_arr()?
+                .iter()
+                .map(|b| b.as_bool())
+                .collect::<Result<Vec<bool>>>()?,
+            calibration: u64_field(k, "calibration")?,
+            shape: shape_key.clone(),
+            planner: planner_kind_from(k.field("planner")?)?,
+            seed: u64_field(k, "seed")?,
+        };
+        let value = CachedPlan {
+            plan: plan_chain_from(e.field("plan")?)?,
+            energy_j: f64_field(e, "energy_j")?,
+            archive: e
+                .field("archive")?
+                .as_arr()?
+                .iter()
+                .map(pareto_from)
+                .collect::<Result<Vec<_>>>()?,
+        };
+        entries.insert(key.clone(), value);
+        order.push(key);
+    }
+    let s = j.field("stats")?;
+    Ok(PlanCache {
+        entries,
+        order,
+        cap: j.usize_field("cap")?,
+        stats: PlanCacheStats {
+            lookups: u64_field(s, "lookups")?,
+            hits: u64_field(s, "hits")?,
+            misses: u64_field(s, "misses")?,
+            insertions: u64_field(s, "insertions")?,
+            warm_seeds: u64_field(s, "warm_seeds")?,
+            evictions: u64_field(s, "evictions")?,
+        },
+    })
+}
+
+fn replan_event_json(e: &ReplanEvent) -> Json {
+    Json::obj(vec![
+        ("at_s", f64_bits(e.at_s)),
+        ("version", u64_json(e.version)),
+        ("calibration_version", u64_json(e.calibration_version)),
+        ("planner", Json::Str(e.planner.into())),
+        ("plan_energy_j", f64_bits(e.plan_energy_j)),
+        (
+            "plan_error",
+            match &e.plan_error {
+                Some(s) => Json::Str(s.clone()),
+                None => Json::Null,
+            },
+        ),
+        ("cache_hit", Json::Bool(e.cache_hit)),
+        ("warm_restart", Json::Bool(e.warm_restart)),
+        ("plan", plan_chain_json(&e.plan)),
+    ])
+}
+
+fn replan_event_from(j: &Json) -> Result<ReplanEvent> {
+    let planner: &'static str = match j.str_field("planner")? {
+        "pgsam" => "pgsam",
+        "greedy" => "greedy",
+        "none" => "none",
+        other => bail!("unknown planner label {other:?}"),
+    };
+    Ok(ReplanEvent {
+        at_s: f64_field(j, "at_s")?,
+        version: u64_field(j, "version")?,
+        calibration_version: u64_field(j, "calibration_version")?,
+        planner,
+        plan_energy_j: f64_field(j, "plan_energy_j")?,
+        plan_error: match j.field("plan_error")? {
+            Json::Null => None,
+            other => Some(other.as_str()?.to_string()),
+        },
+        cache_hit: j.field("cache_hit")?.as_bool()?,
+        warm_restart: j.field("warm_restart")?.as_bool()?,
+        plan: plan_chain_from(j.field("plan")?)?,
+    })
+}
+
+fn rls_json(r: &RatioRls) -> Json {
+    Json::obj(vec![
+        ("theta", f64_bits(r.theta)),
+        ("p", f64_bits(r.p)),
+        ("lambda", f64_bits(r.lambda)),
+        ("samples", u64_json(r.samples)),
+    ])
+}
+
+fn rls_from(j: &Json) -> Result<RatioRls> {
+    Ok(RatioRls {
+        theta: f64_field(j, "theta")?,
+        p: f64_field(j, "p")?,
+        lambda: f64_field(j, "lambda")?,
+        samples: u64_field(j, "samples")?,
+    })
+}
+
+fn ph_json(p: &PageHinkley) -> Json {
+    Json::obj(vec![
+        ("delta", f64_bits(p.delta)),
+        ("lambda", f64_bits(p.lambda)),
+        ("up", f64_bits(p.up)),
+        ("down", f64_bits(p.down)),
+        ("fires", u64_json(p.fires)),
+    ])
+}
+
+fn ph_from(j: &Json) -> Result<PageHinkley> {
+    Ok(PageHinkley {
+        delta: f64_field(j, "delta")?,
+        lambda: f64_field(j, "lambda")?,
+        up: f64_field(j, "up")?,
+        down: f64_field(j, "down")?,
+        fires: u64_field(j, "fires")?,
+    })
+}
+
+fn overlay_json(o: &CalibratedSpec) -> Json {
+    Json::obj(vec![
+        ("compute_scale", f64_bits(o.compute_scale)),
+        ("bandwidth_scale", f64_bits(o.bandwidth_scale)),
+        ("idle_scale", f64_bits(o.idle_scale)),
+        ("power_scale", f64_bits(o.power_scale)),
+        ("overhead_scale", f64_bits(o.overhead_scale)),
+    ])
+}
+
+fn overlay_from(j: &Json) -> Result<CalibratedSpec> {
+    Ok(CalibratedSpec {
+        compute_scale: f64_field(j, "compute_scale")?,
+        bandwidth_scale: f64_field(j, "bandwidth_scale")?,
+        idle_scale: f64_field(j, "idle_scale")?,
+        power_scale: f64_field(j, "power_scale")?,
+        overhead_scale: f64_field(j, "overhead_scale")?,
+    })
+}
+
+fn calibrator_json(c: &FleetCalibrator) -> Json {
+    let devices: Vec<Json> = c
+        .devices
+        .iter()
+        .map(|d| {
+            Json::obj(vec![
+                ("compute_time", rls_json(&d.compute_time)),
+                ("memory_time", rls_json(&d.memory_time)),
+                ("active_power", rls_json(&d.active_power)),
+                ("idle_power", rls_json(&d.idle_power)),
+                ("detect_compute_time", ph_json(&d.detect_compute_time)),
+                ("detect_memory_time", ph_json(&d.detect_memory_time)),
+                ("detect_power", ph_json(&d.detect_power)),
+                ("detect_idle", ph_json(&d.detect_idle)),
+                ("applied", overlay_json(&d.applied)),
+                ("version", u64_json(d.version)),
+                ("samples", u64_json(d.samples)),
+                ("err_sum", f64_bits(d.err_sum)),
+                ("err_n", u64_json(d.err_n)),
+                ("recent_err", f64_bits(d.recent_err)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![
+        (
+            "config",
+            Json::obj(vec![
+                ("rls_forgetting", f64_bits(c.config.rls_forgetting)),
+                ("ph_delta", f64_bits(c.config.ph_delta)),
+                ("ph_lambda", f64_bits(c.config.ph_lambda)),
+                ("recent_err_decay", f64_bits(c.config.recent_err_decay)),
+            ]),
+        ),
+        ("devices", Json::arr(devices)),
+    ])
+}
+
+fn calibrator_from(j: &Json) -> Result<FleetCalibrator> {
+    let cj = j.field("config")?;
+    let config = CalibrationConfig {
+        rls_forgetting: f64_field(cj, "rls_forgetting")?,
+        ph_delta: f64_field(cj, "ph_delta")?,
+        ph_lambda: f64_field(cj, "ph_lambda")?,
+        recent_err_decay: f64_field(cj, "recent_err_decay")?,
+    };
+    let devices = j
+        .field("devices")?
+        .as_arr()?
+        .iter()
+        .map(|d| {
+            Ok(DeviceCalibration {
+                compute_time: rls_from(d.field("compute_time")?)?,
+                memory_time: rls_from(d.field("memory_time")?)?,
+                active_power: rls_from(d.field("active_power")?)?,
+                idle_power: rls_from(d.field("idle_power")?)?,
+                detect_compute_time: ph_from(d.field("detect_compute_time")?)?,
+                detect_memory_time: ph_from(d.field("detect_memory_time")?)?,
+                detect_power: ph_from(d.field("detect_power")?)?,
+                detect_idle: ph_from(d.field("detect_idle")?)?,
+                applied: overlay_from(d.field("applied")?)?,
+                version: u64_field(d, "version")?,
+                samples: u64_field(d, "samples")?,
+                err_sum: f64_field(d, "err_sum")?,
+                err_n: u64_field(d, "err_n")?,
+                recent_err: f64_field(d, "recent_err")?,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(FleetCalibrator { config, devices })
+}
+
+// ---------------------------------------------------------------------
+// Engine state: named components
+// ---------------------------------------------------------------------
+
+/// Names of the engine state components, in serialization order. The
+/// desync detector digests and compares each independently.
+pub const COMPONENTS: [&str; 12] = [
+    "fleet",
+    "shape",
+    "options",
+    "devices",
+    "ledger",
+    "latencies",
+    "latency_law",
+    "clock",
+    "cascade",
+    "plan_cache",
+    "replan",
+    "calibration",
+];
+
+/// Serialize the full engine state as an object of named components.
+pub fn engine_state(e: &SimEngine) -> Json {
+    Json::obj(vec![
+        ("fleet", fleet_json(&e.fleet)),
+        ("shape", shape_json(&e.shape)),
+        ("options", options_json(&e.options)),
+        (
+            "devices",
+            Json::arr(e.devices.iter().map(|(id, d)| device_json(id, d)).collect()),
+        ),
+        ("ledger", ledger_json(&e.ledger)),
+        ("latencies", latencies_json(&e.latencies)),
+        (
+            "latency_law",
+            Json::obj(vec![
+                ("overhead_const_s", f64_bits(e.latency_law.overhead_const_s)),
+                ("overhead_log_coeff", f64_bits(e.latency_law.overhead_log_coeff)),
+            ]),
+        ),
+        (
+            "clock",
+            Json::obj(vec![
+                ("clock_s", f64_bits(e.clock_s)),
+                ("tokens", u64_json(e.tokens)),
+                (
+                    "recoveries",
+                    Json::arr(e.recoveries.iter().map(|&r| f64_bits(r)).collect()),
+                ),
+                ("failures", u64_json(e.failures)),
+                ("queries_lost", Json::Num(e.queries_lost as f64)),
+                ("samples_run_total", u64_json(e.samples_run_total)),
+                ("solved", Json::Num(e.solved as f64)),
+                ("accuracy_hits", Json::Num(e.accuracy_hits as f64)),
+                ("queries_done", Json::Num(e.queries_done as f64)),
+                ("pjrt_time_scale", f64_bits(e.pjrt_time_scale)),
+                (
+                    "noise_rng",
+                    Json::obj(vec![
+                        ("state", u64_json(e.noise_rng.state)),
+                        ("inc", u64_json(e.noise_rng.inc)),
+                    ]),
+                ),
+            ]),
+        ),
+        ("cascade", cascade_json(&e.cascade)),
+        ("plan_cache", plan_cache_json(&e.plan_cache)),
+        (
+            "replan",
+            Json::obj(vec![
+                (
+                    "last_planned_version",
+                    match e.last_planned_version {
+                        Some((v, cv)) => Json::arr(vec![u64_json(v), u64_json(cv)]),
+                        None => Json::Null,
+                    },
+                ),
+                ("replans", u64_json(e.replans)),
+                ("plan_cache_hits", u64_json(e.plan_cache_hits)),
+                (
+                    "trail",
+                    Json::arr(e.replan_trail.iter().map(replan_event_json).collect()),
+                ),
+            ]),
+        ),
+        (
+            "calibration",
+            Json::obj(vec![
+                ("calibrator", calibrator_json(&e.calibrator)),
+                ("calibrated_fleet", fleet_json(&e.calibrated_fleet)),
+                ("calibrated_version", u64_json(e.calibrated_version)),
+                ("table_rebuilds", u64_json(e.table_rebuilds)),
+            ]),
+        ),
+    ])
+}
+
+/// Rebuild a `SimEngine` from an `engine_state` document.
+pub fn engine_from_state(j: &Json) -> Result<SimEngine> {
+    let fleet = fleet_from(j.field("fleet")?).context("component fleet")?;
+    let shape = shape_from(j.field("shape")?).context("component shape")?;
+    let options = options_from(j.field("options")?).context("component options")?;
+
+    let devices = j
+        .field("devices")?
+        .as_arr()?
+        .iter()
+        .map(device_from)
+        .collect::<Result<BTreeMap<DeviceId, SimDevice>>>()
+        .context("component devices")?;
+
+    let clock = j.field("clock")?;
+    let rng = clock.field("noise_rng")?;
+    let noise_rng = Pcg {
+        state: u64_field(rng, "state")?,
+        inc: u64_field(rng, "inc")?,
+    };
+
+    let law = j.field("latency_law")?;
+    let replan = j.field("replan")?;
+    let cal = j.field("calibration")?;
+
+    Ok(SimEngine {
+        fleet,
+        shape: shape.clone(),
+        options,
+        devices,
+        ledger: ledger_from(j.field("ledger")?).context("component ledger")?,
+        latencies: latencies_from(j.field("latencies")?).context("component latencies")?,
+        latency_law: LatencyLaw {
+            overhead_const_s: f64_field(law, "overhead_const_s")?,
+            overhead_log_coeff: f64_field(law, "overhead_log_coeff")?,
+        },
+        clock_s: f64_field(clock, "clock_s")?,
+        tokens: u64_field(clock, "tokens")?,
+        recoveries: clock
+            .field("recoveries")?
+            .as_arr()?
+            .iter()
+            .map(f64_from)
+            .collect::<Result<Vec<f64>>>()?,
+        failures: u64_field(clock, "failures")?,
+        queries_lost: clock.usize_field("queries_lost")?,
+        samples_run_total: u64_field(clock, "samples_run_total")?,
+        cascade: cascade_from(j.field("cascade")?).context("component cascade")?,
+        plan_cache: plan_cache_from(j.field("plan_cache")?, &shape)
+            .context("component plan_cache")?,
+        last_planned_version: match replan.field("last_planned_version")? {
+            Json::Null => None,
+            pair => {
+                let pair = pair.as_arr()?;
+                if pair.len() != 2 {
+                    bail!("last_planned_version must be [safety, calibration]");
+                }
+                Some((u64_from(&pair[0])?, u64_from(&pair[1])?))
+            }
+        },
+        replans: u64_field(replan, "replans")?,
+        plan_cache_hits: u64_field(replan, "plan_cache_hits")?,
+        replan_trail: replan
+            .field("trail")?
+            .as_arr()?
+            .iter()
+            .map(replan_event_from)
+            .collect::<Result<Vec<_>>>()
+            .context("component replan")?,
+        calibrator: calibrator_from(cal.field("calibrator")?)
+            .context("component calibration")?,
+        calibrated_fleet: fleet_from(cal.field("calibrated_fleet")?)
+            .context("component calibration")?,
+        calibrated_version: u64_field(cal, "calibrated_version")?,
+        table_rebuilds: u64_field(cal, "table_rebuilds")?,
+        noise_rng,
+        solved: clock.usize_field("solved")?,
+        accuracy_hits: clock.usize_field("accuracy_hits")?,
+        queries_done: clock.usize_field("queries_done")?,
+        pjrt_time_scale: f64_field(clock, "pjrt_time_scale")?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f64_bits_roundtrip_edge_cases() {
+        for v in [
+            0.0,
+            -0.0,
+            1.0,
+            -1.5,
+            1e300,
+            -1e-300,
+            f64::INFINITY,
+            f64::NEG_INFINITY,
+            f64::MIN_POSITIVE,
+            std::f64::consts::PI,
+        ] {
+            let back = f64_from(&f64_bits(v)).unwrap();
+            assert_eq!(back.to_bits(), v.to_bits(), "value {v}");
+        }
+        // NaN round-trips its exact payload (equality is on bits).
+        let nan = f64::from_bits(0x7ff8_dead_beef_0001);
+        assert_eq!(f64_from(&f64_bits(nan)).unwrap().to_bits(), nan.to_bits());
+        // -0.0 keeps its sign (the Num writer's integer fast path would
+        // drop it — this is why f64s do not ride as Json::Num).
+        assert!(f64_from(&f64_bits(-0.0)).unwrap().is_sign_negative());
+    }
+
+    #[test]
+    fn u64_roundtrip_above_2_53() {
+        for v in [0u64, 1, (1 << 53) - 1, 1 << 53, u64::MAX, 0xCA11_B7A7_0000_0001] {
+            assert_eq!(u64_from(&u64_json(v)).unwrap(), v, "value {v}");
+        }
+        // Small values stay plain numbers (readable snapshots)...
+        assert!(matches!(u64_json(42), Json::Num(_)));
+        // ...big ones become exact decimal strings.
+        assert!(matches!(u64_json(u64::MAX), Json::Str(_)));
+    }
+
+    #[test]
+    fn spec_roundtrip_is_bit_exact() {
+        for spec in [
+            DeviceSpec::intel_cpu(),
+            DeviceSpec::intel_npu(),
+            DeviceSpec::nvidia_gpu(),
+            DeviceSpec::qualcomm_npu(),
+            DeviceSpec::cloud_gpu(),
+        ] {
+            let back = spec_from(&spec_json(&spec)).unwrap();
+            assert_eq!(back.id, spec.id);
+            assert_eq!(back.bandwidth_gbs.to_bits(), spec.bandwidth_gbs.to_bits());
+            assert_eq!(back.tdp_w.to_bits(), spec.tdp_w.to_bits());
+            assert_eq!(back.kernel_overhead_us.to_bits(), spec.kernel_overhead_us.to_bits());
+            assert_eq!(back.launch_granularity, spec.launch_granularity);
+            assert_eq!(back.cores, spec.cores);
+        }
+    }
+
+    #[test]
+    fn latency_recorder_roundtrip_preserves_infinity_min() {
+        // A fresh recorder's min_s is +inf — the exact case decimal
+        // encoding cannot represent.
+        let rec = LatencyRecorder::new();
+        let back = latencies_from(&latencies_json(&rec)).unwrap();
+        assert!(back.min_s.is_infinite());
+        let mut rec = LatencyRecorder::new();
+        rec.record(0.25);
+        rec.record(3.5e-4);
+        let back = latencies_from(&latencies_json(&rec)).unwrap();
+        assert_eq!(back.count(), 2);
+        assert_eq!(back.mean_s().to_bits(), rec.mean_s().to_bits());
+        assert_eq!(back.percentile_s(99.0).to_bits(), rec.percentile_s(99.0).to_bits());
+    }
+}

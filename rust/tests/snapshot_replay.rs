@@ -1,0 +1,308 @@
+//! Snapshot/replay failover substrate — integration lockdown.
+//!
+//! Contracts under test (ISSUE 6 / ROADMAP "snapshot & replay"):
+//!   * serialize → restore → re-serialize is BYTE-identical, and a
+//!     restored engine behaves bit-identically to the original from
+//!     that point on (restart determinism: no iteration-order or
+//!     hidden-state leak survives a process boundary);
+//!   * a ≥100k-token soak with injected faults, coefficient drift, and
+//!     contention noise produces a bit-identical `SimReport` + state
+//!     digest whether run straight or chopped through checkpoint/
+//!     restore cycles, on an edge and a datacenter preset;
+//!   * the crash-recovery drill matrix (kill at pinned + per-seed
+//!     fuzzed ticks, restore last checkpoint, replay the log suffix)
+//!     passes bit-exactly on EVERY fleet preset;
+//!   * the desync detector localizes a stale-coefficient replica to an
+//!     exact first-divergence tick and names the diverging component;
+//!   * a format-version-1 snapshot (no `clock.pjrt_time_scale`) is
+//!     forward-migrated on restore and lands on the same digest.
+
+use qeil::calibration::drift::{DriftPlan, DriftScenario};
+use qeil::calibration::CalibratedSpec;
+use qeil::coordinator::allocation::ModelShape;
+use qeil::devices::failure::{FailureKind, FailurePlan, FailureScenario};
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::devices::spec::DevIdx;
+use qeil::experiments::runner::default_meta;
+use qeil::json::Json;
+use qeil::sim::engine::{SimEngine, SimOptions, SimReport};
+use qeil::snapshot::desync::{detect_desync, stale_replica};
+use qeil::snapshot::drill::drill_all_presets;
+use qeil::snapshot::replay::{EventLog, ReplaySession};
+use qeil::snapshot::{engine_digest, restore_engine, snapshot_engine};
+use qeil::workload::coverage::CoverageOracle;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::{Query, WorkloadGenerator};
+
+fn shape() -> ModelShape {
+    ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2))
+}
+
+fn queries(dataset: Dataset, seed: u64, n: usize) -> Vec<Query> {
+    WorkloadGenerator::new(dataset, ModelFamily::Gpt2, seed).queries(n)
+}
+
+fn engine(preset: FleetPreset, options: SimOptions) -> SimEngine {
+    SimEngine::new(Fleet::preset(preset), shape(), options)
+}
+
+/// Serialize → string → parse → restore: the process boundary every
+/// test crosses. Nothing but bytes survives.
+fn round_trip(e: &SimEngine) -> SimEngine {
+    let text = snapshot_engine(e).to_string();
+    restore_engine(&Json::parse(&text).unwrap()).unwrap()
+}
+
+// ---------------------------------------------------------------------
+// Restart determinism
+// ---------------------------------------------------------------------
+
+#[test]
+fn restore_is_byte_identical_and_behaviorally_transparent() {
+    let qs = queries(Dataset::WikiText103, 3, 40);
+    let mut warm = engine(FleetPreset::EdgeBox, SimOptions { seed: 3, ..SimOptions::default() });
+    let oracle = CoverageOracle::new(warm.seed());
+    for q in &qs[..30] {
+        warm.step_query(q, 4, &oracle);
+    }
+
+    // Byte identity: serializing the restored engine reproduces the
+    // exact snapshot text — any nondeterministic iteration order (a
+    // HashMap somewhere in engine state) or lossy field codec would
+    // break this immediately.
+    let text = snapshot_engine(&warm).to_string();
+    let restored = restore_engine(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(snapshot_engine(&restored).to_string(), text);
+    assert_eq!(engine_digest(&restored), engine_digest(&warm));
+
+    // Behavioral transparency: from the restore point on, the restored
+    // engine and the uninterrupted one must take bit-identical steps.
+    let mut warm = warm;
+    let mut restored = restored;
+    for q in &qs[30..] {
+        let a = warm.step_query(q, 4, &oracle);
+        let b = restored.step_query(q, 4, &oracle);
+        assert_eq!(a, b);
+        assert_eq!(engine_digest(&restored), engine_digest(&warm));
+    }
+    assert_eq!(restored.finish(), warm.finish());
+}
+
+#[test]
+fn double_round_trip_is_stable() {
+    let qs = queries(Dataset::WikiText103, 9, 25);
+    let mut e = engine(FleetPreset::EdgeBox, SimOptions { seed: 9, ..SimOptions::default() });
+    let oracle = CoverageOracle::new(e.seed());
+    for q in &qs {
+        e.step_query(q, 4, &oracle);
+    }
+    let once = round_trip(&e);
+    let twice = round_trip(&once);
+    assert_eq!(
+        snapshot_engine(&twice).to_string(),
+        snapshot_engine(&e).to_string()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Logical-clock soak: straight vs chunked through restore cycles
+// ---------------------------------------------------------------------
+
+/// Faults + drift + contention noise targeted at the devices the given
+/// preset actually has; the noise scenario forces mid-stream draws from
+/// the engine's noise RNG, so a restore that mis-carried RNG state
+/// would diverge within a few ticks.
+fn soak_options(seed: u64, fault_device: &str, drift_device: &str) -> SimOptions {
+    SimOptions {
+        seed,
+        failure_plan: FailurePlan::new(vec![
+            FailureScenario {
+                device: fault_device.into(),
+                kind: FailureKind::Crash,
+                at_s: 5.0,
+                recover_after_s: Some(10.0),
+            },
+            FailureScenario {
+                device: fault_device.into(),
+                kind: FailureKind::ErrorRate(0.05),
+                at_s: 40.0,
+                recover_after_s: None,
+            },
+        ]),
+        drift_plan: DriftPlan::new(vec![
+            DriftScenario::bandwidth_derate(drift_device.into(), 10.0, 0.5),
+            DriftScenario::contention_noise(drift_device.into(), 1.0, 0.05),
+            DriftScenario::idle_creep(drift_device.into(), 25.0, 1.3),
+        ]),
+        ..SimOptions::default()
+    }
+}
+
+fn run_straight(
+    preset: FleetPreset,
+    options: SimOptions,
+    log: &EventLog,
+) -> (SimReport, u64) {
+    let mut session = ReplaySession::new(engine(preset, options), log.clone()).unwrap();
+    let report = session.run_to_end();
+    let digest = engine_digest(session.engine());
+    (report, digest)
+}
+
+/// Same run chopped at `cuts`: at each cut the live engine is dropped
+/// and the run continues from a string-round-tripped snapshot plus the
+/// log — N full checkpoint/restore cycles inside one logical clock.
+fn run_chunked(
+    preset: FleetPreset,
+    options: SimOptions,
+    log: &EventLog,
+    cuts: &[u64],
+) -> (SimReport, u64) {
+    let mut session = ReplaySession::new(engine(preset, options), log.clone()).unwrap();
+    for &cut in cuts {
+        while session.cursor() < cut && session.step() {}
+        let resumed = round_trip(session.engine());
+        assert_eq!(resumed.queries_done() as u64, session.cursor());
+        session = ReplaySession::new(resumed, log.clone()).unwrap();
+    }
+    let report = session.run_to_end();
+    let digest = engine_digest(session.engine());
+    (report, digest)
+}
+
+#[test]
+fn soak_chunked_run_is_bit_identical_to_straight_run() {
+    // Edge preset: 600 queries × 8 samples of gsm8k (longest decode
+    // budgets) under crash + error-rate faults, bandwidth derate, idle
+    // creep, and ±5% contention noise.
+    let edge_qs = queries(Dataset::Gsm8k, 17, 600);
+    let edge_log = EventLog::from_queries(&edge_qs, 8);
+    let edge_opts = soak_options(17, "gpu0", "npu0");
+    let (edge_straight, edge_digest) =
+        run_straight(FleetPreset::EdgeBox, edge_opts.clone(), &edge_log);
+    let (edge_chunked, edge_chunked_digest) =
+        run_chunked(FleetPreset::EdgeBox, edge_opts, &edge_log, &[150, 275, 430]);
+    assert_eq!(edge_chunked, edge_straight);
+    assert_eq!(edge_chunked_digest, edge_digest);
+
+    // Datacenter preset: the Cloud fleet's single device gets the
+    // drift/noise treatment but no hard crash (losing the only device
+    // would just measure the loss path, not replay fidelity).
+    let cloud_qs = queries(Dataset::Gsm8k, 23, 250);
+    let cloud_log = EventLog::from_queries(&cloud_qs, 8);
+    let cloud_opts = SimOptions {
+        seed: 23,
+        drift_plan: DriftPlan::new(vec![
+            DriftScenario::bandwidth_derate("cloud-gpu0".into(), 8.0, 0.7),
+            DriftScenario::contention_noise("cloud-gpu0".into(), 1.0, 0.05),
+        ]),
+        ..SimOptions::default()
+    };
+    let (cloud_straight, cloud_digest) =
+        run_straight(FleetPreset::Cloud, cloud_opts.clone(), &cloud_log);
+    let (cloud_chunked, cloud_chunked_digest) =
+        run_chunked(FleetPreset::Cloud, cloud_opts, &cloud_log, &[60, 190]);
+    assert_eq!(cloud_chunked, cloud_straight);
+    assert_eq!(cloud_chunked_digest, cloud_digest);
+
+    // The soak must actually exercise a long logical clock: ≥100k
+    // generated tokens across the two presets.
+    let tokens = edge_straight.tokens_generated + cloud_straight.tokens_generated;
+    assert!(tokens >= 100_000, "soak too short: {tokens} tokens");
+}
+
+// ---------------------------------------------------------------------
+// Crash-recovery drill matrix
+// ---------------------------------------------------------------------
+
+#[test]
+fn drill_matrix_passes_on_every_preset() {
+    let qs = queries(Dataset::WikiText103, 0, 40);
+    let options = SimOptions::default();
+    // Pinned kills at the first tick, mid-run, and the last tick, plus
+    // two per-seed fuzzed kill points; checkpoints every 10 ticks.
+    let outcomes = drill_all_presets(&options, &qs, 4, 10, &[1, 20, 39], 2).unwrap();
+    assert_eq!(outcomes.len(), FleetPreset::all().len() * 5);
+    for o in &outcomes {
+        assert!(
+            o.passed(),
+            "drill failed: preset {:?} kill@{} restore@{} (digest match {}, report match {})",
+            o.preset,
+            o.kill_tick,
+            o.checkpoint_tick,
+            o.digest_match,
+            o.report_match
+        );
+        assert!(o.checkpoint_tick <= o.kill_tick);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Cross-replica desync detection
+// ---------------------------------------------------------------------
+
+#[test]
+fn stale_coefficient_replica_desyncs_at_an_exact_tick() {
+    let qs = queries(Dataset::WikiText103, 5, 60);
+    let log = EventLog::from_queries(&qs, 4);
+    let options = SimOptions { seed: 5, ..SimOptions::default() };
+
+    let primary = engine(FleetPreset::EdgeBox, options.clone());
+    let stale = stale_replica(
+        &primary,
+        DevIdx(1),
+        CalibratedSpec { bandwidth_scale: 0.5, ..CalibratedSpec::identity() },
+    );
+    let report = detect_desync(primary, stale, &log, 1).unwrap();
+    let tick = report.first_divergence_tick.expect("stale replica must diverge");
+    assert!(tick >= 1, "divergence tick must be a stepped tick, got {tick}");
+    assert!(
+        report.components.contains(&"calibration"),
+        "expected the calibration component to be named, got {:?}",
+        report.components
+    );
+    assert!(!report.in_sync());
+
+    // Identical replicas stay in sync through the whole log.
+    let a = engine(FleetPreset::EdgeBox, options.clone());
+    let b = engine(FleetPreset::EdgeBox, options);
+    let clean = detect_desync(a, b, &log, 5).unwrap();
+    assert!(clean.in_sync(), "identical replicas diverged: {clean:?}");
+    assert_eq!(clean.first_divergence_tick, None);
+    assert!(clean.components.is_empty());
+}
+
+// ---------------------------------------------------------------------
+// Forward migration
+// ---------------------------------------------------------------------
+
+#[test]
+fn v1_snapshot_migrates_forward_to_the_same_digest() {
+    let qs = queries(Dataset::WikiText103, 7, 20);
+    let mut e = engine(FleetPreset::EdgeBox, SimOptions { seed: 7, ..SimOptions::default() });
+    let oracle = CoverageOracle::new(e.seed());
+    for q in &qs {
+        e.step_query(q, 4, &oracle);
+    }
+
+    // Forge the v1 form of this snapshot: no `clock.pjrt_time_scale`
+    // (the field v2 introduced; its engine default is 1.0, which is
+    // exactly what the migration hook must re-insert).
+    let mut doc = snapshot_engine(&e);
+    let Json::Obj(top) = &mut doc else { panic!("snapshot must be an object") };
+    top.insert("format_version".to_string(), Json::Num(1.0));
+    let Some(Json::Obj(engine_obj)) = top.get_mut("engine") else {
+        panic!("snapshot must carry an engine component object")
+    };
+    let Some(Json::Obj(clock)) = engine_obj.get_mut("clock") else {
+        panic!("engine state must carry a clock component")
+    };
+    assert!(clock.remove("pjrt_time_scale").is_some());
+
+    let restored = restore_engine(&doc).unwrap();
+    assert_eq!(engine_digest(&restored), engine_digest(&e));
+    assert_eq!(
+        snapshot_engine(&restored).to_string(),
+        snapshot_engine(&e).to_string()
+    );
+}

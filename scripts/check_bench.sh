@@ -7,14 +7,24 @@
 # FAILS when any gated entry (`pgsam_assignment*`, `energy_table_build*`,
 # `pgsam_warm_restart*`, `plan_cache_lookup*`, `gateway_admission*`,
 # `gateway_dispatch_wave*`, `calibration_update*`,
-# `energy_table_rebuild*` — the planner-substrate, plan-cache,
-# serving-gateway, and calibration hot paths ROADMAP.md tracks)
+# `energy_table_rebuild*`, `snapshot_save*`, `snapshot_restore*`,
+# `replay_apply*` — the planner-substrate, plan-cache, serving-gateway,
+# calibration, and snapshot/replay hot paths ROADMAP.md tracks)
 # regresses by more than MAX_RATIO (default 10x) in mean time.
 # Non-gated entries are reported but never fail the run (they are too
 # machine-sensitive for a hard gate).
 #
-# Additionally enforces three machine-robust intra-run contracts that
-# need no baseline:
+# The gate runs in two tiers:
+#   * SELF-RELATIVE (always on, no baseline needed): intra-run ratio
+#     contracts below compare entries from the SAME run against each
+#     other, so they hold on any machine — dev laptops included.
+#   * ABSOLUTE (CI-only): the cross-run diff against the committed
+#     baseline. Only meaningful on the pinned CI machine; arm it there
+#     with REQUIRE_BASELINE=1 so a missing baseline fails instead of
+#     silently bootstrapping. On other machines the baseline diff is
+#     advisory noise — the self-relative tier is the real gate.
+#
+# Self-relative (machine-robust, baseline-free) contracts:
 #   * warm-restart amortization: the pgsam_warm_restart mean must stay
 #     ≤ MAX_WARM_RATIO (default 0.5) of the cold pgsam_assignment mean;
 #   * plan-cache hit cost: plan_cache_lookup must stay under
@@ -26,8 +36,13 @@
 #     MAX_REBUILD_RATIO (default 3) of the cold energy_table_build mean
 #     — a calibration drift event must remain cheap enough to re-plan
 #     on immediately, every time it fires.
-# When a result file predates these entries (pre-PR3/PR5 artifact via
-# --no-run), the intra-run checks warn and skip; REQUIRE_BASELINE=1
+#   * checkpoint cheapness: a full snapshot round-trip (snapshot_save
+#     mean + snapshot_restore mean) must stay ≤ MAX_SNAPSHOT_RATIO
+#     (default 10) of the cold energy_table_build mean — if cutting a
+#     checkpoint rivals the planner's own substrate costs, operators
+#     will turn the checkpoint cadence off and lose crash recovery.
+# When a result file predates these entries (pre-PR3/PR5/PR6 artifact
+# via --no-run), the intra-run checks warn and skip; REQUIRE_BASELINE=1
 # (CI mode) makes missing entries fail instead.
 #
 # Usage:
@@ -37,6 +52,7 @@
 #   MAX_WARM_RATIO=0.6 scripts/check_bench.sh
 #   MAX_LOOKUP_US=100 scripts/check_bench.sh
 #   MAX_REBUILD_RATIO=4 scripts/check_bench.sh
+#   MAX_SNAPSHOT_RATIO=15 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
 #
 # First run on a machine with no committed baseline: the current result
@@ -53,6 +69,7 @@ MAX_RATIO="${MAX_RATIO:-10}"
 MAX_WARM_RATIO="${MAX_WARM_RATIO:-0.5}"
 MAX_LOOKUP_US="${MAX_LOOKUP_US:-50}"
 MAX_REBUILD_RATIO="${MAX_REBUILD_RATIO:-3}"
+MAX_SNAPSHOT_RATIO="${MAX_SNAPSHOT_RATIO:-10}"
 
 if [[ "${1:-}" != "--no-run" ]]; then
     cargo bench --bench orchestrator
@@ -63,16 +80,19 @@ if [[ ! -f "$CURRENT" ]]; then
     exit 2
 fi
 
-# Intra-run gates (baseline-free, so they also arm on the bootstrap
-# run): warm-restart amortization + plan-cache hit-cost ceiling +
-# drift-rebuild cheapness.
-python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
+# Intra-run gates (baseline-free and self-relative, so they also arm on
+# the bootstrap run and hold on any machine): warm-restart amortization
+# + plan-cache hit-cost ceiling + drift-rebuild cheapness + checkpoint
+# round-trip cheapness.
+python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" \
+    "$MAX_SNAPSHOT_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
 import json
 import sys
 
 cur_path, max_warm, max_lookup_us = sys.argv[1], float(sys.argv[2]), float(sys.argv[3])
 max_rebuild = float(sys.argv[4])
-strict = sys.argv[5] == "1"
+max_snapshot = float(sys.argv[5])
+strict = sys.argv[6] == "1"
 with open(cur_path) as f:
     doc = json.load(f)
 means = {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
@@ -123,6 +143,23 @@ else:
         print("drift-rebuild gate FAILED: a calibration drift event is no longer cheap "
               "enough to re-plan on immediately", file=sys.stderr)
         failed = True
+save = next((v for k, v in means.items() if k.startswith("snapshot_save")), None)
+restore = next((v for k, v in means.items() if k.startswith("snapshot_restore")), None)
+if save is None or restore is None or build is None:
+    # Pre-PR6 artifact: the compare-existing workflow stays usable; CI
+    # mode insists on the snapshot entries being present.
+    print("checkpoint gate: skipped (snapshot_save / snapshot_restore / "
+          "energy_table_build entries missing from this result file)", file=sys.stderr)
+    failed = failed or strict
+else:
+    ratio = (save + restore) / max(build, 1.0)
+    status = "ok" if ratio <= max_snapshot else "REGRESSION"
+    print(f"checkpoint gate: {status} save+restore {(save + restore) / 1e3:.1f} us vs "
+          f"table build {build / 1e3:.1f} us ({ratio:.2f}x, budget {max_snapshot:g}x)")
+    if ratio > max_snapshot:
+        print("checkpoint gate FAILED: a snapshot round-trip now rivals planner substrate "
+              "costs — checkpoint cadence becomes unaffordable", file=sys.stderr)
+        failed = True
 sys.exit(1 if failed else 0)
 PY
 
@@ -155,6 +192,9 @@ GATED_PREFIXES = (
     "gateway_dispatch_wave",
     "calibration_update",
     "energy_table_rebuild",
+    "snapshot_save",
+    "snapshot_restore",
+    "replay_apply",
 )
 
 

@@ -1,0 +1,40 @@
+#!/usr/bin/env bash
+# Crash-recovery drill matrix, headless.
+#
+# Builds the CLI release binary and runs `qeil replay --drill` across
+# EVERY fleet preset: for each preset an uninterrupted checkpointed
+# reference run is compared — bit-exactly, report and state digest —
+# against recoveries that kill the coordinator at pinned ticks
+# (1, mid-run, last) plus FUZZ extra per-seed fuzzed kill points, each
+# restoring from the newest on-disk-equivalent checkpoint (serialized
+# string round-trip) and replaying the event-log suffix.
+#
+# Exit status is the drill verdict: nonzero means some recovery
+# diverged from the uninterrupted run — a replay-determinism bug.
+#
+# Usage:
+#   scripts/drill.sh                  # full matrix, defaults
+#   QUERIES=60 SAMPLES=2 scripts/drill.sh
+#   SEED=7 FUZZ=4 scripts/drill.sh    # different fuzzed kill points
+#   CHECKPOINT_EVERY=10 scripts/drill.sh
+#   KILL_TICKS=3,17,58 scripts/drill.sh  # pin exact kill ticks
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+QUERIES="${QUERIES:-80}"
+SAMPLES="${SAMPLES:-4}"
+SEED="${SEED:-0}"
+FUZZ="${FUZZ:-2}"
+CHECKPOINT_EVERY="${CHECKPOINT_EVERY:-25}"
+
+cargo build --release --quiet
+
+args=(replay --drill --fleet all
+    --queries "$QUERIES" --samples "$SAMPLES" --seed "$SEED"
+    --checkpoint-every "$CHECKPOINT_EVERY" --fuzz "$FUZZ")
+if [[ -n "${KILL_TICKS:-}" ]]; then
+    args+=(--kill-ticks "$KILL_TICKS")
+fi
+
+exec ./target/release/qeil "${args[@]}"
