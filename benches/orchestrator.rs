@@ -29,6 +29,7 @@ use qeil::json::Json;
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
+use qeil::sim::des::{fuzz_order, ComponentId, Scheduler, Stage};
 use qeil::sim::engine::{SimEngine, SimOptions};
 use qeil::snapshot::{restore_engine, snapshot_engine};
 use qeil::workload::coverage::CoverageOracle;
@@ -309,6 +310,59 @@ fn main() {
     let r = b.run("replay_apply(one event, warm engine)", || {
         let mut e = warm_engine.clone();
         std::hint::black_box(e.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // DES core dispatch overhead (PR 7): one full tick cycle over an
+    // edge-box-shaped component table (4 singleton stages + 4 windows +
+    // fold) — heap pop in canonical order, fuzzed window permutation,
+    // reschedule. Pure scheduler cost, zero component work; gated so
+    // the event substrate itself never becomes the hot path.
+    let mut des = Scheduler::new();
+    des.register(ComponentId::of(Stage::Environment), 1, 0);
+    des.register(ComponentId::of(Stage::Model), 1, 0);
+    des.register(ComponentId::of(Stage::Planning), 1, 0);
+    des.register(ComponentId::of(Stage::Execution), 1, 0);
+    for i in 0..4u16 {
+        des.register(ComponentId::window(i), 1, 0);
+    }
+    des.register(ComponentId::of(Stage::Fold), 1, 0);
+    let mut des_tick = 0u64;
+    let r = b.run("des_event_dispatch(9 components, fuzzed tick)", || {
+        let mut due = des.take_due(des_tick);
+        fuzz_order(&mut due, 0x5EED, des_tick);
+        for id in &due {
+            des.reschedule(*id, des_tick);
+        }
+        std::hint::black_box(due.len());
+        des_tick += 1;
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Per-tick engine cost on the paper preset vs the metro stress
+    // preset (100 devices = 105 scheduled components per tick). The
+    // pair is gated SELF-RELATIVELY in scripts/check_bench.sh: metro's
+    // per-component cost must stay within MAX_METRO_RATIO of the
+    // edge box's (components per tick = devices + 5), pinning the
+    // scheduler's O(dispatched events) scaling at fleet scale.
+    let r = b.run("sim_step(edge-box, 4 devices, warm engine)", || {
+        std::hint::black_box(warm_engine.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    let mut metro_engine = SimEngine::new(
+        Fleet::preset(FleetPreset::Metro),
+        ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2)),
+        SimOptions::default(),
+    );
+    for q in &warm_queries[..6] {
+        metro_engine.step_query(q, 4, &oracle);
+    }
+    let r = b.run("metro_sim_step(metro, 100 devices, warm engine)", || {
+        std::hint::black_box(metro_engine.step_query(replay_query, 4, &oracle));
     });
     println!("{}", r.report());
     results.push(r);

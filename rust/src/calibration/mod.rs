@@ -393,10 +393,91 @@ impl FleetCalibrator {
     }
 }
 
+/// The slice of world state the calibration fold component owns: the
+/// estimator bank (read), the nameplate substrate (read), and the
+/// derived planning view it rebuilds (written). A borrow-struct rather
+/// than the whole engine, so the adapter cannot reach state another
+/// component is responsible for.
+pub struct CalibrationTick<'a> {
+    pub calibrator: &'a FleetCalibrator,
+    pub nameplate: &'a Fleet,
+    pub calibrated: &'a mut Fleet,
+    pub calibrated_version: &'a mut u64,
+    pub table_rebuilds: &'a mut u64,
+}
+
+/// The calibration fold as a scheduled component (`Stage::Model`): fire
+/// = fold any new calibration version into the planning substrate —
+/// rebuilding the calibrated fleet is what rebuilds the planner's
+/// `EnergyTable`, so this is the drift→replan edge of the closed loop.
+/// A divider > 1 trades staleness for rebuild cost: folds land only on
+/// the component's own ticks.
+#[derive(Debug, Clone, Default)]
+pub struct CalibrationComponent;
+
+impl<'a> crate::sim::des::Component<CalibrationTick<'a>> for CalibrationComponent {
+    fn id(&self) -> crate::sim::des::ComponentId {
+        crate::sim::des::ComponentId::of(crate::sim::des::Stage::Model)
+    }
+
+    fn step(&mut self, world: &mut CalibrationTick<'a>, _tick: u64) {
+        let v = world.calibrator.version();
+        if v != *world.calibrated_version {
+            *world.calibrated = world.calibrator.calibrated_fleet(world.nameplate);
+            *world.calibrated_version = v;
+            *world.table_rebuilds += 1;
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::devices::fleet::FleetPreset;
+    use crate::sim::des::Component;
+
+    #[test]
+    fn fold_component_rebuilds_only_on_version_change() {
+        let fleet = Fleet::preset(FleetPreset::EdgeBox);
+        let mut cal = FleetCalibrator::new(fleet.len());
+        let mut calibrated = fleet.clone();
+        let mut version = 0u64;
+        let mut rebuilds = 0u64;
+        let mut comp = CalibrationComponent;
+
+        let mut world = CalibrationTick {
+            calibrator: &cal,
+            nameplate: &fleet,
+            calibrated: &mut calibrated,
+            calibrated_version: &mut version,
+            table_rebuilds: &mut rebuilds,
+        };
+        comp.step(&mut world, 0);
+        comp.step(&mut world, 1);
+        assert_eq!(rebuilds, 0, "identity estimators must not rebuild");
+
+        cal.force_overlay(
+            DevIdx(1),
+            CalibratedSpec { bandwidth_scale: 0.5, ..CalibratedSpec::identity() },
+        );
+        let mut world = CalibrationTick {
+            calibrator: &cal,
+            nameplate: &fleet,
+            calibrated: &mut calibrated,
+            calibrated_version: &mut version,
+            table_rebuilds: &mut rebuilds,
+        };
+        comp.step(&mut world, 2);
+        comp.step(&mut world, 3);
+        assert_eq!(rebuilds, 1, "one rebuild per observed version");
+        assert_eq!(version, 1);
+        assert!(
+            (calibrated.devices()[1].bandwidth_gbs
+                - fleet.devices()[1].bandwidth_gbs * 0.5)
+                .abs()
+                < 1e-9
+        );
+    }
 
     #[test]
     fn identity_overlay_applies_bit_exactly() {

@@ -73,6 +73,104 @@ impl FailurePlan {
     }
 }
 
+/// What a schedule entry does when it fires.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FailureAction {
+    Fail,
+    Recover,
+}
+
+/// One expanded transition: at `at_s`, `device` fails or recovers.
+#[derive(Debug, Clone)]
+pub struct FailureEvent {
+    pub device: DeviceId,
+    pub action: FailureAction,
+    /// The originating scenario's kind (detection latency depends on it).
+    pub kind: FailureKind,
+    pub at_s: f64,
+}
+
+/// A [`FailurePlan`] expanded into a time-sorted transition schedule
+/// consumed by a cursor.
+///
+/// The legacy engine rescanned the whole plan every tick and derived
+/// each device's state from `clock >= at_s && clock < at_s + recover`;
+/// a fail-and-recover that both land inside one wall interval was
+/// collapsed into "nothing happened" because the rescan only saw the
+/// final state. Expanding each hard scenario into explicit
+/// `Fail(at_s)` / `Recover(at_s + r)` events makes every transition
+/// fire exactly once, in order, however coarse the interval — and
+/// turns the injector into a natural DES component whose only per-tick
+/// work is a cursor comparison.
+#[derive(Debug, Clone, Default)]
+pub struct FailureSchedule {
+    events: Vec<FailureEvent>,
+    cursor: usize,
+}
+
+impl FailureSchedule {
+    /// Expand the hard (Crash/Hang) scenarios of `plan`. Soft
+    /// error-rate scenarios stay with the detector path and are not
+    /// scheduled here. The sort is stable, so events sharing an `at_s`
+    /// keep the plan's scenario order.
+    pub fn from_plan(plan: &FailurePlan) -> Self {
+        let mut events = Vec::new();
+        for s in plan.scenarios() {
+            if !matches!(s.kind, FailureKind::Crash | FailureKind::Hang) {
+                continue;
+            }
+            events.push(FailureEvent {
+                device: s.device.clone(),
+                action: FailureAction::Fail,
+                kind: s.kind,
+                at_s: s.at_s,
+            });
+            if let Some(r) = s.recover_after_s {
+                events.push(FailureEvent {
+                    device: s.device.clone(),
+                    action: FailureAction::Recover,
+                    kind: s.kind,
+                    at_s: s.at_s + r,
+                });
+            }
+        }
+        events.sort_by(|a, b| a.at_s.total_cmp(&b.at_s));
+        FailureSchedule { events, cursor: 0 }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Index of the next unapplied event.
+    pub fn cursor(&self) -> usize {
+        self.cursor
+    }
+
+    /// Restore the cursor (snapshot load). Clamped to the schedule.
+    pub fn set_cursor(&mut self, cursor: usize) {
+        self.cursor = cursor.min(self.events.len());
+    }
+
+    /// Time of the next unapplied event, if any.
+    pub fn next_at_s(&self) -> Option<f64> {
+        self.events.get(self.cursor).map(|e| e.at_s)
+    }
+
+    /// Consume and return every event due at or before `clock_s`.
+    pub fn take_due(&mut self, clock_s: f64) -> &[FailureEvent] {
+        let start = self.cursor;
+        while self.cursor < self.events.len() && self.events[self.cursor].at_s <= clock_s {
+            self.cursor += 1;
+        }
+        &self.events[start..self.cursor]
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -128,6 +226,86 @@ mod tests {
             recover_after_s: None,
         }]);
         assert!(!p.hard_failed_at(&"gpu0".into(), 1.0));
+    }
+
+    #[test]
+    fn schedule_expands_hard_scenarios_in_time_order() {
+        let p = FailurePlan::new(vec![
+            FailureScenario {
+                device: "npu0".into(),
+                kind: FailureKind::Crash,
+                at_s: 10.0,
+                recover_after_s: Some(5.0),
+            },
+            FailureScenario {
+                device: "gpu0".into(),
+                kind: FailureKind::ErrorRate(0.05),
+                at_s: 1.0,
+                recover_after_s: None,
+            },
+            FailureScenario {
+                device: "cpu0".into(),
+                kind: FailureKind::Hang,
+                at_s: 12.0,
+                recover_after_s: None,
+            },
+        ]);
+        let s = FailureSchedule::from_plan(&p);
+        // ErrorRate is soft: not scheduled. Crash expands to two events.
+        assert_eq!(s.len(), 3);
+        let times: Vec<f64> = (0..s.len()).map(|i| {
+            let mut probe = s.clone();
+            probe.set_cursor(i);
+            probe.next_at_s().unwrap()
+        }).collect();
+        assert_eq!(times, vec![10.0, 12.0, 15.0]);
+    }
+
+    #[test]
+    fn schedule_ties_keep_scenario_order() {
+        let p = FailurePlan::new(vec![
+            FailureScenario { device: "a".into(), kind: FailureKind::Crash, at_s: 0.0, recover_after_s: None },
+            FailureScenario { device: "b".into(), kind: FailureKind::Crash, at_s: 0.0, recover_after_s: None },
+            FailureScenario { device: "c".into(), kind: FailureKind::Crash, at_s: 0.0, recover_after_s: None },
+        ]);
+        let mut s = FailureSchedule::from_plan(&p);
+        let devs: Vec<DeviceId> = s.take_due(0.0).iter().map(|e| e.device.clone()).collect();
+        assert_eq!(devs, vec!["a".into(), "b".into(), "c".into()]);
+    }
+
+    #[test]
+    fn cursor_consumes_each_event_exactly_once() {
+        let p = plan(); // npu0 crash@10 recover@15, gpu0 hang@20
+        let mut s = FailureSchedule::from_plan(&p);
+        assert_eq!(s.next_at_s(), Some(10.0));
+        assert!(s.take_due(9.9).is_empty());
+
+        // A coarse interval that jumps clean over fail AND recover
+        // still surfaces both transitions, in order.
+        let due: Vec<(DeviceId, FailureAction)> = s
+            .take_due(16.0)
+            .iter()
+            .map(|e| (e.device.clone(), e.action))
+            .collect();
+        assert_eq!(
+            due,
+            vec![
+                ("npu0".into(), FailureAction::Fail),
+                ("npu0".into(), FailureAction::Recover),
+            ]
+        );
+        assert_eq!(s.cursor(), 2);
+        assert!(s.take_due(16.0).is_empty(), "events fire exactly once");
+        assert_eq!(s.take_due(1e9).len(), 1); // gpu0 hang
+        assert_eq!(s.next_at_s(), None);
+    }
+
+    #[test]
+    fn cursor_restore_clamps() {
+        let mut s = FailureSchedule::from_plan(&plan());
+        s.set_cursor(999);
+        assert_eq!(s.cursor(), 3);
+        assert!(s.take_due(1e9).is_empty());
     }
 
     #[test]

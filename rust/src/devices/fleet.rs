@@ -19,6 +19,13 @@ pub enum FleetPreset {
     Cloud,
     /// Multi-vendor stress preset (adds a Qualcomm NPU).
     MultiVendor,
+    /// Fleet-scale stress preset: 25 edge boxes (100 devices) for the
+    /// metro-area discrete-event drills. Deliberately NOT in [`all`]:
+    /// the experiment rungs and the drill matrix iterate the paper's
+    /// presets; metro is opted into by name (`--fleet metro`).
+    ///
+    /// [`all`]: FleetPreset::all
+    Metro,
 }
 
 impl FleetPreset {
@@ -43,6 +50,7 @@ impl FleetPreset {
             FleetPreset::IgpuOnly => "igpu-only",
             FleetPreset::Cloud => "cloud",
             FleetPreset::MultiVendor => "multi-vendor",
+            FleetPreset::Metro => "metro",
         }
     }
 
@@ -55,6 +63,7 @@ impl FleetPreset {
             "igpu-only" => FleetPreset::IgpuOnly,
             "cloud" => FleetPreset::Cloud,
             "multi-vendor" => FleetPreset::MultiVendor,
+            "metro" => FleetPreset::Metro,
             other => bail!("unknown fleet preset {other:?}"),
         })
     }
@@ -107,6 +116,21 @@ impl Fleet {
                 DeviceSpec::nvidia_gpu(),
                 DeviceSpec::qualcomm_npu(),
             ],
+            FleetPreset::Metro => (0..25)
+                .flat_map(|i| {
+                    [
+                        ("cpu", DeviceSpec::intel_cpu()),
+                        ("npu", DeviceSpec::intel_npu()),
+                        ("igpu", DeviceSpec::intel_igpu()),
+                        ("gpu", DeviceSpec::nvidia_gpu()),
+                    ]
+                    .into_iter()
+                    .map(move |(prefix, mut spec)| {
+                        spec.id = DeviceId(format!("{prefix}{i}"));
+                        spec
+                    })
+                })
+                .collect(),
         };
         Fleet::new(devices).expect("presets are valid")
     }
@@ -202,7 +226,20 @@ mod tests {
         for p in FleetPreset::all() {
             assert_eq!(FleetPreset::from_str(p.as_str()).unwrap(), p);
         }
+        assert_eq!(FleetPreset::from_str("metro").unwrap(), FleetPreset::Metro);
         assert!(FleetPreset::from_str("bogus").is_err());
+    }
+
+    #[test]
+    fn metro_is_fleet_scale_and_opt_in() {
+        let f = Fleet::preset(FleetPreset::Metro);
+        assert_eq!(f.len(), 100, "25 edge boxes of 4 devices");
+        // Unique ids, interning intact at fleet scale.
+        assert_eq!(f.idx_of(&"gpu24".into()).map(|i| i.as_usize()), Some(99));
+        assert!(f.get(&"cpu0".into()).is_some());
+        assert!(f.get(&"cpu25".into()).is_none());
+        // The paper-preset matrix stays 7-wide: metro is by-name only.
+        assert!(!FleetPreset::all().contains(&FleetPreset::Metro));
     }
 
     #[test]

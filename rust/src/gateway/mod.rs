@@ -436,87 +436,126 @@ impl Gateway {
         self.clock_s += dt_s;
     }
 
-    /// Run a full arrival-stamped trace (must be arrival-ordered) to
-    /// completion: every admitted request is either completed or
-    /// expired when this returns.
-    pub fn run_trace(&mut self, trace: &[GatewayRequest]) -> GatewayReport {
-        let mut next = 0usize;
+    /// One discrete-event turn of the serving loop: refresh telemetry,
+    /// (re-)derive lane routes, submit every arrival at or before the
+    /// clock, expire stale queue entries, bind waves while lanes are
+    /// free, then advance the clock to the next event (arrival,
+    /// lane-free instant, or — with no routable lane — the earliest
+    /// queued deadline). Returns `false` when no future event exists:
+    /// the trace is exhausted and every admitted request is completed
+    /// or expired. `next` is the caller-held trace cursor.
+    pub fn drive_once(&mut self, trace: &[GatewayRequest], next: &mut usize) -> bool {
+        self.refresh_snapshot();
+        self.scheduler.ensure_routes(
+            &self.fleet,
+            &self.shape,
+            &self.snap,
+            self.config.max_decode_devices,
+            self.clock_s,
+        );
+        while *next < trace.len() && trace[*next].arrival_s <= self.clock_s {
+            let req = trace[*next].clone();
+            *next += 1;
+            self.submit(req);
+        }
+        for req in self.queues.drop_expired(self.clock_s) {
+            self.classes[req.class.index()].expired += 1;
+        }
+        // Continuous wave batching: keep binding waves while lanes
+        // are free and backlog exists.
         loop {
-            self.refresh_snapshot();
-            self.scheduler.ensure_routes(
-                &self.fleet,
-                &self.shape,
-                &self.snap,
-                self.config.max_decode_devices,
-                self.clock_s,
-            );
-            while next < trace.len() && trace[next].arrival_s <= self.clock_s {
-                let req = trace[next].clone();
-                next += 1;
-                self.submit(req);
-            }
-            for req in self.queues.drop_expired(self.clock_s) {
-                self.classes[req.class.index()].expired += 1;
-            }
-            // Continuous wave batching: keep binding waves while lanes
-            // are free and backlog exists.
-            loop {
-                let free = self.scheduler.free_lane_count(self.clock_s);
-                if free == 0 || self.queues.total() == 0 {
-                    break;
-                }
-                let width = free * self.config.wave_per_lane.max(1);
-                let wave = self.scheduler.form_wave(&mut self.queues, width);
-                if wave.is_empty() {
-                    break;
-                }
-                let records = self.scheduler.dispatch(&wave, self.clock_s, &self.snap);
-                for rec in &records {
-                    // NOTE: the gateway driver prices dispatches from
-                    // its own snapshot, so it has no independent
-                    // measurement to calibrate against — the serve path
-                    // (server/service.rs) is where real executor
-                    // residuals feed TelemetryProbe::record_measured.
-                    self.probe.record_busy(rec.lane, rec.service_s, rec.energy_j);
-                    let stats = &mut self.classes[rec.request.class.index()];
-                    stats.completed += 1;
-                    if rec.deadline_hit {
-                        stats.deadline_hits += 1;
-                    }
-                }
-            }
-            // Next event: arrival, lane-free instant, or (with no
-            // routable lane) the earliest queued deadline — whichever
-            // comes first. All are strictly in the future, so the loop
-            // always advances.
-            let mut next_t = f64::INFINITY;
-            if let Some(req) = trace.get(next) {
-                next_t = next_t.min(req.arrival_s);
-            }
-            if self.queues.total() > 0 {
-                match self.scheduler.next_free_after(self.clock_s) {
-                    Some(t) => next_t = next_t.min(t),
-                    None => {
-                        if let Some(deadline) = self.queues.earliest_deadline_s() {
-                            next_t = next_t.min(deadline.max(self.clock_s + 1e-9));
-                        }
-                    }
-                }
-            }
-            if !next_t.is_finite() {
+            let free = self.scheduler.free_lane_count(self.clock_s);
+            if free == 0 || self.queues.total() == 0 {
                 break;
             }
-            let dt = next_t - self.clock_s;
-            self.advance(dt);
+            let width = free * self.config.wave_per_lane.max(1);
+            let wave = self.scheduler.form_wave(&mut self.queues, width);
+            if wave.is_empty() {
+                break;
+            }
+            let records = self.scheduler.dispatch(&wave, self.clock_s, &self.snap);
+            for rec in &records {
+                // NOTE: the gateway driver prices dispatches from
+                // its own snapshot, so it has no independent
+                // measurement to calibrate against — the serve path
+                // (server/service.rs) is where real executor
+                // residuals feed TelemetryProbe::record_measured.
+                self.probe.record_busy(rec.lane, rec.service_s, rec.energy_j);
+                let stats = &mut self.classes[rec.request.class.index()];
+                stats.completed += 1;
+                if rec.deadline_hit {
+                    stats.deadline_hits += 1;
+                }
+            }
         }
-        // Cool-down: integrate idle/thermal out to the last committed
-        // lane work so the energy ledger covers every dispatch.
+        // Next event: arrival, lane-free instant, or (with no
+        // routable lane) the earliest queued deadline — whichever
+        // comes first. All are strictly in the future, so the loop
+        // always advances.
+        let mut next_t = f64::INFINITY;
+        if let Some(req) = trace.get(*next) {
+            next_t = next_t.min(req.arrival_s);
+        }
+        if self.queues.total() > 0 {
+            match self.scheduler.next_free_after(self.clock_s) {
+                Some(t) => next_t = next_t.min(t),
+                None => {
+                    if let Some(deadline) = self.queues.earliest_deadline_s() {
+                        next_t = next_t.min(deadline.max(self.clock_s + 1e-9));
+                    }
+                }
+            }
+        }
+        if !next_t.is_finite() {
+            return false;
+        }
+        let dt = next_t - self.clock_s;
+        self.advance(dt);
+        true
+    }
+
+    /// Cool-down: integrate idle/thermal out to the last committed
+    /// lane work so the energy ledger covers every dispatch.
+    fn cool_down(&mut self) {
         if let Some(last) = self.scheduler.last_busy_s() {
             if last > self.clock_s {
                 let dt = last - self.clock_s;
                 self.advance(dt);
             }
         }
+    }
+
+    /// Run a full arrival-stamped trace (must be arrival-ordered) to
+    /// completion: every admitted request is either completed or
+    /// expired when this returns.
+    pub fn run_trace(&mut self, trace: &[GatewayRequest]) -> GatewayReport {
+        let mut next = 0usize;
+        while self.drive_once(trace, &mut next) {}
+        self.cool_down();
+        self.report()
+    }
+
+    /// [`Gateway::run_trace`] dispatched as a scheduled component off
+    /// the DES core instead of a hand-rolled loop: a [`Scheduler`]
+    /// carries one [`GatewayComponent`] at `(Stage::Execution, 0)` and
+    /// pops it each tick until the trace drains. Must be report- and
+    /// digest-identical to the direct loop (pinned by the gateway
+    /// property tests) — the serving front and the sim engine now run
+    /// on the same event substrate.
+    pub fn run_trace_des(&mut self, trace: &[GatewayRequest]) -> GatewayReport {
+        use crate::sim::des::{Component, Scheduler};
+        let mut scheduler = Scheduler::new();
+        let mut component = GatewayComponent::new();
+        scheduler.register(component.id(), 1, 0);
+        let mut tick = 0u64;
+        while !component.done() {
+            for id in scheduler.take_due(tick) {
+                component.step(&mut GatewayTick { gateway: self, trace }, tick);
+                scheduler.reschedule(id, tick);
+            }
+            tick += 1;
+        }
+        self.cool_down();
         self.report()
     }
 
@@ -532,6 +571,57 @@ impl Gateway {
             energy_j: self.probe.total_energy_j(),
             idle_energy_j: self.probe.idle_energy_j(),
             lane_busy_s: self.probe.busy_seconds(),
+        }
+    }
+}
+
+/// The slice of world state one gateway serving turn touches: the
+/// gateway itself plus the (immutable) arrival-stamped trace.
+pub struct GatewayTick<'a> {
+    pub gateway: &'a mut Gateway,
+    pub trace: &'a [GatewayRequest],
+}
+
+/// The serving loop as a scheduled component: each activation is one
+/// [`Gateway::drive_once`] turn. The component owns the trace cursor
+/// and latches `done` when the turn reports no future event, so the
+/// driving scheduler can stop popping it. Lives at
+/// `(Stage::Execution, 0)` — the same slot the sim engine's query
+/// executor occupies — because a serving turn both consumes arrivals
+/// and advances the wall clock.
+#[derive(Debug, Clone, Default)]
+pub struct GatewayComponent {
+    next: usize,
+    done: bool,
+}
+
+impl GatewayComponent {
+    pub fn new() -> GatewayComponent {
+        GatewayComponent::default()
+    }
+
+    /// Trace drained and backlog settled: nothing left to schedule.
+    pub fn done(&self) -> bool {
+        self.done
+    }
+
+    /// Trace cursor (requests submitted so far).
+    pub fn cursor(&self) -> usize {
+        self.next
+    }
+}
+
+impl<'a> crate::sim::des::Component<GatewayTick<'a>> for GatewayComponent {
+    fn id(&self) -> crate::sim::des::ComponentId {
+        crate::sim::des::ComponentId::of(crate::sim::des::Stage::Execution)
+    }
+
+    fn step(&mut self, world: &mut GatewayTick<'a>, _tick: u64) {
+        if self.done {
+            return;
+        }
+        if !world.gateway.drive_once(world.trace, &mut self.next) {
+            self.done = true;
         }
     }
 }
@@ -592,6 +682,20 @@ mod tests {
         // Pinned-class traces pin every request.
         let batch_only = gw.overload_trace(9, 1.0, Some(SlaClass::Batch));
         assert!(batch_only.iter().all(|r| r.class == SlaClass::Batch));
+    }
+
+    #[test]
+    fn des_dispatch_is_identical_to_the_direct_loop() {
+        let config = GatewayConfig { seed: 42, ..GatewayConfig::default() };
+        let mut direct = Gateway::new(config.clone());
+        let trace = direct.overload_trace(60, 2.5, None);
+        let direct_report = direct.run_trace(&trace);
+
+        let mut des = Gateway::new(config);
+        let des_report = des.run_trace_des(&trace);
+        assert_eq!(des_report, direct_report);
+        assert_eq!(des.state_digest(), direct.state_digest());
+        assert_eq!(des.state_capture().to_string(), direct.state_capture().to_string());
     }
 
     #[test]

@@ -7,10 +7,15 @@
 //! as explicit expiry drops at wave-formation time so a hopeless request
 //! never occupies a lane.
 //!
-//! Ordering keys are `(deadline bits, request id)` — deadlines are
-//! non-negative finite seconds, for which the IEEE-754 bit pattern is
-//! order-preserving, so the EDF order is total and bit-deterministic
-//! without any float comparison edge cases.
+//! Ordering keys are `(total-order deadline bits, request id)`. Raw
+//! IEEE-754 bit patterns only sort correctly for non-negative floats —
+//! negative deadlines (a request already past the logical-clock origin)
+//! would sort inverted and `-0.0` would land after `+0.0`. The key uses
+//! the sign-flipped total-order encoding (the same transform
+//! `snapshot/serialize.rs` relies on for bit-exact float round-trips):
+//! monotone over the whole finite range plus infinities, so the EDF
+//! order is total and bit-deterministic without any float comparison
+//! edge cases.
 
 use std::collections::BTreeMap;
 
@@ -96,7 +101,21 @@ pub struct GatewayRequest {
 
 impl GatewayRequest {
     fn edf_key(&self) -> (u64, u64) {
-        (self.deadline_s.to_bits(), self.id)
+        (f64_order_bits(self.deadline_s), self.id)
+    }
+}
+
+/// Map an `f64` to a `u64` whose unsigned order matches the float's
+/// numeric total order: positive floats get the sign bit set (shifting
+/// them above every negative), negative floats have all bits flipped
+/// (reversing their inverted bit order). `-0.0` sorts immediately
+/// before `+0.0`, and `-inf`/`+inf` bound the range.
+fn f64_order_bits(v: f64) -> u64 {
+    let bits = v.to_bits();
+    if bits >> 63 == 1 {
+        !bits
+    } else {
+        bits ^ (1 << 63)
     }
 }
 
@@ -304,6 +323,79 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn negative_deadlines_pop_before_positive_ones() {
+        // Raw `to_bits` ordering would sort every negative deadline
+        // AFTER every positive one (sign bit on top) and invert the
+        // order among negatives. The total-order encoding must not.
+        let mut q = SlaQueues::new(16);
+        for (id, d) in [(0u64, 3.0), (1, -1.0), (2, -7.5), (3, 0.5)] {
+            q.enqueue(req(id, 0, SlaClass::Standard, d)).unwrap();
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_edf(SlaClass::Standard, 0))
+            .map(|r| r.id)
+            .collect();
+        assert_eq!(order, vec![2, 1, 3, 0]);
+    }
+
+    #[test]
+    fn negative_zero_sorts_with_positive_zero_not_after_everything() {
+        // `(-0.0).to_bits()` is 1 << 63 — under the raw encoding a
+        // -0.0 deadline sorted after every finite positive deadline.
+        let mut q = SlaQueues::new(16);
+        q.enqueue(req(0, 0, SlaClass::Interactive, 5.0)).unwrap();
+        q.enqueue(req(1, 0, SlaClass::Interactive, -0.0)).unwrap();
+        q.enqueue(req(2, 0, SlaClass::Interactive, 0.0)).unwrap();
+        let order: Vec<u64> = std::iter::from_fn(|| q.pop_edf(SlaClass::Interactive, 0))
+            .map(|r| r.id)
+            .collect();
+        // -0.0 immediately before +0.0, both before 5.0.
+        assert_eq!(order, vec![1, 2, 0]);
+    }
+
+    #[test]
+    fn mixed_sign_deadlines_order_numerically() {
+        let deadlines =
+            [-f64::INFINITY, -1e9, -2.5, -0.0, 0.0, 1e-12, 1.0, 1e9, f64::INFINITY];
+        let mut q = SlaQueues::new(32);
+        // Enqueue in reverse so insertion order cannot mask a broken key.
+        for (i, d) in deadlines.iter().rev().enumerate() {
+            q.enqueue(req(i as u64, 0, SlaClass::Batch, *d)).unwrap();
+        }
+        let popped: Vec<f64> = std::iter::from_fn(|| q.pop_edf(SlaClass::Batch, 0))
+            .map(|r| r.deadline_s)
+            .collect();
+        let bits: Vec<u64> = popped.iter().map(|d| f64_order_bits(*d)).collect();
+        assert!(bits.windows(2).all(|w| w[0] <= w[1]), "not sorted: {popped:?}");
+        assert_eq!(popped.len(), deadlines.len());
+        assert_eq!(popped[0], -f64::INFINITY);
+        assert_eq!(popped[popped.len() - 1], f64::INFINITY);
+    }
+
+    #[test]
+    fn queue_state_is_independent_of_same_tick_arrival_order() {
+        // EDF keys are unique (id tie-break), so any permutation of the
+        // same arrival set must build the identical queue — the
+        // invariant the fuzzed-schedule drills lean on.
+        let base = [(0u64, 2.0), (1, -1.0), (2, 2.0), (3, 0.0), (4, -0.0)];
+        let perms: [[usize; 5]; 3] = [[0, 1, 2, 3, 4], [4, 3, 2, 1, 0], [2, 0, 4, 1, 3]];
+        let mut orders = Vec::new();
+        for perm in perms {
+            let mut q = SlaQueues::new(16);
+            for &i in &perm {
+                let (id, d) = base[i];
+                q.enqueue(req(id, 0, SlaClass::Standard, d)).unwrap();
+            }
+            let order: Vec<u64> = std::iter::from_fn(|| q.pop_edf(SlaClass::Standard, 0))
+                .map(|r| r.id)
+                .collect();
+            orders.push(order);
+        }
+        assert_eq!(orders[0], orders[1]);
+        assert_eq!(orders[1], orders[2]);
+        assert_eq!(orders[0], vec![1, 4, 3, 0, 2]);
     }
 
     #[test]

@@ -116,9 +116,69 @@ impl ThermalGuard {
     }
 }
 
+/// The slice of world state one device's guard observation touches: a
+/// temperature reading in, a shedding-band observation out.
+pub struct GuardTick<'a> {
+    pub spec: &'a DeviceSpec,
+    pub temp_c: f64,
+    pub shed: &'a mut ShedTracker,
+}
+
+/// One device's thermal-guard observation as a scheduled component
+/// (`Stage::Window`, indexed by the device's sorted-id position): fire
+/// = evaluate the guard at the current junction temperature and record
+/// the quantized band (a crossing bumps the safety version the plan
+/// cache keys on). Band observations are per-device state only, so
+/// same-tick observations across devices commute — the fuzzed schedule
+/// mode exercises exactly that claim.
+#[derive(Debug, Clone)]
+pub struct GuardComponent {
+    pub guard: ThermalGuard,
+    index: u16,
+}
+
+impl GuardComponent {
+    pub fn new(guard: ThermalGuard, index: u16) -> GuardComponent {
+        GuardComponent { guard, index }
+    }
+}
+
+impl<'a> crate::sim::des::Component<GuardTick<'a>> for GuardComponent {
+    fn id(&self) -> crate::sim::des::ComponentId {
+        crate::sim::des::ComponentId::window(self.index)
+    }
+
+    fn step(&mut self, world: &mut GuardTick<'a>, _tick: u64) {
+        let decision = self.guard.evaluate(world.spec, world.temp_c);
+        world.shed.observe(decision.shed_level());
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn guard_component_observes_the_band() {
+        use crate::sim::des::Component;
+        let spec = DeviceSpec::nvidia_gpu();
+        let mut shed = ShedTracker::default();
+        let mut comp = GuardComponent::new(ThermalGuard::default(), 2);
+        assert_eq!(comp.id(), crate::sim::des::ComponentId::window(2));
+
+        let hot = (comp.guard.guard_temp_c(&spec) + spec.t_max_c) / 2.0;
+        comp.step(&mut GuardTick { spec: &spec, temp_c: hot, shed: &mut shed }, 0);
+        let expected = comp.guard.evaluate(&spec, hot).shed_level();
+        assert_eq!(shed.level(), expected);
+        assert_eq!(shed.version(), 1, "crossing into a shed band bumps the version");
+
+        comp.step(&mut GuardTick { spec: &spec, temp_c: hot, shed: &mut shed }, 1);
+        assert_eq!(shed.version(), 1, "same band: no transition");
+
+        comp.step(&mut GuardTick { spec: &spec, temp_c: 40.0, shed: &mut shed }, 2);
+        assert_eq!(shed.level(), 0);
+        assert_eq!(shed.version(), 2);
+    }
 
     #[test]
     fn below_guard_no_shedding() {

@@ -1,0 +1,140 @@
+//! Component identity and the adapter trait.
+
+/// Same-tick dispatch stage — the coarse half of the tie-break law.
+///
+/// The order is semantic, not cosmetic: failures land before planning
+/// so a replan sees the post-transition fleet exactly once; planning
+/// lands before execution so no query runs on a stale plan; window
+/// integration follows execution because it consumes the wall interval
+/// the executor advanced; the fold runs last because it accumulates
+/// scalar state (non-commutative f64 sums) in canonical device order
+/// regardless of how the window components were interleaved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Stage {
+    /// Environment events: scheduled failures / recoveries.
+    Environment,
+    /// Model maintenance: calibration overlay folds.
+    Model,
+    /// Planning: event-driven replan staleness check.
+    Planning,
+    /// Query execution (advances the wall clock).
+    Execution,
+    /// Per-device window integration (thermal, idle energy, health).
+    Window,
+    /// Cross-device ledger fold (order-sensitive f64 accumulation).
+    Fold,
+}
+
+impl Stage {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Stage::Environment => "environment",
+            Stage::Model => "model",
+            Stage::Planning => "planning",
+            Stage::Execution => "execution",
+            Stage::Window => "window",
+            Stage::Fold => "fold",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<Stage> {
+        Some(match s {
+            "environment" => Stage::Environment,
+            "model" => Stage::Model,
+            "planning" => Stage::Planning,
+            "execution" => Stage::Execution,
+            "window" => Stage::Window,
+            "fold" => Stage::Fold,
+            _ => return None,
+        })
+    }
+}
+
+/// A scheduled component: `(stage, index)`. The derived `Ord` IS the
+/// same-tick tie-break — stage first, index within the stage (window
+/// components index their device in sorted-`DeviceId` order).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ComponentId {
+    pub stage: Stage,
+    pub index: u16,
+}
+
+impl ComponentId {
+    pub const fn new(stage: Stage, index: u16) -> ComponentId {
+        ComponentId { stage, index }
+    }
+
+    /// The singleton component of a stage.
+    pub const fn of(stage: Stage) -> ComponentId {
+        ComponentId { stage, index: 0 }
+    }
+
+    /// The window component of the `i`-th device (sorted-id order).
+    pub const fn window(i: u16) -> ComponentId {
+        ComponentId { stage: Stage::Window, index: i }
+    }
+}
+
+/// Adapter trait for subsystems that advance as scheduled components.
+///
+/// `W` is the world the component mutates when it fires — typically a
+/// borrow-struct over exactly the state the subsystem owns, so an
+/// adapter cannot reach into state another component is responsible
+/// for. The sim engine dispatches its own components through the same
+/// `ComponentId`s; the gateway, calibration, and safety adapters
+/// implement this trait so the same scheduler can drive them
+/// standalone.
+pub trait Component<W: ?Sized> {
+    fn id(&self) -> ComponentId;
+
+    /// Ticks between activations (1 = every tick). Must be ≥ 1.
+    fn divider(&self) -> u64 {
+        1
+    }
+
+    /// Fire at `tick`.
+    fn step(&mut self, world: &mut W, tick: u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_order_is_the_tie_break_law() {
+        let law = [
+            Stage::Environment,
+            Stage::Model,
+            Stage::Planning,
+            Stage::Execution,
+            Stage::Window,
+            Stage::Fold,
+        ];
+        for pair in law.windows(2) {
+            assert!(pair[0] < pair[1], "{:?} must precede {:?}", pair[0], pair[1]);
+        }
+    }
+
+    #[test]
+    fn component_order_is_stage_then_index() {
+        assert!(ComponentId::of(Stage::Environment) < ComponentId::of(Stage::Fold));
+        assert!(ComponentId::window(0) < ComponentId::window(1));
+        assert!(ComponentId::window(u16::MAX) < ComponentId::of(Stage::Fold));
+        assert!(ComponentId::of(Stage::Execution) < ComponentId::window(0));
+    }
+
+    #[test]
+    fn stage_roundtrip() {
+        for stage in [
+            Stage::Environment,
+            Stage::Model,
+            Stage::Planning,
+            Stage::Execution,
+            Stage::Window,
+            Stage::Fold,
+        ] {
+            assert_eq!(Stage::from_str(stage.as_str()), Some(stage));
+        }
+        assert_eq!(Stage::from_str("thermal"), None);
+    }
+}

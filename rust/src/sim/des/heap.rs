@@ -1,0 +1,91 @@
+//! The event heap: a min-heap over `(next_tick, ComponentId)`.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::component::ComponentId;
+
+/// Min-heap of scheduled component activations. Because the key is the
+/// full `(tick, ComponentId)` pair, draining one tick's events pops
+/// them already in canonical `(Stage, index)` order — the same-tick
+/// tie-break costs nothing beyond the heap's own ordering.
+#[derive(Debug, Clone, Default)]
+pub struct EventHeap {
+    heap: BinaryHeap<Reverse<(u64, ComponentId)>>,
+}
+
+impl EventHeap {
+    pub fn new() -> EventHeap {
+        EventHeap::default()
+    }
+
+    pub fn push(&mut self, tick: u64, component: ComponentId) {
+        self.heap.push(Reverse((tick, component)));
+    }
+
+    /// The earliest scheduled tick, if any.
+    pub fn peek_tick(&self) -> Option<u64> {
+        self.heap.peek().map(|Reverse((t, _))| *t)
+    }
+
+    /// Pop the next activation due at or before `tick` (defensively
+    /// `<=`: a correctly maintained heap never holds past-due entries,
+    /// but a missed tick must drain rather than wedge).
+    pub fn pop_due(&mut self, tick: u64) -> Option<ComponentId> {
+        match self.heap.peek() {
+            Some(Reverse((t, _))) if *t <= tick => {
+                self.heap.pop().map(|Reverse((_, c))| c)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::des::component::Stage;
+
+    #[test]
+    fn pops_in_tick_then_component_order() {
+        let mut heap = EventHeap::new();
+        heap.push(2, ComponentId::of(Stage::Environment));
+        heap.push(1, ComponentId::of(Stage::Fold));
+        heap.push(1, ComponentId::of(Stage::Environment));
+        heap.push(1, ComponentId::window(3));
+        heap.push(1, ComponentId::window(1));
+
+        let mut order = Vec::new();
+        while let Some(c) = heap.pop_due(1) {
+            order.push(c);
+        }
+        assert_eq!(
+            order,
+            vec![
+                ComponentId::of(Stage::Environment),
+                ComponentId::window(1),
+                ComponentId::window(3),
+                ComponentId::of(Stage::Fold),
+            ]
+        );
+        assert_eq!(heap.peek_tick(), Some(2));
+        assert!(heap.pop_due(1).is_none());
+        assert_eq!(heap.pop_due(2), Some(ComponentId::of(Stage::Environment)));
+        assert!(heap.is_empty());
+    }
+
+    #[test]
+    fn past_due_entries_drain() {
+        let mut heap = EventHeap::new();
+        heap.push(0, ComponentId::of(Stage::Model));
+        assert_eq!(heap.pop_due(5), Some(ComponentId::of(Stage::Model)));
+    }
+}

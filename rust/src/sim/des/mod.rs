@@ -1,0 +1,37 @@
+//! Component-based discrete-event scheduling core.
+//!
+//! The sim engine's tick loop is decomposed into components — the
+//! failure injector, the calibration folder, the replanner, the query
+//! executor, one window integrator per device, and the cross-device
+//! ledger fold — dispatched off a min-heap keyed `(next_tick,
+//! ComponentId)`. Each component advances on its own clock divider
+//! (`divider == 1` fires every tick; `divider == d` every d-th tick),
+//! so idle subsystems cost nothing between activations and total work
+//! is O(dispatched events), not O(ticks × components).
+//!
+//! # Event-ordering contract
+//!
+//! - **Heap key:** `(next_tick, ComponentId)`; `ComponentId` orders by
+//!   `(Stage, index)`. Popping the heap therefore yields due components
+//!   in canonical order with no extra sort.
+//! - **Same-tick tie-break law:** components due on one tick dispatch
+//!   in `Stage` order — `Environment < Model < Planning < Execution <
+//!   Window < Fold` — and by `index` within a stage. Cross-stage order
+//!   is SEMANTIC (a replan must see same-tick failures; windows
+//!   integrate the wall interval the executor just advanced) and is
+//!   never permuted. Within-stage order is claimed commutative; the
+//!   fuzzed schedule mode permutes exactly those runs (per-seed
+//!   Fisher–Yates, deterministic in `(seed, tick)`) to prove it.
+//! - **Clock dividers:** after firing at tick `t`, a component is
+//!   rescheduled at `t + divider`. Dividers are real state (they change
+//!   the trajectory) and serialize with the snapshot; the default of 1
+//!   for every component reproduces the legacy synchronous loop
+//!   bit-exactly.
+
+pub mod component;
+pub mod heap;
+pub mod scheduler;
+
+pub use component::{Component, ComponentId, Stage};
+pub use heap::EventHeap;
+pub use scheduler::{fuzz_order, ClockDomain, ScheduleMode, Scheduler};

@@ -11,7 +11,7 @@ use std::collections::BTreeMap;
 
 use anyhow::Result;
 
-use crate::calibration::{DriftPlan, FleetCalibrator};
+use crate::calibration::{CalibrationComponent, CalibrationTick, DriftPlan, FleetCalibrator};
 use crate::config::{ExecMode, OrchestratorFeatures};
 use crate::coordinator::allocation::ModelShape;
 use crate::coordinator::batcher::{Batch, Batcher};
@@ -21,7 +21,7 @@ use crate::coordinator::orchestrator::{Orchestrator, PlanError};
 use crate::coordinator::pgsam::{ParetoPoint, PgsamConfig};
 use crate::coordinator::plan_cache::{CachedPlan, PlanCache, PlanKey, PlannerKind};
 use crate::coordinator::sample_budget::{SampleBudgeter, SampleCost};
-use crate::devices::failure::{FailureKind, FailurePlan};
+use crate::devices::failure::{FailureAction, FailureKind, FailurePlan, FailureSchedule};
 use crate::devices::fleet::Fleet;
 use crate::devices::power::PowerModel;
 use crate::devices::roofline::Phase;
@@ -32,8 +32,9 @@ use crate::metrics::latency::LatencyRecorder;
 use crate::rng::Pcg;
 use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
-use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
+use crate::safety::thermal_guard::{GuardComponent, GuardTick, ShedTracker, ThermalGuard};
 use crate::scaling::formalisms::LatencyLaw;
+use crate::sim::des::{fuzz_order, Component, ComponentId, ScheduleMode, Scheduler, Stage};
 use crate::selection::{Candidate, SelectionCascade, StopReason};
 use crate::workload::coverage::CoverageOracle;
 use crate::workload::generator::Query;
@@ -74,6 +75,13 @@ pub struct SimOptions {
     /// and a chunked run through any number of checkpoint/restore
     /// cycles stay bit-identical.
     pub checkpoint_every: Option<u64>,
+    /// Same-tick dispatch order for the discrete-event scheduler. Like
+    /// `checkpoint_every`, this is HARNESS state outside the digest:
+    /// all modes are digest-equivalent by construction (the fuzzer
+    /// permutes only within-stage runs, which commute), so it does not
+    /// serialize into snapshots — a restored run continues in whatever
+    /// mode its harness selects.
+    pub schedule: ScheduleMode,
     pub seed: u64,
 }
 
@@ -91,6 +99,7 @@ impl Default for SimOptions {
             energy_budget_j: None,
             sla_sample_multiple: Some(12.0),
             checkpoint_every: None,
+            schedule: ScheduleMode::Canonical,
             seed: 0,
         }
     }
@@ -257,6 +266,31 @@ pub(crate) struct SimDevice {
     pub(crate) window_busy_s: f64,
 }
 
+/// The engine's discrete-event harness state: the component scheduler
+/// (clock domains + event heap), the expanded failure schedule, and the
+/// staging buffers between the Execution, Window, and Fold components.
+#[derive(Debug, Clone)]
+pub(crate) struct DesState {
+    pub(crate) scheduler: Scheduler,
+    /// The failure plan expanded into a cursor-consumed transition
+    /// schedule (the Environment component's event source).
+    pub(crate) failures: FailureSchedule,
+    /// Window component `i` integrates `window_ids[i]` — sorted device
+    /// id order, i.e. the `devices` BTreeMap iteration order.
+    pub(crate) window_ids: Vec<DeviceId>,
+    /// Wall seconds staged by Execution for each Window component,
+    /// consumed when that component fires. Nonzero across ticks only
+    /// under a window divider > 1, so it serializes with the snapshot.
+    pub(crate) pending_dt: Vec<f64>,
+    /// Idle joules staged by each Window, folded into the ledger by the
+    /// Fold component in canonical device order — f64 accumulation into
+    /// the ledger's scalar totals is order-sensitive, which is exactly
+    /// the ordering bug the fuzzed drills surfaced in the old loop.
+    /// Transient within one tick (Fold's divider is pinned at 1), so it
+    /// is NOT serialized.
+    pub(crate) pending_idle_j: Vec<Option<f64>>,
+}
+
 /// The engine.
 ///
 /// `Clone` is part of the failover substrate: the desync harness runs
@@ -315,11 +349,13 @@ pub struct SimEngine {
     /// PJRT time scale: real measured seconds per simulated second
     /// (from PJRT execution of the artifact; 1.0 = pure analytic).
     pub pjrt_time_scale: f64,
+    /// Discrete-event scheduling state (see [`DesState`]).
+    pub(crate) des: DesState,
 }
 
 impl SimEngine {
     pub fn new(fleet: Fleet, shape: ModelShape, options: SimOptions) -> Self {
-        let devices = fleet
+        let devices: BTreeMap<DeviceId, SimDevice> = fleet
             .devices()
             .iter()
             .map(|spec| {
@@ -341,6 +377,7 @@ impl SimEngine {
         let calibrator = FleetCalibrator::new(fleet.len());
         let calibrated_fleet = fleet.clone();
         let noise_rng = Pcg::new(options.seed, 0xCA11_B7A7);
+        let des = Self::build_des(&devices, &options);
         SimEngine {
             fleet,
             shape,
@@ -370,7 +407,47 @@ impl SimEngine {
             accuracy_hits: 0,
             queries_done: 0,
             pjrt_time_scale: 1.0,
+            des,
         }
+    }
+
+    /// Default DES component registration: every component on divider 1
+    /// with its first activation at tick 0 — the configuration that
+    /// reproduces the legacy synchronous loop bit-exactly.
+    pub(crate) fn build_des(
+        devices: &BTreeMap<DeviceId, SimDevice>,
+        options: &SimOptions,
+    ) -> DesState {
+        let window_ids: Vec<DeviceId> = devices.keys().cloned().collect();
+        let mut scheduler = Scheduler::new();
+        scheduler.register(ComponentId::of(Stage::Environment), 1, 0);
+        scheduler.register(ComponentId::of(Stage::Model), 1, 0);
+        scheduler.register(ComponentId::of(Stage::Planning), 1, 0);
+        scheduler.register(ComponentId::of(Stage::Execution), 1, 0);
+        for i in 0..window_ids.len() {
+            scheduler.register(ComponentId::window(i as u16), 1, 0);
+        }
+        scheduler.register(ComponentId::of(Stage::Fold), 1, 0);
+        DesState {
+            scheduler,
+            failures: FailureSchedule::from_plan(&options.failure_plan),
+            pending_dt: vec![0.0; window_ids.len()],
+            pending_idle_j: vec![None; window_ids.len()],
+            window_ids,
+        }
+    }
+
+    /// Set a component's clock divider (it fires every `divider`-th
+    /// tick after its next activation). Execution and Fold are pinned
+    /// at 1 — Execution IS the tick (one query arrival), and Fold
+    /// flushes the transient per-tick idle staging, so slowing either
+    /// would drop work rather than defer it. Returns `false` for those
+    /// stages and for unregistered components.
+    pub fn set_component_divider(&mut self, id: ComponentId, divider: u64) -> bool {
+        if matches!(id.stage, Stage::Execution | Stage::Fold) {
+            return false;
+        }
+        self.des.scheduler.set_divider(id, divider)
     }
 
     pub fn clock_s(&self) -> f64 {
@@ -475,12 +552,15 @@ impl SimEngine {
         if !self.options.features.calibration {
             return;
         }
-        let v = self.calibrator.version();
-        if v != self.calibrated_version {
-            self.calibrated_fleet = self.calibrator.calibrated_fleet(&self.fleet);
-            self.calibrated_version = v;
-            self.table_rebuilds += 1;
-        }
+        let tick = self.queries_done as u64;
+        let mut world = CalibrationTick {
+            calibrator: &self.calibrator,
+            nameplate: &self.fleet,
+            calibrated: &mut self.calibrated_fleet,
+            calibrated_version: &mut self.calibrated_version,
+            table_rebuilds: &mut self.table_rebuilds,
+        };
+        CalibrationComponent.step(&mut world, tick);
     }
 
     /// The planning view of the fleet for the CURRENT safety state:
@@ -516,8 +596,17 @@ impl SimEngine {
     fn replan_if_stale(&mut self) {
         // Fold any drift observed since the last tick into the
         // planning substrate first — with `plan_cache` off the legacy
-        // per-report path reads the same refreshed fleet.
+        // per-report path reads the same refreshed fleet. Under DES
+        // dispatch the two halves are separate components (Model then
+        // Planning); both are idempotent, so the combined call here
+        // (the report path) and the split dispatch agree bit-exactly.
         self.refresh_calibration();
+        self.check_replan();
+    }
+
+    /// The Planning component: re-plan IFF the (safety, calibration)
+    /// version pair moved since the last plan.
+    fn check_replan(&mut self) {
         let features = &self.options.features;
         if !features.plan_cache {
             return;
@@ -640,44 +729,47 @@ impl SimEngine {
         self.devices[id].health.state().schedulable()
     }
 
-    /// Apply scheduled failures / recoveries up to the current clock.
-    fn process_failures(&mut self) {
-        let plan = self.options.failure_plan.clone();
-        for scenario in plan.scenarios() {
-            let id = &scenario.device;
-            if !self.devices.contains_key(id) {
-                continue;
-            }
-            let hard = matches!(scenario.kind, FailureKind::Crash | FailureKind::Hang);
-            if !hard {
-                continue;
-            }
-            let dev = self.devices.get_mut(id).unwrap();
-            let failed_now = self.clock_s >= scenario.at_s
-                && scenario
-                    .recover_after_s
-                    .map(|r| self.clock_s < scenario.at_s + r)
-                    .unwrap_or(true);
-            match (dev.health.state(), failed_now) {
-                (HealthState::Healthy | HealthState::Degraded | HealthState::Recovering, true) => {
-                    dev.health.mark_failed(self.clock_s);
-                    self.failures += 1;
-                    if self.options.features.safety {
-                        // Detection + redistribution latency (paper: the
-                        // redistribution itself completes within 100 ms).
-                        let detect_s = match scenario.kind {
-                            FailureKind::Crash => 0.02, // heartbeat gap
-                            FailureKind::Hang => 0.05,  // timeout multiple
-                            FailureKind::ErrorRate(_) => 0.08,
-                        };
-                        let deadline = dev.detector.redistribution_deadline_s;
-                        self.recoveries.push(detect_s + deadline * 0.6);
+    /// The Environment component: apply every scheduled failure /
+    /// recovery transition due at the current clock, via the expanded
+    /// schedule's cursor — each transition fires exactly once, in time
+    /// order, however coarse the preceding window was. (The old
+    /// per-tick plan rescan derived each device's state from the clock
+    /// alone, so a fail-and-recover landing inside one window collapsed
+    /// into "nothing happened": no failure counted, no recovery
+    /// latency charged. The cursor surfaces both transitions.)
+    fn step_environment(&mut self) {
+        let clock_s = self.clock_s;
+        let safety = self.options.features.safety;
+        for event in self.des.failures.take_due(clock_s) {
+            let Some(dev) = self.devices.get_mut(&event.device) else {
+                continue; // scenario names a device outside this fleet
+            };
+            match event.action {
+                FailureAction::Fail => {
+                    if matches!(
+                        dev.health.state(),
+                        HealthState::Healthy | HealthState::Degraded | HealthState::Recovering
+                    ) {
+                        dev.health.mark_failed(clock_s);
+                        self.failures += 1;
+                        if safety {
+                            // Detection + redistribution latency (paper: the
+                            // redistribution itself completes within 100 ms).
+                            let detect_s = match event.kind {
+                                FailureKind::Crash => 0.02, // heartbeat gap
+                                FailureKind::Hang => 0.05,  // timeout multiple
+                                FailureKind::ErrorRate(_) => 0.08,
+                            };
+                            let deadline = dev.detector.redistribution_deadline_s;
+                            self.recoveries.push(detect_s + deadline * 0.6);
+                        }
                     }
                 }
-                (HealthState::Failed, false) => {
-                    dev.health.mark_recovering(self.clock_s);
+                FailureAction::Recover => {
+                    if matches!(dev.health.state(), HealthState::Failed) {
+                        dev.health.mark_recovering(clock_s);
+                    }
                 }
-                _ => {}
             }
         }
     }
@@ -724,14 +816,95 @@ impl SimEngine {
 
     /// Execute one query with up to `samples` samples. Returns whether it
     /// was solved and how many samples ran.
+    ///
+    /// One call is one logical tick: the scheduler drains every
+    /// component due at `queries_done` and dispatches in the tie-break
+    /// order of the module contract — Environment (failure
+    /// transitions) before Model (calibration fold) before Planning
+    /// (replan check) before Execution (the query) before the Window
+    /// integrators before the ledger Fold. Failures land BEFORE
+    /// planning at this clock value, so a replan sees the
+    /// post-transition fleet exactly once — an event on the same tick
+    /// as a cascade stop can never charge two plans to one episode.
     pub fn run_query(&mut self, query: &Query, samples: u32, oracle: &CoverageOracle) -> (bool, u32) {
-        self.process_failures();
-        // Tick ordering: failures/recoveries land BEFORE planning and
-        // execution at this clock value, so a replan sees the post-
-        // transition fleet exactly once — an event on the same tick as
-        // a cascade stop can never charge two plans to one episode.
-        self.replan_if_stale();
+        let tick = self.queries_done as u64;
+        match self.options.schedule {
+            ScheduleMode::Legacy => self.run_query_legacy(tick, query, samples, oracle),
+            ScheduleMode::Canonical => self.run_query_des(tick, None, query, samples, oracle),
+            ScheduleMode::Fuzzed(seed) => {
+                self.run_query_des(tick, Some(seed), query, samples, oracle)
+            }
+        }
+    }
 
+    /// The pre-DES synchronous loop shape: direct sequential calls to
+    /// the same step functions, kept as the equivalence baseline the
+    /// property tests compare heap dispatch against. Scheduler
+    /// bookkeeping still advances (take_due + reschedule) so the
+    /// serialized clock domains match the canonical mode — this mode
+    /// assumes the default dividers and ignores any overrides.
+    fn run_query_legacy(
+        &mut self,
+        tick: u64,
+        query: &Query,
+        samples: u32,
+        oracle: &CoverageOracle,
+    ) -> (bool, u32) {
+        let due = self.des.scheduler.take_due(tick);
+        self.step_environment();
+        self.refresh_calibration();
+        self.check_replan();
+        let outcome = self.step_execution(query, samples, oracle);
+        for i in 0..self.des.window_ids.len() {
+            self.step_window(i);
+        }
+        self.step_fold();
+        for id in due {
+            self.des.scheduler.reschedule(id, tick);
+        }
+        outcome
+    }
+
+    /// Heap dispatch: drain the components due this tick (canonical
+    /// order for free — the heap key embeds `ComponentId`), optionally
+    /// permute within-stage runs (fuzzed mode), dispatch each, and
+    /// re-queue it at `tick + divider`.
+    fn run_query_des(
+        &mut self,
+        tick: u64,
+        fuzz: Option<u64>,
+        query: &Query,
+        samples: u32,
+        oracle: &CoverageOracle,
+    ) -> (bool, u32) {
+        let mut due = self.des.scheduler.take_due(tick);
+        if let Some(seed) = fuzz {
+            fuzz_order(&mut due, seed, tick);
+        }
+        let mut outcome = (false, 0);
+        for cid in due {
+            match cid.stage {
+                Stage::Environment => self.step_environment(),
+                Stage::Model => self.refresh_calibration(),
+                Stage::Planning => self.check_replan(),
+                Stage::Execution => outcome = self.step_execution(query, samples, oracle),
+                Stage::Window => self.step_window(cid.index as usize),
+                Stage::Fold => self.step_fold(),
+            }
+            self.des.scheduler.reschedule(cid, tick);
+        }
+        outcome
+    }
+
+    /// The Execution component: plan, budget, and run one query's
+    /// samples, then advance wall time by its makespan (staged to the
+    /// Window components via [`SimEngine::begin_window`]).
+    fn step_execution(
+        &mut self,
+        query: &Query,
+        samples: u32,
+        oracle: &CoverageOracle,
+    ) -> (bool, u32) {
         let Some(plan) = self.plan(query) else {
             // Total fleet loss: the query is lost (only possible with
             // safety off or all devices failed). A lost interactive
@@ -742,7 +915,7 @@ impl SimEngine {
             // freeze a single-device outage forever).
             self.queries_lost += 1;
             let hold_s = self.interactive_deadline_s(query);
-            self.advance_window(hold_s);
+            self.begin_window(hold_s);
             return (false, 0);
         };
 
@@ -987,65 +1160,103 @@ impl SimEngine {
         if decode_tokens > 0 {
             self.latencies.record(decode_parallel_s / decode_tokens as f64);
         }
-        self.advance_window(makespan);
+        self.begin_window(makespan);
 
         (solved, samples)
     }
 
-    /// Advance virtual time: thermal integration + idle energy for every
-    /// device over the window.
-    fn advance_window(&mut self, dt_s: f64) {
+    /// Advance virtual time: the Execution component's tail. The wall
+    /// and ledger clocks move immediately; per-device integration is
+    /// staged into `pending_dt` for the Window components firing later
+    /// this tick (or a later one, under a window divider > 1).
+    fn begin_window(&mut self, dt_s: f64) {
         if dt_s <= 0.0 {
             return;
         }
         self.clock_s += dt_s;
         self.ledger.advance_wall(dt_s);
-        let ids: Vec<DeviceId> = self.devices.keys().cloned().collect();
-        for id in ids {
-            // Ground-truth idle draw: idle-power creep manifests here
-            // (the drift plan returns the nameplate bit-exactly while
-            // no scenario is active).
-            let idle_w_true = if self.options.drift_plan.distorts(&id, self.clock_s) {
-                self.options
-                    .drift_plan
-                    .effective_spec(&self.devices[&id].spec, self.clock_s)
-                    .idle_w
-            } else {
-                self.devices[&id].spec.idle_w
-            };
-            let dev = self.devices.get_mut(&id).unwrap();
-            // Mean power over the window: active energy / window + idle
-            // draw for the remaining fraction.
-            let active_j = dev.window_energy_j;
-            let idle_fraction_s = (dt_s - dev.window_busy_s).max(0.0);
-            let idle_j = idle_w_true * idle_fraction_s;
-            let mean_power = ((active_j + idle_j) / dt_s).min(dev.spec.tdp_w);
-            dev.thermal.step(&dev.spec, mean_power, dt_s);
-            dev.window_energy_j = 0.0;
-            dev.window_busy_s = 0.0;
-            // Shedding-band bookkeeping: a band crossing is a safety
-            // transition (bumps the version the plan cache keys on).
-            if self.options.features.safety {
-                let decision = self.options.guard.evaluate(&dev.spec, dev.thermal.temp_c());
-                dev.shed.observe(decision.shed_level());
+        for dt in &mut self.des.pending_dt {
+            *dt += dt_s;
+        }
+    }
+
+    /// One Window component: integrate device `i` over its staged wall
+    /// interval — thermal step at the window's mean power, shedding-band
+    /// observation (through the guard component), the idle-power
+    /// calibration residual, and health bookkeeping. The device's idle
+    /// joules are STAGED for the Fold component rather than recorded
+    /// here: every other effect is per-device state (commutes across
+    /// devices), but `+=` into the ledger's f64 scalar totals is
+    /// order-sensitive, so the fold owns the canonical accumulation
+    /// order.
+    fn step_window(&mut self, i: usize) {
+        let dt_s = self.des.pending_dt[i];
+        if dt_s <= 0.0 {
+            return;
+        }
+        self.des.pending_dt[i] = 0.0;
+        let id = self.des.window_ids[i].clone();
+        let clock_s = self.clock_s;
+        // Ground-truth idle draw: idle-power creep manifests here
+        // (the drift plan returns the nameplate bit-exactly while
+        // no scenario is active).
+        let idle_w_true = if self.options.drift_plan.distorts(&id, clock_s) {
+            self.options.drift_plan.effective_spec(&self.devices[&id].spec, clock_s).idle_w
+        } else {
+            self.devices[&id].spec.idle_w
+        };
+        let safety = self.options.features.safety;
+        let calibration = self.options.features.calibration;
+        let dev = self.devices.get_mut(&id).unwrap();
+        // Mean power over the window: active energy / window + idle
+        // draw for the remaining fraction.
+        let active_j = dev.window_energy_j;
+        let idle_fraction_s = (dt_s - dev.window_busy_s).max(0.0);
+        let idle_j = idle_w_true * idle_fraction_s;
+        let mean_power = ((active_j + idle_j) / dt_s).min(dev.spec.tdp_w);
+        dev.thermal.step(&dev.spec, mean_power, dt_s);
+        dev.window_energy_j = 0.0;
+        dev.window_busy_s = 0.0;
+        // Shedding-band bookkeeping: a band crossing is a safety
+        // transition (bumps the version the plan cache keys on).
+        if safety {
+            let temp_c = dev.thermal.temp_c();
+            GuardComponent::new(self.options.guard.clone(), i as u16).step(
+                &mut GuardTick { spec: &dev.spec, temp_c, shed: &mut dev.shed },
+                self.queries_done as u64,
+            );
+        }
+        // Idle residual: predicted idle from the CURRENTLY APPLIED
+        // overlay (not the possibly one-fold-stale planning fleet)
+        // vs ground truth — the idle-power-creep channel. Exactly
+        // zero while no drift is active.
+        if calibration && idle_fraction_s > 0.0 {
+            if let Some(idx) = self.fleet.idx_of(&id) {
+                let pred_j =
+                    dev.spec.idle_w * self.calibrator.overlay(idx).idle_scale * idle_fraction_s;
+                self.calibrator.observe_idle(idx, pred_j, idle_j);
             }
-            // Idle residual: predicted idle from the CURRENTLY APPLIED
-            // overlay (not the possibly one-fold-stale planning fleet)
-            // vs ground truth — the idle-power-creep channel. Exactly
-            // zero while no drift is active.
-            if self.options.features.calibration && idle_fraction_s > 0.0 {
-                if let Some(idx) = self.fleet.idx_of(&id) {
-                    let pred_j = dev.spec.idle_w
-                        * self.calibrator.overlay(idx).idle_scale
-                        * idle_fraction_s;
-                    self.calibrator.observe_idle(idx, pred_j, idle_j);
-                }
+        }
+        // Idle draw of the non-busy fraction (active joules already
+        // include the busy-period idle share via the power model) —
+        // staged unconditionally (even at 0.0 J: the legacy loop
+        // recorded every window, which the per-device ledger map
+        // observes) for the Fold's canonical-order accumulation.
+        self.des.pending_idle_j[i] = Some(idle_j);
+        // Health bookkeeping.
+        dev.health.record_success(clock_s);
+    }
+
+    /// The Fold component: accumulate every staged idle-energy record
+    /// into the ledger in canonical device order. This is the single
+    /// order-sensitive reduction of a tick — hoisting it out of the
+    /// per-device windows is what makes their dispatch order genuinely
+    /// commutative (and is what the fuzzed drills verify).
+    fn step_fold(&mut self) {
+        for i in 0..self.des.window_ids.len() {
+            if let Some(idle_j) = self.des.pending_idle_j[i].take() {
+                self.ledger.record_idle(&self.des.window_ids[i], idle_j);
             }
-            // Idle draw of the non-busy fraction (active joules already
-            // include the busy-period idle share via the power model).
-            self.ledger.record_idle(&id, idle_j);
-            // Health bookkeeping.
-            dev.health.record_success(self.clock_s);
         }
     }
 
@@ -1095,6 +1306,16 @@ impl SimEngine {
     /// counters. Equivalent to ending [`SimEngine::run`]; split out so a
     /// checkpointed / replayed run can finish from wherever it resumed.
     pub fn finish(&mut self) -> SimReport {
+        // Flush windows still holding staged wall time — components
+        // whose divider scheduled their next activation past the last
+        // tick. A no-op at the default dividers (pending_dt is always
+        // drained within the tick that staged it).
+        if self.des.pending_dt.iter().any(|&dt| dt > 0.0) {
+            for i in 0..self.des.window_ids.len() {
+                self.step_window(i);
+            }
+            self.step_fold();
+        }
         self.report(self.queries_done, self.solved, self.accuracy_hits)
     }
 
@@ -1737,6 +1958,69 @@ mod tests {
         assert!(hit.cache_hit, "the post-recovery replan must be a pure cache hit");
         assert_eq!(first.plan, hit.plan, "recovery must restore the pre-failure plan");
         assert_eq!(first.plan_energy_j.to_bits(), hit.plan_energy_j.to_bits());
+    }
+
+    #[test]
+    fn fail_and_recover_inside_one_window_surface_both_transitions() {
+        // npu0 crashes 0.1 ms into the run and its driver reset
+        // succeeds 10 µs later — both transitions land inside the
+        // first query's window (query makespans here are milliseconds).
+        // The old per-tick plan rescan derived each device's state
+        // from the clock alone, so a window jumping clean over
+        // [at_s, at_s + recover) saw "healthy" on both sides and
+        // NEITHER transition fired: no failure counted, no recovery
+        // latency charged. The expanded schedule's cursor surfaces
+        // both, in order, on the next tick.
+        let plan = FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.0001,
+            recover_after_s: Some(0.00001),
+        }]);
+        let qs = queries(12);
+        let mut e = engine(
+            FleetPreset::EdgeBox,
+            SimOptions { failure_plan: plan, ..Default::default() },
+        );
+        let r = e.run(&qs, 10).unwrap();
+        assert_eq!(r.failures, 1, "the fail transition must fire exactly once");
+        assert_eq!(r.recoveries, 1, "its recovery latency must be charged");
+        assert!(r.mean_recovery_s > 0.0);
+        assert_eq!(r.queries_lost, 0, "the fleet never runs a full query degraded");
+    }
+
+    #[test]
+    fn schedule_modes_are_digest_equivalent_on_the_edge_box() {
+        // Legacy sequential calls, canonical heap dispatch, and a
+        // fuzzed same-tick permutation must walk bit-identical state
+        // trajectories (report PartialEq covers every f64; the digest
+        // covers all serialized state) — with failures, drift, and
+        // calibration all active. The full preset matrix lives in
+        // tests/des_equivalence.rs; this is the in-crate smoke lock.
+        let failure = FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.2,
+            recover_after_s: Some(0.3),
+        }]);
+        let drift =
+            DriftPlan::new(vec![DriftScenario::bandwidth_derate("cpu0".into(), 0.2, 0.125)]);
+        let qs = queries(40);
+        let run = |schedule: ScheduleMode| {
+            let opts = SimOptions {
+                failure_plan: failure.clone(),
+                drift_plan: drift.clone(),
+                schedule,
+                ..Default::default()
+            };
+            engine(FleetPreset::EdgeBox, opts).run(&qs, 8).unwrap()
+        };
+        let legacy = run(ScheduleMode::Legacy);
+        let canonical = run(ScheduleMode::Canonical);
+        let fuzzed = run(ScheduleMode::Fuzzed(0xF00D));
+        assert_eq!(legacy, canonical, "heap dispatch must reproduce the legacy loop");
+        assert_eq!(canonical, fuzzed, "within-stage order must be commutative");
+        assert_eq!(legacy.state_digest, canonical.state_digest);
     }
 
     #[test]

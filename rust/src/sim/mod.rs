@@ -7,6 +7,8 @@
 //! detection/recovery) and reports the metrics the paper's tables are
 //! built from.
 
+pub mod des;
 pub mod engine;
 
+pub use des::ScheduleMode;
 pub use engine::{CalibrationTrail, CascadeTrail, ReplanEvent, SimEngine, SimOptions, SimReport};

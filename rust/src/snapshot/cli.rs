@@ -12,6 +12,12 @@
 //!   (default)         run fresh; with --checkpoint-dir, write periodic
 //!                     snapshots and the event log there so a later
 //!                     --restore can continue the run
+//!
+//! `--fuzz-schedule SEED` (decimal or 0x-hex) runs every engine in
+//! `ScheduleMode::Fuzzed(SEED)`: same-tick within-stage component
+//! dispatch is permuted per tick. Reports must stay bit-identical to
+//! the canonical order — a drill under fuzz is an event-ordering drill
+//! on top of the crash-recovery one.
 
 use anyhow::{bail, Context, Result};
 
@@ -23,6 +29,7 @@ use crate::devices::spec::DevIdx;
 use crate::experiments::runner::default_meta;
 use crate::json::Json;
 use crate::sim::engine::{SimEngine, SimOptions, SimReport};
+use crate::sim::ScheduleMode;
 use crate::snapshot::desync::{detect_desync, stale_replica};
 use crate::snapshot::drill::{drill_preset, DrillOutcome};
 use crate::snapshot::replay::{EventLog, ReplaySession};
@@ -58,7 +65,22 @@ fn workload(args: &Args) -> Result<(Vec<crate::workload::generator::Query>, u32,
     let gen = WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, seed);
     let mut options = SimOptions { seed, ..SimOptions::default() };
     options.checkpoint_every = Some(args.num("checkpoint-every", 25u64)?);
+    let fuzz_spec = args.opt("fuzz-schedule", "");
+    if !fuzz_spec.is_empty() {
+        options.schedule = ScheduleMode::Fuzzed(parse_seed(&fuzz_spec)?);
+    }
     Ok((gen.queries(n), samples, options))
+}
+
+/// `--fuzz-schedule` accepts decimal or `0x`-prefixed hex, matching how
+/// the pinned fuzz seeds are written in the test suite.
+fn parse_seed(spec: &str) -> Result<u64> {
+    let spec = spec.trim();
+    match spec.strip_prefix("0x").or_else(|| spec.strip_prefix("0X")) {
+        Some(hex) => u64::from_str_radix(hex, 16),
+        None => spec.parse(),
+    }
+    .with_context(|| format!("bad --fuzz-schedule seed {spec:?}"))
 }
 
 fn shape() -> ModelShape {

@@ -14,13 +14,18 @@
 //!   an implicit 1.0.
 //! - v2: `clock.pjrt_time_scale` serialized explicitly (bit-pattern
 //!   encoded like every other `f64`).
+//! - v3: the engine grows a `des` component — discrete-event scheduler
+//!   state (failure-schedule cursor, per-component clock domains,
+//!   staged window wall-intervals). v2 engines ran the synchronous
+//!   loop, which is the DES schedule with every divider at 1, so the
+//!   defaults are fully derivable from the document itself.
 
 use anyhow::{bail, Result};
 
 use crate::json::Json;
 
 /// The snapshot format this binary writes.
-pub const FORMAT_VERSION: u64 = 2;
+pub const FORMAT_VERSION: u64 = 3;
 
 /// Document kind tag for engine snapshots.
 pub const SNAPSHOT_KIND: &str = "qeil-engine-snapshot";
@@ -41,6 +46,7 @@ pub fn migrate(doc: &mut Json) -> Result<()> {
     while version < FORMAT_VERSION {
         match version {
             1 => migrate_v1_to_v2(doc)?,
+            2 => migrate_v2_to_v3(doc)?,
             v => bail!("no migration path from snapshot format v{v}"),
         }
         version += 1;
@@ -69,6 +75,88 @@ fn migrate_v1_to_v2(doc: &mut Json) -> Result<()> {
     Ok(())
 }
 
+/// v2 → v3: the engine gains the `des` component. Every default is
+/// derived from the document: all components run divider 1 and are
+/// due on the next tick (`clock.queries_done`), no wall interval is
+/// staged, and the failure cursor counts the expanded hard
+/// transitions (fail at `at_s`, recover at `at_s + recover_after_s`)
+/// at or before the serialized clock — the rescan loop that wrote the
+/// document derived device health from the clock alone, so those
+/// transitions are already reflected in the `devices` component.
+fn migrate_v2_to_v3(doc: &mut Json) -> Result<()> {
+    fn hex_f64(j: &Json) -> Result<f64> {
+        let s = j.as_str()?;
+        let bits = u64::from_str_radix(s, 16)
+            .map_err(|e| anyhow::anyhow!("bad f64 bit pattern {s:?}: {e}"))?;
+        Ok(f64::from_bits(bits))
+    }
+
+    let engine = doc.field("engine")?;
+    let clock = engine.field("clock")?;
+    let clock_s = hex_f64(clock.field("clock_s")?)?;
+    let next_tick = clock.field("queries_done")?.as_u64()?;
+    let n_devices = engine.field("devices")?.as_arr()?.len();
+
+    // Expand the plan the way `FailureSchedule::from_plan` does and
+    // count the transitions already settled at the serialized clock.
+    let mut settled = 0usize;
+    for s in engine.field("options")?.field("failure_plan")?.as_arr()? {
+        let hard = matches!(s.field("kind")?, Json::Str(k) if k == "crash" || k == "hang");
+        if !hard {
+            continue;
+        }
+        let at_s = hex_f64(s.field("at_s")?)?;
+        if at_s <= clock_s {
+            settled += 1;
+        }
+        if let r @ Json::Str(_) = s.field("recover_after_s")? {
+            if at_s + hex_f64(r)? <= clock_s {
+                settled += 1;
+            }
+        }
+    }
+
+    let mut components: Vec<Json> = Vec::new();
+    {
+        let mut push = |stage: &str, index: usize| {
+            components.push(Json::obj(vec![
+                ("stage", Json::Str(stage.into())),
+                ("index", Json::Num(index as f64)),
+                ("divider", Json::Num(1.0)),
+                ("next_tick", Json::Num(next_tick as f64)),
+            ]));
+        };
+        for stage in ["environment", "model", "planning", "execution"] {
+            push(stage, 0);
+        }
+        for i in 0..n_devices {
+            push("window", i);
+        }
+        push("fold", 0);
+    }
+
+    let des = Json::obj(vec![
+        ("failure_cursor", Json::Num(settled as f64)),
+        ("components", Json::arr(components)),
+        (
+            "pending_dt",
+            Json::arr(vec![
+                Json::Str(format!("{:016x}", 0.0f64.to_bits()));
+                n_devices
+            ]),
+        ),
+    ]);
+
+    let Json::Obj(map) = doc else {
+        bail!("snapshot document must be an object");
+    };
+    let Some(Json::Obj(engine)) = map.get_mut("engine") else {
+        bail!("snapshot document missing engine object");
+    };
+    engine.entry("des".to_string()).or_insert(des);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,11 +182,30 @@ mod tests {
         assert_eq!(doc.to_string(), before);
     }
 
+    fn bits(v: f64) -> Json {
+        Json::Str(format!("{:016x}", v.to_bits()))
+    }
+
+    /// The minimal engine object the v2→v3 step reads from.
+    fn v2_engine(clock_s: f64, queries_done: u64, n_devices: usize, plan: Vec<Json>) -> Json {
+        Json::obj(vec![
+            (
+                "clock",
+                Json::obj(vec![
+                    ("clock_s", bits(clock_s)),
+                    ("queries_done", Json::Num(queries_done as f64)),
+                ]),
+            ),
+            ("devices", Json::arr(vec![Json::obj(vec![]); n_devices])),
+            ("options", Json::obj(vec![("failure_plan", Json::arr(plan))])),
+        ])
+    }
+
     #[test]
     fn v1_gains_pjrt_time_scale() {
         let mut doc = Json::obj(vec![
             ("format_version", Json::Num(1.0)),
-            ("engine", Json::obj(vec![("clock", Json::obj(vec![]))])),
+            ("engine", v2_engine(0.0, 0, 0, vec![])),
         ]);
         migrate(&mut doc).unwrap();
         assert_eq!(doc.field("format_version").unwrap().as_u64().unwrap(), FORMAT_VERSION);
@@ -110,5 +217,60 @@ mod tests {
             .field("pjrt_time_scale")
             .unwrap();
         assert_eq!(scale, &Json::Str(format!("{:016x}", 1.0f64.to_bits())));
+    }
+
+    #[test]
+    fn v2_gains_a_derived_des_component() {
+        let plan = vec![
+            // Hard failure fully settled at clock_s = 10: fail at 2,
+            // recover at 2 + 3 = 5 → two consumed transitions.
+            Json::obj(vec![
+                ("device", Json::Str("npu0".into())),
+                ("kind", Json::Str("crash".into())),
+                ("at_s", bits(2.0)),
+                ("recover_after_s", bits(3.0)),
+            ]),
+            // Fail settled, recover still in the future → one consumed.
+            Json::obj(vec![
+                ("device", Json::Str("gpu0".into())),
+                ("kind", Json::Str("hang".into())),
+                ("at_s", bits(8.0)),
+                ("recover_after_s", bits(30.0)),
+            ]),
+            // Soft failures never enter the hard-transition schedule.
+            Json::obj(vec![
+                ("device", Json::Str("cpu0".into())),
+                ("kind", Json::obj(vec![("error_rate", bits(0.5))])),
+                ("at_s", bits(1.0)),
+                ("recover_after_s", Json::Null),
+            ]),
+        ];
+        let mut doc = Json::obj(vec![
+            ("format_version", Json::Num(2.0)),
+            ("engine", v2_engine(10.0, 7, 2, plan)),
+        ]);
+        migrate(&mut doc).unwrap();
+        assert_eq!(doc.field("format_version").unwrap().as_u64().unwrap(), FORMAT_VERSION);
+
+        let des = doc.field("engine").unwrap().field("des").unwrap();
+        assert_eq!(des.usize_field("failure_cursor").unwrap(), 3);
+
+        let components = des.field("components").unwrap().as_arr().unwrap();
+        // environment/model/planning/execution + one window per device + fold.
+        assert_eq!(components.len(), 4 + 2 + 1);
+        let windows: Vec<usize> = components
+            .iter()
+            .filter(|c| c.str_field("stage").unwrap() == "window")
+            .map(|c| c.usize_field("index").unwrap())
+            .collect();
+        assert_eq!(windows, vec![0, 1]);
+        for c in components {
+            assert_eq!(c.usize_field("divider").unwrap(), 1);
+            assert_eq!(c.usize_field("next_tick").unwrap(), 7, "due on the next tick");
+        }
+
+        let pending = des.field("pending_dt").unwrap().as_arr().unwrap();
+        assert_eq!(pending.len(), 2);
+        assert!(pending.iter().all(|p| p == &bits(0.0)), "no staged wall time");
     }
 }

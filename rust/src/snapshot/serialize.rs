@@ -44,8 +44,9 @@ use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
 use crate::safety::thermal_guard::{ShedTracker, ThermalGuard};
 use crate::scaling::formalisms::LatencyLaw;
+use crate::sim::des::{ComponentId, ScheduleMode, Scheduler, Stage};
 use crate::sim::engine::{
-    CascadeTrail, ReplanEvent, SimDevice, SimEngine, SimOptions,
+    CascadeTrail, DesState, ReplanEvent, SimDevice, SimEngine, SimOptions,
 };
 use crate::workload::datasets::ModelFamily;
 
@@ -420,6 +421,10 @@ fn options_from(j: &Json) -> Result<SimOptions> {
             Json::Null => None,
             other => Some(u64_from(other)?),
         },
+        // Harness state, deliberately absent from the document (like
+        // `checkpoint_every`'s digest exclusion): the restoring harness
+        // picks the dispatch mode; all modes are digest-equivalent.
+        schedule: ScheduleMode::default(),
         seed: u64_field(j, "seed")?,
     })
 }
@@ -967,7 +972,7 @@ fn calibrator_from(j: &Json) -> Result<FleetCalibrator> {
 
 /// Names of the engine state components, in serialization order. The
 /// desync detector digests and compares each independently.
-pub const COMPONENTS: [&str; 12] = [
+pub const COMPONENTS: [&str; 13] = [
     "fleet",
     "shape",
     "options",
@@ -980,6 +985,7 @@ pub const COMPONENTS: [&str; 12] = [
     "plan_cache",
     "replan",
     "calibration",
+    "des",
 ];
 
 /// Serialize the full engine state as an object of named components.
@@ -1055,7 +1061,90 @@ pub fn engine_state(e: &SimEngine) -> Json {
                 ("table_rebuilds", u64_json(e.table_rebuilds)),
             ]),
         ),
+        ("des", des_json(&e.des)),
     ])
+}
+
+/// Serialize the discrete-event scheduling state: the failure-schedule
+/// cursor, every component's clock domain, and the staged window
+/// intervals. `pending_idle_j` is transient within one tick (Fold's
+/// divider is pinned at 1) and `window_ids` is derivable from the
+/// devices component, so neither serializes.
+fn des_json(d: &DesState) -> Json {
+    Json::obj(vec![
+        ("failure_cursor", u64_json(d.failures.cursor() as u64)),
+        (
+            "components",
+            Json::arr(
+                d.scheduler
+                    .domains()
+                    .map(|(id, dom)| {
+                        Json::obj(vec![
+                            ("stage", Json::Str(id.stage.as_str().into())),
+                            ("index", Json::Num(id.index as f64)),
+                            ("divider", u64_json(dom.divider)),
+                            ("next_tick", u64_json(dom.next_tick)),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+        (
+            "pending_dt",
+            Json::arr(d.pending_dt.iter().map(|&v| f64_bits(v)).collect()),
+        ),
+    ])
+}
+
+fn des_from(
+    j: &Json,
+    devices: &BTreeMap<DeviceId, SimDevice>,
+    options: &SimOptions,
+) -> Result<DesState> {
+    // Rebuild the derivable parts (window ids, expanded failure
+    // schedule) from the already-restored components, then overlay the
+    // serialized cursor and clock domains.
+    let mut des = SimEngine::build_des(devices, options);
+    des.failures.set_cursor(j.usize_field("failure_cursor")?);
+    let mut scheduler = Scheduler::new();
+    for c in j.field("components")?.as_arr()? {
+        let name = c.str_field("stage")?;
+        let Some(stage) = Stage::from_str(name) else {
+            bail!("unknown DES stage {name:?}");
+        };
+        let index = c.usize_field("index")?;
+        if index > u16::MAX as usize {
+            bail!("DES component index {index} out of range");
+        }
+        scheduler.register(
+            ComponentId::new(stage, index as u16),
+            u64_field(c, "divider")?,
+            u64_field(c, "next_tick")?,
+        );
+    }
+    if scheduler.len() != des.scheduler.len() {
+        bail!(
+            "DES component table has {} entries, engine registers {}",
+            scheduler.len(),
+            des.scheduler.len()
+        );
+    }
+    des.scheduler = scheduler;
+    let pending_dt = j
+        .field("pending_dt")?
+        .as_arr()?
+        .iter()
+        .map(f64_from)
+        .collect::<Result<Vec<f64>>>()?;
+    if pending_dt.len() != des.window_ids.len() {
+        bail!(
+            "pending_dt has {} entries for {} devices",
+            pending_dt.len(),
+            des.window_ids.len()
+        );
+    }
+    des.pending_dt = pending_dt;
+    Ok(des)
 }
 
 /// Rebuild a `SimEngine` from an `engine_state` document.
@@ -1071,6 +1160,8 @@ pub fn engine_from_state(j: &Json) -> Result<SimEngine> {
         .map(device_from)
         .collect::<Result<BTreeMap<DeviceId, SimDevice>>>()
         .context("component devices")?;
+
+    let des = des_from(j.field("des")?, &devices, &options).context("component des")?;
 
     let clock = j.field("clock")?;
     let rng = clock.field("noise_rng")?;
@@ -1138,6 +1229,7 @@ pub fn engine_from_state(j: &Json) -> Result<SimEngine> {
         accuracy_hits: clock.usize_field("accuracy_hits")?,
         queries_done: clock.usize_field("queries_done")?,
         pjrt_time_scale: f64_field(clock, "pjrt_time_scale")?,
+        des,
     })
 }
 

@@ -1,0 +1,142 @@
+//! Schedule-mode equivalence: the DES core's central property.
+//!
+//! The component scheduler must be an identity refactor of the legacy
+//! synchronous tick loop, and same-tick within-stage dispatch order
+//! must be immaterial:
+//!
+//!   * Legacy (direct sequential calls), Canonical (heap dispatch in
+//!     `(tick, ComponentId)` order), and Fuzzed (per-`(seed, tick)`
+//!     Fisher–Yates over within-stage runs) produce bit-identical
+//!     `SimReport`s — state digest included — on EVERY fleet preset,
+//!     under active failure, drift, and contention-noise plans;
+//!   * the metro fleet-scale preset (100 window components per tick:
+//!     the largest same-tick permutation surface in the tree) agrees
+//!     across modes too;
+//!   * non-default clock dividers are real state: they serialize with
+//!     the snapshot, the executor/fold pins are enforced, and a
+//!     mid-run restore continues bit-identically.
+
+use qeil::calibration::drift::{DriftPlan, DriftScenario};
+use qeil::coordinator::allocation::ModelShape;
+use qeil::devices::failure::{FailureKind, FailurePlan, FailureScenario};
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::experiments::runner::default_meta;
+use qeil::json::Json;
+use qeil::sim::des::{ComponentId, Stage};
+use qeil::sim::engine::{SimEngine, SimOptions, SimReport};
+use qeil::sim::ScheduleMode;
+use qeil::snapshot::{engine_digest, restore_engine, snapshot_engine};
+use qeil::workload::coverage::CoverageOracle;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::{Query, WorkloadGenerator};
+
+fn shape() -> ModelShape {
+    ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2))
+}
+
+fn queries(n: usize) -> Vec<Query> {
+    WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, 42).queries(n)
+}
+
+/// Failure + drift + contention noise aimed at the preset's own
+/// devices: crash-then-recover the last device, drift and jitter the
+/// first — the regime where every stage (environment, model, planning,
+/// execution, windows, fold) has real same-tick work to reorder.
+fn stress_options(preset: FleetPreset, schedule: ScheduleMode) -> SimOptions {
+    let fleet = Fleet::preset(preset);
+    let first = fleet.devices()[0].id.clone();
+    let last = fleet.devices()[fleet.len() - 1].id.clone();
+    SimOptions {
+        seed: 7,
+        schedule,
+        failure_plan: FailurePlan::new(vec![FailureScenario {
+            device: last,
+            kind: FailureKind::Crash,
+            at_s: 0.15,
+            recover_after_s: Some(0.2),
+        }]),
+        drift_plan: DriftPlan::new(vec![
+            DriftScenario::bandwidth_derate(first.clone(), 0.1, 0.5),
+            DriftScenario::contention_noise(first, 0.2, 0.05),
+        ]),
+        ..SimOptions::default()
+    }
+}
+
+fn run(preset: FleetPreset, schedule: ScheduleMode, n: usize, samples: u32) -> SimReport {
+    let mut e =
+        SimEngine::new(Fleet::preset(preset), shape(), stress_options(preset, schedule));
+    e.run(&queries(n), samples).unwrap()
+}
+
+#[test]
+fn schedule_modes_agree_on_every_preset() {
+    for preset in FleetPreset::all() {
+        let legacy = run(preset, ScheduleMode::Legacy, 100, 8);
+        let canonical = run(preset, ScheduleMode::Canonical, 100, 8);
+        assert_eq!(
+            canonical, legacy,
+            "{preset:?}: heap dispatch diverged from the synchronous loop"
+        );
+        for fuzz_seed in [0xA5u64, 0x5EED] {
+            let fuzzed = run(preset, ScheduleMode::Fuzzed(fuzz_seed), 100, 8);
+            assert_eq!(
+                fuzzed, canonical,
+                "{preset:?}: fuzz seed {fuzz_seed:#x} surfaced order-sensitive state"
+            );
+        }
+    }
+}
+
+#[test]
+fn schedule_modes_agree_at_metro_scale() {
+    // 100 same-tick window components: any cross-device accumulation
+    // that survives the 4-device presets by luck gets 100! orderings
+    // here. Short run — the surface is the point, not the soak.
+    let legacy = run(FleetPreset::Metro, ScheduleMode::Legacy, 10, 2);
+    let canonical = run(FleetPreset::Metro, ScheduleMode::Canonical, 10, 2);
+    assert_eq!(canonical, legacy, "metro: heap dispatch diverged from the loop");
+    let fuzzed = run(FleetPreset::Metro, ScheduleMode::Fuzzed(0xF1EE7), 10, 2);
+    assert_eq!(fuzzed, canonical, "metro: fuzzed window order diverged");
+}
+
+#[test]
+fn clock_dividers_serialize_and_survive_restore() {
+    let qs = queries(40);
+    let options = SimOptions { seed: 3, ..SimOptions::default() };
+    let mut warm = SimEngine::new(Fleet::preset(FleetPreset::EdgeBox), shape(), options);
+
+    // The executor and the ledger fold are pinned to every tick: the
+    // executor defines the tick, and deferring the fold across ticks
+    // would reorder the energy scalar accumulation it exists to fix.
+    assert!(!warm.set_component_divider(ComponentId::of(Stage::Execution), 2));
+    assert!(!warm.set_component_divider(ComponentId::of(Stage::Fold), 2));
+    // Calibration refresh every 3rd tick, replan gate every 2nd, one
+    // device's window integration every 2nd.
+    assert!(warm.set_component_divider(ComponentId::of(Stage::Model), 3));
+    assert!(warm.set_component_divider(ComponentId::of(Stage::Planning), 2));
+    assert!(warm.set_component_divider(ComponentId::window(1), 2));
+
+    // Cut the snapshot after an odd tick so window(1) holds a staged
+    // (non-zero) wall interval — `pending_dt` must carry it across the
+    // process boundary.
+    let oracle = CoverageOracle::new(warm.seed());
+    for q in &qs[..22] {
+        warm.step_query(q, 4, &oracle);
+    }
+    let text = snapshot_engine(&warm).to_string();
+    let mut restored = restore_engine(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(
+        snapshot_engine(&restored).to_string(),
+        text,
+        "divider + staged-interval state must round-trip byte-exactly"
+    );
+    assert_eq!(engine_digest(&restored), engine_digest(&warm));
+
+    for q in &qs[22..] {
+        let a = warm.step_query(q, 4, &oracle);
+        let b = restored.step_query(q, 4, &oracle);
+        assert_eq!(a, b, "restored divider run must step bit-identically");
+    }
+    assert_eq!(restored.finish(), warm.finish());
+}

@@ -372,6 +372,30 @@ fn failed_device_reroutes_lanes_and_recovery_routes_back() {
 }
 
 #[test]
+fn des_dispatch_matches_the_direct_loop_on_every_preset() {
+    // The serving loop re-hosted on the DES core must be an identity
+    // refactor: popping one GatewayComponent off a Scheduler per tick
+    // yields a report and state digest bit-identical to the direct
+    // `run_trace` loop, under 3x overload, on every paper preset.
+    for preset in FleetPreset::all() {
+        let config = GatewayConfig { fleet: preset, seed: 7, ..Default::default() };
+        let mut direct = Gateway::new(config.clone());
+        let trace = direct.overload_trace(240, 3.0, None);
+        let direct_report = direct.run_trace(&trace);
+
+        let mut des = Gateway::new(config);
+        let des_report = des.run_trace_des(&trace);
+        assert_eq!(
+            des_report,
+            direct_report,
+            "{}: DES serving loop diverged from the direct loop",
+            preset.as_str()
+        );
+        assert_eq!(des.state_digest(), direct.state_digest(), "{}", preset.as_str());
+    }
+}
+
+#[test]
 fn gateway_run_with_failed_device_serves_around_it() {
     // End-to-end: fail the NPU before an overload run on the edge box.
     // The run must still complete work, and the failed device must

@@ -22,6 +22,7 @@ use qeil::devices::fleet::{Fleet, FleetPreset};
 use qeil::experiments::runner::default_meta;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::sim::engine::{SimEngine, SimOptions, SimReport};
+use qeil::sim::ScheduleMode;
 use qeil::workload::datasets::{Dataset, ModelFamily};
 use qeil::workload::generator::{Query, WorkloadGenerator};
 
@@ -180,6 +181,45 @@ fn coincident_cascading_failures_batch_into_one_replan() {
         let misses = r.replan_trail.iter().filter(|e| !e.cache_hit).count();
         assert_eq!(misses, 3, "{preset:?}: healthy + first-failed + both-failed signatures");
         assert_eq!(r.queries_lost, 0, "{preset:?}: the surviving devices absorb the cascade");
+    }
+}
+
+#[test]
+fn fuzzed_schedules_replay_the_replan_trail_bit_exactly() {
+    // Pinned fuzz regression for the replan path: a fuzzed same-tick
+    // dispatch order must reproduce the ENTIRE canonical trail —
+    // replan episodes, cache hits, plan energies, and the report —
+    // bit-exactly while a failure→recovery scenario and an aggressive
+    // thermal guard are both live. This is the surface the original
+    // ledger-fold ordering bug hid in: same-tick window integrations
+    // folding energy in permuted order ahead of a replan gate.
+    for preset in [FleetPreset::EdgeBox, FleetPreset::MultiVendor] {
+        let fleet = Fleet::preset(preset);
+        let victim = fleet.devices()[fleet.len() - 1].id.clone();
+        let options = |schedule: ScheduleMode| SimOptions {
+            schedule,
+            guard: ThermalGuard { theta: 0.1, ..ThermalGuard::default() },
+            failure_plan: FailurePlan::new(vec![FailureScenario {
+                device: victim.clone(),
+                kind: FailureKind::Crash,
+                at_s: 0.15,
+                recover_after_s: Some(0.2),
+            }]),
+            ..Default::default()
+        };
+        let mut canonical_engine = engine(preset, options(ScheduleMode::Canonical));
+        let canonical = canonical_engine.run(&queries(150), 8).unwrap();
+        assert_trail_consistent(preset, &canonical);
+        assert!(canonical.failures >= 1, "{preset:?}: scenario must exercise a failure");
+
+        for fuzz_seed in [0x0DDBA11u64, 0xCAFE] {
+            let mut fuzzed_engine = engine(preset, options(ScheduleMode::Fuzzed(fuzz_seed)));
+            let fuzzed = fuzzed_engine.run(&queries(150), 8).unwrap();
+            assert_eq!(
+                fuzzed, canonical,
+                "{preset:?}: fuzz seed {fuzz_seed:#x} perturbed the replan trajectory"
+            );
+        }
     }
 }
 

@@ -14,8 +14,13 @@
 //!     passes bit-exactly on EVERY fleet preset;
 //!   * the desync detector localizes a stale-coefficient replica to an
 //!     exact first-divergence tick and names the diverging component;
-//!   * a format-version-1 snapshot (no `clock.pjrt_time_scale`) is
-//!     forward-migrated on restore and lands on the same digest.
+//!   * historical snapshots forward-migrate on restore and land on the
+//!     same digest: v1 (no `clock.pjrt_time_scale`) and v2 (no `des`
+//!     discrete-event scheduler component) both walk to the current
+//!     format;
+//!   * the metro fleet-scale preset (100 devices) survives the
+//!     kill/restore/replay drill bit-exactly, under the canonical AND
+//!     a fuzzed same-tick dispatch schedule.
 
 use qeil::calibration::drift::{DriftPlan, DriftScenario};
 use qeil::calibration::CalibratedSpec;
@@ -26,8 +31,9 @@ use qeil::devices::spec::DevIdx;
 use qeil::experiments::runner::default_meta;
 use qeil::json::Json;
 use qeil::sim::engine::{SimEngine, SimOptions, SimReport};
+use qeil::sim::ScheduleMode;
 use qeil::snapshot::desync::{detect_desync, stale_replica};
-use qeil::snapshot::drill::drill_all_presets;
+use qeil::snapshot::drill::{drill_all_presets, drill_preset};
 use qeil::snapshot::replay::{EventLog, ReplaySession};
 use qeil::snapshot::{engine_digest, restore_engine, snapshot_engine};
 use qeil::workload::coverage::CoverageOracle;
@@ -287,13 +293,15 @@ fn v1_snapshot_migrates_forward_to_the_same_digest() {
 
     // Forge the v1 form of this snapshot: no `clock.pjrt_time_scale`
     // (the field v2 introduced; its engine default is 1.0, which is
-    // exactly what the migration hook must re-insert).
+    // exactly what the migration hook must re-insert) and no `des`
+    // component (v3) — the whole v1 → v2 → v3 chain runs on restore.
     let mut doc = snapshot_engine(&e);
     let Json::Obj(top) = &mut doc else { panic!("snapshot must be an object") };
     top.insert("format_version".to_string(), Json::Num(1.0));
     let Some(Json::Obj(engine_obj)) = top.get_mut("engine") else {
         panic!("snapshot must carry an engine component object")
     };
+    assert!(engine_obj.remove("des").is_some());
     let Some(Json::Obj(clock)) = engine_obj.get_mut("clock") else {
         panic!("engine state must carry a clock component")
     };
@@ -305,4 +313,77 @@ fn v1_snapshot_migrates_forward_to_the_same_digest() {
         snapshot_engine(&restored).to_string(),
         snapshot_engine(&e).to_string()
     );
+}
+
+#[test]
+fn v2_snapshot_migrates_to_the_same_digest_with_a_consumed_failure_plan() {
+    // A hard fail + recover both land well before the snapshot point,
+    // so the derived `des` defaults must reconstruct a non-zero
+    // failure-schedule cursor (2 consumed transitions) — not just the
+    // trivial empty-plan case.
+    let options = SimOptions {
+        seed: 11,
+        failure_plan: FailurePlan::new(vec![FailureScenario {
+            device: "npu0".into(),
+            kind: FailureKind::Crash,
+            at_s: 0.001,
+            recover_after_s: Some(0.002),
+        }]),
+        ..SimOptions::default()
+    };
+    let qs = queries(Dataset::WikiText103, 11, 40);
+    let mut e = engine(FleetPreset::EdgeBox, options);
+    let oracle = CoverageOracle::new(e.seed());
+    for q in &qs {
+        e.step_query(q, 4, &oracle);
+    }
+
+    // Forge the v2 form: drop `des`, tag format_version 2.
+    let mut doc = snapshot_engine(&e);
+    let Json::Obj(top) = &mut doc else { panic!("snapshot must be an object") };
+    top.insert("format_version".to_string(), Json::Num(2.0));
+    let Some(Json::Obj(engine_obj)) = top.get_mut("engine") else {
+        panic!("snapshot must carry an engine component object")
+    };
+    assert!(engine_obj.remove("des").is_some());
+
+    let restored = restore_engine(&doc).unwrap();
+    assert_eq!(engine_digest(&restored), engine_digest(&e));
+    assert_eq!(
+        snapshot_engine(&restored).to_string(),
+        snapshot_engine(&e).to_string()
+    );
+}
+
+// ---------------------------------------------------------------------
+// Fleet-scale drill: the metro preset
+// ---------------------------------------------------------------------
+
+#[test]
+fn metro_fleet_drill_recovers_bit_exactly() {
+    // 100 devices through the kill/restore/replay drill. Short log,
+    // tight checkpoint cadence: the point is the state surface (one
+    // window component per device, 100-entry pending intervals), not
+    // the soak length. Run it under the canonical dispatch order and
+    // under a fuzzed same-tick schedule — a drill is deterministic
+    // either way, because the fuzzed order is a pure function of
+    // (seed, tick) and survives checkpoint/restore.
+    let qs = queries(Dataset::WikiText103, 31, 12);
+    for schedule in [ScheduleMode::Canonical, ScheduleMode::Fuzzed(0xBEEF)] {
+        let options = SimOptions { seed: 31, schedule, ..SimOptions::default() };
+        let outcomes =
+            drill_preset(FleetPreset::Metro, options, &qs, 2, 4, &[3, 11], 1).unwrap();
+        assert_eq!(outcomes.len(), 3);
+        for o in &outcomes {
+            assert!(
+                o.passed(),
+                "metro drill failed under {schedule:?}: kill@{} restore@{} \
+                 (digest match {}, report match {})",
+                o.kill_tick,
+                o.checkpoint_tick,
+                o.digest_match,
+                o.report_match
+            );
+        }
+    }
 }

@@ -8,9 +8,11 @@
 # `pgsam_warm_restart*`, `plan_cache_lookup*`, `gateway_admission*`,
 # `gateway_dispatch_wave*`, `calibration_update*`,
 # `energy_table_rebuild*`, `snapshot_save*`, `snapshot_restore*`,
-# `replay_apply*` — the planner-substrate, plan-cache, serving-gateway,
-# calibration, and snapshot/replay hot paths ROADMAP.md tracks)
-# regresses by more than MAX_RATIO (default 10x) in mean time.
+# `replay_apply*`, `des_event_dispatch*`, `sim_step*`,
+# `metro_sim_step*` — the planner-substrate, plan-cache,
+# serving-gateway, calibration, snapshot/replay, and discrete-event
+# scheduler hot paths ROADMAP.md tracks) regresses by more than
+# MAX_RATIO (default 10x) in mean time.
 # Non-gated entries are reported but never fail the run (they are too
 # machine-sensitive for a hard gate).
 #
@@ -41,9 +43,14 @@
 #     (default 10) of the cold energy_table_build mean — if cutting a
 #     checkpoint rivals the planner's own substrate costs, operators
 #     will turn the checkpoint cadence off and lose crash recovery.
-# When a result file predates these entries (pre-PR3/PR5/PR6 artifact
-# via --no-run), the intra-run checks warn and skip; REQUIRE_BASELINE=1
-# (CI mode) makes missing entries fail instead.
+#   * metro scaling: the metro preset's per-component tick cost
+#     (metro_sim_step mean / 105 components) must stay ≤
+#     MAX_METRO_RATIO (default 4) of the edge box's (sim_step mean / 9
+#     components) — the DES core promises O(dispatched events), so a
+#     25x fleet may not cost superlinearly more per event.
+# When a result file predates these entries (pre-PR3/PR5/PR6/PR7
+# artifact via --no-run), the intra-run checks warn and skip;
+# REQUIRE_BASELINE=1 (CI mode) makes missing entries fail instead.
 #
 # Usage:
 #   scripts/check_bench.sh            # bench + compare
@@ -53,6 +60,7 @@
 #   MAX_LOOKUP_US=100 scripts/check_bench.sh
 #   MAX_REBUILD_RATIO=4 scripts/check_bench.sh
 #   MAX_SNAPSHOT_RATIO=15 scripts/check_bench.sh
+#   MAX_METRO_RATIO=6 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
 #
 # First run on a machine with no committed baseline: the current result
@@ -70,6 +78,7 @@ MAX_WARM_RATIO="${MAX_WARM_RATIO:-0.5}"
 MAX_LOOKUP_US="${MAX_LOOKUP_US:-50}"
 MAX_REBUILD_RATIO="${MAX_REBUILD_RATIO:-3}"
 MAX_SNAPSHOT_RATIO="${MAX_SNAPSHOT_RATIO:-10}"
+MAX_METRO_RATIO="${MAX_METRO_RATIO:-4}"
 
 if [[ "${1:-}" != "--no-run" ]]; then
     cargo bench --bench orchestrator
@@ -85,14 +94,15 @@ fi
 # + plan-cache hit-cost ceiling + drift-rebuild cheapness + checkpoint
 # round-trip cheapness.
 python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" \
-    "$MAX_SNAPSHOT_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
+    "$MAX_SNAPSHOT_RATIO" "$MAX_METRO_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
 import json
 import sys
 
 cur_path, max_warm, max_lookup_us = sys.argv[1], float(sys.argv[2]), float(sys.argv[3])
 max_rebuild = float(sys.argv[4])
 max_snapshot = float(sys.argv[5])
-strict = sys.argv[6] == "1"
+max_metro = float(sys.argv[6])
+strict = sys.argv[7] == "1"
 with open(cur_path) as f:
     doc = json.load(f)
 means = {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
@@ -160,6 +170,28 @@ else:
         print("checkpoint gate FAILED: a snapshot round-trip now rivals planner substrate "
               "costs — checkpoint cadence becomes unaffordable", file=sys.stderr)
         failed = True
+edge_step = next((v for k, v in means.items() if k.startswith("sim_step")), None)
+metro_step = next((v for k, v in means.items() if k.startswith("metro_sim_step")), None)
+if edge_step is None or metro_step is None:
+    # Pre-PR7 artifact: the compare-existing workflow stays usable; CI
+    # mode insists on the DES entries being present.
+    print("metro-scaling gate: skipped (sim_step / metro_sim_step entries missing "
+          "from this result file)", file=sys.stderr)
+    failed = failed or strict
+else:
+    # Components per tick = devices + 5 (4 singleton stages + one
+    # window per device + fold): edge box 9, metro 105.
+    edge_per_event = edge_step / 9.0
+    metro_per_event = metro_step / 105.0
+    ratio = metro_per_event / max(edge_per_event, 1.0)
+    status = "ok" if ratio <= max_metro else "REGRESSION"
+    print(f"metro-scaling gate: {status} metro {metro_per_event / 1e3:.1f} us/component vs "
+          f"edge {edge_per_event / 1e3:.1f} us/component ({ratio:.2f}x, budget {max_metro:g}x)")
+    if ratio > max_metro:
+        print("metro-scaling gate FAILED: per-component tick cost grows superlinearly with "
+              "fleet size — the DES core's O(dispatched events) contract is broken",
+              file=sys.stderr)
+        failed = True
 sys.exit(1 if failed else 0)
 PY
 
@@ -195,6 +227,9 @@ GATED_PREFIXES = (
     "snapshot_save",
     "snapshot_restore",
     "replay_apply",
+    "des_event_dispatch",
+    "sim_step",
+    "metro_sim_step",
 )
 
 

@@ -9,15 +9,26 @@
 # restoring from the newest on-disk-equivalent checkpoint (serialized
 # string round-trip) and replaying the event-log suffix.
 #
+# After the standard matrix, the 100-device metro preset is drilled
+# with a lighter workload (it is ~12x the per-tick component count of
+# edge-box, so the full matrix budget would dominate the run).
+#
+# FUZZ_SCHEDULE=SEED additionally runs every engine under
+# `ScheduleMode::Fuzzed(SEED)` — same-tick within-stage dispatch is
+# permuted per tick, so a passing drill also certifies event-ordering
+# independence, not just replay determinism.
+#
 # Exit status is the drill verdict: nonzero means some recovery
 # diverged from the uninterrupted run — a replay-determinism bug.
 #
 # Usage:
-#   scripts/drill.sh                  # full matrix, defaults
+#   scripts/drill.sh                  # full matrix + metro, defaults
 #   QUERIES=60 SAMPLES=2 scripts/drill.sh
 #   SEED=7 FUZZ=4 scripts/drill.sh    # different fuzzed kill points
 #   CHECKPOINT_EVERY=10 scripts/drill.sh
 #   KILL_TICKS=3,17,58 scripts/drill.sh  # pin exact kill ticks
+#   FUZZ_SCHEDULE=0xBEEF scripts/drill.sh  # fuzz same-tick dispatch
+#   METRO_QUERIES=0 scripts/drill.sh  # skip the metro pass
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -27,14 +38,23 @@ SAMPLES="${SAMPLES:-4}"
 SEED="${SEED:-0}"
 FUZZ="${FUZZ:-2}"
 CHECKPOINT_EVERY="${CHECKPOINT_EVERY:-25}"
+METRO_QUERIES="${METRO_QUERIES:-24}"
+METRO_SAMPLES="${METRO_SAMPLES:-2}"
 
 cargo build --release --quiet
 
-args=(replay --drill --fleet all
-    --queries "$QUERIES" --samples "$SAMPLES" --seed "$SEED"
-    --checkpoint-every "$CHECKPOINT_EVERY" --fuzz "$FUZZ")
+common=(--seed "$SEED" --checkpoint-every "$CHECKPOINT_EVERY" --fuzz "$FUZZ")
 if [[ -n "${KILL_TICKS:-}" ]]; then
-    args+=(--kill-ticks "$KILL_TICKS")
+    common+=(--kill-ticks "$KILL_TICKS")
+fi
+if [[ -n "${FUZZ_SCHEDULE:-}" ]]; then
+    common+=(--fuzz-schedule "$FUZZ_SCHEDULE")
 fi
 
-exec ./target/release/qeil "${args[@]}"
+./target/release/qeil replay --drill --fleet all \
+    --queries "$QUERIES" --samples "$SAMPLES" "${common[@]}"
+
+if [[ "$METRO_QUERIES" -gt 0 ]]; then
+    ./target/release/qeil replay --drill --fleet metro \
+        --queries "$METRO_QUERIES" --samples "$METRO_SAMPLES" "${common[@]}"
+fi
