@@ -29,6 +29,9 @@ use qeil::json::Json;
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
+use qeil::server::api::InferenceRequest;
+use qeil::server::load::{run_load_harness, HarnessConfig, SyntheticWorker};
+use qeil::server::pool::{ExecutorPool, PoolConfig, PoolJob};
 use qeil::sim::des::{fuzz_order, ComponentId, Scheduler, Stage};
 use qeil::sim::engine::{SimEngine, SimOptions};
 use qeil::snapshot::{restore_engine, snapshot_engine};
@@ -363,6 +366,65 @@ fn main() {
     }
     let r = b.run("metro_sim_step(metro, 100 devices, warm engine)", || {
         std::hint::black_box(metro_engine.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // Executor pool dispatch (PR 8): one 64-job reply-channel wave
+    // through the real pool — sharded submit, class-priority/EDF
+    // take_next, split-histogram recording, reply round-trip — with
+    // instant workers so the number is pure pool plumbing. Gated: this
+    // is the per-request serving overhead the pool adds over the
+    // engine's own compute.
+    let pool = ExecutorPool::new(PoolConfig { workers: 4, shards: 8, queue_depth: 4096 });
+    let r = pool
+        .run_scoped(
+            |_| Ok(SyntheticWorker::instant()),
+            |pool| {
+                b.run("executor_pool_dispatch(64-job wave, 4 workers)", || {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    for i in 0..64u32 {
+                        pool.try_submit(PoolJob {
+                            request: InferenceRequest {
+                                client_id: i,
+                                class: SlaClass::all()[(i % 3) as usize],
+                                prompt: vec![0; 8],
+                                max_new_tokens: 0,
+                                temperature: 0.0,
+                                seed: 0,
+                            },
+                            tenant: i,
+                            deadline_s: f64::INFINITY,
+                            reply: Some(tx.clone()),
+                        })
+                        .unwrap_or_else(|_| panic!("wave must fit a 4096-deep row"));
+                    }
+                    drop(tx);
+                    let completed = rx.iter().filter(|resp| resp.is_ok()).count();
+                    assert_eq!(completed, 64);
+                })
+            },
+        )
+        .expect("pool spawn");
+    println!("{}", r.report());
+    results.push(r);
+
+    // One full (small) harness run end to end: schedule build, pool
+    // spawn, paced adversarial submission, drain, report assembly.
+    // Quick preset — this is an expensive e2e bench.
+    let qb = Bencher::quick();
+    let harness_cfg = HarnessConfig {
+        requests: 512,
+        overload: 4.0,
+        workers: 2,
+        producers: 1,
+        service_us: 5.0,
+        ..Default::default()
+    };
+    let r = qb.run("load_harness_step(512 reqs, 2 workers)", || {
+        let report = run_load_harness(&harness_cfg).expect("harness run");
+        report.verify().expect("accounting closure");
+        std::hint::black_box(report);
     });
     println!("{}", r.report());
     results.push(r);

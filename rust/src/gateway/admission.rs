@@ -125,12 +125,19 @@ impl AdmissionController {
         thermal.max(cpq_band).max(queue_band).min(SHED_LEVELS)
     }
 
-    /// Decide one request at the already-computed effective band.
+    /// Decide one request at the already-computed effective band. The
+    /// band doubles as overload pressure for the limiter: a first-seen
+    /// tenant's initial bucket shrinks with the band, so a hostile
+    /// tenant rotating ids cannot mint a full burst per id exactly when
+    /// the fleet is shedding. (Deterministic on the logical clock —
+    /// the limiter is not digest state, and at the default unlimited
+    /// config the scaled bucket is still effectively unlimited.)
     pub fn admit(&mut self, tenant: u32, class: SlaClass, now_s: f64, level: u8) -> AdmitDecision {
         if class.sheddable_at(level) {
             return AdmitDecision::Shed { level };
         }
-        if !self.limiter.admit(tenant, now_s) {
+        let pressure = level as f64 / SHED_LEVELS as f64;
+        if !self.limiter.admit_pressured(tenant, now_s, pressure) {
             return AdmitDecision::RateLimited;
         }
         AdmitDecision::Admit
@@ -237,5 +244,30 @@ mod tests {
         ));
         assert_eq!(fresh.admit(1, SlaClass::Batch, 0.0, 0), AdmitDecision::Admit);
         assert_eq!(ctl.tracked_tenants(), 1);
+    }
+
+    #[test]
+    fn fresh_tenant_burst_shrinks_with_the_band() {
+        // A first-seen tenant arriving while the fleet sheds (band 2 of
+        // 4 => pressure 0.5) gets half the burst; the same tenant
+        // arriving cool gets it all. Interactive is used because it is
+        // never band-2 shed — the limiter is what must bite.
+        let mut ctl = AdmissionController::new(AdmissionConfig {
+            rate_per_s: 10.0,
+            burst: 8.0,
+            ..Default::default()
+        });
+        let admitted_at = |ctl: &mut AdmissionController, tenant: u32, level: u8| -> usize {
+            (0..8)
+                .filter(|_| {
+                    matches!(
+                        ctl.admit(tenant, SlaClass::Interactive, 0.0, level),
+                        AdmitDecision::Admit
+                    )
+                })
+                .count()
+        };
+        assert_eq!(admitted_at(&mut ctl, 1, 2), 4, "pressured fresh tenant: half burst");
+        assert_eq!(admitted_at(&mut ctl, 2, 0), 8, "cool fresh tenant: full burst");
     }
 }

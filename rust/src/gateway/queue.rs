@@ -109,8 +109,9 @@ impl GatewayRequest {
 /// numeric total order: positive floats get the sign bit set (shifting
 /// them above every negative), negative floats have all bits flipped
 /// (reversing their inverted bit order). `-0.0` sorts immediately
-/// before `+0.0`, and `-inf`/`+inf` bound the range.
-fn f64_order_bits(v: f64) -> u64 {
+/// before `+0.0`, and `-inf`/`+inf` bound the range. The executor
+/// pool's wall-clock EDF rows reuse the same key transform.
+pub(crate) fn f64_order_bits(v: f64) -> u64 {
     let bits = v.to_bits();
     if bits >> 63 == 1 {
         !bits

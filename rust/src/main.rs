@@ -45,7 +45,12 @@ SERVE OPTIONS:
     --cascade           preview the selection cascade on the first query
     --gateway           run the serving gateway on a synthetic multi-tenant
                         overload trace and print the SLA-class report
-    --tenants <n>       gateway tenants                 [default: 4]
+    --load-harness      drive the executor pool with the adversarial
+                        wall-clock load harness (hostile tenant, bursts,
+                        queue thrash) and print per-class split histograms
+                        (--requests [default 100000], --overload [default
+                        10], --workers/--shards/--queue-depth/--service-us)
+    --tenants <n>       gateway/harness tenants         [default: 4 / 8]
     --overload <x>      offered load vs fleet capacity  [default: 3.0]
     --sla-class <c>     interactive | standard | batch | mixed [default:
                         standard for the serve loop, mixed for --gateway]

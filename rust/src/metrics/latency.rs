@@ -114,6 +114,19 @@ impl LatencyRecorder {
         self.min_s = self.min_s.min(other.min_s);
         self.max_s = self.max_s.max(other.max_s);
     }
+
+    /// Machine-readable summary with the percentile grid the serving
+    /// reports use (count / mean / p50 / p99 / p999 / max).
+    pub fn summary_json(&self) -> crate::json::Json {
+        crate::json::Json::obj(vec![
+            ("count", crate::json::Json::Num(self.count as f64)),
+            ("mean_s", crate::json::Json::Num(self.mean_s())),
+            ("p50_s", crate::json::Json::Num(self.percentile_s(50.0))),
+            ("p99_s", crate::json::Json::Num(self.percentile_s(99.0))),
+            ("p999_s", crate::json::Json::Num(self.percentile_s(99.9))),
+            ("max_s", crate::json::Json::Num(self.max_s())),
+        ])
+    }
 }
 
 #[cfg(test)]
@@ -185,5 +198,21 @@ mod tests {
     #[should_panic]
     fn rejects_nan() {
         LatencyRecorder::new().record(f64::NAN);
+    }
+
+    #[test]
+    fn summary_json_carries_percentile_grid() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0);
+        }
+        let doc = crate::json::Json::parse(&r.summary_json().to_string()).unwrap();
+        assert_eq!(doc.u64_field("count").unwrap(), 100);
+        let p50 = doc.f64_field("p50_s").unwrap();
+        let p99 = doc.f64_field("p99_s").unwrap();
+        let p999 = doc.f64_field("p999_s").unwrap();
+        assert!((p50 - 0.05).abs() / 0.05 < 0.05, "p50={p50}");
+        assert!(p50 <= p99 && p99 <= p999, "percentiles must be monotone");
+        assert!(!r.summary_json().to_string().contains('\n'));
     }
 }

@@ -1,8 +1,22 @@
 //! Per-client token-bucket rate limiting (paper Principle 6.3's
 //! "rate-limit to prevent resource exhaustion"; Table 12's rapid-fire
 //! DDoS row).
+//!
+//! Two hostile-tenant defenses live here besides the bucket itself:
+//!
+//! * **Periodic auto-eviction.** The bucket map is keyed by client id,
+//!   so an attacker rotating ids grows it without bound. `admit`
+//!   amortizes an idle sweep every `evict_every_s` of caller time, so
+//!   memory is bounded by (active clients + churn within one idle
+//!   window) with no separate maintenance path to forget to call.
+//! * **Pressure-scaled fresh burst.** A first-seen client normally gets
+//!   a full-burst bucket; under overload that hands a rotating attacker
+//!   `burst` free requests per rotation. [`RateLimiter::admit_pressured`]
+//!   scales the *initial* allowance by `1 - pressure` (floored at one
+//!   token), so fresh ids still work during overload but cannot burst.
 
 use std::collections::HashMap;
+use std::sync::Mutex;
 
 /// Token bucket limiter keyed by client id.
 #[derive(Debug, Clone)]
@@ -11,6 +25,13 @@ pub struct RateLimiter {
     pub rate_per_s: f64,
     /// Burst capacity (bucket size).
     pub burst: f64,
+    /// Buckets idle at least this long are dropped by the periodic
+    /// sweep (memory bound under client-id churn).
+    pub idle_timeout_s: f64,
+    /// Sweep cadence; the sweep runs inside `admit` when at least this
+    /// much caller time has passed since the previous one.
+    pub evict_every_s: f64,
+    last_evict_s: f64,
     buckets: HashMap<u32, Bucket>,
 }
 
@@ -23,15 +44,46 @@ struct Bucket {
 impl RateLimiter {
     pub fn new(rate_per_s: f64, burst: f64) -> Self {
         assert!(rate_per_s > 0.0 && burst >= 1.0);
-        RateLimiter { rate_per_s, burst, buckets: HashMap::new() }
+        RateLimiter {
+            rate_per_s,
+            burst,
+            idle_timeout_s: 120.0,
+            evict_every_s: 30.0,
+            last_evict_s: f64::NEG_INFINITY,
+            buckets: HashMap::new(),
+        }
+    }
+
+    /// Override the eviction windows (e.g. sub-second for harness runs
+    /// whose whole lifetime is milliseconds of wall clock).
+    pub fn with_eviction(mut self, evict_every_s: f64, idle_timeout_s: f64) -> Self {
+        assert!(evict_every_s > 0.0 && idle_timeout_s > 0.0);
+        self.evict_every_s = evict_every_s;
+        self.idle_timeout_s = idle_timeout_s;
+        self
     }
 
     /// Try to admit a request from `client` at time `now_s`.
     pub fn admit(&mut self, client: u32, now_s: f64) -> bool {
+        self.admit_pressured(client, now_s, 0.0)
+    }
+
+    /// Try to admit under overload `pressure` in [0, 1]: a first-seen
+    /// client's initial bucket is scaled to `burst * (1 - pressure)`
+    /// (never below one token), bounding the free burst a rotating
+    /// hostile id collects while the fleet is shedding. Established
+    /// clients are unaffected — pressure only shapes the *fresh* bucket.
+    pub fn admit_pressured(&mut self, client: u32, now_s: f64, pressure: f64) -> bool {
+        if now_s - self.last_evict_s >= self.evict_every_s {
+            self.last_evict_s = now_s;
+            let idle = self.idle_timeout_s;
+            self.buckets.retain(|_, b| now_s - b.last_s < idle);
+        }
+        let fresh = (self.burst * (1.0 - pressure.clamp(0.0, 1.0))).max(1.0);
         let bucket = self
             .buckets
             .entry(client)
-            .or_insert(Bucket { tokens: self.burst, last_s: now_s });
+            .or_insert(Bucket { tokens: fresh, last_s: now_s });
         // Refill.
         let dt = (now_s - bucket.last_s).max(0.0);
         bucket.tokens = (bucket.tokens + dt * self.rate_per_s).min(self.burst);
@@ -50,8 +102,47 @@ impl RateLimiter {
     }
 
     /// Drop state for clients idle longer than `idle_s` (memory bound).
+    /// `admit` runs this automatically every `evict_every_s`; the
+    /// explicit form remains for callers with their own cadence.
     pub fn evict_idle(&mut self, now_s: f64, idle_s: f64) {
         self.buckets.retain(|_, b| now_s - b.last_s < idle_s);
+    }
+}
+
+/// Mutex-sharded limiter for concurrent admission: client ids hash to a
+/// shard, so admission from many producer threads does not serialize on
+/// one lock (the pool's admission-path contract).
+#[derive(Debug)]
+pub struct ShardedRateLimiter {
+    shards: Vec<Mutex<RateLimiter>>,
+}
+
+impl ShardedRateLimiter {
+    pub fn new(shards: usize, rate_per_s: f64, burst: f64) -> Self {
+        let n = shards.max(1);
+        ShardedRateLimiter {
+            shards: (0..n).map(|_| Mutex::new(RateLimiter::new(rate_per_s, burst))).collect(),
+        }
+    }
+
+    /// Apply [`RateLimiter::with_eviction`] to every shard.
+    pub fn with_eviction(mut self, evict_every_s: f64, idle_timeout_s: f64) -> Self {
+        for shard in &mut self.shards {
+            let rl = shard.get_mut().unwrap();
+            rl.evict_every_s = evict_every_s;
+            rl.idle_timeout_s = idle_timeout_s;
+        }
+        self
+    }
+
+    pub fn admit_pressured(&self, client: u32, now_s: f64, pressure: f64) -> bool {
+        let shard = client as usize % self.shards.len();
+        self.shards[shard].lock().unwrap().admit_pressured(client, now_s, pressure)
+    }
+
+    /// Total clients tracked across all shards.
+    pub fn clients(&self) -> usize {
+        self.shards.iter().map(|s| s.lock().unwrap().clients()).sum()
     }
 }
 
@@ -129,5 +220,74 @@ mod tests {
         assert_eq!(rl.clients(), 100);
         rl.evict_idle(1000.0, 60.0);
         assert_eq!(rl.clients(), 0);
+    }
+
+    #[test]
+    fn id_churn_is_memory_bounded_without_manual_eviction() {
+        // Regression pin for the dead-code eviction bug: 10k rotating
+        // client ids over 1000 s of admission traffic. Pre-fix, `admit`
+        // never evicted anything and the map reached 10_000 buckets;
+        // with the amortized sweep the population is bounded by churn
+        // within one idle window (~idle_timeout_s * offered rate).
+        let mut rl = RateLimiter::new(10.0, 8.0).with_eviction(30.0, 60.0);
+        for i in 0..10_000u32 {
+            rl.admit(i, i as f64 * 0.1); // a new id every 100 ms
+        }
+        // 60 s idle window at 10 ids/s => ~600 live + one sweep of slack.
+        assert!(
+            rl.clients() < 1500,
+            "bucket map must stay bounded under id churn, got {}",
+            rl.clients()
+        );
+    }
+
+    #[test]
+    fn fresh_clients_get_bounded_burst_under_pressure() {
+        // Regression pin for the fresh-full-burst bug: a rotating
+        // hostile id must NOT collect the whole burst while the fleet
+        // is under pressure.
+        let mut rl = RateLimiter::new(10.0, 8.0);
+        let mut pressured = 0;
+        for _ in 0..8 {
+            if rl.admit_pressured(1, 0.0, 0.75) {
+                pressured += 1;
+            }
+        }
+        assert_eq!(pressured, 2, "fresh bucket must scale to burst * (1 - pressure)");
+        // A fresh client arriving with the fleet cool still gets the
+        // full burst (pressure only shapes overload behavior).
+        let mut cool = 0;
+        for _ in 0..8 {
+            if rl.admit_pressured(2, 0.0, 0.0) {
+                cool += 1;
+            }
+        }
+        assert_eq!(cool, 8);
+        // Even at full pressure one token survives: fresh legitimate
+        // clients degrade to trickle, not denial.
+        assert!(rl.admit_pressured(3, 0.0, 1.0));
+        assert!(!rl.admit_pressured(3, 0.0, 1.0));
+    }
+
+    #[test]
+    fn established_clients_unaffected_by_pressure() {
+        let mut rl = RateLimiter::new(10.0, 4.0);
+        assert!(rl.admit(5, 0.0));
+        // The same client under pressure keeps its earned refill.
+        for _ in 0..3 {
+            assert!(rl.admit_pressured(5, 0.0, 0.9));
+        }
+        assert!(!rl.admit_pressured(5, 0.0, 0.9), "burst spent");
+    }
+
+    #[test]
+    fn sharded_limiter_matches_per_shard_semantics() {
+        let rl = ShardedRateLimiter::new(4, 10.0, 2.0);
+        assert!(rl.admit_pressured(9, 0.0, 0.0));
+        assert!(rl.admit_pressured(9, 0.0, 0.0));
+        assert!(!rl.admit_pressured(9, 0.0, 0.0));
+        // A client on another shard is independent.
+        assert!(rl.admit_pressured(10, 0.0, 0.0));
+        assert_eq!(rl.clients(), 2);
     }
 }

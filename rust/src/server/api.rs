@@ -39,8 +39,16 @@ pub enum RejectReason {
 #[derive(Debug, Clone)]
 pub struct InferenceResponse {
     pub tokens: Vec<i32>,
-    /// End-to-end latency including queueing.
+    /// End-to-end latency: queue wait + service (wall clock from
+    /// submission to completion).
     pub latency: Duration,
+    /// Time spent queued before a worker picked the job up. Kept
+    /// separate from `service` — the old executor conflated the two
+    /// (`enqueued.elapsed().max(start.elapsed())`), which made queueing
+    /// delay invisible exactly when it mattered (under contention).
+    pub queue_wait: Duration,
+    /// Time on the worker (generation loop wall time).
+    pub service: Duration,
     /// Pure compute time inside PJRT.
     pub compute: Duration,
     /// Output-sanity anomalies flagged during generation.
@@ -62,6 +70,11 @@ pub struct ServeStats {
     pub failed_execution: u64,
     pub tokens_out: u64,
     pub total_latency_s: f64,
+    /// Queue-wait share of `total_latency_s` (time before a worker
+    /// picked the job up).
+    pub total_queue_wait_s: f64,
+    /// Service share of `total_latency_s` (time on the worker).
+    pub total_service_s: f64,
     pub max_latency_s: f64,
     pub total_compute_s: f64,
     pub halted_early: u64,
@@ -74,6 +87,20 @@ impl ServeStats {
             return 0.0;
         }
         self.total_latency_s / self.served as f64
+    }
+
+    pub fn mean_queue_wait_s(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.total_queue_wait_s / self.served as f64
+    }
+
+    pub fn mean_service_s(&self) -> f64 {
+        if self.served == 0 {
+            return 0.0;
+        }
+        self.total_service_s / self.served as f64
     }
 
     pub fn throughput_tps(&self) -> f64 {
@@ -108,6 +135,8 @@ impl ServeStats {
             ("failed_execution", Json::Num(self.failed_execution as f64)),
             ("tokens_out", Json::Num(self.tokens_out as f64)),
             ("mean_latency_s", Json::Num(self.mean_latency_s())),
+            ("mean_queue_wait_s", Json::Num(self.mean_queue_wait_s())),
+            ("mean_service_s", Json::Num(self.mean_service_s())),
             ("max_latency_s", Json::Num(self.max_latency_s)),
             ("total_compute_s", Json::Num(self.total_compute_s)),
             ("halted_early", Json::Num(self.halted_early as f64)),
@@ -163,6 +192,27 @@ mod tests {
         assert!((s.admitted_fraction() - 0.8).abs() < 1e-12);
         let reason = RejectReason::Execution("pjrt died".into());
         assert!(matches!(reason, RejectReason::Execution(_)));
+    }
+
+    #[test]
+    fn queue_wait_and_service_split_the_latency() {
+        // The PR-8 satellite bugfix: the two latency components are
+        // tracked apart and their means reconstruct the e2e mean.
+        let s = ServeStats {
+            served: 4,
+            total_latency_s: 2.0,
+            total_queue_wait_s: 1.5,
+            total_service_s: 0.5,
+            ..Default::default()
+        };
+        assert!((s.mean_queue_wait_s() - 0.375).abs() < 1e-12);
+        assert!((s.mean_service_s() - 0.125).abs() < 1e-12);
+        assert!(
+            (s.mean_queue_wait_s() + s.mean_service_s() - s.mean_latency_s()).abs() < 1e-12
+        );
+        let parsed = crate::json::Json::parse(&s.to_json().to_string()).unwrap();
+        assert!((parsed.f64_field("mean_queue_wait_s").unwrap() - 0.375).abs() < 1e-12);
+        assert!((parsed.f64_field("mean_service_s").unwrap() - 0.125).abs() < 1e-12);
     }
 
     #[test]

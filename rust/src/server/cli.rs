@@ -24,6 +24,7 @@ use crate::workload::generator::WorkloadGenerator;
 use crate::workload::trace::RequestTrace;
 
 use super::api::InferenceRequest;
+use super::load::{run_load_harness, HarnessConfig};
 use super::service::{Service, ServiceConfig};
 
 pub fn run(args: &Args) -> Result<()> {
@@ -35,6 +36,67 @@ pub fn run(args: &Args) -> Result<()> {
     let max_new: usize = args.num("max-new-tokens", 16usize)?;
     let seed: u64 = args.num("seed", 0u64)?;
     let stats_json = args.flag("stats-json");
+
+    // `--load-harness`: drive the executor pool with the adversarial
+    // wall-clock load harness (no artifacts needed — synthetic spin
+    // workers) and print per-SLA-class split latency histograms. The
+    // accounting closure is verified LAST so a violation exits nonzero
+    // after the report (and the JSON line) has been printed for triage.
+    if args.flag("load-harness") {
+        let overload: f64 = args.num("overload", 10.0f64)?;
+        if !(overload > 0.0) || !overload.is_finite() {
+            bail!("--overload must be a positive finite multiple of pool capacity");
+        }
+        let config = HarnessConfig {
+            // Harness-mode default is the 100k acceptance run; an
+            // explicit --requests always wins.
+            requests: if args.flag("requests") { requests } else { 100_000 },
+            overload,
+            workers: args.num("workers", 0usize)?,
+            shards: args.num("shards", 0usize)?,
+            queue_depth: args.num("queue-depth", 32usize)?,
+            tenants: args.num("tenants", 8u32)?,
+            service_us: args.num("service-us", 40.0f64)?,
+            seed,
+            ..Default::default()
+        };
+        println!(
+            "load harness: {} requests at {:.0}x pool capacity (hostile tenant, same-instant bursts, queue thrash)",
+            config.requests, config.overload
+        );
+        let report = run_load_harness(&config)?;
+        for class in SlaClass::all() {
+            let c = report.class(class);
+            let h = &c.pool.histograms;
+            println!(
+                "  {:<11} submitted={:<6} hit-rate={:>5.1}%  shed={} rate-limited={} overflow={} expired={}  wait p50/p99/p999 {:.2}/{:.2}/{:.2} ms  service p99 {:.2} ms",
+                class.as_str(),
+                c.submitted,
+                c.hit_rate() * 100.0,
+                c.shed,
+                c.rate_limited,
+                c.pool.overflow,
+                c.pool.expired,
+                h.queue_wait.percentile_s(50.0) * 1e3,
+                h.queue_wait.percentile_s(99.0) * 1e3,
+                h.queue_wait.percentile_s(99.9) * 1e3,
+                h.service.percentile_s(99.0) * 1e3,
+            );
+        }
+        println!(
+            "  {} workers / {} shards, wall {:.2} s, {:.0} req/s processed, {} limiter clients tracked",
+            report.workers,
+            report.shards,
+            report.wall_s,
+            report.processed() as f64 / report.wall_s.max(1e-9),
+            report.limiter_clients,
+        );
+        if stats_json {
+            println!("{}", report.to_json().to_string());
+        }
+        report.verify()?;
+        return Ok(());
+    }
 
     // `--gateway`: drive the serving gateway with a synthetic
     // multi-tenant overload trace on the simulated fleet (no artifacts
@@ -322,6 +384,7 @@ pub fn run(args: &Args) -> Result<()> {
         fleet: FleetPreset::from_str(&args.opt("fleet", "edge-box"))?,
         legacy_admission: args.flag("legacy-admission"),
         calibration: args.flag("calibration"),
+        workers: args.num("workers", 0usize)?,
         ..Default::default()
     };
     println!("starting service: variant={variant} dataset={} requests={requests}", dataset.as_str());

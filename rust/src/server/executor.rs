@@ -1,11 +1,16 @@
-//! The PJRT executor thread: owns the (`!Send`) engine, services compute
-//! jobs from a channel.
+//! The PJRT executor: a [`PooledExecutor`] of worker threads, each
+//! owning its own (`!Send`) engine built inside the thread.
+//!
+//! The pre-pool single `pjrt-executor` thread also carried a latent
+//! measurement bug — `job.enqueued.elapsed().max(start.elapsed())`
+//! folded queue wait and service time into one number. The pool
+//! measures them separately ([`InferenceResponse::queue_wait`] /
+//! [`InferenceResponse::service`]); this module only supplies the
+//! PJRT worker and the service-facing handle.
 
-use std::sync::mpsc;
-use std::thread::JoinHandle;
-use std::time::{Duration, Instant};
+use std::time::Duration;
 
-use anyhow::{anyhow, Result};
+use anyhow::Result;
 
 use crate::rng::Pcg;
 use crate::runtime::session::{sample, Sampling};
@@ -13,83 +18,66 @@ use crate::runtime::{Engine, GenerationSession};
 use crate::safety::sanity::{OutputSanity, SanityVerdict};
 
 use super::api::{InferenceRequest, InferenceResponse};
+use super::pool::{ExecOutcome, ExecutorPool, PoolConfig, PoolWorker, PooledExecutor};
 
-/// A compute job: request plus a channel to send the result back on.
-pub struct Job {
-    pub request: InferenceRequest,
-    pub reply: mpsc::Sender<Result<InferenceResponse>>,
-    pub enqueued: Instant,
+/// A worker owning one engine with `variant` loaded.
+struct PjrtWorker {
+    engine: Engine,
+    variant: String,
 }
 
-/// Handle to the executor thread.
+impl PoolWorker for PjrtWorker {
+    fn execute(&mut self, request: &InferenceRequest) -> Result<ExecOutcome> {
+        execute(&self.engine, &self.variant, request)
+    }
+}
+
+/// Handle to the executor pool (the serving front end's compute side).
 pub struct ExecutorHandle {
-    tx: mpsc::Sender<Job>,
-    join: Option<JoinHandle<()>>,
+    inner: PooledExecutor,
 }
 
 impl ExecutorHandle {
-    /// Spawn the executor: builds the engine *inside* the thread (the
-    /// engine is `!Send`) and loads `variant`.
+    /// Spawn the default-sized pool: engines are built *inside* the
+    /// worker threads (PJRT handles are `!Send`) and a build failure
+    /// fails the spawn loudly.
     pub fn spawn(artifacts_dir: String, variant: String) -> Result<ExecutorHandle> {
-        let (tx, rx) = mpsc::channel::<Job>();
-        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
-        let join = std::thread::Builder::new()
-            .name("pjrt-executor".into())
-            .spawn(move || {
-                let engine = match build_engine(&artifacts_dir, &variant) {
-                    Ok(e) => {
-                        let _ = ready_tx.send(Ok(()));
-                        e
-                    }
-                    Err(e) => {
-                        let _ = ready_tx.send(Err(e));
-                        return;
-                    }
-                };
-                for job in rx {
-                    let result = execute(&engine, &variant, &job);
-                    let _ = job.reply.send(result);
-                }
-            })?;
-        ready_rx
-            .recv()
-            .map_err(|_| anyhow!("executor thread died during startup"))??;
-        Ok(ExecutorHandle { tx, join: Some(join) })
+        Self::spawn_pool(artifacts_dir, variant, PoolConfig::default())
     }
 
-    /// Submit a job (non-blocking).
-    pub fn submit(&self, job: Job) -> Result<()> {
-        self.tx.send(job).map_err(|_| anyhow!("executor thread has shut down"))
+    /// Spawn with explicit pool sizing.
+    pub fn spawn_pool(
+        artifacts_dir: String,
+        variant: String,
+        config: PoolConfig,
+    ) -> Result<ExecutorHandle> {
+        let inner = PooledExecutor::spawn(config, move |_worker| {
+            let mut engine = Engine::new(&artifacts_dir)?;
+            engine.load_variant(&variant)?;
+            Ok(PjrtWorker { engine, variant: variant.clone() })
+        })?;
+        Ok(ExecutorHandle { inner })
     }
 
-    /// Convenience: run one request synchronously.
+    /// Queue backpressure in [0, ∞): backlog over capacity, fullest
+    /// class ruling — feeds the admission controller's queue band.
+    pub fn occupancy(&self) -> f64 {
+        self.inner.pool().occupancy()
+    }
+
+    pub fn pool(&self) -> &ExecutorPool {
+        self.inner.pool()
+    }
+
+    /// Convenience: run one request synchronously (no deadline; the
+    /// client id doubles as the queue-sharding tenant).
     pub fn run_sync(&self, request: InferenceRequest) -> Result<InferenceResponse> {
-        let (reply_tx, reply_rx) = mpsc::channel();
-        self.submit(Job { request, reply: reply_tx, enqueued: Instant::now() })?;
-        reply_rx.recv().map_err(|_| anyhow!("executor dropped the reply channel"))?
+        let tenant = request.client_id;
+        self.inner.run_sync(request, tenant, f64::INFINITY)
     }
 }
 
-impl Drop for ExecutorHandle {
-    fn drop(&mut self) {
-        // Close the channel; the thread drains and exits.
-        let (dead_tx, _) = mpsc::channel();
-        self.tx = dead_tx;
-        if let Some(join) = self.join.take() {
-            let _ = join.join();
-        }
-    }
-}
-
-fn build_engine(artifacts_dir: &str, variant: &str) -> Result<Engine> {
-    let mut engine = Engine::new(artifacts_dir)?;
-    engine.load_variant(variant)?;
-    Ok(engine)
-}
-
-fn execute(engine: &Engine, variant: &str, job: &Job) -> Result<InferenceResponse> {
-    let start = Instant::now();
-    let req = &job.request;
+fn execute(engine: &Engine, variant: &str, req: &InferenceRequest) -> Result<ExecOutcome> {
     let prompt: Vec<i32> = req.prompt.iter().map(|&t| t as i32).collect();
 
     let (mut session, mut logits) = GenerationSession::start(engine, variant, &prompt)?;
@@ -119,9 +107,8 @@ fn execute(engine: &Engine, variant: &str, job: &Job) -> Result<InferenceRespons
         tokens.push(token);
     }
 
-    Ok(InferenceResponse {
+    Ok(ExecOutcome {
         tokens,
-        latency: job.enqueued.elapsed().max(start.elapsed()),
         compute: Duration::from_secs_f64(session.compute_seconds),
         anomalies: sanity.anomalies(),
         halted_early,
@@ -129,4 +116,6 @@ fn execute(engine: &Engine, variant: &str, job: &Job) -> Result<InferenceRespons
 }
 
 // Executor integration tests live in rust/tests/server_integration.rs
-// (they need compiled artifacts on disk).
+// (PJRT-touching ones need compiled artifacts on disk; the pool's own
+// dispatch/accounting tests run artifact-free in server/pool.rs and
+// the harness tests in server/load.rs).

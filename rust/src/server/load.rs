@@ -1,0 +1,539 @@
+//! Adversarial load harness for the executor pool: drives ≥100k
+//! synthetic requests at 10–100× overload through the *real* pool
+//! (worker threads, sharded EDF queues, occupancy-fed admission,
+//! sharded rate limiter) and reports per-SLA-class split latency
+//! histograms (queue wait and service separately — p50/p99/p999).
+//!
+//! Hostility modeled (the stress/adversarial pattern from the related
+//! repos): a hostile tenant claiming a large traffic share with a
+//! rotating client id per request (the limiter-churn attack), same-
+//! instant arrival bursts pinned to one tenant (so one shard row takes
+//! the hit — the overflow path), and queue-thrash phases alternating
+//! flood and lull so queues repeatedly fill and drain.
+//!
+//! The schedule is generated deterministically from the seed
+//! ([`crate::rng::Pcg`]); execution timing is wall clock and therefore
+//! not bit-reproducible — the *accounting closure* is exact and
+//! verified instead: per class, submitted = shed + rate-limited +
+//! admitted + overflow and admitted = completed + expired + failed.
+
+use std::hint::spin_loop;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Result};
+
+use crate::gateway::SlaClass;
+use crate::json::Json;
+use crate::rng::Pcg;
+use crate::safety::ratelimit::ShardedRateLimiter;
+use crate::safety::thermal_guard::SHED_LEVELS;
+
+use super::api::InferenceRequest;
+use super::pool::{ClassPoolStats, ExecOutcome, ExecutorPool, PoolConfig, PoolJob, PoolWorker};
+
+/// Harness knobs. Defaults drive the acceptance run: 100k requests at
+/// 10× the pool's service capacity.
+#[derive(Debug, Clone)]
+pub struct HarnessConfig {
+    pub requests: usize,
+    /// Offered load as a multiple of pool service capacity
+    /// (workers / mean service time).
+    pub overload: f64,
+    /// Worker threads; 0 = auto.
+    pub workers: usize,
+    /// Queue shards; 0 = auto (2× workers).
+    pub shards: usize,
+    /// Bound per (shard, class) queue row.
+    pub queue_depth: usize,
+    /// Producer threads submitting the schedule; 0 = auto.
+    pub producers: usize,
+    pub tenants: u32,
+    /// Mean synthetic service time per request (µs of real spin).
+    pub service_us: f64,
+    /// Deadline = arrival + multiple × the request's own service
+    /// estimate. Sized so a full single-class backlog
+    /// (2 × depth × service, with auto shards = 2 × workers) drains
+    /// inside the window — Interactive completes, lower classes expire.
+    pub deadline_multiple: f64,
+    /// Share of traffic from the hostile tenant (tenant 0, Interactive
+    /// class, a fresh client id per request).
+    pub hostile_fraction: f64,
+    /// Same-instant arrival cluster size (pinned to one tenant).
+    pub burst: usize,
+    /// A burst cluster starts every this many arrivals.
+    pub burst_every: usize,
+    /// Arrivals per thrash phase (flood ×2 rate, then lull ×2/3 rate).
+    pub thrash_block: usize,
+    /// Per-client sustained allowance and burst for the sharded limiter.
+    pub rate_per_s: f64,
+    pub rate_burst: f64,
+    pub seed: u64,
+}
+
+impl Default for HarnessConfig {
+    fn default() -> Self {
+        HarnessConfig {
+            requests: 100_000,
+            overload: 10.0,
+            workers: 0,
+            shards: 0,
+            queue_depth: 32,
+            producers: 0,
+            tenants: 8,
+            service_us: 40.0,
+            deadline_multiple: 96.0,
+            hostile_fraction: 0.25,
+            burst: 48,
+            burst_every: 997,
+            thrash_block: 1500,
+            rate_per_s: 50_000.0,
+            rate_burst: 256.0,
+            seed: 0,
+        }
+    }
+}
+
+/// One scheduled arrival (offsets on the pool clock).
+#[derive(Debug, Clone)]
+struct ScheduledRequest {
+    offset_s: f64,
+    tenant: u32,
+    client: u32,
+    class: SlaClass,
+    prompt_tokens: usize,
+    output_tokens: usize,
+    deadline_s: f64,
+}
+
+/// Deterministic synthetic worker: spins for the request's modeled
+/// service time (prefill per prompt token + a step per output token).
+pub struct SyntheticWorker {
+    pub prefill_s: f64,
+    pub step_s: f64,
+}
+
+impl SyntheticWorker {
+    /// Calibrated so a mean request (32 prompt, 16 output tokens) spins
+    /// for `service_us`.
+    pub fn with_mean_service_us(service_us: f64) -> SyntheticWorker {
+        let service_s = service_us.max(0.0) * 1e-6;
+        SyntheticWorker { prefill_s: service_s / 160.0, step_s: service_s / 20.0 }
+    }
+
+    /// Zero-cost worker (bench plumbing overhead measurements).
+    pub fn instant() -> SyntheticWorker {
+        SyntheticWorker { prefill_s: 0.0, step_s: 0.0 }
+    }
+
+    fn service_s(&self, prompt_tokens: usize, output_tokens: usize) -> f64 {
+        prompt_tokens as f64 * self.prefill_s + output_tokens as f64 * self.step_s
+    }
+}
+
+impl PoolWorker for SyntheticWorker {
+    fn execute(&mut self, request: &InferenceRequest) -> Result<ExecOutcome> {
+        let service = self.service_s(request.prompt.len(), request.max_new_tokens);
+        if service > 0.0 {
+            let start = Instant::now();
+            while start.elapsed().as_secs_f64() < service {
+                spin_loop();
+            }
+        }
+        Ok(ExecOutcome {
+            tokens: Vec::new(),
+            compute: Duration::from_secs_f64(service),
+            anomalies: 0,
+            halted_early: false,
+        })
+    }
+}
+
+/// Per-class outcome ledger: harness-side admission counts plus the
+/// pool's own counters and split histograms.
+#[derive(Debug, Clone)]
+pub struct ClassReport {
+    pub class: SlaClass,
+    pub submitted: u64,
+    /// Dropped by the occupancy shed ladder before reaching the pool.
+    pub shed: u64,
+    pub rate_limited: u64,
+    pub pool: ClassPoolStats,
+}
+
+impl ClassReport {
+    /// Requests that completed within deadline over everything offered.
+    pub fn hit_rate(&self) -> f64 {
+        if self.submitted == 0 {
+            return 0.0;
+        }
+        self.pool.deadline_hits as f64 / self.submitted as f64
+    }
+
+    fn to_json(&self) -> Json {
+        let h = &self.pool.histograms;
+        Json::obj(vec![
+            ("submitted", Json::Num(self.submitted as f64)),
+            ("shed", Json::Num(self.shed as f64)),
+            ("rate_limited", Json::Num(self.rate_limited as f64)),
+            ("admitted", Json::Num(self.pool.admitted as f64)),
+            ("overflow", Json::Num(self.pool.overflow as f64)),
+            ("expired", Json::Num(self.pool.expired as f64)),
+            ("completed", Json::Num(self.pool.completed as f64)),
+            ("failed", Json::Num(self.pool.failed as f64)),
+            ("deadline_hits", Json::Num(self.pool.deadline_hits as f64)),
+            ("hit_rate", Json::Num(self.hit_rate())),
+            ("queue_wait", h.queue_wait.summary_json()),
+            ("service", h.service.summary_json()),
+            ("e2e", h.e2e.summary_json()),
+        ])
+    }
+}
+
+/// The harness verdict: per-class ledgers plus run shape.
+#[derive(Debug, Clone)]
+pub struct HarnessReport {
+    pub classes: [ClassReport; 3],
+    pub wall_s: f64,
+    pub requests: usize,
+    pub overload: f64,
+    pub workers: usize,
+    pub shards: usize,
+    /// Clients tracked by the limiter at the end — bounded under id
+    /// churn by the eviction sweep.
+    pub limiter_clients: usize,
+}
+
+impl HarnessReport {
+    pub fn class(&self, class: SlaClass) -> &ClassReport {
+        &self.classes[class.index()]
+    }
+
+    /// Total requests that reached a terminal outcome.
+    pub fn processed(&self) -> u64 {
+        self.classes
+            .iter()
+            .map(|c| {
+                c.shed
+                    + c.rate_limited
+                    + c.pool.overflow
+                    + c.pool.expired
+                    + c.pool.completed
+                    + c.pool.failed
+            })
+            .sum()
+    }
+
+    /// Accounting closure: every submitted request has exactly one
+    /// terminal outcome. Violations are a pool bug, not load noise.
+    pub fn verify(&self) -> Result<()> {
+        for c in &self.classes {
+            let pre_pool = c.shed + c.rate_limited + c.pool.admitted + c.pool.overflow;
+            if pre_pool != c.submitted {
+                bail!(
+                    "{}: submitted {} != shed {} + rate_limited {} + admitted {} + overflow {}",
+                    c.class.as_str(),
+                    c.submitted,
+                    c.shed,
+                    c.rate_limited,
+                    c.pool.admitted,
+                    c.pool.overflow
+                );
+            }
+            let in_pool = c.pool.completed + c.pool.expired + c.pool.failed;
+            if in_pool != c.pool.admitted {
+                bail!(
+                    "{}: admitted {} != completed {} + expired {} + failed {}",
+                    c.class.as_str(),
+                    c.pool.admitted,
+                    c.pool.completed,
+                    c.pool.expired,
+                    c.pool.failed
+                );
+            }
+        }
+        if self.processed() != self.requests as u64 {
+            bail!("processed {} of {} scheduled requests", self.processed(), self.requests);
+        }
+        Ok(())
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            (
+                "harness",
+                Json::obj(vec![
+                    ("requests", Json::Num(self.requests as f64)),
+                    ("processed", Json::Num(self.processed() as f64)),
+                    ("overload", Json::Num(self.overload)),
+                    ("workers", Json::Num(self.workers as f64)),
+                    ("shards", Json::Num(self.shards as f64)),
+                    ("wall_s", Json::Num(self.wall_s)),
+                    (
+                        "throughput_rps",
+                        Json::Num(if self.wall_s > 0.0 {
+                            self.processed() as f64 / self.wall_s
+                        } else {
+                            0.0
+                        }),
+                    ),
+                    ("limiter_clients", Json::Num(self.limiter_clients as f64)),
+                ]),
+            ),
+            (
+                "classes",
+                Json::obj(
+                    self.classes
+                        .iter()
+                        .map(|c| (c.class.as_str(), c.to_json()))
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+}
+
+/// Map pool occupancy to a shed band — the same thresholds as the
+/// gateway's `AdmissionConfig` queue bands (0.3 caution / 0.75
+/// critical), so the wall-clock path sheds on the ladder the
+/// logical-clock path already speaks.
+fn occupancy_band(occupancy: f64) -> u8 {
+    if occupancy >= 0.75 {
+        2
+    } else if occupancy >= 0.3 {
+        1
+    } else {
+        0
+    }
+}
+
+/// Build the deterministic arrival schedule.
+fn build_schedule(config: &HarnessConfig, workers: usize) -> Vec<ScheduledRequest> {
+    let mut rng = Pcg::new(config.seed, 0x10AD);
+    let mean_service_s = config.service_us.max(1e-9) * 1e-6;
+    let capacity_rps = workers as f64 / mean_service_s;
+    let base_rate = (config.overload.max(0.01) * capacity_rps).max(1.0);
+    let hostile_every = if config.hostile_fraction > 0.0 {
+        (1.0 / config.hostile_fraction).round().max(1.0) as usize
+    } else {
+        usize::MAX
+    };
+    let worker_model = SyntheticWorker::with_mean_service_us(config.service_us);
+
+    let mut out = Vec::with_capacity(config.requests);
+    let mut t = 0.0f64;
+    let mut burst_left = 0usize;
+    let mut burst_tenant = 0u32;
+    for i in 0..config.requests {
+        // Thrash phases: flood at 2× then lull at 2/3× — the mean
+        // inter-arrival over a flood+lull pair is exactly 1/base_rate.
+        let phase_rate = if (i / config.thrash_block.max(1)) % 2 == 0 {
+            base_rate * 2.0
+        } else {
+            base_rate * (2.0 / 3.0)
+        };
+        if burst_left > 0 {
+            burst_left -= 1; // same-instant arrival: t unchanged
+        } else {
+            t += rng.next_exp(phase_rate);
+            if config.burst_every > 0 && i % config.burst_every.max(1) == 0 && i > 0 {
+                burst_left = config.burst;
+                burst_tenant = 1 + (rng.below(config.tenants.max(2) as u64 - 1) as u32);
+            }
+        }
+        let in_burst = burst_left > 0;
+        let hostile = i % hostile_every == 0 && !in_burst;
+        let (tenant, client, class) = if hostile {
+            // Rotating fresh id per request: the limiter-churn attack.
+            (0u32, 0x8000_0000u32 | i as u32, SlaClass::Interactive)
+        } else if in_burst {
+            // The whole cluster lands on one tenant = one shard row.
+            (burst_tenant, burst_tenant, SlaClass::all()[i % 3])
+        } else {
+            let tenant = 1 + (i as u32 % config.tenants.max(2).saturating_sub(1));
+            (tenant, tenant, SlaClass::all()[i % 3])
+        };
+        let prompt_tokens = 24 + rng.below(17) as usize; // 24..=40
+        let output_tokens = 8 + rng.below(17) as usize; // 8..=24
+        let service_est_s = worker_model.service_s(prompt_tokens, output_tokens);
+        out.push(ScheduledRequest {
+            offset_s: t,
+            tenant,
+            client,
+            class,
+            prompt_tokens,
+            output_tokens,
+            deadline_s: t + config.deadline_multiple * service_est_s,
+        });
+    }
+    out
+}
+
+/// Run the harness: spawn the pool, pace the schedule in from producer
+/// threads through the occupancy/limiter admission path, drain, and
+/// assemble the report. Call [`HarnessReport::verify`] on the result.
+pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
+    let pool_config = PoolConfig {
+        workers: config.workers,
+        shards: config.shards,
+        queue_depth: config.queue_depth,
+    }
+    .resolved();
+    let workers = pool_config.workers;
+    let shards = pool_config.shards;
+    let schedule = build_schedule(config, workers);
+    let span_s = schedule.last().map(|r| r.offset_s).unwrap_or(0.0).max(1e-3);
+
+    let producers = if config.producers == 0 {
+        4.min(config.requests.max(1))
+    } else {
+        config.producers
+    };
+    // Eviction windows scaled to the run's own lifetime so the sweep
+    // actually fires inside a sub-second harness run.
+    let limiter = ShardedRateLimiter::new(shards, config.rate_per_s, config.rate_burst)
+        .with_eviction((span_s / 8.0).max(1e-4), (span_s / 4.0).max(2e-4));
+
+    // Harness-side admission counters, indexed by class.
+    let submitted: [AtomicU64; 3] = Default::default();
+    let shed: [AtomicU64; 3] = Default::default();
+    let rate_limited: [AtomicU64; 3] = Default::default();
+
+    let pool = ExecutorPool::new(pool_config);
+    let service_us = config.service_us;
+    pool.run_scoped(
+        move |_worker| Ok(SyntheticWorker::with_mean_service_us(service_us)),
+        |pool| {
+            std::thread::scope(|scope| {
+                for p in 0..producers {
+                    let schedule = &schedule;
+                    let limiter = &limiter;
+                    let submitted = &submitted;
+                    let shed = &shed;
+                    let rate_limited = &rate_limited;
+                    scope.spawn(move || {
+                        for req in schedule.iter().skip(p).step_by(producers) {
+                            // Pace against the pool clock: sleep the
+                            // bulk of a long gap, spin the rest.
+                            loop {
+                                let gap = req.offset_s - pool.now_s();
+                                if gap <= 0.0 {
+                                    break;
+                                }
+                                if gap > 1e-3 {
+                                    std::thread::sleep(Duration::from_secs_f64(gap - 5e-4));
+                                } else {
+                                    spin_loop();
+                                }
+                            }
+                            let class_idx = req.class.index();
+                            submitted[class_idx].fetch_add(1, Ordering::SeqCst);
+                            let level = occupancy_band(pool.occupancy());
+                            if req.class.sheddable_at(level) {
+                                shed[class_idx].fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            let pressure = level as f64 / SHED_LEVELS as f64;
+                            if !limiter.admit_pressured(req.client, pool.now_s(), pressure) {
+                                rate_limited[class_idx].fetch_add(1, Ordering::SeqCst);
+                                continue;
+                            }
+                            // Overflow is counted by the pool itself.
+                            let _ = pool.try_submit(PoolJob {
+                                request: InferenceRequest {
+                                    client_id: req.client,
+                                    class: req.class,
+                                    prompt: vec![0; req.prompt_tokens],
+                                    max_new_tokens: req.output_tokens,
+                                    temperature: 0.0,
+                                    seed: 0,
+                                },
+                                tenant: req.tenant,
+                                deadline_s: req.deadline_s,
+                                reply: None,
+                            });
+                        }
+                    });
+                }
+            });
+        },
+    )?;
+
+    let wall_s = pool.now_s();
+    let pool_stats = pool.stats();
+    let classes = std::array::from_fn(|i| ClassReport {
+        class: SlaClass::all()[i],
+        submitted: submitted[i].load(Ordering::SeqCst),
+        shed: shed[i].load(Ordering::SeqCst),
+        rate_limited: rate_limited[i].load(Ordering::SeqCst),
+        pool: pool_stats[i].clone(),
+    });
+    Ok(HarnessReport {
+        classes,
+        wall_s,
+        requests: config.requests,
+        overload: config.overload,
+        workers,
+        shards,
+        limiter_clients: limiter.clients(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_is_deterministic_and_fully_shaped() {
+        let config = HarnessConfig { requests: 5000, ..Default::default() };
+        let a = build_schedule(&config, 4);
+        let b = build_schedule(&config, 4);
+        assert_eq!(a.len(), 5000);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.offset_s.to_bits(), y.offset_s.to_bits());
+            assert_eq!(x.client, y.client);
+        }
+        // Offsets are non-decreasing; bursts share an instant.
+        assert!(a.windows(2).all(|w| w[0].offset_s <= w[1].offset_s));
+        let hostile = a.iter().filter(|r| r.tenant == 0).count();
+        assert!(hostile > 1000, "hostile tenant must claim real share, got {hostile}");
+        // Every hostile request rotates to a fresh client id.
+        let mut ids: Vec<u32> =
+            a.iter().filter(|r| r.tenant == 0).map(|r| r.client).collect();
+        let total = ids.len();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), total, "hostile ids must never repeat");
+        let burst_instants = a
+            .windows(2)
+            .filter(|w| w[0].offset_s == w[1].offset_s && w[0].tenant == w[1].tenant)
+            .count();
+        assert!(burst_instants > 100, "burst clusters missing, got {burst_instants}");
+    }
+
+    #[test]
+    fn occupancy_bands_match_gateway_thresholds() {
+        assert_eq!(occupancy_band(0.0), 0);
+        assert_eq!(occupancy_band(0.29), 0);
+        assert_eq!(occupancy_band(0.3), 1);
+        assert_eq!(occupancy_band(0.74), 1);
+        assert_eq!(occupancy_band(0.75), 2);
+        assert_eq!(occupancy_band(4.0), 2);
+    }
+
+    #[test]
+    fn small_run_closes_accounting() {
+        let config = HarnessConfig {
+            requests: 2000,
+            overload: 10.0,
+            workers: 2,
+            service_us: 20.0,
+            ..Default::default()
+        };
+        let report = run_load_harness(&config).unwrap();
+        report.verify().unwrap();
+        assert_eq!(report.processed(), 2000);
+        let doc = Json::parse(&report.to_json().to_string()).unwrap();
+        assert_eq!(doc.field("harness").unwrap().u64_field("processed").unwrap(), 2000);
+    }
+}

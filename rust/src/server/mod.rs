@@ -1,20 +1,26 @@
 //! The serving layer: validation → gateway admission (SLA shed ladder +
-//! rate limiting, see [`crate::gateway`]) → PJRT execution → output
-//! sanity, over std threads + channels (the offline toolchain has no
-//! tokio; see Cargo.toml).
+//! rate limiting, see [`crate::gateway`]) → pooled PJRT execution →
+//! output sanity, over std threads + channels (the offline toolchain
+//! has no tokio; see Cargo.toml).
 //!
-//! PJRT wrapper types are `!Send` (raw pointers), so a dedicated
-//! *executor thread* owns the [`crate::runtime::Engine`]; the request
-//! loop validates and admits requests, then ships compute jobs over an
-//! mpsc channel and receives responses on per-request channels. The CPU
-//! PJRT client parallelizes internally, so one executor thread saturates
-//! the host.
+//! PJRT wrapper types are `!Send` (raw pointers), so each worker of the
+//! [`pool::ExecutorPool`] builds its own [`crate::runtime::Engine`]
+//! *inside* its thread. Admission shards by tenant across per-class
+//! wall-clock-EDF queue rows, so submitters never serialize on one
+//! lock; workers drain strictly by SLA class, earliest deadline first.
+//! Real queue occupancy feeds back into the gateway shed ladder, and
+//! the adversarial harness in [`load`] drives the whole path at 10–100×
+//! overload.
 
 pub mod api;
 pub mod cli;
 pub mod executor;
+pub mod load;
+pub mod pool;
 pub mod service;
 
 pub use api::{InferenceRequest, InferenceResponse, RejectReason, ServeStats};
 pub use executor::ExecutorHandle;
+pub use load::{run_load_harness, HarnessConfig, HarnessReport};
+pub use pool::{ExecutorPool, PoolConfig, PooledExecutor};
 pub use service::{Service, ServiceConfig};

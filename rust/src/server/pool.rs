@@ -1,0 +1,664 @@
+//! Multi-threaded executor pool: sharded per-tenant EDF queues drained
+//! by a fixed set of worker threads (std threads — the offline/vendored
+//! build has no tokio).
+//!
+//! Design contract (see ROADMAP.md "Executor pool contract"):
+//!
+//! * **Sharding.** Jobs land in `shards` independent queue shards
+//!   (`tenant % shards`), each a mutex over three per-class EDF rows.
+//!   Admission and submission touch exactly one shard lock plus a few
+//!   atomics — no global lock on the submit path.
+//! * **Dispatch.** Workers drain strict SLA-class priority first
+//!   (Interactive → Standard → Batch — the same dispatch law as the
+//!   gateway's logical-clock wave scheduler), then earliest deadline
+//!   first within a class, sweeping shards starting from the worker's
+//!   home shard so workers spread over shards instead of convoying.
+//! * **Wall-clock EDF.** Deadlines here are seconds on the pool's own
+//!   monotonic clock ([`ExecutorPool::now_s`]); entries whose deadline
+//!   passes before dispatch are dropped as explicit expiries. This path
+//!   is intentionally wall-clock-dependent and therefore NOT
+//!   bit-deterministic; the gateway's logical-clock EDF queues are
+//!   untouched and keep their bit-exactness contract.
+//! * **Measurement.** Queue wait and service time are recorded as
+//!   *separate* per-class histograms ([`crate::metrics::LatencyRecorder`]):
+//!   conflating them is exactly the latent bug this pool replaced
+//!   (`enqueued.elapsed().max(start.elapsed())`). Expired jobs record
+//!   their terminal queue wait so tail-wait percentiles cannot be
+//!   flattered by dropping the worst waiters.
+//!
+//! Workers are constructed *inside* their threads by a caller-supplied
+//! factory (PJRT engine handles are `!Send`), with a ready-channel
+//! handshake so an engine that fails to build fails the spawn loudly.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Result};
+
+use crate::gateway::queue::f64_order_bits;
+use crate::metrics::LatencyRecorder;
+
+use super::api::{InferenceRequest, InferenceResponse};
+
+/// What a worker's `execute` returns; the pool wraps it with timing
+/// into an [`InferenceResponse`].
+#[derive(Debug, Clone)]
+pub struct ExecOutcome {
+    pub tokens: Vec<i32>,
+    /// Pure compute time as measured/modeled by the worker.
+    pub compute: Duration,
+    pub anomalies: u32,
+    pub halted_early: bool,
+}
+
+/// One executor worker: owns whatever engine state it needs (possibly
+/// `!Send` — workers are built inside their threads).
+pub trait PoolWorker {
+    fn execute(&mut self, request: &InferenceRequest) -> Result<ExecOutcome>;
+}
+
+/// A job submitted to the pool. `deadline_s` is absolute on the pool
+/// clock ([`ExecutorPool::now_s`]); `f64::INFINITY` means no deadline.
+/// `reply` is optional: fire-and-forget load generators skip the
+/// channel and read pool statistics instead.
+pub struct PoolJob {
+    pub request: InferenceRequest,
+    pub tenant: u32,
+    pub deadline_s: f64,
+    pub reply: Option<mpsc::Sender<Result<InferenceResponse>>>,
+}
+
+struct QueuedJob {
+    job: PoolJob,
+    /// Submission sequence (EDF tie-break, same key law as the gateway
+    /// queues: `(f64_order_bits(deadline), id)`).
+    id: u64,
+    enqueued_s: f64,
+}
+
+impl QueuedJob {
+    fn key(&self) -> (u64, u64) {
+        (f64_order_bits(self.job.deadline_s), self.id)
+    }
+}
+
+/// Pool sizing knobs.
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    /// Worker threads. 0 = auto (`available_parallelism` capped at 8).
+    pub workers: usize,
+    /// Queue shards. 0 = auto (2× workers).
+    pub shards: usize,
+    /// Bound per (shard, class) EDF row; an insert into a full row is
+    /// an explicit overflow.
+    pub queue_depth: usize,
+}
+
+impl Default for PoolConfig {
+    fn default() -> Self {
+        PoolConfig { workers: 0, shards: 0, queue_depth: 32 }
+    }
+}
+
+impl PoolConfig {
+    /// Resolve the auto (0) sizes against the host.
+    pub fn resolved(&self) -> PoolConfig {
+        let workers = if self.workers == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(2).clamp(2, 8)
+        } else {
+            self.workers
+        };
+        let shards = if self.shards == 0 { workers * 2 } else { self.shards };
+        PoolConfig { workers, shards, queue_depth: self.queue_depth.max(1) }
+    }
+}
+
+#[derive(Debug, Default)]
+struct ClassCounters {
+    admitted: AtomicU64,
+    overflow: AtomicU64,
+    expired: AtomicU64,
+    completed: AtomicU64,
+    failed: AtomicU64,
+    /// Completions that finished before their deadline.
+    deadline_hits: AtomicU64,
+}
+
+/// Per-class split histograms. Queue wait includes expired jobs (their
+/// terminal wait); service and end-to-end cover executed jobs only.
+#[derive(Debug, Clone, Default)]
+pub struct ClassHistograms {
+    pub queue_wait: LatencyRecorder,
+    pub service: LatencyRecorder,
+    pub e2e: LatencyRecorder,
+}
+
+/// Counter + histogram snapshot for one SLA class.
+#[derive(Debug, Clone, Default)]
+pub struct ClassPoolStats {
+    pub admitted: u64,
+    pub overflow: u64,
+    pub expired: u64,
+    pub completed: u64,
+    pub failed: u64,
+    pub deadline_hits: u64,
+    pub histograms: ClassHistograms,
+}
+
+struct Shard {
+    /// `rows[class.index()]`, each EDF-sorted ascending by key.
+    rows: Mutex<[Vec<QueuedJob>; 3]>,
+}
+
+/// The shared pool state. Workers, producers, and stat readers all
+/// operate through `&ExecutorPool`.
+pub struct ExecutorPool {
+    config: PoolConfig,
+    shards: Vec<Shard>,
+    epoch: Instant,
+    seq: AtomicU64,
+    /// Per-class queued-entry counts (fast occupancy + dispatch skip).
+    queued: [AtomicUsize; 3],
+    counters: [ClassCounters; 3],
+    hist: Mutex<[ClassHistograms; 3]>,
+    shutdown: AtomicBool,
+    sleep_lock: Mutex<()>,
+    wake: Condvar,
+}
+
+impl ExecutorPool {
+    pub fn new(config: PoolConfig) -> ExecutorPool {
+        let config = config.resolved();
+        let shards =
+            (0..config.shards).map(|_| Shard { rows: Mutex::new(Default::default()) }).collect();
+        ExecutorPool {
+            config,
+            shards,
+            epoch: Instant::now(),
+            seq: AtomicU64::new(0),
+            queued: Default::default(),
+            counters: Default::default(),
+            hist: Mutex::new(Default::default()),
+            shutdown: AtomicBool::new(false),
+            sleep_lock: Mutex::new(()),
+            wake: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &PoolConfig {
+        &self.config
+    }
+
+    /// Seconds since the pool was created (the pool clock deadlines and
+    /// schedules are expressed on).
+    pub fn now_s(&self) -> f64 {
+        self.epoch.elapsed().as_secs_f64()
+    }
+
+    /// Backlog over capacity, the fullest class row ruling — the same
+    /// semantics as the gateway's `SlaQueues::utilization`, feeding the
+    /// admission controller's queue-backpressure band.
+    pub fn occupancy(&self) -> f64 {
+        let cap = (self.shards.len() * self.config.queue_depth) as f64;
+        self.queued
+            .iter()
+            .map(|q| q.load(Ordering::SeqCst) as f64 / cap)
+            .fold(0.0, f64::max)
+    }
+
+    /// Enqueue a job on its tenant's shard. `Err` returns the job on a
+    /// full row (counted as overflow) or after shutdown.
+    pub fn try_submit(&self, job: PoolJob) -> Result<(), PoolJob> {
+        let class = job.request.class.index();
+        if self.shutdown.load(Ordering::SeqCst) {
+            return Err(job);
+        }
+        let shard = job.tenant as usize % self.shards.len();
+        let id = self.seq.fetch_add(1, Ordering::SeqCst);
+        let entry = QueuedJob { job, id, enqueued_s: self.now_s() };
+        {
+            let mut rows = self.shards[shard].rows.lock().unwrap();
+            let row = &mut rows[class];
+            if row.len() >= self.config.queue_depth {
+                self.counters[class].overflow.fetch_add(1, Ordering::SeqCst);
+                return Err(entry.job);
+            }
+            let key = entry.key();
+            let pos = row.partition_point(|r| r.key() <= key);
+            row.insert(pos, entry);
+        }
+        self.counters[class].admitted.fetch_add(1, Ordering::SeqCst);
+        self.queued[class].fetch_add(1, Ordering::SeqCst);
+        self.wake.notify_one();
+        Ok(())
+    }
+
+    /// Pop the highest-priority job: strict class priority globally,
+    /// EDF within a class, sweeping shards from `home`.
+    fn take_next(&self, home: usize) -> Option<QueuedJob> {
+        let n = self.shards.len();
+        for class in 0..3 {
+            if self.queued[class].load(Ordering::SeqCst) == 0 {
+                continue;
+            }
+            for k in 0..n {
+                let shard = &self.shards[(home + k) % n];
+                let mut rows = shard.rows.lock().unwrap();
+                let row = &mut rows[class];
+                if !row.is_empty() {
+                    let entry = row.remove(0);
+                    self.queued[class].fetch_sub(1, Ordering::SeqCst);
+                    return Some(entry);
+                }
+            }
+        }
+        None
+    }
+
+    fn queued_total(&self) -> usize {
+        self.queued.iter().map(|q| q.load(Ordering::SeqCst)).sum()
+    }
+
+    /// Run one worker until shutdown AND drained. Public so spawned
+    /// (`PooledExecutor`) and scoped ([`ExecutorPool::run_scoped`])
+    /// entries share one loop.
+    pub fn worker_loop<W: PoolWorker>(&self, home: usize, worker: &mut W) {
+        loop {
+            match self.take_next(home) {
+                Some(entry) => self.process(worker, entry),
+                None => {
+                    if self.shutdown.load(Ordering::SeqCst) && self.queued_total() == 0 {
+                        return;
+                    }
+                    // Bounded sleep: the submit→notify race can miss a
+                    // wakeup between our emptiness check and the wait,
+                    // so the timeout caps the miss at 1 ms.
+                    let guard = self.sleep_lock.lock().unwrap();
+                    let _ = self
+                        .wake
+                        .wait_timeout(guard, Duration::from_millis(1))
+                        .unwrap();
+                }
+            }
+        }
+    }
+
+    fn process<W: PoolWorker>(&self, worker: &mut W, entry: QueuedJob) {
+        let class = entry.job.request.class.index();
+        let start_s = self.now_s();
+        let queue_wait_s = (start_s - entry.enqueued_s).max(0.0);
+        if entry.job.deadline_s < start_s {
+            // Expired in queue: terminal wait recorded, never executed.
+            self.counters[class].expired.fetch_add(1, Ordering::SeqCst);
+            self.hist.lock().unwrap()[class].queue_wait.record(queue_wait_s);
+            if let Some(reply) = entry.job.reply {
+                let _ = reply.send(Err(anyhow!(
+                    "deadline expired after {queue_wait_s:.6} s in queue"
+                )));
+            }
+            return;
+        }
+        let started = Instant::now();
+        let result = worker.execute(&entry.job.request);
+        let service_s = started.elapsed().as_secs_f64();
+        let done_s = self.now_s();
+        let e2e_s = (done_s - entry.enqueued_s).max(0.0);
+        {
+            let mut hist = self.hist.lock().unwrap();
+            let h = &mut hist[class];
+            h.queue_wait.record(queue_wait_s);
+            h.service.record(service_s);
+            h.e2e.record(e2e_s);
+        }
+        match result {
+            Ok(out) => {
+                self.counters[class].completed.fetch_add(1, Ordering::SeqCst);
+                if done_s <= entry.job.deadline_s {
+                    self.counters[class].deadline_hits.fetch_add(1, Ordering::SeqCst);
+                }
+                if let Some(reply) = entry.job.reply {
+                    let _ = reply.send(Ok(InferenceResponse {
+                        tokens: out.tokens,
+                        latency: Duration::from_secs_f64(e2e_s),
+                        queue_wait: Duration::from_secs_f64(queue_wait_s),
+                        service: Duration::from_secs_f64(service_s),
+                        compute: out.compute,
+                        anomalies: out.anomalies,
+                        halted_early: out.halted_early,
+                    }));
+                }
+            }
+            Err(e) => {
+                self.counters[class].failed.fetch_add(1, Ordering::SeqCst);
+                if let Some(reply) = entry.job.reply {
+                    let _ = reply.send(Err(e));
+                }
+            }
+        }
+    }
+
+    /// Stop accepting work and wake every worker; workers exit once the
+    /// queues are drained.
+    pub fn request_shutdown(&self) {
+        self.shutdown.store(true, Ordering::SeqCst);
+        self.wake.notify_all();
+    }
+
+    /// Per-class counter + histogram snapshot.
+    pub fn stats(&self) -> [ClassPoolStats; 3] {
+        let hist = self.hist.lock().unwrap();
+        std::array::from_fn(|c| {
+            let k = &self.counters[c];
+            ClassPoolStats {
+                admitted: k.admitted.load(Ordering::SeqCst),
+                overflow: k.overflow.load(Ordering::SeqCst),
+                expired: k.expired.load(Ordering::SeqCst),
+                completed: k.completed.load(Ordering::SeqCst),
+                failed: k.failed.load(Ordering::SeqCst),
+                deadline_hits: k.deadline_hits.load(Ordering::SeqCst),
+                histograms: hist[c].clone(),
+            }
+        })
+    }
+
+    /// Run `workers` scoped worker threads around `body` (the producer
+    /// side), then drain and join. Worker state is built in-thread by
+    /// `factory(worker_index)`; a factory failure aborts the run.
+    pub fn run_scoped<W, F, B, R>(&self, factory: F, body: B) -> Result<R>
+    where
+        W: PoolWorker,
+        F: Fn(usize) -> Result<W> + Sync,
+        B: FnOnce(&ExecutorPool) -> R,
+    {
+        std::thread::scope(|scope| -> Result<R> {
+            let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+            let factory = &factory;
+            for w in 0..self.config.workers {
+                let ready = ready_tx.clone();
+                scope.spawn(move || match factory(w) {
+                    Ok(mut worker) => {
+                        let _ = ready.send(Ok(()));
+                        self.worker_loop(w, &mut worker);
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                    }
+                });
+            }
+            drop(ready_tx);
+            for _ in 0..self.config.workers {
+                match ready_rx.recv() {
+                    Ok(Ok(())) => {}
+                    Ok(Err(e)) => {
+                        self.request_shutdown();
+                        return Err(e.context("executor pool worker failed to start"));
+                    }
+                    Err(_) => {
+                        self.request_shutdown();
+                        return Err(anyhow!("executor pool worker died during startup"));
+                    }
+                }
+            }
+            let out = body(self);
+            self.request_shutdown();
+            Ok(out)
+        })
+    }
+}
+
+/// Persistent (non-scoped) pool: worker threads are spawned detached
+/// from any scope and joined on drop — the long-lived service path.
+pub struct PooledExecutor {
+    pool: Arc<ExecutorPool>,
+    joins: Vec<JoinHandle<()>>,
+}
+
+impl PooledExecutor {
+    pub fn spawn<W, F>(config: PoolConfig, factory: F) -> Result<PooledExecutor>
+    where
+        W: PoolWorker + 'static,
+        F: Fn(usize) -> Result<W> + Send + Sync + 'static,
+    {
+        let pool = Arc::new(ExecutorPool::new(config));
+        let factory = Arc::new(factory);
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<()>>();
+        let mut joins = Vec::new();
+        for w in 0..pool.config.workers {
+            let pool = Arc::clone(&pool);
+            let factory = Arc::clone(&factory);
+            let ready = ready_tx.clone();
+            let join = std::thread::Builder::new()
+                .name(format!("qeil-executor-{w}"))
+                .spawn(move || match factory(w) {
+                    Ok(mut worker) => {
+                        let _ = ready.send(Ok(()));
+                        pool.worker_loop(w, &mut worker);
+                    }
+                    Err(e) => {
+                        let _ = ready.send(Err(e));
+                    }
+                })?;
+            joins.push(join);
+        }
+        drop(ready_tx);
+        for _ in 0..joins.len() {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    pool.request_shutdown();
+                    return Err(e.context("executor pool worker failed to start"));
+                }
+                Err(_) => {
+                    pool.request_shutdown();
+                    return Err(anyhow!("executor pool worker died during startup"));
+                }
+            }
+        }
+        Ok(PooledExecutor { pool, joins })
+    }
+
+    pub fn pool(&self) -> &ExecutorPool {
+        &self.pool
+    }
+
+    /// Submit and block for the response (the synchronous service path).
+    pub fn run_sync(
+        &self,
+        request: InferenceRequest,
+        tenant: u32,
+        deadline_s: f64,
+    ) -> Result<InferenceResponse> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.pool
+            .try_submit(PoolJob { request, tenant, deadline_s, reply: Some(reply_tx) })
+            .map_err(|_| anyhow!("executor pool queue full or shut down"))?;
+        reply_rx.recv().map_err(|_| anyhow!("executor pool dropped the reply channel"))?
+    }
+}
+
+impl Drop for PooledExecutor {
+    fn drop(&mut self) {
+        self.pool.request_shutdown();
+        for join in self.joins.drain(..) {
+            let _ = join.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::SlaClass;
+
+    fn request(class: SlaClass, tenant: u32) -> InferenceRequest {
+        InferenceRequest {
+            client_id: tenant,
+            class,
+            prompt: vec![0; 4],
+            max_new_tokens: 0,
+            temperature: 0.0,
+            seed: 0,
+        }
+    }
+
+    fn job(class: SlaClass, tenant: u32, deadline_s: f64) -> PoolJob {
+        PoolJob { request: request(class, tenant), tenant, deadline_s, reply: None }
+    }
+
+    /// Worker that completes instantly with no tokens.
+    struct NoopWorker;
+    impl PoolWorker for NoopWorker {
+        fn execute(&mut self, _request: &InferenceRequest) -> Result<ExecOutcome> {
+            Ok(ExecOutcome {
+                tokens: Vec::new(),
+                compute: Duration::ZERO,
+                anomalies: 0,
+                halted_early: false,
+            })
+        }
+    }
+
+    #[test]
+    fn dispatch_is_class_priority_then_edf() {
+        // No workers running: drive take_next directly (deterministic).
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 1, shards: 2, queue_depth: 8 });
+        pool.try_submit(job(SlaClass::Batch, 0, 1.0)).unwrap();
+        pool.try_submit(job(SlaClass::Standard, 1, 2.0)).unwrap();
+        pool.try_submit(job(SlaClass::Interactive, 0, 9.0)).unwrap();
+        pool.try_submit(job(SlaClass::Interactive, 1, 5.0)).unwrap();
+        let order: Vec<(SlaClass, f64)> = std::iter::from_fn(|| {
+            pool.take_next(0).map(|e| (e.job.request.class, e.job.deadline_s))
+        })
+        .collect();
+        // Interactive drains before everything (the home shard's entry
+        // first — EDF is shard-local), and Batch's earliest absolute
+        // deadline still goes last: class priority dominates deadline.
+        assert_eq!(
+            order,
+            vec![
+                (SlaClass::Interactive, 9.0),
+                (SlaClass::Interactive, 5.0),
+                (SlaClass::Standard, 2.0),
+                (SlaClass::Batch, 1.0),
+            ]
+        );
+    }
+
+    #[test]
+    fn edf_orders_within_one_shard() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 1, shards: 1, queue_depth: 8 });
+        for d in [5.0, 1.0, 3.0, -2.0] {
+            pool.try_submit(job(SlaClass::Standard, 0, d)).unwrap();
+        }
+        let deadlines: Vec<f64> =
+            std::iter::from_fn(|| pool.take_next(0).map(|e| e.job.deadline_s)).collect();
+        assert_eq!(deadlines, vec![-2.0, 1.0, 3.0, 5.0], "negative deadlines sort first");
+    }
+
+    #[test]
+    fn full_row_overflows_explicitly() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 1, shards: 1, queue_depth: 2 });
+        assert!(pool.try_submit(job(SlaClass::Batch, 0, 1.0)).is_ok());
+        assert!(pool.try_submit(job(SlaClass::Batch, 0, 1.0)).is_ok());
+        assert!(pool.try_submit(job(SlaClass::Batch, 0, 1.0)).is_err());
+        // Other classes have their own rows.
+        assert!(pool.try_submit(job(SlaClass::Interactive, 0, 1.0)).is_ok());
+        let stats = pool.stats();
+        assert_eq!(stats[SlaClass::Batch.index()].admitted, 2);
+        assert_eq!(stats[SlaClass::Batch.index()].overflow, 1);
+        assert_eq!(stats[SlaClass::Interactive.index()].admitted, 1);
+    }
+
+    #[test]
+    fn occupancy_tracks_fullest_class() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 1, shards: 2, queue_depth: 4 });
+        assert_eq!(pool.occupancy(), 0.0);
+        for t in 0..4 {
+            pool.try_submit(job(SlaClass::Batch, t, 1.0)).unwrap();
+        }
+        // 4 Batch entries over 2 shards x depth 4 = 0.5; one Standard
+        // entry does not move the max.
+        pool.try_submit(job(SlaClass::Standard, 0, 1.0)).unwrap();
+        assert!((pool.occupancy() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn expired_jobs_are_counted_and_record_wait() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 2, shards: 2, queue_depth: 8 });
+        // Deadline strictly in the past: must expire, never execute.
+        pool.try_submit(job(SlaClass::Standard, 0, -1.0)).unwrap();
+        pool.try_submit(job(SlaClass::Standard, 1, f64::INFINITY)).unwrap();
+        pool.run_scoped(|_| Ok(NoopWorker), |_| {}).unwrap();
+        let stats = pool.stats();
+        let s = &stats[SlaClass::Standard.index()];
+        assert_eq!(s.expired, 1);
+        assert_eq!(s.completed, 1);
+        assert_eq!(s.deadline_hits, 1);
+        assert_eq!(s.histograms.queue_wait.count(), 2, "expired jobs record wait");
+        assert_eq!(s.histograms.service.count(), 1, "expired jobs never record service");
+    }
+
+    #[test]
+    fn scoped_pool_round_trips_replies_and_drains() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 3, shards: 4, queue_depth: 64 });
+        let n = 200;
+        let received = pool
+            .run_scoped(
+                |_| Ok(NoopWorker),
+                |pool| {
+                    let (tx, rx) = mpsc::channel();
+                    for i in 0..n {
+                        let class = SlaClass::all()[i % 3];
+                        pool.try_submit(PoolJob {
+                            request: request(class, i as u32),
+                            tenant: i as u32,
+                            deadline_s: f64::INFINITY,
+                            reply: Some(tx.clone()),
+                        })
+                        .unwrap();
+                    }
+                    drop(tx);
+                    rx.iter().count()
+                },
+            )
+            .unwrap();
+        assert_eq!(received, n);
+        let stats = pool.stats();
+        let completed: u64 = stats.iter().map(|s| s.completed).sum();
+        let admitted: u64 = stats.iter().map(|s| s.admitted).sum();
+        assert_eq!(completed, n as u64);
+        assert_eq!(admitted, n as u64);
+        assert_eq!(pool.queued_total(), 0, "shutdown must drain");
+        // Accounting closure per class.
+        for s in &stats {
+            assert_eq!(s.admitted, s.completed + s.expired + s.failed);
+        }
+    }
+
+    #[test]
+    fn worker_factory_failure_fails_the_spawn() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 2, shards: 2, queue_depth: 8 });
+        let err = pool
+            .run_scoped(
+                |w| {
+                    if w == 1 {
+                        Err(anyhow!("no engine"))
+                    } else {
+                        Ok(NoopWorker)
+                    }
+                },
+                |_| {},
+            )
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("no engine"));
+    }
+}

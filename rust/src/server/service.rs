@@ -26,6 +26,7 @@ use crate::workload::datasets::ModelFamily;
 
 use super::api::{InferenceRequest, InferenceResponse, RejectReason, ServeStats};
 use super::executor::ExecutorHandle;
+use super::pool::PoolConfig;
 
 /// Service configuration.
 #[derive(Debug, Clone)]
@@ -52,6 +53,8 @@ pub struct ServiceConfig {
     /// compute seconds against the snapshot-predicted service time, so
     /// the effective-roofline estimate tracks the real executor.
     pub calibration: bool,
+    /// Executor pool workers (0 = auto-size to the host).
+    pub workers: usize,
 }
 
 impl Default for ServiceConfig {
@@ -67,6 +70,7 @@ impl Default for ServiceConfig {
             telemetry_refresh_s: 0.25,
             legacy_admission: false,
             calibration: false,
+            workers: 0,
         }
     }
 }
@@ -128,7 +132,14 @@ impl GatewayFront {
     /// backlog heats the devices — the same integration the gateway
     /// driver uses) and refresh the rolling snapshot at the cadence
     /// (or immediately on a safety-version bump).
+    ///
+    /// Non-monotonic `now_s` is clamped to the last observed time: the
+    /// unclamped version advanced nothing on a backwards step (fine)
+    /// but the safety-version branch could then restamp `snap` IN THE
+    /// PAST, after which `now_s - snap.at_s >= refresh_s` fired a full
+    /// refresh cycle early and cadence guarantees silently broke.
     fn observe(&mut self, now_s: f64) {
+        let now_s = now_s.max(self.last_now_s);
         let dt = now_s - self.last_now_s;
         if dt > 0.0 {
             self.probe.advance_chunked(dt, self.refresh_s);
@@ -141,9 +152,19 @@ impl GatewayFront {
         }
     }
 
-    fn admit(&mut self, client: u32, class: crate::gateway::SlaClass, now_s: f64) -> AdmitDecision {
-        // The synchronous service has no queue: backpressure is 0.
-        let level = self.admission.effective_level(&self.snap, &self.lanes, 0.0);
+    /// One admission decision. `queue_utilization` is the executor
+    /// pool's real backlog over capacity — this used to be a hardcoded
+    /// `0.0` ("the synchronous service has no queue"), which left the
+    /// queue band of the shed ladder permanently dark even once the
+    /// pooled executor DID queue.
+    fn admit(
+        &mut self,
+        client: u32,
+        class: crate::gateway::SlaClass,
+        now_s: f64,
+        queue_utilization: f64,
+    ) -> AdmitDecision {
+        let level = self.admission.effective_level(&self.snap, &self.lanes, queue_utilization);
         self.admission.admit(client, class, now_s, level)
     }
 }
@@ -161,8 +182,11 @@ pub struct Service {
 
 impl Service {
     pub fn start(config: &ServiceConfig) -> Result<Service> {
-        let executor =
-            ExecutorHandle::spawn(config.artifacts_dir.clone(), config.variant.clone())?;
+        let executor = ExecutorHandle::spawn_pool(
+            config.artifacts_dir.clone(),
+            config.variant.clone(),
+            PoolConfig { workers: config.workers, ..Default::default() },
+        )?;
         let front = if config.legacy_admission { None } else { Some(GatewayFront::new(config)) };
         Ok(Service {
             executor,
@@ -186,8 +210,9 @@ impl Service {
             return Err(RejectReason::Validation(e.to_string()));
         }
         if let Some(front) = &mut self.front {
+            let occupancy = self.executor.occupancy();
             front.observe(now_s);
-            match front.admit(request.client_id, request.class, now_s) {
+            match front.admit(request.client_id, request.class, now_s, occupancy) {
                 AdmitDecision::Admit => {}
                 AdmitDecision::RateLimited => {
                     self.stats.rejected_rate_limited += 1;
@@ -209,6 +234,8 @@ impl Service {
                 self.stats.tokens_out += resp.tokens.len() as u64;
                 let lat = resp.latency.as_secs_f64();
                 self.stats.total_latency_s += lat;
+                self.stats.total_queue_wait_s += resp.queue_wait.as_secs_f64();
+                self.stats.total_service_s += resp.service.as_secs_f64();
                 self.stats.max_latency_s = self.stats.max_latency_s.max(lat);
                 self.stats.total_compute_s += resp.compute.as_secs_f64();
                 if resp.halted_early {
@@ -262,4 +289,64 @@ impl Service {
     }
 }
 
-// Service integration tests live in rust/tests/server_integration.rs.
+// Service integration tests live in rust/tests/server_integration.rs
+// (everything needing compiled PJRT artifacts). The GatewayFront unit
+// tests below are artifact-free — they exercise the admission front's
+// clock and backpressure plumbing directly.
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gateway::SlaClass;
+
+    #[test]
+    fn observe_clamps_non_monotonic_time() {
+        // Pre-fix: a backwards `now_s` advanced nothing (fine) but a
+        // concurrent safety-version bump restamped the snapshot in the
+        // past, so the NEXT forward observe saw a stale-looking snap
+        // and refreshed a full cadence early. The clamp pins snapshot
+        // timestamps monotonic.
+        let mut front = GatewayFront::new(&ServiceConfig::default());
+        front.observe(10.0);
+        assert!(front.snap.at_s >= 10.0 - 1e-9);
+        // Safety event, then time runs BACKWARDS (e.g. a caller mixing
+        // clock domains): the refresh must not restamp into the past.
+        front.probe.mark_failed(DevIdx(0), 10.0);
+        front.observe(2.0);
+        assert!(
+            front.snap.at_s >= 10.0 - 1e-9,
+            "backwards observe restamped the snapshot in the past (at_s={})",
+            front.snap.at_s
+        );
+        // And the next forward step refreshes on cadence, not early.
+        front.observe(10.3);
+        assert!(front.snap.at_s >= 10.25 - 1e-9);
+    }
+
+    #[test]
+    fn admit_feeds_real_queue_occupancy_into_the_shed_ladder() {
+        // Pre-fix the queue band was hardcoded dark (utilization 0.0):
+        // a saturated executor pool never engaged backpressure shedding.
+        let mut front = GatewayFront::new(&ServiceConfig::default());
+        front.observe(0.0);
+        assert_eq!(
+            front.admit(1, SlaClass::Standard, 0.0, 0.0),
+            AdmitDecision::Admit,
+            "cool fleet, empty queue: admit"
+        );
+        assert!(
+            matches!(
+                front.admit(1, SlaClass::Standard, 0.0, 0.8),
+                AdmitDecision::Shed { level: 2 }
+            ),
+            "critical queue occupancy must shed Standard"
+        );
+        assert!(
+            matches!(
+                front.admit(1, SlaClass::Batch, 0.0, 0.4),
+                AdmitDecision::Shed { level: 1 }
+            ),
+            "caution-band occupancy must shed Batch"
+        );
+    }
+}

@@ -1,8 +1,9 @@
-//! Integration tests over the serving stack: executor thread + service
+//! Integration tests over the serving stack: executor pool + service
 //! front end with validation / gateway admission / sanity checks,
 //! against the real PJRT engine (PJRT-touching tests skip when
-//! artifacts are absent; the gateway admission tests run everywhere —
-//! the shed ladder needs no engine).
+//! artifacts are absent; the gateway admission tests and the executor
+//! pool / load-harness tests run everywhere — the shed ladder and the
+//! synthetic-worker pool need no engine).
 
 use qeil::devices::spec::DevIdx;
 use qeil::gateway::{
@@ -11,6 +12,8 @@ use qeil::gateway::{
 };
 use qeil::safety::thermal_guard::SHED_LEVELS;
 use qeil::server::api::{InferenceRequest, RejectReason};
+use qeil::server::load::{run_load_harness, HarnessConfig, SyntheticWorker};
+use qeil::server::pool::{ExecutorPool, PoolConfig, PoolJob};
 use qeil::server::service::{Service, ServiceConfig};
 
 fn have_artifacts() -> bool {
@@ -89,6 +92,163 @@ fn shed_ladder_drops_batch_then_standard_then_interactive() {
         }
         previous = Some(admitted);
     }
+}
+
+#[test]
+fn pool_splits_queue_wait_from_service() {
+    // The PR-8 satellite bugfix, pinned end to end: with ONE worker and
+    // ~3 ms synthetic services, the second job's reported queue wait
+    // must cover the first job's service time — the pre-pool executor
+    // folded both into one `max(...)` number, so this wait was
+    // invisible.
+    let pool = ExecutorPool::new(PoolConfig { workers: 1, shards: 1, queue_depth: 8 });
+    let responses = pool
+        .run_scoped(
+            |_| Ok(SyntheticWorker::with_mean_service_us(3000.0)),
+            |pool| {
+                let (tx, rx) = std::sync::mpsc::channel();
+                for i in 0..2u32 {
+                    pool.try_submit(PoolJob {
+                        request: InferenceRequest {
+                            client_id: i,
+                            class: SlaClass::Standard,
+                            prompt: vec![0; 32],
+                            // 32 prompt + 16 output = exactly the
+                            // worker's calibrated mean service.
+                            max_new_tokens: 16,
+                            temperature: 0.0,
+                            seed: 0,
+                        },
+                        tenant: 0,
+                        deadline_s: f64::INFINITY,
+                        reply: Some(tx.clone()),
+                    })
+                    .unwrap_or_else(|_| panic!("submit must fit the queue"));
+                }
+                drop(tx);
+                rx.iter().collect::<Vec<_>>()
+            },
+        )
+        .unwrap();
+    let responses: Vec<_> = responses.into_iter().map(|r| r.unwrap()).collect();
+    assert_eq!(responses.len(), 2);
+    for resp in &responses {
+        let wait = resp.queue_wait.as_secs_f64();
+        let service = resp.service.as_secs_f64();
+        let latency = resp.latency.as_secs_f64();
+        assert!(service >= 2.5e-3, "spin worker must serve ~3 ms, got {service}");
+        assert!(
+            wait + service <= latency + 1e-3,
+            "components must not exceed e2e: {wait} + {service} vs {latency}"
+        );
+        assert!(
+            latency - (wait + service) < 5e-3,
+            "components must reconstruct e2e: {wait} + {service} vs {latency}"
+        );
+    }
+    let max_wait =
+        responses.iter().map(|r| r.queue_wait.as_secs_f64()).fold(0.0, f64::max);
+    assert!(
+        max_wait >= 2e-3,
+        "the serialized second job must report its wait behind the first, got {max_wait}"
+    );
+}
+
+#[test]
+fn hostile_tenant_churn_is_bounded() {
+    // Half the traffic is the hostile tenant with a FRESH client id per
+    // request; the amortized eviction sweep (the previously-dead
+    // `evict_idle`, now wired into admission) must keep the limiter's
+    // tracked-client set bounded instead of one entry per request.
+    let config = HarnessConfig {
+        requests: 20_000,
+        overload: 10.0,
+        hostile_fraction: 0.5,
+        service_us: 20.0,
+        ..Default::default()
+    };
+    let report = run_load_harness(&config).unwrap();
+    report.verify().unwrap();
+    assert!(
+        report.limiter_clients < config.requests / 4,
+        "limiter must evict churned ids: {} clients tracked after {} requests",
+        report.limiter_clients,
+        config.requests
+    );
+}
+
+#[test]
+fn overload_hit_rates_follow_class_order_through_the_pool() {
+    // 10x overload through the REAL pool (workers, sharded EDF queues,
+    // occupancy shedding, limiter): strict class priority must show up
+    // as ordered deadline-hit rates and ordered queue-wait tails.
+    let config = HarnessConfig { requests: 30_000, overload: 10.0, ..Default::default() };
+    let report = run_load_harness(&config).unwrap();
+    report.verify().unwrap();
+    assert_eq!(report.processed(), config.requests as u64);
+
+    let interactive = report.class(SlaClass::Interactive);
+    let standard = report.class(SlaClass::Standard);
+    let batch = report.class(SlaClass::Batch);
+    // Small additive slack: hit rates are wall-clock measurements.
+    assert!(
+        interactive.hit_rate() + 0.02 >= standard.hit_rate(),
+        "Interactive hit rate {:.3} must not trail Standard {:.3}",
+        interactive.hit_rate(),
+        standard.hit_rate()
+    );
+    assert!(
+        standard.hit_rate() + 0.02 >= batch.hit_rate(),
+        "Standard hit rate {:.3} must not trail Batch {:.3}",
+        standard.hit_rate(),
+        batch.hit_rate()
+    );
+    assert!(
+        interactive.hit_rate() > batch.hit_rate(),
+        "at 10x overload the class ladder must actually separate: I {:.3} vs B {:.3}",
+        interactive.hit_rate(),
+        batch.hit_rate()
+    );
+    // Queue-wait p99 follows the same order (1.25x multiplicative slack,
+    // links with too few samples skipped).
+    let p99 = |c: &qeil::server::load::ClassReport| {
+        (c.pool.histograms.queue_wait.count(), c.pool.histograms.queue_wait.percentile_s(99.0))
+    };
+    let (ni, pi) = p99(interactive);
+    let (ns, ps) = p99(standard);
+    let (nb, pb) = p99(batch);
+    if ni >= 50 && ns >= 50 {
+        assert!(pi <= 1.25 * ps, "Interactive p99 wait {pi:.6} vs Standard {ps:.6}");
+    }
+    if ns >= 50 && nb >= 50 {
+        assert!(ps <= 1.25 * pb, "Standard p99 wait {ps:.6} vs Batch {pb:.6}");
+    }
+}
+
+#[test]
+fn burst_arrivals_and_thrash_preserve_accounting_closure() {
+    // Same-instant bursts pinned to one tenant hammer a single shard
+    // row (the overflow path) while thrash phases flood and drain the
+    // queues; every request must still land on exactly one terminal
+    // ledger entry.
+    let config = HarnessConfig {
+        requests: 15_000,
+        overload: 20.0,
+        burst: 64,
+        burst_every: 250,
+        thrash_block: 500,
+        ..Default::default()
+    };
+    let report = run_load_harness(&config).unwrap();
+    report.verify().unwrap();
+    assert_eq!(report.processed(), config.requests as u64);
+    let overflow: u64 = report.classes.iter().map(|c| c.pool.overflow).sum();
+    let expired: u64 = report.classes.iter().map(|c| c.pool.expired).sum();
+    assert!(
+        overflow + expired > 0,
+        "a 20x overload run with 64-wide same-instant bursts must exercise the \
+         overflow/expiry paths (overflow {overflow}, expired {expired})"
+    );
 }
 
 #[test]

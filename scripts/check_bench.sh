@@ -9,10 +9,11 @@
 # `gateway_dispatch_wave*`, `calibration_update*`,
 # `energy_table_rebuild*`, `snapshot_save*`, `snapshot_restore*`,
 # `replay_apply*`, `des_event_dispatch*`, `sim_step*`,
-# `metro_sim_step*` — the planner-substrate, plan-cache,
-# serving-gateway, calibration, snapshot/replay, and discrete-event
-# scheduler hot paths ROADMAP.md tracks) regresses by more than
-# MAX_RATIO (default 10x) in mean time.
+# `metro_sim_step*`, `executor_pool_dispatch*`, `load_harness_step*` —
+# the planner-substrate, plan-cache, serving-gateway, calibration,
+# snapshot/replay, discrete-event scheduler, and executor-pool hot
+# paths ROADMAP.md tracks) regresses by more than MAX_RATIO (default
+# 10x) in mean time.
 # Non-gated entries are reported but never fail the run (they are too
 # machine-sensitive for a hard gate).
 #
@@ -48,6 +49,15 @@
 #     MAX_METRO_RATIO (default 4) of the edge box's (sim_step mean / 9
 #     components) — the DES core promises O(dispatched events), so a
 #     25x fleet may not cost superlinearly more per event.
+#   * SLA-class tail ordering (PR 8, skipped under --no-run): one full
+#     adversarial load-harness run (`qeil serve --load-harness`,
+#     HARNESS_REQUESTS at HARNESS_OVERLOAD x capacity) must process
+#     every scheduled request with the accounting closure intact (the
+#     binary exits nonzero otherwise) AND keep the per-class queue-wait
+#     p99 chain ordered: interactive ≤ MAX_CLASS_P99_SLACK × standard ≤
+#     MAX_CLASS_P99_SLACK² × batch (default slack 1.2; links with too
+#     few samples warn and skip). Self-relative by construction — the
+#     classes come from the same run on the same machine.
 # When a result file predates these entries (pre-PR3/PR5/PR6/PR7
 # artifact via --no-run), the intra-run checks warn and skip;
 # REQUIRE_BASELINE=1 (CI mode) makes missing entries fail instead.
@@ -61,6 +71,8 @@
 #   MAX_REBUILD_RATIO=4 scripts/check_bench.sh
 #   MAX_SNAPSHOT_RATIO=15 scripts/check_bench.sh
 #   MAX_METRO_RATIO=6 scripts/check_bench.sh
+#   HARNESS_REQUESTS=20000 HARNESS_OVERLOAD=10 scripts/check_bench.sh
+#   MAX_CLASS_P99_SLACK=1.5 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
 #
 # First run on a machine with no committed baseline: the current result
@@ -195,6 +207,71 @@ else:
 sys.exit(1 if failed else 0)
 PY
 
+# SLA-class tail-ordering gate (PR 8): one adversarial harness run
+# through the real executor pool. Needs the release binary, so it is
+# skipped under --no-run (the compare-existing workflow has no
+# toolchain). The harness binary itself exits nonzero on an accounting
+# closure violation; the python step then checks coverage and the
+# per-class p99 chain from the JSON line.
+if [[ "${1:-}" != "--no-run" ]]; then
+    HARNESS_REQUESTS="${HARNESS_REQUESTS:-100000}"
+    HARNESS_OVERLOAD="${HARNESS_OVERLOAD:-10}"
+    HARNESS_SEED="${HARNESS_SEED:-0}"
+    MAX_CLASS_P99_SLACK="${MAX_CLASS_P99_SLACK:-1.2}"
+    cargo build --release
+    HARNESS_JSON=.harness_gate.json
+    ./target/release/qeil serve --load-harness \
+        --requests "$HARNESS_REQUESTS" --overload "$HARNESS_OVERLOAD" \
+        --seed "$HARNESS_SEED" --stats-json | tee /dev/stderr | tail -n 1 \
+        > "$HARNESS_JSON"
+    python3 - "$HARNESS_JSON" "$HARNESS_REQUESTS" "$MAX_CLASS_P99_SLACK" <<'PY'
+import json
+import sys
+
+path, requests, slack = sys.argv[1], int(sys.argv[2]), float(sys.argv[3])
+with open(path) as f:
+    doc = json.load(f)
+harness = doc["harness"]
+classes = doc["classes"]
+failed = False
+processed = int(harness["processed"])
+if processed < requests:
+    print(f"harness gate FAILED: processed {processed} of {requests} scheduled "
+          "requests", file=sys.stderr)
+    failed = True
+else:
+    print(f"harness gate: processed {processed}/{requests} at "
+          f"{harness['overload']:g}x overload "
+          f"({harness['workers']:g} workers, {harness['wall_s']:.2f} s wall)")
+
+
+def tail(name):
+    h = classes[name]["queue_wait"]
+    return int(h["count"]), float(h["p99_s"])
+
+
+names = ("interactive", "standard", "batch")
+pairs = [(n, tail(n)) for n in names]
+for (an, (ac, ap)), (bn, (bc, bp)) in zip(pairs, pairs[1:]):
+    if ac < 50 or bc < 50:
+        print(f"harness gate: {an}<={bn} p99 link skipped "
+              f"(counts {ac}/{bc} too small)", file=sys.stderr)
+        continue
+    status = "ok" if ap <= slack * bp else "REGRESSION"
+    print(f"harness gate: {status} {an} p99 wait {ap * 1e3:.2f} ms vs {bn} "
+          f"{bp * 1e3:.2f} ms (slack {slack:g}x)")
+    if ap > slack * bp:
+        print(f"harness gate FAILED: {an} queue-wait p99 exceeds {slack:g}x "
+              f"{bn}'s — class-priority dispatch is not protecting the "
+              "higher class", file=sys.stderr)
+        failed = True
+sys.exit(1 if failed else 0)
+PY
+    rm -f "$HARNESS_JSON"
+else
+    echo "harness gate: skipped (--no-run: release binary unavailable)"
+fi
+
 if [[ ! -f "$BASELINE" ]]; then
     if [[ "${REQUIRE_BASELINE:-0}" == "1" ]]; then
         echo "error: baseline $BASELINE missing and REQUIRE_BASELINE=1 (CI mode)" >&2
@@ -230,6 +307,8 @@ GATED_PREFIXES = (
     "des_event_dispatch",
     "sim_step",
     "metro_sim_step",
+    "executor_pool_dispatch",
+    "load_harness_step",
 )
 
 

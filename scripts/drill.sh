@@ -18,8 +18,14 @@
 # permuted per tick, so a passing drill also certifies event-ordering
 # independence, not just replay determinism.
 #
+# After the replay matrix, a short executor-pool smoke run drives the
+# adversarial load harness (`qeil serve --load-harness`) at overload:
+# its exit status is the accounting-closure verdict, so a lost or
+# double-counted request under hostile load also fails the drill.
+#
 # Exit status is the drill verdict: nonzero means some recovery
-# diverged from the uninterrupted run — a replay-determinism bug.
+# diverged from the uninterrupted run — a replay-determinism bug — or
+# the pool smoke run lost requests.
 #
 # Usage:
 #   scripts/drill.sh                  # full matrix + metro, defaults
@@ -29,6 +35,8 @@
 #   KILL_TICKS=3,17,58 scripts/drill.sh  # pin exact kill ticks
 #   FUZZ_SCHEDULE=0xBEEF scripts/drill.sh  # fuzz same-tick dispatch
 #   METRO_QUERIES=0 scripts/drill.sh  # skip the metro pass
+#   POOL_REQUESTS=0 scripts/drill.sh  # skip the pool smoke run
+#   POOL_OVERLOAD=25 scripts/drill.sh # harder pool overload
 
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -40,6 +48,8 @@ FUZZ="${FUZZ:-2}"
 CHECKPOINT_EVERY="${CHECKPOINT_EVERY:-25}"
 METRO_QUERIES="${METRO_QUERIES:-24}"
 METRO_SAMPLES="${METRO_SAMPLES:-2}"
+POOL_REQUESTS="${POOL_REQUESTS:-20000}"
+POOL_OVERLOAD="${POOL_OVERLOAD:-10}"
 
 cargo build --release --quiet
 
@@ -57,4 +67,10 @@ fi
 if [[ "$METRO_QUERIES" -gt 0 ]]; then
     ./target/release/qeil replay --drill --fleet metro \
         --queries "$METRO_QUERIES" --samples "$METRO_SAMPLES" "${common[@]}"
+fi
+
+if [[ "$POOL_REQUESTS" -gt 0 ]]; then
+    ./target/release/qeil serve --load-harness \
+        --requests "$POOL_REQUESTS" --overload "$POOL_OVERLOAD" \
+        --seed "$SEED" --stats-json
 fi
