@@ -26,6 +26,7 @@ use qeil::gateway::{
     WaveScheduler,
 };
 use qeil::json::Json;
+use qeil::obs::{FlightRecorder, MetricsRegistry};
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
@@ -352,6 +353,59 @@ fn main() {
     // scheduler's O(dispatched events) scaling at fleet scale.
     let r = b.run("sim_step(edge-box, 4 devices, warm engine)", || {
         std::hint::black_box(warm_engine.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    let sim_step_mean = r.mean;
+    results.push(r);
+
+    // The same per-tick step with the flight recorder + profiler ARMED
+    // (PR 9). Gated SELF-RELATIVELY against the obs-off sim_step above:
+    // scripts/check_bench.sh holds this within MAX_OBS_RATIO (1.15x) —
+    // the recording overhead budget of the observability contract.
+    let mut obs_engine = warm_engine.clone();
+    obs_engine.enable_obs();
+    let r = b.run("sim_step_obs(edge-box, 4 devices, obs armed)", || {
+        std::hint::black_box(obs_engine.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    let obs_ratio = r.mean.as_secs_f64() / sim_step_mean.as_secs_f64().max(1e-12);
+    println!("    obs-on/obs-off wall ratio: {obs_ratio:.3}x (budget: within 1.15x)");
+    results.push(r);
+
+    // Raw ring-buffer insert: the fixed cost every recorded event pays
+    // (no allocation in steady state — the ring recycles slots). Gated.
+    let mut recorder = FlightRecorder::with_capacity(qeil::obs::DEFAULT_RING_CAPACITY);
+    let mut ev_tick = 0u64;
+    let r = b.run("obs_record_event(ring 65536)", || {
+        ev_tick += 1;
+        recorder.record(
+            ev_tick,
+            "des",
+            "dispatch",
+            "execution",
+            0,
+            &[("solved", 1.0), ("samples", 4.0), ("clock_s", 0.25)],
+        );
+        std::hint::black_box(recorder.total_recorded());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // One registry snapshot over a representative population (32
+    // counters, 32 gauges, 8 populated histograms) — the `--metrics`
+    // scrape cost. Gated.
+    let mut registry = MetricsRegistry::new();
+    for i in 0..32u64 {
+        registry.counter_set(&format!("bench_counter_{i}"), i * 17);
+        registry.gauge_set(&format!("bench_gauge_{i}"), i as f64 * 0.5);
+    }
+    for i in 0..8u64 {
+        for j in 0..64u64 {
+            registry.hist_record(&format!("bench_hist_{i}"), (j + 1) as f64 * 1e-3);
+        }
+    }
+    let r = b.run("metrics_snapshot(32c/32g/8h)", || {
+        std::hint::black_box(registry.snapshot_json().to_string());
     });
     println!("{}", r.report());
     results.push(r);

@@ -32,6 +32,7 @@ use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::devices::spec::DeviceId;
 use crate::experiments::runner::default_meta;
 use crate::json::Json;
+use crate::obs::{MetricsRegistry, Obs};
 use crate::rng::Pcg;
 use crate::workload::datasets::ModelFamily;
 
@@ -202,6 +203,10 @@ pub struct Gateway {
     clock_s: f64,
     classes: [ClassStats; 3],
     max_shed_level: u8,
+    /// Observability bundle — harness state, excluded from
+    /// [`Gateway::state_capture`] (and hence the desync digest) exactly
+    /// as the engine's bundle is excluded from snapshots.
+    obs: Obs,
 }
 
 impl Gateway {
@@ -226,8 +231,30 @@ impl Gateway {
             clock_s: 0.0,
             classes: Default::default(),
             max_shed_level: 0,
+            obs: Obs::disabled(),
             config,
         }
+    }
+
+    /// Arm the observability bundle. Harness-side: admission outcomes,
+    /// wave formation, and expiries record into the flight recorder;
+    /// reports and state digests are bit-identical either way.
+    pub fn enable_obs(&mut self) {
+        self.obs = Obs::enabled();
+    }
+
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    pub fn obs_mut(&mut self) -> &mut Obs {
+        &mut self.obs
+    }
+
+    /// Flight-recorder timestamp: the logical clock in microseconds
+    /// (gateway events are wall-stamped, not query-tick-stamped).
+    fn obs_tick(&self) -> u64 {
+        (self.clock_s * 1e6) as u64
     }
 
     pub fn clock_s(&self) -> f64 {
@@ -408,18 +435,48 @@ impl Gateway {
         let queue_util = self.queues.utilization(self.config.tenants.max(1));
         let level = self.admission.effective_level(&self.snap, &lanes, queue_util);
         self.max_shed_level = self.max_shed_level.max(level);
+        let tick = self.obs_tick();
+        let req_id = req.id;
         match self.admission.admit(req.tenant, req.class, self.clock_s, level) {
             AdmitDecision::Admit => match self.queues.enqueue(req) {
                 Ok(()) => self.classes[ci].admitted += 1,
-                Err(_) => self.classes[ci].overflow += 1,
+                Err(_) => {
+                    self.classes[ci].overflow += 1;
+                    self.obs.recorder.record(
+                        tick,
+                        "gateway",
+                        "overflow",
+                        "class",
+                        ci as u32,
+                        &[("request", req_id as f64)],
+                    );
+                }
             },
-            AdmitDecision::RateLimited => self.classes[ci].rate_limited += 1,
+            AdmitDecision::RateLimited => {
+                self.classes[ci].rate_limited += 1;
+                self.obs.recorder.record(
+                    tick,
+                    "gateway",
+                    "rate_limited",
+                    "class",
+                    ci as u32,
+                    &[("request", req_id as f64)],
+                );
+            }
             AdmitDecision::Shed { level } => {
                 let stats = &mut self.classes[ci];
                 stats.shed += 1;
                 if stats.first_shed_level.is_none() {
                     stats.first_shed_level = Some(level);
                 }
+                self.obs.recorder.record(
+                    tick,
+                    "gateway",
+                    "shed",
+                    "class",
+                    ci as u32,
+                    &[("request", req_id as f64), ("level", level as f64)],
+                );
             }
         }
     }
@@ -458,8 +515,17 @@ impl Gateway {
             *next += 1;
             self.submit(req);
         }
+        let tick = self.obs_tick();
         for req in self.queues.drop_expired(self.clock_s) {
             self.classes[req.class.index()].expired += 1;
+            self.obs.recorder.record(
+                tick,
+                "gateway",
+                "expire",
+                "class",
+                req.class.index() as u32,
+                &[("request", req.id as f64)],
+            );
         }
         // Continuous wave batching: keep binding waves while lanes
         // are free and backlog exists.
@@ -474,6 +540,20 @@ impl Gateway {
                 break;
             }
             let records = self.scheduler.dispatch(&wave, self.clock_s, &self.snap);
+            let tick = self.obs_tick();
+            self.obs.recorder.record(
+                tick,
+                "gateway",
+                "wave",
+                "",
+                0,
+                &[
+                    ("size", wave.len() as f64),
+                    ("dispatched", records.len() as f64),
+                    ("free_lanes", free as f64),
+                    ("wave_no", self.scheduler.waves as f64),
+                ],
+            );
             for rec in &records {
                 // NOTE: the gateway driver prices dispatches from
                 // its own snapshot, so it has no independent
@@ -557,6 +637,41 @@ impl Gateway {
         }
         self.cool_down();
         self.report()
+    }
+
+    /// Export the gateway's counters and the latest telemetry snapshot
+    /// into a metrics registry: per-class admission accounting as
+    /// counters, the shed ladder / wave state as gauges, and the
+    /// paper's DASI / CPQ / Phi signals per device index as first-class
+    /// gauges (previously visible only inside `--stats-json` blobs).
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        for class in SlaClass::all() {
+            let stats = &self.classes[class.index()];
+            let name = class.as_str();
+            reg.counter_set(&format!("gateway_{name}_submitted"), stats.submitted);
+            reg.counter_set(&format!("gateway_{name}_admitted"), stats.admitted);
+            reg.counter_set(&format!("gateway_{name}_shed"), stats.shed);
+            reg.counter_set(&format!("gateway_{name}_rate_limited"), stats.rate_limited);
+            reg.counter_set(&format!("gateway_{name}_overflow"), stats.overflow);
+            reg.counter_set(&format!("gateway_{name}_expired"), stats.expired);
+            reg.counter_set(&format!("gateway_{name}_completed"), stats.completed);
+            reg.counter_set(&format!("gateway_{name}_deadline_hits"), stats.deadline_hits);
+            reg.gauge_set(&format!("gateway_{name}_hit_rate"), stats.hit_rate());
+        }
+        reg.counter_set("gateway_waves", self.scheduler.waves);
+        reg.counter_set("gateway_reroutes", self.scheduler.reroutes);
+        reg.gauge_set("gateway_max_shed_level", self.max_shed_level as f64);
+        reg.gauge_set("gateway_safety_version", self.probe.safety_version() as f64);
+        reg.gauge_set("gateway_clock_s", self.clock_s);
+        reg.gauge_set("gateway_queued_total", self.queues.total() as f64);
+        for d in &self.snap.devices {
+            let i = d.dev.0;
+            reg.gauge_set(&format!("gateway_dasi_dev{i}"), d.dasi);
+            reg.gauge_set(&format!("gateway_cpq_dev{i}"), d.cpq);
+            reg.gauge_set(&format!("gateway_phi_dev{i}"), d.phi);
+            reg.gauge_set(&format!("gateway_shed_level_dev{i}"), d.shed_level as f64);
+            reg.gauge_set(&format!("gateway_temp_c_dev{i}"), d.temp_c);
+        }
     }
 
     fn report(&self) -> GatewayReport {
@@ -696,6 +811,34 @@ mod tests {
         assert_eq!(des_report, direct_report);
         assert_eq!(des.state_digest(), direct.state_digest());
         assert_eq!(des.state_capture().to_string(), direct.state_capture().to_string());
+    }
+
+    #[test]
+    fn obs_is_outside_the_state_digest() {
+        let config = GatewayConfig { seed: 7, ..GatewayConfig::default() };
+        let mut plain = Gateway::new(config.clone());
+        let trace = plain.overload_trace(60, 3.0, None);
+        let plain_report = plain.run_trace(&trace);
+
+        let mut observed = Gateway::new(config);
+        observed.enable_obs();
+        let observed_report = observed.run_trace(&trace);
+        assert_eq!(observed_report, plain_report, "obs must not move the report");
+        assert_eq!(observed.state_digest(), plain.state_digest(), "obs must stay outside the digest");
+        assert!(
+            observed.obs().recorder.total_recorded() > 0,
+            "an overload trace forms waves, so the recorder must hold events"
+        );
+
+        let mut reg = MetricsRegistry::new();
+        observed.export_metrics(&mut reg);
+        assert_eq!(
+            reg.counter("gateway_interactive_submitted"),
+            Some(plain_report.class(SlaClass::Interactive).submitted)
+        );
+        assert!(reg.gauge("gateway_dasi_dev0").is_some(), "DASI surfaces as a gauge");
+        assert!(reg.gauge("gateway_phi_dev0").is_some(), "Phi surfaces as a gauge");
+        assert!(!reg.prometheus_text().is_empty());
     }
 
     #[test]

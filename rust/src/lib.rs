@@ -30,6 +30,7 @@ pub mod devices;
 pub mod experiments;
 pub mod gateway;
 pub mod metrics;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod safety;

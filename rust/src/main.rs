@@ -55,6 +55,11 @@ SERVE OPTIONS:
     --sla-class <c>     interactive | standard | batch | mixed [default:
                         standard for the serve loop, mixed for --gateway]
     --stats-json        emit ServeStats / GatewayReport as one JSON line
+                        (with a \"metrics\" registry snapshot attached)
+    --metrics           print the unified metrics registry in Prometheus
+                        text exposition after the run
+    --trace-out <file>  write the flight recorder's Chrome trace JSON
+                        (chrome://tracing / Perfetto) after the run
     --legacy-admission  pre-gateway request loop (validate + rate-limit)
 
 REPLAY OPTIONS:
@@ -66,7 +71,10 @@ REPLAY OPTIONS:
     --drill                  kill-point recovery matrix (--fleet all,
                              --kill-ticks a,b,c, --fuzz <n>)
     --desync                 stale-replica divergence scan
-                             (--stale-device <idx>, --compare-every <n>)
+                             (--stale-device <idx>, --compare-every <n>);
+                             divergence auto-dumps the flight recorder
+    --trace-out <file>       write the run's Chrome trace JSON (fresh,
+                             --restore, and --desync modes)
 ";
 
 fn main() -> Result<()> {

@@ -1,0 +1,209 @@
+//! Unified metrics registry: named counters, gauges, and histograms
+//! with one snapshot call producing both a single-line JSON object and
+//! a Prometheus-style text exposition. Replaces the per-struct
+//! `to_json` scatter that previously served gateway / pool / limiter /
+//! calibrator stats.
+//!
+//! Histograms reuse [`crate::metrics::latency::LatencyRecorder`]
+//! verbatim — same log-spaced buckets, same percentile math — so a
+//! registry histogram and a pool latency histogram are directly
+//! comparable.
+
+use std::collections::BTreeMap;
+
+use crate::json::Json;
+use crate::metrics::latency::LatencyRecorder;
+
+/// Named counters / gauges / histograms. Keys are sorted (BTreeMap) so
+/// every snapshot is deterministic, diff-friendly output.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    hists: BTreeMap<String, LatencyRecorder>,
+}
+
+impl MetricsRegistry {
+    pub fn new() -> MetricsRegistry {
+        MetricsRegistry::default()
+    }
+
+    /// Add `delta` to a counter, creating it at zero first.
+    pub fn counter_add(&mut self, name: &str, delta: u64) {
+        *self.counters.entry(name.to_string()).or_insert(0) += delta;
+    }
+
+    /// Set a counter to an absolute value (for mirroring an existing
+    /// monotonic count rather than re-deriving deltas).
+    pub fn counter_set(&mut self, name: &str, value: u64) {
+        self.counters.insert(name.to_string(), value);
+    }
+
+    /// Set a gauge to its current value.
+    pub fn gauge_set(&mut self, name: &str, value: f64) {
+        self.gauges.insert(name.to_string(), value);
+    }
+
+    /// Record one observation into a named histogram (non-negative
+    /// finite values only, matching `LatencyRecorder::record`).
+    pub fn hist_record(&mut self, name: &str, value: f64) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(LatencyRecorder::new)
+            .record(value);
+    }
+
+    /// Merge a pre-built recorder into a named histogram (used to fold
+    /// the pool's per-class latency recorders in without re-observing).
+    pub fn hist_merge(&mut self, name: &str, other: &LatencyRecorder) {
+        self.hists
+            .entry(name.to_string())
+            .or_insert_with(LatencyRecorder::new)
+            .merge(other);
+    }
+
+    pub fn counter(&self, name: &str) -> Option<u64> {
+        self.counters.get(name).copied()
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    pub fn len(&self) -> usize {
+        self.counters.len() + self.gauges.len() + self.hists.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// One snapshot as a JSON object:
+    /// `{"counters": {...}, "gauges": {...}, "histograms": {name: summary}}`.
+    pub fn snapshot_json(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .iter()
+            .map(|(k, &v)| (k.clone(), Json::Num(v)))
+            .collect();
+        let hists: BTreeMap<String, Json> = self
+            .hists
+            .iter()
+            .map(|(k, h)| (k.clone(), h.summary_json()))
+            .collect();
+        Json::obj(vec![
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histograms", Json::Obj(hists)),
+        ])
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` lines plus one
+    /// sample per counter/gauge and summary quantiles per histogram.
+    pub fn prometheus_text(&self) -> String {
+        let mut out = String::new();
+        for (name, value) in &self.counters {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {} counter\n{} {}\n", name, name, value));
+        }
+        for (name, value) in &self.gauges {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {} gauge\n{} {}\n", name, name, fmt_f64(*value)));
+        }
+        for (name, hist) in &self.hists {
+            let name = sanitize(name);
+            out.push_str(&format!("# TYPE {} summary\n", name));
+            for &(label, p) in &[("0.5", 50.0), ("0.99", 99.0), ("0.999", 99.9)] {
+                out.push_str(&format!(
+                    "{}{{quantile=\"{}\"}} {}\n",
+                    name,
+                    label,
+                    fmt_f64(hist.percentile_s(p))
+                ));
+            }
+            out.push_str(&format!("{}_sum {}\n", name, fmt_f64(hist.mean_s() * hist.count() as f64)));
+            out.push_str(&format!("{}_count {}\n", name, hist.count()));
+        }
+        out
+    }
+}
+
+/// Prometheus metric names allow `[a-zA-Z_:][a-zA-Z0-9_:]*`; map
+/// anything else (dots, dashes, braces from ad-hoc names) to '_'.
+fn sanitize(name: &str) -> String {
+    let mut out: String = name
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || c == '_' || c == ':' { c } else { '_' })
+        .collect();
+    if out.chars().next().map_or(true, |c| c.is_ascii_digit()) {
+        out.insert(0, '_');
+    }
+    out
+}
+
+fn fmt_f64(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{}", v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_snapshot() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_add("pool_dispatched_total", 3);
+        reg.counter_add("pool_dispatched_total", 2);
+        reg.gauge_set("pool_occupancy", 0.75);
+        assert_eq!(reg.counter("pool_dispatched_total"), Some(5));
+        assert_eq!(reg.gauge("pool_occupancy"), Some(0.75));
+        let snap = reg.snapshot_json();
+        let text = snap.to_string();
+        assert!(text.contains("pool_dispatched_total"));
+        assert!(text.contains("0.75"));
+    }
+
+    #[test]
+    fn histogram_reuses_latency_recorder_summary() {
+        let mut reg = MetricsRegistry::new();
+        for i in 1..=100 {
+            reg.hist_record("serve_latency_s", i as f64 * 1e-3);
+        }
+        let snap = reg.snapshot_json();
+        let hist = snap
+            .get("histograms")
+            .and_then(|h| h.get("serve_latency_s"))
+            .expect("histogram present");
+        assert_eq!(hist.get("count").and_then(|c| c.as_u64()), Some(100));
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_add("shed.hard", 2);
+        reg.gauge_set("dasi_dev0", 1.5);
+        reg.hist_record("lat", 0.01);
+        let text = reg.prometheus_text();
+        assert!(text.contains("# TYPE shed_hard counter"));
+        assert!(text.contains("shed_hard 2"));
+        assert!(text.contains("# TYPE dasi_dev0 gauge"));
+        assert!(text.contains("dasi_dev0 1.5"));
+        assert!(text.contains("lat{quantile=\"0.99\"}"));
+        assert!(text.contains("lat_count 1"));
+    }
+
+    #[test]
+    fn sanitize_prefixes_leading_digit() {
+        assert_eq!(sanitize("3abc"), "_3abc");
+        assert_eq!(sanitize("a.b-c"), "a_b_c");
+    }
+}

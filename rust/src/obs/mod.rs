@@ -1,0 +1,109 @@
+//! Deterministic observability: flight-recorder tracing, a unified
+//! metrics registry, and per-component wall-clock profiling.
+//!
+//! The paper's thesis is that orchestration should run on *measured*
+//! signals; this subsystem is the measurement layer for the
+//! orchestrator itself. Three parts:
+//!
+//! 1. [`FlightRecorder`] — a fixed-capacity ring buffer of structured
+//!    trace events (tick, component, event kind, numeric payload)
+//!    recorded from the DES dispatch loop, the gateway's wave/shed
+//!    decisions, the executor pool, and the calibration fold path.
+//!    Dumpable as Chrome trace-event JSON (`qeil replay --trace-out`,
+//!    `qeil serve --trace-out`) and auto-dumped on drill mismatch or
+//!    harness closure violation.
+//! 2. [`MetricsRegistry`] — named counters / gauges / histograms with
+//!    one snapshot call producing both a single-line JSON object and a
+//!    Prometheus-style text exposition (`qeil serve --metrics`).
+//! 3. [`Profiler`] — wall-clock self-time attribution per dispatched
+//!    component (DES) or worker (pool), reported as a profile table.
+//!
+//! **The outside-digest rule.** Observability is HARNESS state, exactly
+//! like `SimOptions::checkpoint_every` and `ScheduleMode`: it never
+//! serializes into snapshots, never participates in `engine_digest`,
+//! never consumes an engine RNG stream, and never feeds a wall-clock
+//! measurement back into any simulated decision. Obs-on and obs-off
+//! runs are therefore bit-identical in reports and state digests on
+//! every preset under every schedule mode — the property
+//! `rust/tests/obs_properties.rs` pins and the crash drills exercise
+//! live (the drill reference engine records with obs on; recovered
+//! replicas restore with obs off; their digests must still match).
+//!
+//! Zero dependencies: the ring buffer is a `Vec` cursor, histograms
+//! reuse `metrics/latency.rs` internals, JSON rides the in-tree
+//! [`crate::json::Json`]. The obs-off cost of every hook is one branch
+//! (`scripts/check_bench.sh` gates the obs-on `sim_step` overhead at
+//! `MAX_OBS_RATIO`).
+
+pub mod metrics;
+pub mod profiler;
+pub mod recorder;
+
+pub use metrics::MetricsRegistry;
+pub use profiler::Profiler;
+pub use recorder::{FlightRecorder, TraceEvent};
+
+/// Default flight-recorder capacity (events). At the metro preset's
+/// ~105 dispatches per tick this holds the last ~600 ticks — more than
+/// any drill or harness window — in ~5 MB.
+pub const DEFAULT_RING_CAPACITY: usize = 65_536;
+
+/// The observability bundle a subsystem carries: recorder + registry +
+/// profiler, enabled or disabled as one unit. Disabled is the default
+/// everywhere; every hot-path hook degrades to a single branch.
+#[derive(Debug, Clone, Default)]
+pub struct Obs {
+    pub recorder: FlightRecorder,
+    pub metrics: MetricsRegistry,
+    pub profiler: Profiler,
+}
+
+impl Obs {
+    /// The no-op bundle (the default for every engine / gateway / pool).
+    pub fn disabled() -> Obs {
+        Obs::default()
+    }
+
+    /// An armed bundle at the default ring capacity.
+    pub fn enabled() -> Obs {
+        Obs::with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// An armed bundle with an explicit ring capacity.
+    pub fn with_capacity(capacity: usize) -> Obs {
+        Obs {
+            recorder: FlightRecorder::with_capacity(capacity),
+            metrics: MetricsRegistry::new(),
+            profiler: Profiler::enabled(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.recorder.is_enabled()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_bundle_records_nothing() {
+        let mut obs = Obs::disabled();
+        assert!(!obs.is_enabled());
+        obs.recorder.record(0, "des", "dispatch", "execution", 0, &[("q", 1.0)]);
+        assert_eq!(obs.recorder.len(), 0);
+        assert!(obs.profiler.start().is_none());
+    }
+
+    #[test]
+    fn enabled_bundle_round_trips_an_event() {
+        let mut obs = Obs::enabled();
+        assert!(obs.is_enabled());
+        obs.recorder.record(7, "des", "dispatch", "execution", 0, &[("q", 1.0)]);
+        assert_eq!(obs.recorder.len(), 1);
+        let dump = obs.recorder.chrome_trace().to_string();
+        assert!(dump.contains("traceEvents"));
+        assert!(dump.contains("dispatch"));
+    }
+}

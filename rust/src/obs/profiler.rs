@@ -1,0 +1,218 @@
+//! Per-component wall-clock profiler: self-time attribution per
+//! `(stage, index)` in the DES engine and per worker in the pool.
+//!
+//! Profiling is strictly observational — readings accumulate into the
+//! profiler only, never into simulated state, so an obs-on run stays
+//! bit-identical to an obs-off run (wall time is the one value the
+//! simulation itself must never see).
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use crate::json::Json;
+
+/// Accumulated self-time for one profiled component.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProfEntry {
+    /// Number of dispatches attributed.
+    pub fires: u64,
+    /// Total wall-clock self-time, seconds.
+    pub self_s: f64,
+}
+
+/// Wall-clock self-time per `(component-name, index)`. Keys are static
+/// strings (stage names, worker roles) so attribution is allocation-
+/// free; BTreeMap keeps the profile table deterministically ordered.
+#[derive(Debug, Clone, Default)]
+pub struct Profiler {
+    enabled: bool,
+    entries: BTreeMap<(&'static str, u32), ProfEntry>,
+}
+
+impl Profiler {
+    pub fn disabled() -> Profiler {
+        Profiler::default()
+    }
+
+    pub fn enabled() -> Profiler {
+        Profiler {
+            enabled: true,
+            entries: BTreeMap::new(),
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Start a timing span. Returns `None` when profiling is off, so
+    /// the off-path cost is one branch and no clock read.
+    #[inline]
+    pub fn start(&self) -> Option<Instant> {
+        if self.enabled {
+            Some(Instant::now())
+        } else {
+            None
+        }
+    }
+
+    /// Close a span opened by [`Profiler::start`], attributing the
+    /// elapsed wall time to `(comp, index)`.
+    #[inline]
+    pub fn stop(&mut self, span: Option<Instant>, comp: &'static str, index: u32) {
+        if let Some(started) = span {
+            let dt = started.elapsed().as_secs_f64();
+            let entry = self.entries.entry((comp, index)).or_default();
+            entry.fires += 1;
+            entry.self_s += dt;
+        }
+    }
+
+    /// Attribute an externally measured duration (used by pool workers
+    /// that accumulate locally and merge on exit).
+    pub fn add(&mut self, comp: &'static str, index: u32, fires: u64, self_s: f64) {
+        if !self.enabled {
+            return;
+        }
+        let entry = self.entries.entry((comp, index)).or_default();
+        entry.fires += fires;
+        entry.self_s += self_s;
+    }
+
+    /// Merge another profiler's entries into this one.
+    pub fn absorb(&mut self, other: &Profiler) {
+        if !self.enabled {
+            return;
+        }
+        for (&key, entry) in &other.entries {
+            let slot = self.entries.entry(key).or_default();
+            slot.fires += entry.fires;
+            slot.self_s += entry.self_s;
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn entry(&self, comp: &'static str, index: u32) -> Option<ProfEntry> {
+        self.entries.get(&(comp, index)).copied()
+    }
+
+    /// Entries aggregated across indices per component name, sorted by
+    /// descending self-time — the roll-up used to pick divider targets.
+    pub fn by_component(&self) -> Vec<(&'static str, ProfEntry)> {
+        let mut agg: BTreeMap<&'static str, ProfEntry> = BTreeMap::new();
+        for (&(comp, _), entry) in &self.entries {
+            let slot = agg.entry(comp).or_default();
+            slot.fires += entry.fires;
+            slot.self_s += entry.self_s;
+        }
+        let mut out: Vec<(&'static str, ProfEntry)> = agg.into_iter().collect();
+        out.sort_by(|a, b| b.1.self_s.partial_cmp(&a.1.self_s).unwrap_or(std::cmp::Ordering::Equal));
+        out
+    }
+
+    /// Human-readable profile table, sorted by descending self-time.
+    pub fn render_table(&self) -> String {
+        let total: f64 = self.entries.values().map(|e| e.self_s).sum();
+        let mut rows: Vec<((&'static str, u32), ProfEntry)> =
+            self.entries.iter().map(|(&k, &v)| (k, v)).collect();
+        rows.sort_by(|a, b| b.1.self_s.partial_cmp(&a.1.self_s).unwrap_or(std::cmp::Ordering::Equal));
+        let mut out = String::from("component            index      fires     self_s    share\n");
+        for ((comp, index), entry) in rows {
+            let share = if total > 0.0 { entry.self_s / total * 100.0 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<20} {:>5} {:>10} {:>10.6} {:>7.2}%\n",
+                comp, index, entry.fires, entry.self_s, share
+            ));
+        }
+        out
+    }
+
+    /// Profile as JSON: `[{"comp", "index", "fires", "self_s"}, ...]`
+    /// sorted by descending self-time.
+    pub fn to_json(&self) -> Json {
+        let mut rows: Vec<((&'static str, u32), ProfEntry)> =
+            self.entries.iter().map(|(&k, &v)| (k, v)).collect();
+        rows.sort_by(|a, b| b.1.self_s.partial_cmp(&a.1.self_s).unwrap_or(std::cmp::Ordering::Equal));
+        Json::Arr(
+            rows.into_iter()
+                .map(|((comp, index), entry)| {
+                    Json::obj(vec![
+                        ("comp", Json::Str(comp.to_string())),
+                        ("index", Json::Num(index as f64)),
+                        ("fires", Json::Num(entry.fires as f64)),
+                        ("self_s", Json::Num(entry.self_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_profiler_skips_clock() {
+        let mut p = Profiler::disabled();
+        let span = p.start();
+        assert!(span.is_none());
+        p.stop(span, "execution", 0);
+        assert!(p.is_empty());
+    }
+
+    #[test]
+    fn spans_accumulate() {
+        let mut p = Profiler::enabled();
+        for _ in 0..3 {
+            let span = p.start();
+            assert!(span.is_some());
+            p.stop(span, "window", 2);
+        }
+        let entry = p.entry("window", 2).expect("entry recorded");
+        assert_eq!(entry.fires, 3);
+        assert!(entry.self_s >= 0.0);
+    }
+
+    #[test]
+    fn by_component_aggregates_indices() {
+        let mut p = Profiler::enabled();
+        p.add("window", 0, 2, 0.5);
+        p.add("window", 1, 1, 0.25);
+        p.add("execution", 0, 1, 2.0);
+        let agg = p.by_component();
+        assert_eq!(agg[0].0, "execution");
+        let window = agg.iter().find(|(c, _)| *c == "window").unwrap().1;
+        assert_eq!(window.fires, 3);
+        assert!((window.self_s - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let mut p = Profiler::enabled();
+        p.add("model", 0, 4, 0.125);
+        let table = p.render_table();
+        assert!(table.contains("model"));
+        let json = p.to_json().to_string();
+        assert!(json.contains("\"fires\""));
+    }
+
+    #[test]
+    fn absorb_merges_entries() {
+        let mut a = Profiler::enabled();
+        let mut b = Profiler::enabled();
+        a.add("worker", 0, 1, 0.1);
+        b.add("worker", 0, 2, 0.2);
+        a.absorb(&b);
+        let entry = a.entry("worker", 0).unwrap();
+        assert_eq!(entry.fires, 3);
+        assert!((entry.self_s - 0.3).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,333 @@
+//! Flight recorder: a fixed-capacity ring buffer of structured trace
+//! events, designed so the obs-off hook cost is one branch and the
+//! obs-on cost is a handful of copies (every string field is
+//! `&'static str`; the only heap traffic is the small args vec).
+
+use crate::json::Json;
+
+/// One recorded event. `cat`/`name`/`comp` are static so the hot path
+/// never allocates strings; `note` carries the rare dynamic payload
+/// (e.g. the component-name list of a desync divergence) and is `None`
+/// for virtually all events.
+#[derive(Debug, Clone)]
+pub struct TraceEvent {
+    /// Monotonic sequence number across the recorder's lifetime
+    /// (survives ring wrap — `seq` keeps ordering unambiguous even
+    /// after older events are overwritten).
+    pub seq: u64,
+    /// Simulation tick (or request index for pool/gateway events).
+    pub tick: u64,
+    /// Subsystem category: "des", "gateway", "pool", "calibration",
+    /// "snapshot", "harness".
+    pub cat: &'static str,
+    /// Event kind within the category, e.g. "dispatch", "shed",
+    /// "wave", "admit", "expire", "fold", "drift", "desync_divergence".
+    pub name: &'static str,
+    /// Component stage name ("execution", "model", ...) or worker
+    /// role; "" when not component-scoped.
+    pub comp: &'static str,
+    /// Component index / worker id / device index.
+    pub index: u32,
+    /// Small numeric payload, e.g. [("queue_depth", 3.0)].
+    pub args: Vec<(&'static str, f64)>,
+    /// Rare dynamic annotation; `None` on the hot path.
+    pub note: Option<String>,
+}
+
+impl TraceEvent {
+    fn to_json(&self) -> Json {
+        // Chrome trace-event format: instant event ("ph": "i"), one
+        // lane per category, tick as the timestamp.
+        let mut args: Vec<(&str, Json)> = self
+            .args
+            .iter()
+            .map(|&(k, v)| (k, Json::Num(v)))
+            .collect();
+        args.push(("seq", Json::Num(self.seq as f64)));
+        if !self.comp.is_empty() {
+            args.push(("comp", Json::Str(self.comp.to_string())));
+            args.push(("index", Json::Num(self.index as f64)));
+        }
+        if let Some(note) = &self.note {
+            args.push(("note", Json::Str(note.clone())));
+        }
+        Json::obj(vec![
+            ("name", Json::Str(self.name.to_string())),
+            ("cat", Json::Str(self.cat.to_string())),
+            ("ph", Json::Str("i".to_string())),
+            ("ts", Json::Num(self.tick as f64)),
+            ("pid", Json::Num(1.0)),
+            ("tid", Json::Str(self.cat.to_string())),
+            ("s", Json::Str("t".to_string())),
+            ("args", Json::Obj(args.into_iter().map(|(k, v)| (k.to_string(), v)).collect())),
+        ])
+    }
+
+    fn render(&self) -> String {
+        let mut line = format!("[seq {:>6}] tick {:>6}  {:<11} {:<18}", self.seq, self.tick, self.cat, self.name);
+        if !self.comp.is_empty() {
+            line.push_str(&format!(" {}[{}]", self.comp, self.index));
+        }
+        for &(k, v) in &self.args {
+            line.push_str(&format!("  {}={}", k, v));
+        }
+        if let Some(note) = &self.note {
+            line.push_str("  # ");
+            line.push_str(note);
+        }
+        line
+    }
+}
+
+/// Fixed-capacity ring buffer of [`TraceEvent`]s. Disabled by default:
+/// [`FlightRecorder::record`] early-returns on one branch, so carrying
+/// a recorder through a hot loop costs nothing measurable when off
+/// (the `obs_record_event` bench pins the on-cost too).
+#[derive(Debug, Clone, Default)]
+pub struct FlightRecorder {
+    enabled: bool,
+    capacity: usize,
+    buf: Vec<TraceEvent>,
+    /// Write cursor into `buf` once the ring has wrapped.
+    next: usize,
+    /// Total events ever recorded (>= buf.len(); drives `seq`).
+    total: u64,
+}
+
+impl FlightRecorder {
+    /// A disabled recorder — records nothing, holds nothing.
+    pub fn disabled() -> FlightRecorder {
+        FlightRecorder::default()
+    }
+
+    /// An enabled recorder holding the last `capacity` events.
+    pub fn with_capacity(capacity: usize) -> FlightRecorder {
+        FlightRecorder {
+            enabled: true,
+            capacity: capacity.max(1),
+            buf: Vec::new(),
+            next: 0,
+            total: 0,
+        }
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Arm a disabled recorder in place (used by the desync scan to
+    /// guarantee the divergence report always carries a trace).
+    pub fn ensure_enabled(&mut self) {
+        if !self.enabled {
+            self.enabled = true;
+            if self.capacity == 0 {
+                self.capacity = super::DEFAULT_RING_CAPACITY;
+            }
+        }
+    }
+
+    /// Number of events currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total events ever recorded, including overwritten ones.
+    pub fn total_recorded(&self) -> u64 {
+        self.total
+    }
+
+    /// Record an event. The single-branch early return when disabled is
+    /// the entire obs-off cost of every instrumentation site.
+    #[inline]
+    pub fn record(
+        &mut self,
+        tick: u64,
+        cat: &'static str,
+        name: &'static str,
+        comp: &'static str,
+        index: u32,
+        args: &[(&'static str, f64)],
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent {
+            seq: self.total,
+            tick,
+            cat,
+            name,
+            comp,
+            index,
+            args: args.to_vec(),
+            note: None,
+        });
+    }
+
+    /// Record an event carrying a dynamic annotation (cold path only).
+    pub fn record_note(
+        &mut self,
+        tick: u64,
+        cat: &'static str,
+        name: &'static str,
+        comp: &'static str,
+        index: u32,
+        args: &[(&'static str, f64)],
+        note: String,
+    ) {
+        if !self.enabled {
+            return;
+        }
+        self.push(TraceEvent {
+            seq: self.total,
+            tick,
+            cat,
+            name,
+            comp,
+            index,
+            args: args.to_vec(),
+            note: Some(note),
+        });
+    }
+
+    fn push(&mut self, ev: TraceEvent) {
+        self.total += 1;
+        if self.buf.len() < self.capacity {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.next = (self.next + 1) % self.capacity;
+        }
+    }
+
+    /// Events in recording order (oldest surviving first).
+    pub fn events(&self) -> Vec<&TraceEvent> {
+        let mut out: Vec<&TraceEvent> = Vec::with_capacity(self.buf.len());
+        if self.buf.len() == self.capacity {
+            out.extend(self.buf[self.next..].iter());
+            out.extend(self.buf[..self.next].iter());
+        } else {
+            out.extend(self.buf.iter());
+        }
+        out
+    }
+
+    /// Merge another recorder's events into this one, preserving each
+    /// event's payload (sequence numbers are reassigned). Used by the
+    /// pool to fold per-worker recorders into the shared ring.
+    pub fn absorb(&mut self, other: &FlightRecorder) {
+        if !self.enabled {
+            return;
+        }
+        for ev in other.events() {
+            let mut ev = ev.clone();
+            ev.seq = self.total;
+            self.push(ev);
+        }
+    }
+
+    /// Chrome trace-event JSON (`chrome://tracing` / Perfetto "JSON
+    /// Array Format" wrapped in an object with `traceEvents`).
+    pub fn chrome_trace(&self) -> Json {
+        let events: Vec<Json> = self.events().iter().map(|e| e.to_json()).collect();
+        Json::obj(vec![
+            ("traceEvents", Json::Arr(events)),
+            ("displayTimeUnit", Json::Str("ms".to_string())),
+            (
+                "otherData",
+                Json::obj(vec![
+                    ("recorded_total", Json::Num(self.total as f64)),
+                    ("ring_capacity", Json::Num(self.capacity as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable dump of the last `last_n` events (all if 0),
+    /// printed by drill/harness failure paths.
+    pub fn render_text(&self, last_n: usize) -> String {
+        let events = self.events();
+        let skip = if last_n > 0 && events.len() > last_n {
+            events.len() - last_n
+        } else {
+            0
+        };
+        let mut out = format!(
+            "flight recorder: {} event(s) held, {} recorded total\n",
+            events.len(),
+            self.total
+        );
+        for ev in &events[skip..] {
+            out.push_str(&ev.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_is_free_of_state() {
+        let mut r = FlightRecorder::disabled();
+        r.record(1, "des", "dispatch", "execution", 0, &[]);
+        assert!(r.is_empty());
+        assert_eq!(r.total_recorded(), 0);
+    }
+
+    #[test]
+    fn ring_wraps_and_preserves_order() {
+        let mut r = FlightRecorder::with_capacity(3);
+        for tick in 0..5u64 {
+            r.record(tick, "des", "dispatch", "execution", 0, &[]);
+        }
+        assert_eq!(r.len(), 3);
+        assert_eq!(r.total_recorded(), 5);
+        let ticks: Vec<u64> = r.events().iter().map(|e| e.tick).collect();
+        assert_eq!(ticks, vec![2, 3, 4]);
+        let seqs: Vec<u64> = r.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let mut r = FlightRecorder::with_capacity(8);
+        r.record(3, "gateway", "shed", "", 0, &[("level", 2.0)]);
+        r.record_note(4, "snapshot", "desync_divergence", "", 0, &[], "gateway".to_string());
+        let json = r.chrome_trace();
+        let events = json.get("traceEvents").and_then(|j| j.as_arr()).expect("traceEvents");
+        assert_eq!(events.len(), 2);
+        let text = json.to_string();
+        assert!(text.contains("\"shed\""));
+        assert!(text.contains("desync_divergence"));
+        assert!(text.contains("gateway"));
+    }
+
+    #[test]
+    fn render_text_tails() {
+        let mut r = FlightRecorder::with_capacity(16);
+        for tick in 0..10u64 {
+            r.record(tick, "pool", "dispatch", "worker", tick as u32, &[]);
+        }
+        let tail = r.render_text(3);
+        assert!(tail.contains("tick      9"));
+        assert!(!tail.contains("tick      6"));
+    }
+
+    #[test]
+    fn absorb_reassigns_sequence() {
+        let mut a = FlightRecorder::with_capacity(8);
+        let mut b = FlightRecorder::with_capacity(8);
+        a.record(1, "pool", "admit", "", 0, &[]);
+        b.record(2, "pool", "expire", "", 1, &[]);
+        a.absorb(&b);
+        assert_eq!(a.len(), 2);
+        let seqs: Vec<u64> = a.events().iter().map(|e| e.seq).collect();
+        assert_eq!(seqs, vec![0, 1]);
+    }
+}

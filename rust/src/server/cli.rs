@@ -36,6 +36,10 @@ pub fn run(args: &Args) -> Result<()> {
     let max_new: usize = args.num("max-new-tokens", 16usize)?;
     let seed: u64 = args.num("seed", 0u64)?;
     let stats_json = args.flag("stats-json");
+    let metrics_flag = args.flag("metrics");
+    // `--trace-out PATH`: write the flight recorder's Chrome trace JSON
+    // (chrome://tracing / Perfetto) after the run. Empty = off.
+    let trace_out = args.opt("trace-out", "");
 
     // `--load-harness`: drive the executor pool with the adversarial
     // wall-clock load harness (no artifacts needed — synthetic spin
@@ -57,6 +61,10 @@ pub fn run(args: &Args) -> Result<()> {
             queue_depth: args.num("queue-depth", 32usize)?,
             tenants: args.num("tenants", 8u32)?,
             service_us: args.num("service-us", 40.0f64)?,
+            // Always armed from the CLI: a closure violation must leave
+            // a readable trace, and the recorder is outside the
+            // accounting being verified.
+            obs: true,
             seed,
             ..Default::default()
         };
@@ -91,10 +99,42 @@ pub fn run(args: &Args) -> Result<()> {
             report.processed() as f64 / report.wall_s.max(1e-9),
             report.limiter_clients,
         );
-        if stats_json {
-            println!("{}", report.to_json().to_string());
+        if metrics_flag {
+            print!("{}", report.metrics.prometheus_text());
         }
-        report.verify()?;
+        if stats_json {
+            // The registry snapshot rides along so a scrape gets pool
+            // occupancy, limiter clients, and the per-class counters
+            // from one line.
+            let mut doc = report.to_json();
+            if let crate::json::Json::Obj(map) = &mut doc {
+                map.insert("metrics".into(), report.metrics.snapshot_json());
+            }
+            println!("{}", doc.to_string());
+        }
+        if !trace_out.is_empty() {
+            if let Some(trace) = &report.trace {
+                std::fs::write(&trace_out, trace.chrome_trace().to_string())?;
+                println!(
+                    "trace: {} events in ring ({} recorded) -> {}",
+                    trace.len(),
+                    trace.total_recorded(),
+                    trace_out
+                );
+            }
+        }
+        if let Err(e) = report.verify() {
+            // Accounting-closure violation: dump the flight recorder
+            // and the per-worker profile before propagating the error,
+            // so the failure is triageable from the console alone.
+            if let Some(trace) = &report.trace {
+                eprintln!("{}", trace.render_text(64));
+            }
+            if let Some(profile) = &report.profile {
+                eprintln!("{}", profile.render_table());
+            }
+            return Err(e);
+        }
         return Ok(());
     }
 
@@ -389,6 +429,9 @@ pub fn run(args: &Args) -> Result<()> {
     };
     println!("starting service: variant={variant} dataset={} requests={requests}", dataset.as_str());
     let mut service = Service::start(&config)?;
+    if !trace_out.is_empty() {
+        service.enable_trace();
+    }
 
     let queries = WorkloadGenerator::new(dataset, family, seed).queries(requests);
     let trace = RequestTrace::poisson(queries, rate, 4, seed);
@@ -437,8 +480,31 @@ pub fn run(args: &Args) -> Result<()> {
             cal.recent_abs_err_pct,
         );
     }
+    if metrics_flag {
+        print!("{}", service.export_metrics().prometheus_text());
+    }
     if stats_json {
-        println!("{}", stats.to_json().to_string());
+        // Registry snapshot rides along: pool occupancy, limiter
+        // tracked clients, per-device DASI/CPQ/Phi gauges.
+        let mut doc = stats.to_json();
+        if let crate::json::Json::Obj(map) = &mut doc {
+            map.insert("metrics".into(), service.export_metrics().snapshot_json());
+        }
+        println!("{}", doc.to_string());
+    }
+    if !trace_out.is_empty() {
+        if let Some(trace) = service.trace_snapshot() {
+            std::fs::write(&trace_out, trace.chrome_trace().to_string())?;
+            println!(
+                "trace: {} events in ring ({} recorded) -> {}",
+                trace.len(),
+                trace.total_recorded(),
+                trace_out
+            );
+        }
+        if let Some(profile) = service.profile_snapshot() {
+            print!("{}", profile.render_table());
+        }
     }
     Ok(())
 }

@@ -25,6 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::gateway::SlaClass;
 use crate::json::Json;
+use crate::obs::{FlightRecorder, MetricsRegistry, Profiler};
 use crate::rng::Pcg;
 use crate::safety::ratelimit::ShardedRateLimiter;
 use crate::safety::thermal_guard::SHED_LEVELS;
@@ -68,6 +69,10 @@ pub struct HarnessConfig {
     /// Per-client sustained allowance and burst for the sharded limiter.
     pub rate_per_s: f64,
     pub rate_burst: f64,
+    /// Arm the pool's flight recorder + per-worker profiler for the
+    /// run. Harness-side: the accounting closure is identical either
+    /// way; the trace is what a closure violation dumps.
+    pub obs: bool,
     pub seed: u64,
 }
 
@@ -89,6 +94,7 @@ impl Default for HarnessConfig {
             thrash_block: 1500,
             rate_per_s: 50_000.0,
             rate_burst: 256.0,
+            obs: false,
             seed: 0,
         }
     }
@@ -202,6 +208,14 @@ pub struct HarnessReport {
     /// Clients tracked by the limiter at the end — bounded under id
     /// churn by the eviction sweep.
     pub limiter_clients: usize,
+    /// Registry snapshot of the run (pool counters/histograms, limiter
+    /// clients, harness admission ledger) — the `--metrics` surface.
+    pub metrics: MetricsRegistry,
+    /// Flight-recorder snapshot when the run was armed (`config.obs`):
+    /// the artifact a closure violation dumps.
+    pub trace: Option<FlightRecorder>,
+    /// Per-worker self-time profile when armed.
+    pub profile: Option<Profiler>,
 }
 
 impl HarnessReport {
@@ -400,6 +414,9 @@ pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
     let rate_limited: [AtomicU64; 3] = Default::default();
 
     let pool = ExecutorPool::new(pool_config);
+    if config.obs {
+        pool.enable_obs();
+    }
     let service_us = config.service_us;
     pool.run_scoped(
         move |_worker| Ok(SyntheticWorker::with_mean_service_us(service_us)),
@@ -461,13 +478,27 @@ pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
 
     let wall_s = pool.now_s();
     let pool_stats = pool.stats();
-    let classes = std::array::from_fn(|i| ClassReport {
+    let classes: [ClassReport; 3] = std::array::from_fn(|i| ClassReport {
         class: SlaClass::all()[i],
         submitted: submitted[i].load(Ordering::SeqCst),
         shed: shed[i].load(Ordering::SeqCst),
         rate_limited: rate_limited[i].load(Ordering::SeqCst),
         pool: pool_stats[i].clone(),
     });
+    // One registry snapshot for the whole run: the pool's counters and
+    // split histograms plus the harness-side admission ledger and the
+    // limiter's tracked-client count.
+    let mut metrics = MetricsRegistry::new();
+    pool.export_metrics(&mut metrics);
+    metrics.gauge_set("limiter_clients", limiter.clients() as f64);
+    metrics.gauge_set("harness_wall_s", wall_s);
+    metrics.counter_set("harness_requests", config.requests as u64);
+    for c in &classes {
+        let name = c.class.as_str();
+        metrics.counter_set(&format!("harness_{name}_submitted"), c.submitted);
+        metrics.counter_set(&format!("harness_{name}_shed"), c.shed);
+        metrics.counter_set(&format!("harness_{name}_rate_limited"), c.rate_limited);
+    }
     Ok(HarnessReport {
         classes,
         wall_s,
@@ -476,6 +507,9 @@ pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
         workers,
         shards,
         limiter_clients: limiter.clients(),
+        metrics,
+        trace: pool.trace_snapshot(),
+        profile: pool.profile_snapshot(),
     })
 }
 

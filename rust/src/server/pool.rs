@@ -38,7 +38,9 @@ use std::time::{Duration, Instant};
 use anyhow::{anyhow, Result};
 
 use crate::gateway::queue::f64_order_bits;
+use crate::gateway::SlaClass;
 use crate::metrics::LatencyRecorder;
+use crate::obs::{FlightRecorder, MetricsRegistry, Profiler};
 
 use super::api::{InferenceRequest, InferenceResponse};
 
@@ -166,6 +168,16 @@ pub struct ExecutorPool {
     shutdown: AtomicBool,
     sleep_lock: Mutex<()>,
     wake: Condvar,
+    /// Observability gate: one relaxed load per hook when off, so the
+    /// multi-threaded submit/dispatch paths pay nothing un-armed.
+    obs_enabled: AtomicBool,
+    /// Shared flight recorder (admission / dispatch / expiry events).
+    /// Its own mutex, never taken while holding a shard lock from
+    /// another recorder call — workers accumulate profile time locally
+    /// and merge once at exit, mirroring the `hist` pattern.
+    recorder: Mutex<FlightRecorder>,
+    /// Per-worker wall-clock self-time, merged at worker exit.
+    profiler: Mutex<Profiler>,
 }
 
 impl ExecutorPool {
@@ -184,7 +196,60 @@ impl ExecutorPool {
             shutdown: AtomicBool::new(false),
             sleep_lock: Mutex::new(()),
             wake: Condvar::new(),
+            obs_enabled: AtomicBool::new(false),
+            recorder: Mutex::new(FlightRecorder::disabled()),
+            profiler: Mutex::new(Profiler::disabled()),
         }
+    }
+
+    /// Arm the pool's flight recorder and per-worker profiler.
+    /// Callable at any point (the gate is atomic); typically armed
+    /// before the first submit so the trace covers the whole run.
+    pub fn enable_obs(&self) {
+        *self.recorder.lock().unwrap() = FlightRecorder::with_capacity(
+            crate::obs::DEFAULT_RING_CAPACITY,
+        );
+        *self.profiler.lock().unwrap() = Profiler::enabled();
+        self.obs_enabled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn obs_enabled(&self) -> bool {
+        self.obs_enabled.load(Ordering::Relaxed)
+    }
+
+    /// Snapshot of the flight recorder (clone under the mutex); `None`
+    /// when observability was never armed.
+    pub fn trace_snapshot(&self) -> Option<FlightRecorder> {
+        if !self.obs_enabled() {
+            return None;
+        }
+        Some(self.recorder.lock().unwrap().clone())
+    }
+
+    /// Snapshot of the per-worker profiler; `None` un-armed. Workers
+    /// merge their local accumulators at exit, so the full table is
+    /// available after `run_scoped`/drop joins them.
+    pub fn profile_snapshot(&self) -> Option<Profiler> {
+        if !self.obs_enabled() {
+            return None;
+        }
+        Some(self.profiler.lock().unwrap().clone())
+    }
+
+    /// One flight-recorder event on the pool clock (µs ticks).
+    #[inline]
+    fn obs_record(
+        &self,
+        name: &'static str,
+        comp: &'static str,
+        index: u32,
+        args: &[(&'static str, f64)],
+    ) {
+        if !self.obs_enabled() {
+            return;
+        }
+        let tick = (self.now_s() * 1e6) as u64;
+        self.recorder.lock().unwrap().record(tick, "pool", name, comp, index, args);
     }
 
     pub fn config(&self) -> &PoolConfig {
@@ -223,6 +288,13 @@ impl ExecutorPool {
             let row = &mut rows[class];
             if row.len() >= self.config.queue_depth {
                 self.counters[class].overflow.fetch_add(1, Ordering::SeqCst);
+                drop(rows);
+                self.obs_record(
+                    "overflow",
+                    "class",
+                    class as u32,
+                    &[("job", id as f64), ("shard", shard as f64)],
+                );
                 return Err(entry.job);
             }
             let key = entry.key();
@@ -231,6 +303,12 @@ impl ExecutorPool {
         }
         self.counters[class].admitted.fetch_add(1, Ordering::SeqCst);
         self.queued[class].fetch_add(1, Ordering::SeqCst);
+        self.obs_record(
+            "admit",
+            "class",
+            class as u32,
+            &[("job", id as f64), ("shard", shard as f64)],
+        );
         self.wake.notify_one();
         Ok(())
     }
@@ -265,11 +343,31 @@ impl ExecutorPool {
     /// (`PooledExecutor`) and scoped ([`ExecutorPool::run_scoped`])
     /// entries share one loop.
     pub fn worker_loop<W: PoolWorker>(&self, home: usize, worker: &mut W) {
+        // Per-worker profile accumulators: local while the worker runs
+        // (no shared-lock traffic on the dispatch path), merged into
+        // the pool profiler once at exit.
+        let mut prof_fires = 0u64;
+        let mut prof_self_s = 0.0f64;
         loop {
             match self.take_next(home) {
-                Some(entry) => self.process(worker, entry),
+                Some(entry) => {
+                    let span = if self.obs_enabled() { Some(Instant::now()) } else { None };
+                    self.process(worker, entry);
+                    if let Some(started) = span {
+                        prof_fires += 1;
+                        prof_self_s += started.elapsed().as_secs_f64();
+                    }
+                }
                 None => {
                     if self.shutdown.load(Ordering::SeqCst) && self.queued_total() == 0 {
+                        if prof_fires > 0 {
+                            self.profiler.lock().unwrap().add(
+                                "worker",
+                                home as u32,
+                                prof_fires,
+                                prof_self_s,
+                            );
+                        }
                         return;
                     }
                     // Bounded sleep: the submit→notify race can miss a
@@ -293,6 +391,12 @@ impl ExecutorPool {
             // Expired in queue: terminal wait recorded, never executed.
             self.counters[class].expired.fetch_add(1, Ordering::SeqCst);
             self.hist.lock().unwrap()[class].queue_wait.record(queue_wait_s);
+            self.obs_record(
+                "expire",
+                "class",
+                class as u32,
+                &[("job", entry.id as f64), ("queue_wait_s", queue_wait_s)],
+            );
             if let Some(reply) = entry.job.reply {
                 let _ = reply.send(Err(anyhow!(
                     "deadline expired after {queue_wait_s:.6} s in queue"
@@ -312,6 +416,17 @@ impl ExecutorPool {
             h.service.record(service_s);
             h.e2e.record(e2e_s);
         }
+        self.obs_record(
+            "dispatch",
+            "class",
+            class as u32,
+            &[
+                ("job", entry.id as f64),
+                ("queue_wait_s", queue_wait_s),
+                ("service_s", service_s),
+                ("ok", if result.is_ok() { 1.0 } else { 0.0 }),
+            ],
+        );
         match result {
             Ok(out) => {
                 self.counters[class].completed.fetch_add(1, Ordering::SeqCst);
@@ -361,6 +476,35 @@ impl ExecutorPool {
                 histograms: hist[c].clone(),
             }
         })
+    }
+
+    /// Export the pool's live state into a metrics registry: occupancy
+    /// and per-class queue depth as gauges, per-class accounting as
+    /// counters, and the split wait/service/e2e histograms merged in
+    /// under `pool_<class>_<kind>` names.
+    pub fn export_metrics(&self, reg: &mut MetricsRegistry) {
+        reg.gauge_set("pool_occupancy", self.occupancy());
+        reg.gauge_set("pool_workers", self.config.workers as f64);
+        reg.gauge_set("pool_shards", self.shards.len() as f64);
+        let stats = self.stats();
+        for class in SlaClass::all() {
+            let c = class.index();
+            let name = class.as_str();
+            let s = &stats[c];
+            reg.gauge_set(
+                &format!("pool_{name}_queued"),
+                self.queued[c].load(Ordering::SeqCst) as f64,
+            );
+            reg.counter_set(&format!("pool_{name}_admitted"), s.admitted);
+            reg.counter_set(&format!("pool_{name}_overflow"), s.overflow);
+            reg.counter_set(&format!("pool_{name}_expired"), s.expired);
+            reg.counter_set(&format!("pool_{name}_completed"), s.completed);
+            reg.counter_set(&format!("pool_{name}_failed"), s.failed);
+            reg.counter_set(&format!("pool_{name}_deadline_hits"), s.deadline_hits);
+            reg.hist_merge(&format!("pool_{name}_queue_wait_s"), &s.histograms.queue_wait);
+            reg.hist_merge(&format!("pool_{name}_service_s"), &s.histograms.service);
+            reg.hist_merge(&format!("pool_{name}_e2e_s"), &s.histograms.e2e);
+        }
     }
 
     /// Run `workers` scoped worker threads around `body` (the producer
@@ -641,6 +785,40 @@ mod tests {
         for s in &stats {
             assert_eq!(s.admitted, s.completed + s.expired + s.failed);
         }
+    }
+
+    #[test]
+    fn obs_records_admission_dispatch_and_expiry() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 2, shards: 2, queue_depth: 8 });
+        pool.enable_obs();
+        pool.try_submit(job(SlaClass::Standard, 0, -1.0)).unwrap();
+        pool.try_submit(job(SlaClass::Standard, 1, f64::INFINITY)).unwrap();
+        pool.run_scoped(|_| Ok(NoopWorker), |_| {}).unwrap();
+
+        let trace = pool.trace_snapshot().expect("recorder armed");
+        let names: Vec<&str> = trace.events().iter().map(|e| e.name).collect();
+        assert!(names.contains(&"admit"), "admissions recorded: {names:?}");
+        assert!(names.contains(&"expire"), "expiry recorded: {names:?}");
+        assert!(names.contains(&"dispatch"), "dispatch recorded: {names:?}");
+
+        let prof = pool.profile_snapshot().expect("profiler armed");
+        assert!(!prof.is_empty(), "workers merge self-time at exit");
+
+        let mut reg = MetricsRegistry::new();
+        pool.export_metrics(&mut reg);
+        assert_eq!(reg.counter("pool_standard_admitted"), Some(2));
+        assert_eq!(reg.counter("pool_standard_expired"), Some(1));
+        assert!(reg.gauge("pool_occupancy").is_some());
+        assert!(reg.prometheus_text().contains("pool_standard_queue_wait_s_count 2"));
+    }
+
+    #[test]
+    fn disabled_obs_snapshots_are_none() {
+        let pool =
+            ExecutorPool::new(PoolConfig { workers: 1, shards: 1, queue_depth: 4 });
+        assert!(pool.trace_snapshot().is_none());
+        assert!(pool.profile_snapshot().is_none());
     }
 
     #[test]

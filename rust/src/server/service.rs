@@ -20,6 +20,7 @@ use crate::devices::spec::DevIdx;
 use crate::experiments::runner::default_meta;
 use crate::gateway::admission::{AdmissionConfig, AdmissionController, AdmitDecision};
 use crate::gateway::telemetry::{FleetTelemetry, TelemetryProbe};
+use crate::obs::MetricsRegistry;
 use crate::safety::ratelimit::RateLimiter;
 use crate::safety::validation::InputValidator;
 use crate::workload::datasets::ModelFamily;
@@ -286,6 +287,63 @@ impl Service {
     /// `ServiceConfig::calibration` enabled the estimators).
     pub fn calibration_stats(&self) -> Option<crate::calibration::CalibrationStats> {
         self.front.as_ref().and_then(|f| f.probe.calibration_stats())
+    }
+
+    /// Arm the executor pool's flight recorder + per-worker profiler
+    /// (`serve --trace-out`). Purely additive: admission decisions and
+    /// responses are identical with tracing on or off.
+    pub fn enable_trace(&self) {
+        self.executor.pool().enable_obs();
+    }
+
+    /// Flight-recorder snapshot of the executor pool (None un-armed).
+    pub fn trace_snapshot(&self) -> Option<crate::obs::FlightRecorder> {
+        self.executor.pool().trace_snapshot()
+    }
+
+    /// Per-worker self-time profile of the executor pool (None
+    /// un-armed).
+    pub fn profile_snapshot(&self) -> Option<crate::obs::Profiler> {
+        self.executor.pool().profile_snapshot()
+    }
+
+    /// Export the serving front's live state through the unified
+    /// metrics registry: executor-pool occupancy, rate-limiter
+    /// tracked-client count, the request ledger, and (with the gateway
+    /// front) per-device DASI/CPQ/Phi telemetry gauges — the
+    /// `serve --metrics` / `--stats-json` surface.
+    pub fn export_metrics(&self) -> MetricsRegistry {
+        let mut reg = MetricsRegistry::new();
+        reg.gauge_set("serve_pool_occupancy", self.executor.occupancy());
+        let clients = match &self.front {
+            Some(front) => front.admission.tracked_tenants(),
+            None => self.limiter.clients(),
+        };
+        reg.gauge_set("serve_limiter_clients", clients as f64);
+        reg.counter_set("serve_served", self.stats.served);
+        reg.counter_set("serve_rejected_validation", self.stats.rejected_validation);
+        reg.counter_set("serve_rejected_rate_limited", self.stats.rejected_rate_limited);
+        reg.counter_set("serve_rejected_overloaded", self.stats.rejected_overloaded);
+        reg.counter_set("serve_failed_execution", self.stats.failed_execution);
+        reg.counter_set("serve_tokens_out", self.stats.tokens_out);
+        reg.counter_set("serve_halted_early", self.stats.halted_early);
+        reg.gauge_set("serve_wall_s", self.started.elapsed().as_secs_f64());
+        if let Some(front) = &self.front {
+            reg.gauge_set("serve_safety_version", front.probe.safety_version() as f64);
+            for d in &front.snap.devices {
+                let i = d.dev.0;
+                reg.gauge_set(&format!("serve_dasi_dev{i}"), d.dasi);
+                reg.gauge_set(&format!("serve_cpq_dev{i}"), d.cpq);
+                reg.gauge_set(&format!("serve_phi_dev{i}"), d.phi);
+                reg.gauge_set(&format!("serve_shed_level_dev{i}"), d.shed_level as f64);
+            }
+            if let Some(cal) = front.probe.calibration_stats() {
+                reg.gauge_set("serve_calibration_samples", cal.samples as f64);
+                reg.gauge_set("serve_calibration_folds", cal.version as f64);
+                reg.gauge_set("serve_calibration_err_pct", cal.mean_abs_err_pct);
+            }
+        }
+        reg
     }
 }
 

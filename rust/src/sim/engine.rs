@@ -29,6 +29,7 @@ use crate::devices::spec::{DevIdx, DeviceId, DeviceSpec};
 use crate::devices::thermal::ThermalState;
 use crate::metrics::energy::EnergyLedger;
 use crate::metrics::latency::LatencyRecorder;
+use crate::obs::Obs;
 use crate::rng::Pcg;
 use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
@@ -291,6 +292,33 @@ pub(crate) struct DesState {
     pub(crate) pending_idle_j: Vec<Option<f64>>,
 }
 
+/// Engine counters sampled around one component dispatch; the deltas
+/// become flight-recorder events (obs-armed runs only).
+#[derive(Debug, Clone, Copy)]
+struct CounterSnap {
+    failures: u64,
+    recoveries: u64,
+    table_rebuilds: u64,
+    replans: u64,
+    cal_version: u64,
+}
+
+/// Default calibration-refresh (Model component) clock divider for
+/// metro-class fleets. Chosen from the PR 9 profile table: at 100
+/// devices the Model dispatch is pure overhead on drift-free ticks
+/// (the calibrator version rarely moves between queries), and folds
+/// deferred by up to 3 ticks land before the next Planning check that
+/// could consume them at divider 4 — the largest divider that keeps
+/// the drift→replan edge within one checkpoint cadence quantum.
+/// Consumed by [`SimEngine::apply_default_dividers`]; Legacy-mode
+/// harnesses must not apply it (that mode ignores overrides).
+pub const METRO_CALIBRATION_DIVIDER: u64 = 4;
+
+/// Fleet size at and above which [`SimEngine::apply_default_dividers`]
+/// treats the fleet as metro-class (metro is 100 devices; every paper
+/// preset is ≤ 5).
+pub const METRO_DIVIDER_MIN_DEVICES: usize = 32;
+
 /// The engine.
 ///
 /// `Clone` is part of the failover substrate: the desync harness runs
@@ -351,6 +379,12 @@ pub struct SimEngine {
     pub pjrt_time_scale: f64,
     /// Discrete-event scheduling state (see [`DesState`]).
     pub(crate) des: DesState,
+    /// Observability bundle (flight recorder + metrics + profiler).
+    /// HARNESS state, exactly like `options.checkpoint_every` and
+    /// `options.schedule`: never serialized, never digested, never fed
+    /// back into simulated decisions — `rust/tests/obs_properties.rs`
+    /// pins obs-on/obs-off bit-equivalence on every preset.
+    pub(crate) obs: Obs,
 }
 
 impl SimEngine {
@@ -408,7 +442,23 @@ impl SimEngine {
             queries_done: 0,
             pjrt_time_scale: 1.0,
             des,
+            obs: Obs::disabled(),
         }
+    }
+
+    /// Arm the observability bundle (flight recorder + metrics +
+    /// profiler) at the default ring capacity. Harness-side only: the
+    /// engine's simulated trajectory is bit-identical either way.
+    pub fn enable_obs(&mut self) {
+        self.obs = Obs::enabled();
+    }
+
+    pub fn obs(&self) -> &Obs {
+        &self.obs
+    }
+
+    pub fn obs_mut(&mut self) -> &mut Obs {
+        &mut self.obs
     }
 
     /// Default DES component registration: every component on divider 1
@@ -448,6 +498,22 @@ impl SimEngine {
             return false;
         }
         self.des.scheduler.set_divider(id, divider)
+    }
+
+    /// Apply the profile-derived default clock dividers: metro-class
+    /// fleets (≥ [`METRO_DIVIDER_MIN_DEVICES`] devices) slow the Model
+    /// (calibration-refresh) component to
+    /// [`METRO_CALIBRATION_DIVIDER`]; paper-scale fleets keep every
+    /// divider at 1. Harness-side policy for FRESH engines only: a
+    /// restored snapshot carries its serialized clock domains, and
+    /// Legacy-mode harnesses must skip this call (that mode documents
+    /// that it ignores divider overrides). Returns whether a divider
+    /// was changed.
+    pub fn apply_default_dividers(&mut self) -> bool {
+        if self.fleet.len() < METRO_DIVIDER_MIN_DEVICES {
+            return false;
+        }
+        self.set_component_divider(ComponentId::of(Stage::Model), METRO_CALIBRATION_DIVIDER)
     }
 
     pub fn clock_s(&self) -> f64 {
@@ -851,14 +917,16 @@ impl SimEngine {
         oracle: &CoverageOracle,
     ) -> (bool, u32) {
         let due = self.des.scheduler.take_due(tick);
-        self.step_environment();
-        self.refresh_calibration();
-        self.check_replan();
-        let outcome = self.step_execution(query, samples, oracle);
+        self.dispatch_component(ComponentId::of(Stage::Environment), tick, query, samples, oracle);
+        self.dispatch_component(ComponentId::of(Stage::Model), tick, query, samples, oracle);
+        self.dispatch_component(ComponentId::of(Stage::Planning), tick, query, samples, oracle);
+        let outcome = self
+            .dispatch_component(ComponentId::of(Stage::Execution), tick, query, samples, oracle)
+            .expect("execution dispatch returns the query outcome");
         for i in 0..self.des.window_ids.len() {
-            self.step_window(i);
+            self.dispatch_component(ComponentId::window(i as u16), tick, query, samples, oracle);
         }
-        self.step_fold();
+        self.dispatch_component(ComponentId::of(Stage::Fold), tick, query, samples, oracle);
         for id in due {
             self.des.scheduler.reschedule(id, tick);
         }
@@ -883,17 +951,161 @@ impl SimEngine {
         }
         let mut outcome = (false, 0);
         for cid in due {
-            match cid.stage {
-                Stage::Environment => self.step_environment(),
-                Stage::Model => self.refresh_calibration(),
-                Stage::Planning => self.check_replan(),
-                Stage::Execution => outcome = self.step_execution(query, samples, oracle),
-                Stage::Window => self.step_window(cid.index as usize),
-                Stage::Fold => self.step_fold(),
+            if let Some(o) = self.dispatch_component(cid, tick, query, samples, oracle) {
+                outcome = o;
             }
             self.des.scheduler.reschedule(cid, tick);
         }
         outcome
+    }
+
+    /// Dispatch one component: the single stage switch both schedule
+    /// paths share, wrapped with the profiler span and flight-recorder
+    /// hooks. Events are derived from engine-counter DELTAS around the
+    /// step (no obs handle threads through the component worlds), and
+    /// both the snapshot and the recording happen only when obs is
+    /// armed — the obs-off cost is one branch per dispatch. Returns the
+    /// query outcome for Execution, `None` for every other stage.
+    fn dispatch_component(
+        &mut self,
+        cid: ComponentId,
+        tick: u64,
+        query: &Query,
+        samples: u32,
+        oracle: &CoverageOracle,
+    ) -> Option<(bool, u32)> {
+        let enabled = self.obs.is_enabled();
+        let before = if enabled {
+            Some(CounterSnap {
+                failures: self.failures,
+                recoveries: self.recoveries.len() as u64,
+                table_rebuilds: self.table_rebuilds,
+                replans: self.replans,
+                cal_version: self.calibrator.version(),
+            })
+        } else {
+            None
+        };
+        let span = self.obs.profiler.start();
+        let outcome = match cid.stage {
+            Stage::Environment => {
+                self.step_environment();
+                None
+            }
+            Stage::Model => {
+                self.refresh_calibration();
+                None
+            }
+            Stage::Planning => {
+                self.check_replan();
+                None
+            }
+            Stage::Execution => Some(self.step_execution(query, samples, oracle)),
+            Stage::Window => {
+                self.step_window(cid.index as usize);
+                None
+            }
+            Stage::Fold => {
+                self.step_fold();
+                None
+            }
+        };
+        self.obs.profiler.stop(span, cid.stage.as_str(), cid.index as u32);
+        if let Some(before) = before {
+            self.record_dispatch(cid, tick, before, &outcome);
+        }
+        outcome
+    }
+
+    /// Flight-recorder tail of one dispatch: a generic "dispatch" event
+    /// per component plus specialized events for the notable counter
+    /// movements (failure transitions, calibration folds, drift fires,
+    /// replans). Only reached with obs armed.
+    fn record_dispatch(
+        &mut self,
+        cid: ComponentId,
+        tick: u64,
+        before: CounterSnap,
+        outcome: &Option<(bool, u32)>,
+    ) {
+        let comp = cid.stage.as_str();
+        let index = cid.index as u32;
+        match outcome {
+            Some((solved, ran)) => self.obs.recorder.record(
+                tick,
+                "des",
+                "dispatch",
+                comp,
+                index,
+                &[
+                    ("solved", if *solved { 1.0 } else { 0.0 }),
+                    ("samples", *ran as f64),
+                    ("clock_s", self.clock_s),
+                ],
+            ),
+            None => self.obs.recorder.record(tick, "des", "dispatch", comp, index, &[]),
+        }
+        let failures = self.failures - before.failures;
+        if failures > 0 {
+            self.obs.recorder.record(
+                tick,
+                "des",
+                "failure",
+                comp,
+                index,
+                &[("count", failures as f64), ("clock_s", self.clock_s)],
+            );
+        }
+        let recoveries = self.recoveries.len() as u64 - before.recoveries;
+        if recoveries > 0 {
+            self.obs.recorder.record(
+                tick,
+                "des",
+                "recovery",
+                comp,
+                index,
+                &[("count", recoveries as f64)],
+            );
+        }
+        let drifts = self.calibrator.version() - before.cal_version;
+        if drifts > 0 {
+            self.obs.recorder.record(
+                tick,
+                "calibration",
+                "drift",
+                comp,
+                index,
+                &[("folds", drifts as f64), ("version", self.calibrator.version() as f64)],
+            );
+        }
+        let rebuilds = self.table_rebuilds - before.table_rebuilds;
+        if rebuilds > 0 {
+            self.obs.recorder.record(
+                tick,
+                "calibration",
+                "fold",
+                comp,
+                index,
+                &[
+                    ("rebuilds", rebuilds as f64),
+                    ("calibrated_version", self.calibrated_version as f64),
+                ],
+            );
+        }
+        if self.replans > before.replans {
+            let cache_hit = self.replan_trail.last().map_or(false, |e| e.cache_hit);
+            self.obs.recorder.record(
+                tick,
+                "des",
+                "replan",
+                comp,
+                index,
+                &[
+                    ("replans", self.replans as f64),
+                    ("cache_hit", if cache_hit { 1.0 } else { 0.0 }),
+                ],
+            );
+        }
     }
 
     /// The Execution component: plan, budget, and run one query's

@@ -137,7 +137,18 @@ fn fresh(args: &Args) -> Result<()> {
             .context("writing event log")?;
     }
 
-    let engine = SimEngine::new(Fleet::preset(preset), shape(), options);
+    let trace_out = args.opt("trace-out", "");
+    let mut engine = SimEngine::new(Fleet::preset(preset), shape(), options.clone());
+    // Fresh engines on large fleets get the default calibration-refresh
+    // clock divider (metro's profiled default). Restores never pass
+    // through here, so serialized clock domains always win; Legacy
+    // harnesses ignore divider overrides by contract and get none.
+    if !matches!(options.schedule, ScheduleMode::Legacy) {
+        engine.apply_default_dividers();
+    }
+    if !trace_out.is_empty() {
+        engine.enable_obs();
+    }
     let mut session = ReplaySession::new(engine, log)?;
     while session.step() {
         let tick = session.cursor();
@@ -151,6 +162,17 @@ fn fresh(args: &Args) -> Result<()> {
     }
     let report = session.run_to_end();
     print_report(args, &report);
+    if !trace_out.is_empty() {
+        let obs = session.engine().obs();
+        std::fs::write(&trace_out, obs.recorder.chrome_trace().to_string())
+            .with_context(|| format!("writing trace to {trace_out}"))?;
+        eprintln!(
+            "trace: {} events in ring ({} recorded) -> {trace_out}",
+            obs.recorder.len(),
+            obs.recorder.total_recorded()
+        );
+        eprint!("{}", obs.profiler.render_table());
+    }
     Ok(())
 }
 
@@ -162,7 +184,13 @@ fn restore(args: &Args) -> Result<()> {
         std::fs::read_to_string(&snap_path).with_context(|| format!("reading {snap_path}"))?;
     let log_text =
         std::fs::read_to_string(&log_path).with_context(|| format!("reading {log_path}"))?;
-    let engine = restore_engine(&Json::parse(&snap_text)?)?;
+    let mut engine = restore_engine(&Json::parse(&snap_text)?)?;
+    // A restored engine always comes back obs-off (the recorder is not
+    // snapshot state); re-arm it here if the resumed run wants a trace.
+    let trace_out = args.opt("trace-out", "");
+    if !trace_out.is_empty() {
+        engine.enable_obs();
+    }
     let log = EventLog::from_json(&Json::parse(&log_text)?)?;
     let resumed_at = engine.queries_done();
     let mut session = ReplaySession::new(engine, log)?;
@@ -170,6 +198,16 @@ fn restore(args: &Args) -> Result<()> {
     eprintln!("restored at tick {resumed_at}; replaying {remaining} logged events");
     let report = session.run_to_end();
     print_report(args, &report);
+    if !trace_out.is_empty() {
+        let obs = session.engine().obs();
+        std::fs::write(&trace_out, obs.recorder.chrome_trace().to_string())
+            .with_context(|| format!("writing trace to {trace_out}"))?;
+        eprintln!(
+            "trace: {} events in ring ({} recorded) -> {trace_out}",
+            obs.recorder.len(),
+            obs.recorder.total_recorded()
+        );
+    }
     Ok(())
 }
 
@@ -199,6 +237,12 @@ fn drill(args: &Args) -> Result<()> {
             print_outcome(o);
             if !o.passed() {
                 failed += 1;
+                // A mismatch auto-dumps the reference run's flight
+                // recorder: the dispatch trail leading to the state
+                // the recovery failed to reproduce.
+                if let Some(trace) = &o.trace {
+                    eprintln!("{trace}");
+                }
             }
         }
     }
@@ -229,7 +273,16 @@ fn desync(args: &Args) -> Result<()> {
     let dev = DevIdx(args.num("stale-device", 1u16)?);
     let derate = args.num("stale-bandwidth-scale", 0.5f64)?;
 
-    let primary = SimEngine::new(Fleet::preset(preset), shape(), options);
+    let mut primary = SimEngine::new(Fleet::preset(preset), shape(), options.clone());
+    if !matches!(options.schedule, ScheduleMode::Legacy) {
+        primary.apply_default_dividers();
+    }
+    // The primary runs with its recorder armed so the desync trail
+    // includes the dispatches leading up to the split, not just the
+    // checkpoint comparisons. (The stale replica is cloned AFTER so
+    // both replicas still start from identical engine state — obs is
+    // outside the digest either way.)
+    primary.enable_obs();
     let overlay = CalibratedSpec { bandwidth_scale: derate, ..CalibratedSpec::identity() };
     let replica = stale_replica(&primary, dev, overlay);
 
@@ -242,11 +295,23 @@ fn desync(args: &Args) -> Result<()> {
                 report.components.join(", "),
                 report.checkpoints.len()
             );
+            // Divergence auto-dumps the recorder trail.
+            eprintln!("{}", report.recorder.render_text(48));
         }
         None => println!(
             "replicas stayed in sync across {} comparisons",
             report.checkpoints.len()
         ),
+    }
+    let trace_out = args.opt("trace-out", "");
+    if !trace_out.is_empty() {
+        std::fs::write(&trace_out, report.recorder.chrome_trace().to_string())
+            .with_context(|| format!("writing trace to {trace_out}"))?;
+        eprintln!(
+            "trace: {} events in ring ({} recorded) -> {trace_out}",
+            report.recorder.len(),
+            report.recorder.total_recorded()
+        );
     }
     Ok(())
 }

@@ -20,6 +20,7 @@ use anyhow::Result;
 
 use crate::calibration::CalibratedSpec;
 use crate::devices::spec::DevIdx;
+use crate::obs::FlightRecorder;
 use crate::sim::engine::SimEngine;
 use crate::snapshot::replay::{EventLog, ReplaySession};
 use crate::snapshot::{component_digests, engine_digest};
@@ -50,6 +51,12 @@ pub struct DesyncReport {
     /// Every comparison made, in tick order (the last entry is the
     /// end-of-log comparison).
     pub checkpoints: Vec<CheckpointComparison>,
+    /// Flight-recorder trail of the scan: one `checkpoint` event per
+    /// comparison plus a `divergence` event naming the components at
+    /// the split — so `--desync` leaves a trace, not just a verdict.
+    /// Absorbs replica A's engine recorder when that replica ran with
+    /// obs armed.
+    pub recorder: FlightRecorder,
 }
 
 impl DesyncReport {
@@ -71,6 +78,7 @@ pub fn detect_desync(
     let mut a = ReplaySession::new(replica_a, log.clone())?;
     let mut b = ReplaySession::new(replica_b, log.clone())?;
     let mut checkpoints = Vec::new();
+    let mut recorder = FlightRecorder::with_capacity(crate::obs::DEFAULT_RING_CAPACITY);
 
     loop {
         let stepped_a = a.step();
@@ -86,28 +94,53 @@ pub fn detect_desync(
                 digest_b: engine_digest(b.engine()),
             };
             let diverged = !cmp.matches();
+            recorder.record(
+                tick,
+                "desync",
+                "checkpoint",
+                "",
+                0,
+                &[("match", if diverged { 0.0 } else { 1.0 })],
+            );
             checkpoints.push(cmp);
             if diverged {
                 let da = component_digests(a.engine());
                 let db = component_digests(b.engine());
-                let components = da
+                let components: Vec<&'static str> = da
                     .iter()
                     .zip(db.iter())
                     .filter(|((_, x), (_, y))| x != y)
                     .map(|((name, _), _)| *name)
                     .collect();
+                // The divergence event names the split components in
+                // its note so the rendered trail is self-contained.
+                recorder.record_note(
+                    tick,
+                    "desync",
+                    "divergence",
+                    "",
+                    0,
+                    &[("components", components.len() as f64)],
+                    components.join(","),
+                );
+                // Replica A's own dispatch trail (if it ran obs-armed)
+                // gives the events LEADING UP to the split.
+                recorder.absorb(&a.engine().obs().recorder);
                 return Ok(DesyncReport {
                     first_divergence_tick: Some(tick),
                     components,
                     checkpoints,
+                    recorder,
                 });
             }
         }
         if done {
+            recorder.absorb(&a.engine().obs().recorder);
             return Ok(DesyncReport {
                 first_divergence_tick: None,
                 components: Vec::new(),
                 checkpoints,
+                recorder,
             });
         }
     }

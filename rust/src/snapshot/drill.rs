@@ -19,6 +19,7 @@ use anyhow::{bail, Result};
 
 use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::json::Json;
+use crate::obs::FlightRecorder;
 use crate::rng::Pcg;
 use crate::sim::engine::{SimEngine, SimOptions, SimReport};
 use crate::snapshot::replay::{EventLog, ReplaySession};
@@ -38,6 +39,10 @@ pub struct DrillOutcome {
     /// Recovered report == uninterrupted reference report (bit-exact).
     pub report_match: bool,
     pub final_digest: u64,
+    /// Rendered flight-recorder tail of the reference run, attached on
+    /// a mismatch so a failed drill leaves a readable trace of the
+    /// dispatches leading to the reference state.
+    pub trace: Option<String>,
 }
 
 impl DrillOutcome {
@@ -54,7 +59,7 @@ fn checkpointed_run(
     engine: SimEngine,
     log: &EventLog,
     checkpoint_every: u64,
-) -> Result<(Vec<(u64, String)>, SimReport)> {
+) -> Result<(Vec<(u64, String)>, SimReport, FlightRecorder)> {
     let mut session = ReplaySession::new(engine, log.clone())?;
     let mut checkpoints = vec![(0u64, snapshot_engine(session.engine()).to_string())];
     loop {
@@ -70,7 +75,8 @@ fn checkpointed_run(
     // stamps the digest.
     debug_assert_eq!(session.cursor(), log.events.len() as u64);
     let report = session.run_to_end();
-    Ok((checkpoints, report))
+    let trace = session.engine().obs().recorder.clone();
+    Ok((checkpoints, report, trace))
 }
 
 /// Kill-at-`kill_tick` recovery: restore the newest checkpoint at or
@@ -121,9 +127,15 @@ pub fn drill_preset(
 
     // Uninterrupted reference (no checkpoint I/O on the hot path is
     // needed for correctness, but running THROUGH the checkpointed
-    // driver also proves cutting snapshots perturbs nothing).
-    let engine = SimEngine::new(fleet, shape, options);
-    let (checkpoints, reference) = checkpointed_run(engine, &log, checkpoint_every)?;
+    // driver also proves cutting snapshots perturbs nothing). The
+    // reference runs with the flight recorder ARMED while every
+    // recovery runs obs-off (a restored engine always is): the drill's
+    // own digest/report equality is then a live proof that
+    // observability sits outside the snapshot semantics.
+    let mut engine = SimEngine::new(fleet, shape, options);
+    engine.enable_obs();
+    let (checkpoints, reference, reference_trace) =
+        checkpointed_run(engine, &log, checkpoint_every)?;
     let reference_digest = reference.state_digest;
 
     let n = queries.len() as u64;
@@ -137,13 +149,20 @@ pub fn drill_preset(
         .into_iter()
         .map(|kill_tick| {
             let (checkpoint_tick, report, digest) = recover(&checkpoints, &log, kill_tick)?;
+            let digest_match = digest == reference_digest;
+            let report_match = report == reference;
             Ok(DrillOutcome {
                 preset,
                 kill_tick,
                 checkpoint_tick,
-                digest_match: digest == reference_digest,
-                report_match: report == reference,
+                digest_match,
+                report_match,
                 final_digest: digest,
+                trace: if digest_match && report_match {
+                    None
+                } else {
+                    Some(reference_trace.render_text(48))
+                },
             })
         })
         .collect()

@@ -1230,6 +1230,10 @@ pub fn engine_from_state(j: &Json) -> Result<SimEngine> {
         queries_done: clock.usize_field("queries_done")?,
         pjrt_time_scale: f64_field(clock, "pjrt_time_scale")?,
         des,
+        // Observability is harness state outside the snapshot format:
+        // a restored engine always starts obs-off, whatever the donor
+        // binary recorded — the harness re-arms it if it wants a trace.
+        obs: crate::obs::Obs::disabled(),
     })
 }
 

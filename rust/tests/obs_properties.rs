@@ -1,0 +1,232 @@
+//! Observability contract lockdown (PR 9).
+//!
+//! The flight recorder, metrics registry, and per-component profiler
+//! are harness state STRICTLY OUTSIDE the digest semantics: arming
+//! them must not move a single bit of any `SimReport` or state digest,
+//! on any preset (the seven paper presets AND the 100-device metro
+//! stress preset), under any schedule mode (Legacy, Canonical,
+//! Fuzzed). A snapshot cut from an obs-armed engine must be
+//! byte-identical to one cut from an obs-off twin — same format
+//! version, no new fields — and restore into an obs-off engine that
+//! continues bit-identically.
+//!
+//! The metro default calibration-refresh divider
+//! (`apply_default_dividers`) is locked down here too: it engages only
+//! on large fleets, serializes through the component clock domains,
+//! and a divided metro run is bit-stable across a mid-run
+//! serialize/restore cycle.
+
+use qeil::coordinator::allocation::ModelShape;
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::experiments::runner::default_meta;
+use qeil::json::Json;
+use qeil::sim::engine::{SimEngine, SimOptions};
+use qeil::sim::ScheduleMode;
+use qeil::snapshot::{engine_digest, restore_engine, snapshot_engine};
+use qeil::workload::coverage::CoverageOracle;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::{Query, WorkloadGenerator};
+
+fn shape() -> ModelShape {
+    ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2))
+}
+
+fn queries(seed: u64, n: usize) -> Vec<Query> {
+    WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, seed).queries(n)
+}
+
+fn engine(preset: FleetPreset, options: SimOptions) -> SimEngine {
+    SimEngine::new(Fleet::preset(preset), shape(), options)
+}
+
+/// Run one engine through `qs`, returning (report, post-finish digest).
+fn run(mut e: SimEngine, qs: &[Query], samples: u32) -> (qeil::sim::engine::SimReport, u64) {
+    let oracle = CoverageOracle::new(e.seed());
+    for q in qs {
+        e.step_query(q, samples, &oracle);
+    }
+    let report = e.finish();
+    (report, engine_digest(&e))
+}
+
+// ---------------------------------------------------------------------
+// Obs-on vs obs-off bit-identity, all presets × all schedule modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn obs_on_and_obs_off_runs_are_bit_identical_on_every_preset() {
+    let schedules =
+        [ScheduleMode::Legacy, ScheduleMode::Canonical, ScheduleMode::Fuzzed(0xC0FFEE)];
+    for preset in FleetPreset::all() {
+        let qs = queries(13, 24);
+        for schedule in schedules {
+            let options = SimOptions { seed: 13, schedule, ..SimOptions::default() };
+
+            let plain = engine(preset, options.clone());
+            let mut armed = engine(preset, options);
+            armed.enable_obs();
+            assert!(armed.obs().is_enabled());
+
+            // Snapshot identity BEFORE running: obs must not appear in
+            // the serialized form at all (no format bump, no field).
+            assert_eq!(
+                snapshot_engine(&armed).to_string(),
+                snapshot_engine(&plain).to_string(),
+                "{preset:?}/{schedule:?}: obs leaked into the snapshot"
+            );
+
+            let oracle = CoverageOracle::new(plain.seed());
+            let mut plain = plain;
+            for q in &qs {
+                let a = plain.step_query(q, 4, &oracle);
+                let b = armed.step_query(q, 4, &oracle);
+                assert_eq!(a, b, "{preset:?}/{schedule:?}: step outcome diverged");
+            }
+            let report_plain = plain.finish();
+            let report_armed = armed.finish();
+            assert_eq!(
+                report_armed, report_plain,
+                "{preset:?}/{schedule:?}: SimReport moved under observation"
+            );
+            assert_eq!(
+                engine_digest(&armed),
+                engine_digest(&plain),
+                "{preset:?}/{schedule:?}: state digest moved under observation"
+            );
+            assert!(
+                armed.obs().recorder.total_recorded() > 0,
+                "{preset:?}/{schedule:?}: armed run recorded nothing"
+            );
+            assert_eq!(plain.obs().recorder.total_recorded(), 0);
+        }
+    }
+}
+
+#[test]
+fn obs_runs_are_bit_identical_on_metro_under_all_schedules() {
+    // The fleet-scale preset separately: 100 devices = 105 components
+    // per tick, so a short log already sweeps the whole dispatch
+    // surface (including the default Model-stage divider, which metro
+    // is large enough to engage).
+    let schedules =
+        [ScheduleMode::Legacy, ScheduleMode::Canonical, ScheduleMode::Fuzzed(0xBEEF)];
+    let qs = queries(29, 8);
+    for schedule in schedules {
+        let options = SimOptions { seed: 29, schedule, ..SimOptions::default() };
+        let mut plain = engine(FleetPreset::Metro, options.clone());
+        let mut armed = engine(FleetPreset::Metro, options);
+        if !matches!(schedule, ScheduleMode::Legacy) {
+            // Apply the production divider to BOTH replicas — the
+            // contract under test is obs-neutrality, with the divider
+            // as deployed.
+            assert!(plain.apply_default_dividers());
+            assert!(armed.apply_default_dividers());
+        }
+        armed.enable_obs();
+        let (report_plain, digest_plain) = run(plain, &qs, 2);
+        let oracle = CoverageOracle::new(armed.seed());
+        for q in &qs {
+            armed.step_query(q, 2, &oracle);
+        }
+        let report_armed = armed.finish();
+        assert_eq!(report_armed, report_plain, "metro/{schedule:?}: report moved");
+        assert_eq!(
+            engine_digest(&armed),
+            digest_plain,
+            "metro/{schedule:?}: digest moved"
+        );
+        assert!(armed.obs().recorder.total_recorded() > 0);
+        assert!(
+            armed.obs().profiler.len() > 0,
+            "metro/{schedule:?}: profiler recorded no component self-time"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// Snapshot neutrality: obs-armed snapshots restore obs-off, unchanged
+// ---------------------------------------------------------------------
+
+#[test]
+fn mid_run_obs_snapshot_restores_into_an_obs_off_engine_unchanged() {
+    let qs = queries(41, 30);
+    let options = SimOptions { seed: 41, ..SimOptions::default() };
+    let mut armed = engine(FleetPreset::EdgeBox, options.clone());
+    armed.enable_obs();
+    let mut twin = engine(FleetPreset::EdgeBox, options);
+    let oracle = CoverageOracle::new(armed.seed());
+    for q in &qs[..15] {
+        armed.step_query(q, 4, &oracle);
+        twin.step_query(q, 4, &oracle);
+    }
+
+    // The mid-run snapshot of the armed engine is byte-identical to
+    // the obs-off twin's — same format version, nothing extra.
+    let text = snapshot_engine(&armed).to_string();
+    assert_eq!(text, snapshot_engine(&twin).to_string());
+
+    // And it restores into an engine with observability OFF (the
+    // recorder is process state, not snapshot state), which then
+    // continues bit-identically to the still-armed original.
+    let mut restored = restore_engine(&Json::parse(&text).unwrap()).unwrap();
+    assert!(!restored.obs().is_enabled(), "restore must come back obs-off");
+    assert_eq!(restored.obs().recorder.total_recorded(), 0);
+    for q in &qs[15..] {
+        let a = armed.step_query(q, 4, &oracle);
+        let b = restored.step_query(q, 4, &oracle);
+        assert_eq!(a, b);
+        assert_eq!(engine_digest(&restored), engine_digest(&armed));
+    }
+    assert_eq!(restored.finish(), armed.finish());
+}
+
+// ---------------------------------------------------------------------
+// Metro default calibration-refresh divider
+// ---------------------------------------------------------------------
+
+#[test]
+fn default_divider_engages_only_on_large_fleets() {
+    let mut metro = engine(FleetPreset::Metro, SimOptions::default());
+    assert!(metro.apply_default_dividers(), "metro (100 devices) must take the divider");
+    for preset in FleetPreset::all() {
+        let mut e = engine(preset, SimOptions::default());
+        assert!(
+            !e.apply_default_dividers(),
+            "{preset:?} is below the device floor and must keep divider 1"
+        );
+    }
+}
+
+#[test]
+fn divided_metro_run_is_bit_stable_across_serialize_restore() {
+    // The first production consumer of `set_component_divider`: metro's
+    // Model-stage calibration refresh runs on a slower clock domain.
+    // The divided run must survive a mid-run serialize → string →
+    // restore cycle bit-exactly (the divider travels in the snapshot's
+    // clock domains, not in harness state).
+    let qs = queries(53, 14);
+    let options = SimOptions { seed: 53, ..SimOptions::default() };
+    let mut straight = engine(FleetPreset::Metro, options.clone());
+    assert!(straight.apply_default_dividers());
+    let mut chopped = engine(FleetPreset::Metro, options);
+    assert!(chopped.apply_default_dividers());
+
+    let oracle = CoverageOracle::new(straight.seed());
+    for q in &qs[..7] {
+        straight.step_query(q, 2, &oracle);
+        chopped.step_query(q, 2, &oracle);
+    }
+    // Process boundary: only the serialized string survives. The
+    // restore must NOT need apply_default_dividers() again — the
+    // serialized clock domains win.
+    let text = snapshot_engine(&chopped).to_string();
+    let mut chopped = restore_engine(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(snapshot_engine(&chopped).to_string(), text);
+    for q in &qs[7..] {
+        let a = straight.step_query(q, 2, &oracle);
+        let b = chopped.step_query(q, 2, &oracle);
+        assert_eq!(a, b);
+    }
+    assert_eq!(chopped.finish(), straight.finish());
+    assert_eq!(engine_digest(&chopped), engine_digest(&straight));
+}

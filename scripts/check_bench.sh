@@ -9,11 +9,12 @@
 # `gateway_dispatch_wave*`, `calibration_update*`,
 # `energy_table_rebuild*`, `snapshot_save*`, `snapshot_restore*`,
 # `replay_apply*`, `des_event_dispatch*`, `sim_step*`,
-# `metro_sim_step*`, `executor_pool_dispatch*`, `load_harness_step*` —
+# `metro_sim_step*`, `executor_pool_dispatch*`, `load_harness_step*`,
+# `obs_record_event*`, `metrics_snapshot*` —
 # the planner-substrate, plan-cache, serving-gateway, calibration,
-# snapshot/replay, discrete-event scheduler, and executor-pool hot
-# paths ROADMAP.md tracks) regresses by more than MAX_RATIO (default
-# 10x) in mean time.
+# snapshot/replay, discrete-event scheduler, executor-pool, and
+# observability hot paths ROADMAP.md tracks) regresses by more than
+# MAX_RATIO (default 10x) in mean time.
 # Non-gated entries are reported but never fail the run (they are too
 # machine-sensitive for a hard gate).
 #
@@ -49,6 +50,11 @@
 #     MAX_METRO_RATIO (default 4) of the edge box's (sim_step mean / 9
 #     components) — the DES core promises O(dispatched events), so a
 #     25x fleet may not cost superlinearly more per event.
+#   * observability overhead (PR 9): the obs-armed step (sim_step_obs
+#     mean) must stay ≤ MAX_OBS_RATIO (default 1.15) of the obs-off
+#     sim_step mean — the recorder+profiler budget of the
+#     observability contract. Self-relative by construction: both
+#     entries come from the same run on the same warm engine.
 #   * SLA-class tail ordering (PR 8, skipped under --no-run): one full
 #     adversarial load-harness run (`qeil serve --load-harness`,
 #     HARNESS_REQUESTS at HARNESS_OVERLOAD x capacity) must process
@@ -71,6 +77,7 @@
 #   MAX_REBUILD_RATIO=4 scripts/check_bench.sh
 #   MAX_SNAPSHOT_RATIO=15 scripts/check_bench.sh
 #   MAX_METRO_RATIO=6 scripts/check_bench.sh
+#   MAX_OBS_RATIO=1.25 scripts/check_bench.sh
 #   HARNESS_REQUESTS=20000 HARNESS_OVERLOAD=10 scripts/check_bench.sh
 #   MAX_CLASS_P99_SLACK=1.5 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
@@ -91,6 +98,7 @@ MAX_LOOKUP_US="${MAX_LOOKUP_US:-50}"
 MAX_REBUILD_RATIO="${MAX_REBUILD_RATIO:-3}"
 MAX_SNAPSHOT_RATIO="${MAX_SNAPSHOT_RATIO:-10}"
 MAX_METRO_RATIO="${MAX_METRO_RATIO:-4}"
+MAX_OBS_RATIO="${MAX_OBS_RATIO:-1.15}"
 
 if [[ "${1:-}" != "--no-run" ]]; then
     cargo bench --bench orchestrator
@@ -106,7 +114,7 @@ fi
 # + plan-cache hit-cost ceiling + drift-rebuild cheapness + checkpoint
 # round-trip cheapness.
 python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" \
-    "$MAX_SNAPSHOT_RATIO" "$MAX_METRO_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
+    "$MAX_SNAPSHOT_RATIO" "$MAX_METRO_RATIO" "$MAX_OBS_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
 import json
 import sys
 
@@ -114,7 +122,8 @@ cur_path, max_warm, max_lookup_us = sys.argv[1], float(sys.argv[2]), float(sys.a
 max_rebuild = float(sys.argv[4])
 max_snapshot = float(sys.argv[5])
 max_metro = float(sys.argv[6])
-strict = sys.argv[7] == "1"
+max_obs = float(sys.argv[7])
+strict = sys.argv[8] == "1"
 with open(cur_path) as f:
     doc = json.load(f)
 means = {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
@@ -182,7 +191,8 @@ else:
         print("checkpoint gate FAILED: a snapshot round-trip now rivals planner substrate "
               "costs — checkpoint cadence becomes unaffordable", file=sys.stderr)
         failed = True
-edge_step = next((v for k, v in means.items() if k.startswith("sim_step")), None)
+edge_step = next((v for k, v in means.items()
+                  if k.startswith("sim_step") and not k.startswith("sim_step_obs")), None)
 metro_step = next((v for k, v in means.items() if k.startswith("metro_sim_step")), None)
 if edge_step is None or metro_step is None:
     # Pre-PR7 artifact: the compare-existing workflow stays usable; CI
@@ -202,6 +212,23 @@ else:
     if ratio > max_metro:
         print("metro-scaling gate FAILED: per-component tick cost grows superlinearly with "
               "fleet size — the DES core's O(dispatched events) contract is broken",
+              file=sys.stderr)
+        failed = True
+obs_step = next((v for k, v in means.items() if k.startswith("sim_step_obs")), None)
+if obs_step is None or edge_step is None:
+    # Pre-PR9 artifact: the compare-existing workflow stays usable; CI
+    # mode insists on the observability entries being present.
+    print("obs-overhead gate: skipped (sim_step_obs / sim_step entries missing "
+          "from this result file)", file=sys.stderr)
+    failed = failed or strict
+else:
+    ratio = obs_step / max(edge_step, 1.0)
+    status = "ok" if ratio <= max_obs else "REGRESSION"
+    print(f"obs-overhead gate: {status} obs-on {obs_step / 1e3:.1f} us vs obs-off "
+          f"{edge_step / 1e3:.1f} us ({ratio:.3f}x, budget {max_obs:g}x)")
+    if ratio > max_obs:
+        print("obs-overhead gate FAILED: recording overhead exceeds the observability "
+              "contract's budget — the flight recorder/profiler is on the hot path",
               file=sys.stderr)
         failed = True
 sys.exit(1 if failed else 0)
@@ -309,6 +336,8 @@ GATED_PREFIXES = (
     "metro_sim_step",
     "executor_pool_dispatch",
     "load_harness_step",
+    "obs_record_event",
+    "metrics_snapshot",
 )
 
 

@@ -27,6 +27,11 @@
 # diverged from the uninterrupted run — a replay-determinism bug — or
 # the pool smoke run lost requests.
 #
+# Failures leave a flight-recorder trail (PR 9): a drill mismatch
+# auto-dumps the reference run's recorder to stderr, and the pool smoke
+# run writes its Chrome trace to TRACE_OUT (kept on failure, removed on
+# success) and dumps the recorder tail on a closure violation.
+#
 # Usage:
 #   scripts/drill.sh                  # full matrix + metro, defaults
 #   QUERIES=60 SAMPLES=2 scripts/drill.sh
@@ -50,6 +55,7 @@ METRO_QUERIES="${METRO_QUERIES:-24}"
 METRO_SAMPLES="${METRO_SAMPLES:-2}"
 POOL_REQUESTS="${POOL_REQUESTS:-20000}"
 POOL_OVERLOAD="${POOL_OVERLOAD:-10}"
+TRACE_OUT="${TRACE_OUT:-.drill_pool_trace.json}"
 
 cargo build --release --quiet
 
@@ -61,16 +67,32 @@ if [[ -n "${FUZZ_SCHEDULE:-}" ]]; then
     common+=(--fuzz-schedule "$FUZZ_SCHEDULE")
 fi
 
+status=0
 ./target/release/qeil replay --drill --fleet all \
-    --queries "$QUERIES" --samples "$SAMPLES" "${common[@]}"
+    --queries "$QUERIES" --samples "$SAMPLES" "${common[@]}" || status=$?
+if [[ "$status" -ne 0 ]]; then
+    echo "drill matrix FAILED (exit $status): the flight-recorder dump above is the" >&2
+    echo "reference run's dispatch trail leading to the state the recovery missed." >&2
+    exit "$status"
+fi
 
 if [[ "$METRO_QUERIES" -gt 0 ]]; then
     ./target/release/qeil replay --drill --fleet metro \
-        --queries "$METRO_QUERIES" --samples "$METRO_SAMPLES" "${common[@]}"
+        --queries "$METRO_QUERIES" --samples "$METRO_SAMPLES" "${common[@]}" || status=$?
+    if [[ "$status" -ne 0 ]]; then
+        echo "metro drill FAILED (exit $status): see the flight-recorder dump above." >&2
+        exit "$status"
+    fi
 fi
 
 if [[ "$POOL_REQUESTS" -gt 0 ]]; then
     ./target/release/qeil serve --load-harness \
         --requests "$POOL_REQUESTS" --overload "$POOL_OVERLOAD" \
-        --seed "$SEED" --stats-json
+        --seed "$SEED" --stats-json --trace-out "$TRACE_OUT" || status=$?
+    if [[ "$status" -ne 0 ]]; then
+        echo "pool smoke run FAILED (exit $status): accounting closure violated." >&2
+        echo "recorder tail dumped above; full Chrome trace kept at $TRACE_OUT" >&2
+        exit "$status"
+    fi
+    rm -f "$TRACE_OUT"
 fi
