@@ -26,7 +26,9 @@ use qeil::gateway::{
     WaveScheduler,
 };
 use qeil::json::Json;
-use qeil::obs::{FlightRecorder, MetricsRegistry};
+use qeil::obs::{
+    FlightRecorder, MetricsRegistry, SloEvaluator, SloObjective, SloSample, SpanKind, TraceContext,
+};
 use qeil::rng::Pcg;
 use qeil::safety::thermal_guard::ThermalGuard;
 use qeil::selection::{Candidate, Csvet, CsvetConfig, SelectionCascade};
@@ -372,6 +374,60 @@ fn main() {
     println!("    obs-on/obs-off wall ratio: {obs_ratio:.3}x (budget: within 1.15x)");
     results.push(r);
 
+    // The same per-tick step with causal SPAN emission armed on top of
+    // obs (PR 10). Gated SELF-RELATIVELY against the trace-off
+    // sim_step: scripts/check_bench.sh holds this within
+    // MAX_TRACE_RATIO (1.15x) — span ids are pure FNV hashes and each
+    // query adds three ring inserts, so tracing must stay inside the
+    // same overhead budget obs itself gets.
+    let mut traced_engine = warm_engine.clone();
+    traced_engine.enable_trace();
+    let r = b.run("sim_step_traced(edge-box, 4 devices, spans armed)", || {
+        std::hint::black_box(traced_engine.step_query(replay_query, 4, &oracle));
+    });
+    println!("{}", r.report());
+    let trace_ratio = r.mean.as_secs_f64() / sim_step_mean.as_secs_f64().max(1e-12);
+    println!("    trace-on/trace-off wall ratio: {trace_ratio:.3}x (budget: within 1.15x)");
+    results.push(r);
+
+    // Raw span begin+end pair into a big ring: the fixed per-hop cost
+    // of causal tracing (id derivation = two FNV-1a hashes, then two
+    // ring inserts). Gated.
+    let mut span_ring = FlightRecorder::with_capacity(qeil::obs::DEFAULT_RING_CAPACITY);
+    let mut span_seq = 0u64;
+    let r = b.run("span_record(begin+end, ring 65536)", || {
+        span_seq += 1;
+        let ctx = TraceContext::root((span_seq % 8) as u32, span_seq);
+        ctx.begin(&mut span_ring, span_seq, SpanKind::Request, 0);
+        ctx.child(SpanKind::Service).end(&mut span_ring, span_seq, SpanKind::Service, 0, 1e-4);
+        std::hint::black_box(span_ring.total_recorded());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
+    // One SLO observe+evaluate turn over a 6-objective evaluator (the
+    // gateway's per-drive cost when --slo is armed). Gated.
+    let mut slo_ev = SloEvaluator::with_defaults(vec![
+        SloObjective::latency("interactive_p99", 0, 0.050, 0.01),
+        SloObjective::latency("standard_p99", 1, 0.100, 0.01),
+        SloObjective::latency("batch_p99", 2, 0.500, 0.01),
+        SloObjective::availability("interactive_avail", 0, 0.1),
+        SloObjective::thermal_headroom("fleet_headroom", 0.05, 0.25),
+        SloObjective::energy_per_query("fleet_energy", 100.0, 0.05),
+    ]);
+    let mut slo_ring = FlightRecorder::with_capacity(1024);
+    let mut slo_now = 0.0f64;
+    let r = b.run("slo_eval(6 objectives, observe+evaluate)", || {
+        slo_now += 0.01;
+        slo_ev.observe(slo_now, SloSample::Latency { class: 0, latency_s: 0.004 });
+        slo_ev.observe(slo_now, SloSample::Outcome { class: 0, shed: false });
+        slo_ev.observe(slo_now, SloSample::Headroom { value: 0.4 });
+        slo_ev.evaluate(slo_now, &mut slo_ring);
+        std::hint::black_box(slo_ev.transitions());
+    });
+    println!("{}", r.report());
+    results.push(r);
+
     // Raw ring-buffer insert: the fixed cost every recorded event pays
     // (no allocation in steady state — the ring recycles slots). Gated.
     let mut recorder = FlightRecorder::with_capacity(qeil::obs::DEFAULT_RING_CAPACITY);
@@ -439,6 +495,7 @@ fn main() {
                     let (tx, rx) = std::sync::mpsc::channel();
                     for i in 0..64u32 {
                         pool.try_submit(PoolJob {
+                            trace: None,
                             request: InferenceRequest {
                                 client_id: i,
                                 class: SlaClass::all()[(i % 3) as usize],

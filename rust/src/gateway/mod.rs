@@ -32,7 +32,10 @@ use crate::devices::fleet::{Fleet, FleetPreset};
 use crate::devices::spec::DeviceId;
 use crate::experiments::runner::default_meta;
 use crate::json::Json;
-use crate::obs::{MetricsRegistry, Obs};
+use crate::obs::{
+    MetricsRegistry, Obs, PathBreakdown, SloConfig, SloEvaluator, SloObjective, SloSample,
+    SpanKind, TraceContext,
+};
 use crate::rng::Pcg;
 use crate::workload::datasets::ModelFamily;
 
@@ -207,6 +210,13 @@ pub struct Gateway {
     /// [`Gateway::state_capture`] (and hence the desync digest) exactly
     /// as the engine's bundle is excluded from snapshots.
     obs: Obs,
+    /// SLO evaluator (PR 10) — harness state like `obs`: fed from the
+    /// logical clock, never consulted by admission or scheduling,
+    /// excluded from [`Gateway::state_capture`].
+    slo: Option<SloEvaluator>,
+    /// Per-class critical-path aggregation over completed requests —
+    /// harness state, populated only while spans are armed.
+    path: PathBreakdown,
 }
 
 impl Gateway {
@@ -232,6 +242,8 @@ impl Gateway {
             classes: Default::default(),
             max_shed_level: 0,
             obs: Obs::disabled(),
+            slo: None,
+            path: PathBreakdown::new(SlaClass::all().len()),
             config,
         }
     }
@@ -249,6 +261,41 @@ impl Gateway {
 
     pub fn obs_mut(&mut self) -> &mut Obs {
         &mut self.obs
+    }
+
+    /// Arm causal span emission (PR 10): every admitted request gets a
+    /// deterministic [`TraceContext`] (id hashed from `(tenant, id)`)
+    /// and emits admission / queue / service / request span events
+    /// into the recorder, plus the per-class critical-path breakdown.
+    /// Harness-side: reports and state captures are bit-identical
+    /// either way.
+    pub fn enable_trace(&mut self) {
+        self.obs.enable_spans();
+    }
+
+    /// Arm the SLO engine with `objectives` evaluated each serving
+    /// turn on the logical clock. Deterministic: a fixed trace + fixed
+    /// objectives produce byte-identical verdicts.
+    pub fn enable_slo(&mut self, objectives: Vec<SloObjective>, cfg: SloConfig) {
+        if !self.obs.is_enabled() {
+            self.enable_obs();
+        }
+        self.slo = Some(SloEvaluator::new(objectives, cfg));
+    }
+
+    pub fn slo(&self) -> Option<&SloEvaluator> {
+        self.slo.as_ref()
+    }
+
+    /// Rendered per-class critical-path table (spans must be armed and
+    /// at least one request completed for non-zero rows).
+    pub fn path_table(&self) -> String {
+        let labels: Vec<&str> = SlaClass::all().iter().map(|c| c.as_str()).collect();
+        self.path.render_table(&labels)
+    }
+
+    pub fn path(&self) -> &PathBreakdown {
+        &self.path
     }
 
     /// Flight-recorder timestamp: the logical clock in microseconds
@@ -437,9 +484,27 @@ impl Gateway {
         self.max_shed_level = self.max_shed_level.max(level);
         let tick = self.obs_tick();
         let req_id = req.id;
+        let spans = self.obs.spans_enabled();
+        let ctx = TraceContext::root(req.tenant, req_id);
+        let mut served = false;
         match self.admission.admit(req.tenant, req.class, self.clock_s, level) {
             AdmitDecision::Admit => match self.queues.enqueue(req) {
-                Ok(()) => self.classes[ci].admitted += 1,
+                Ok(()) => {
+                    self.classes[ci].admitted += 1;
+                    served = true;
+                    if spans {
+                        ctx.begin(&mut self.obs.recorder, tick, SpanKind::Request, ci as u32);
+                        // The admission decision is instantaneous on
+                        // the logical clock; the span records the hop.
+                        ctx.child(SpanKind::Admission).end(
+                            &mut self.obs.recorder,
+                            tick,
+                            SpanKind::Admission,
+                            ci as u32,
+                            0.0,
+                        );
+                    }
+                }
                 Err(_) => {
                     self.classes[ci].overflow += 1;
                     self.obs.recorder.record(
@@ -478,6 +543,9 @@ impl Gateway {
                     &[("request", req_id as f64), ("level", level as f64)],
                 );
             }
+        }
+        if let Some(slo) = &mut self.slo {
+            slo.observe(self.clock_s, SloSample::Outcome { class: ci, shed: !served });
         }
     }
 
@@ -526,6 +594,12 @@ impl Gateway {
                 req.class.index() as u32,
                 &[("request", req.id as f64)],
             );
+            if let Some(slo) = &mut self.slo {
+                slo.observe(
+                    self.clock_s,
+                    SloSample::Outcome { class: req.class.index(), shed: true },
+                );
+            }
         }
         // Continuous wave batching: keep binding waves while lanes
         // are free and backlog exists.
@@ -554,6 +628,7 @@ impl Gateway {
                     ("wave_no", self.scheduler.waves as f64),
                 ],
             );
+            let spans = self.obs.spans_enabled();
             for rec in &records {
                 // NOTE: the gateway driver prices dispatches from
                 // its own snapshot, so it has no independent
@@ -561,12 +636,51 @@ impl Gateway {
                 // (server/service.rs) is where real executor
                 // residuals feed TelemetryProbe::record_measured.
                 self.probe.record_busy(rec.lane, rec.service_s, rec.energy_j);
-                let stats = &mut self.classes[rec.request.class.index()];
+                let ci = rec.request.class.index();
+                let stats = &mut self.classes[ci];
                 stats.completed += 1;
                 if rec.deadline_hit {
                     stats.deadline_hits += 1;
                 }
+                let queue_s = (rec.start_s - rec.request.arrival_s).max(0.0);
+                let e2e_s = (rec.completion_s - rec.request.arrival_s).max(0.0);
+                if spans {
+                    let ctx = TraceContext::root(rec.request.tenant, rec.request.id);
+                    let rec_tick = (rec.completion_s * 1e6) as u64;
+                    let r = &mut self.obs.recorder;
+                    ctx.child(SpanKind::Queue).end(r, rec_tick, SpanKind::Queue, ci as u32, queue_s);
+                    ctx.child(SpanKind::Service).end(
+                        r,
+                        rec_tick,
+                        SpanKind::Service,
+                        ci as u32,
+                        rec.service_s,
+                    );
+                    ctx.end(r, rec_tick, SpanKind::Request, ci as u32, e2e_s);
+                    self.path.observe(ci, 0.0, queue_s, rec.service_s);
+                }
+                if let Some(slo) = &mut self.slo {
+                    slo.observe(self.clock_s, SloSample::Latency { class: ci, latency_s: e2e_s });
+                    slo.observe(
+                        self.clock_s,
+                        SloSample::Energy { class: ci, joules: rec.energy_j },
+                    );
+                }
             }
+        }
+        // One SLO evaluation per serving turn: fold in the fleet's
+        // minimum thermal headroom, then advance the burn-rate windows.
+        if let Some(slo) = &mut self.slo {
+            let headroom = self
+                .snap
+                .devices
+                .iter()
+                .map(|d| 1.0 - d.phi)
+                .fold(f64::INFINITY, f64::min);
+            if headroom.is_finite() {
+                slo.observe(self.clock_s, SloSample::Headroom { value: headroom });
+            }
+            slo.evaluate(self.clock_s, &mut self.obs.recorder);
         }
         // Next event: arrival, lane-free instant, or (with no
         // routable lane) the earliest queued deadline — whichever
@@ -671,6 +785,13 @@ impl Gateway {
             reg.gauge_set(&format!("gateway_phi_dev{i}"), d.phi);
             reg.gauge_set(&format!("gateway_shed_level_dev{i}"), d.shed_level as f64);
             reg.gauge_set(&format!("gateway_temp_c_dev{i}"), d.temp_c);
+        }
+        if let Some(slo) = &self.slo {
+            slo.export_gauges(reg);
+        }
+        if self.obs.spans_enabled() {
+            let labels: Vec<&str> = SlaClass::all().iter().map(|c| c.as_str()).collect();
+            self.path.export_gauges(reg, &labels);
         }
     }
 

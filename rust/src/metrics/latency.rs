@@ -104,6 +104,15 @@ impl LatencyRecorder {
         self.max_s
     }
 
+    /// Number of recorded samples whose bucket lies strictly above
+    /// `threshold_s` (bucket resolution, ~1%; deterministic). Feeds
+    /// the SLO engine's aggregate latency judging, where only the
+    /// histogram survives the run.
+    pub fn count_over_s(&self, threshold_s: f64) -> u64 {
+        let cut = Self::bucket_for(threshold_s);
+        self.buckets[cut + 1..].iter().sum()
+    }
+
     pub fn merge(&mut self, other: &LatencyRecorder) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;
@@ -173,6 +182,18 @@ mod tests {
             r.record(x);
         }
         assert!((r.std_dev_s() - 2.138089935).abs() < 1e-6);
+    }
+
+    #[test]
+    fn count_over_threshold_at_bucket_resolution() {
+        let mut r = LatencyRecorder::new();
+        for i in 1..=100 {
+            r.record(i as f64 / 1000.0); // 1..100 ms
+        }
+        let over = r.count_over_s(0.050);
+        assert!((48..=52).contains(&over), "over={over}");
+        assert_eq!(r.count_over_s(1000.0), 0);
+        assert_eq!(r.count_over_s(0.0), 100);
     }
 
     #[test]

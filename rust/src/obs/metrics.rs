@@ -103,26 +103,48 @@ impl MetricsRegistry {
         ])
     }
 
-    /// Prometheus-style text exposition: `# TYPE` lines plus one
-    /// sample per counter/gauge and summary quantiles per histogram.
+    /// Prometheus text exposition: `# HELP` + `# TYPE` per metric
+    /// family, one sample per counter/gauge, and summary quantiles per
+    /// histogram. Help text carries the original (pre-sanitize)
+    /// registry key so a scraped name maps back to its source; label
+    /// values and help text are escaped per the exposition format.
     pub fn prometheus_text(&self) -> String {
         let mut out = String::new();
-        for (name, value) in &self.counters {
-            let name = sanitize(name);
-            out.push_str(&format!("# TYPE {} counter\n{} {}\n", name, name, value));
+        for (raw, value) in &self.counters {
+            let name = sanitize(raw);
+            out.push_str(&format!(
+                "# HELP {} qeil metric {}\n# TYPE {} counter\n{} {}\n",
+                name,
+                escape_help(raw),
+                name,
+                name,
+                value
+            ));
         }
-        for (name, value) in &self.gauges {
-            let name = sanitize(name);
-            out.push_str(&format!("# TYPE {} gauge\n{} {}\n", name, name, fmt_f64(*value)));
+        for (raw, value) in &self.gauges {
+            let name = sanitize(raw);
+            out.push_str(&format!(
+                "# HELP {} qeil metric {}\n# TYPE {} gauge\n{} {}\n",
+                name,
+                escape_help(raw),
+                name,
+                name,
+                fmt_f64(*value)
+            ));
         }
-        for (name, hist) in &self.hists {
-            let name = sanitize(name);
-            out.push_str(&format!("# TYPE {} summary\n", name));
+        for (raw, hist) in &self.hists {
+            let name = sanitize(raw);
+            out.push_str(&format!(
+                "# HELP {} qeil metric {}\n# TYPE {} summary\n",
+                name,
+                escape_help(raw),
+                name
+            ));
             for &(label, p) in &[("0.5", 50.0), ("0.99", 99.0), ("0.999", 99.9)] {
                 out.push_str(&format!(
                     "{}{{quantile=\"{}\"}} {}\n",
                     name,
-                    label,
+                    escape_label_value(label),
                     fmt_f64(hist.percentile_s(p))
                 ));
             }
@@ -142,6 +164,35 @@ fn sanitize(name: &str) -> String {
         .collect();
     if out.chars().next().map_or(true, |c| c.is_ascii_digit()) {
         out.insert(0, '_');
+    }
+    out
+}
+
+/// Escape a label value per the exposition format: backslash, double
+/// quote, and line feed must be escaped inside the quoted value.
+fn escape_label_value(value: &str) -> String {
+    let mut out = String::with_capacity(value.len());
+    for c in value.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Escape `# HELP` docstring text: backslash and line feed only (the
+/// exposition format leaves quotes alone outside label values).
+fn escape_help(text: &str) -> String {
+    let mut out = String::with_capacity(text.len());
+    for c in text.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
     }
     out
 }
@@ -199,6 +250,25 @@ mod tests {
         assert!(text.contains("dasi_dev0 1.5"));
         assert!(text.contains("lat{quantile=\"0.99\"}"));
         assert!(text.contains("lat_count 1"));
+    }
+
+    #[test]
+    fn prometheus_text_emits_help_and_escapes() {
+        let mut reg = MetricsRegistry::new();
+        reg.counter_add("shed.hard", 2);
+        reg.gauge_set("odd\\name\nmetric", 1.0);
+        reg.hist_record("lat", 0.01);
+        let text = reg.prometheus_text();
+        // Every family leads with HELP then TYPE.
+        assert!(text.contains("# HELP shed_hard qeil metric shed.hard\n# TYPE shed_hard counter\n"));
+        assert!(text.contains("# HELP lat qeil metric lat\n# TYPE lat summary\n"));
+        // The raw key survives into the help text with backslash and
+        // newline escaped (the sample name itself is sanitized).
+        assert!(text.contains("# HELP odd_name_metric qeil metric odd\\\\name\\nmetric\n"));
+        assert!(text.contains("odd_name_metric 1\n"));
+        // Label-value escaping per the exposition format.
+        assert_eq!(escape_label_value("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+        assert_eq!(escape_label_value("0.99"), "0.99");
     }
 
     #[test]

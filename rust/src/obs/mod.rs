@@ -38,10 +38,17 @@
 pub mod metrics;
 pub mod profiler;
 pub mod recorder;
+pub mod slo;
+pub mod span;
 
 pub use metrics::MetricsRegistry;
 pub use profiler::Profiler;
 pub use recorder::{FlightRecorder, TraceEvent};
+pub use slo::{
+    burn_rate, SloConfig, SloEvaluator, SloObjective, SloSample, SloSignal, SloVerdict,
+    SloVerdictRow,
+};
+pub use span::{PathBreakdown, SpanKind, TraceContext};
 
 /// Default flight-recorder capacity (events). At the metro preset's
 /// ~105 dispatches per tick this holds the last ~600 ticks — more than
@@ -56,6 +63,10 @@ pub struct Obs {
     pub recorder: FlightRecorder,
     pub metrics: MetricsRegistry,
     pub profiler: Profiler,
+    /// Causal span emission (PR 10) arms separately from the PR 9
+    /// bundle so the `sim_step_obs` bench keeps its meaning; spans are
+    /// only emitted when BOTH the recorder and this flag are on.
+    pub spans: bool,
 }
 
 impl Obs {
@@ -75,11 +86,25 @@ impl Obs {
             recorder: FlightRecorder::with_capacity(capacity),
             metrics: MetricsRegistry::new(),
             profiler: Profiler::enabled(),
+            spans: false,
         }
     }
 
     pub fn is_enabled(&self) -> bool {
         self.recorder.is_enabled()
+    }
+
+    /// Arm causal span emission (arms the bundle too if it was off).
+    pub fn enable_spans(&mut self) {
+        if !self.is_enabled() {
+            *self = Obs::enabled();
+        }
+        self.spans = true;
+    }
+
+    /// Span emission is live: the recorder is armed AND spans are on.
+    pub fn spans_enabled(&self) -> bool {
+        self.spans && self.recorder.is_enabled()
     }
 }
 

@@ -1,0 +1,679 @@
+//! SLO engine: declarative objectives evaluated over fast/slow
+//! logical-clock windows with burn-rate alerting and hysteresis.
+//!
+//! An objective is a predicate over observed samples (a request's
+//! latency, a shed decision, the fleet's thermal headroom, a query's
+//! energy) plus an error *budget* — the fraction of bad samples the
+//! objective tolerates. The burn rate is `bad_fraction / budget`: 1.0
+//! means the budget is being consumed exactly as fast as it
+//! replenishes; above 1.0 the objective is burning down.
+//!
+//! Alerting is multi-window ("Sustainability Is Not Linear" shows the
+//! latency/energy trade-off is non-linear, so a point threshold either
+//! flaps or lags): an objective FIRES only when the fast window spans
+//! its full width AND both the fast and the slow window burn at or
+//! above the fire ratio — the fast window supplies responsiveness, the
+//! slow window confirms the violation has mass, and the maturity guard
+//! keeps a part-filled startup window (where one bad sample reads as a
+//! `1/budget` burn) from firing transiently on a stream that is within
+//! budget. It CLEARS only after the fast burn has stayed at or below the
+//! clear ratio for a run of consecutive evaluations (hysteresis), so a
+//! constant stream can produce at most one fire and never flaps
+//! (`rust/tests/slo_tracing.rs` pins this).
+//!
+//! All clocks here are LOGICAL (gateway/sim seconds): evaluation is a
+//! pure fold over the observed stream, so a fixed workload + fixed
+//! objectives yield byte-identical verdicts. Like the rest of the obs
+//! bundle, the evaluator is harness state — outside snapshots and
+//! digests, never feeding back into scheduling.
+
+use std::collections::VecDeque;
+
+use crate::json::Json;
+use crate::obs::{FlightRecorder, MetricsRegistry};
+
+/// Buckets per sliding window: eviction granularity is width/8.
+const WINDOW_BUCKETS: i64 = 8;
+
+/// Burn rate: the rate at which an error budget is being consumed.
+/// 0.0 on an empty window; monotone non-decreasing in `bad` for fixed
+/// `total` and `budget` (pinned in `rust/tests/slo_tracing.rs`).
+pub fn burn_rate(bad: u64, total: u64, budget: f64) -> f64 {
+    if total == 0 {
+        return 0.0;
+    }
+    let frac = bad as f64 / total as f64;
+    frac / budget.max(1e-12)
+}
+
+/// What an objective watches and when a sample counts as "bad".
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SloSignal {
+    /// Request latency: bad when e2e latency exceeds `max_s`. A p99
+    /// objective is `budget: 0.01` — at most 1% of requests over.
+    Latency { max_s: f64, budget: f64 },
+    /// Availability: bad when a request is shed / rate-limited /
+    /// expired instead of served.
+    Availability { budget: f64 },
+    /// Thermal headroom: bad when the fleet's minimum headroom
+    /// (1 - phi) drops below `floor`.
+    ThermalHeadroom { floor: f64, budget: f64 },
+    /// Energy per query: bad when a completed query cost more than
+    /// `max_j` joules.
+    EnergyPerQuery { max_j: f64, budget: f64 },
+}
+
+impl SloSignal {
+    pub fn budget(&self) -> f64 {
+        match *self {
+            SloSignal::Latency { budget, .. }
+            | SloSignal::Availability { budget }
+            | SloSignal::ThermalHeadroom { budget, .. }
+            | SloSignal::EnergyPerQuery { budget, .. } => budget,
+        }
+    }
+
+    pub fn kind_str(&self) -> &'static str {
+        match self {
+            SloSignal::Latency { .. } => "latency",
+            SloSignal::Availability { .. } => "availability",
+            SloSignal::ThermalHeadroom { .. } => "thermal_headroom",
+            SloSignal::EnergyPerQuery { .. } => "energy_per_query",
+        }
+    }
+}
+
+/// One observed sample, routed to every objective whose signal kind
+/// and class scope match.
+#[derive(Debug, Clone, Copy)]
+pub enum SloSample {
+    /// A served request's end-to-end latency.
+    Latency { class: usize, latency_s: f64 },
+    /// An admission outcome: `shed` covers shed/rate-limit/overflow/expiry.
+    Outcome { class: usize, shed: bool },
+    /// Fleet minimum thermal headroom at an evaluation point.
+    Headroom { value: f64 },
+    /// A completed query's energy draw.
+    Energy { class: usize, joules: f64 },
+}
+
+/// A declarative objective: name, optional SLA-class scope (None =
+/// all classes / fleet-wide), and the signal predicate.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloObjective {
+    pub name: String,
+    pub class: Option<usize>,
+    pub signal: SloSignal,
+}
+
+impl SloObjective {
+    pub fn latency(name: &str, class: usize, max_s: f64, budget: f64) -> SloObjective {
+        SloObjective {
+            name: name.to_string(),
+            class: Some(class),
+            signal: SloSignal::Latency { max_s, budget },
+        }
+    }
+
+    pub fn availability(name: &str, class: usize, budget: f64) -> SloObjective {
+        SloObjective {
+            name: name.to_string(),
+            class: Some(class),
+            signal: SloSignal::Availability { budget },
+        }
+    }
+
+    pub fn thermal_headroom(name: &str, floor: f64, budget: f64) -> SloObjective {
+        SloObjective {
+            name: name.to_string(),
+            class: None,
+            signal: SloSignal::ThermalHeadroom { floor, budget },
+        }
+    }
+
+    pub fn energy_per_query(name: &str, max_j: f64, budget: f64) -> SloObjective {
+        SloObjective {
+            name: name.to_string(),
+            class: None,
+            signal: SloSignal::EnergyPerQuery { max_j, budget },
+        }
+    }
+
+    /// Does `sample` fall in this objective's scope, and if so is it
+    /// bad? `None` = out of scope.
+    fn classify(&self, sample: &SloSample) -> Option<bool> {
+        let in_class = |c: usize| self.class.map_or(true, |mine| mine == c);
+        match (&self.signal, sample) {
+            (SloSignal::Latency { max_s, .. }, SloSample::Latency { class, latency_s })
+                if in_class(*class) =>
+            {
+                Some(latency_s > max_s)
+            }
+            (SloSignal::Availability { .. }, SloSample::Outcome { class, shed })
+                if in_class(*class) =>
+            {
+                Some(*shed)
+            }
+            (SloSignal::ThermalHeadroom { floor, .. }, SloSample::Headroom { value }) => {
+                Some(value < floor)
+            }
+            (SloSignal::EnergyPerQuery { max_j, .. }, SloSample::Energy { class, joules })
+                if in_class(*class) =>
+            {
+                Some(joules > max_j)
+            }
+            _ => None,
+        }
+    }
+}
+
+/// Evaluation outcome for one objective over the whole run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SloVerdict {
+    /// Never fired; overall bad fraction within budget.
+    Pass,
+    /// Fired at some point but the run-total bad fraction stayed
+    /// within budget (a transient burn).
+    Burning,
+    /// Run-total bad fraction exceeded the budget.
+    Violated,
+}
+
+impl SloVerdict {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SloVerdict::Pass => "PASS",
+            SloVerdict::Burning => "BURNING",
+            SloVerdict::Violated => "VIOLATED",
+        }
+    }
+}
+
+/// One row of the rendered verdict table.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SloVerdictRow {
+    pub name: String,
+    pub kind: &'static str,
+    pub verdict: SloVerdict,
+    pub fast_burn: f64,
+    pub slow_burn: f64,
+    pub bad: u64,
+    pub total: u64,
+    pub budget: f64,
+}
+
+/// Bucketed sliding window of good/bad counts on the logical clock.
+#[derive(Debug, Clone)]
+struct SlideWindow {
+    bucket_s: f64,
+    buckets: VecDeque<(i64, u64, u64)>,
+}
+
+impl SlideWindow {
+    fn new(width_s: f64) -> SlideWindow {
+        SlideWindow {
+            bucket_s: (width_s / WINDOW_BUCKETS as f64).max(1e-9),
+            buckets: VecDeque::new(),
+        }
+    }
+
+    fn bucket_idx(&self, now_s: f64) -> i64 {
+        (now_s / self.bucket_s).floor() as i64
+    }
+
+    fn evict(&mut self, now_idx: i64) {
+        while let Some(&(idx, _, _)) = self.buckets.front() {
+            if idx <= now_idx - WINDOW_BUCKETS {
+                self.buckets.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn observe(&mut self, now_s: f64, good: u64, bad: u64) {
+        let idx = self.bucket_idx(now_s);
+        self.evict(idx);
+        match self.buckets.back_mut() {
+            Some(back) if back.0 == idx => {
+                back.1 += good;
+                back.2 += bad;
+            }
+            _ => self.buckets.push_back((idx, good, bad)),
+        }
+    }
+
+    fn counts(&mut self, now_s: f64) -> (u64, u64) {
+        let idx = self.bucket_idx(now_s);
+        self.evict(idx);
+        let mut good = 0;
+        let mut bad = 0;
+        for &(_, g, b) in &self.buckets {
+            good += g;
+            bad += b;
+        }
+        (good, bad)
+    }
+
+    /// Whether the retained data spans the window's full width: the
+    /// oldest surviving bucket sits `WINDOW_BUCKETS - 1` behind the
+    /// current one. The fire path requires a full fast window — a
+    /// part-filled startup window computes burn from a handful of
+    /// samples, so one early bad sample would read as a `1/budget`
+    /// burn and fire-then-clear on a stream that is comfortably
+    /// within budget.
+    fn is_full(&mut self, now_s: f64) -> bool {
+        let idx = self.bucket_idx(now_s);
+        self.evict(idx);
+        self.buckets
+            .front()
+            .map_or(false, |&(i, _, _)| i <= idx - (WINDOW_BUCKETS - 1))
+    }
+}
+
+#[derive(Debug, Clone)]
+struct ObjectiveState {
+    obj: SloObjective,
+    fast: SlideWindow,
+    slow: SlideWindow,
+    total_good: u64,
+    total_bad: u64,
+    firing: bool,
+    fired_ever: bool,
+    clear_run: u32,
+    transitions: u32,
+    last_fast_burn: f64,
+    last_slow_burn: f64,
+}
+
+/// Evaluator tuning: window widths (logical seconds), the fire ratio
+/// both windows must reach, the clear ratio the fast window must stay
+/// at or below, and how many consecutive clear evaluations hysteresis
+/// demands before un-firing.
+#[derive(Debug, Clone, Copy)]
+pub struct SloConfig {
+    pub fast_window_s: f64,
+    pub slow_window_s: f64,
+    pub fire_ratio: f64,
+    pub clear_ratio: f64,
+    pub clear_streak: u32,
+}
+
+impl Default for SloConfig {
+    fn default() -> SloConfig {
+        SloConfig {
+            fast_window_s: 10.0,
+            slow_window_s: 60.0,
+            fire_ratio: 1.0,
+            clear_ratio: 0.75,
+            clear_streak: 3,
+        }
+    }
+}
+
+/// The streaming evaluator: feed samples with [`SloEvaluator::observe`],
+/// call [`SloEvaluator::evaluate`] at each logical evaluation point,
+/// read verdicts at the end. Deterministic: same objectives + same
+/// sample stream = same verdicts, alerts, and table, bit for bit.
+#[derive(Debug, Clone)]
+pub struct SloEvaluator {
+    cfg: SloConfig,
+    states: Vec<ObjectiveState>,
+    evals: u64,
+}
+
+impl SloEvaluator {
+    pub fn new(objectives: Vec<SloObjective>, cfg: SloConfig) -> SloEvaluator {
+        let states = objectives
+            .into_iter()
+            .map(|obj| ObjectiveState {
+                obj,
+                fast: SlideWindow::new(cfg.fast_window_s),
+                slow: SlideWindow::new(cfg.slow_window_s),
+                total_good: 0,
+                total_bad: 0,
+                firing: false,
+                fired_ever: false,
+                clear_run: 0,
+                transitions: 0,
+                last_fast_burn: 0.0,
+                last_slow_burn: 0.0,
+            })
+            .collect();
+        SloEvaluator { cfg, states, evals: 0 }
+    }
+
+    pub fn with_defaults(objectives: Vec<SloObjective>) -> SloEvaluator {
+        SloEvaluator::new(objectives, SloConfig::default())
+    }
+
+    pub fn len(&self) -> usize {
+        self.states.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.states.is_empty()
+    }
+
+    /// Route one sample to every objective in scope.
+    pub fn observe(&mut self, now_s: f64, sample: SloSample) {
+        for st in &mut self.states {
+            if let Some(bad) = st.obj.classify(&sample) {
+                let (good, badn) = if bad { (0, 1) } else { (1, 0) };
+                st.fast.observe(now_s, good, badn);
+                st.slow.observe(now_s, good, badn);
+                st.total_good += good;
+                st.total_bad += badn;
+            }
+        }
+    }
+
+    /// Feed pre-aggregated counts straight into objective `idx` (the
+    /// load-harness judge path, where only run totals exist).
+    pub fn ingest_counts(&mut self, now_s: f64, idx: usize, good: u64, bad: u64) {
+        if let Some(st) = self.states.get_mut(idx) {
+            st.fast.observe(now_s, good, bad);
+            st.slow.observe(now_s, good, bad);
+            st.total_good += good;
+            st.total_bad += bad;
+        }
+    }
+
+    /// Evaluate every objective at logical time `now_s`, emitting
+    /// fire/clear alert events into `rec` (objective index in the
+    /// event's `index` field, objective name in the note).
+    pub fn evaluate(&mut self, now_s: f64, rec: &mut FlightRecorder) {
+        self.evals += 1;
+        let tick = (now_s * 1e6) as u64;
+        for (i, st) in self.states.iter_mut().enumerate() {
+            let budget = st.obj.signal.budget();
+            let (fg, fb) = st.fast.counts(now_s);
+            let (sg, sb) = st.slow.counts(now_s);
+            let fast_burn = burn_rate(fb, fg + fb, budget);
+            let slow_burn = burn_rate(sb, sg + sb, budget);
+            st.last_fast_burn = fast_burn;
+            st.last_slow_burn = slow_burn;
+            if !st.firing {
+                if fg + fb > 0
+                    && st.fast.is_full(now_s)
+                    && fast_burn >= self.cfg.fire_ratio
+                    && slow_burn >= self.cfg.fire_ratio
+                {
+                    st.firing = true;
+                    st.fired_ever = true;
+                    st.transitions += 1;
+                    st.clear_run = 0;
+                    rec.record_note(
+                        tick,
+                        "slo",
+                        "fire",
+                        "objective",
+                        i as u32,
+                        &[("fast_burn", fast_burn), ("slow_burn", slow_burn)],
+                        st.obj.name.clone(),
+                    );
+                }
+            } else {
+                if fast_burn <= self.cfg.clear_ratio {
+                    st.clear_run += 1;
+                } else {
+                    st.clear_run = 0;
+                }
+                if st.clear_run >= self.cfg.clear_streak {
+                    st.firing = false;
+                    st.transitions += 1;
+                    st.clear_run = 0;
+                    rec.record_note(
+                        tick,
+                        "slo",
+                        "clear",
+                        "objective",
+                        i as u32,
+                        &[("fast_burn", fast_burn)],
+                        st.obj.name.clone(),
+                    );
+                }
+            }
+        }
+    }
+
+    /// Total fire+clear transitions across all objectives (the no-flap
+    /// property bounds this on constant streams).
+    pub fn transitions(&self) -> u32 {
+        self.states.iter().map(|s| s.transitions).sum()
+    }
+
+    fn verdict_of(st: &ObjectiveState) -> SloVerdict {
+        let total = st.total_good + st.total_bad;
+        if total > 0 && st.total_bad as f64 / total as f64 > st.obj.signal.budget() {
+            SloVerdict::Violated
+        } else if st.fired_ever {
+            SloVerdict::Burning
+        } else {
+            SloVerdict::Pass
+        }
+    }
+
+    pub fn verdicts(&self) -> Vec<SloVerdictRow> {
+        self.states
+            .iter()
+            .map(|st| SloVerdictRow {
+                name: st.obj.name.clone(),
+                kind: st.obj.signal.kind_str(),
+                verdict: Self::verdict_of(st),
+                fast_burn: st.last_fast_burn,
+                slow_burn: st.last_slow_burn,
+                bad: st.total_bad,
+                total: st.total_good + st.total_bad,
+                budget: st.obj.signal.budget(),
+            })
+            .collect()
+    }
+
+    pub fn any_violated(&self) -> bool {
+        self.states.iter().any(|st| Self::verdict_of(st) == SloVerdict::Violated)
+    }
+
+    /// The rendered verdict table printed by `qeil serve --slo` and
+    /// the load-harness report.
+    pub fn render_table(&self) -> String {
+        let mut out = String::from(
+            "objective                       kind              verdict   fast_burn  slow_burn     bad/total   budget\n",
+        );
+        for row in self.verdicts() {
+            out.push_str(&format!(
+                "{:<31} {:<17} {:<9} {:>9.3} {:>10.3} {:>8}/{:<6} {:>8.4}\n",
+                row.name,
+                row.kind,
+                row.verdict.as_str(),
+                row.fast_burn,
+                row.slow_burn,
+                row.bad,
+                row.total,
+                row.budget
+            ));
+        }
+        out
+    }
+
+    /// Export per-objective burn-rate and firing gauges into the
+    /// metrics registry.
+    pub fn export_gauges(&self, metrics: &mut MetricsRegistry) {
+        for st in &self.states {
+            let name = &st.obj.name;
+            metrics.gauge_set(&format!("slo_fast_burn_{name}"), st.last_fast_burn);
+            metrics.gauge_set(&format!("slo_slow_burn_{name}"), st.last_slow_burn);
+            metrics.gauge_set(&format!("slo_firing_{name}"), if st.firing { 1.0 } else { 0.0 });
+            metrics.counter_set(&format!("slo_bad_total_{name}"), st.total_bad);
+        }
+    }
+
+    /// JSON form of the verdict table (for `--stats-json` merges).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.verdicts()
+                .into_iter()
+                .map(|row| {
+                    Json::obj(vec![
+                        ("name", Json::Str(row.name)),
+                        ("kind", Json::Str(row.kind.to_string())),
+                        ("verdict", Json::Str(row.verdict.as_str().to_string())),
+                        ("fast_burn", Json::Num(row.fast_burn)),
+                        ("slow_burn", Json::Num(row.slow_burn)),
+                        ("bad", Json::Num(row.bad as f64)),
+                        ("total", Json::Num(row.total as f64)),
+                        ("budget", Json::Num(row.budget)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn one_latency_objective() -> SloEvaluator {
+        SloEvaluator::with_defaults(vec![SloObjective::latency("p99_test", 0, 0.010, 0.01)])
+    }
+
+    #[test]
+    fn burn_rate_basics() {
+        assert_eq!(burn_rate(0, 0, 0.01), 0.0);
+        assert_eq!(burn_rate(0, 100, 0.01), 0.0);
+        assert!((burn_rate(1, 100, 0.01) - 1.0).abs() < 1e-12);
+        assert!((burn_rate(10, 100, 0.01) - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn within_budget_stream_passes() {
+        let mut ev = one_latency_objective();
+        let mut rec = FlightRecorder::with_capacity(64);
+        for i in 0..1000 {
+            // 0.1% of requests slow: well inside the 1% budget.
+            let lat = if i % 1000 == 999 { 0.020 } else { 0.001 };
+            ev.observe(i as f64 * 0.01, SloSample::Latency { class: 0, latency_s: lat });
+            ev.evaluate(i as f64 * 0.01, &mut rec);
+        }
+        assert_eq!(ev.transitions(), 0);
+        let rows = ev.verdicts();
+        assert_eq!(rows[0].verdict, SloVerdict::Pass);
+        assert_eq!(rec.len(), 0, "no alert events expected");
+    }
+
+    #[test]
+    fn sustained_violation_fires_once_and_violates() {
+        let mut ev = one_latency_objective();
+        let mut rec = FlightRecorder::with_capacity(64);
+        for i in 0..500 {
+            // Every request over threshold: burn = 100x budget.
+            ev.observe(i as f64 * 0.1, SloSample::Latency { class: 0, latency_s: 0.100 });
+            ev.evaluate(i as f64 * 0.1, &mut rec);
+        }
+        assert_eq!(ev.transitions(), 1, "constant violation must fire exactly once");
+        assert!(ev.any_violated());
+        assert_eq!(ev.verdicts()[0].verdict, SloVerdict::Violated);
+        assert_eq!(rec.len(), 1);
+        assert_eq!(rec.events()[0].name, "fire");
+        assert_eq!(rec.events()[0].note.as_deref(), Some("p99_test"));
+    }
+
+    #[test]
+    fn startup_window_never_fires_before_it_spans_full_width() {
+        // A bad FIRST sample makes a one-sample window burn at
+        // 1/budget; without the maturity guard this fires, then
+        // hysteresis clears — two transitions on a stream whose
+        // steady rate (1 bad in 16, budget 0.25) is well within
+        // budget. The guard pins transitions at zero.
+        let mut ev =
+            SloEvaluator::with_defaults(vec![SloObjective::availability("avail", 0, 0.25)]);
+        let mut rec = FlightRecorder::with_capacity(16);
+        for i in 0..4000u32 {
+            let shed = i % 16 == 0; // bad sample leads every block
+            ev.observe(i as f64 * 0.05, SloSample::Outcome { class: 0, shed });
+            ev.evaluate(i as f64 * 0.05, &mut rec);
+        }
+        assert_eq!(ev.transitions(), 0, "startup transient must not fire");
+        assert_eq!(rec.len(), 0);
+        assert_eq!(ev.verdicts()[0].verdict, SloVerdict::Pass);
+    }
+
+    #[test]
+    fn class_scope_filters_samples() {
+        let mut ev = one_latency_objective();
+        let mut rec = FlightRecorder::with_capacity(16);
+        // All violations land on class 1; the class-0 objective never sees them.
+        for i in 0..200 {
+            ev.observe(i as f64, SloSample::Latency { class: 1, latency_s: 1.0 });
+            ev.evaluate(i as f64, &mut rec);
+        }
+        assert_eq!(ev.verdicts()[0].total, 0);
+        assert_eq!(ev.verdicts()[0].verdict, SloVerdict::Pass);
+    }
+
+    #[test]
+    fn recovery_clears_with_hysteresis_and_reports_burning() {
+        let cfg = SloConfig::default();
+        let mut ev = SloEvaluator::new(
+            vec![SloObjective::availability("avail_test", 0, 0.5)],
+            cfg,
+        );
+        let mut rec = FlightRecorder::with_capacity(64);
+        // Burn phase: everything shed (burn 2.0 against a 0.5 budget).
+        for i in 0..80 {
+            ev.observe(i as f64, SloSample::Outcome { class: 0, shed: true });
+            ev.evaluate(i as f64, &mut rec);
+        }
+        assert_eq!(ev.transitions(), 1);
+        // Recovery: all good; fast window drains, then hysteresis clears.
+        for i in 80..200 {
+            for _ in 0..8 {
+                ev.observe(i as f64, SloSample::Outcome { class: 0, shed: false });
+            }
+            ev.evaluate(i as f64, &mut rec);
+        }
+        assert_eq!(ev.transitions(), 2, "exactly one fire and one clear");
+        let names: Vec<&str> = rec.events().iter().map(|e| e.name).collect();
+        assert_eq!(names, vec!["fire", "clear"]);
+        // Overall bad fraction: 80 bad / (80 + 960) < 0.5 budget → Burning.
+        assert_eq!(ev.verdicts()[0].verdict, SloVerdict::Burning);
+        assert!(!ev.any_violated());
+    }
+
+    #[test]
+    fn thermal_and_energy_objectives_classify() {
+        let mut ev = SloEvaluator::with_defaults(vec![
+            SloObjective::thermal_headroom("headroom", 0.2, 0.01),
+            SloObjective::energy_per_query("energy", 50.0, 0.05),
+        ]);
+        let mut rec = FlightRecorder::with_capacity(16);
+        ev.observe(0.0, SloSample::Headroom { value: 0.1 }); // below floor: bad
+        ev.observe(0.0, SloSample::Headroom { value: 0.5 }); // good
+        ev.observe(0.0, SloSample::Energy { class: 0, joules: 80.0 }); // over: bad
+        ev.observe(0.0, SloSample::Energy { class: 1, joules: 10.0 }); // good
+        ev.evaluate(0.0, &mut rec);
+        let rows = ev.verdicts();
+        assert_eq!((rows[0].bad, rows[0].total), (1, 2));
+        assert_eq!((rows[1].bad, rows[1].total), (1, 2));
+        // Both over budget on totals → Violated.
+        assert_eq!(rows[0].verdict, SloVerdict::Violated);
+        assert_eq!(rows[1].verdict, SloVerdict::Violated);
+    }
+
+    #[test]
+    fn table_and_json_render() {
+        let mut ev = one_latency_objective();
+        let mut rec = FlightRecorder::with_capacity(16);
+        ev.observe(0.0, SloSample::Latency { class: 0, latency_s: 0.001 });
+        ev.evaluate(0.0, &mut rec);
+        let table = ev.render_table();
+        assert!(table.contains("p99_test"));
+        assert!(table.contains("PASS"));
+        let json = ev.to_json().to_string();
+        assert!(json.contains("\"verdict\""));
+        let mut metrics = MetricsRegistry::new();
+        ev.export_gauges(&mut metrics);
+        assert_eq!(metrics.gauge("slo_firing_p99_test"), Some(0.0));
+    }
+}

@@ -1,0 +1,308 @@
+//! Causal request tracing: deterministic trace/span identity plus the
+//! per-class critical-path aggregation it enables.
+//!
+//! A [`TraceContext`] follows one request end-to-end — gateway
+//! admission, wave formation, pool queue, worker execution — emitting
+//! begin/end span events into the [`FlightRecorder`]. Identity is
+//! derived, never drawn: the root id is FNV-1a over `(tenant, seq)`
+//! and each child span hashes `(parent span, kind)`, so two runs of
+//! the same workload produce byte-identical trace ids with no
+//! wall-clock or RNG involvement. Ids are masked to 48 bits because
+//! recorder args ride `f64` payloads (53-bit mantissa): a 48-bit id
+//! round-trips exactly, a full u64 would not.
+//!
+//! Like the rest of the obs bundle this is HARNESS state: span
+//! emission is gated behind [`crate::obs::Obs::spans_enabled`], costs
+//! one branch when off, and never feeds back into any simulated or
+//! scheduling decision (`rust/tests/slo_tracing.rs` pins trace-on /
+//! trace-off bit-identity on every preset).
+
+use crate::json::Json;
+use crate::obs::{FlightRecorder, MetricsRegistry};
+use crate::snapshot::fnv1a64;
+
+/// Trace/span ids are 48-bit so they survive the recorder's f64 args
+/// losslessly (f64 mantissa is 53 bits).
+pub const TRACE_ID_MASK: u64 = (1 << 48) - 1;
+
+/// The span taxonomy: one request decomposes into admission (gateway
+/// front / pool submit decision), queue (admit → dispatch wait),
+/// service (worker execution), under a root request span.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanKind {
+    /// Whole-request root span.
+    Request,
+    /// Admission decision (gateway front or pool submit).
+    Admission,
+    /// Queue wait: admitted → dispatched.
+    Queue,
+    /// Service: dispatched → completed.
+    Service,
+}
+
+impl SpanKind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SpanKind::Request => "request",
+            SpanKind::Admission => "admission",
+            SpanKind::Queue => "queue",
+            SpanKind::Service => "service",
+        }
+    }
+
+    fn tag(&self) -> u8 {
+        match self {
+            SpanKind::Request => 0,
+            SpanKind::Admission => 1,
+            SpanKind::Queue => 2,
+            SpanKind::Service => 3,
+        }
+    }
+}
+
+/// Deterministic causal identity carried alongside a request. Copy so
+/// it rides queues and channels without lifetime ceremony.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TraceContext {
+    /// Identifies the request across every hop (stable for the whole
+    /// causal chain).
+    pub trace_id: u64,
+    /// Identifies this hop; children re-derive from it.
+    pub span_id: u64,
+}
+
+impl TraceContext {
+    /// Root context for request `seq` of tenant `tenant`. Pure
+    /// function of its inputs — no clock, no RNG.
+    pub fn root(tenant: u32, seq: u64) -> TraceContext {
+        let mut bytes = [0u8; 12];
+        bytes[..4].copy_from_slice(&tenant.to_le_bytes());
+        bytes[4..].copy_from_slice(&seq.to_le_bytes());
+        let id = fnv1a64(&bytes) & TRACE_ID_MASK;
+        TraceContext { trace_id: id, span_id: id }
+    }
+
+    /// Child span under this context: same trace, new span id hashed
+    /// from `(parent span, kind)`.
+    pub fn child(&self, kind: SpanKind) -> TraceContext {
+        let mut bytes = [0u8; 9];
+        bytes[..8].copy_from_slice(&self.span_id.to_le_bytes());
+        bytes[8] = kind.tag();
+        TraceContext {
+            trace_id: self.trace_id,
+            span_id: fnv1a64(&bytes) & TRACE_ID_MASK,
+        }
+    }
+
+    /// Emit a span-begin event. `index` carries the SLA-class index so
+    /// per-class filtering needs no string parsing.
+    #[inline]
+    pub fn begin(&self, rec: &mut FlightRecorder, tick: u64, kind: SpanKind, class_idx: u32) {
+        rec.record(
+            tick,
+            "trace",
+            "span_begin",
+            kind.as_str(),
+            class_idx,
+            &[("trace", self.trace_id as f64), ("span", self.span_id as f64)],
+        );
+    }
+
+    /// Emit a span-end event carrying the span's duration in seconds.
+    #[inline]
+    pub fn end(
+        &self,
+        rec: &mut FlightRecorder,
+        tick: u64,
+        kind: SpanKind,
+        class_idx: u32,
+        dur_s: f64,
+    ) {
+        rec.record(
+            tick,
+            "trace",
+            "span_end",
+            kind.as_str(),
+            class_idx,
+            &[
+                ("trace", self.trace_id as f64),
+                ("span", self.span_id as f64),
+                ("dur_s", dur_s),
+            ],
+        );
+    }
+}
+
+/// Per-class critical-path accumulator: where did a completed
+/// request's latency go — admission, queue wait, or service?
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct PathAccum {
+    pub requests: u64,
+    pub admission_s: f64,
+    pub queue_s: f64,
+    pub service_s: f64,
+}
+
+impl PathAccum {
+    pub fn total_s(&self) -> f64 {
+        self.admission_s + self.queue_s + self.service_s
+    }
+}
+
+/// Critical-path breakdown aggregated per SLA class (indexed 0..N,
+/// class names supplied by the caller at render time so this module
+/// stays independent of the gateway's class enum).
+#[derive(Debug, Clone, Default)]
+pub struct PathBreakdown {
+    classes: Vec<PathAccum>,
+}
+
+impl PathBreakdown {
+    pub fn new(n_classes: usize) -> PathBreakdown {
+        PathBreakdown { classes: vec![PathAccum::default(); n_classes] }
+    }
+
+    /// Fold one completed request into its class bucket.
+    pub fn observe(&mut self, class_idx: usize, admission_s: f64, queue_s: f64, service_s: f64) {
+        if let Some(acc) = self.classes.get_mut(class_idx) {
+            acc.requests += 1;
+            acc.admission_s += admission_s.max(0.0);
+            acc.queue_s += queue_s.max(0.0);
+            acc.service_s += service_s.max(0.0);
+        }
+    }
+
+    pub fn class(&self, class_idx: usize) -> PathAccum {
+        self.classes.get(class_idx).copied().unwrap_or_default()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.classes.iter().map(|c| c.requests).sum()
+    }
+
+    /// Render the per-class mean critical-path table. `labels[i]`
+    /// names class `i`; missing labels fall back to the index.
+    pub fn render_table(&self, labels: &[&str]) -> String {
+        let mut out = String::from(
+            "class         requests   admission_s      queue_s    service_s  queue_share\n",
+        );
+        for (i, acc) in self.classes.iter().enumerate() {
+            let label = labels.get(i).copied().unwrap_or("?");
+            let n = acc.requests.max(1) as f64;
+            let share = if acc.total_s() > 0.0 { acc.queue_s / acc.total_s() * 100.0 } else { 0.0 };
+            out.push_str(&format!(
+                "{:<12} {:>9} {:>13.6} {:>12.6} {:>12.6} {:>11.2}%\n",
+                label,
+                acc.requests,
+                acc.admission_s / n,
+                acc.queue_s / n,
+                acc.service_s / n,
+                share
+            ));
+        }
+        out
+    }
+
+    /// Export per-class path gauges (mean seconds per stage) into the
+    /// metrics registry under `path_<stage>_mean_s{class}` names.
+    pub fn export_gauges(&self, metrics: &mut MetricsRegistry, labels: &[&str]) {
+        for (i, acc) in self.classes.iter().enumerate() {
+            let label = labels.get(i).copied().unwrap_or("other");
+            let n = acc.requests.max(1) as f64;
+            metrics.gauge_set(&format!("path_admission_mean_s_{label}"), acc.admission_s / n);
+            metrics.gauge_set(&format!("path_queue_mean_s_{label}"), acc.queue_s / n);
+            metrics.gauge_set(&format!("path_service_mean_s_{label}"), acc.service_s / n);
+            metrics.counter_set(&format!("path_requests_{label}"), acc.requests);
+        }
+    }
+
+    /// JSON form: `[{"class", "requests", "admission_s", ...}, ...]`.
+    pub fn to_json(&self, labels: &[&str]) -> Json {
+        Json::Arr(
+            self.classes
+                .iter()
+                .enumerate()
+                .map(|(i, acc)| {
+                    Json::obj(vec![
+                        ("class", Json::Str(labels.get(i).copied().unwrap_or("?").to_string())),
+                        ("requests", Json::Num(acc.requests as f64)),
+                        ("admission_s", Json::Num(acc.admission_s)),
+                        ("queue_s", Json::Num(acc.queue_s)),
+                        ("service_s", Json::Num(acc.service_s)),
+                    ])
+                })
+                .collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ids_are_deterministic_and_48_bit() {
+        let a = TraceContext::root(7, 42);
+        let b = TraceContext::root(7, 42);
+        assert_eq!(a, b);
+        assert!(a.trace_id <= TRACE_ID_MASK);
+        assert_ne!(TraceContext::root(7, 43).trace_id, a.trace_id);
+        assert_ne!(TraceContext::root(8, 42).trace_id, a.trace_id);
+    }
+
+    #[test]
+    fn ids_round_trip_through_f64() {
+        for seq in [0u64, 1, 1 << 20, u64::MAX >> 8] {
+            let ctx = TraceContext::root(3, seq);
+            assert_eq!(ctx.trace_id as f64 as u64, ctx.trace_id);
+            let child = ctx.child(SpanKind::Queue);
+            assert_eq!(child.span_id as f64 as u64, child.span_id);
+        }
+    }
+
+    #[test]
+    fn children_share_the_trace_but_not_the_span() {
+        let root = TraceContext::root(1, 5);
+        let q = root.child(SpanKind::Queue);
+        let s = root.child(SpanKind::Service);
+        assert_eq!(q.trace_id, root.trace_id);
+        assert_eq!(s.trace_id, root.trace_id);
+        assert_ne!(q.span_id, s.span_id);
+        assert_ne!(q.span_id, root.span_id);
+        // Re-derivation is stable.
+        assert_eq!(root.child(SpanKind::Queue), q);
+    }
+
+    #[test]
+    fn spans_emit_begin_end_pairs() {
+        let mut rec = FlightRecorder::with_capacity(16);
+        let ctx = TraceContext::root(0, 1);
+        ctx.begin(&mut rec, 10, SpanKind::Request, 1);
+        ctx.child(SpanKind::Service).end(&mut rec, 11, SpanKind::Service, 1, 0.25);
+        let events = rec.events();
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].name, "span_begin");
+        assert_eq!(events[0].comp, "request");
+        assert_eq!(events[1].name, "span_end");
+        assert!(events[1].args.iter().any(|&(k, v)| k == "dur_s" && v == 0.25));
+    }
+
+    #[test]
+    fn path_breakdown_aggregates_and_renders() {
+        let mut path = PathBreakdown::new(3);
+        path.observe(0, 0.001, 0.004, 0.005);
+        path.observe(0, 0.001, 0.002, 0.003);
+        path.observe(2, 0.0, 0.1, 0.1);
+        let acc = path.class(0);
+        assert_eq!(acc.requests, 2);
+        assert!((acc.queue_s - 0.006).abs() < 1e-12);
+        assert_eq!(path.total_requests(), 3);
+        let table = path.render_table(&["interactive", "standard", "batch"]);
+        assert!(table.contains("interactive"));
+        assert!(table.contains("batch"));
+        let mut metrics = MetricsRegistry::new();
+        path.export_gauges(&mut metrics, &["interactive", "standard", "batch"]);
+        assert_eq!(metrics.counter("path_requests_interactive"), Some(2));
+        assert!(metrics.gauge("path_queue_mean_s_interactive").unwrap() > 0.0);
+    }
+}

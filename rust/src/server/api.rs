@@ -55,6 +55,10 @@ pub struct InferenceResponse {
     pub anomalies: u32,
     /// True when generation was halted early by a sanity check.
     pub halted_early: bool,
+    /// Causal trace context (PR 10): present when span emission was
+    /// armed on the pool, linking this response to its flight-recorder
+    /// span events.
+    pub trace: Option<crate::obs::TraceContext>,
 }
 
 /// Aggregate statistics for a serving run.

@@ -40,6 +40,22 @@ pub fn run(args: &Args) -> Result<()> {
     // `--trace-out PATH`: write the flight recorder's Chrome trace JSON
     // (chrome://tracing / Perfetto) after the run. Empty = off.
     let trace_out = args.opt("trace-out", "");
+    // `--slo`: judge the run against the declarative SLO objectives and
+    // print the per-class verdict table. `--slo-strict` implies `--slo`
+    // and exits nonzero when any objective is VIOLATED. The thresholds
+    // default generous so an ordinary overload run passes; tighten with
+    // `--slo-p99-ms` (per-class e2e p99 budget) and
+    // `--slo-avail-budget` (allowed non-served fraction).
+    let slo_strict = args.flag("slo-strict");
+    let slo_flag = args.flag("slo") || slo_strict;
+    let slo_p99_s: f64 = args.num("slo-p99-ms", 250.0f64)? * 1e-3;
+    let slo_avail_budget: f64 = args.num("slo-avail-budget", 1.0f64)?;
+    if !(slo_p99_s > 0.0) || !slo_p99_s.is_finite() {
+        bail!("--slo-p99-ms must be a positive finite millisecond threshold");
+    }
+    if !(0.0..=1.0).contains(&slo_avail_budget) {
+        bail!("--slo-avail-budget must be a fraction in [0, 1]");
+    }
 
     // `--load-harness`: drive the executor pool with the adversarial
     // wall-clock load harness (no artifacts needed — synthetic spin
@@ -123,6 +139,16 @@ pub fn run(args: &Args) -> Result<()> {
                 );
             }
         }
+        // SLO verdicts print BEFORE the accounting verification so a
+        // closure violation still leaves the verdict table on the
+        // console for triage.
+        let slo = if slo_flag {
+            let ev = report.judge_slo(slo_p99_s, slo_avail_budget);
+            print!("{}", ev.render_table());
+            Some(ev)
+        } else {
+            None
+        };
         if let Err(e) = report.verify() {
             // Accounting-closure violation: dump the flight recorder
             // and the per-worker profile before propagating the error,
@@ -134,6 +160,13 @@ pub fn run(args: &Args) -> Result<()> {
                 eprintln!("{}", profile.render_table());
             }
             return Err(e);
+        }
+        if slo_strict {
+            if let Some(ev) = &slo {
+                if ev.any_violated() {
+                    bail!("--slo-strict: at least one SLO objective is VIOLATED");
+                }
+            }
         }
         return Ok(());
     }
@@ -164,6 +197,42 @@ pub fn run(args: &Args) -> Result<()> {
             seed,
             ..Default::default()
         });
+        if !trace_out.is_empty() || slo_flag {
+            // Spans feed the per-class critical-path breakdown the SLO
+            // table prints alongside; both ride the harness-side obs
+            // bundle, strictly outside the gateway's digested state.
+            gateway.enable_trace();
+        }
+        if slo_flag {
+            let mut objectives = Vec::new();
+            for class in SlaClass::all() {
+                objectives.push(crate::obs::SloObjective::latency(
+                    &format!("{}_p99_latency", class.as_str()),
+                    class.index(),
+                    slo_p99_s,
+                    0.01,
+                ));
+                objectives.push(crate::obs::SloObjective::availability(
+                    &format!("{}_availability", class.as_str()),
+                    class.index(),
+                    slo_avail_budget,
+                ));
+            }
+            // Fleet-scoped floors ride along with generous defaults —
+            // they demonstrate the thermal/energy signals without
+            // failing an ordinary overload run.
+            objectives.push(crate::obs::SloObjective::thermal_headroom(
+                "fleet_thermal_headroom",
+                0.02,
+                0.5,
+            ));
+            objectives.push(crate::obs::SloObjective::energy_per_query(
+                "fleet_energy_per_query",
+                1.0e3,
+                0.01,
+            ));
+            gateway.enable_slo(objectives, crate::obs::SloConfig::default());
+        }
         let trace = gateway.overload_trace(n, overload, class_opt);
         println!(
             "gateway: fleet={} tenants={tenants} requests={n} offered={overload:.1}x capacity",
@@ -192,6 +261,22 @@ pub fn run(args: &Args) -> Result<()> {
             "  wall {:.2} s (logical), {:.1} J total ({:.1} J idle)",
             report.wall_s, report.energy_j, report.idle_energy_j,
         );
+        if gateway.obs().spans_enabled() {
+            print!("{}", gateway.path_table());
+        }
+        if let Some(ev) = gateway.slo() {
+            print!("{}", ev.render_table());
+        }
+        if !trace_out.is_empty() && gateway.obs().recorder.is_enabled() {
+            let rec = &gateway.obs().recorder;
+            std::fs::write(&trace_out, rec.chrome_trace().to_string())?;
+            println!(
+                "trace: {} events in ring ({} recorded) -> {}",
+                rec.len(),
+                rec.total_recorded(),
+                trace_out
+            );
+        }
         if stats_json {
             // The gateway's canonical state digest rides along so a
             // monitoring scrape can cross-check replicas (two gateways
@@ -204,6 +289,13 @@ pub fn run(args: &Args) -> Result<()> {
                 );
             }
             println!("{}", doc.to_string());
+        }
+        if slo_strict {
+            if let Some(ev) = gateway.slo() {
+                if ev.any_violated() {
+                    bail!("--slo-strict: at least one SLO objective is VIOLATED");
+                }
+            }
         }
         return Ok(());
     }
@@ -437,6 +529,9 @@ pub fn run(args: &Args) -> Result<()> {
     let trace = RequestTrace::poisson(queries, rate, 4, seed);
     let mut rng = Pcg::seeded(seed);
 
+    // Over-threshold e2e latency count for the serve-path SLO judge
+    // (the loop sees every response, so no histogram is needed here).
+    let mut slo_over: u64 = 0;
     for (i, traced) in trace.requests().iter().enumerate() {
         let prompt: Vec<i64> =
             (0..config.max_prompt_tokens).map(|_| rng.below(config.vocab as u64) as i64).collect();
@@ -449,12 +544,17 @@ pub fn run(args: &Args) -> Result<()> {
             seed: rng.next_u64(),
         };
         match service.handle(request, traced.arrival_s) {
-            Ok(resp) => println!(
-                "  ok  client={} tokens={} latency={:.2} ms",
-                traced.client_id,
-                resp.tokens.len(),
-                resp.latency.as_secs_f64() * 1e3
-            ),
+            Ok(resp) => {
+                if resp.latency.as_secs_f64() > slo_p99_s {
+                    slo_over += 1;
+                }
+                println!(
+                    "  ok  client={} tokens={} latency={:.2} ms",
+                    traced.client_id,
+                    resp.tokens.len(),
+                    resp.latency.as_secs_f64() * 1e3
+                );
+            }
             Err(reason) => println!("  rej client={} {:?}", traced.client_id, reason),
         }
     }
@@ -504,6 +604,24 @@ pub fn run(args: &Args) -> Result<()> {
         }
         if let Some(profile) = service.profile_snapshot() {
             print!("{}", profile.render_table());
+        }
+    }
+    if slo_flag {
+        // Serve-path judge: aggregate latency + availability over the
+        // whole run (validation rejections are client errors, not an
+        // availability breach).
+        let mut ev = crate::obs::SloEvaluator::with_defaults(vec![
+            crate::obs::SloObjective::latency("serve_p99_latency", 0, slo_p99_s, 0.01),
+            crate::obs::SloObjective::availability("serve_availability", 0, slo_avail_budget),
+        ]);
+        ev.ingest_counts(stats.wall_s, 0, stats.served.saturating_sub(slo_over), slo_over);
+        let bad_avail =
+            stats.rejected_rate_limited + stats.rejected_overloaded + stats.failed_execution;
+        ev.ingest_counts(stats.wall_s, 1, stats.served, bad_avail);
+        ev.evaluate(stats.wall_s, &mut crate::obs::FlightRecorder::disabled());
+        print!("{}", ev.render_table());
+        if slo_strict && ev.any_violated() {
+            bail!("--slo-strict: at least one SLO objective is VIOLATED");
         }
     }
     Ok(())

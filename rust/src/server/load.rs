@@ -25,7 +25,7 @@ use anyhow::{bail, Result};
 
 use crate::gateway::SlaClass;
 use crate::json::Json;
-use crate::obs::{FlightRecorder, MetricsRegistry, Profiler};
+use crate::obs::{FlightRecorder, MetricsRegistry, Profiler, SloEvaluator, SloObjective};
 use crate::rng::Pcg;
 use crate::safety::ratelimit::ShardedRateLimiter;
 use crate::safety::thermal_guard::SHED_LEVELS;
@@ -272,6 +272,47 @@ impl HarnessReport {
         Ok(())
     }
 
+    /// Aggregate SLO judging over the finished run (PR 10): per-class
+    /// p99-latency and availability objectives fed from the report's
+    /// own counters and histograms (the streaming evaluator's window
+    /// machinery collapses to run totals here — only aggregates
+    /// survive a wall-clock harness run). `p99_max_s` is the per-class
+    /// e2e latency threshold with a 1% budget; `avail_budget` is the
+    /// allowed non-served fraction (shed + rate-limited + overflow +
+    /// expired + failed over submitted). Returns the evaluator; render
+    /// its table with [`SloEvaluator::render_table`], gate strict runs
+    /// on [`SloEvaluator::any_violated`].
+    pub fn judge_slo(&self, p99_max_s: f64, avail_budget: f64) -> SloEvaluator {
+        let mut objectives = Vec::new();
+        for c in &self.classes {
+            objectives.push(SloObjective::latency(
+                &format!("{}_p99_latency", c.class.as_str()),
+                c.class.index(),
+                p99_max_s,
+                0.01,
+            ));
+            objectives.push(SloObjective::availability(
+                &format!("{}_availability", c.class.as_str()),
+                c.class.index(),
+                avail_budget,
+            ));
+        }
+        let mut ev = SloEvaluator::with_defaults(objectives);
+        let now_s = self.wall_s.max(0.0);
+        for (i, c) in self.classes.iter().enumerate() {
+            let e2e = &c.pool.histograms.e2e;
+            let bad_lat = e2e.count_over_s(p99_max_s);
+            ev.ingest_counts(now_s, i * 2, e2e.count().saturating_sub(bad_lat), bad_lat);
+            let bad_avail =
+                c.shed + c.rate_limited + c.pool.overflow + c.pool.expired + c.pool.failed;
+            ev.ingest_counts(now_s, i * 2 + 1, c.pool.completed, bad_avail);
+        }
+        // One evaluation to latch burn rates; alert events are not
+        // meaningful on run totals, so they land in a dead recorder.
+        ev.evaluate(now_s, &mut FlightRecorder::disabled());
+        ev
+    }
+
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             (
@@ -416,6 +457,10 @@ pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
     let pool = ExecutorPool::new(pool_config);
     if config.obs {
         pool.enable_obs();
+        // Span emission rides the same switch: each admitted request
+        // gets a deterministic (tenant, id)-derived TraceContext, so
+        // a closure-violation dump carries the causal chain too.
+        pool.enable_trace();
     }
     let service_us = config.service_us;
     pool.run_scoped(
@@ -468,6 +513,7 @@ pub fn run_load_harness(config: &HarnessConfig) -> Result<HarnessReport> {
                                 tenant: req.tenant,
                                 deadline_s: req.deadline_s,
                                 reply: None,
+                                trace: None,
                             });
                         }
                     });

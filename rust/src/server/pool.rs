@@ -40,7 +40,7 @@ use anyhow::{anyhow, Result};
 use crate::gateway::queue::f64_order_bits;
 use crate::gateway::SlaClass;
 use crate::metrics::LatencyRecorder;
-use crate::obs::{FlightRecorder, MetricsRegistry, Profiler};
+use crate::obs::{FlightRecorder, MetricsRegistry, Profiler, SpanKind, TraceContext};
 
 use super::api::{InferenceRequest, InferenceResponse};
 
@@ -70,6 +70,10 @@ pub struct PoolJob {
     pub tenant: u32,
     pub deadline_s: f64,
     pub reply: Option<mpsc::Sender<Result<InferenceResponse>>>,
+    /// Causal trace context propagated from the submitter (PR 10).
+    /// `None` + spans armed: the pool derives a deterministic root
+    /// from `(tenant, submission id)` at admission.
+    pub trace: Option<TraceContext>,
 }
 
 struct QueuedJob {
@@ -171,6 +175,9 @@ pub struct ExecutorPool {
     /// Observability gate: one relaxed load per hook when off, so the
     /// multi-threaded submit/dispatch paths pay nothing un-armed.
     obs_enabled: AtomicBool,
+    /// Causal span emission gate (PR 10) — arms on top of `obs_enabled`
+    /// so the PR 9 event stream keeps its volume when spans are off.
+    obs_spans: AtomicBool,
     /// Shared flight recorder (admission / dispatch / expiry events).
     /// Its own mutex, never taken while holding a shard lock from
     /// another recorder call — workers accumulate profile time locally
@@ -197,6 +204,7 @@ impl ExecutorPool {
             sleep_lock: Mutex::new(()),
             wake: Condvar::new(),
             obs_enabled: AtomicBool::new(false),
+            obs_spans: AtomicBool::new(false),
             recorder: Mutex::new(FlightRecorder::disabled()),
             profiler: Mutex::new(Profiler::disabled()),
         }
@@ -215,6 +223,32 @@ impl ExecutorPool {
 
     pub fn obs_enabled(&self) -> bool {
         self.obs_enabled.load(Ordering::Relaxed)
+    }
+
+    /// Arm causal span emission on top of the obs bundle: admitted
+    /// jobs carry a [`TraceContext`] (propagated or derived from
+    /// `(tenant, submission id)`) and emit admission / queue / service
+    /// / request span events into the shared recorder.
+    pub fn enable_trace(&self) {
+        if !self.obs_enabled() {
+            self.enable_obs();
+        }
+        self.obs_spans.store(true, Ordering::SeqCst);
+    }
+
+    pub fn spans_enabled(&self) -> bool {
+        self.obs_spans.load(Ordering::Relaxed) && self.obs_enabled()
+    }
+
+    /// Run `f` against the shared recorder at the current pool tick
+    /// (µs); no-op when spans are off.
+    #[inline]
+    fn span_record(&self, f: impl FnOnce(&mut FlightRecorder, u64)) {
+        if !self.spans_enabled() {
+            return;
+        }
+        let tick = (self.now_s() * 1e6) as u64;
+        f(&mut self.recorder.lock().unwrap(), tick);
     }
 
     /// Snapshot of the flight recorder (clone under the mutex); `None`
@@ -282,7 +316,11 @@ impl ExecutorPool {
         }
         let shard = job.tenant as usize % self.shards.len();
         let id = self.seq.fetch_add(1, Ordering::SeqCst);
-        let entry = QueuedJob { job, id, enqueued_s: self.now_s() };
+        let mut entry = QueuedJob { job, id, enqueued_s: self.now_s() };
+        if self.spans_enabled() && entry.job.trace.is_none() {
+            entry.job.trace = Some(TraceContext::root(entry.job.tenant, id));
+        }
+        let ctx = entry.job.trace;
         {
             let mut rows = self.shards[shard].rows.lock().unwrap();
             let row = &mut rows[class];
@@ -309,6 +347,12 @@ impl ExecutorPool {
             class as u32,
             &[("job", id as f64), ("shard", shard as f64)],
         );
+        if let Some(ctx) = ctx {
+            self.span_record(|rec, tick| {
+                ctx.begin(rec, tick, SpanKind::Request, class as u32);
+                ctx.child(SpanKind::Admission).end(rec, tick, SpanKind::Admission, class as u32, 0.0);
+            });
+        }
         self.wake.notify_one();
         Ok(())
     }
@@ -397,6 +441,12 @@ impl ExecutorPool {
                 class as u32,
                 &[("job", entry.id as f64), ("queue_wait_s", queue_wait_s)],
             );
+            if let Some(ctx) = entry.job.trace {
+                self.span_record(|rec, tick| {
+                    ctx.child(SpanKind::Queue).end(rec, tick, SpanKind::Queue, class as u32, queue_wait_s);
+                    ctx.end(rec, tick, SpanKind::Request, class as u32, queue_wait_s);
+                });
+            }
             if let Some(reply) = entry.job.reply {
                 let _ = reply.send(Err(anyhow!(
                     "deadline expired after {queue_wait_s:.6} s in queue"
@@ -427,6 +477,13 @@ impl ExecutorPool {
                 ("ok", if result.is_ok() { 1.0 } else { 0.0 }),
             ],
         );
+        if let Some(ctx) = entry.job.trace {
+            self.span_record(|rec, tick| {
+                ctx.child(SpanKind::Queue).end(rec, tick, SpanKind::Queue, class as u32, queue_wait_s);
+                ctx.child(SpanKind::Service).end(rec, tick, SpanKind::Service, class as u32, service_s);
+                ctx.end(rec, tick, SpanKind::Request, class as u32, e2e_s);
+            });
+        }
         match result {
             Ok(out) => {
                 self.counters[class].completed.fetch_add(1, Ordering::SeqCst);
@@ -442,6 +499,7 @@ impl ExecutorPool {
                         compute: out.compute,
                         anomalies: out.anomalies,
                         halted_early: out.halted_early,
+                        trace: entry.job.trace,
                     }));
                 }
             }
@@ -616,7 +674,7 @@ impl PooledExecutor {
     ) -> Result<InferenceResponse> {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.pool
-            .try_submit(PoolJob { request, tenant, deadline_s, reply: Some(reply_tx) })
+            .try_submit(PoolJob { request, tenant, deadline_s, reply: Some(reply_tx), trace: None })
             .map_err(|_| anyhow!("executor pool queue full or shut down"))?;
         reply_rx.recv().map_err(|_| anyhow!("executor pool dropped the reply channel"))?
     }
@@ -648,7 +706,7 @@ mod tests {
     }
 
     fn job(class: SlaClass, tenant: u32, deadline_s: f64) -> PoolJob {
-        PoolJob { request: request(class, tenant), tenant, deadline_s, reply: None }
+        PoolJob { request: request(class, tenant), tenant, deadline_s, reply: None, trace: None }
     }
 
     /// Worker that completes instantly with no tokens.
@@ -766,6 +824,7 @@ mod tests {
                             tenant: i as u32,
                             deadline_s: f64::INFINITY,
                             reply: Some(tx.clone()),
+                            trace: None,
                         })
                         .unwrap();
                     }

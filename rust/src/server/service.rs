@@ -290,10 +290,13 @@ impl Service {
     }
 
     /// Arm the executor pool's flight recorder + per-worker profiler
-    /// (`serve --trace-out`). Purely additive: admission decisions and
-    /// responses are identical with tracing on or off.
+    /// AND causal span emission (`serve --trace-out`). Purely additive:
+    /// admission decisions and responses are identical with tracing on
+    /// or off — spans link each [`super::api::InferenceResponse`] to
+    /// its begin/end events in the recorder.
     pub fn enable_trace(&self) {
         self.executor.pool().enable_obs();
+        self.executor.pool().enable_trace();
     }
 
     /// Flight-recorder snapshot of the executor pool (None un-armed).

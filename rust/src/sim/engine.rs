@@ -29,7 +29,7 @@ use crate::devices::spec::{DevIdx, DeviceId, DeviceSpec};
 use crate::devices::thermal::ThermalState;
 use crate::metrics::energy::EnergyLedger;
 use crate::metrics::latency::LatencyRecorder;
-use crate::obs::Obs;
+use crate::obs::{Obs, Profiler, SpanKind, TraceContext};
 use crate::rng::Pcg;
 use crate::safety::fault::FaultDetector;
 use crate::safety::health::{DeviceHealth, HealthState};
@@ -319,6 +319,53 @@ pub const METRO_CALIBRATION_DIVIDER: u64 = 4;
 /// preset is ≤ 5).
 pub const METRO_DIVIDER_MIN_DEVICES: usize = 32;
 
+/// Largest Window-stage divider [`SimEngine::apply_default_dividers`]
+/// will pick. Window components integrate thermal over `pending_dt`-
+/// staged wall intervals, so a divider of k coarsens the thermal
+/// integration step k-fold; 4 keeps a metro window's integration step
+/// under the thermal time constants of every device class in the spec
+/// table while still quartering per-tick window dispatches.
+pub const METRO_WINDOW_DIVIDER_MAX: u64 = 4;
+
+/// Target per-tick Window dispatches the default divider sizes toward:
+/// at or below this rate the window stage is not a per-tick hotspot
+/// (every paper preset is ≤ 5 dispatches/tick and keeps divider 1).
+pub const WINDOW_DISPATCH_TARGET_PER_TICK: u64 = 32;
+
+/// Smallest power-of-two divider (capped at
+/// [`METRO_WINDOW_DIVIDER_MAX`]) that brings `per_tick` Window
+/// dispatches down to [`WINDOW_DISPATCH_TARGET_PER_TICK`]. Pure
+/// integer arithmetic on deterministic fire counts — wall-clock
+/// self-time deliberately plays no part (a wall-derived divider would
+/// feed a wall measurement into simulated decisions, breaking the
+/// outside-digest rule).
+pub fn divider_for_window_rate(per_tick: u64) -> u64 {
+    let mut k = 1u64;
+    while k < METRO_WINDOW_DIVIDER_MAX && per_tick / k > WINDOW_DISPATCH_TARGET_PER_TICK {
+        k *= 2;
+    }
+    k
+}
+
+/// Derive the Window-stage divider from a PR 9 profile table: per-tick
+/// window dispatches = total window fires / execution fires (both are
+/// deterministic counts; at divider 1 the ratio equals the fleet
+/// size). `None` when the profile holds no execution ticks — callers
+/// fall back to the fleet-size derivation, which by construction
+/// agrees with a divider-1 profile.
+pub fn window_divider_from_profile(profiler: &Profiler) -> Option<u64> {
+    let exec_fires = profiler.entry(Stage::Execution.as_str(), 0)?.fires;
+    if exec_fires == 0 {
+        return None;
+    }
+    let window_fires: u64 = profiler
+        .by_component()
+        .iter()
+        .find(|(comp, _)| *comp == Stage::Window.as_str())
+        .map(|(_, e)| e.fires)?;
+    Some(divider_for_window_rate(window_fires / exec_fires))
+}
+
 /// The engine.
 ///
 /// `Clone` is part of the failover substrate: the desync harness runs
@@ -453,6 +500,15 @@ impl SimEngine {
         self.obs = Obs::enabled();
     }
 
+    /// Arm causal span emission (PR 10) on top of the obs bundle: each
+    /// `step_query` tick emits request/service span events keyed by a
+    /// deterministic [`TraceContext`]. Harness-side only, like
+    /// [`SimEngine::enable_obs`] — trace-on and trace-off runs are
+    /// bit-identical (`rust/tests/slo_tracing.rs`).
+    pub fn enable_trace(&mut self) {
+        self.obs.enable_spans();
+    }
+
     pub fn obs(&self) -> &Obs {
         &self.obs
     }
@@ -503,17 +559,37 @@ impl SimEngine {
     /// Apply the profile-derived default clock dividers: metro-class
     /// fleets (≥ [`METRO_DIVIDER_MIN_DEVICES`] devices) slow the Model
     /// (calibration-refresh) component to
-    /// [`METRO_CALIBRATION_DIVIDER`]; paper-scale fleets keep every
-    /// divider at 1. Harness-side policy for FRESH engines only: a
-    /// restored snapshot carries its serialized clock domains, and
-    /// Legacy-mode harnesses must skip this call (that mode documents
-    /// that it ignores divider overrides). Returns whether a divider
-    /// was changed.
+    /// [`METRO_CALIBRATION_DIVIDER`] and the per-device Window
+    /// (thermal-integration) components to the rate-derived divider
+    /// ([`divider_for_window_rate`]); paper-scale fleets keep every
+    /// divider at 1.
+    ///
+    /// The Window divider is sized from the per-`(Stage, ComponentId)`
+    /// profile table when this engine's profiler holds one
+    /// ([`window_divider_from_profile`] — ROADMAP item 1's follow-on),
+    /// falling back to the fleet-size derivation for a cold engine;
+    /// both paths reduce to the same deterministic fire-count law, so
+    /// the chosen divider never depends on wall-clock readings.
+    ///
+    /// Harness-side policy for FRESH engines only: a restored snapshot
+    /// carries its serialized clock domains, and Legacy-mode harnesses
+    /// must skip this call (that mode documents that it ignores
+    /// divider overrides). Returns whether a divider was changed.
     pub fn apply_default_dividers(&mut self) -> bool {
         if self.fleet.len() < METRO_DIVIDER_MIN_DEVICES {
             return false;
         }
-        self.set_component_divider(ComponentId::of(Stage::Model), METRO_CALIBRATION_DIVIDER)
+        let model =
+            self.set_component_divider(ComponentId::of(Stage::Model), METRO_CALIBRATION_DIVIDER);
+        let window_div = window_divider_from_profile(&self.obs.profiler)
+            .unwrap_or_else(|| divider_for_window_rate(self.fleet.len() as u64));
+        let mut window = false;
+        if window_div > 1 {
+            for i in 0..self.des.window_ids.len() {
+                window |= self.set_component_divider(ComponentId::window(i as u16), window_div);
+            }
+        }
+        model || window
     }
 
     pub fn clock_s(&self) -> f64 {
@@ -1482,7 +1558,28 @@ impl SimEngine {
         samples: u32,
         oracle: &CoverageOracle,
     ) -> (bool, u32) {
+        // Causal request span (PR 10): id derived from the tick, never
+        // from clocks or RNG; observation only — the simulated
+        // trajectory is bit-identical with spans off.
+        let spans = self.obs.spans_enabled();
+        let tick = self.queries_done as u64;
+        let clock_before_s = self.clock_s;
+        if spans {
+            TraceContext::root(0, tick).begin(&mut self.obs.recorder, tick, SpanKind::Request, 0);
+        }
         let (ok, ran) = self.run_query(query, samples, oracle);
+        if spans {
+            let ctx = TraceContext::root(0, tick);
+            let dur_s = self.clock_s - clock_before_s;
+            ctx.child(SpanKind::Service).end(
+                &mut self.obs.recorder,
+                tick,
+                SpanKind::Service,
+                0,
+                dur_s,
+            );
+            ctx.end(&mut self.obs.recorder, tick, SpanKind::Request, 0, dur_s);
+        }
         if ok {
             self.solved += 1;
         }

@@ -109,6 +109,7 @@ fn pool_splits_queue_wait_from_service() {
                 let (tx, rx) = std::sync::mpsc::channel();
                 for i in 0..2u32 {
                     pool.try_submit(PoolJob {
+                        trace: None,
                         request: InferenceRequest {
                             client_id: i,
                             class: SlaClass::Standard,

@@ -1,0 +1,337 @@
+//! Causal-tracing + SLO contract lockdown (PR 10).
+//!
+//! Span emission and the SLO evaluator are harness state under the
+//! same outside-digest rule the PR 9 obs bundle obeys: arming tracing
+//! must not move a single bit of any `SimReport`, state digest, or
+//! gateway state capture, on any preset (the seven paper presets AND
+//! the 100-device metro stress preset), under any schedule mode.
+//!
+//! The SLO engine's analytic properties are pinned here too: burn rate
+//! is monotone in the bad count, the multi-window hysteresis never
+//! flaps on a constant stream (at most one transition), and verdicts
+//! are a pure function of the sample stream (fixed seed = byte-equal
+//! tables). The profile-informed Window-stage divider law
+//! (`divider_for_window_rate` / `window_divider_from_profile`) is
+//! pinned alongside because its inputs are the deterministic fire
+//! counts tracing also rides on.
+
+use qeil::coordinator::allocation::ModelShape;
+use qeil::devices::fleet::{Fleet, FleetPreset};
+use qeil::experiments::runner::default_meta;
+use qeil::gateway::{Gateway, GatewayConfig, SlaClass};
+use qeil::obs::{
+    burn_rate, FlightRecorder, SloConfig, SloEvaluator, SloObjective, SloSample, SloVerdict,
+};
+use qeil::rng::Pcg;
+use qeil::sim::engine::{
+    divider_for_window_rate, window_divider_from_profile, SimEngine, SimOptions,
+    METRO_WINDOW_DIVIDER_MAX, WINDOW_DISPATCH_TARGET_PER_TICK,
+};
+use qeil::sim::ScheduleMode;
+use qeil::snapshot::engine_digest;
+use qeil::workload::coverage::CoverageOracle;
+use qeil::workload::datasets::{Dataset, ModelFamily};
+use qeil::workload::generator::{Query, WorkloadGenerator};
+
+fn shape() -> ModelShape {
+    ModelShape::from_family(ModelFamily::Gpt2, &default_meta(ModelFamily::Gpt2))
+}
+
+fn queries(seed: u64, n: usize) -> Vec<Query> {
+    WorkloadGenerator::new(Dataset::WikiText103, ModelFamily::Gpt2, seed).queries(n)
+}
+
+fn engine(preset: FleetPreset, options: SimOptions) -> SimEngine {
+    SimEngine::new(Fleet::preset(preset), shape(), options)
+}
+
+// ---------------------------------------------------------------------
+// Trace-on vs trace-off bit-identity, all presets × all schedule modes
+// ---------------------------------------------------------------------
+
+#[test]
+fn trace_on_and_trace_off_runs_are_bit_identical_on_every_preset() {
+    let schedules =
+        [ScheduleMode::Legacy, ScheduleMode::Canonical, ScheduleMode::Fuzzed(0xFACADE)];
+    for preset in FleetPreset::all() {
+        let qs = queries(17, 24);
+        for schedule in schedules {
+            let options = SimOptions { seed: 17, schedule, ..SimOptions::default() };
+            let mut plain = engine(preset, options.clone());
+            let mut traced = engine(preset, options);
+            traced.enable_trace();
+            assert!(traced.obs().spans_enabled());
+
+            let oracle = CoverageOracle::new(plain.seed());
+            for q in &qs {
+                let a = plain.step_query(q, 4, &oracle);
+                let b = traced.step_query(q, 4, &oracle);
+                assert_eq!(a, b, "{preset:?}/{schedule:?}: step outcome diverged under tracing");
+            }
+            let report_plain = plain.finish();
+            let report_traced = traced.finish();
+            assert_eq!(
+                report_traced, report_plain,
+                "{preset:?}/{schedule:?}: SimReport moved under tracing"
+            );
+            assert_eq!(
+                engine_digest(&traced),
+                engine_digest(&plain),
+                "{preset:?}/{schedule:?}: state digest moved under tracing"
+            );
+            // The traced run actually recorded spans (begin + end per
+            // query at minimum) while the plain run recorded nothing.
+            let span_events = traced
+                .obs()
+                .recorder
+                .events()
+                .iter()
+                .filter(|e| e.cat == "trace")
+                .count();
+            assert!(
+                span_events >= 2 * qs.len(),
+                "{preset:?}/{schedule:?}: expected span events, got {span_events}"
+            );
+            assert_eq!(plain.obs().recorder.total_recorded(), 0);
+        }
+    }
+}
+
+#[test]
+fn trace_runs_are_bit_identical_on_metro_under_all_schedules() {
+    let schedules =
+        [ScheduleMode::Legacy, ScheduleMode::Canonical, ScheduleMode::Fuzzed(0xD00D)];
+    let qs = queries(31, 8);
+    for schedule in schedules {
+        let options = SimOptions { seed: 31, schedule, ..SimOptions::default() };
+        let mut plain = engine(FleetPreset::Metro, options.clone());
+        let mut traced = engine(FleetPreset::Metro, options);
+        if !matches!(schedule, ScheduleMode::Legacy) {
+            // The production dividers as deployed (Model divider plus
+            // the PR 10 profile-informed Window divider) on BOTH
+            // replicas — the contract under test is trace-neutrality.
+            assert!(plain.apply_default_dividers());
+            assert!(traced.apply_default_dividers());
+        }
+        traced.enable_trace();
+        let oracle = CoverageOracle::new(plain.seed());
+        for q in &qs {
+            let a = plain.step_query(q, 2, &oracle);
+            let b = traced.step_query(q, 2, &oracle);
+            assert_eq!(a, b, "metro/{schedule:?}: step diverged under tracing");
+        }
+        assert_eq!(traced.finish(), plain.finish(), "metro/{schedule:?}: report moved");
+        assert_eq!(
+            engine_digest(&traced),
+            engine_digest(&plain),
+            "metro/{schedule:?}: digest moved"
+        );
+        assert!(traced.obs().recorder.events().iter().any(|e| e.cat == "trace"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Gateway: spans + SLO evaluator live outside the state capture
+// ---------------------------------------------------------------------
+
+#[test]
+fn gateway_tracing_and_slo_are_outside_the_state_capture() {
+    let config = GatewayConfig { tenants: 4, seed: 7, ..GatewayConfig::default() };
+    let mut plain = Gateway::new(config.clone());
+    let mut armed = Gateway::new(config);
+    armed.enable_trace();
+    armed.enable_slo(
+        vec![
+            SloObjective::latency("interactive_p99", SlaClass::Interactive.index(), 0.250, 0.01),
+            SloObjective::availability("interactive_avail", SlaClass::Interactive.index(), 0.9),
+            SloObjective::thermal_headroom("fleet_headroom", 0.02, 0.5),
+            SloObjective::energy_per_query("fleet_energy", 1.0e3, 0.01),
+        ],
+        SloConfig::default(),
+    );
+
+    let trace = plain.overload_trace(180, 3.0, None);
+    let report_plain = plain.run_trace(&trace);
+    let report_armed = armed.run_trace(&trace);
+
+    assert_eq!(report_armed, report_plain, "gateway report moved under tracing + SLO");
+    assert_eq!(
+        armed.state_digest(),
+        plain.state_digest(),
+        "gateway state digest moved under tracing + SLO"
+    );
+
+    // The armed gateway produced span events, a critical-path
+    // breakdown over every completed request, and SLO verdicts.
+    assert!(armed.obs().recorder.events().iter().any(|e| e.cat == "trace"));
+    let completed: u64 = SlaClass::all().iter().map(|c| report_armed.class(*c).completed).sum();
+    assert!(completed > 0, "overload trace must complete some requests");
+    assert_eq!(armed.path().total_requests(), completed);
+    let ev = armed.slo().expect("slo evaluator armed");
+    assert_eq!(ev.len(), 4);
+    let table = ev.render_table();
+    assert!(table.contains("interactive_p99"));
+    assert!(table.contains("fleet_headroom"));
+
+    // Determinism: a third replica fed the same trace renders the
+    // byte-identical verdict table and path table.
+    let mut again = Gateway::new(GatewayConfig { tenants: 4, seed: 7, ..GatewayConfig::default() });
+    again.enable_trace();
+    again.enable_slo(
+        vec![
+            SloObjective::latency("interactive_p99", SlaClass::Interactive.index(), 0.250, 0.01),
+            SloObjective::availability("interactive_avail", SlaClass::Interactive.index(), 0.9),
+            SloObjective::thermal_headroom("fleet_headroom", 0.02, 0.5),
+            SloObjective::energy_per_query("fleet_energy", 1.0e3, 0.01),
+        ],
+        SloConfig::default(),
+    );
+    let report_again = again.run_trace(&trace);
+    assert_eq!(report_again, report_armed);
+    assert_eq!(again.slo().unwrap().render_table(), table);
+    assert_eq!(again.path_table(), armed.path_table());
+}
+
+// ---------------------------------------------------------------------
+// SLO analytic properties
+// ---------------------------------------------------------------------
+
+#[test]
+fn burn_rate_is_monotone_in_bad_for_fixed_total_and_budget() {
+    for &total in &[1u64, 10, 100, 10_000] {
+        for &budget in &[0.001, 0.01, 0.1, 0.5, 1.0] {
+            let mut prev = -1.0;
+            for bad in 0..=total.min(256) {
+                let r = burn_rate(bad, total, budget);
+                assert!(
+                    r >= prev,
+                    "burn_rate not monotone at bad={bad}/{total} budget={budget}"
+                );
+                prev = r;
+            }
+            // Endpoints: clean window burns 0, fully-bad window burns
+            // 1/budget.
+            assert_eq!(burn_rate(0, total, budget), 0.0);
+            assert!((burn_rate(total, total, budget) - 1.0 / budget).abs() < 1e-9);
+        }
+    }
+    assert_eq!(burn_rate(0, 0, 0.01), 0.0, "empty window must not alert");
+}
+
+#[test]
+fn hysteresis_never_flaps_on_constant_streams() {
+    // A constant stream — any fixed bad fraction, above or below the
+    // budget — may produce at most ONE transition (a single fire, no
+    // clear, or nothing at all). Flapping on steady state is the
+    // failure mode the two-window + clear-streak design exists to
+    // prevent.
+    for bad_per_16 in [0u32, 1, 2, 4, 8, 12, 15, 16] {
+        let mut ev = SloEvaluator::with_defaults(vec![SloObjective::availability(
+            "avail", 0, 0.25,
+        )]);
+        let mut rec = FlightRecorder::with_capacity(1024);
+        for i in 0..4000u32 {
+            let shed = (i % 16) < bad_per_16;
+            ev.observe(i as f64 * 0.05, SloSample::Outcome { class: 0, shed });
+            ev.evaluate(i as f64 * 0.05, &mut rec);
+        }
+        assert!(
+            ev.transitions() <= 1,
+            "constant stream ({bad_per_16}/16 bad) flapped: {} transitions",
+            ev.transitions()
+        );
+        // Verdict matches the stream's run-total arithmetic exactly.
+        let expect_violated = bad_per_16 as f64 / 16.0 > 0.25;
+        assert_eq!(ev.any_violated(), expect_violated, "{bad_per_16}/16 bad");
+    }
+}
+
+#[test]
+fn verdicts_are_deterministic_under_a_fixed_seed() {
+    fn run_stream(seed: u64) -> (String, String, u32, bool) {
+        let mut ev = SloEvaluator::with_defaults(vec![
+            SloObjective::latency("p99", 0, 0.050, 0.01),
+            SloObjective::availability("avail", 0, 0.2),
+            SloObjective::thermal_headroom("headroom", 0.1, 0.1),
+            SloObjective::energy_per_query("energy", 40.0, 0.05),
+        ]);
+        let mut rec = FlightRecorder::with_capacity(4096);
+        let mut rng = Pcg::seeded(seed);
+        for i in 0..6000u32 {
+            let now = i as f64 * 0.02;
+            match rng.below(4) {
+                0 => ev.observe(
+                    now,
+                    SloSample::Latency {
+                        class: 0,
+                        latency_s: rng.below(100) as f64 * 0.001,
+                    },
+                ),
+                1 => ev.observe(now, SloSample::Outcome { class: 0, shed: rng.below(10) < 3 }),
+                2 => ev.observe(
+                    now,
+                    SloSample::Headroom { value: rng.below(100) as f64 * 0.01 },
+                ),
+                _ => ev.observe(
+                    now,
+                    SloSample::Energy { class: 0, joules: rng.below(80) as f64 },
+                ),
+            }
+            if i % 8 == 0 {
+                ev.evaluate(now, &mut rec);
+            }
+        }
+        (ev.render_table(), ev.to_json().to_string(), ev.transitions(), ev.any_violated())
+    }
+    let a = run_stream(0xA11CE);
+    let b = run_stream(0xA11CE);
+    assert_eq!(a, b, "same seed must give byte-identical verdicts");
+    // The stream is adversarial enough to exercise the alert path.
+    assert!(a.2 > 0, "expected at least one fire transition");
+}
+
+// ---------------------------------------------------------------------
+// Profile-informed Window-stage divider law
+// ---------------------------------------------------------------------
+
+#[test]
+fn window_divider_law_pins() {
+    // At or below the per-tick target: divider stays 1.
+    for rate in [0u64, 1, 5, WINDOW_DISPATCH_TARGET_PER_TICK] {
+        assert_eq!(divider_for_window_rate(rate), 1, "rate {rate}");
+    }
+    // One doubling covers up to 2× the target.
+    for rate in [WINDOW_DISPATCH_TARGET_PER_TICK + 1, 48, 2 * WINDOW_DISPATCH_TARGET_PER_TICK] {
+        assert_eq!(divider_for_window_rate(rate), 2, "rate {rate}");
+    }
+    // Metro (100 devices) needs the full cap; the cap also bounds
+    // absurd rates.
+    assert_eq!(divider_for_window_rate(100), METRO_WINDOW_DIVIDER_MAX);
+    assert_eq!(divider_for_window_rate(u64::MAX), METRO_WINDOW_DIVIDER_MAX);
+}
+
+#[test]
+fn profile_derived_divider_agrees_with_the_fleet_size_fallback() {
+    // A profiled divider-1 metro run observes window fires / execution
+    // fires == fleet size, so the profile-informed law lands on the
+    // same divider a cold engine derives from the fleet size — the two
+    // paths are one deterministic fire-count law.
+    let qs = queries(43, 6);
+    let options = SimOptions { seed: 43, schedule: ScheduleMode::Canonical, ..SimOptions::default() };
+    let mut e = engine(FleetPreset::Metro, options);
+    e.enable_obs();
+    let oracle = CoverageOracle::new(e.seed());
+    for q in &qs {
+        e.step_query(q, 2, &oracle);
+    }
+    e.finish();
+    let profiled = window_divider_from_profile(&e.obs().profiler)
+        .expect("obs-armed run must yield a profile-derived divider");
+    let fallback = divider_for_window_rate(Fleet::preset(FleetPreset::Metro).len() as u64);
+    assert_eq!(profiled, fallback, "profiled and fleet-size dividers must agree at divider 1");
+
+    // A cold (never-profiled) engine has no execution fires: the
+    // profile path declines and the caller falls back.
+    let cold = engine(FleetPreset::Metro, SimOptions::default());
+    assert_eq!(window_divider_from_profile(&cold.obs().profiler), None);
+}

@@ -10,11 +10,12 @@
 # `energy_table_rebuild*`, `snapshot_save*`, `snapshot_restore*`,
 # `replay_apply*`, `des_event_dispatch*`, `sim_step*`,
 # `metro_sim_step*`, `executor_pool_dispatch*`, `load_harness_step*`,
-# `obs_record_event*`, `metrics_snapshot*` —
+# `obs_record_event*`, `metrics_snapshot*`, `span_record*`,
+# `slo_eval*` —
 # the planner-substrate, plan-cache, serving-gateway, calibration,
-# snapshot/replay, discrete-event scheduler, executor-pool, and
-# observability hot paths ROADMAP.md tracks) regresses by more than
-# MAX_RATIO (default 10x) in mean time.
+# snapshot/replay, discrete-event scheduler, executor-pool,
+# observability, and tracing/SLO hot paths ROADMAP.md tracks)
+# regresses by more than MAX_RATIO (default 10x) in mean time.
 # Non-gated entries are reported but never fail the run (they are too
 # machine-sensitive for a hard gate).
 #
@@ -55,6 +56,11 @@
 #     sim_step mean — the recorder+profiler budget of the
 #     observability contract. Self-relative by construction: both
 #     entries come from the same run on the same warm engine.
+#   * trace overhead (PR 10): the span-armed step (sim_step_traced
+#     mean) must stay ≤ MAX_TRACE_RATIO (default 1.15) of the
+#     trace-off sim_step mean — causal tracing gets the same overhead
+#     budget obs does (ids are pure FNV hashes + ring inserts). Same
+#     warm engine, same run, self-relative by construction.
 #   * SLA-class tail ordering (PR 8, skipped under --no-run): one full
 #     adversarial load-harness run (`qeil serve --load-harness`,
 #     HARNESS_REQUESTS at HARNESS_OVERLOAD x capacity) must process
@@ -63,7 +69,11 @@
 #     p99 chain ordered: interactive ≤ MAX_CLASS_P99_SLACK × standard ≤
 #     MAX_CLASS_P99_SLACK² × batch (default slack 1.2; links with too
 #     few samples warn and skip). Self-relative by construction — the
-#     classes come from the same run on the same machine.
+#     classes come from the same run on the same machine. The run is
+#     armed with --slo, so the per-class SLO verdict table prints into
+#     the gate log; a second tiny strict run
+#     (--slo-strict --slo-p99-ms 0.0001, every request over threshold
+#     by construction) must exit NONZERO, locking the strict exit path.
 # When a result file predates these entries (pre-PR3/PR5/PR6/PR7
 # artifact via --no-run), the intra-run checks warn and skip;
 # REQUIRE_BASELINE=1 (CI mode) makes missing entries fail instead.
@@ -78,6 +88,7 @@
 #   MAX_SNAPSHOT_RATIO=15 scripts/check_bench.sh
 #   MAX_METRO_RATIO=6 scripts/check_bench.sh
 #   MAX_OBS_RATIO=1.25 scripts/check_bench.sh
+#   MAX_TRACE_RATIO=1.25 scripts/check_bench.sh
 #   HARNESS_REQUESTS=20000 HARNESS_OVERLOAD=10 scripts/check_bench.sh
 #   MAX_CLASS_P99_SLACK=1.5 scripts/check_bench.sh
 #   REQUIRE_BASELINE=1 scripts/check_bench.sh   # CI: fail if no baseline
@@ -99,6 +110,7 @@ MAX_REBUILD_RATIO="${MAX_REBUILD_RATIO:-3}"
 MAX_SNAPSHOT_RATIO="${MAX_SNAPSHOT_RATIO:-10}"
 MAX_METRO_RATIO="${MAX_METRO_RATIO:-4}"
 MAX_OBS_RATIO="${MAX_OBS_RATIO:-1.15}"
+MAX_TRACE_RATIO="${MAX_TRACE_RATIO:-1.15}"
 
 if [[ "${1:-}" != "--no-run" ]]; then
     cargo bench --bench orchestrator
@@ -114,7 +126,8 @@ fi
 # + plan-cache hit-cost ceiling + drift-rebuild cheapness + checkpoint
 # round-trip cheapness.
 python3 - "$CURRENT" "$MAX_WARM_RATIO" "$MAX_LOOKUP_US" "$MAX_REBUILD_RATIO" \
-    "$MAX_SNAPSHOT_RATIO" "$MAX_METRO_RATIO" "$MAX_OBS_RATIO" "${REQUIRE_BASELINE:-0}" <<'PY'
+    "$MAX_SNAPSHOT_RATIO" "$MAX_METRO_RATIO" "$MAX_OBS_RATIO" "$MAX_TRACE_RATIO" \
+    "${REQUIRE_BASELINE:-0}" <<'PY'
 import json
 import sys
 
@@ -123,7 +136,8 @@ max_rebuild = float(sys.argv[4])
 max_snapshot = float(sys.argv[5])
 max_metro = float(sys.argv[6])
 max_obs = float(sys.argv[7])
-strict = sys.argv[8] == "1"
+max_trace = float(sys.argv[8])
+strict = sys.argv[9] == "1"
 with open(cur_path) as f:
     doc = json.load(f)
 means = {r["name"]: float(r["mean_ns"]) for r in doc["results"]}
@@ -191,8 +205,13 @@ else:
         print("checkpoint gate FAILED: a snapshot round-trip now rivals planner substrate "
               "costs — checkpoint cadence becomes unaffordable", file=sys.stderr)
         failed = True
+# The plain sim_step entry must exclude BOTH armed variants — a
+# prefix match alone would pick up sim_step_obs or sim_step_traced
+# (whichever sorts first) and gate the armed step against itself.
 edge_step = next((v for k, v in means.items()
-                  if k.startswith("sim_step") and not k.startswith("sim_step_obs")), None)
+                  if k.startswith("sim_step")
+                  and not k.startswith("sim_step_obs")
+                  and not k.startswith("sim_step_traced")), None)
 metro_step = next((v for k, v in means.items() if k.startswith("metro_sim_step")), None)
 if edge_step is None or metro_step is None:
     # Pre-PR7 artifact: the compare-existing workflow stays usable; CI
@@ -231,6 +250,22 @@ else:
               "contract's budget — the flight recorder/profiler is on the hot path",
               file=sys.stderr)
         failed = True
+traced_step = next((v for k, v in means.items() if k.startswith("sim_step_traced")), None)
+if traced_step is None or edge_step is None:
+    # Pre-PR10 artifact: the compare-existing workflow stays usable; CI
+    # mode insists on the tracing entries being present.
+    print("trace-overhead gate: skipped (sim_step_traced / sim_step entries missing "
+          "from this result file)", file=sys.stderr)
+    failed = failed or strict
+else:
+    ratio = traced_step / max(edge_step, 1.0)
+    status = "ok" if ratio <= max_trace else "REGRESSION"
+    print(f"trace-overhead gate: {status} traced {traced_step / 1e3:.1f} us vs trace-off "
+          f"{edge_step / 1e3:.1f} us ({ratio:.3f}x, budget {max_trace:g}x)")
+    if ratio > max_trace:
+        print("trace-overhead gate FAILED: span emission exceeds the tracing budget — "
+              "causal tracing is on the hot path", file=sys.stderr)
+        failed = True
 sys.exit(1 if failed else 0)
 PY
 
@@ -247,7 +282,9 @@ if [[ "${1:-}" != "--no-run" ]]; then
     MAX_CLASS_P99_SLACK="${MAX_CLASS_P99_SLACK:-1.2}"
     cargo build --release
     HARNESS_JSON=.harness_gate.json
-    ./target/release/qeil serve --load-harness \
+    # --slo prints the per-class SLO verdict table into the gate log
+    # (generous defaults: the overload run must pass non-strict).
+    ./target/release/qeil serve --load-harness --slo \
         --requests "$HARNESS_REQUESTS" --overload "$HARNESS_OVERLOAD" \
         --seed "$HARNESS_SEED" --stats-json | tee /dev/stderr | tail -n 1 \
         > "$HARNESS_JSON"
@@ -295,6 +332,20 @@ for (an, (ac, ap)), (bn, (bc, bp)) in zip(pairs, pairs[1:]):
 sys.exit(1 if failed else 0)
 PY
     rm -f "$HARNESS_JSON"
+    # Strict-exit lockdown (PR 10): with a 0.0001 ms p99 threshold every
+    # served request is over budget by construction (deterministic
+    # despite the wall-clock pool), so --slo-strict MUST exit nonzero.
+    # A strict path that silently passes would let CI ship SLO
+    # violations.
+    if ./target/release/qeil serve --load-harness --slo-strict \
+        --slo-p99-ms 0.0001 --requests 2000 --overload 4 \
+        --seed "$HARNESS_SEED" > /dev/null 2>&1; then
+        echo "slo-strict gate FAILED: --slo-strict exited 0 on a run where every" \
+             "request violates the p99 objective" >&2
+        exit 1
+    else
+        echo "slo-strict gate: ok (forced violation exits nonzero)"
+    fi
 else
     echo "harness gate: skipped (--no-run: release binary unavailable)"
 fi
@@ -308,6 +359,9 @@ if [[ ! -f "$BASELINE" ]]; then
     cp "$CURRENT" "$BASELINE"
     echo "no committed baseline found — bootstrapped $BASELINE from this run."
     echo "commit it to arm the regression gate (CI should set REQUIRE_BASELINE=1)."
+    echo "note: new entries from later PRs (span_record, slo_eval, sim_step_traced"
+    echo "since PR 10) bootstrap the same way — re-run on the pinned CI machine and"
+    echo "commit the refreshed baseline so the absolute tier gates them too."
     exit 0
 fi
 
@@ -338,6 +392,8 @@ GATED_PREFIXES = (
     "load_harness_step",
     "obs_record_event",
     "metrics_snapshot",
+    "span_record",
+    "slo_eval",
 )
 
 

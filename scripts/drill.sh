@@ -19,9 +19,12 @@
 # independence, not just replay determinism.
 #
 # After the replay matrix, a short executor-pool smoke run drives the
-# adversarial load harness (`qeil serve --load-harness`) at overload:
-# its exit status is the accounting-closure verdict, so a lost or
-# double-counted request under hostile load also fails the drill.
+# adversarial load harness (`qeil serve --load-harness --slo`) at
+# overload: its exit status is the accounting-closure verdict, so a
+# lost or double-counted request under hostile load also fails the
+# drill. --slo prints the per-class SLO verdict table (PR 10) into the
+# drill log on every run — pass or fail — so a failing drill carries
+# the burn-rate picture alongside the accounting dump.
 #
 # Exit status is the drill verdict: nonzero means some recovery
 # diverged from the uninterrupted run — a replay-determinism bug — or
@@ -29,8 +32,9 @@
 #
 # Failures leave a flight-recorder trail (PR 9): a drill mismatch
 # auto-dumps the reference run's recorder to stderr, and the pool smoke
-# run writes its Chrome trace to TRACE_OUT (kept on failure, removed on
-# success) and dumps the recorder tail on a closure violation.
+# run writes its Chrome trace — which since PR 10 includes the causal
+# request spans — to TRACE_OUT (kept on failure, removed on success)
+# and dumps the recorder tail on a closure violation.
 #
 # Usage:
 #   scripts/drill.sh                  # full matrix + metro, defaults
@@ -86,12 +90,13 @@ if [[ "$METRO_QUERIES" -gt 0 ]]; then
 fi
 
 if [[ "$POOL_REQUESTS" -gt 0 ]]; then
-    ./target/release/qeil serve --load-harness \
+    ./target/release/qeil serve --load-harness --slo \
         --requests "$POOL_REQUESTS" --overload "$POOL_OVERLOAD" \
         --seed "$SEED" --stats-json --trace-out "$TRACE_OUT" || status=$?
     if [[ "$status" -ne 0 ]]; then
         echo "pool smoke run FAILED (exit $status): accounting closure violated." >&2
-        echo "recorder tail dumped above; full Chrome trace kept at $TRACE_OUT" >&2
+        echo "SLO verdict table printed above; recorder tail dumped above; full" >&2
+        echo "Chrome trace (with request spans) kept at $TRACE_OUT" >&2
         exit "$status"
     fi
     rm -f "$TRACE_OUT"
